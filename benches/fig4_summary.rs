@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Figure 4 (speedup / DSP-efficiency summary
+//! and DP/O resource ratios at fixed configurations).
+
+use temporal_vec::coordinator::report::figure4;
+use temporal_vec::util::bench::{bench, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("fig4_summary");
+    suite.start();
+    let r = figure4(1).expect("fig4");
+    println!("{}", r.rendered);
+    suite.add(bench("figure4 full regeneration", 0, 2, || {
+        figure4(1).unwrap();
+    }));
+    suite.finish();
+}

@@ -1,0 +1,82 @@
+//! Bench: the simulator hot paths (the §Perf optimization target).
+//!
+//! Measures (a) the exact cycle-stepped engine in transactions/second
+//! on the double-pumped vecadd design, (b) the functional executor,
+//! (c) the analytic rate model, and (d) the end-to-end compile
+//! pipeline. EXPERIMENTS.md §Perf records before/after.
+
+use temporal_vec::coordinator::{compile, BuildSpec};
+use temporal_vec::ir::PumpMode;
+use temporal_vec::sim::{rate_model, run_exact, run_functional, Hbm};
+use temporal_vec::util::bench::{bench_throughput, black_box, BenchSuite};
+use temporal_vec::util::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("sim_hotpath");
+    suite.start();
+    let n: i64 = 1 << 16;
+    let c_dp = compile(
+        BuildSpec::new(temporal_vec::apps::vecadd::build())
+            .vectorized("vadd", 8)
+            .pumped(2, PumpMode::Resource)
+            .bind("N", n),
+    )
+    .unwrap();
+    let c_o = compile(
+        BuildSpec::new(temporal_vec::apps::vecadd::build())
+            .vectorized("vadd", 8)
+            .bind("N", n),
+    )
+    .unwrap();
+    let mut rng = Rng::new(5);
+    let x = rng.f32_vec(n as usize);
+    let y = rng.f32_vec(n as usize);
+    let mk_hbm = || {
+        let mut h = Hbm::new();
+        h.load("x", x.clone());
+        h.load("y", y.clone());
+        h
+    };
+
+    let txns = (n / 8) as f64;
+    suite.add(bench_throughput("exact engine, vecadd DP (txns/s)", 1, 5, txns, || {
+        let out = run_exact(&c_dp.design, mk_hbm(), 100_000_000).unwrap();
+        black_box(out.stats.slow_cycles);
+    }));
+    suite.add(bench_throughput("exact engine, vecadd O (txns/s)", 1, 5, txns, || {
+        let out = run_exact(&c_o.design, mk_hbm(), 100_000_000).unwrap();
+        black_box(out.stats.slow_cycles);
+    }));
+    suite.add(bench_throughput("functional executor, vecadd DP (elems/s)", 1, 5, n as f64, || {
+        let out = run_functional(&c_dp.design, mk_hbm()).unwrap();
+        black_box(out.hbm.read("z")[0]);
+    }));
+    suite.add(bench_throughput("rate model (designs/s)", 10, 50, 1.0, || {
+        black_box(rate_model(&c_dp.design).slow_cycles);
+    }));
+    suite.add(bench_throughput("compile pipeline, vecadd DP (designs/s)", 1, 10, 1.0, || {
+        let c = compile(
+            BuildSpec::new(temporal_vec::apps::vecadd::build())
+                .vectorized("vadd", 8)
+                .pumped(2, PumpMode::Resource)
+                .bind("N", n),
+        )
+        .unwrap();
+        black_box(c.report.effective_mhz);
+    }));
+    // FW exact at small n: stresses II/cooldown paths + repeats
+    let c_fw = compile(
+        BuildSpec::new(temporal_vec::apps::floyd_warshall::build())
+            .pumped(2, PumpMode::Throughput)
+            .bind("N", 32),
+    )
+    .unwrap();
+    let d = temporal_vec::apps::floyd_warshall::random_graph(32, 3, 0.3);
+    suite.add(bench_throughput("exact engine, FW n=32 (relax/s)", 1, 3, 32.0f64.powi(3), || {
+        let mut h = Hbm::new();
+        h.load("dist", d.clone());
+        let out = run_exact(&c_fw.design, h, 200_000_000).unwrap();
+        black_box(out.stats.slow_cycles);
+    }));
+    suite.finish();
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Table 2 (vector addition O vs DP, V∈{2,4,8})
+//! and time the full compile+estimate+cycle-model pipeline per variant.
+
+use temporal_vec::coordinator::experiment::table2;
+use temporal_vec::util::bench::{bench, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("table2_vecadd");
+    suite.start();
+    let n = temporal_vec::apps::vecadd::PAPER_N;
+    let r = table2(n, 1).expect("table2");
+    println!("{}", r.rendered);
+    suite.add(bench("table2 full regeneration", 1, 5, || {
+        let r = table2(n, 1).unwrap();
+        assert_eq!(r.rows.len(), 6);
+    }));
+    suite.finish();
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Table 3 (systolic GEMM: CA baseline, DaCe
+//! original, double-pumped at 32/48/64 PEs, 3-SLR replication).
+
+use temporal_vec::coordinator::experiment::table3;
+use temporal_vec::util::bench::{bench, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("table3_matmul");
+    suite.start();
+    let n = temporal_vec::apps::matmul::PAPER_NMK;
+    let r = table3(n, 1).expect("table3");
+    println!("{}", r.rendered);
+    // headline checks (paper shapes)
+    let find = |label: &str| r.rows.iter().find(|x| x.label == label).unwrap();
+    let (ca, o, dp32, dp64) = (find("CA 32"), find("O 32"), find("DP 32"), find("DP 64"));
+    assert!((dp32.util[4] / o.util[4] - 0.5).abs() < 0.02, "DSP halving");
+    assert!(dp32.util[3] / o.util[3] < 0.65, "BRAM cut");
+    assert!(dp64.gops > 1.10 * ca.gops, "DP-64 beats hand-written HLS");
+    suite.add(bench("table3 full regeneration", 0, 3, || {
+        let r = table3(n, 1).unwrap();
+        assert_eq!(r.rows.len(), 6);
+    }));
+    suite.finish();
+}

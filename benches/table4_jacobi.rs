@@ -1,0 +1,27 @@
+//! Bench: regenerate paper Table 4 (Jacobi-3D chains, 8-way vect).
+
+use temporal_vec::coordinator::experiment::table4;
+use temporal_vec::util::bench::{bench, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("table4_jacobi");
+    suite.start();
+    let nx = temporal_vec::apps::stencil::PAPER_NX;
+    let r = table4(nx, 1).expect("table4");
+    println!("{}", r.rendered);
+    let find = |label: &str| r.rows.iter().find(|x| x.label == label).unwrap();
+    // DSP halves per fixed S; DSP efficiency gains > 50 %
+    for s in [8, 16] {
+        let o = find(&format!("S={s} O"));
+        let dp = find(&format!("S={s} DP"));
+        assert!((dp.util[4] / o.util[4] - 0.5).abs() < 0.02);
+        assert!(dp.mops_per_dsp > 1.5 * o.mops_per_dsp);
+    }
+    // scaling: DP reaches S=40 at full width and outperforms O
+    assert!(find("S=40 DP").gops > 1.2 * find("S=40 O").gops);
+    suite.add(bench("table4 full regeneration", 0, 3, || {
+        let r = table4(nx, 1).unwrap();
+        assert_eq!(r.rows.len(), 6);
+    }));
+    suite.finish();
+}

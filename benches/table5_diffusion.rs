@@ -1,0 +1,26 @@
+//! Bench: regenerate paper Table 5 (Diffusion-3D chains, 4-way vect).
+
+use temporal_vec::coordinator::experiment::table5;
+use temporal_vec::util::bench::{bench, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("table5_diffusion");
+    suite.start();
+    let nx = temporal_vec::apps::stencil::PAPER_NX;
+    let r = table5(nx, 1).expect("table5");
+    println!("{}", r.rendered);
+    let find = |label: &str| r.rows.iter().find(|x| x.label == label).unwrap();
+    for s in [8, 16] {
+        let o = find(&format!("S={s} O"));
+        let dp = find(&format!("S={s} DP"));
+        assert!((dp.util[4] / o.util[4] - 0.5).abs() < 0.02);
+        assert!(dp.mops_per_dsp > 1.5 * o.mops_per_dsp);
+    }
+    // the original tops out at S=20; only DP reaches S=40, faster
+    assert!(find("S=40 DP").gops > 1.2 * find("S=20 O").gops);
+    suite.add(bench("table5 full regeneration", 0, 3, || {
+        let r = table5(nx, 1).unwrap();
+        assert_eq!(r.rows.len(), 6);
+    }));
+    suite.finish();
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate paper Table 6 (Floyd–Warshall, throughput-mode DP).
+
+use temporal_vec::coordinator::experiment::table6;
+use temporal_vec::util::bench::{bench, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("table6_floyd_warshall");
+    suite.start();
+    let n = temporal_vec::apps::floyd_warshall::PAPER_N;
+    let r = table6(n, 1).expect("table6");
+    println!("{}", r.rendered);
+    let (o, dp) = (&r.rows[0], &r.rows[1]);
+    // paper shape: similar resources, ~1.3-1.5x speedup from CL1
+    let speedup = o.time_s / dp.time_s;
+    assert!(speedup > 1.2, "speedup {speedup}");
+    assert!((dp.util[3] - o.util[3]).abs() < 2.0, "BRAM similar");
+    suite.add(bench("table6 full regeneration", 1, 5, || {
+        let r = table6(n, 1).unwrap();
+        assert_eq!(r.rows.len(), 2);
+    }));
+    suite.finish();
+}

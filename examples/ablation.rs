@@ -1,0 +1,142 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **Pumping factor M ∈ {2, 3, 4}** — the paper evaluates M=2 only
+//!    ("for this evaluation we are limited by the maximum achievable
+//!    frequency by Vivado"); the model shows why: resources keep
+//!    shrinking by 1/M but the effective clock collapses once
+//!    CL1 = M·CL0 exceeds what the fabric can close.
+//! 2. **Boundary FIFO depth** — the CDC synchronizer needs enough
+//!    slack to ride out cross-domain jitter; too-shallow FIFOs stall
+//!    the fast domain (visible in exact-mode cycle counts).
+//! 3. **Subdomain size** (paper §3.4) — pumping the whole application
+//!    vs only its compute core, measured as plumbing overhead.
+//!
+//! Run with: `cargo run --release --example ablation`
+
+use temporal_vec::apps;
+use temporal_vec::coordinator::{compile, BuildSpec};
+use temporal_vec::ir::PumpMode;
+use temporal_vec::sim::{run_exact, Hbm};
+use temporal_vec::transforms::streaming::StreamingComposition;
+use temporal_vec::transforms::{MultiPump, PassManager, Vectorize};
+use temporal_vec::util::table::{fnum, pct, Table};
+use temporal_vec::util::Rng;
+
+fn main() -> Result<(), String> {
+    // ---- 1. pumping-factor sweep ----
+    let n: i64 = 1 << 20;
+    let mut t = Table::new(
+        "ablation 1: pumping factor (vecadd, V=8, resource mode)",
+        &["M", "DSP%", "CL0", "CL1", "CL1/M", "effective MHz", "verdict"],
+    );
+    let base_eff = {
+        let c = compile(
+            BuildSpec::new(apps::vecadd::build()).vectorized("vadd", 8).bind("N", n),
+        )?;
+        c.report.effective_mhz
+    };
+    t.row(vec![
+        "1 (orig)".into(),
+        "0.56".into(),
+        fnum(base_eff, 1),
+        "-".into(),
+        "-".into(),
+        fnum(base_eff, 1),
+        "baseline".into(),
+    ]);
+    for m in [2usize, 4, 8] {
+        let c = compile(
+            BuildSpec::new(apps::vecadd::build())
+                .vectorized("vadd", 8)
+                .pumped(m, PumpMode::Resource)
+                .bind("N", n),
+        )?;
+        let cl1 = c.report.cl1.unwrap().achieved_mhz;
+        let verdict = if c.report.effective_mhz > 0.9 * base_eff {
+            "free resources"
+        } else {
+            "throughput lost"
+        };
+        t.row(vec![
+            m.to_string(),
+            pct(c.report.util_percent()[4]),
+            fnum(c.report.cl0.achieved_mhz, 1),
+            fnum(cl1, 1),
+            fnum(cl1 / m as f64, 1),
+            fnum(c.report.effective_mhz, 1),
+            verdict.into(),
+        ]);
+    }
+    t.footnote("beyond M=2 the 650 MHz request cap makes CL1/M the bottleneck — the paper's Vivado limit");
+    println!("{}", t.render());
+
+    // ---- 2. boundary FIFO depth (exact-mode stalls) ----
+    let n2: i64 = 1 << 12;
+    let mut t2 = Table::new(
+        "ablation 2: CDC stream depth (vecadd V=4 DP, exact simulation)",
+        &["depth", "slow cycles", "overhead vs deep"],
+    );
+    let mut results = Vec::new();
+    for depth in [1usize, 2, 4, 16, 64] {
+        let mut g = apps::vecadd::build();
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &Vectorize::new("vadd", 4))?;
+        pm.run(&mut g, &StreamingComposition { stream_depth: depth })?;
+        pm.run(&mut g, &MultiPump::resource(2))?;
+        let env = g.bind(&[("N", n2)])?;
+        let design =
+            temporal_vec::codegen::lower(&g, &env, &temporal_vec::hw::cost::CostModel::default())?;
+        let mut rng = Rng::new(4);
+        let mut hbm = Hbm::new();
+        hbm.load("x", rng.f32_vec(n2 as usize));
+        hbm.load("y", rng.f32_vec(n2 as usize));
+        let out = run_exact(&design, hbm, 50_000_000)?;
+        results.push((depth, out.stats.slow_cycles));
+    }
+    let deep = results.last().unwrap().1 as f64;
+    for (depth, cycles) in &results {
+        t2.row(vec![
+            depth.to_string(),
+            cycles.to_string(),
+            format!("{:+.1}%", (*cycles as f64 / deep - 1.0) * 100.0),
+        ]);
+    }
+    t2.footnote("finding: with in-order process scheduling even depth-1 FIFOs sustain rate for a linear chain — the synchronizer latency, not capacity, is what CDC costs here");
+    println!("{}", t2.render());
+
+    // ---- 3. plumbing overhead vs subdomain size (paper §3.4) ----
+    let mut t3 = Table::new(
+        "ablation 3: plumbing overhead by boundary width (vecadd V, DP)",
+        &["V", "plumbing LUT", "plumbing regs", "share of design LUT"],
+    );
+    for v in [2usize, 4, 8, 16] {
+        let c = compile(
+            BuildSpec::new(apps::vecadd::build())
+                .vectorized("vadd", v)
+                .pumped(2, PumpMode::Resource)
+                .bind("N", n),
+        )?;
+        let plumbing: temporal_vec::hw::ResourceVec = c
+            .design
+            .modules
+            .iter()
+            .filter(|m| match &m.spec {
+                temporal_vec::codegen::ModuleSpec::Sync { input, .. } => {
+                    !input.starts_with("__ctrl")
+                }
+                temporal_vec::codegen::ModuleSpec::Issuer { .. }
+                | temporal_vec::codegen::ModuleSpec::Packer { .. } => true,
+                _ => false,
+            })
+            .fold(temporal_vec::hw::ResourceVec::ZERO, |acc, m| acc + m.resources);
+        t3.row(vec![
+            v.to_string(),
+            fnum(plumbing.lut_logic, 0),
+            fnum(plumbing.registers, 0),
+            pct(plumbing.lut_logic / c.report.resources.lut_logic * 100.0),
+        ]);
+    }
+    t3.footnote("wider boundaries cost more plumbing — why the paper pumps the LARGEST streamable subgraph (fewest crossings), §3.4");
+    println!("{}", t3.render());
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Reproduce the paper's **Figure 2**: waveforms of the original and
+//! double-pumped vector addition (M=2, V=2).
+//!
+//! The exact cycle-stepped simulator traces per-module activity; the
+//! rendering shows the slow-clock ruler on top ( | marks a clk0 edge)
+//! and one row per module. In the double-pumped design the issuers,
+//! compute and packers tick on clk1 (twice per ruler mark) while the
+//! readers/writers and synchronizers stay on clk0 — exactly the
+//! waveform structure of Figure 2 (2) and (3).
+//!
+//! Run with: `cargo run --release --example waveforms`
+
+use temporal_vec::coordinator::{compile, BuildSpec};
+use temporal_vec::ir::PumpMode;
+use temporal_vec::sim::{run_traced, Hbm};
+use temporal_vec::util::Rng;
+
+fn trace(pump: bool) -> Result<(), String> {
+    let n = 24i64;
+    let mut spec = BuildSpec::new(temporal_vec::apps::vecadd::build())
+        .vectorized("vadd", 2)
+        .bind("N", n);
+    if pump {
+        spec = spec.pumped(2, PumpMode::Resource);
+    }
+    let c = compile(spec)?;
+    let mut rng = Rng::new(2);
+    let mut hbm = Hbm::new();
+    hbm.load("x", rng.f32_vec(n as usize));
+    hbm.load("y", rng.f32_vec(n as usize));
+    let t = run_traced(&c.design, hbm, 96)?;
+    println!(
+        "{} vector addition (V=2{}):\n{}",
+        if pump { "(2)+(3) double-pumped" } else { "(1) original" },
+        if pump { ", M=2" } else { "" },
+        t.render()
+    );
+    Ok(())
+}
+
+fn main() -> Result<(), String> {
+    println!("Figure 2 reproduction — waveforms from the exact simulator\n");
+    trace(false)?;
+    trace(true)?;
+    println!("note how the compute row fires twice per clk0 edge in the pumped design,");
+    println!("while readers/writers keep the slow cadence — temporal vectorization.");
+    Ok(())
+}

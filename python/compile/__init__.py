@@ -1,0 +1,2 @@
+# Build-time only: JAX/Pallas authoring + AOT lowering. Never imported
+# by the runtime - the rust binary loads the HLO text artifacts.

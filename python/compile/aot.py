@@ -1,0 +1,58 @@
+"""AOT driver: lower every L2 model to HLO *text* in artifacts/.
+
+HLO text (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Python runs ONCE here (`make artifacts`); the rust binary is fully
+self-contained afterwards.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="lower a single model")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for name, (fn, shapes) in MODELS.items():
+        if args.only and name != args.only:
+            continue
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shape_str = ";".join("x".join(map(str, s)) for s in shapes)
+        manifest.append(f"{name} {os.path.basename(path)} {shape_str}")
+        print(f"  {name}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: blocked GEMM with a temporal K-grid.
+
+This is the paper's core insight mapped to the TPU (DESIGN.md
+§Hardware-Adaptation): the FPGA version keeps ONE systolic compute
+block and feeds it wider data over multiple fast cycles; here we keep
+ONE MXU-shaped block computation (``bm×bk @ bk×bn``) and iterate it
+over the K grid dimension with a VMEM accumulator — the compute block
+is reused temporally while BlockSpecs (the issuer/packer analog)
+schedule the HBM→VMEM data movement.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, bm=128, bn=128, bk=128):
+    """C = A @ B for f32 A:(n,k), B:(k,m), block sizes dividing shapes.
+
+    MXU-aligned default blocks (128×128). VMEM footprint per grid step:
+    bm·bk + bk·bn + bm·bn floats = 192 KiB at the default — comfortably
+    under the ~16 MiB VMEM budget, leaving room for double buffering.
+    """
+    n, k = a.shape
+    k2, m = b.shape
+    assert k == k2, f"shape mismatch {a.shape} @ {b.shape}"
+    bm, bn, bk = min(bm, n), min(bn, m), min(bk, k)
+    assert n % bm == 0 and m % bn == 0 and k % bk == 0
+    grid = (n // bm, m // bn, k // bk)  # K innermost: temporal reuse
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,81 @@
+"""Pure-jnp correctness oracles.
+
+These are the single source of truth for the *numerics* of every
+benchmark. Three consumers assert against them:
+
+* pytest checks every Pallas kernel against its oracle
+  (``python/tests/test_kernels.py``);
+* the AOT models in ``model.py`` call the Pallas kernels, so the HLO
+  artifacts inherit the checked semantics;
+* the Rust simulator's functional mode reproduces the same formulas
+  (``rust/src/sim/process.rs``) and the integration tests compare its
+  output against the PJRT-executed artifacts.
+
+The stencil boundary convention is *passthrough* (halo points copy the
+input), matching the hardware line-buffer implementation. Floyd-
+Warshall uses the finite sentinel ``INF = 1e30`` instead of ``inf`` so
+that hardware adders never see non-finite values (paper designs do the
+same).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+INF = 1.0e30
+
+
+def vecadd(x, y):
+    """z = x + y."""
+    return x + y
+
+
+def matmul(a, b):
+    """Plain f32 GEMM."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def jacobi3d(v):
+    """One Jacobi-3D step: interior = mean of the 6 face neighbours,
+    boundary passthrough. v has shape (nx, ny, nz)."""
+    v = jnp.asarray(v)
+    s = (
+        v[:-2, 1:-1, 1:-1]
+        + v[2:, 1:-1, 1:-1]
+        + v[1:-1, :-2, 1:-1]
+        + v[1:-1, 2:, 1:-1]
+        + v[1:-1, 1:-1, :-2]
+        + v[1:-1, 1:-1, 2:]
+    ) * (1.0 / 6.0)
+    return v.at[1:-1, 1:-1, 1:-1].set(s)
+
+
+def diffusion3d(v):
+    """One Diffusion-3D step (higher arithmetic intensity), boundary
+    passthrough."""
+    v = jnp.asarray(v)
+    c = v[1:-1, 1:-1, 1:-1]
+    s = (
+        0.5 * c
+        + 0.125 * (v[:-2, 1:-1, 1:-1] + v[2:, 1:-1, 1:-1])
+        + 0.0833 * (v[1:-1, :-2, 1:-1] + v[1:-1, 2:, 1:-1])
+        + 0.0917 * (v[1:-1, 1:-1, :-2] + v[1:-1, 1:-1, 2:])
+    )
+    return v.at[1:-1, 1:-1, 1:-1].set(s)
+
+
+def stencil_chain(v, stages, kind="jacobi3d"):
+    """S chained stencil stages (paper §4.3)."""
+    step = jacobi3d if kind == "jacobi3d" else diffusion3d
+    for _ in range(stages):
+        v = step(v)
+    return v
+
+
+def floyd_warshall(d):
+    """All-pairs shortest paths; d is (n, n) with INF sentinels."""
+    n = d.shape[0]
+
+    def body(k, dist):
+        return jnp.minimum(dist, dist[:, k][:, None] + dist[k, :][None, :])
+
+    return lax.fori_loop(0, n, body, d)

@@ -1,0 +1,122 @@
+"""L1 Pallas kernels: Jacobi-3D and Diffusion-3D stencil stages.
+
+The FPGA version (StencilFlow) streams the domain through line buffers
+sized to two planes of the volume; the TPU analog tiles the volume over
+the leading (x) grid dimension with a one-plane halo on each side —
+VMEM holds (bx+2)·ny·nz floats per step, the line-buffer working set.
+The boundary convention is passthrough, matching `ref.py` and the Rust
+simulator's `stencil_point`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jacobi_body(v):
+    s = (
+        v[:-2, 1:-1, 1:-1]
+        + v[2:, 1:-1, 1:-1]
+        + v[1:-1, :-2, 1:-1]
+        + v[1:-1, 2:, 1:-1]
+        + v[1:-1, 1:-1, :-2]
+        + v[1:-1, 1:-1, 2:]
+    ) * (1.0 / 6.0)
+    return v.at[1:-1, 1:-1, 1:-1].set(s)
+
+
+def _diffusion_body(v):
+    c = v[1:-1, 1:-1, 1:-1]
+    s = (
+        0.5 * c
+        + 0.125 * (v[:-2, 1:-1, 1:-1] + v[2:, 1:-1, 1:-1])
+        + 0.0833 * (v[1:-1, :-2, 1:-1] + v[1:-1, 2:, 1:-1])
+        + 0.0917 * (v[1:-1, 1:-1, :-2] + v[1:-1, 1:-1, 2:])
+    )
+    return v.at[1:-1, 1:-1, 1:-1].set(s)
+
+
+def _make_kernel(body):
+    def kernel(x_ref, o_ref):
+        o_ref[...] = body(x_ref[...])
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def stencil_step(v, kind="jacobi3d"):
+    """One stencil stage over the whole (nx, ny, nz) volume.
+
+    A single grid step keeps the full volume in VMEM — valid for the
+    verification sizes (32³ ≈ 128 KiB). For paper-scale domains the
+    x-tiled variant `stencil_step_tiled` bounds the footprint.
+    """
+    body = _jacobi_body if kind == "jacobi3d" else _diffusion_body
+    return pl.pallas_call(
+        _make_kernel(body),
+        out_shape=jax.ShapeDtypeStruct(v.shape, jnp.float32),
+        interpret=True,
+    )(v)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "bx"))
+def stencil_step_tiled(v, kind="jacobi3d", bx=8):
+    """One stencil stage tiled over x with a ±1-plane halo.
+
+    The halo is delivered as two pre-shifted views (`x-1` and `x+1`
+    planes) so every grid step works on aligned (bx, ny, nz) blocks —
+    VMEM holds three input tiles plus the output tile, the line-buffer
+    working set of the FPGA implementation. Global x-boundary planes
+    pass through, selected with an in-kernel iota mask.
+    """
+    nx, ny, nz = v.shape
+    assert nx % bx == 0
+
+    def kernel(vm_ref, vc_ref, vp_ref, o_ref):
+        i = pl.program_id(0)
+        vm, vc, vp = vm_ref[...], vc_ref[...], vp_ref[...]
+        # y/z face neighbours from intra-tile shifts of the centre tile
+        ym = jnp.concatenate([vc[:, :1], vc[:, :-1]], axis=1)
+        yp = jnp.concatenate([vc[:, 1:], vc[:, -1:]], axis=1)
+        zm = jnp.concatenate([vc[:, :, :1], vc[:, :, :-1]], axis=2)
+        zp = jnp.concatenate([vc[:, :, 1:], vc[:, :, -1:]], axis=2)
+        if kind == "jacobi3d":
+            s = (vm + vp + ym + yp + zm + zp) * (1.0 / 6.0)
+        else:
+            s = 0.5 * vc + 0.125 * (vm + vp) + 0.0833 * (ym + yp) + 0.0917 * (zm + zp)
+        # boundary passthrough: global x index of each plane in the tile
+        gx = i * bx + jax.lax.broadcasted_iota(jnp.int32, (bx, ny, nz), 0)
+        gy = jax.lax.broadcasted_iota(jnp.int32, (bx, ny, nz), 1)
+        gz = jax.lax.broadcasted_iota(jnp.int32, (bx, ny, nz), 2)
+        interior = (
+            (gx > 0)
+            & (gx < nx - 1)
+            & (gy > 0)
+            & (gy < ny - 1)
+            & (gz > 0)
+            & (gz < nz - 1)
+        )
+        o_ref[...] = jnp.where(interior, s, vc)
+
+    # pre-shifted x-neighbour views (clamped at the global boundary —
+    # those lanes are overwritten by the passthrough mask anyway)
+    vxm = jnp.concatenate([v[:1], v[:-1]], axis=0)
+    vxp = jnp.concatenate([v[1:], v[-1:]], axis=0)
+    spec = pl.BlockSpec((bx, ny, nz), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(nx // bx,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((nx, ny, nz), jnp.float32),
+        interpret=True,
+    )(vxm, v, vxp)
+
+
+def stencil_chain(v, stages, kind="jacobi3d"):
+    """S chained stages — the paper's §4.3 workload."""
+    for _ in range(stages):
+        v = stencil_step(v, kind=kind)
+    return v

@@ -1,0 +1,56 @@
+"""L2: the golden models AOT-exported to HLO for the Rust runtime.
+
+Each function composes the L1 Pallas kernels into the exact workload a
+benchmark runs; `aot.py` lowers them ONCE at build time. The export
+shapes below are the verification sizes the Rust integration tests use
+(the simulator's functional mode must reproduce these outputs
+bit-for-bit up to float tolerance).
+"""
+
+from .kernels import floyd_warshall as fw
+from .kernels import matmul as mm
+from .kernels import stencil as st
+from .kernels import vecadd as va
+
+# ---- export shapes (verification-scale; the paper-scale runs use the
+# ---- analytic simulator, see DESIGN.md §2) ----
+VECADD_N = 4096
+GEMM_N, GEMM_M, GEMM_K = 128, 128, 128
+STENCIL_NX, STENCIL_NY, STENCIL_NZ = 32, 32, 32
+STENCIL_STAGES = 4
+FW_N = 64
+
+
+def vecadd(x, y):
+    """z = x + y (paper §3.2 running example; Table 2)."""
+    return (va.vecadd(x, y),)
+
+
+def matmul(a, b):
+    """Communication-avoiding GEMM golden model (Table 3)."""
+    return (mm.matmul(a, b),)
+
+
+def jacobi3d(v):
+    """S chained Jacobi-3D stages (Table 4)."""
+    return (st.stencil_chain(v, STENCIL_STAGES, kind="jacobi3d"),)
+
+
+def diffusion3d(v):
+    """S chained Diffusion-3D stages (Table 5)."""
+    return (st.stencil_chain(v, STENCIL_STAGES, kind="diffusion3d"),)
+
+
+def floyd_warshall(d):
+    """All-pairs shortest paths (Table 6)."""
+    return (fw.floyd_warshall(d),)
+
+
+# name -> (fn, arg shapes)
+MODELS = {
+    "vecadd": (vecadd, [(VECADD_N,), (VECADD_N,)]),
+    "matmul": (matmul, [(GEMM_N, GEMM_K), (GEMM_K, GEMM_M)]),
+    "jacobi3d": (jacobi3d, [(STENCIL_NX, STENCIL_NY, STENCIL_NZ)]),
+    "diffusion3d": (diffusion3d, [(STENCIL_NX, STENCIL_NY, STENCIL_NZ)]),
+    "floyd_warshall": (floyd_warshall, [(FW_N, FW_N)]),
+}

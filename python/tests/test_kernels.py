@@ -1,0 +1,193 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the stack.
+
+Every Pallas kernel (interpret=True) is checked against the pure-jnp
+oracle in `ref.py`, with hypothesis sweeping shapes and data.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import floyd_warshall as fw
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+from compile.kernels import stencil as stn
+from compile.kernels import vecadd as va
+
+RNG = np.random.default_rng(1234)
+
+
+def rnd(*shape):
+    return RNG.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+
+
+def assert_close(a, b, rtol=1e-5, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------- vecadd ----------
+
+class TestVecAdd:
+    def test_basic(self):
+        x, y = rnd(4096), rnd(4096)
+        assert_close(va.vecadd(x, y), ref.vecadd(x, y))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 8),
+        block=st.sampled_from([8, 32, 128, 512]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_shapes_and_blocks(self, n_blocks, block, seed):
+        r = np.random.default_rng(seed)
+        n = n_blocks * block
+        x = r.uniform(-10, 10, n).astype(np.float32)
+        y = r.uniform(-10, 10, n).astype(np.float32)
+        assert_close(va.vecadd(x, y, block=block), x + y)
+
+    def test_non_divisible_length_falls_back(self):
+        x, y = rnd(100), rnd(100)
+        assert_close(va.vecadd(x, y, block=64), x + y)
+
+    def test_special_values(self):
+        x = np.array([0.0, -0.0, 1e30, -1e30], dtype=np.float32)
+        y = np.array([0.0, 0.0, 1e30, 1e30], dtype=np.float32)
+        assert_close(va.vecadd(x, y), x + y)
+
+
+# ---------- matmul ----------
+
+class TestMatmul:
+    def test_basic_128(self):
+        a, b = rnd(128, 128), rnd(128, 128)
+        assert_close(mm.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.sampled_from([32, 64, 128]),
+        m=st.sampled_from([32, 64]),
+        k=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_rectangular(self, n, m, k, seed):
+        r = np.random.default_rng(seed)
+        a = r.uniform(-1, 1, (n, k)).astype(np.float32)
+        b = r.uniform(-1, 1, (k, m)).astype(np.float32)
+        got = mm.matmul(a, b, bm=32, bn=32, bk=32)
+        assert_close(got, a @ b, rtol=1e-4, atol=1e-4)
+
+    def test_k_grid_accumulation(self):
+        # many K blocks: exercises the temporal accumulator
+        a, b = rnd(32, 256), rnd(256, 32)
+        got = mm.matmul(a, b, bm=32, bn=32, bk=32)
+        assert_close(got, a @ b, rtol=1e-4, atol=1e-4)
+
+    def test_identity(self):
+        a = rnd(64, 64)
+        eye = np.eye(64, dtype=np.float32)
+        assert_close(mm.matmul(a, eye, bm=32, bn=32, bk=32), a, rtol=1e-5)
+
+
+# ---------- stencils ----------
+
+class TestStencil:
+    @pytest.mark.parametrize("kind", ["jacobi3d", "diffusion3d"])
+    def test_single_step(self, kind):
+        v = rnd(16, 12, 8)
+        oracle = ref.jacobi3d if kind == "jacobi3d" else ref.diffusion3d
+        assert_close(stn.stencil_step(v, kind=kind), oracle(v), rtol=1e-5)
+
+    @pytest.mark.parametrize("kind", ["jacobi3d", "diffusion3d"])
+    def test_chain(self, kind):
+        v = rnd(8, 8, 8)
+        got = stn.stencil_chain(v, 4, kind=kind)
+        want = ref.stencil_chain(v, 4, kind=kind)
+        assert_close(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_boundary_passthrough(self):
+        v = rnd(8, 8, 8)
+        out = np.asarray(stn.stencil_step(v, kind="jacobi3d"))
+        np.testing.assert_array_equal(out[0], v[0])
+        np.testing.assert_array_equal(out[-1], v[-1])
+        np.testing.assert_array_equal(out[:, 0], v[:, 0])
+        np.testing.assert_array_equal(out[:, :, -1], v[:, :, -1])
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        nx=st.sampled_from([8, 16]),
+        ny=st.sampled_from([4, 8]),
+        nz=st.sampled_from([4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_shape_sweep(self, nx, ny, nz, seed):
+        r = np.random.default_rng(seed)
+        v = r.uniform(-1, 1, (nx, ny, nz)).astype(np.float32)
+        assert_close(stn.stencil_step(v), ref.jacobi3d(v), rtol=1e-5)
+
+    def test_tiled_matches_untiled(self):
+        v = rnd(16, 8, 8)
+        tiled = stn.stencil_step_tiled(v, bx=4)
+        assert_close(tiled, ref.jacobi3d(v), rtol=1e-5)
+
+    def test_constant_field_is_fixed_point(self):
+        v = np.full((8, 8, 8), 3.25, dtype=np.float32)
+        assert_close(stn.stencil_step(v, kind="jacobi3d"), v)
+
+
+# ---------- floyd-warshall ----------
+
+def random_graph(n, seed, density=0.4):
+    r = np.random.default_rng(seed)
+    d = np.full((n, n), ref.INF, dtype=np.float32)
+    np.fill_diagonal(d, 0.0)
+    mask = r.uniform(size=(n, n)) < density
+    w = r.uniform(0.1, 10.0, size=(n, n)).astype(np.float32)
+    d = np.where(mask, np.minimum(d, w), d)
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+def fw_numpy(d):
+    d = d.copy()
+    n = d.shape[0]
+    for k in range(n):
+        d = np.minimum(d, d[:, k][:, None] + d[k, :][None, :])
+    return d
+
+
+class TestFloydWarshall:
+    def test_small_chain(self):
+        inf = ref.INF
+        d = np.array(
+            [[0.0, 1.0, 9.0], [inf, 0.0, 2.0], [inf, inf, 0.0]], dtype=np.float32
+        )
+        got = np.asarray(fw.floyd_warshall(jnp.asarray(d)))
+        assert got[0, 2] == 3.0
+
+    @settings(max_examples=6, deadline=None)
+    @given(n=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+    def test_matches_numpy(self, n, seed):
+        d = random_graph(n, seed)
+        got = np.asarray(fw.floyd_warshall(jnp.asarray(d)))
+        assert_close(got, fw_numpy(d), rtol=1e-5)
+
+    def test_kernel_single_relaxation(self):
+        d = random_graph(8, 5)
+        got = np.asarray(fw.relax(jnp.asarray(d), 3))
+        want = np.minimum(d, d[:, 3][:, None] + d[3, :][None, :])
+        assert_close(got, want)
+
+    def test_ref_oracle_agrees_with_numpy(self):
+        d = random_graph(12, 9)
+        assert_close(np.asarray(ref.floyd_warshall(jnp.asarray(d))), fw_numpy(d))
+
+    def test_triangle_inequality_holds(self):
+        d = random_graph(10, 11)
+        out = np.asarray(fw.floyd_warshall(jnp.asarray(d)))
+        n = out.shape[0]
+        for i in range(n):
+            for j in range(n):
+                for k in range(n):
+                    assert out[i, j] <= out[i, k] + out[k, j] + 1e-3

@@ -1,0 +1,24 @@
+//! Data-movement analyses.
+//!
+//! The paper's transformation is driven purely by data movement (§3.2):
+//! *"Our automatic multi-pumping transformation applies to programs
+//! regardless of their computational contents, but rather by tracing
+//! and mutating their data movement properties."* This module holds the
+//! three analyses it describes:
+//!
+//! * [`movement`] — trace all memlets into/out of each computational
+//!   scope (the "capturing all data movement" step);
+//! * [`streamability`] — can the memory between two connected modules
+//!   be pipelined into a FIFO? (order-preserving linear access check,
+//!   the "intersection check on each pair of connected modules");
+//! * [`vectorizability`] — the traditional SIMD conditions and the
+//!   *relaxed temporal* conditions (internal sequential dependencies
+//!   allowed; only data-dependent external I/O is disqualifying).
+
+pub mod movement;
+pub mod streamability;
+pub mod vectorizability;
+
+pub use movement::{scope_movement, ScopeMovement};
+pub use streamability::{streamable_between, Streamability};
+pub use vectorizability::{check_temporal, check_traditional, Vectorizability};

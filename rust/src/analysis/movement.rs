@@ -1,0 +1,137 @@
+//! Data-movement tracing per computational scope.
+
+use crate::ir::{Node, NodeId, Sdfg};
+use crate::symbolic::Subset;
+
+/// One traced external access of a scope.
+#[derive(Clone, Debug)]
+pub struct TracedAccess {
+    /// The container accessed.
+    pub data: String,
+    /// Subset as a function of the scope parameter(s).
+    pub subset: Subset,
+    /// True for reads into the scope, false for writes out of it.
+    pub is_read: bool,
+    /// Dynamic (data-dependent) access.
+    pub dynamic: bool,
+}
+
+/// All data movement of one map scope.
+#[derive(Clone, Debug)]
+pub struct ScopeMovement {
+    pub entry: NodeId,
+    pub params: Vec<String>,
+    pub reads: Vec<TracedAccess>,
+    pub writes: Vec<TracedAccess>,
+}
+
+impl ScopeMovement {
+    /// All accesses (reads then writes).
+    pub fn all(&self) -> impl Iterator<Item = &TracedAccess> {
+        self.reads.iter().chain(self.writes.iter())
+    }
+
+    /// Innermost scope parameter (the pipelined iteration variable).
+    pub fn inner_param(&self) -> &str {
+        self.params.last().expect("scope has no parameters")
+    }
+
+    /// Does any access involve data-dependent addressing?
+    pub fn any_dynamic(&self) -> bool {
+        self.all().any(|a| a.dynamic)
+    }
+}
+
+/// Trace the data movement of the map scope rooted at `entry`:
+/// every memlet crossing the entry (reads) or the matching exit
+/// (writes), with its symbolic subset.
+pub fn scope_movement(g: &Sdfg, entry: NodeId) -> Result<ScopeMovement, String> {
+    let (name, params) = match g.node(entry) {
+        Node::MapEntry { name, params, .. } => (name.clone(), params.clone()),
+        other => return Err(format!("node {entry:?} is not a map entry ({other:?})")),
+    };
+    let exit = g
+        .find_map_exit(&name)
+        .ok_or_else(|| format!("map '{name}' has no exit"))?;
+
+    let mut reads = Vec::new();
+    for e in g.out_edges(entry) {
+        let m = &g.edge(e).memlet;
+        reads.push(TracedAccess {
+            data: m.data.clone(),
+            subset: m.subset.clone(),
+            is_read: true,
+            dynamic: m.dynamic || m.subset.dims.iter().any(|d| d.begin.is_opaque() || d.end.is_opaque()),
+        });
+    }
+    let mut writes = Vec::new();
+    for e in g.in_edges(exit) {
+        let m = &g.edge(e).memlet;
+        writes.push(TracedAccess {
+            data: m.data.clone(),
+            subset: m.subset.clone(),
+            is_read: false,
+            dynamic: m.dynamic || m.subset.dims.iter().any(|d| d.begin.is_opaque() || d.end.is_opaque()),
+        });
+    }
+    Ok(ScopeMovement { entry, params, reads, writes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::vecadd_sdfg;
+
+    #[test]
+    fn traces_vecadd_movement() {
+        let g = vecadd_sdfg(1);
+        let entry = g.find_map_entry("vadd").unwrap();
+        let mv = scope_movement(&g, entry).unwrap();
+        assert_eq!(mv.params, vec!["i"]);
+        assert_eq!(mv.reads.len(), 2);
+        assert_eq!(mv.writes.len(), 1);
+        let names: Vec<&str> = mv.reads.iter().map(|r| r.data.as_str()).collect();
+        assert!(names.contains(&"x") && names.contains(&"y"));
+        assert_eq!(mv.writes[0].data, "z");
+        assert!(!mv.any_dynamic());
+        assert_eq!(mv.inner_param(), "i");
+    }
+
+    #[test]
+    fn dynamic_accesses_detected() {
+        use crate::ir::{GraphBuilder, MapSchedule, Memlet, TaskExpr};
+        use crate::symbolic::{Expr, Range, Subset};
+        let mut b = GraphBuilder::new("gather");
+        b.array_f32("idx", vec![Expr::sym("N")]);
+        b.array_f32("x", vec![Expr::sym("N")]);
+        b.array_f32("y", vec![Expr::sym("N")]);
+        let xi = b.access("idx");
+        let x = b.access("x");
+        let y = b.access("y");
+        let (me, mx) = b.map("g", &["i"], vec![Range::upto_sym("N")], MapSchedule::Pipeline);
+        let t = b.tasklet1("copy", "out", TaskExpr::input("v"));
+        let all = Subset::new(vec![Range::upto_sym("N")]);
+        b.edge(xi, me, Memlet::new("idx", all.clone()));
+        b.edge(x, me, Memlet::new("x", all.clone()));
+        // data-dependent read x[idx[i]]
+        b.edge(
+            me,
+            t,
+            Memlet::new("x", Subset::index1(Expr::opaque("idx[i]")))
+                .with_dst("v")
+                .dynamic(),
+        );
+        b.drain(t, mx, y, "y", Subset::index1(Expr::sym("i")), all, "out");
+        let g = b.finish();
+        let entry = g.find_map_entry("g").unwrap();
+        let mv = scope_movement(&g, entry).unwrap();
+        assert!(mv.any_dynamic());
+    }
+
+    #[test]
+    fn non_map_node_is_an_error() {
+        let g = vecadd_sdfg(1);
+        // node 0 is an access node
+        assert!(scope_movement(&g, crate::ir::NodeId(0)).is_err());
+    }
+}

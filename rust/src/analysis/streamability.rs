@@ -1,0 +1,201 @@
+//! Streamability: can module-to-module memory become a FIFO?
+//!
+//! Paper §3.2: *"We identify where to apply the optimization by greedily
+//! taking the entire application in its DaCe IR form and finding the
+//! largest subgraph that can be streamed, that is, when data
+//! dependencies between two components can be converted to queue-based
+//! access. [...] By performing an intersection check on each pair of
+//! connected modules, we can determine if pipelining the memory between
+//! two modules can be performed."*
+//!
+//! A container access is *streamable from a scope* when the scope
+//! touches it in a linear, order-preserving sequence — formally, when
+//! its subset is innermost-linear in the scope's pipelined parameter
+//! ([`Subset::linear_in`]). Two connected modules can stream *between*
+//! each other when the producer's write order equals the consumer's
+//! read order (identical subsets as functions of their parameters).
+
+use super::movement::{ScopeMovement, TracedAccess};
+use crate::ir::{ContainerKind, Sdfg};
+use crate::symbolic::Expr;
+
+/// Verdict for one access or one producer/consumer pair.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Streamability {
+    /// Access order is linear with the given stride — a reader/writer
+    /// module can feed it through a FIFO.
+    Streamable { stride: i64 },
+    /// Not convertible to queue access, with the reason.
+    Blocked(String),
+}
+
+impl Streamability {
+    pub fn is_streamable(&self) -> bool {
+        matches!(self, Streamability::Streamable { .. })
+    }
+}
+
+/// Can a single traced access be converted to a stream, given the
+/// scope's pipelined (innermost) parameter?
+pub fn streamable_access(acc: &TracedAccess, inner_param: &str) -> Streamability {
+    if acc.dynamic {
+        return Streamability::Blocked(format!(
+            "access to '{}' is data-dependent (dynamic memlet)",
+            acc.data
+        ));
+    }
+    match acc.subset.linear_in(inner_param) {
+        Some(stride) => Streamability::Streamable { stride },
+        None => Streamability::Blocked(format!(
+            "access {}{} is not linear in pipeline parameter '{inner_param}'",
+            acc.data, acc.subset
+        )),
+    }
+}
+
+/// Can the memory between a producer scope (writing `data`) and a
+/// consumer scope (reading `data`) be pipelined into a FIFO? Both must
+/// access `data` linearly, with the same stride, and the subsets must
+/// coincide under renaming of their respective parameters.
+pub fn streamable_between(
+    g: &Sdfg,
+    producer: &ScopeMovement,
+    consumer: &ScopeMovement,
+    data: &str,
+) -> Streamability {
+    // streams are already streams
+    if let Some(decl) = g.container(data) {
+        if decl.kind == ContainerKind::Stream {
+            return Streamability::Streamable { stride: 1 };
+        }
+    }
+    let w = match producer.writes.iter().find(|a| a.data == data) {
+        Some(w) => w,
+        None => return Streamability::Blocked(format!("producer does not write '{data}'")),
+    };
+    let r = match consumer.reads.iter().find(|a| a.data == data) {
+        Some(r) => r,
+        None => return Streamability::Blocked(format!("consumer does not read '{data}'")),
+    };
+    let sw = streamable_access(w, producer.inner_param());
+    if let Streamability::Blocked(reason) = sw {
+        return Streamability::Blocked(format!("producer: {reason}"));
+    }
+    let sr = streamable_access(r, consumer.inner_param());
+    if let Streamability::Blocked(reason) = sr {
+        return Streamability::Blocked(format!("consumer: {reason}"));
+    }
+    // order intersection check: writer subset as f(p) must equal reader
+    // subset as f(q) under p := q (same position in the sequence)
+    let canon = Expr::sym("__seq");
+    let wsub = w.subset.subst(producer.inner_param(), &canon);
+    let rsub = r.subset.subst(consumer.inner_param(), &canon);
+    match wsub.same_as(&rsub) {
+        Some(true) => {
+            let stride = match sw {
+                Streamability::Streamable { stride } => stride,
+                _ => unreachable!(),
+            };
+            Streamability::Streamable { stride }
+        }
+        Some(false) => Streamability::Blocked(format!(
+            "write order {wsub} differs from read order {rsub} for '{data}'"
+        )),
+        None => Streamability::Blocked(format!(
+            "cannot prove write/read order equality for '{data}' (opaque index)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::movement::scope_movement;
+    use crate::ir::builder::vecadd_sdfg;
+    use crate::symbolic::Subset;
+
+    #[test]
+    fn vecadd_accesses_streamable() {
+        let g = vecadd_sdfg(1);
+        let entry = g.find_map_entry("vadd").unwrap();
+        let mv = scope_movement(&g, entry).unwrap();
+        for acc in mv.all() {
+            assert!(streamable_access(acc, "i").is_streamable(), "{acc:?}");
+        }
+    }
+
+    #[test]
+    fn reversed_access_blocked() {
+        use crate::analysis::movement::TracedAccess;
+        use crate::symbolic::Expr;
+        // A[N-1-i] is not linear-increasing in i
+        let acc = TracedAccess {
+            data: "A".into(),
+            subset: Subset::index1(Expr::sym("N").sub(&Expr::int(1)).sub(&Expr::sym("i"))),
+            is_read: true,
+            dynamic: false,
+        };
+        assert!(!streamable_access(&acc, "i").is_streamable());
+    }
+
+    #[test]
+    fn dynamic_access_blocked_with_reason() {
+        use crate::analysis::movement::TracedAccess;
+        use crate::symbolic::Expr;
+        let acc = TracedAccess {
+            data: "A".into(),
+            subset: Subset::index1(Expr::sym("i")),
+            is_read: true,
+            dynamic: true,
+        };
+        match streamable_access(&acc, "i") {
+            Streamability::Blocked(r) => assert!(r.contains("data-dependent"), "{r}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn producer_consumer_same_order_streams() {
+        use crate::analysis::movement::{ScopeMovement, TracedAccess};
+        use crate::ir::NodeId;
+        use crate::symbolic::Expr;
+        let g = vecadd_sdfg(1); // supplies container decls only
+        let producer = ScopeMovement {
+            entry: NodeId(0),
+            params: vec!["p".into()],
+            reads: vec![],
+            writes: vec![TracedAccess {
+                data: "z".into(),
+                subset: Subset::index1(Expr::sym("p")),
+                is_read: false,
+                dynamic: false,
+            }],
+        };
+        let consumer = ScopeMovement {
+            entry: NodeId(1),
+            params: vec!["q".into()],
+            reads: vec![TracedAccess {
+                data: "z".into(),
+                subset: Subset::index1(Expr::sym("q")),
+                is_read: true,
+                dynamic: false,
+            }],
+            writes: vec![],
+        };
+        assert!(streamable_between(&g, &producer, &consumer, "z").is_streamable());
+        // mismatched order: consumer reads z[2*q]
+        let consumer2 = ScopeMovement {
+            reads: vec![TracedAccess {
+                data: "z".into(),
+                subset: Subset::index1(Expr::sym("q").scale(2)),
+                is_read: true,
+                dynamic: false,
+            }],
+            ..consumer
+        };
+        match streamable_between(&g, &producer, &consumer2, "z") {
+            Streamability::Blocked(r) => assert!(r.contains("order"), "{r}"),
+            other => panic!("{other:?}"),
+        }
+    }
+}

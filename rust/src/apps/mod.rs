@@ -1,0 +1,8 @@
+//! The four applications of the paper's evaluation (§4), each as an IR
+//! builder plus its workload parameters, flop accounting and the
+//! paper's reference numbers (used by EXPERIMENTS.md comparisons).
+
+pub mod floyd_warshall;
+pub mod matmul;
+pub mod stencil;
+pub mod vecadd;

@@ -1,0 +1,139 @@
+//! Iterative 3-D stencil chains (paper §4.3, Tables 4 & 5):
+//! StencilFlow-style linear chains of S stages over a
+//! 2¹⁶ × 32 × 32 domain, 8-way vectorized for Jacobi (lower intensity)
+//! and 4-way for Diffusion.
+
+use crate::ir::{DType, GraphBuilder, LibraryOp, Memlet, Sdfg, StencilKind, VecType};
+use crate::symbolic::{Expr, Range, Subset};
+
+/// Paper domain: 2¹⁶ × 32 × 32 points (§4.3).
+pub const PAPER_NX: i64 = 1 << 16;
+pub const PAPER_NY: i64 = 32;
+pub const PAPER_NZ: i64 = 32;
+
+/// Verification-scale domain matching the AOT artifact (32³, S=4).
+pub const GOLDEN_NX: i64 = 32;
+pub const GOLDEN_STAGES: usize = 4;
+
+/// Vectorization widths used by the paper per stencil kind.
+pub fn paper_vec_width(kind: StencilKind) -> usize {
+    match kind {
+        StencilKind::Jacobi3D => 8,
+        StencilKind::Diffusion3D => 4,
+    }
+}
+
+/// Build a chain of `stages` stencil stages. Stage i reads from the
+/// previous stage's output through a transient array (fused to a
+/// stream by the streaming transformation — each stage is its own
+/// kernel, as in the paper).
+pub fn build(kind: StencilKind, stages: usize, vec_width: usize) -> Sdfg {
+    assert!(stages >= 1);
+    let mut b = GraphBuilder::new(&format!("{}_s{stages}", kind.name()));
+    let vt = VecType::of(DType::F32, vec_width);
+    let shape = || vec![Expr::sym("NX"), Expr::sym("NY"), Expr::sym("NZ_v")];
+    // NZ_v: innermost dimension in vector units
+    b.array("v_in", vt, shape());
+    b.array("v_out", vt, shape());
+    let full = Subset::new(vec![
+        Range::upto_sym("NX"),
+        Range::upto_sym("NY"),
+        Range::upto_sym("NZ_v"),
+    ]);
+
+    let mut prev = b.access("v_in");
+    let mut prev_name = "v_in".to_string();
+    for s in 0..stages {
+        let lib = b.library(
+            &format!("{}_stage{s}", kind.name()),
+            LibraryOp::StencilStage { kind, vec_width },
+        );
+        b.edge(prev, lib, Memlet::new(&prev_name, full.clone()).with_dst("in"));
+        if s + 1 == stages {
+            let out = b.access("v_out");
+            b.edge(lib, out, Memlet::new("v_out", full.clone()).with_src("out"));
+        } else {
+            let tname = format!("tmp{s}");
+            b.bram(&tname, vt, shape());
+            // transient chained buffer — becomes an inter-kernel stream
+            let t = b.access(&tname);
+            b.edge(lib, t, Memlet::new(&tname, full.clone()).with_src("out"));
+            prev = t;
+            prev_name = tname;
+        }
+    }
+    let mut g = b.finish();
+    // transient chain buffers live between kernels; mark them HBM-free
+    g.add_symbol("NZ_v");
+    g
+}
+
+/// Flops per full chain run (ops per output point × points × stages).
+pub fn flops(kind: StencilKind, nx: i64, ny: i64, nz: i64, stages: usize) -> f64 {
+    let per_point = {
+        let ops = crate::codegen::lower::stencil_ops(kind);
+        (ops.adds + ops.muls + ops.divs + ops.minmax) as f64
+    };
+    per_point * (nx * ny * nz) as f64 * stages as f64
+}
+
+/// Paper Table 4 (Jacobi): (S, O/DP, CL0, CL1, GOp/s, lut_l%, lut_m%,
+/// regs%, bram%, dsp%, mops_per_dsp).
+pub const PAPER_TABLE4: &[(usize, &str, f64, f64, f64, f64, f64, f64, f64, f64, f64)] = &[
+    (8, "O", 307.6, 0.0, 101.4, 20.25, 6.21, 22.48, 15.33, 28.89, 121.9),
+    (8, "DP", 322.4, 510.4, 96.9, 14.2, 6.89, 19.14, 10.57, 14.44, 232.8),
+    (16, "O", 304.2, 0.0, 202.5, 36.15, 10.58, 39.21, 24.85, 57.78, 121.7),
+    (16, "DP", 331.5, 478.0, 180.7, 23.37, 12.01, 32.5, 15.33, 28.89, 217.1),
+    (40, "O", 305.0, 0.0, 245.3, 42.17, 12.71, 49.2, 30.11, 72.22, 117.9),
+    (40, "DP", 258.0, 460.8, 414.8, 47.78, 26.1, 64.5, 23.41, 72.22, 199.0),
+];
+
+/// Paper Table 5 (Diffusion).
+pub const PAPER_TABLE5: &[(usize, &str, f64, f64, f64, f64, f64, f64, f64, f64, f64)] = &[
+    (8, "O", 309.1, 0.0, 110.4, 16.55, 4.85, 18.25, 10.57, 31.67, 121.0),
+    (8, "DP", 329.4, 537.3, 102.8, 12.08, 5.27, 15.88, 8.18, 16.67, 214.2),
+    (16, "O", 311.4, 0.0, 220.6, 28.52, 7.91, 30.96, 15.33, 63.33, 121.0),
+    (16, "DP", 333.1, 490.4, 202.6, 19.42, 8.8, 25.94, 10.57, 33.33, 211.1),
+    (20, "O", 305.0, 0.0, 275.7, 34.57, 9.44, 37.27, 17.71, 79.17, 120.9),
+    (40, "DP", 255.2, 462.9, 460.3, 40.66, 19.38, 56.12, 17.71, 83.33, 191.8),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_builds_and_validates() {
+        for stages in [1, 4, 8] {
+            let g = build(StencilKind::Jacobi3D, stages, 8);
+            crate::ir::validate::validate(&g).unwrap();
+            let libs = g
+                .node_ids()
+                .filter(|i| matches!(g.node(*i), crate::ir::Node::Library { .. }))
+                .count();
+            assert_eq!(libs, stages);
+        }
+    }
+
+    #[test]
+    fn paper_dp_halves_dsp_at_fixed_stages() {
+        // Table 4, S=8 and S=16
+        assert!((PAPER_TABLE4[1].9 / PAPER_TABLE4[0].9 - 0.5).abs() < 0.01);
+        assert!((PAPER_TABLE4[3].9 / PAPER_TABLE4[2].9 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn paper_dsp_efficiency_doubles() {
+        for t in [PAPER_TABLE4, PAPER_TABLE5] {
+            let gain = t[1].10 / t[0].10;
+            assert!(gain > 1.5, "MOp/s/DSP gain {gain}");
+        }
+    }
+
+    #[test]
+    fn flops_scale_with_stages() {
+        let f8 = flops(StencilKind::Jacobi3D, 64, 32, 32, 8);
+        let f16 = flops(StencilKind::Jacobi3D, 64, 32, 32, 16);
+        assert!((f16 / f8 - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,52 @@
+//! Vector addition (paper §4.1, Table 2).
+
+use crate::ir::builder::vecadd_sdfg;
+use crate::ir::Sdfg;
+
+/// Problem size of the paper-scale run. The paper does not state N;
+/// 2²⁶ elements reproduce the ~0.1 s runtimes of Table 2 at the
+/// reported clocks (DESIGN.md §7).
+pub const PAPER_N: i64 = 1 << 26;
+
+/// Verification-scale size matching the AOT artifact.
+pub const GOLDEN_N: i64 = 4096;
+
+/// Build the vecadd SDFG (scalar; vectorization applied as a pass).
+pub fn build() -> Sdfg {
+    vecadd_sdfg(1)
+}
+
+/// Flops of one run: N adds.
+pub fn flops(n: i64) -> f64 {
+    n as f64
+}
+
+/// Paper Table 2 reference rows: (vect width, O/DP, CL0, CL1, time_s,
+/// lut_logic%, lut_mem%, regs%, bram%, dsp%).
+pub const PAPER_TABLE2: &[(usize, &str, f64, f64, f64, f64, f64, f64, f64, f64)] = &[
+    (2, "O", 339.4, 0.0, 0.1112, 5.27, 2.27, 6.74, 6.77, 0.14),
+    (2, "DP", 340.0, 668.4, 0.1111, 5.37, 2.26, 6.95, 6.77, 0.07),
+    (4, "O", 332.5, 0.0, 0.0557, 5.39, 2.34, 6.86, 6.92, 0.28),
+    (4, "DP", 343.2, 651.4, 0.0557, 5.46, 2.33, 7.16, 6.92, 0.14),
+    (8, "O", 344.5, 0.0, 0.0281, 5.57, 2.48, 7.05, 7.22, 0.56),
+    (8, "DP", 335.2, 643.9, 0.0280, 5.65, 2.47, 7.57, 7.22, 0.28),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_validates() {
+        crate::ir::validate::validate(&build()).unwrap();
+    }
+
+    #[test]
+    fn paper_rows_have_halved_dsp() {
+        for pair in PAPER_TABLE2.chunks(2) {
+            let (o, dp) = (&pair[0], &pair[1]);
+            assert_eq!(o.0, dp.0);
+            assert!((dp.9 - o.9 / 2.0).abs() < 1e-9, "width {}", o.0);
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! The design netlist: what gets "placed on the FPGA".
+
+use crate::hw::ResourceVec;
+use crate::ir::{ClockDomain, PumpMode, StencilKind, Tasklet};
+
+/// A FIFO channel instance.
+#[derive(Clone, Debug)]
+pub struct ChannelSpec {
+    pub name: String,
+    /// Elements per transaction.
+    pub lanes: usize,
+    /// Capacity in transactions.
+    pub depth: usize,
+    /// True when this channel connects two clock domains (implemented
+    /// inside the synchronizer IP on hardware).
+    pub crosses_domains: bool,
+}
+
+/// Behavioural content of a module.
+#[derive(Clone, Debug)]
+pub enum ModuleSpec {
+    /// Streams `elems` elements of container `data` (lanes per txn)
+    /// into `stream`, reading from its HBM bank at `bytes_per_cycle`.
+    Reader { data: String, stream: String, lanes: usize, elems: usize, bytes_per_cycle: usize },
+    /// Drains `stream` into container `data`.
+    Writer { data: String, stream: String, lanes: usize, elems: usize, bytes_per_cycle: usize },
+    /// Pipelined map: pops one txn from each input stream per firing,
+    /// evaluates `tasklet` per lane, pushes one txn to `output`.
+    Compute {
+        name: String,
+        tasklet: Tasklet,
+        /// (stream, tasklet connector) per input.
+        inputs: Vec<(String, String)>,
+        output: (String, String),
+        lanes: usize,
+        /// Firings per graph execution.
+        iterations: usize,
+        /// Initiation interval (cycles between firings; >1 for
+        /// dependent computations such as Floyd–Warshall).
+        ii: u64,
+        /// Pipeline latency (fill cycles).
+        latency: u64,
+    },
+    /// Clock-domain synchronizer (1 txn/cycle passthrough).
+    Sync { input: String, output: String },
+    /// Wide→narrow converter: 1 wide txn in, `factor` narrow out.
+    Issuer { input: String, output: String, factor: usize },
+    /// Narrow→wide converter: `factor` narrow in, 1 wide out.
+    Packer { input: String, output: String, factor: usize },
+    /// Behavioural communication-avoiding systolic GEMM core [10]:
+    /// `pes × lanes` MACs per cycle over an n×k · k×m problem.
+    GemmCore {
+        name: String,
+        a: String,
+        b: String,
+        c: String,
+        n: usize,
+        m: usize,
+        k: usize,
+        pes: usize,
+        lanes: usize,
+        tile_m: usize,
+        tile_n: usize,
+    },
+    /// Behavioural stencil stage: one txn in → one txn out per cycle
+    /// after line-buffer warmup.
+    StencilCore {
+        name: String,
+        kind: StencilKind,
+        input: String,
+        output: String,
+        nx: usize,
+        ny: usize,
+        nz: usize,
+        lanes: usize,
+    },
+    /// Streaming Floyd–Warshall datapath: per outer iteration `k`, the
+    /// n×n distance matrix streams through in row-major order while row
+    /// k+1 / column k+1 are captured into double buffers for the next
+    /// iteration (the standard streaming-FW FPGA structure). The
+    /// in-place read-modify-write forces a conservative II equal to the
+    /// f32 add+min chain — the paper's Table 6 cycle behaviour.
+    FwCore { name: String, input: String, output: String, n: usize, lanes: usize, ii: u64 },
+}
+
+impl ModuleSpec {
+    pub fn label(&self) -> String {
+        match self {
+            ModuleSpec::Reader { data, .. } => format!("read_{data}"),
+            ModuleSpec::Writer { data, .. } => format!("write_{data}"),
+            ModuleSpec::Compute { name, .. } => name.clone(),
+            ModuleSpec::Sync { output, .. } => format!("sync→{output}"),
+            ModuleSpec::Issuer { output, .. } => format!("issue→{output}"),
+            ModuleSpec::Packer { output, .. } => format!("pack→{output}"),
+            ModuleSpec::GemmCore { name, .. } => name.clone(),
+            ModuleSpec::StencilCore { name, .. } => name.clone(),
+            ModuleSpec::FwCore { name, .. } => name.clone(),
+        }
+    }
+
+    /// Input stream names.
+    pub fn inputs(&self) -> Vec<String> {
+        match self {
+            ModuleSpec::Reader { .. } => vec![],
+            ModuleSpec::Writer { stream, .. } => vec![stream.clone()],
+            ModuleSpec::Compute { inputs, .. } => {
+                inputs.iter().map(|(s, _)| s.clone()).collect()
+            }
+            ModuleSpec::Sync { input, .. }
+            | ModuleSpec::Issuer { input, .. }
+            | ModuleSpec::Packer { input, .. } => vec![input.clone()],
+            ModuleSpec::GemmCore { a, b, .. } => vec![a.clone(), b.clone()],
+            ModuleSpec::StencilCore { input, .. } => vec![input.clone()],
+            ModuleSpec::FwCore { input, .. } => vec![input.clone()],
+        }
+    }
+
+    /// Output stream names.
+    pub fn outputs(&self) -> Vec<String> {
+        match self {
+            ModuleSpec::Reader { stream, .. } => vec![stream.clone()],
+            ModuleSpec::Writer { .. } => vec![],
+            ModuleSpec::Compute { output, .. } => vec![output.0.clone()],
+            ModuleSpec::Sync { output, .. }
+            | ModuleSpec::Issuer { output, .. }
+            | ModuleSpec::Packer { output, .. } => vec![output.clone()],
+            ModuleSpec::GemmCore { c, .. } => vec![c.clone()],
+            ModuleSpec::StencilCore { output, .. } => vec![output.clone()],
+            ModuleSpec::FwCore { output, .. } => vec![output.clone()],
+        }
+    }
+}
+
+/// A placed module.
+#[derive(Clone, Debug)]
+pub struct ModuleInst {
+    pub spec: ModuleSpec,
+    pub domain: ClockDomain,
+    pub resources: ResourceVec,
+}
+
+/// The full design.
+#[derive(Clone, Debug)]
+pub struct Design {
+    pub name: String,
+    pub modules: Vec<ModuleInst>,
+    pub channels: Vec<ChannelSpec>,
+    /// Multi-pumping configuration, if applied.
+    pub pump: Option<(usize, PumpMode)>,
+    /// External containers: (name, element count, HBM bank).
+    pub arrays: Vec<(String, usize, usize)>,
+    /// Whole-graph sequential repetitions (Floyd–Warshall's k loop).
+    pub repeat: usize,
+    /// Number of SLRs the design is replicated across (≥1).
+    pub slr_replicas: usize,
+    /// Requested CL0 in MHz (None → device default). Deeply pipelined
+    /// small designs (Floyd–Warshall) request higher shell clocks.
+    pub cl0_request_mhz: Option<f64>,
+}
+
+impl Design {
+    pub fn channel(&self, name: &str) -> Option<&ChannelSpec> {
+        self.channels.iter().find(|c| c.name == name)
+    }
+
+    pub fn fast_modules(&self) -> impl Iterator<Item = &ModuleInst> {
+        self.modules.iter().filter(|m| m.domain != ClockDomain::Slow)
+    }
+
+    pub fn slow_modules(&self) -> impl Iterator<Item = &ModuleInst> {
+        self.modules.iter().filter(|m| m.domain == ClockDomain::Slow)
+    }
+
+    /// Total resources of the design (one SLR replica).
+    pub fn total_resources(&self) -> ResourceVec {
+        let mut acc = ResourceVec::ZERO;
+        for m in &self.modules {
+            acc += m.resources;
+        }
+        acc
+    }
+
+    /// Resources of the fast domain only.
+    pub fn fast_resources(&self) -> ResourceVec {
+        let mut acc = ResourceVec::ZERO;
+        for m in self.fast_modules() {
+            acc += m.resources;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::TaskExpr;
+
+    #[test]
+    fn spec_io_lists() {
+        let c = ModuleSpec::Compute {
+            name: "add".into(),
+            tasklet: Tasklet::new("add", vec![("o", TaskExpr::input("a"))]),
+            inputs: vec![("s1".into(), "a".into())],
+            output: ("s2".into(), "o".into()),
+            lanes: 4,
+            iterations: 16,
+            ii: 1,
+            latency: 8,
+        };
+        assert_eq!(c.inputs(), vec!["s1"]);
+        assert_eq!(c.outputs(), vec!["s2"]);
+        let r = ModuleSpec::Reader {
+            data: "x".into(),
+            stream: "s1".into(),
+            lanes: 4,
+            elems: 64,
+            bytes_per_cycle: 32,
+        };
+        assert!(r.inputs().is_empty());
+        assert_eq!(r.outputs(), vec!["s1"]);
+        assert_eq!(r.label(), "read_x");
+    }
+
+    #[test]
+    fn design_resource_totals() {
+        let mk = |dsp: f64, domain| ModuleInst {
+            spec: ModuleSpec::Sync { input: "a".into(), output: "b".into() },
+            domain,
+            resources: ResourceVec { dsp, ..ResourceVec::ZERO },
+        };
+        let d = Design {
+            name: "t".into(),
+            modules: vec![
+                mk(1.0, ClockDomain::Slow),
+                mk(2.0, ClockDomain::Fast { factor: 2 }),
+            ],
+            channels: vec![],
+            pump: Some((2, PumpMode::Resource)),
+            arrays: vec![],
+            repeat: 1,
+            slr_replicas: 1,
+            cl0_request_mhz: None,
+        };
+        assert_eq!(d.total_resources().dsp, 3.0);
+        assert_eq!(d.fast_resources().dsp, 2.0);
+        assert_eq!(d.slow_modules().count(), 1);
+    }
+}

@@ -1,0 +1,661 @@
+//! Lowering: transformed SDFG + concrete bindings → design netlist.
+//!
+//! Every IR module kind maps 1:1 onto a netlist module; library nodes
+//! expand into behavioural cores (the DaCe "library node expansion").
+//! Module resources are priced with the [`CostModel`]; initiation
+//! intervals of dependent pipelines come from the [`LatencyModel`]
+//! (the HLS scheduler analog: a loop-carried dependency forces
+//! II = length of the floating-point chain).
+
+use super::design::{ChannelSpec, Design, ModuleInst, ModuleSpec};
+use crate::analysis::movement::scope_movement;
+use crate::analysis::vectorizability::has_loop_carried_dependency;
+use crate::hw::cost::CostModel;
+use crate::hw::ResourceVec;
+use crate::ir::{
+    CdcKind, ClockDomain, ContainerKind, LibraryOp, MapSchedule, Node, NodeId, Sdfg, Storage,
+    Tasklet,
+};
+use crate::symbolic::SymbolTable;
+
+/// Pipeline-stage latencies (cycles) for the fabric, HLS-scheduler
+/// style. Used for pipeline fill and dependent-loop II.
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    pub fadd: u64,
+    pub fmul: u64,
+    pub fdiv: u64,
+    pub fminmax: u64,
+    /// Fixed pipeline overhead (load/store stages).
+    pub base: u64,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        LatencyModel { fadd: 8, fmul: 6, fdiv: 28, fminmax: 8, base: 5 }
+    }
+}
+
+impl LatencyModel {
+    /// Latency of one tasklet evaluation (serial op chain upper bound).
+    pub fn tasklet_latency(&self, t: &Tasklet) -> u64 {
+        let c = t.op_counts();
+        self.base
+            + c.adds as u64 * self.fadd
+            + c.muls as u64 * self.fmul
+            + c.divs as u64 * self.fdiv
+            + c.minmax as u64 * self.fminmax
+    }
+}
+
+fn container_scalars(g: &Sdfg, name: &str, env: &SymbolTable) -> Result<usize, String> {
+    let decl = g.container(name).ok_or_else(|| format!("unknown container '{name}'"))?;
+    let mut n: i64 = 1;
+    for d in &decl.shape {
+        n *= d
+            .eval(env)
+            .ok_or_else(|| format!("container '{name}': unbound dimension {d}"))?;
+    }
+    Ok(n as usize * decl.vtype.lanes)
+}
+
+fn stream_lanes(g: &Sdfg, name: &str) -> usize {
+    g.container(name).map(|d| d.vtype.lanes).unwrap_or(1)
+}
+
+/// HBM port width in bytes per slow cycle (256-bit AXI).
+pub const HBM_BYTES_PER_CYCLE: usize = 32;
+
+/// Lower an SDFG to a design. The graph may be untransformed (original
+/// single-kernel designs are modelled with fused reader/writer modules,
+/// matching the AXI bursts any HLS kernel performs) or fully streamed
+/// and multi-pumped.
+pub fn lower(g: &Sdfg, env: &SymbolTable, cost: &CostModel) -> Result<Design, String> {
+    let lat = LatencyModel::default();
+    let mut modules: Vec<ModuleInst> = Vec::new();
+    let mut channels: Vec<ChannelSpec> = Vec::new();
+    let mut arrays: Vec<(String, usize, usize)> = Vec::new();
+    let pump = g.multipump.as_ref().map(|mp| (mp.factor, mp.mode));
+    let fast_factor = pump.map(|(m, _)| m).unwrap_or(1);
+
+    // channels from stream containers
+    for (name, decl) in &g.containers {
+        match decl.storage {
+            Storage::Stream { depth } => {
+                let crosses = name.ends_with("_cdc");
+                channels.push(ChannelSpec {
+                    name: name.clone(),
+                    lanes: decl.vtype.lanes,
+                    depth,
+                    crosses_domains: crosses,
+                });
+            }
+            Storage::Hbm { bank } => {
+                if !decl.transient {
+                    let scalars = container_scalars(g, name, env)?;
+                    arrays.push((name.clone(), scalars, bank));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let domain_of = |id: NodeId| -> ClockDomain {
+        if g.in_fast_domain(id) {
+            ClockDomain::Fast { factor: fast_factor }
+        } else {
+            ClockDomain::Slow
+        }
+    };
+    // CDC halves: sync slow-side, issuer/packer fast-side
+    let cdc_domain = |kind: CdcKind| -> ClockDomain {
+        match kind {
+            CdcKind::Synchronizer => ClockDomain::Slow,
+            _ => ClockDomain::Fast { factor: fast_factor },
+        }
+    };
+
+    // non-streamed graphs get fused reader/writer modules
+    let is_streamed = g.node_ids().any(|id| g.node(id).is_io_module());
+
+    for id in g.node_ids() {
+        match g.node(id) {
+            Node::Reader { data, stream, .. } => {
+                let lanes = stream_lanes(g, stream);
+                let scalars = container_scalars(g, data, env)?;
+                modules.push(ModuleInst {
+                    spec: ModuleSpec::Reader {
+                        data: data.clone(),
+                        stream: stream.clone(),
+                        lanes,
+                        elems: scalars / lanes.max(1),
+                        bytes_per_cycle: HBM_BYTES_PER_CYCLE,
+                    },
+                    domain: ClockDomain::Slow,
+                    resources: cost.reader_writer(lanes * 4),
+                });
+            }
+            Node::Writer { data, stream, .. } => {
+                let lanes = stream_lanes(g, stream);
+                let scalars = container_scalars(g, data, env)?;
+                modules.push(ModuleInst {
+                    spec: ModuleSpec::Writer {
+                        data: data.clone(),
+                        stream: stream.clone(),
+                        lanes,
+                        elems: scalars / lanes.max(1),
+                        bytes_per_cycle: HBM_BYTES_PER_CYCLE,
+                    },
+                    domain: ClockDomain::Slow,
+                    resources: cost.reader_writer(lanes * 4),
+                });
+            }
+            Node::Cdc { kind, input, output, factor, .. } => {
+                let wide = match kind {
+                    CdcKind::Issuer => stream_lanes(g, input),
+                    _ => stream_lanes(g, output),
+                };
+                let (spec, res) = match kind {
+                    CdcKind::Synchronizer => (
+                        ModuleSpec::Sync { input: input.clone(), output: output.clone() },
+                        cost.synchronizer(wide * 4),
+                    ),
+                    CdcKind::Issuer => (
+                        ModuleSpec::Issuer {
+                            input: input.clone(),
+                            output: output.clone(),
+                            factor: *factor,
+                        },
+                        cost.width_converter(wide * 4, *factor),
+                    ),
+                    CdcKind::Packer => (
+                        ModuleSpec::Packer {
+                            input: input.clone(),
+                            output: output.clone(),
+                            factor: *factor,
+                        },
+                        cost.width_converter(wide * 4, *factor),
+                    ),
+                };
+                modules.push(ModuleInst { spec, domain: cdc_domain(*kind), resources: res });
+            }
+            Node::MapEntry { name, schedule, .. } => {
+                // find the tasklet inside the scope
+                let scope = g.scope_nodes(id);
+                let tasklet = scope
+                    .iter()
+                    .find_map(|n| match g.node(*n) {
+                        Node::Tasklet(t) => Some((*n, t.clone())),
+                        _ => None,
+                    });
+                let (tid, tasklet) = match tasklet {
+                    Some(x) => x,
+                    None => continue, // library-node scopes handled below
+                };
+                // inputs: edges entry → tasklet
+                let mut inputs: Vec<(String, String)> = Vec::new();
+                for e in g.out_edges(id) {
+                    let edge = g.edge(e);
+                    if edge.dst == tid {
+                        if let Some(conn) = &edge.memlet.dst_conn {
+                            inputs.push((edge.memlet.data.clone(), conn.clone()));
+                        }
+                    }
+                }
+                // output: edge tasklet → exit
+                let exit = g.find_map_exit(name).expect("validated");
+                let mut output = None;
+                for e in g.in_edges(exit) {
+                    let edge = g.edge(e);
+                    if edge.src == tid {
+                        if let Some(conn) = &edge.memlet.src_conn {
+                            output = Some((edge.memlet.data.clone(), conn.clone()));
+                        }
+                    }
+                }
+                let output =
+                    output.ok_or_else(|| format!("map '{name}': tasklet output unwired"))?;
+
+                // lanes: width of the output stream if it is a stream,
+                // else the container width
+                let lanes = stream_lanes(g, &output.0);
+                // total scalar work = written container scalars; for
+                // stream outputs walk to the writer's container
+                let out_scalars = if g.container(&output.0).map(|d| d.kind)
+                    == Some(ContainerKind::Stream)
+                {
+                    // the stream eventually drains into an array of the
+                    // same element production count; use map range × lanes
+                    // of the *slow-side* equivalent: range count is in
+                    // wide transactions
+                    let mv = scope_movement(g, id)?;
+                    let _ = mv;
+                    // compute from the map range directly below
+                    0
+                } else {
+                    container_scalars(g, &output.0, env)?
+                };
+                let iterations = if out_scalars > 0 {
+                    out_scalars / lanes.max(1)
+                } else {
+                    // map range count × (pump narrowing factor)
+                    let count = match g.node(id) {
+                        Node::MapEntry { ranges, .. } => {
+                            let mut c: i64 = 1;
+                            for r in ranges {
+                                c *= r
+                                    .count(env)
+                                    .ok_or_else(|| format!("map '{name}': unbound range"))?;
+                            }
+                            c as usize
+                        }
+                        _ => unreachable!(),
+                    };
+                    // the compute consumes narrow transactions in
+                    // resource mode: range was defined on wide txns
+                    let widen = if g.in_fast_domain(id) {
+                        match pump {
+                            Some((m, crate::ir::PumpMode::Resource)) => m,
+                            _ => 1,
+                        }
+                    } else {
+                        1
+                    };
+                    count * widen
+                };
+
+                // II from dependencies
+                let dependent = *schedule == MapSchedule::Sequential || {
+                    let mv = scope_movement(g, id)?;
+                    has_loop_carried_dependency(&mv, env)
+                };
+                let ii = if dependent { lat.tasklet_latency(&tasklet) } else { 1 };
+                let latency = lat.tasklet_latency(&tasklet);
+                let ops = tasklet.op_counts();
+                let mut res = cost.compute_block(&ops, lanes);
+                if !is_streamed {
+                    // fused single-kernel design: the AXI movers live in
+                    // the same module (same silicon, priced here)
+                    res += ResourceVec::ZERO; // movers priced via implicit reader/writer below
+                }
+                modules.push(ModuleInst {
+                    spec: ModuleSpec::Compute {
+                        name: name.clone(),
+                        tasklet,
+                        inputs,
+                        output,
+                        lanes,
+                        iterations,
+                        ii,
+                        latency,
+                    },
+                    domain: domain_of(id),
+                    resources: res,
+                });
+            }
+            Node::Library { name, op } => {
+                let (inputs, outputs) = library_streams(g, id);
+                match op {
+                    LibraryOp::SystolicGemm { pes, vec_width, tile_m, tile_n } => {
+                        let n = env.get("N").ok_or("GEMM needs symbol N")? as usize;
+                        let m = env.get("M").ok_or("GEMM needs symbol M")? as usize;
+                        let k = env.get("K").ok_or("GEMM needs symbol K")? as usize;
+                        if inputs.len() < 2 || outputs.is_empty() {
+                            return Err(format!("gemm '{name}': needs 2 inputs, 1 output"));
+                        }
+                        let mac = crate::ir::tasklet::OpCounts {
+                            adds: 1,
+                            muls: 1,
+                            divs: 0,
+                            minmax: 0,
+                        };
+                        let mut res = cost.compute_block(&mac, pes * vec_width);
+                        // per-PE control overhead (forwarding, counters)
+                        res += cost.systolic_pe_control(*vec_width).scaled(*pes as f64);
+                        // per-PE double-buffered output tile partition,
+                        // banked across the vector lanes
+                        let tile_bytes = tile_m * tile_n * 4 / pes.max(&1);
+                        res += cost.bram_buffer(2 * tile_bytes, *vec_width).scaled(*pes as f64);
+                        // feeders/drainers
+                        res += cost.reader_writer(vec_width * 4).scaled(3.0);
+                        modules.push(ModuleInst {
+                            spec: ModuleSpec::GemmCore {
+                                name: name.clone(),
+                                a: inputs[0].clone(),
+                                b: inputs[1].clone(),
+                                c: outputs[0].clone(),
+                                n,
+                                m,
+                                k,
+                                pes: *pes,
+                                lanes: *vec_width,
+                                tile_m: *tile_m,
+                                tile_n: *tile_n,
+                            },
+                            domain: domain_of(id),
+                            resources: res,
+                        });
+                    }
+                    LibraryOp::FloydWarshall { .. } => {
+                        let n = env.get("N").ok_or("FW needs symbol N")? as usize;
+                        if inputs.is_empty() || outputs.is_empty() {
+                            return Err(format!("fw '{name}': unwired"));
+                        }
+                        // external feed width (slow side) vs datapath width
+                        let lanes = stream_lanes(g, &inputs[0]);
+                        // II: conservative RAW handling of the in-place
+                        // update — f32 add + min chain (paper Table 6
+                        // cycle behaviour: n³·21 cycles at n=500)
+                        let relax = Tasklet::new(
+                            "relax",
+                            vec![(
+                                "out",
+                                crate::ir::TaskExpr::input("dij").min(
+                                    crate::ir::TaskExpr::input("dik")
+                                        .add(crate::ir::TaskExpr::input("dkj")),
+                                ),
+                            )],
+                        );
+                        let ii = lat.tasklet_latency(&relax);
+                        let ops = relax.op_counts();
+                        // datapath replicated per external lane so the
+                        // wide feed can be consumed at rate
+                        let mut res = cost.compute_block(&ops, lanes);
+                        // ping-pong row-block buffer (Table 6: ~34 %
+                        // BRAM at n=500)
+                        res += cost.bram_buffer(n * n * 8 / 5, 1);
+                        modules.push(ModuleInst {
+                            spec: ModuleSpec::FwCore {
+                                name: name.clone(),
+                                input: inputs[0].clone(),
+                                output: outputs[0].clone(),
+                                n,
+                                lanes,
+                                ii,
+                            },
+                            domain: domain_of(id),
+                            resources: res,
+                        });
+                    }
+                    LibraryOp::StencilStage { kind, vec_width } => {
+                        let nx = env.get("NX").ok_or("stencil needs NX")? as usize;
+                        let ny = env.get("NY").ok_or("stencil needs NY")? as usize;
+                        let nz = env.get("NZ").ok_or("stencil needs NZ")? as usize;
+                        if inputs.is_empty() || outputs.is_empty() {
+                            return Err(format!("stencil '{name}': unwired"));
+                        }
+                        let ops = stencil_ops(*kind);
+                        let mut res = cost.compute_block(&ops, *vec_width);
+                        // two plane line buffers (ny×nz), banked per lane
+                        let plane_bytes = ny * nz * 4;
+                        res += cost.bram_buffer(2 * plane_bytes, (*vec_width).max(1) / 2 + 1);
+                        modules.push(ModuleInst {
+                            spec: ModuleSpec::StencilCore {
+                                name: name.clone(),
+                                kind: *kind,
+                                input: inputs[0].clone(),
+                                output: outputs[0].clone(),
+                                nx,
+                                ny,
+                                nz,
+                                lanes: *vec_width,
+                            },
+                            domain: domain_of(id),
+                            resources: res,
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // implicit AXI movers for non-streamed designs: price one
+    // reader/writer per external array (they exist inside the fused
+    // kernel on hardware)
+    if !is_streamed {
+        for (name, _, _) in &arrays {
+            let lanes = g.container(name).map(|d| d.vtype.lanes).unwrap_or(1);
+            // synthesize reader/writer modules so the simulator paces
+            // memory exactly like the streamed design
+            let scalars = container_scalars(g, name, env)?;
+            let is_written = g.node_ids().any(|id| {
+                matches!(g.node(id), Node::Access { data } if data == name)
+                    && !g.in_edges(id).is_empty()
+            });
+            let is_read = g.node_ids().any(|id| {
+                matches!(g.node(id), Node::Access { data } if data == name)
+                    && !g.out_edges(id).is_empty()
+            });
+            let stream = format!("__mem_{name}");
+            channels.push(ChannelSpec {
+                name: stream.clone(),
+                lanes,
+                depth: 4,
+                crosses_domains: false,
+            });
+            if is_read && !is_written {
+                modules.push(ModuleInst {
+                    spec: ModuleSpec::Reader {
+                        data: name.clone(),
+                        stream: stream.clone(),
+                        lanes,
+                        elems: scalars / lanes.max(1),
+                        bytes_per_cycle: HBM_BYTES_PER_CYCLE,
+                    },
+                    domain: ClockDomain::Slow,
+                    resources: cost.reader_writer(lanes * 4),
+                });
+            } else if is_written {
+                modules.push(ModuleInst {
+                    spec: ModuleSpec::Writer {
+                        data: name.clone(),
+                        stream: stream.clone(),
+                        lanes,
+                        elems: scalars / lanes.max(1),
+                        bytes_per_cycle: HBM_BYTES_PER_CYCLE,
+                    },
+                    domain: ClockDomain::Slow,
+                    resources: cost.reader_writer(lanes * 4),
+                });
+            }
+        }
+        // rewire compute inputs/outputs to the implicit memory streams
+        for m in &mut modules {
+            if let ModuleSpec::Compute { inputs, output, .. } = &mut m.spec {
+                for (s, _) in inputs.iter_mut() {
+                    if g.container(s).map(|d| d.kind) == Some(ContainerKind::Array) {
+                        *s = format!("__mem_{s}");
+                    }
+                }
+                if g.container(&output.0).map(|d| d.kind) == Some(ContainerKind::Array) {
+                    output.0 = format!("__mem_{}", output.0);
+                }
+            }
+        }
+    }
+
+    // one controller per kernel (paper §3.3) plus the platform
+    // infrastructure every design pays once (shell glue, AXI
+    // interconnect, DMA, HBM switch); multi-pumped designs add the
+    // clock wizard + reset synchronizers.
+    let mut controller = cost.controller() + cost.platform_infra();
+    if pump.is_some() {
+        controller += cost.controller().scaled(0.4); // clock wizard + resets
+    }
+    modules.push(ModuleInst {
+        spec: ModuleSpec::Sync { input: "__ctrl_in".into(), output: "__ctrl_out".into() },
+        domain: ClockDomain::Slow,
+        resources: controller,
+    });
+    channels.push(ChannelSpec { name: "__ctrl_in".into(), lanes: 1, depth: 2, crosses_domains: false });
+    channels.push(ChannelSpec { name: "__ctrl_out".into(), lanes: 1, depth: 2, crosses_domains: false });
+
+    // FIFO resources
+    let mut fifo_res = ResourceVec::ZERO;
+    for c in &channels {
+        if !c.name.starts_with("__ctrl") {
+            fifo_res += cost.fifo(c.depth, c.lanes * 4);
+        }
+    }
+    if let Some(m) = modules.last_mut() {
+        m.resources += fifo_res;
+    }
+
+    let repeat = match &g.repeat {
+        Some(r) => r
+            .range
+            .count(env)
+            .ok_or_else(|| "unbound repeat range".to_string())? as usize,
+        None => 1,
+    };
+
+    Ok(Design {
+        name: g.name.clone(),
+        modules,
+        channels,
+        pump,
+        arrays,
+        repeat,
+        slr_replicas: 1,
+        cl0_request_mhz: None,
+    })
+}
+
+/// Input/output stream names of a library node.
+fn library_streams(g: &Sdfg, id: NodeId) -> (Vec<String>, Vec<String>) {
+    let mut inputs = Vec::new();
+    for e in g.in_edges(id) {
+        inputs.push(g.edge(e).memlet.data.clone());
+    }
+    let mut outputs = Vec::new();
+    for e in g.out_edges(id) {
+        outputs.push(g.edge(e).memlet.data.clone());
+    }
+    (inputs, outputs)
+}
+
+/// Op counts per output element for the stencil flavours (calibration
+/// in DESIGN.md §7).
+pub fn stencil_ops(kind: crate::ir::StencilKind) -> crate::ir::tasklet::OpCounts {
+    match kind {
+        // 5 adds to sum 6 neighbours + 1 const mul = 13 DSP/lane
+        crate::ir::StencilKind::Jacobi3D => crate::ir::tasklet::OpCounts {
+            adds: 5,
+            muls: 1,
+            divs: 0,
+            minmax: 0,
+        },
+        // weighted update, unfactored datapath as the FPGA evaluates
+        // it: 7 adds + 5 muls = 29 DSP/lane (Table 5: 31.67 % at
+        // 4 lanes × 8 stages). GOp accounting follows the hardware
+        // datapath, like the paper's.
+        crate::ir::StencilKind::Diffusion3D => crate::ir::tasklet::OpCounts {
+            adds: 7,
+            muls: 5,
+            divs: 0,
+            minmax: 0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::vecadd_sdfg;
+    use crate::transforms::{MultiPump, PassManager, StreamingComposition, Vectorize};
+
+    fn lower_vecadd(lanes: usize, pump: bool) -> Design {
+        let mut g = vecadd_sdfg(1);
+        let mut pm = PassManager::new();
+        if lanes > 1 {
+            pm.run(&mut g, &Vectorize::new("vadd", lanes)).unwrap();
+        }
+        pm.run(&mut g, &StreamingComposition::default()).unwrap();
+        if pump {
+            pm.run(&mut g, &MultiPump::resource(2)).unwrap();
+        }
+        let env = g.bind(&[("N", 1024)]).unwrap();
+        lower(&g, &env, &CostModel::default()).unwrap()
+    }
+
+    #[test]
+    fn vecadd_original_design() {
+        let d = lower_vecadd(4, false);
+        let readers = d
+            .modules
+            .iter()
+            .filter(|m| matches!(m.spec, ModuleSpec::Reader { .. }))
+            .count();
+        assert_eq!(readers, 2);
+        let comp = d
+            .modules
+            .iter()
+            .find(|m| matches!(m.spec, ModuleSpec::Compute { .. }))
+            .unwrap();
+        if let ModuleSpec::Compute { lanes, iterations, ii, .. } = &comp.spec {
+            assert_eq!(*lanes, 4);
+            assert_eq!(*iterations, 256); // 1024/4 wide transactions
+            assert_eq!(*ii, 1);
+        }
+        assert!(d.pump.is_none());
+        // DSP: 4 lanes × 1 add × 2 = 8
+        assert_eq!(d.total_resources().dsp, 8.0);
+    }
+
+    #[test]
+    fn vecadd_double_pumped_design() {
+        let d = lower_vecadd(4, true);
+        assert_eq!(d.pump, Some((2, crate::ir::PumpMode::Resource)));
+        // 6 CDC modules
+        let syncs = d
+            .modules
+            .iter()
+            .filter(|m| matches!(m.spec, ModuleSpec::Sync { .. }))
+            .count();
+        assert!(syncs >= 3, "{syncs}"); // 3 stream syncs + controller pseudo-sync
+        // compute narrowed to 2 lanes, twice the firings, in fast domain
+        let comp = d
+            .modules
+            .iter()
+            .find(|m| matches!(m.spec, ModuleSpec::Compute { .. }))
+            .unwrap();
+        if let ModuleSpec::Compute { lanes, iterations, .. } = &comp.spec {
+            assert_eq!(*lanes, 2);
+            assert_eq!(*iterations, 512);
+        }
+        assert_eq!(comp.domain, ClockDomain::Fast { factor: 2 });
+        // DSP halved: 2 lanes × 2 = 4
+        assert_eq!(d.total_resources().dsp, 4.0);
+    }
+
+    #[test]
+    fn dsp_halving_is_exact() {
+        let o = lower_vecadd(8, false);
+        let dp = lower_vecadd(8, true);
+        assert_eq!(dp.total_resources().dsp, o.total_resources().dsp / 2.0);
+        // LUT/register overhead is small but positive (paper: < 1 %)
+        assert!(dp.total_resources().lut_logic > o.total_resources().lut_logic);
+        let delta = (dp.total_resources().lut_logic - o.total_resources().lut_logic)
+            / 439_000.0;
+        assert!(delta < 0.01, "LUT overhead {delta}");
+    }
+
+    #[test]
+    fn unstreamed_graph_gets_implicit_movers() {
+        let g = vecadd_sdfg(2);
+        let env = g.bind(&[("N", 64)]).unwrap();
+        let d = lower(&g, &env, &CostModel::default()).unwrap();
+        let readers = d
+            .modules
+            .iter()
+            .filter(|m| matches!(m.spec, ModuleSpec::Reader { .. }))
+            .count();
+        let writers = d
+            .modules
+            .iter()
+            .filter(|m| matches!(m.spec, ModuleSpec::Writer { .. }))
+            .count();
+        assert_eq!((readers, writers), (2, 1));
+    }
+}

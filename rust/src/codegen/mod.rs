@@ -1,0 +1,24 @@
+//! Code generation: IR → design netlist → HLS/RTL text.
+//!
+//! [`design`] defines the netlist the rest of the system consumes: the
+//! flat list of hardware modules (readers, writers, compute pipelines,
+//! CDC plumbing, expanded library cores), the FIFO channels between
+//! them, their clock-domain assignment and per-module resource cost.
+//!
+//! [`lower`] produces a [`design::Design`] from a (possibly transformed)
+//! SDFG under concrete symbol bindings — the analog of DaCe's codegen
+//! phase. [`estimate`] prices the design and runs the timing model,
+//! yielding exactly the rows the paper's tables report. [`hls`]/[`rtl`]
+//! emit the textual artifacts of paper §3.3 (HLS C++ per kernel; the
+//! four RTL files: SystemVerilog controller, SystemVerilog core,
+//! Verilog top-level, TCL packaging script).
+
+pub mod design;
+pub mod estimate;
+pub mod hls;
+pub mod lower;
+pub mod rtl;
+
+pub use design::{ChannelSpec, Design, ModuleInst, ModuleSpec};
+pub use estimate::{estimate, DesignReport};
+pub use lower::lower;

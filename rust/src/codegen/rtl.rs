@@ -1,0 +1,184 @@
+//! RTL emission: the four files of a multi-pumped RTL kernel
+//! (paper §3.3):
+//!
+//! 1. a SystemVerilog controller communicating with the host,
+//! 2. a SystemVerilog computation core (wrapping the HLS IP),
+//! 3. a Verilog top-level instantiating controller + core(s) + the
+//!    AXI4-Stream plumbing (clock converters, dwidth converters),
+//! 4. a TCL script packaging the kernel.
+//!
+//! Plus the `link.cfg` connectivity file describing stream wiring and
+//! the two clock signals supplied by the Vitis shell.
+
+use super::design::{Design, ModuleSpec};
+
+/// The four generated files plus the linker config.
+#[derive(Clone, Debug)]
+pub struct RtlKernel {
+    pub controller_sv: String,
+    pub core_sv: String,
+    pub toplevel_v: String,
+    pub package_tcl: String,
+    pub link_cfg: String,
+}
+
+/// Emit the RTL kernel file set for a design.
+pub fn emit_rtl(design: &Design) -> RtlKernel {
+    let name = &design.name;
+    let (factor, pumped) = match design.pump {
+        Some((m, _)) => (m, true),
+        None => (1, false),
+    };
+
+    let controller_sv = format!(
+        "// {name}_controller.sv — host control (ap_ctrl_hs over AXI-Lite)\n\
+         `timescale 1ns/1ps\n\
+         module {name}_controller #(\n  parameter C_ADDR_WIDTH = 12\n) (\n\
+         \x20 input  wire ap_clk,\n  input  wire ap_rst_n,\n\
+         {}\
+         \x20 input  wire s_axi_control_awvalid,\n  output wire ap_done,\n\
+         \x20 output wire ap_idle,\n  output wire ap_start_out\n);\n\
+         \x20 // state machine: IDLE -> RUN -> DONE, latching scalar args\n\
+         endmodule\n",
+        if pumped { "  input  wire ap_clk_2, // CL1 from the Vitis shell\n" } else { "" }
+    );
+
+    let core_sv = format!(
+        "// {name}_core.sv — computation core wrapper (HLS IP inside)\n\
+         `timescale 1ns/1ps\n\
+         module {name}_core (\n  input wire ap_clk{},\n  input wire ap_rst_n,\n\
+         \x20 // AXI4-Stream compute-side interfaces\n\
+         \x20 input  wire [511:0] s_axis_in_tdata,\n\
+         \x20 input  wire s_axis_in_tvalid,\n  output wire s_axis_in_tready,\n\
+         \x20 output wire [511:0] m_axis_out_tdata,\n\
+         \x20 output wire m_axis_out_tvalid,\n  input  wire m_axis_out_tready\n);\n\
+         \x20 // instantiates the HLS-generated IP ({} compute modules)\n\
+         endmodule\n",
+        if pumped { "_2 // multi-pumped: core runs on CL1" } else { "" },
+        design
+            .modules
+            .iter()
+            .filter(|m| matches!(
+                m.spec,
+                ModuleSpec::Compute { .. } | ModuleSpec::GemmCore { .. } | ModuleSpec::StencilCore { .. }
+            ))
+            .count()
+    );
+
+    let mut plumbing = String::new();
+    for m in &design.modules {
+        match &m.spec {
+            ModuleSpec::Sync { input, output } if !input.starts_with("__ctrl") => {
+                plumbing.push_str(&format!(
+                    "  axis_clock_converter #(.TDATA_WIDTH(512)) sync_{input} (\n\
+                     \x20   .s_axis_aclk(ap_clk), .m_axis_aclk(ap_clk_2),\n\
+                     \x20   .s_axis_tdata({input}_tdata), .m_axis_tdata({output}_tdata));\n"
+                ));
+            }
+            ModuleSpec::Issuer { input, output, factor } => {
+                plumbing.push_str(&format!(
+                    "  axis_dwidth_converter #(.S_TDATA_NBYTES(64), .M_TDATA_NBYTES({})) issue_{input} (\n\
+                     \x20   .aclk(ap_clk_2),\n\
+                     \x20   .s_axis_tdata({input}_tdata), .m_axis_tdata({output}_tdata));\n",
+                    64 / factor
+                ));
+            }
+            ModuleSpec::Packer { input, output, factor } => {
+                plumbing.push_str(&format!(
+                    "  axis_dwidth_converter #(.S_TDATA_NBYTES({}), .M_TDATA_NBYTES(64)) pack_{input} (\n\
+                     \x20   .aclk(ap_clk_2),\n\
+                     \x20   .s_axis_tdata({input}_tdata), .m_axis_tdata({output}_tdata));\n",
+                    64 / factor
+                ));
+            }
+            _ => {}
+        }
+    }
+
+    let toplevel_v = format!(
+        "// {name}_top.v — top-level: controller + core(s) + plumbing\n\
+         `timescale 1ns/1ps\n\
+         module {name}_top (\n  input wire ap_clk,\n{}\
+         \x20 input wire ap_rst_n\n);\n\
+         \x20 {name}_controller ctrl (.ap_clk(ap_clk), .ap_rst_n(ap_rst_n));\n\
+         \x20 {name}_core core (.ap_rst_n(ap_rst_n));\n\
+         // AXI4-Stream infrastructure IP (paper §3.2 plumbing):\n{}\
+         endmodule\n",
+        if pumped {
+            format!("  input wire ap_clk_2, // CL1 = {factor}×CL0 from the Vitis shell\n")
+        } else {
+            String::new()
+        },
+        plumbing
+    );
+
+    let package_tcl = format!(
+        "# {name}_package.tcl — package the RTL kernel for Vitis\n\
+         create_project -force {name}_kernel ./_x\n\
+         add_files {{{name}_controller.sv {name}_core.sv {name}_top.v}}\n\
+         ipx::package_project -root_dir ./pkg -vendor spcl -library tvec -taxonomy /KernelIP\n\
+         set_property sdx_kernel true [ipx::current_core]\n\
+         {}\
+         ipx::save_core [ipx::current_core]\n",
+        if pumped {
+            "ipx::associate_bus_interfaces -clock ap_clk_2 -reset ap_rst_n_2 [ipx::current_core]\n"
+        } else {
+            ""
+        }
+    );
+
+    let mut link_cfg = format!("# link.cfg — kernel connectivity for '{name}'\n[connectivity]\n");
+    for (array, _, bank) in &design.arrays {
+        link_cfg.push_str(&format!("sp={name}_1.{array}:HBM[{bank}]\n"));
+    }
+    if pumped {
+        link_cfg.push_str(&format!(
+            "\n[clock]\n# two clocks from the shell (consumes clocking resources once)\n\
+             freqHz=300000000:{name}_1.ap_clk\nfreqHz={}:{name}_1.ap_clk_2\n",
+            300_000_000u64 * factor as u64
+        ));
+    }
+
+    RtlKernel { controller_sv, core_sv, toplevel_v, package_tcl, link_cfg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::lower::lower;
+    use crate::hw::cost::CostModel;
+    use crate::ir::builder::vecadd_sdfg;
+    use crate::transforms::{MultiPump, PassManager, StreamingComposition, Vectorize};
+
+    fn pumped_design() -> Design {
+        let mut g = vecadd_sdfg(1);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &Vectorize::new("vadd", 4)).unwrap();
+        pm.run(&mut g, &StreamingComposition::default()).unwrap();
+        pm.run(&mut g, &MultiPump::resource(2)).unwrap();
+        let env = g.bind(&[("N", 256)]).unwrap();
+        lower(&g, &env, &CostModel::default()).unwrap()
+    }
+
+    #[test]
+    fn four_files_emitted_with_two_clocks() {
+        let k = emit_rtl(&pumped_design());
+        assert!(k.controller_sv.contains("ap_clk_2"));
+        assert!(k.core_sv.contains("multi-pumped"));
+        assert!(k.toplevel_v.contains("axis_clock_converter"));
+        assert!(k.toplevel_v.contains("axis_dwidth_converter"));
+        assert!(k.package_tcl.contains("sdx_kernel"));
+        assert!(k.link_cfg.contains("HBM[0]"));
+        assert!(k.link_cfg.contains("ap_clk_2"));
+    }
+
+    #[test]
+    fn unpumped_design_has_single_clock() {
+        let g = vecadd_sdfg(2);
+        let env = g.bind(&[("N", 64)]).unwrap();
+        let d = lower(&g, &env, &CostModel::default()).unwrap();
+        let k = emit_rtl(&d);
+        assert!(!k.toplevel_v.contains("ap_clk_2"));
+        assert!(!k.link_cfg.contains("[clock]"));
+    }
+}

@@ -1,0 +1,211 @@
+//! Configuration system: a TOML-subset parser (the `toml` crate is not
+//! in the offline cache — DESIGN.md §4).
+//!
+//! Supported: `[section]` headers, `key = value` with string, integer,
+//! float, boolean and flat-array values, `#` comments. That covers the
+//! experiment configs in `configs/`.
+
+use std::collections::BTreeMap;
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_int_array(&self) -> Option<Vec<i64>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|x| x.as_int()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed configuration: `section.key` → value ("" section for
+/// top-level keys).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<(String, String), Value>,
+}
+
+fn parse_scalar(s: &str) -> Result<Value, String> {
+    let s = s.trim();
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                section = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: bad section header", lineno + 1))?
+                    .trim()
+                    .to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim().to_string();
+            let val = val.trim();
+            let value = if let Some(inner) = val.strip_prefix('[') {
+                let inner = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated array", lineno + 1))?;
+                let items: Result<Vec<Value>, String> = inner
+                    .split(',')
+                    .filter(|s| !s.trim().is_empty())
+                    .map(parse_scalar)
+                    .collect();
+                Value::Array(items?)
+            } else {
+                parse_scalar(val).map_err(|e| format!("line {}: {e}", lineno + 1))?
+            };
+            cfg.values.insert((section.clone(), key), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn int(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn float(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = self.values.keys().map(|(s, _)| s.as_str()).collect();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+seed = 42
+device = "u280"
+
+[table3]
+pes = [32, 48, 64]
+vec_width = 16
+pump = true
+target_mhz = 300.5
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.int("", "seed", 0), 42);
+        assert_eq!(c.str_or("", "device", "?"), "u280");
+        assert_eq!(
+            c.get("table3", "pes").unwrap().as_int_array().unwrap(),
+            vec![32, 48, 64]
+        );
+        assert_eq!(c.int("table3", "vec_width", 0), 16);
+        assert!(c.bool("table3", "pump", false));
+        assert!((c.float("table3", "target_mhz", 0.0) - 300.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int("x", "y", 7), 7);
+        assert_eq!(c.str_or("x", "y", "z"), "z");
+    }
+
+    #[test]
+    fn errors_are_located() {
+        assert!(Config::parse("[broken").unwrap_err().contains("line 1"));
+        assert!(Config::parse("novalue").unwrap_err().contains("key = value"));
+        assert!(Config::parse("x = @?!").unwrap_err().contains("cannot parse"));
+    }
+
+    #[test]
+    fn int_vs_float_coercion() {
+        let c = Config::parse("a = 3").unwrap();
+        assert_eq!(c.float("", "a", 0.0), 3.0);
+    }
+}

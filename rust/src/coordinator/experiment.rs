@@ -1,0 +1,406 @@
+//! Experiment runner: regenerates every table and figure of the
+//! paper's evaluation section (per-experiment index in DESIGN.md §5).
+
+use crate::apps;
+use crate::hw::Device;
+use crate::ir::{PumpMode, StencilKind};
+use crate::sim::rate_model;
+use crate::util::table::{fnum, pct, Table};
+
+use super::pipeline::{compile, BuildSpec, Compiled};
+
+/// One measured variant row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub cl0_mhz: f64,
+    pub cl1_mhz: Option<f64>,
+    pub effective_mhz: f64,
+    pub time_s: f64,
+    pub gops: f64,
+    /// LUT logic, LUT memory, registers, BRAM, DSP percentages.
+    pub util: [f64; 5],
+    pub dsp_count: f64,
+    pub mops_per_dsp: f64,
+}
+
+/// A regenerated table/figure.
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    pub id: String,
+    pub rendered: String,
+    pub rows: Vec<Row>,
+}
+
+fn mk_row(label: &str, c: &Compiled, flops: f64, extra_replicas: usize) -> Row {
+    let stats = rate_model(&c.design);
+    let eff = c.report.effective_mhz;
+    let time = stats.seconds_at(eff);
+    let replicas = extra_replicas.max(1) as f64;
+    let gops = flops * replicas / time / 1e9;
+    let dsp_count = c.report.resources.dsp;
+    Row {
+        label: label.to_string(),
+        cl0_mhz: c.report.cl0.achieved_mhz,
+        cl1_mhz: c.report.cl1.map(|r| r.achieved_mhz),
+        effective_mhz: eff,
+        time_s: time,
+        gops,
+        util: c.report.util_percent(),
+        dsp_count,
+        mops_per_dsp: if dsp_count > 0.0 { gops * 1000.0 / dsp_count } else { 0.0 },
+    }
+}
+
+fn freq_cell(v: Option<f64>) -> String {
+    v.map(|x| fnum(x, 1)).unwrap_or_else(|| "-".into())
+}
+
+/// Table 1: resources of a single SLR (device model ground truth).
+pub fn table1() -> ExperimentResult {
+    let d = Device::u280();
+    let p = d.slr0_pool();
+    let mut t = Table::new(
+        "Table 1: Resources available for a single SLR (SLR0) of the Xilinx U280",
+        &["LUT Logic", "LUT Memory", "Registers", "BRAM", "DSPs"],
+    );
+    t.row(vec![
+        format!("{:.0} K", p.lut_logic / 1000.0),
+        format!("{:.0} K", p.lut_memory / 1000.0),
+        format!("{:.0} K", p.registers / 1000.0),
+        format!("{:.0}", p.bram),
+        format!("{:.0}", p.dsp),
+    ]);
+    ExperimentResult { id: "table1".into(), rendered: t.render(), rows: vec![] }
+}
+
+/// Table 2: vector addition, V ∈ {2, 4, 8}, Original vs Double-Pumped.
+pub fn table2(n: i64, seed: u64) -> Result<ExperimentResult, String> {
+    let mut rows = Vec::new();
+    for &v in &[2usize, 4, 8] {
+        let o = compile(
+            BuildSpec::new(apps::vecadd::build())
+                .vectorized("vadd", v)
+                .bind("N", n)
+                .seeded(seed),
+        )?;
+        rows.push(mk_row(&format!("V={v} O"), &o, apps::vecadd::flops(n), 1));
+        let dp = compile(
+            BuildSpec::new(apps::vecadd::build())
+                .vectorized("vadd", v)
+                .pumped(2, PumpMode::Resource)
+                .bind("N", n)
+                .seeded(seed),
+        )?;
+        rows.push(mk_row(&format!("V={v} DP"), &dp, apps::vecadd::flops(n), 1));
+    }
+    let mut t = Table::new(
+        format!("Table 2: Vector addition (N = 2^{})", (n as f64).log2() as u32),
+        &["", "Freq CL0", "Freq CL1", "Time [s]", "LUT L%", "LUT M%", "Regs%", "BRAM%", "DSP%"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.label.clone(),
+            fnum(r.cl0_mhz, 1),
+            freq_cell(r.cl1_mhz),
+            fnum(r.time_s, 4),
+            pct(r.util[0]),
+            pct(r.util[1]),
+            pct(r.util[2]),
+            pct(r.util[3]),
+            pct(r.util[4]),
+        ]);
+    }
+    t.footnote("paper: DSP halves under DP; LUT/Reg overhead < 1 %; time unchanged");
+    Ok(ExperimentResult { id: "table2".into(), rendered: t.render(), rows })
+}
+
+/// Table 3: matrix multiplication — CA baseline, DaCe original, and
+/// double-pumped at 32/48/64 PEs, plus the 3-SLR replication row.
+pub fn table3(nmk: i64, seed: u64) -> Result<ExperimentResult, String> {
+    let flops = apps::matmul::flops(nmk, nmk, nmk);
+    let mut rows = Vec::new();
+
+    // hand-written HLS baseline [10]: same netlist, 250 MHz request
+    let mut ca_spec = BuildSpec::new(apps::matmul::ca_baseline(32)).cl0(255.0).seeded(seed);
+    for (s, v) in apps::matmul::bindings(nmk) {
+        ca_spec = ca_spec.bind(&s, v);
+    }
+    let ca = compile(ca_spec)?;
+    rows.push(mk_row("CA 32", &ca, flops, 1));
+
+    let mut o_spec = BuildSpec::new(apps::matmul::build(32)).cl0(270.0).seeded(seed);
+    for (s, v) in apps::matmul::bindings(nmk) {
+        o_spec = o_spec.bind(&s, v);
+    }
+    let o = compile(o_spec)?;
+    rows.push(mk_row("O 32", &o, flops, 1));
+
+    for &pes in &[32usize, 48, 64] {
+        let mut spec = BuildSpec::new(apps::matmul::build(pes))
+            .pumped(2, PumpMode::Resource)
+            .cl0(270.0)
+            .seeded(seed);
+        for (s, v) in apps::matmul::bindings(nmk) {
+            spec = spec.bind(&s, v);
+        }
+        let dp = compile(spec)?;
+        rows.push(mk_row(&format!("DP {pes}"), &dp, flops, 1));
+    }
+
+    // 3-SLR replication of the 64-PE DP version (§4.2)
+    let mut spec3 = BuildSpec::new(apps::matmul::build(64))
+        .pumped(2, PumpMode::Resource)
+        .cl0(270.0)
+        .replicas(3)
+        .seeded(seed);
+    for (s, v) in apps::matmul::bindings(nmk) {
+        spec3 = spec3.bind(&s, v);
+    }
+    let dp3 = compile(spec3)?;
+    rows.push(mk_row("DP 64 x3SLR", &dp3, flops, 3));
+
+    let mut t = Table::new(
+        format!("Table 3: Matrix multiplication ({nmk}^3, f32, vec width 16)"),
+        &[
+            "", "Freq CL0", "Freq CL1", "Perf GOp/s", "LUT L%", "LUT M%", "Regs%", "BRAM%",
+            "DSP%", "MOp/s/DSP",
+        ],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.label.clone(),
+            fnum(r.cl0_mhz, 1),
+            freq_cell(r.cl1_mhz),
+            fnum(r.gops, 1),
+            pct(r.util[0]),
+            pct(r.util[1]),
+            pct(r.util[2]),
+            pct(r.util[3]),
+            pct(r.util[4]),
+            fnum(r.mops_per_dsp, 1),
+        ]);
+    }
+    t.footnote("paper: DP-32 ≈50 % DSP / ≈58 % BRAM of O-32; DP-64 +15 % over CA");
+    Ok(ExperimentResult { id: "table3".into(), rendered: t.render(), rows })
+}
+
+fn stencil_table(
+    kind: StencilKind,
+    // (S, O vec width or 0 to skip, DP vec width or 0 to skip).
+    // Large chains only fit the SLR for the ORIGINAL version at halved
+    // vectorization width — the DSP columns of Tables 4/5 (S=40 at
+    // 72.2 % / 83.3 %) only close that way; the double-pumped version
+    // keeps the full external width. This is precisely the paper's
+    // "freed resources allow further scaling" mechanism.
+    stages_list: &[(usize, usize, usize)],
+    nx: i64,
+    seed: u64,
+    id: &str,
+    title: &str,
+) -> Result<ExperimentResult, String> {
+    let (ny, nz) = (apps::stencil::PAPER_NY, apps::stencil::PAPER_NZ);
+    let mut rows = Vec::new();
+    for &(s, w_o, w_dp) in stages_list {
+        let flops = apps::stencil::flops(kind, nx, ny, nz, s);
+        if w_o > 0 {
+            let c = compile(
+                BuildSpec::new(apps::stencil::build(kind, s, w_o))
+                    .bind("NX", nx)
+                    .bind("NY", ny)
+                    .bind("NZ", nz)
+                    .bind("NZ_v", nz / w_o as i64)
+                    .cl0(315.0)
+                    .seeded(seed),
+            )?;
+            rows.push(mk_row(&format!("S={s} O"), &c, flops, 1));
+        }
+        if w_dp > 0 {
+            let c = compile(
+                BuildSpec::new(apps::stencil::build(kind, s, w_dp))
+                    .pumped(2, PumpMode::Resource)
+                    .bind("NX", nx)
+                    .bind("NY", ny)
+                    .bind("NZ", nz)
+                    .bind("NZ_v", nz / w_dp as i64)
+                    .cl0(315.0)
+                    .seeded(seed),
+            )?;
+            rows.push(mk_row(&format!("S={s} DP"), &c, flops, 1));
+        }
+    }
+    let mut t = Table::new(
+        title.to_string(),
+        &[
+            "", "Freq CL0", "Freq CL1", "Perf GOp/s", "LUT L%", "LUT M%", "Regs%", "BRAM%",
+            "DSP%", "MOp/s/DSP",
+        ],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.label.clone(),
+            fnum(r.cl0_mhz, 1),
+            freq_cell(r.cl1_mhz),
+            fnum(r.gops, 1),
+            pct(r.util[0]),
+            pct(r.util[1]),
+            pct(r.util[2]),
+            pct(r.util[3]),
+            pct(r.util[4]),
+            fnum(r.mops_per_dsp, 1),
+        ]);
+    }
+    t.footnote("paper: DP halves DSP per fixed S; MOp/s-per-DSP gains > 50 %");
+    Ok(ExperimentResult { id: id.into(), rendered: t.render(), rows })
+}
+
+/// Table 4: Jacobi-3D chains (8-way vectorized; S=40 original only
+/// fits at 4-way — see `stencil_table`).
+pub fn table4(nx: i64, seed: u64) -> Result<ExperimentResult, String> {
+    stencil_table(
+        StencilKind::Jacobi3D,
+        &[(8, 8, 8), (16, 8, 8), (40, 4, 8)],
+        nx,
+        seed,
+        "table4",
+        &format!("Table 4: Jacobi 3D stencil chains ({nx}x32x32, 8-way vect)"),
+    )
+}
+
+/// Table 5: Diffusion-3D chains (4-way vectorized; the original tops
+/// out at S=20, only the double-pumped version reaches S=40).
+pub fn table5(nx: i64, seed: u64) -> Result<ExperimentResult, String> {
+    stencil_table(
+        StencilKind::Diffusion3D,
+        &[(8, 4, 4), (16, 4, 4), (20, 4, 0), (40, 0, 4)],
+        nx,
+        seed,
+        "table5",
+        &format!("Table 5: Diffusion 3D stencil chains ({nx}x32x32, 4-way vect)"),
+    )
+}
+
+/// Table 6: Floyd–Warshall (throughput-mode double pumping).
+pub fn table6(n: i64, seed: u64) -> Result<ExperimentResult, String> {
+    let flops = apps::floyd_warshall::flops(n);
+    let o = compile(
+        BuildSpec::new(apps::floyd_warshall::build())
+            .bind("N", n)
+            .cl0(apps::floyd_warshall::CL0_REQUEST_MHZ)
+            .seeded(seed),
+    )?;
+    let dp = compile(
+        BuildSpec::new(apps::floyd_warshall::build())
+            .pumped(2, PumpMode::Throughput)
+            .bind("N", n)
+            .cl0(apps::floyd_warshall::CL0_REQUEST_MHZ)
+            .seeded(seed),
+    )?;
+    let rows = vec![
+        mk_row("O", &o, flops, 1),
+        mk_row("DP", &dp, flops, 1),
+    ];
+    let mut t = Table::new(
+        format!("Table 6: Floyd–Warshall ({n} nodes)"),
+        &["", "Freq CL0", "Freq CL1", "Time [s]", "LUT L%", "LUT M%", "Regs%", "BRAM%", "DSP%"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.label.clone(),
+            fnum(r.cl0_mhz, 1),
+            freq_cell(r.cl1_mhz),
+            fnum(r.time_s, 2),
+            pct(r.util[0]),
+            pct(r.util[1]),
+            pct(r.util[2]),
+            pct(r.util[3]),
+            pct(r.util[4]),
+        ]);
+    }
+    t.footnote("paper: similar resources, ~1.5x speedup (we: speedup = CL1/CL0)");
+    Ok(ExperimentResult { id: "table6".into(), rendered: t.render(), rows })
+}
+
+/// Which paper-scale size each experiment uses.
+pub fn paper_sizes() -> (i64, i64, i64, i64) {
+    (
+        apps::vecadd::PAPER_N,
+        apps::matmul::PAPER_NMK,
+        apps::stencil::PAPER_NX,
+        apps::floyd_warshall::PAPER_N,
+    )
+}
+
+/// Run an experiment by id ("table1".."table6", "fig4") at paper scale.
+pub fn run_experiment(id: &str, seed: u64) -> Result<ExperimentResult, String> {
+    run_experiment_with(id, seed, None)
+}
+
+/// Run an experiment with sizes optionally overridden by a config file
+/// (see `configs/*.toml`): `[tableN] n / nmk / nx` keys.
+pub fn run_experiment_with(
+    id: &str,
+    seed: u64,
+    cfg: Option<&super::config::Config>,
+) -> Result<ExperimentResult, String> {
+    let (van, mmn, snx, fwn) = paper_sizes();
+    let seed = cfg.map(|c| c.int("", "seed", seed as i64) as u64).unwrap_or(seed);
+    let size = |section: &str, key: &str, default: i64| {
+        cfg.map(|c| c.int(section, key, default)).unwrap_or(default)
+    };
+    match id {
+        "table1" => Ok(table1()),
+        "table2" => table2(size("table2", "n", van), seed),
+        "table3" => table3(size("table3", "nmk", mmn), seed),
+        "table4" => table4(size("table4", "nx", snx), seed),
+        "table5" => table5(size("table5", "nx", snx), seed),
+        "table6" => table6(size("table6", "n", fwn), seed),
+        "fig4" => super::report::figure4(seed),
+        other => Err(format!(
+            "unknown experiment '{other}' (try table1..table6, fig4)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let r = table1();
+        assert!(r.rendered.contains("439 K"));
+        assert!(r.rendered.contains("2880"));
+    }
+
+    #[test]
+    fn table2_small_scale_shape() {
+        let r = table2(1 << 16, 3).unwrap();
+        assert_eq!(r.rows.len(), 6);
+        // per width: DSP halves under DP, time roughly unchanged
+        for pair in r.rows.chunks(2) {
+            let (o, dp) = (&pair[0], &pair[1]);
+            assert!((dp.util[4] - o.util[4] / 2.0).abs() < 0.01, "{}", o.label);
+            let dt = (dp.time_s - o.time_s).abs() / o.time_s;
+            assert!(dt < 0.12, "{}: time drift {dt}", o.label);
+            assert!(dp.cl1_mhz.unwrap() > 1.7 * dp.cl0_mhz);
+        }
+    }
+
+    #[test]
+    fn table6_small_scale_shape() {
+        let r = table6(64, 3).unwrap();
+        let (o, dp) = (&r.rows[0], &r.rows[1]);
+        // similar resources, meaningful speedup
+        let speedup = o.time_s / dp.time_s;
+        assert!(speedup > 1.15, "speedup {speedup}");
+        assert!((dp.util[3] - o.util[3]).abs() < 3.0); // BRAM similar
+        // DSP may grow slightly (wider feed), never shrink below O
+        assert!(dp.util[4] >= o.util[4] - 1e-9);
+    }
+
+    #[test]
+    fn unknown_experiment_is_error() {
+        assert!(run_experiment("table9", 1).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! The coordinator: configuration, the compile pipeline, and the
+//! experiment runner that regenerates every table and figure of the
+//! paper's evaluation.
+//!
+//! This is the L3 entry layer the CLI (`tvec`) and the benches drive.
+
+pub mod config;
+pub mod experiment;
+pub mod pipeline;
+pub mod report;
+
+pub use config::Config;
+pub use experiment::{run_experiment, ExperimentResult};
+pub use pipeline::{compile, BuildSpec, Compiled};

@@ -1,0 +1,153 @@
+//! Figure 4 and the paper-vs-measured comparison report.
+
+use crate::apps;
+use crate::util::table::{fnum, Table};
+
+use super::experiment::{table2, table3, table4, table5, table6, ExperimentResult};
+
+/// Figure 4: speedup + DSP-efficiency summary (first row) and resource
+/// ratios DP/O at fixed configuration (second row; MMM 32 PEs, stencils
+/// S=16).
+pub fn figure4(seed: u64) -> Result<ExperimentResult, String> {
+    let (van, mmn, snx, fwn) = super::experiment::paper_sizes();
+    let t2 = table2(van, seed)?;
+    let t3 = table3(mmn, seed)?;
+    let t4 = table4(snx, seed)?;
+    let t5 = table5(snx, seed)?;
+    let t6 = table6(fwn, seed)?;
+
+    let find = |r: &ExperimentResult, label: &str| {
+        r.rows
+            .iter()
+            .find(|x| x.label == label)
+            .cloned()
+            .ok_or_else(|| format!("row '{label}' missing in {}", r.id))
+    };
+
+    // best-performing original vs best double-pumped per app
+    let mut top = Table::new(
+        "Figure 4 (first row): best-performing speedup and DSP efficiency",
+        &["app", "best O GOp/s", "best DP GOp/s", "speedup", "O MOp/s/DSP", "DP MOp/s/DSP"],
+    );
+    let mut rows = Vec::new();
+    {
+        // MMM: O-32 vs DP-64
+        let o = find(&t3, "O 32")?;
+        let dp = find(&t3, "DP 64")?;
+        top.row(vec![
+            "matmul".into(),
+            fnum(o.gops, 1),
+            fnum(dp.gops, 1),
+            fnum(dp.gops / o.gops, 2),
+            fnum(o.mops_per_dsp, 1),
+            fnum(dp.mops_per_dsp, 1),
+        ]);
+        rows.push(dp.clone());
+        // Jacobi: O-40 vs DP-40
+        let o = find(&t4, "S=40 O")?;
+        let dp = find(&t4, "S=40 DP")?;
+        top.row(vec![
+            "jacobi3d".into(),
+            fnum(o.gops, 1),
+            fnum(dp.gops, 1),
+            fnum(dp.gops / o.gops, 2),
+            fnum(o.mops_per_dsp, 1),
+            fnum(dp.mops_per_dsp, 1),
+        ]);
+        // Diffusion: O-20 vs DP-40
+        let o = find(&t5, "S=20 O")?;
+        let dp = find(&t5, "S=40 DP")?;
+        top.row(vec![
+            "diffusion3d".into(),
+            fnum(o.gops, 1),
+            fnum(dp.gops, 1),
+            fnum(dp.gops / o.gops, 2),
+            fnum(o.mops_per_dsp, 1),
+            fnum(dp.mops_per_dsp, 1),
+        ]);
+        // FW: time-based speedup
+        let o = find(&t6, "O")?;
+        let dp = find(&t6, "DP")?;
+        top.row(vec![
+            "floyd_warshall".into(),
+            fnum(1.0 / o.time_s, 3),
+            fnum(1.0 / dp.time_s, 3),
+            fnum(o.time_s / dp.time_s, 2),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+
+    // resource ratios DP/O at the same configuration
+    let mut bottom = Table::new(
+        "Figure 4 (second row): resource ratio DP/O at fixed configuration",
+        &["app", "LUT L", "LUT M", "Regs", "BRAM", "DSP"],
+    );
+    let ratio_row = |name: &str, o: &super::experiment::Row, dp: &super::experiment::Row| {
+        vec![
+            name.to_string(),
+            fnum(dp.util[0] / o.util[0], 2),
+            fnum(dp.util[1] / o.util[1], 2),
+            fnum(dp.util[2] / o.util[2], 2),
+            fnum(dp.util[3] / o.util[3], 2),
+            fnum(dp.util[4] / o.util[4], 2),
+        ]
+    };
+    {
+        let o = find(&t2, "V=8 O")?;
+        let dp = find(&t2, "V=8 DP")?;
+        bottom.row(ratio_row("vecadd (V=8)", &o, &dp));
+        let o = find(&t3, "O 32")?;
+        let dp = find(&t3, "DP 32")?;
+        bottom.row(ratio_row("matmul (32 PE)", &o, &dp));
+        let o = find(&t4, "S=16 O")?;
+        let dp = find(&t4, "S=16 DP")?;
+        bottom.row(ratio_row("jacobi3d (S=16)", &o, &dp));
+        let o = find(&t5, "S=16 O")?;
+        let dp = find(&t5, "S=16 DP")?;
+        bottom.row(ratio_row("diffusion3d (S=16)", &o, &dp));
+    }
+
+    let rendered = format!("{}\n{}", top.render(), bottom.render());
+    Ok(ExperimentResult { id: "fig4".into(), rendered, rows })
+}
+
+/// Paper-vs-measured side-by-side for EXPERIMENTS.md (Table 6 example;
+/// the full comparison is assembled by `tvec experiment all`).
+pub fn paper_comparison_fw(measured: &ExperimentResult) -> String {
+    let mut t = Table::new(
+        "Floyd–Warshall: paper vs measured",
+        &["variant", "paper CL0", "ours CL0", "paper time", "ours time"],
+    );
+    for (i, (label, cl0, _cl1, time, ..)) in apps::floyd_warshall::PAPER_TABLE6
+        .iter()
+        .map(|r| (r.0, r.1, r.2, r.3, r.4))
+        .enumerate()
+    {
+        if let Some(m) = measured.rows.get(i) {
+            t.row(vec![
+                label.to_string(),
+                fnum(cl0, 1),
+                fnum(m.cl0_mhz, 1),
+                fnum(time, 2),
+                fnum(m.time_s, 2),
+            ]);
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure4_renders_both_rows() {
+        let f = figure4(5).unwrap();
+        assert!(f.rendered.contains("speedup"));
+        assert!(f.rendered.contains("resource ratio"));
+        for app in ["matmul", "jacobi3d", "diffusion3d", "floyd_warshall", "vecadd"] {
+            assert!(f.rendered.contains(app), "missing {app}\n{}", f.rendered);
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Frontend AST.
+
+/// Scalar expression in the surface language.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SExpr {
+    Num(f32),
+    /// `name[index...]` — array element reference.
+    Ref { array: String, indices: Vec<IExpr> },
+    Bin(char, Box<SExpr>, Box<SExpr>),
+    /// `min(a, b)` / `max(a, b)` / `abs(a)`
+    Call(String, Vec<SExpr>),
+}
+
+/// Integer index expression (must lower to affine form).
+#[derive(Clone, Debug, PartialEq)]
+pub enum IExpr {
+    Num(i64),
+    Sym(String),
+    Add(Box<IExpr>, Box<IExpr>),
+    Sub(Box<IExpr>, Box<IExpr>),
+    Mul(Box<IExpr>, Box<IExpr>),
+}
+
+/// `map i in lo:hi:` statement with a single assignment body.
+#[derive(Clone, Debug)]
+pub struct MapStmt {
+    pub param: String,
+    pub lo: IExpr,
+    pub hi: IExpr,
+    /// `target[idx...] = expr`
+    pub target: (String, Vec<IExpr>),
+    pub value: SExpr,
+    /// true when declared `for` instead of `map` (sequential/dependent).
+    pub sequential: bool,
+}
+
+/// Array declaration `name: f32[dims] @ hbm`.
+#[derive(Clone, Debug)]
+pub struct ArrayDecl {
+    pub name: String,
+    pub dims: Vec<IExpr>,
+}
+
+/// A full program.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub name: String,
+    pub symbols: Vec<String>,
+    pub arrays: Vec<ArrayDecl>,
+    pub maps: Vec<MapStmt>,
+}

@@ -1,0 +1,174 @@
+//! Hand-rolled lexer for the frontend DSL.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Int(i64),
+    Float(f32),
+    // punctuation
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Colon,
+    Comma,
+    At,
+    Assign,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Newline,
+    Indent,
+    Eof,
+}
+
+/// Tokenize; indentation is significant only as "line starts with
+/// whitespace" (the grammar has one nesting level).
+pub fn lex(src: &str) -> Result<Vec<Tok>, String> {
+    let mut toks = Vec::new();
+    for raw_line in src.lines() {
+        let line = raw_line.split('#').next().unwrap_or("");
+        if line.trim().is_empty() {
+            continue;
+        }
+        if line.starts_with(' ') || line.starts_with('\t') {
+            toks.push(Tok::Indent);
+        }
+        let mut chars = line.trim().chars().peekable();
+        while let Some(&c) = chars.peek() {
+            match c {
+                ' ' | '\t' => {
+                    chars.next();
+                }
+                '(' => {
+                    chars.next();
+                    toks.push(Tok::LParen);
+                }
+                ')' => {
+                    chars.next();
+                    toks.push(Tok::RParen);
+                }
+                '[' => {
+                    chars.next();
+                    toks.push(Tok::LBracket);
+                }
+                ']' => {
+                    chars.next();
+                    toks.push(Tok::RBracket);
+                }
+                ':' => {
+                    chars.next();
+                    toks.push(Tok::Colon);
+                }
+                ',' => {
+                    chars.next();
+                    toks.push(Tok::Comma);
+                }
+                '@' => {
+                    chars.next();
+                    toks.push(Tok::At);
+                }
+                '=' => {
+                    chars.next();
+                    toks.push(Tok::Assign);
+                }
+                '+' => {
+                    chars.next();
+                    toks.push(Tok::Plus);
+                }
+                '-' => {
+                    chars.next();
+                    toks.push(Tok::Minus);
+                }
+                '*' => {
+                    chars.next();
+                    toks.push(Tok::Star);
+                }
+                '/' => {
+                    chars.next();
+                    toks.push(Tok::Slash);
+                }
+                c if c.is_ascii_digit() => {
+                    let mut s = String::new();
+                    let mut is_float = false;
+                    while let Some(&d) = chars.peek() {
+                        if d.is_ascii_digit() {
+                            s.push(d);
+                            chars.next();
+                        } else if d == '.' && !is_float {
+                            is_float = true;
+                            s.push(d);
+                            chars.next();
+                        } else {
+                            break;
+                        }
+                    }
+                    if is_float {
+                        toks.push(Tok::Float(s.parse().map_err(|e| format!("bad float {s}: {e}"))?));
+                    } else {
+                        toks.push(Tok::Int(s.parse().map_err(|e| format!("bad int {s}: {e}"))?));
+                    }
+                }
+                c if c.is_ascii_alphabetic() || c == '_' => {
+                    let mut s = String::new();
+                    while let Some(&d) = chars.peek() {
+                        if d.is_ascii_alphanumeric() || d == '_' {
+                            s.push(d);
+                            chars.next();
+                        } else {
+                            break;
+                        }
+                    }
+                    toks.push(Tok::Ident(s));
+                }
+                other => return Err(format!("unexpected character '{other}'")),
+            }
+        }
+        toks.push(Tok::Newline);
+    }
+    toks.push(Tok::Eof);
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_program_header() {
+        let t = lex("program vecadd(N):").unwrap();
+        assert_eq!(
+            t,
+            vec![
+                Tok::Ident("program".into()),
+                Tok::Ident("vecadd".into()),
+                Tok::LParen,
+                Tok::Ident("N".into()),
+                Tok::RParen,
+                Tok::Colon,
+                Tok::Newline,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn indent_and_comment() {
+        let t = lex("a: f32[N] @ hbm\n  z[i] = x[i] # body\n").unwrap();
+        assert!(t.contains(&Tok::Indent));
+        assert!(!t.iter().any(|t| matches!(t, Tok::Ident(s) if s == "body")));
+    }
+
+    #[test]
+    fn numbers() {
+        let t = lex("6 0.125").unwrap();
+        assert_eq!(t[0], Tok::Int(6));
+        assert_eq!(t[1], Tok::Float(0.125));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(lex("a ~ b").is_err());
+    }
+}

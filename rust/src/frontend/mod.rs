@@ -1,0 +1,32 @@
+//! Tiny high-level frontend.
+//!
+//! The paper's programs are written in Python and symbolically analyzed
+//! into the DaCe IR. We provide the same entry point as a small textual
+//! DSL: programs declare symbolic-size arrays and write `map` loops with
+//! element-wise expressions; the lowering produces the exact SDFG shape
+//! the transformations expect. Example (the paper's running example):
+//!
+//! ```text
+//! program vecadd(N):
+//!   x: f32[N] @ hbm
+//!   y: f32[N] @ hbm
+//!   z: f32[N] @ hbm
+//!   map i in 0:N:
+//!     z[i] = x[i] + y[i]
+//! ```
+
+pub mod ast;
+pub mod lexer;
+pub mod lower;
+pub mod parser;
+
+pub use lower::lower;
+pub use parser::parse;
+
+use crate::ir::Sdfg;
+
+/// Parse + lower in one step.
+pub fn compile(source: &str) -> Result<Sdfg, String> {
+    let prog = parse(source)?;
+    lower(&prog)
+}

@@ -1,0 +1,333 @@
+//! Recursive-descent parser for the frontend DSL.
+
+use super::ast::{ArrayDecl, IExpr, MapStmt, Program, SExpr};
+use super::lexer::{lex, Tok};
+
+struct P {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl P {
+    fn peek(&self) -> &Tok {
+        self.toks.get(self.pos).unwrap_or(&Tok::Eof)
+    }
+
+    fn next(&mut self) -> Tok {
+        let t = self.peek().clone();
+        self.pos += 1;
+        t
+    }
+
+    fn expect(&mut self, t: &Tok) -> Result<(), String> {
+        let got = self.next();
+        if &got == t {
+            Ok(())
+        } else {
+            Err(format!("expected {t:?}, got {got:?}"))
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, String> {
+        match self.next() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(format!("expected identifier, got {other:?}")),
+        }
+    }
+
+    fn skip_newlines(&mut self) {
+        while matches!(self.peek(), Tok::Newline) {
+            self.pos += 1;
+        }
+    }
+
+    // ---- integer index expressions: term (+|-) term ----
+    fn iexpr(&mut self) -> Result<IExpr, String> {
+        let mut lhs = self.iterm()?;
+        loop {
+            match self.peek() {
+                Tok::Plus => {
+                    self.pos += 1;
+                    lhs = IExpr::Add(Box::new(lhs), Box::new(self.iterm()?));
+                }
+                Tok::Minus => {
+                    self.pos += 1;
+                    lhs = IExpr::Sub(Box::new(lhs), Box::new(self.iterm()?));
+                }
+                _ => return Ok(lhs),
+            }
+        }
+    }
+
+    fn iterm(&mut self) -> Result<IExpr, String> {
+        let mut lhs = self.iatom()?;
+        while matches!(self.peek(), Tok::Star) {
+            self.pos += 1;
+            lhs = IExpr::Mul(Box::new(lhs), Box::new(self.iatom()?));
+        }
+        Ok(lhs)
+    }
+
+    fn iatom(&mut self) -> Result<IExpr, String> {
+        match self.next() {
+            Tok::Int(v) => Ok(IExpr::Num(v)),
+            Tok::Ident(s) => Ok(IExpr::Sym(s)),
+            Tok::Minus => Ok(IExpr::Sub(Box::new(IExpr::Num(0)), Box::new(self.iatom()?))),
+            Tok::LParen => {
+                let e = self.iexpr()?;
+                self.expect(&Tok::RParen)?;
+                Ok(e)
+            }
+            other => Err(format!("expected index expression, got {other:?}")),
+        }
+    }
+
+    // ---- scalar expressions ----
+    fn sexpr(&mut self) -> Result<SExpr, String> {
+        let mut lhs = self.sterm()?;
+        loop {
+            match self.peek() {
+                Tok::Plus => {
+                    self.pos += 1;
+                    lhs = SExpr::Bin('+', Box::new(lhs), Box::new(self.sterm()?));
+                }
+                Tok::Minus => {
+                    self.pos += 1;
+                    lhs = SExpr::Bin('-', Box::new(lhs), Box::new(self.sterm()?));
+                }
+                _ => return Ok(lhs),
+            }
+        }
+    }
+
+    fn sterm(&mut self) -> Result<SExpr, String> {
+        let mut lhs = self.satom()?;
+        loop {
+            match self.peek() {
+                Tok::Star => {
+                    self.pos += 1;
+                    lhs = SExpr::Bin('*', Box::new(lhs), Box::new(self.satom()?));
+                }
+                Tok::Slash => {
+                    self.pos += 1;
+                    lhs = SExpr::Bin('/', Box::new(lhs), Box::new(self.satom()?));
+                }
+                _ => return Ok(lhs),
+            }
+        }
+    }
+
+    fn satom(&mut self) -> Result<SExpr, String> {
+        match self.next() {
+            Tok::Float(v) => Ok(SExpr::Num(v)),
+            Tok::Int(v) => Ok(SExpr::Num(v as f32)),
+            Tok::Minus => {
+                let a = self.satom()?;
+                Ok(SExpr::Bin('-', Box::new(SExpr::Num(0.0)), Box::new(a)))
+            }
+            Tok::LParen => {
+                let e = self.sexpr()?;
+                self.expect(&Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(name) => match self.peek() {
+                Tok::LBracket => {
+                    self.pos += 1;
+                    let mut indices = vec![self.iexpr()?];
+                    while matches!(self.peek(), Tok::Comma) {
+                        self.pos += 1;
+                        indices.push(self.iexpr()?);
+                    }
+                    self.expect(&Tok::RBracket)?;
+                    Ok(SExpr::Ref { array: name, indices })
+                }
+                Tok::LParen => {
+                    self.pos += 1;
+                    let mut args = vec![self.sexpr()?];
+                    while matches!(self.peek(), Tok::Comma) {
+                        self.pos += 1;
+                        args.push(self.sexpr()?);
+                    }
+                    self.expect(&Tok::RParen)?;
+                    Ok(SExpr::Call(name, args))
+                }
+                _ => Err(format!("bare identifier '{name}' in scalar expression (arrays need [index])")),
+            },
+            other => Err(format!("expected scalar expression, got {other:?}")),
+        }
+    }
+
+    fn array_decl(&mut self, name: String) -> Result<ArrayDecl, String> {
+        // name ':' f32 '[' dims ']' '@' hbm
+        let ty = self.ident()?;
+        if ty != "f32" {
+            return Err(format!("only f32 arrays supported, got '{ty}'"));
+        }
+        self.expect(&Tok::LBracket)?;
+        let mut dims = vec![self.iexpr()?];
+        while matches!(self.peek(), Tok::Comma) {
+            self.pos += 1;
+            dims.push(self.iexpr()?);
+        }
+        self.expect(&Tok::RBracket)?;
+        self.expect(&Tok::At)?;
+        let loc = self.ident()?;
+        if loc != "hbm" {
+            return Err(format!("only '@ hbm' storage supported in the DSL, got '{loc}'"));
+        }
+        Ok(ArrayDecl { name, dims })
+    }
+
+    fn map_stmt(&mut self, sequential: bool) -> Result<MapStmt, String> {
+        // (map|for) i in lo:hi ':' NEWLINE INDENT target[idx] '=' expr
+        let param = self.ident()?;
+        let kw = self.ident()?;
+        if kw != "in" {
+            return Err(format!("expected 'in', got '{kw}'"));
+        }
+        let lo = self.iexpr()?;
+        self.expect(&Tok::Colon)?;
+        let hi = self.iexpr()?;
+        self.expect(&Tok::Colon)?;
+        self.skip_newlines();
+        self.expect(&Tok::Indent)?;
+        let target_name = self.ident()?;
+        self.expect(&Tok::LBracket)?;
+        let mut tidx = vec![self.iexpr()?];
+        while matches!(self.peek(), Tok::Comma) {
+            self.pos += 1;
+            tidx.push(self.iexpr()?);
+        }
+        self.expect(&Tok::RBracket)?;
+        self.expect(&Tok::Assign)?;
+        let value = self.sexpr()?;
+        Ok(MapStmt { param, lo, hi, target: (target_name, tidx), value, sequential })
+    }
+}
+
+/// Parse DSL source into a [`Program`].
+pub fn parse(source: &str) -> Result<Program, String> {
+    let toks = lex(source)?;
+    let mut p = P { toks, pos: 0 };
+    p.skip_newlines();
+
+    // header
+    let kw = p.ident()?;
+    if kw != "program" {
+        return Err(format!("expected 'program', got '{kw}'"));
+    }
+    let name = p.ident()?;
+    let mut symbols = Vec::new();
+    p.expect(&Tok::LParen)?;
+    if !matches!(p.peek(), Tok::RParen) {
+        symbols.push(p.ident()?);
+        while matches!(p.peek(), Tok::Comma) {
+            p.pos += 1;
+            symbols.push(p.ident()?);
+        }
+    }
+    p.expect(&Tok::RParen)?;
+    p.expect(&Tok::Colon)?;
+    p.skip_newlines();
+
+    let mut arrays = Vec::new();
+    let mut maps = Vec::new();
+    loop {
+        p.skip_newlines();
+        // body lines are indented
+        while matches!(p.peek(), Tok::Indent) {
+            p.pos += 1;
+        }
+        match p.next() {
+            Tok::Eof => break,
+            Tok::Ident(word) if word == "map" => maps.push(p.map_stmt(false)?),
+            Tok::Ident(word) if word == "for" => maps.push(p.map_stmt(true)?),
+            Tok::Ident(name) => {
+                p.expect(&Tok::Colon)?;
+                arrays.push(p.array_decl(name)?);
+            }
+            other => return Err(format!("unexpected token {other:?} at top level")),
+        }
+    }
+    if maps.is_empty() {
+        return Err("program has no map statement".into());
+    }
+    Ok(Program { name, symbols, arrays, maps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const VECADD: &str = "
+program vecadd(N):
+  x: f32[N] @ hbm
+  y: f32[N] @ hbm
+  z: f32[N] @ hbm
+  map i in 0:N:
+    z[i] = x[i] + y[i]
+";
+
+    #[test]
+    fn parses_vecadd() {
+        let prog = parse(VECADD).unwrap();
+        assert_eq!(prog.name, "vecadd");
+        assert_eq!(prog.symbols, vec!["N"]);
+        assert_eq!(prog.arrays.len(), 3);
+        assert_eq!(prog.maps.len(), 1);
+        let m = &prog.maps[0];
+        assert_eq!(m.param, "i");
+        assert!(!m.sequential);
+        assert_eq!(m.target.0, "z");
+        match &m.value {
+            SExpr::Bin('+', a, b) => {
+                assert!(matches!(**a, SExpr::Ref { .. }));
+                assert!(matches!(**b, SExpr::Ref { .. }));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_scaled_indices_and_calls() {
+        let src = "
+program saxpy(N):
+  x: f32[N] @ hbm
+  y: f32[N] @ hbm
+  map i in 0:N:
+    y[i] = min(2 * x[2*i+1], y[i])
+";
+        let prog = parse(src).unwrap();
+        match &prog.maps[0].value {
+            SExpr::Call(f, args) => {
+                assert_eq!(f, "min");
+                assert_eq!(args.len(), 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn for_is_sequential() {
+        let src = "
+program scan(N):
+  x: f32[N] @ hbm
+  for i in 1:N:
+    x[i] = x[i] + x[i-1]
+";
+        let prog = parse(src).unwrap();
+        assert!(prog.maps[0].sequential);
+    }
+
+    #[test]
+    fn error_on_missing_map() {
+        let src = "\nprogram nothing(N):\n  x: f32[N] @ hbm\n";
+        assert!(parse(src).unwrap_err().contains("no map"));
+    }
+
+    #[test]
+    fn error_on_bad_type() {
+        let src = "\nprogram p(N):\n  x: f64[N] @ hbm\n  map i in 0:N:\n    x[i] = x[i]\n";
+        assert!(parse(src).unwrap_err().contains("f32"));
+    }
+}

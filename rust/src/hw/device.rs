@@ -1,0 +1,125 @@
+//! Device descriptions: the Xilinx Alveo U280 of the evaluation.
+
+use super::resources::ResourceVec;
+
+/// An HBM pseudo-channel. The U280 exposes 32 banks, all wired to SLR0
+/// (paper §4); each bank stores exactly one container in the paper's
+/// configuration so bank conflicts are avoided.
+#[derive(Clone, Debug)]
+pub struct HbmBank {
+    pub index: usize,
+    /// Per-bank capacity in bytes (U280: 8 GiB / 32 banks = 256 MiB).
+    pub capacity: usize,
+    /// Peak per-bank bandwidth in bytes/cycle at the shell clock for a
+    /// 256-bit AXI port (32 B/cycle).
+    pub bytes_per_cycle: usize,
+}
+
+/// A Super Logic Region (die) with its resource pool.
+#[derive(Clone, Debug)]
+pub struct Slr {
+    pub index: usize,
+    pub pool: ResourceVec,
+    /// Whether HBM is directly attached (SLR0 only on the U280).
+    pub hbm_attached: bool,
+}
+
+/// The accelerator card model.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub name: String,
+    pub slrs: Vec<Slr>,
+    pub hbm_banks: Vec<HbmBank>,
+    /// Shell (slow-domain) clock target in MHz the toolchain aims for.
+    pub shell_clock_mhz: f64,
+    /// Maximum clock Vivado accepts as a request (§4: 650 MHz for the
+    /// evaluated version).
+    pub max_requested_mhz: f64,
+    /// DSP48 silicon limit (U280 datasheet: 891 MHz).
+    pub dsp_fmax_mhz: f64,
+    /// Frequency penalty factor per SLR crossing (die-to-die paths).
+    pub slr_crossing_penalty: f64,
+}
+
+impl Device {
+    /// The Xilinx Alveo U280 with the paper's Table-1 per-SLR pools.
+    pub fn u280() -> Device {
+        // Table 1: LUT Logic 439 K, LUT Memory 205 K, Registers 879 K,
+        // BRAM 672, DSPs 2880 — per SLR (SLR0 shown; we use it for all
+        // three, which matches the U280 floorplan closely enough for
+        // replication experiments).
+        let pool = ResourceVec::new(439_000.0, 205_000.0, 879_000.0, 672.0, 2_880.0);
+        Device {
+            name: "xilinx_u280_xdma_201920_3".to_string(),
+            slrs: (0..3)
+                .map(|index| Slr { index, pool, hbm_attached: index == 0 })
+                .collect(),
+            hbm_banks: (0..32)
+                .map(|index| HbmBank {
+                    index,
+                    capacity: 256 * 1024 * 1024,
+                    bytes_per_cycle: 32,
+                })
+                .collect(),
+            shell_clock_mhz: 300.0,
+            max_requested_mhz: 650.0,
+            dsp_fmax_mhz: 891.0,
+            slr_crossing_penalty: 0.35,
+        }
+    }
+
+    pub fn slr(&self, i: usize) -> &Slr {
+        &self.slrs[i]
+    }
+
+    /// Single-SLR pool (the evaluation's default configuration).
+    pub fn slr0_pool(&self) -> ResourceVec {
+        self.slrs[0].pool
+    }
+
+    /// Bank by index; panics on overflow (the coordinator checks the
+    /// container count beforehand).
+    pub fn bank(&self, i: usize) -> &HbmBank {
+        assert!(
+            i < self.hbm_banks.len(),
+            "device {} has {} HBM banks, bank {i} requested",
+            self.name,
+            self.hbm_banks.len()
+        );
+        &self.hbm_banks[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u280_matches_table1() {
+        let d = Device::u280();
+        let p = d.slr0_pool();
+        assert_eq!(p.lut_logic, 439_000.0);
+        assert_eq!(p.lut_memory, 205_000.0);
+        assert_eq!(p.registers, 879_000.0);
+        assert_eq!(p.bram, 672.0);
+        assert_eq!(p.dsp, 2_880.0);
+        assert_eq!(d.slrs.len(), 3);
+        assert_eq!(d.hbm_banks.len(), 32);
+        assert!(d.slrs[0].hbm_attached);
+        assert!(!d.slrs[1].hbm_attached);
+    }
+
+    #[test]
+    fn clock_limits() {
+        let d = Device::u280();
+        assert_eq!(d.max_requested_mhz, 650.0);
+        assert_eq!(d.dsp_fmax_mhz, 891.0);
+        assert!(d.shell_clock_mhz < d.max_requested_mhz);
+    }
+
+    #[test]
+    #[should_panic(expected = "32 HBM banks")]
+    fn bank_overflow_panics() {
+        Device::u280().bank(32);
+    }
+}

@@ -1,0 +1,27 @@
+//! Hardware substrate model.
+//!
+//! The paper evaluates on a physical Xilinx Alveo U280 through Vitis
+//! 2020.2; neither exists in this environment, so this module models the
+//! parts of that stack the evaluation actually observes (DESIGN.md §2):
+//!
+//! * [`device`] — the U280: per-SLR resource pools (paper Table 1),
+//!   HBM banks, shell clocking limits;
+//! * [`resources`] — resource vectors (LUT logic/memory, registers,
+//!   BRAM, DSP) with pool accounting and utilization percentages;
+//! * [`cost`] — per-operation and per-module resource costs calibrated
+//!   against the paper's tables (f32 add = 2 DSP, mul = 3 DSP, CDC
+//!   plumbing in LUTs+registers, BRAM from buffer footprints);
+//! * [`timing`] — the achievable-frequency model standing in for
+//!   place-and-route: congestion as a function of utilization and
+//!   domain span, the 650 MHz Vivado request cap, the 891 MHz DSP
+//!   silicon cap, deterministic seeded "P&R noise", and the paper's
+//!   *effective clock rate* `min(CL0, CL1/M)`.
+
+pub mod cost;
+pub mod device;
+pub mod resources;
+pub mod timing;
+
+pub use device::{Device, HbmBank};
+pub use resources::{ResourceVec, Utilization};
+pub use timing::{ClockReport, TimingModel};

@@ -1,0 +1,169 @@
+//! Resource vectors and pool accounting.
+//!
+//! The five resource classes the paper reports (Tables 1–6): LUTs used
+//! as logic, LUTs used as memory (distributed RAM / shift registers),
+//! flip-flop registers, BRAM (18 Kb half-blocks counted as the tables
+//! do), and DSP48 slices.
+
+use std::ops::{Add, AddAssign, Mul};
+
+/// A count of each resource class.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResourceVec {
+    pub lut_logic: f64,
+    pub lut_memory: f64,
+    pub registers: f64,
+    pub bram: f64,
+    pub dsp: f64,
+}
+
+impl ResourceVec {
+    pub const ZERO: ResourceVec =
+        ResourceVec { lut_logic: 0.0, lut_memory: 0.0, registers: 0.0, bram: 0.0, dsp: 0.0 };
+
+    pub fn new(lut_logic: f64, lut_memory: f64, registers: f64, bram: f64, dsp: f64) -> Self {
+        ResourceVec { lut_logic, lut_memory, registers, bram, dsp }
+    }
+
+    /// Element-wise utilization fraction against a pool.
+    pub fn utilization(&self, pool: &ResourceVec) -> Utilization {
+        Utilization {
+            lut_logic: self.lut_logic / pool.lut_logic,
+            lut_memory: self.lut_memory / pool.lut_memory,
+            registers: self.registers / pool.registers,
+            bram: self.bram / pool.bram,
+            dsp: self.dsp / pool.dsp,
+        }
+    }
+
+    /// Does the vector fit in the pool?
+    pub fn fits(&self, pool: &ResourceVec) -> bool {
+        self.lut_logic <= pool.lut_logic
+            && self.lut_memory <= pool.lut_memory
+            && self.registers <= pool.registers
+            && self.bram <= pool.bram
+            && self.dsp <= pool.dsp
+    }
+
+    pub fn scaled(&self, k: f64) -> ResourceVec {
+        ResourceVec {
+            lut_logic: self.lut_logic * k,
+            lut_memory: self.lut_memory * k,
+            registers: self.registers * k,
+            bram: self.bram * k,
+            dsp: self.dsp * k,
+        }
+    }
+}
+
+impl Add for ResourceVec {
+    type Output = ResourceVec;
+    fn add(self, o: ResourceVec) -> ResourceVec {
+        ResourceVec {
+            lut_logic: self.lut_logic + o.lut_logic,
+            lut_memory: self.lut_memory + o.lut_memory,
+            registers: self.registers + o.registers,
+            bram: self.bram + o.bram,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+impl AddAssign for ResourceVec {
+    fn add_assign(&mut self, o: ResourceVec) {
+        *self = *self + o;
+    }
+}
+
+impl Mul<f64> for ResourceVec {
+    type Output = ResourceVec;
+    fn mul(self, k: f64) -> ResourceVec {
+        self.scaled(k)
+    }
+}
+
+/// Utilization fractions (0..1 per class) — rendered as percentages in
+/// the tables.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Utilization {
+    pub lut_logic: f64,
+    pub lut_memory: f64,
+    pub registers: f64,
+    pub bram: f64,
+    pub dsp: f64,
+}
+
+impl Utilization {
+    /// The constraining (maximum) utilization across classes.
+    pub fn max_fraction(&self) -> f64 {
+        self.lut_logic
+            .max(self.lut_memory)
+            .max(self.registers)
+            .max(self.bram)
+            .max(self.dsp)
+    }
+
+    /// Weighted mean utilization: routing pressure correlates with how
+    /// much of the *fabric* (LUTs + registers) is occupied; BRAM/DSP
+    /// columns matter less for congestion.
+    pub fn fabric_pressure(&self) -> f64 {
+        0.40 * self.lut_logic + 0.15 * self.lut_memory + 0.30 * self.registers
+            + 0.075 * self.bram
+            + 0.075 * self.dsp
+    }
+
+    pub fn percentages(&self) -> [f64; 5] {
+        [
+            self.lut_logic * 100.0,
+            self.lut_memory * 100.0,
+            self.registers * 100.0,
+            self.bram * 100.0,
+            self.dsp * 100.0,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = ResourceVec::new(1.0, 2.0, 3.0, 4.0, 5.0);
+        let b = a + a;
+        assert_eq!(b.dsp, 10.0);
+        assert_eq!((a * 2.0).lut_logic, 2.0);
+        let mut c = a;
+        c += a;
+        assert_eq!(c, b);
+    }
+
+    #[test]
+    fn utilization_and_fit() {
+        let pool = ResourceVec::new(100.0, 100.0, 100.0, 100.0, 100.0);
+        let used = ResourceVec::new(50.0, 10.0, 25.0, 99.0, 101.0);
+        let u = used.utilization(&pool);
+        assert!((u.dsp - 1.01).abs() < 1e-12);
+        assert!((u.max_fraction() - 1.01).abs() < 1e-12);
+        assert!(!used.fits(&pool));
+        assert!(ResourceVec::new(1.0, 1.0, 1.0, 1.0, 1.0).fits(&pool));
+    }
+
+    #[test]
+    fn fabric_pressure_weights_sum_to_one() {
+        let all = Utilization {
+            lut_logic: 1.0,
+            lut_memory: 1.0,
+            registers: 1.0,
+            bram: 1.0,
+            dsp: 1.0,
+        };
+        assert!((all.fabric_pressure() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentages_scale() {
+        let u = Utilization { dsp: 0.5, ..Default::default() };
+        assert_eq!(u.percentages()[4], 50.0);
+    }
+}

@@ -1,0 +1,242 @@
+//! Achievable-frequency model: the stand-in for Vivado place-and-route.
+//!
+//! The paper's frequencies are outputs of physical P&R; what its
+//! conclusions rely on is the *behaviour* of those outputs:
+//!
+//! 1. small designs close timing near (or above) the shell target;
+//! 2. congestion — fabric pressure from high utilization — lowers the
+//!    achievable clock, superlinearly past ~60 % (Table 3: 268 MHz at
+//!    32 PEs → 252.9 MHz at 64 PEs);
+//! 3. a *small* domain (just the compute, after multi-pumping isolates
+//!    it from the long data paths) clocks much higher than the full
+//!    design — but still degrades as it grows (Table 3 CL1: 452.8 MHz
+//!    at 32 PEs → 322.5 MHz at 64);
+//! 4. Vivado refuses requests above 650 MHz, yet can deliver slightly
+//!    more than requested (Table 6: 674.7 MHz);
+//! 5. DSP silicon caps everything at 891 MHz;
+//! 6. SLR crossings hurt badly (§4.2: 25 % scaling efficiency).
+//!
+//! The model here reproduces exactly those six behaviours, with a
+//! deterministic seeded jitter standing in for P&R's run-to-run
+//! scatter. The *effective clock rate* of a double-pumped design is
+//! `min(CL0, CL1/M)` (paper §2.1), computed by [`effective_clock`].
+
+use super::resources::Utilization;
+use crate::util::Rng;
+
+/// The achievable clock for one clock domain.
+#[derive(Clone, Copy, Debug)]
+pub struct ClockReport {
+    /// Frequency Vivado would declare after P&R, in MHz.
+    pub achieved_mhz: f64,
+    /// The frequency that was requested.
+    pub requested_mhz: f64,
+    /// Fabric congestion score in [0, ∞) that produced it.
+    pub congestion: f64,
+}
+
+/// Model parameters. Defaults calibrated to Tables 2–6.
+#[derive(Clone, Debug)]
+pub struct TimingModel {
+    /// Intrinsic fabric limit for trivial logic (MHz): what an almost
+    /// empty pipelined design can close at.
+    pub fabric_fmax_mhz: f64,
+    /// Congestion scale: achieved = base / (1 + alpha * congestion).
+    pub alpha: f64,
+    /// Utilization knee past which congestion grows superlinearly.
+    pub knee: f64,
+    /// Superlinear exponent past the knee.
+    pub gamma: f64,
+    /// Long-path penalty for designs spanning memory interfaces (the
+    /// slow domain always carries the HBM/PCIe paths).
+    pub io_span_penalty: f64,
+    /// Relative sigma of the deterministic P&R jitter.
+    pub jitter: f64,
+    /// DSP silicon cap (MHz).
+    pub dsp_fmax_mhz: f64,
+    /// Maximum requestable clock (MHz).
+    pub max_requested_mhz: f64,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        TimingModel {
+            fabric_fmax_mhz: 742.0,
+            alpha: 1.05,
+            knee: 0.60,
+            gamma: 2.2,
+            io_span_penalty: 0.35,
+            jitter: 0.013,
+            dsp_fmax_mhz: 891.0,
+            max_requested_mhz: 650.0,
+        }
+    }
+}
+
+/// What a domain contains, for timing purposes.
+#[derive(Clone, Copy, Debug)]
+pub struct DomainProfile {
+    /// Utilization of the SLR by *this domain's* logic.
+    pub util: Utilization,
+    /// Utilization of the SLR by the *whole design* (routing is shared;
+    /// a small fast domain inside a packed chip still suffers).
+    pub design_util: Utilization,
+    /// Does the domain include off-chip interfaces (readers/writers)?
+    pub touches_io: bool,
+    /// Number of SLR crossings on the domain's paths.
+    pub slr_crossings: usize,
+}
+
+impl TimingModel {
+    /// Congestion score of a domain.
+    pub fn congestion(&self, p: &DomainProfile) -> f64 {
+        // own fabric pressure + a share of the surrounding design's
+        let own = 0.6 * p.util.fabric_pressure();
+        let ambient = 0.25 * p.design_util.fabric_pressure();
+        let mut c = own + ambient;
+        let knee_excess = (p.design_util.max_fraction() - self.knee).max(0.0);
+        c += knee_excess.powf(self.gamma) * 3.0;
+        if p.touches_io {
+            c += self.io_span_penalty;
+        }
+        c += p.slr_crossings as f64 * 0.75;
+        c
+    }
+
+    /// Compute-density congestion: dense DSP columns and banked BRAM
+    /// route poorly *at high clock targets* (the fast domain of a big
+    /// systolic array closes far below the fabric limit — Table 3's
+    /// CL1 drop from 452.8 to 322.5 MHz as PEs grow), but barely affect
+    /// low-frequency domains. Scales with the requested clock.
+    fn density_penalty(&self, p: &DomainProfile, requested_mhz: f64) -> f64 {
+        let density = 0.3 * p.util.dsp + 0.15 * p.util.bram;
+        density * (requested_mhz / self.max_requested_mhz).min(1.2)
+    }
+
+    /// Achieved frequency for a domain given a requested clock, with
+    /// deterministic jitter drawn from `rng`.
+    pub fn achieve(&self, requested_mhz: f64, p: &DomainProfile, rng: &mut Rng) -> ClockReport {
+        let requested = requested_mhz.min(self.max_requested_mhz);
+        let congestion = self.congestion(p) + self.density_penalty(p, requested);
+        let base = self.fabric_fmax_mhz / (1.0 + self.alpha * congestion);
+        // P&R aims for the request; it can exceed it a little when the
+        // fabric allows (Table 6: 674.7 achieved for a 650 request), and
+        // falls short when congested.
+        let headroom = base.min(requested * 1.06);
+        let jittered = headroom * (1.0 + self.jitter * rng.gauss());
+        let achieved = jittered.min(requested * 1.055).min(self.dsp_fmax_mhz);
+        ClockReport { achieved_mhz: achieved, requested_mhz: requested, congestion }
+    }
+}
+
+/// Effective clock rate of a multi-pumped design (paper §2.1): the
+/// minimum of the slow-domain clock and `1/M` of the fast-domain clock.
+pub fn effective_clock(cl0_mhz: f64, cl1_mhz: Option<f64>, factor: usize) -> f64 {
+    match cl1_mhz {
+        Some(cl1) => cl0_mhz.min(cl1 / factor as f64),
+        None => cl0_mhz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::resources::Utilization;
+
+    fn util(frac: f64) -> Utilization {
+        Utilization {
+            lut_logic: frac,
+            lut_memory: frac * 0.4,
+            registers: frac,
+            bram: frac,
+            dsp: frac,
+        }
+    }
+
+    fn profile(frac: f64, io: bool) -> DomainProfile {
+        DomainProfile { util: util(frac), design_util: util(frac), touches_io: io, slr_crossings: 0 }
+    }
+
+    #[test]
+    fn small_design_meets_shell_clock() {
+        let tm = TimingModel::default();
+        let mut rng = Rng::new(1);
+        let r = tm.achieve(300.0, &profile(0.06, true), &mut rng);
+        assert!(r.achieved_mhz > 290.0, "{}", r.achieved_mhz);
+        assert!(r.achieved_mhz < 340.0, "{}", r.achieved_mhz);
+    }
+
+    #[test]
+    fn congestion_lowers_clock() {
+        let tm = TimingModel::default();
+        let mut rng = Rng::new(2);
+        let lo = tm.achieve(650.0, &profile(0.1, false), &mut rng).achieved_mhz;
+        let hi = tm.achieve(650.0, &profile(0.9, false), &mut rng).achieved_mhz;
+        assert!(hi < lo * 0.7, "hi={hi} lo={lo}");
+    }
+
+    #[test]
+    fn isolated_compute_domain_clocks_higher_than_io_domain() {
+        // behaviour 3: the multi-pumped domain (no IO span) beats the
+        // slow domain at the same utilization
+        let tm = TimingModel::default();
+        let mut rng = Rng::new(3);
+        let fast = tm.achieve(650.0, &profile(0.3, false), &mut rng).achieved_mhz;
+        let slow = tm.achieve(650.0, &profile(0.3, true), &mut rng).achieved_mhz;
+        assert!(fast > slow * 1.2, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn achieved_can_slightly_exceed_request() {
+        let tm = TimingModel::default();
+        // near-empty fabric, many seeds: some runs exceed 650
+        let mut any_above = false;
+        for seed in 0..32 {
+            let mut rng = Rng::new(seed);
+            let r = tm.achieve(650.0, &profile(0.02, false), &mut rng);
+            assert!(r.achieved_mhz <= 891.0);
+            if r.achieved_mhz > 650.0 {
+                any_above = true;
+            }
+        }
+        assert!(any_above, "expected some runs above the 650 request (Table 6 behaviour)");
+    }
+
+    #[test]
+    fn dsp_cap_enforced() {
+        let mut tm = TimingModel::default();
+        tm.fabric_fmax_mhz = 5000.0;
+        tm.max_requested_mhz = 5000.0;
+        let mut rng = Rng::new(5);
+        let r = tm.achieve(4000.0, &profile(0.01, false), &mut rng);
+        assert!(r.achieved_mhz <= 891.0);
+    }
+
+    #[test]
+    fn slr_crossing_penalty() {
+        let tm = TimingModel::default();
+        let mut rng = Rng::new(6);
+        let mut p = profile(0.4, true);
+        let single = tm.achieve(300.0, &p, &mut rng).achieved_mhz;
+        p.slr_crossings = 2;
+        let multi = tm.achieve(300.0, &p, &mut rng).achieved_mhz;
+        assert!(multi < single * 0.75, "multi={multi} single={single}");
+    }
+
+    #[test]
+    fn effective_clock_rule() {
+        assert_eq!(effective_clock(300.0, None, 1), 300.0);
+        // CL1/2 < CL0 → limited by fast domain
+        assert_eq!(effective_clock(300.0, Some(500.0), 2), 250.0);
+        // CL1/2 > CL0 → limited by slow domain
+        assert_eq!(effective_clock(300.0, Some(680.0), 2), 300.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let tm = TimingModel::default();
+        let a = tm.achieve(650.0, &profile(0.5, true), &mut Rng::new(42)).achieved_mhz;
+        let b = tm.achieve(650.0, &profile(0.5, true), &mut Rng::new(42)).achieved_mhz;
+        assert_eq!(a, b);
+    }
+}

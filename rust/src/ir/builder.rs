@@ -1,0 +1,248 @@
+//! Fluent builder for constructing SDFGs.
+//!
+//! The application definitions in [`crate::apps`] and the tests use this
+//! API; the tiny DSL frontend ([`crate::frontend`]) lowers onto it too.
+
+use super::graph::{NodeId, Sdfg};
+use super::memlet::Memlet;
+use super::node::{LibraryOp, MapSchedule, Node};
+use super::tasklet::{TaskExpr, Tasklet};
+use super::types::{ContainerKind, DType, DataDecl, Storage, VecType};
+use crate::symbolic::{Expr, Range, Subset};
+
+/// Builder wrapping an [`Sdfg`] under construction.
+pub struct GraphBuilder {
+    g: Sdfg,
+    next_bank: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> Self {
+        GraphBuilder { g: Sdfg::new(name), next_bank: 0 }
+    }
+
+    /// Declare a 1-D f32 array in its own HBM bank (the paper's §4
+    /// configuration: one container per bank).
+    pub fn array_f32(&mut self, name: &str, shape: Vec<Expr>) -> &mut Self {
+        self.array(name, VecType::scalar(DType::F32), shape)
+    }
+
+    /// Declare an array of the given vector type in a fresh HBM bank.
+    pub fn array(&mut self, name: &str, vtype: VecType, shape: Vec<Expr>) -> &mut Self {
+        let bank = self.next_bank;
+        self.next_bank += 1;
+        for d in &shape {
+            for s in d.symbols() {
+                self.g.add_symbol(&s);
+            }
+        }
+        self.g.declare(DataDecl {
+            name: name.into(),
+            kind: ContainerKind::Array,
+            vtype,
+            shape,
+            storage: Storage::Hbm { bank },
+            transient: false,
+        });
+        self
+    }
+
+    /// Declare an on-chip transient buffer.
+    pub fn bram(&mut self, name: &str, vtype: VecType, shape: Vec<Expr>) -> &mut Self {
+        self.g.declare(DataDecl {
+            name: name.into(),
+            kind: ContainerKind::Array,
+            vtype,
+            shape,
+            storage: Storage::Bram,
+            transient: true,
+        });
+        self
+    }
+
+    /// Declare a stream (FIFO) container.
+    pub fn stream(&mut self, name: &str, vtype: VecType, depth: usize) -> &mut Self {
+        self.g.declare(DataDecl {
+            name: name.into(),
+            kind: ContainerKind::Stream,
+            vtype,
+            shape: vec![],
+            storage: Storage::Stream { depth },
+            transient: true,
+        });
+        self
+    }
+
+    pub fn access(&mut self, data: &str) -> NodeId {
+        assert!(
+            self.g.containers.contains_key(data),
+            "access to undeclared container '{data}'"
+        );
+        self.g.add_node(Node::Access { data: data.into() })
+    }
+
+    /// Open a map scope; returns (entry, exit).
+    pub fn map(
+        &mut self,
+        name: &str,
+        params: &[&str],
+        ranges: Vec<Range>,
+        schedule: MapSchedule,
+    ) -> (NodeId, NodeId) {
+        assert_eq!(params.len(), ranges.len());
+        for r in &ranges {
+            for s in r.begin.symbols().into_iter().chain(r.end.symbols()) {
+                if !params.contains(&s.as_str()) {
+                    self.g.add_symbol(&s);
+                }
+            }
+        }
+        let entry = self.g.add_node(Node::MapEntry {
+            name: name.into(),
+            params: params.iter().map(|s| s.to_string()).collect(),
+            ranges,
+            schedule,
+        });
+        let exit = self.g.add_node(Node::MapExit { entry: name.into() });
+        (entry, exit)
+    }
+
+    pub fn tasklet(&mut self, t: Tasklet) -> NodeId {
+        self.g.add_node(Node::Tasklet(t))
+    }
+
+    /// Shorthand: single-output tasklet.
+    pub fn tasklet1(&mut self, name: &str, out_conn: &str, expr: TaskExpr) -> NodeId {
+        self.tasklet(Tasklet::new(name, vec![(out_conn, expr)]))
+    }
+
+    pub fn library(&mut self, name: &str, op: LibraryOp) -> NodeId {
+        self.g.add_node(Node::Library { name: name.into(), op })
+    }
+
+    pub fn edge(&mut self, src: NodeId, dst: NodeId, m: Memlet) -> &mut Self {
+        self.g.add_edge(src, dst, m);
+        self
+    }
+
+    /// Connect an access node through a map entry to a tasklet input:
+    /// the outer memlet carries the full per-map subset, the inner one
+    /// the per-iteration element.
+    pub fn feed(
+        &mut self,
+        access: NodeId,
+        entry: NodeId,
+        tasklet: NodeId,
+        data: &str,
+        outer: Subset,
+        inner: Subset,
+        conn: &str,
+    ) -> &mut Self {
+        self.g.add_edge(access, entry, Memlet::new(data, outer));
+        self.g
+            .add_edge(entry, tasklet, Memlet { ..Memlet::new(data, inner).with_dst(conn) });
+        self
+    }
+
+    /// Connect a tasklet output through a map exit to an access node.
+    pub fn drain(
+        &mut self,
+        tasklet: NodeId,
+        exit: NodeId,
+        access: NodeId,
+        data: &str,
+        inner: Subset,
+        outer: Subset,
+        conn: &str,
+    ) -> &mut Self {
+        self.g.add_edge(tasklet, exit, Memlet::new(data, inner).with_src(conn));
+        self.g.add_edge(exit, access, Memlet::new(data, outer));
+        self
+    }
+
+    /// Wrap the whole graph in an outer sequential loop.
+    pub fn repeat(&mut self, param: &str, range: Range) -> &mut Self {
+        self.g.repeat = Some(super::graph::SequentialRepeat {
+            param: param.to_string(),
+            range,
+        });
+        self
+    }
+
+    pub fn finish(self) -> Sdfg {
+        self.g
+    }
+
+    pub fn graph(&self) -> &Sdfg {
+        &self.g
+    }
+}
+
+/// Convenience constructor for the canonical running example of the
+/// paper (§3.2): `z = x + y` over N elements, pipelined map. Used by
+/// tests, the quickstart example and Table 2.
+pub fn vecadd_sdfg(lanes: usize) -> Sdfg {
+    let mut b = GraphBuilder::new(if lanes == 1 { "vecadd" } else { "vecadd_vec" });
+    let vt = VecType::of(DType::F32, lanes);
+    b.array("x", vt, vec![Expr::sym("N")]);
+    b.array("y", vt, vec![Expr::sym("N")]);
+    b.array("z", vt, vec![Expr::sym("N")]);
+    let x = b.access("x");
+    let y = b.access("y");
+    let z = b.access("z");
+    let (me, mx) = b.map("vadd", &["i"], vec![Range::upto_sym("N")], MapSchedule::Pipeline);
+    let t = b.tasklet1("add", "out", TaskExpr::input("a").add(TaskExpr::input("b")));
+    let all = Subset::new(vec![Range::upto_sym("N")]);
+    let elem = Subset::index1(Expr::sym("i"));
+    b.feed(x, me, t, "x", all.clone(), elem.clone(), "a");
+    b.feed(y, me, t, "y", all.clone(), elem.clone(), "b");
+    b.drain(t, mx, z, "z", elem, all, "out");
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vecadd_shape() {
+        let g = vecadd_sdfg(1);
+        assert_eq!(g.nodes.len(), 6); // 3 access + entry + tasklet + exit
+        assert_eq!(g.edges.len(), 6);
+        assert_eq!(g.symbols, vec!["N".to_string()]);
+        assert!(g.topo_order().is_ok());
+        assert_eq!(g.external_accesses().len(), 3);
+    }
+
+    #[test]
+    fn vectorized_vecadd_types() {
+        let g = vecadd_sdfg(4);
+        assert_eq!(g.container("x").unwrap().vtype.lanes, 4);
+        // distinct HBM banks per container (paper §4 configuration)
+        let banks: Vec<usize> = ["x", "y", "z"]
+            .iter()
+            .map(|n| match g.container(n).unwrap().storage {
+                Storage::Hbm { bank } => bank,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(banks, vec![0, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "undeclared container")]
+    fn undeclared_access_panics() {
+        let mut b = GraphBuilder::new("bad");
+        b.access("nope");
+    }
+
+    #[test]
+    fn stream_decl() {
+        let mut b = GraphBuilder::new("s");
+        b.stream("q", VecType::scalar(DType::F32), 16);
+        let g = b.finish();
+        let d = g.container("q").unwrap();
+        assert!(d.storage.is_stream());
+        assert!(d.transient);
+    }
+}

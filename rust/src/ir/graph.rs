@@ -1,0 +1,364 @@
+//! The dataflow graph (single-state SDFG analog).
+
+use std::collections::BTreeMap;
+
+use super::memlet::Memlet;
+use super::node::Node;
+use super::types::DataDecl;
+use crate::symbolic::Range;
+
+/// Typed node index.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct NodeId(pub usize);
+
+/// Typed edge index.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct EdgeId(pub usize);
+
+/// A directed edge with its memlet annotation.
+#[derive(Clone, Debug)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub memlet: Memlet,
+}
+
+/// Outer sequential loop wrapper (e.g. the `k` loop of Floyd–Warshall):
+/// the whole dataflow graph executes once per value of `param`.
+#[derive(Clone, Debug)]
+pub struct SequentialRepeat {
+    pub param: String,
+    pub range: Range,
+}
+
+/// A symbol derived from another by exact division, introduced by the
+/// vectorization / multi-pumping rewrites when a symbolic extent is
+/// divided (`N` → `N_div_4` with the invariant `N_div_4 = N / 4`).
+/// [`Sdfg::bind`] resolves these automatically.
+#[derive(Clone, Debug)]
+pub struct DerivedSymbol {
+    pub name: String,
+    pub base: String,
+    pub divisor: i64,
+}
+
+/// Which of the paper's two multi-pumping modes was applied (§2.1).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PumpMode {
+    /// Internal width ÷ M, same throughput, resources cut (waveform ③).
+    Resource,
+    /// External width × M, M× throughput, same compute (waveform ②).
+    Throughput,
+}
+
+/// Record of an applied multi-pumping transformation.
+#[derive(Clone, Debug)]
+pub struct MultipumpInfo {
+    pub factor: usize,
+    pub mode: PumpMode,
+    /// Nodes placed in the fast clock domain CL1.
+    pub fast_nodes: Vec<NodeId>,
+}
+
+/// The dataflow program: containers, symbols, nodes, edges, and an
+/// optional outer sequential repetition.
+#[derive(Clone, Debug, Default)]
+pub struct Sdfg {
+    pub name: String,
+    pub containers: BTreeMap<String, DataDecl>,
+    /// Free symbols (problem sizes) with optional documentation.
+    pub symbols: Vec<String>,
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+    pub repeat: Option<SequentialRepeat>,
+    /// Division-derived symbols introduced by transformations.
+    pub derived: Vec<DerivedSymbol>,
+    /// Set when the multi-pumping transformation has been applied.
+    pub multipump: Option<MultipumpInfo>,
+}
+
+impl Sdfg {
+    pub fn new(name: &str) -> Self {
+        Sdfg { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn add_node(&mut self, node: Node) -> NodeId {
+        self.nodes.push(node);
+        NodeId(self.nodes.len() - 1)
+    }
+
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, memlet: Memlet) -> EdgeId {
+        assert!(src.0 < self.nodes.len() && dst.0 < self.nodes.len());
+        self.edges.push(Edge { src, dst, memlet });
+        EdgeId(self.edges.len() - 1)
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.0]
+    }
+
+    pub fn edge(&self, id: EdgeId) -> &Edge {
+        &self.edges[id.0]
+    }
+
+    pub fn edge_mut(&mut self, id: EdgeId) -> &mut Edge {
+        &mut self.edges[id.0]
+    }
+
+    pub fn node_ids(&self) -> impl Iterator<Item = NodeId> {
+        (0..self.nodes.len()).map(NodeId)
+    }
+
+    pub fn edge_ids(&self) -> impl Iterator<Item = EdgeId> {
+        (0..self.edges.len()).map(EdgeId)
+    }
+
+    /// Remove edges not satisfying the predicate. Invalidates all
+    /// previously-held [`EdgeId`]s (node ids stay stable — nodes are
+    /// never removed; rewrites orphan them instead).
+    pub fn retain_edges<F: FnMut(&Edge) -> bool>(&mut self, f: F) {
+        self.edges.retain(f);
+    }
+
+    pub fn in_edges(&self, id: NodeId) -> Vec<EdgeId> {
+        self.edge_ids().filter(|e| self.edge(*e).dst == id).collect()
+    }
+
+    pub fn out_edges(&self, id: NodeId) -> Vec<EdgeId> {
+        self.edge_ids().filter(|e| self.edge(*e).src == id).collect()
+    }
+
+    pub fn container(&self, name: &str) -> Option<&DataDecl> {
+        self.containers.get(name)
+    }
+
+    pub fn declare(&mut self, decl: DataDecl) {
+        assert!(
+            !self.containers.contains_key(&decl.name),
+            "container '{}' already declared",
+            decl.name
+        );
+        self.containers.insert(decl.name.clone(), decl);
+    }
+
+    pub fn add_symbol(&mut self, s: &str) {
+        if !self.symbols.iter().any(|x| x == s) {
+            self.symbols.push(s.to_string());
+        }
+    }
+
+    /// Find the access nodes referring to non-transient containers —
+    /// the program's external interface.
+    pub fn external_accesses(&self) -> Vec<NodeId> {
+        self.node_ids()
+            .filter(|id| match self.node(*id) {
+                Node::Access { data } => {
+                    self.containers.get(data).map(|d| !d.transient).unwrap_or(false)
+                }
+                _ => false,
+            })
+            .collect()
+    }
+
+    /// Map-entry node for a named map.
+    pub fn find_map_entry(&self, name: &str) -> Option<NodeId> {
+        self.node_ids().find(|id| match self.node(*id) {
+            Node::MapEntry { name: n, .. } => n == name,
+            _ => false,
+        })
+    }
+
+    /// Matching exit for a map entry.
+    pub fn find_map_exit(&self, entry_name: &str) -> Option<NodeId> {
+        self.node_ids().find(|id| match self.node(*id) {
+            Node::MapExit { entry } => entry == entry_name,
+            _ => false,
+        })
+    }
+
+    /// Nodes strictly inside a map scope (between entry and exit),
+    /// found by forward reachability from the entry without passing the
+    /// exit.
+    pub fn scope_nodes(&self, entry: NodeId) -> Vec<NodeId> {
+        let exit = match self.node(entry) {
+            Node::MapEntry { name, .. } => self.find_map_exit(name),
+            _ => None,
+        };
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![entry];
+        seen[entry.0] = true;
+        let mut out = Vec::new();
+        while let Some(n) = stack.pop() {
+            for e in self.out_edges(n) {
+                let d = self.edge(e).dst;
+                if Some(d) == exit || seen[d.0] {
+                    continue;
+                }
+                seen[d.0] = true;
+                out.push(d);
+                stack.push(d);
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Build a full symbol table from base bindings, resolving derived
+    /// symbols (errors if a derived division is not exact).
+    pub fn bind(&self, base: &[(&str, i64)]) -> Result<crate::symbolic::SymbolTable, String> {
+        let mut env = crate::symbolic::SymbolTable::new();
+        for (s, v) in base {
+            env.set(s, *v);
+        }
+        // derived symbols may chain; iterate to fixpoint
+        let mut remaining: Vec<&DerivedSymbol> = self.derived.iter().collect();
+        while !remaining.is_empty() {
+            let before = remaining.len();
+            remaining.retain(|d| {
+                if let Some(b) = env.get(&d.base) {
+                    if b % d.divisor != 0 {
+                        // leave in place; reported below
+                        return true;
+                    }
+                    env.set(&d.name, b / d.divisor);
+                    false
+                } else {
+                    true
+                }
+            });
+            if remaining.len() == before {
+                let d = remaining[0];
+                return Err(match env.get(&d.base) {
+                    Some(b) => format!(
+                        "derived symbol {}: {} = {b} not divisible by {}",
+                        d.name, d.base, d.divisor
+                    ),
+                    None => format!("derived symbol {}: base '{}' unbound", d.name, d.base),
+                });
+            }
+        }
+        Ok(env)
+    }
+
+    /// Is a node in the fast (multi-pumped) clock domain?
+    pub fn in_fast_domain(&self, id: NodeId) -> bool {
+        self.multipump
+            .as_ref()
+            .map(|mp| mp.fast_nodes.contains(&id))
+            .unwrap_or(false)
+    }
+
+    /// Topological order of all nodes (errors on cycles).
+    pub fn topo_order(&self) -> Result<Vec<NodeId>, String> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            indeg[e.dst.0] += 1;
+        }
+        let mut queue: Vec<NodeId> =
+            (0..n).filter(|i| indeg[*i] == 0).map(NodeId).collect();
+        let mut out = Vec::with_capacity(n);
+        while let Some(id) = queue.pop() {
+            out.push(id);
+            for e in self.out_edges(id) {
+                let d = self.edge(e).dst;
+                indeg[d.0] -= 1;
+                if indeg[d.0] == 0 {
+                    queue.push(d);
+                }
+            }
+        }
+        if out.len() == n {
+            Ok(out)
+        } else {
+            Err(format!("graph '{}' contains a cycle", self.name))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::node::MapSchedule;
+    use crate::ir::tasklet::{TaskExpr, Tasklet};
+    use crate::ir::types::{ContainerKind, DType, Storage, VecType};
+    use crate::symbolic::{Expr, Subset};
+
+    fn decl(name: &str) -> DataDecl {
+        DataDecl {
+            name: name.into(),
+            kind: ContainerKind::Array,
+            vtype: VecType::scalar(DType::F32),
+            shape: vec![Expr::sym("N")],
+            storage: Storage::Hbm { bank: 0 },
+            transient: false,
+        }
+    }
+
+    /// x --> map_entry --> tasklet --> map_exit --> z
+    fn tiny() -> (Sdfg, NodeId, NodeId, NodeId, NodeId, NodeId) {
+        let mut g = Sdfg::new("tiny");
+        g.declare(decl("x"));
+        g.declare(decl("z"));
+        g.add_symbol("N");
+        let x = g.add_node(Node::Access { data: "x".into() });
+        let z = g.add_node(Node::Access { data: "z".into() });
+        let me = g.add_node(Node::MapEntry {
+            name: "m".into(),
+            params: vec!["i".into()],
+            ranges: vec![crate::symbolic::Range::upto_sym("N")],
+            schedule: MapSchedule::Pipeline,
+        });
+        let t = g.add_node(Node::Tasklet(Tasklet::new(
+            "copy",
+            vec![("out", TaskExpr::input("in"))],
+        )));
+        let mx = g.add_node(Node::MapExit { entry: "m".into() });
+        g.add_edge(x, me, Memlet::new("x", Subset::new(vec![crate::symbolic::Range::upto_sym("N")])));
+        g.add_edge(me, t, Memlet::element("x", Expr::sym("i")).with_dst("in"));
+        g.add_edge(t, mx, Memlet::element("z", Expr::sym("i")).with_src("out"));
+        g.add_edge(mx, z, Memlet::new("z", Subset::new(vec![crate::symbolic::Range::upto_sym("N")])));
+        (g, x, z, me, t, mx)
+    }
+
+    #[test]
+    fn edges_and_queries() {
+        let (g, x, z, me, t, mx) = tiny();
+        assert_eq!(g.out_edges(x).len(), 1);
+        assert_eq!(g.in_edges(z).len(), 1);
+        assert_eq!(g.find_map_entry("m"), Some(me));
+        assert_eq!(g.find_map_exit("m"), Some(mx));
+        assert_eq!(g.scope_nodes(me), vec![t]);
+        assert_eq!(g.external_accesses(), vec![x, z]);
+    }
+
+    #[test]
+    fn topo_order_linear() {
+        let (g, x, z, me, t, mx) = tiny();
+        let order = g.topo_order().unwrap();
+        let pos = |id: NodeId| order.iter().position(|n| *n == id).unwrap();
+        assert!(pos(x) < pos(me));
+        assert!(pos(me) < pos(t));
+        assert!(pos(t) < pos(mx));
+        assert!(pos(mx) < pos(z));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let (mut g, x, _, me, _, _) = tiny();
+        g.add_edge(me, x, Memlet::new("x", Subset::all1(1)));
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "already declared")]
+    fn duplicate_container_panics() {
+        let mut g = Sdfg::new("dup");
+        g.declare(decl("x"));
+        g.declare(decl("x"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Memlets: data-movement edges.
+//!
+//! A memlet names the container it moves data of, the symbolic subset
+//! accessed *per iteration of the surrounding scope*, and the connector
+//! names on both endpoints. All feasibility checks of the paper's
+//! transformation are phrased over memlets.
+
+use crate::symbolic::{Expr, Subset, SymbolTable};
+
+/// A data-movement edge annotation.
+#[derive(Clone, Debug)]
+pub struct Memlet {
+    /// Name of the data container being moved (or the stream).
+    pub data: String,
+    /// Subset accessed (per innermost scope iteration).
+    pub subset: Subset,
+    /// Source connector name (None for plain access-node endpoints).
+    pub src_conn: Option<String>,
+    /// Destination connector name.
+    pub dst_conn: Option<String>,
+    /// Dynamic (data-dependent) access — poisons vectorizability.
+    pub dynamic: bool,
+}
+
+impl Memlet {
+    pub fn new(data: &str, subset: Subset) -> Self {
+        Memlet { data: data.to_string(), subset, src_conn: None, dst_conn: None, dynamic: false }
+    }
+
+    /// Simple 1-D element memlet `data[idx]`.
+    pub fn element(data: &str, idx: Expr) -> Self {
+        Memlet::new(data, Subset::index1(idx))
+    }
+
+    pub fn with_dst(mut self, conn: &str) -> Self {
+        self.dst_conn = Some(conn.to_string());
+        self
+    }
+
+    pub fn with_src(mut self, conn: &str) -> Self {
+        self.src_conn = Some(conn.to_string());
+        self
+    }
+
+    pub fn dynamic(mut self) -> Self {
+        self.dynamic = true;
+        self
+    }
+
+    /// Volume in elements per scope iteration (concrete).
+    pub fn volume(&self, env: &SymbolTable) -> Option<i64> {
+        self.subset.volume(env)
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}{}", self.data, self.subset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_memlet() {
+        let m = Memlet::element("x", Expr::sym("i")).with_dst("x_in");
+        assert_eq!(m.label(), "x[i]");
+        assert_eq!(m.dst_conn.as_deref(), Some("x_in"));
+        assert!(!m.dynamic);
+    }
+
+    #[test]
+    fn volume() {
+        let m = Memlet::new("A", Subset::all1(64));
+        assert_eq!(m.volume(&SymbolTable::new()), Some(64));
+    }
+
+    #[test]
+    fn dynamic_flag() {
+        let m = Memlet::element("x", Expr::opaque("p[i]")).dynamic();
+        assert!(m.dynamic);
+    }
+}

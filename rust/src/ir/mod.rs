@@ -1,0 +1,30 @@
+//! SDFG-like data-centric intermediate representation.
+//!
+//! The IR mirrors the subset of DaCe the paper relies on: *data
+//! containers* (random-access arrays, streams, scalars) referenced by
+//! *access nodes*, *map scopes* expressing parametric parallelism,
+//! *tasklets* holding the computation as an evaluable expression AST,
+//! *library nodes* for the two structured accelerators the evaluation
+//! uses (systolic GEMM chains, stencil stages), and *memlets* — edges
+//! annotated with symbolic subsets describing every byte that moves.
+//!
+//! Transformations ([`crate::transforms`]) are checked graph rewrites
+//! over this IR; code generation ([`crate::codegen`]) lowers it to a
+//! design netlist that the hardware model prices and the simulator
+//! executes.
+
+pub mod builder;
+pub mod graph;
+pub mod memlet;
+pub mod node;
+pub mod printer;
+pub mod tasklet;
+pub mod types;
+pub mod validate;
+
+pub use builder::GraphBuilder;
+pub use graph::{EdgeId, MultipumpInfo, NodeId, PumpMode, Sdfg};
+pub use memlet::Memlet;
+pub use node::{CdcKind, LibraryOp, MapSchedule, Node, StencilKind};
+pub use tasklet::{BinOp, TaskExpr, Tasklet, UnOp};
+pub use types::{ClockDomain, ContainerKind, DType, DataDecl, Storage, VecType};

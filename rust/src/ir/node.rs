@@ -1,0 +1,171 @@
+//! IR node kinds.
+
+use super::tasklet::Tasklet;
+use crate::symbolic::Range;
+
+/// How a map scope is scheduled onto hardware.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MapSchedule {
+    /// One deep pipeline iterating the range (II=1 when feasible).
+    Pipeline,
+    /// Fully unrolled: one hardware instance per iteration (PEs).
+    Unroll,
+    /// Sequential loop (no pipelining) — dependent iterations.
+    Sequential,
+}
+
+/// Stencil flavors used by the evaluation (StencilFlow §4.3).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum StencilKind {
+    /// 7-point Jacobi: `w * (sum of 6 face neighbours + center)`-style
+    /// update (5 adds + 1 const mul per output in our calibration).
+    Jacobi3D,
+    /// Diffusion: weighted center + neighbour terms (higher intensity).
+    Diffusion3D,
+}
+
+impl StencilKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StencilKind::Jacobi3D => "jacobi3d",
+            StencilKind::Diffusion3D => "diffusion3d",
+        }
+    }
+}
+
+/// Structured library nodes. DaCe expands library nodes during lowering;
+/// we do the same in `codegen::expand`. They let the evaluation express
+/// the two big accelerators without hand-drawing hundreds of IR nodes.
+#[derive(Clone, Debug)]
+pub enum LibraryOp {
+    /// 1-D systolic array for communication-avoiding GEMM [10]:
+    /// `pes` processing elements, each `vec_width` lanes wide, with
+    /// memory tiles of `tile_m × tile_n`. Feeders/drainers at the ends.
+    SystolicGemm { pes: usize, vec_width: usize, tile_m: usize, tile_n: usize },
+    /// One stencil stage of a StencilFlow chain, spatially vectorized
+    /// `vec_width` ways over a `nx × ny × nz` domain.
+    StencilStage { kind: StencilKind, vec_width: usize },
+    /// Streaming Floyd–Warshall datapath (paper §4.4): the program that
+    /// cannot be traditionally vectorized. `lanes` is the external feed
+    /// width (raised by throughput-mode multi-pumping).
+    FloydWarshall { lanes: usize },
+}
+
+impl LibraryOp {
+    pub fn name(&self) -> String {
+        match self {
+            LibraryOp::SystolicGemm { pes, vec_width, .. } => {
+                format!("systolic_gemm_p{pes}_w{vec_width}")
+            }
+            LibraryOp::StencilStage { kind, vec_width } => {
+                format!("{}_w{vec_width}", kind.name())
+            }
+            LibraryOp::FloydWarshall { lanes } => format!("floyd_warshall_w{lanes}"),
+        }
+    }
+}
+
+/// The three AXI4-Stream infrastructure module types the transformation
+/// injects at clock-domain crossings (paper §3.2, "plumbing" modules).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CdcKind {
+    /// Synchronizes a stream between the two clock domains.
+    Synchronizer,
+    /// Divides one wide transaction into `factor` narrow ones
+    /// (entering the multi-pumped domain).
+    Issuer,
+    /// Packs `factor` narrow transactions into one wide one
+    /// (leaving the multi-pumped domain).
+    Packer,
+}
+
+impl CdcKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CdcKind::Synchronizer => "axis_clock_converter",
+            CdcKind::Issuer => "axis_dwidth_issuer",
+            CdcKind::Packer => "axis_dwidth_packer",
+        }
+    }
+}
+
+/// A node of the dataflow graph.
+#[derive(Clone, Debug)]
+pub enum Node {
+    /// Reference to a declared data container.
+    Access { data: String },
+    /// Opens a parametric scope: `params[i]` ranges over `ranges[i]`.
+    MapEntry { name: String, params: Vec<String>, ranges: Vec<Range>, schedule: MapSchedule },
+    /// Closes the matching scope.
+    MapExit { entry: String },
+    /// Computational leaf.
+    Tasklet(Tasklet),
+    /// Structured accelerator (expanded by codegen).
+    Library { name: String, op: LibraryOp },
+    /// Reader module injected by the streaming transformation: reads
+    /// `data` in linear order and pushes to `stream`.
+    Reader { name: String, data: String, stream: String },
+    /// Writer module: pops from `stream` and writes `data` linearly.
+    Writer { name: String, data: String, stream: String },
+    /// Clock-domain-crossing plumbing between two stream containers.
+    Cdc { name: String, kind: CdcKind, input: String, output: String, factor: usize },
+}
+
+impl Node {
+    pub fn label(&self) -> String {
+        match self {
+            Node::Access { data } => data.clone(),
+            Node::MapEntry { name, .. } => format!("{name}[entry]"),
+            Node::MapExit { entry } => format!("{entry}[exit]"),
+            Node::Tasklet(t) => t.name.clone(),
+            Node::Library { name, .. } => name.clone(),
+            Node::Reader { name, .. } => name.clone(),
+            Node::Writer { name, .. } => name.clone(),
+            Node::Cdc { name, .. } => name.clone(),
+        }
+    }
+
+    pub fn is_access(&self) -> bool {
+        matches!(self, Node::Access { .. })
+    }
+
+    pub fn is_compute(&self) -> bool {
+        matches!(self, Node::Tasklet(_) | Node::Library { .. })
+    }
+
+    pub fn is_io_module(&self) -> bool {
+        matches!(self, Node::Reader { .. } | Node::Writer { .. })
+    }
+
+    pub fn is_cdc(&self) -> bool {
+        matches!(self, Node::Cdc { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::tasklet::TaskExpr;
+
+    #[test]
+    fn labels() {
+        let a = Node::Access { data: "x".into() };
+        assert_eq!(a.label(), "x");
+        assert!(a.is_access());
+        let t = Node::Tasklet(Tasklet::new("add", vec![("z", TaskExpr::input("x"))]));
+        assert!(t.is_compute());
+        assert_eq!(t.label(), "add");
+        let l = Node::Library {
+            name: "g".into(),
+            op: LibraryOp::SystolicGemm { pes: 32, vec_width: 16, tile_m: 256, tile_n: 512 },
+        };
+        assert!(l.is_compute());
+        assert_eq!(
+            match &l {
+                Node::Library { op, .. } => op.name(),
+                _ => unreachable!(),
+            },
+            "systolic_gemm_p32_w16"
+        );
+    }
+}

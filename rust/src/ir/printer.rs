@@ -1,0 +1,135 @@
+//! Text and Graphviz rendering of SDFGs (debugging / documentation).
+
+use super::graph::Sdfg;
+use super::node::Node;
+
+/// Compact textual dump: containers, then nodes, then edges.
+pub fn to_text(g: &Sdfg) -> String {
+    let mut s = format!("sdfg {} {{\n", g.name);
+    if !g.symbols.is_empty() {
+        s.push_str(&format!("  symbols: {}\n", g.symbols.join(", ")));
+    }
+    if let Some(r) = &g.repeat {
+        s.push_str(&format!("  repeat {} in {}\n", r.param, r.range));
+    }
+    for (name, d) in &g.containers {
+        s.push_str(&format!(
+            "  {} {}: {}x{} lanes={} @{:?}{}\n",
+            match d.kind {
+                super::types::ContainerKind::Array => "array",
+                super::types::ContainerKind::Stream => "stream",
+                super::types::ContainerKind::Scalar => "scalar",
+            },
+            name,
+            d.shape.iter().map(|e| e.to_string()).collect::<Vec<_>>().join("x"),
+            d.vtype.base.name(),
+            d.vtype.lanes,
+            d.storage,
+            if d.transient { " transient" } else { "" },
+        ));
+    }
+    for id in g.node_ids() {
+        s.push_str(&format!("  n{}: {}\n", id.0, describe(g.node(id))));
+    }
+    for eid in g.edge_ids() {
+        let e = g.edge(eid);
+        s.push_str(&format!(
+            "  n{} -> n{} : {}{}{}\n",
+            e.src.0,
+            e.dst.0,
+            e.memlet.label(),
+            e.memlet
+                .src_conn
+                .as_ref()
+                .map(|c| format!(" src={c}"))
+                .unwrap_or_default(),
+            e.memlet
+                .dst_conn
+                .as_ref()
+                .map(|c| format!(" dst={c}"))
+                .unwrap_or_default(),
+        ));
+    }
+    s.push_str("}\n");
+    s
+}
+
+fn describe(n: &Node) -> String {
+    match n {
+        Node::Access { data } => format!("access {data}"),
+        Node::MapEntry { name, params, ranges, schedule } => format!(
+            "map {name} [{}] {:?}",
+            params
+                .iter()
+                .zip(ranges)
+                .map(|(p, r)| format!("{p}={r}"))
+                .collect::<Vec<_>>()
+                .join(", "),
+            schedule
+        ),
+        Node::MapExit { entry } => format!("endmap {entry}"),
+        Node::Tasklet(t) => format!(
+            "tasklet {} ({} -> {})",
+            t.name,
+            t.input_connectors().join(","),
+            t.output_connectors().join(",")
+        ),
+        Node::Library { name, op } => format!("library {name} ({})", op.name()),
+        Node::Reader { name, data, stream } => format!("reader {name}: {data} -> {stream}"),
+        Node::Writer { name, data, stream } => format!("writer {name}: {stream} -> {data}"),
+        Node::Cdc { name, kind, input, output, factor } => {
+            format!("cdc {name} ({}, M={factor}): {input} -> {output}", kind.name())
+        }
+    }
+}
+
+/// Graphviz dot output.
+pub fn to_dot(g: &Sdfg) -> String {
+    let mut s = format!("digraph \"{}\" {{\n  rankdir=TB;\n", g.name);
+    for id in g.node_ids() {
+        let (shape, label) = match g.node(id) {
+            Node::Access { data } => ("ellipse", data.clone()),
+            Node::MapEntry { name, .. } => ("trapezium", format!("{name} entry")),
+            Node::MapExit { entry } => ("invtrapezium", format!("{entry} exit")),
+            Node::Tasklet(t) => ("box", t.name.clone()),
+            Node::Library { name, .. } => ("component", name.clone()),
+            Node::Reader { name, .. } => ("cds", name.clone()),
+            Node::Writer { name, .. } => ("cds", name.clone()),
+            Node::Cdc { name, .. } => ("hexagon", name.clone()),
+        };
+        s.push_str(&format!("  n{} [shape={shape}, label=\"{label}\"];\n", id.0));
+    }
+    for eid in g.edge_ids() {
+        let e = g.edge(eid);
+        s.push_str(&format!(
+            "  n{} -> n{} [label=\"{}\"];\n",
+            e.src.0,
+            e.dst.0,
+            e.memlet.label().replace('"', "'")
+        ));
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::vecadd_sdfg;
+
+    #[test]
+    fn text_mentions_everything() {
+        let t = to_text(&vecadd_sdfg(2));
+        for needle in ["sdfg vecadd_vec", "array x", "map vadd", "tasklet add", "z[i]"] {
+            assert!(t.contains(needle), "missing {needle} in:\n{t}");
+        }
+    }
+
+    #[test]
+    fn dot_is_wellformed() {
+        let d = to_dot(&vecadd_sdfg(1));
+        assert!(d.starts_with("digraph"));
+        assert!(d.contains("trapezium"));
+        assert!(d.trim_end().ends_with('}'));
+    }
+}

@@ -1,0 +1,322 @@
+//! Tasklets: the computational leaves of the IR.
+//!
+//! A tasklet owns an expression AST per output connector. The AST is
+//! (a) evaluated on real `f32` lanes by the simulator, (b) priced by the
+//! resource cost model (`hw::cost` counts adds/muls/...), and (c)
+//! pretty-printed by the HLS code generator. Keeping one representation
+//! for all three uses guarantees the simulated design, the resource
+//! estimate, and the emitted code never drift apart.
+
+use std::collections::BTreeMap;
+
+/// Binary operations the cost model knows how to price on DSPs/LUTs.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+}
+
+/// Unary operations.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum UnOp {
+    Neg,
+    Abs,
+}
+
+/// Expression AST over input connector names.
+#[derive(Clone, PartialEq, Debug)]
+pub enum TaskExpr {
+    /// Value read from an input connector.
+    In(String),
+    /// f32 literal.
+    Const(f32),
+    Bin(BinOp, Box<TaskExpr>, Box<TaskExpr>),
+    Un(UnOp, Box<TaskExpr>),
+    /// Fused multiply-add a*b + c (one DSP cascade on the fabric).
+    MulAdd(Box<TaskExpr>, Box<TaskExpr>, Box<TaskExpr>),
+}
+
+impl TaskExpr {
+    pub fn input(name: &str) -> TaskExpr {
+        TaskExpr::In(name.to_string())
+    }
+
+    pub fn c(v: f32) -> TaskExpr {
+        TaskExpr::Const(v)
+    }
+
+    pub fn add(self, rhs: TaskExpr) -> TaskExpr {
+        TaskExpr::Bin(BinOp::Add, Box::new(self), Box::new(rhs))
+    }
+
+    pub fn sub(self, rhs: TaskExpr) -> TaskExpr {
+        TaskExpr::Bin(BinOp::Sub, Box::new(self), Box::new(rhs))
+    }
+
+    pub fn mul(self, rhs: TaskExpr) -> TaskExpr {
+        TaskExpr::Bin(BinOp::Mul, Box::new(self), Box::new(rhs))
+    }
+
+    pub fn min(self, rhs: TaskExpr) -> TaskExpr {
+        TaskExpr::Bin(BinOp::Min, Box::new(self), Box::new(rhs))
+    }
+
+    pub fn max(self, rhs: TaskExpr) -> TaskExpr {
+        TaskExpr::Bin(BinOp::Max, Box::new(self), Box::new(rhs))
+    }
+
+    pub fn muladd(a: TaskExpr, b: TaskExpr, c: TaskExpr) -> TaskExpr {
+        TaskExpr::MulAdd(Box::new(a), Box::new(b), Box::new(c))
+    }
+
+    /// Evaluate on scalar f32 inputs.
+    pub fn eval(&self, inputs: &BTreeMap<String, f32>) -> f32 {
+        match self {
+            TaskExpr::In(name) => *inputs
+                .get(name)
+                .unwrap_or_else(|| panic!("tasklet input '{name}' not bound")),
+            TaskExpr::Const(v) => *v,
+            TaskExpr::Bin(op, a, b) => {
+                let (x, y) = (a.eval(inputs), b.eval(inputs));
+                match op {
+                    BinOp::Add => x + y,
+                    BinOp::Sub => x - y,
+                    BinOp::Mul => x * y,
+                    BinOp::Div => x / y,
+                    BinOp::Min => x.min(y),
+                    BinOp::Max => x.max(y),
+                }
+            }
+            TaskExpr::Un(op, a) => {
+                let x = a.eval(inputs);
+                match op {
+                    UnOp::Neg => -x,
+                    UnOp::Abs => x.abs(),
+                }
+            }
+            TaskExpr::MulAdd(a, b, c) => a.eval(inputs) * b.eval(inputs) + c.eval(inputs),
+        }
+    }
+
+    /// Count of (adds, muls, divs, minmax) — consumed by the cost model
+    /// and the GOp/s accounting. MulAdd counts one add + one mul.
+    pub fn op_counts(&self) -> OpCounts {
+        let mut c = OpCounts::default();
+        self.count_into(&mut c);
+        c
+    }
+
+    fn count_into(&self, c: &mut OpCounts) {
+        match self {
+            TaskExpr::In(_) | TaskExpr::Const(_) => {}
+            TaskExpr::Bin(op, a, b) => {
+                a.count_into(c);
+                b.count_into(c);
+                match op {
+                    BinOp::Add | BinOp::Sub => c.adds += 1,
+                    BinOp::Mul => c.muls += 1,
+                    BinOp::Div => c.divs += 1,
+                    BinOp::Min | BinOp::Max => c.minmax += 1,
+                }
+            }
+            TaskExpr::Un(_, a) => {
+                a.count_into(c);
+                c.adds += 1; // neg/abs ≈ one adder-class op
+            }
+            TaskExpr::MulAdd(a, b, cc) => {
+                a.count_into(c);
+                b.count_into(c);
+                cc.count_into(c);
+                c.adds += 1;
+                c.muls += 1;
+            }
+        }
+    }
+
+    /// Input connectors referenced by this expression.
+    pub fn inputs(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        self.inputs_into(&mut v);
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    fn inputs_into(&self, v: &mut Vec<String>) {
+        match self {
+            TaskExpr::In(n) => v.push(n.clone()),
+            TaskExpr::Const(_) => {}
+            TaskExpr::Bin(_, a, b) => {
+                a.inputs_into(v);
+                b.inputs_into(v);
+            }
+            TaskExpr::Un(_, a) => a.inputs_into(v),
+            TaskExpr::MulAdd(a, b, c) => {
+                a.inputs_into(v);
+                b.inputs_into(v);
+                c.inputs_into(v);
+            }
+        }
+    }
+
+    /// C expression string for HLS emission.
+    pub fn to_c(&self) -> String {
+        match self {
+            TaskExpr::In(n) => n.clone(),
+            TaskExpr::Const(v) => format!("{v:?}f"),
+            TaskExpr::Bin(op, a, b) => {
+                let (x, y) = (a.to_c(), b.to_c());
+                match op {
+                    BinOp::Add => format!("({x} + {y})"),
+                    BinOp::Sub => format!("({x} - {y})"),
+                    BinOp::Mul => format!("({x} * {y})"),
+                    BinOp::Div => format!("({x} / {y})"),
+                    BinOp::Min => format!("hlslib::min({x}, {y})"),
+                    BinOp::Max => format!("hlslib::max({x}, {y})"),
+                }
+            }
+            TaskExpr::Un(op, a) => {
+                let x = a.to_c();
+                match op {
+                    UnOp::Neg => format!("(-{x})"),
+                    UnOp::Abs => format!("hlslib::abs({x})"),
+                }
+            }
+            TaskExpr::MulAdd(a, b, c) => {
+                format!("({} * {} + {})", a.to_c(), b.to_c(), c.to_c())
+            }
+        }
+    }
+}
+
+/// Operation counts of one tasklet evaluation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub adds: usize,
+    pub muls: usize,
+    pub divs: usize,
+    pub minmax: usize,
+}
+
+impl OpCounts {
+    pub fn total_flops(&self) -> usize {
+        self.adds + self.muls + self.divs + self.minmax
+    }
+}
+
+/// A tasklet: named input/output connectors and one expression per
+/// output connector.
+#[derive(Clone, Debug)]
+pub struct Tasklet {
+    pub name: String,
+    pub outputs: Vec<(String, TaskExpr)>,
+}
+
+impl Tasklet {
+    pub fn new(name: &str, outputs: Vec<(&str, TaskExpr)>) -> Self {
+        Tasklet {
+            name: name.to_string(),
+            outputs: outputs.into_iter().map(|(n, e)| (n.to_string(), e)).collect(),
+        }
+    }
+
+    /// All referenced input connectors across outputs.
+    pub fn input_connectors(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.outputs.iter().flat_map(|(_, e)| e.inputs()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    pub fn output_connectors(&self) -> Vec<String> {
+        self.outputs.iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    /// Aggregate op counts over all outputs.
+    pub fn op_counts(&self) -> OpCounts {
+        let mut acc = OpCounts::default();
+        for (_, e) in &self.outputs {
+            let c = e.op_counts();
+            acc.adds += c.adds;
+            acc.muls += c.muls;
+            acc.divs += c.divs;
+            acc.minmax += c.minmax;
+        }
+        acc
+    }
+
+    /// Evaluate all outputs given scalar inputs.
+    pub fn eval(&self, inputs: &BTreeMap<String, f32>) -> BTreeMap<String, f32> {
+        self.outputs.iter().map(|(n, e)| (n.clone(), e.eval(inputs))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(pairs: &[(&str, f32)]) -> BTreeMap<String, f32> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn eval_vecadd() {
+        let t = Tasklet::new("add", vec![("z", TaskExpr::input("x").add(TaskExpr::input("y")))]);
+        let out = t.eval(&env(&[("x", 2.0), ("y", 3.0)]));
+        assert_eq!(out["z"], 5.0);
+    }
+
+    #[test]
+    fn eval_muladd_and_minmax() {
+        let e = TaskExpr::muladd(
+            TaskExpr::input("a"),
+            TaskExpr::input("b"),
+            TaskExpr::input("c"),
+        )
+        .min(TaskExpr::c(10.0));
+        assert_eq!(e.eval(&env(&[("a", 2.0), ("b", 3.0), ("c", 4.0)])), 10.0);
+        assert_eq!(e.eval(&env(&[("a", 1.0), ("b", 2.0), ("c", 3.0)])), 5.0);
+    }
+
+    #[test]
+    fn op_counts_accumulate() {
+        // FW relax: min(d_ij, d_ik + d_kj) = 1 add + 1 minmax
+        let relax = TaskExpr::input("dij")
+            .min(TaskExpr::input("dik").add(TaskExpr::input("dkj")));
+        let c = relax.op_counts();
+        assert_eq!(c.adds, 1);
+        assert_eq!(c.minmax, 1);
+        assert_eq!(c.total_flops(), 2);
+        // MAC: 1 add + 1 mul
+        let mac = TaskExpr::muladd(
+            TaskExpr::input("a"),
+            TaskExpr::input("b"),
+            TaskExpr::input("acc"),
+        );
+        assert_eq!(mac.op_counts(), OpCounts { adds: 1, muls: 1, divs: 0, minmax: 0 });
+    }
+
+    #[test]
+    fn inputs_deduplicated() {
+        let e = TaskExpr::input("x").add(TaskExpr::input("x")).mul(TaskExpr::input("y"));
+        assert_eq!(e.inputs(), vec!["x".to_string(), "y".to_string()]);
+    }
+
+    #[test]
+    fn c_emission() {
+        let e = TaskExpr::input("x").add(TaskExpr::c(1.0)).min(TaskExpr::input("y"));
+        let s = e.to_c();
+        assert!(s.contains("hlslib::min"), "{s}");
+        assert!(s.contains("(x + 1.0f)"), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "not bound")]
+    fn unbound_input_panics() {
+        TaskExpr::input("missing").eval(&BTreeMap::new());
+    }
+}

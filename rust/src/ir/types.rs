@@ -1,0 +1,181 @@
+//! Data types, container declarations and storage locations.
+
+use crate::symbolic::Expr;
+
+/// Element data types used by the evaluation (f32 everywhere in the
+/// paper; integers appear in index computations and tests).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float",
+            DType::I32 => "int",
+            DType::U8 => "unsigned char",
+        }
+    }
+}
+
+/// A (possibly) vectorized element type: `lanes` elements of `base` per
+/// transaction. Traditional vectorization raises `lanes`; multi-pumping
+/// in resource mode *lowers* the internal lanes while the external
+/// lanes stay wide.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct VecType {
+    pub base: DType,
+    pub lanes: usize,
+}
+
+impl VecType {
+    pub fn scalar(base: DType) -> Self {
+        VecType { base, lanes: 1 }
+    }
+
+    pub fn of(base: DType, lanes: usize) -> Self {
+        assert!(lanes >= 1);
+        VecType { base, lanes }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.base.bytes() * 8 * self.lanes
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.base.bytes() * self.lanes
+    }
+
+    pub fn cpp_name(&self) -> String {
+        if self.lanes == 1 {
+            self.base.name().to_string()
+        } else {
+            format!("hlslib::DataPack<{}, {}>", self.base.name(), self.lanes)
+        }
+    }
+}
+
+/// Where a container lives. The paper's configuration maps each global
+/// array to its own HBM bank (§4: "Direct access to HBM banks").
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Storage {
+    /// Off-chip HBM; `bank` is the exclusive bank index.
+    Hbm { bank: usize },
+    /// On-chip block RAM (line buffers, tiles).
+    Bram,
+    /// FIFO stream between modules.
+    Stream { depth: usize },
+    /// Single register value.
+    Register,
+}
+
+impl Storage {
+    pub fn is_stream(&self) -> bool {
+        matches!(self, Storage::Stream { .. })
+    }
+
+    pub fn is_offchip(&self) -> bool {
+        matches!(self, Storage::Hbm { .. })
+    }
+}
+
+/// Random-access array vs. FIFO vs. scalar — the container kind
+/// determines which access patterns are legal.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum ContainerKind {
+    Array,
+    Stream,
+    Scalar,
+}
+
+/// Declaration of a named data container.
+#[derive(Clone, Debug)]
+pub struct DataDecl {
+    pub name: String,
+    pub kind: ContainerKind,
+    pub vtype: VecType,
+    /// Symbolic shape (elements of `vtype`, i.e. vectors not scalars).
+    pub shape: Vec<Expr>,
+    pub storage: Storage,
+    /// Is this container visible outside the SDFG (kernel argument)?
+    pub transient: bool,
+}
+
+impl DataDecl {
+    /// Total bytes under concrete bindings (None if symbolic).
+    pub fn bytes(&self, env: &crate::symbolic::SymbolTable) -> Option<usize> {
+        let mut n: i64 = 1;
+        for d in &self.shape {
+            n = n.checked_mul(d.eval(env)?)?;
+        }
+        Some(n as usize * self.vtype.bytes())
+    }
+}
+
+/// Clock domain tag on modules of a design. `Slow` is the shell clock
+/// CL0; `Fast { factor }` is the multi-pumped domain CL1 = factor·CL0.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum ClockDomain {
+    Slow,
+    Fast { factor: usize },
+}
+
+impl ClockDomain {
+    pub fn factor(&self) -> usize {
+        match self {
+            ClockDomain::Slow => 1,
+            ClockDomain::Fast { factor } => *factor,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbolic::SymbolTable;
+
+    #[test]
+    fn vectype_sizes() {
+        let v = VecType::of(DType::F32, 16);
+        assert_eq!(v.bits(), 512);
+        assert_eq!(v.bytes(), 64);
+        assert_eq!(VecType::scalar(DType::U8).bits(), 8);
+    }
+
+    #[test]
+    fn cpp_names() {
+        assert_eq!(VecType::scalar(DType::F32).cpp_name(), "float");
+        assert!(VecType::of(DType::F32, 4).cpp_name().contains("DataPack<float, 4>"));
+    }
+
+    #[test]
+    fn decl_bytes() {
+        let d = DataDecl {
+            name: "x".into(),
+            kind: ContainerKind::Array,
+            vtype: VecType::of(DType::F32, 4),
+            shape: vec![Expr::sym("N")],
+            storage: Storage::Hbm { bank: 0 },
+            transient: false,
+        };
+        let env = SymbolTable::new().with("N", 100);
+        assert_eq!(d.bytes(&env), Some(100 * 16));
+        assert_eq!(d.bytes(&SymbolTable::new()), None);
+    }
+
+    #[test]
+    fn clock_domain_factor() {
+        assert_eq!(ClockDomain::Slow.factor(), 1);
+        assert_eq!(ClockDomain::Fast { factor: 2 }.factor(), 2);
+    }
+}

@@ -1,0 +1,233 @@
+//! Structural validation of SDFGs.
+//!
+//! Run before and after every transformation (the pass manager calls
+//! [`validate`]) so a rewrite can never silently corrupt the graph.
+
+use super::graph::{NodeId, Sdfg};
+use super::node::Node;
+
+/// A validation failure with its location.
+#[derive(Clone, Debug, thiserror::Error)]
+#[error("validation of '{sdfg}' failed at {loc}: {reason}")]
+pub struct ValidationError {
+    pub sdfg: String,
+    pub loc: String,
+    pub reason: String,
+}
+
+fn err(g: &Sdfg, loc: impl Into<String>, reason: impl Into<String>) -> ValidationError {
+    ValidationError { sdfg: g.name.clone(), loc: loc.into(), reason: reason.into() }
+}
+
+/// Validate graph structure. Checks:
+/// 1. every edge endpoint exists and every memlet names a declared
+///    container;
+/// 2. every map entry has exactly one matching exit (and vice versa);
+/// 3. tasklet input/output connectors are all connected;
+/// 4. access nodes to `Array` containers are sources/sinks of memlets
+///    naming that container;
+/// 5. the graph is acyclic;
+/// 6. map parameters do not shadow program symbols.
+pub fn validate(g: &Sdfg) -> Result<(), ValidationError> {
+    // 1. memlets name declared containers
+    for (i, e) in g.edges.iter().enumerate() {
+        if e.src.0 >= g.nodes.len() || e.dst.0 >= g.nodes.len() {
+            return Err(err(g, format!("edge {i}"), "dangling endpoint"));
+        }
+        if !g.containers.contains_key(&e.memlet.data) {
+            return Err(err(
+                g,
+                format!("edge {i}"),
+                format!("memlet names undeclared container '{}'", e.memlet.data),
+            ));
+        }
+    }
+
+    // 2. map entry/exit pairing
+    for id in g.node_ids() {
+        match g.node(id) {
+            Node::MapEntry { name, params, ranges, .. } => {
+                if params.len() != ranges.len() {
+                    return Err(err(
+                        g,
+                        format!("map '{name}'"),
+                        "params/ranges arity mismatch",
+                    ));
+                }
+                let exits: Vec<NodeId> = g
+                    .node_ids()
+                    .filter(|n| matches!(g.node(*n), Node::MapExit { entry } if entry == name))
+                    .collect();
+                if exits.len() != 1 {
+                    return Err(err(
+                        g,
+                        format!("map '{name}'"),
+                        format!("{} exits (expected 1)", exits.len()),
+                    ));
+                }
+                // 6. parameter shadowing
+                for p in params {
+                    if g.symbols.contains(p) {
+                        return Err(err(
+                            g,
+                            format!("map '{name}'"),
+                            format!("parameter '{p}' shadows a program symbol"),
+                        ));
+                    }
+                }
+            }
+            Node::MapExit { entry } => {
+                if g.find_map_entry(entry).is_none() {
+                    return Err(err(
+                        g,
+                        format!("exit of '{entry}'"),
+                        "no matching map entry",
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // 3. tasklet connectors fully wired
+    for id in g.node_ids() {
+        if let Node::Tasklet(t) = g.node(id) {
+            let in_conns: Vec<String> = g
+                .in_edges(id)
+                .iter()
+                .filter_map(|e| g.edge(*e).memlet.dst_conn.clone())
+                .collect();
+            for need in t.input_connectors() {
+                if !in_conns.contains(&need) {
+                    return Err(err(
+                        g,
+                        format!("tasklet '{}'", t.name),
+                        format!("input connector '{need}' unconnected"),
+                    ));
+                }
+            }
+            let out_conns: Vec<String> = g
+                .out_edges(id)
+                .iter()
+                .filter_map(|e| g.edge(*e).memlet.src_conn.clone())
+                .collect();
+            for need in t.output_connectors() {
+                if !out_conns.contains(&need) {
+                    return Err(err(
+                        g,
+                        format!("tasklet '{}'", t.name),
+                        format!("output connector '{need}' unconnected"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // 4. access nodes move their own container
+    for id in g.node_ids() {
+        if let Node::Access { data } = g.node(id) {
+            for e in g.out_edges(id).into_iter().chain(g.in_edges(id)) {
+                let m = &g.edge(e).memlet;
+                if &m.data != data {
+                    // streams may be written through foreign memlets after
+                    // streaming transformation; allow only stream decls
+                    let is_stream = g
+                        .container(&m.data)
+                        .map(|d| d.storage.is_stream())
+                        .unwrap_or(false);
+                    if !is_stream {
+                        return Err(err(
+                            g,
+                            format!("access '{data}'"),
+                            format!("edge moves foreign container '{}'", m.data),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // 5. acyclic
+    g.topo_order().map_err(|m| err(g, "graph", m))?;
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::{vecadd_sdfg, GraphBuilder};
+    use crate::ir::memlet::Memlet;
+    use crate::ir::node::MapSchedule;
+    use crate::ir::tasklet::TaskExpr;
+    use crate::symbolic::{Expr, Range, Subset};
+
+    #[test]
+    fn vecadd_validates() {
+        validate(&vecadd_sdfg(1)).unwrap();
+        validate(&vecadd_sdfg(8)).unwrap();
+    }
+
+    #[test]
+    fn unconnected_tasklet_input_caught() {
+        let mut b = GraphBuilder::new("bad");
+        b.array_f32("x", vec![Expr::sym("N")]);
+        b.array_f32("z", vec![Expr::sym("N")]);
+        let x = b.access("x");
+        let z = b.access("z");
+        let (me, mx) = b.map("m", &["i"], vec![Range::upto_sym("N")], MapSchedule::Pipeline);
+        // tasklet needs "a" and "b" but only "a" is wired
+        let t = b.tasklet1("add", "out", TaskExpr::input("a").add(TaskExpr::input("b")));
+        let all = Subset::new(vec![Range::upto_sym("N")]);
+        let elem = Subset::index1(Expr::sym("i"));
+        b.feed(x, me, t, "x", all.clone(), elem.clone(), "a");
+        b.drain(t, mx, z, "z", elem, all, "out");
+        let g = b.finish();
+        let e = validate(&g).unwrap_err();
+        assert!(e.reason.contains("'b' unconnected"), "{e}");
+    }
+
+    #[test]
+    fn undeclared_memlet_container_caught() {
+        let mut g = vecadd_sdfg(1);
+        let first = g.edges[0].clone();
+        g.edges[0] = crate::ir::graph::Edge {
+            memlet: Memlet::new("ghost", first.memlet.subset.clone()),
+            ..first
+        };
+        let e = validate(&g).unwrap_err();
+        assert!(e.reason.contains("ghost"), "{e}");
+    }
+
+    #[test]
+    fn missing_map_exit_caught() {
+        let mut b = GraphBuilder::new("noexit");
+        b.array_f32("x", vec![Expr::sym("N")]);
+        let _ = b.access("x");
+        let mut g = b.finish();
+        g.add_node(crate::ir::node::Node::MapEntry {
+            name: "m".into(),
+            params: vec!["i".into()],
+            ranges: vec![Range::upto_sym("N")],
+            schedule: MapSchedule::Pipeline,
+        });
+        let e = validate(&g).unwrap_err();
+        assert!(e.reason.contains("0 exits"), "{e}");
+    }
+
+    #[test]
+    fn param_shadowing_caught() {
+        let mut b = GraphBuilder::new("shadow");
+        b.array_f32("x", vec![Expr::sym("N")]);
+        let mut g = b.finish();
+        g.add_node(crate::ir::node::Node::MapEntry {
+            name: "m".into(),
+            params: vec!["N".into()],
+            ranges: vec![Range::upto(4)],
+            schedule: MapSchedule::Pipeline,
+        });
+        g.add_node(crate::ir::node::Node::MapExit { entry: "m".into() });
+        let e = validate(&g).unwrap_err();
+        assert!(e.reason.contains("shadows"), "{e}");
+    }
+}

@@ -1,0 +1,48 @@
+//! # temporal-vec — Temporal Vectorization / Automatic Multi-Pumping
+//!
+//! A reproduction of *"Temporal Vectorization: A Compiler Approach to
+//! Automatic Multi-Pumping"* (Johnsen et al., 2022) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper's contribution — multi-pumping as an automatic compiler
+//! optimization over a data-centric IR — is implemented in full:
+//!
+//! * [`symbolic`] — affine index expressions, ranges, intersection tests
+//!   (the machinery memlets are made of);
+//! * [`ir`] — an SDFG-like dataflow IR (containers, maps, tasklets,
+//!   streams, memlets) with a builder API and validation;
+//! * [`frontend`] — a tiny Python-like DSL lowered onto the IR;
+//! * [`analysis`] — data-movement tracing, streamability and (temporal)
+//!   vectorizability checks;
+//! * [`transforms`] — `Vectorize`, `StreamingComposition`, `MultiPump`
+//!   (resource & throughput modes) and supporting rewrites;
+//! * [`hw`] — the hardware substrate the paper ran on, as a model:
+//!   Alveo U280 SLR resource pools, per-op cost model, congestion-based
+//!   frequency model, clock domains;
+//! * [`codegen`] — design netlists plus HLS-C++/SystemVerilog/TCL text
+//!   emission (the paper's §3.3 four-file RTL kernels);
+//! * [`sim`] — a cycle-level multi-clock-domain simulator of generated
+//!   designs (FIFOs with backpressure, CDC plumbing, real f32 data);
+//! * [`runtime`] — PJRT execution of the AOT JAX/Pallas golden models;
+//! * [`coordinator`] — config system, compilation pipeline, experiment
+//!   registry regenerating every table and figure of the paper;
+//! * [`apps`] — the four evaluated applications (vector addition,
+//!   systolic matrix multiplication, Jacobi-3D / Diffusion-3D stencil
+//!   chains, Floyd–Warshall).
+//!
+//! See `DESIGN.md` for the substitution table (what the paper ran on
+//! physical hardware vs. what this repo models) and `EXPERIMENTS.md`
+//! for paper-vs-measured results.
+
+pub mod util;
+pub mod symbolic;
+pub mod ir;
+pub mod frontend;
+pub mod analysis;
+pub mod transforms;
+pub mod hw;
+pub mod codegen;
+pub mod sim;
+pub mod runtime;
+pub mod coordinator;
+pub mod apps;

@@ -1,0 +1,224 @@
+//! `tvec` — the temporal-vectorization coordinator CLI.
+//!
+//! Subcommands:
+//! * `experiment <id>` — regenerate a paper table/figure
+//!   (`table1`..`table6`, `fig4`, or `all`);
+//! * `compile <file.tv>` — compile a DSL program through the full
+//!   pipeline (vectorize → stream → multi-pump) and print the design
+//!   report + generated HLS/RTL artifacts;
+//! * `run <app>` — functionally simulate an app design on real data
+//!   and cross-check against the AOT golden model via PJRT;
+//! * `report` — print the device model (Table 1).
+
+use temporal_vec::coordinator::{compile, BuildSpec};
+use temporal_vec::ir::PumpMode;
+use temporal_vec::runtime::{artifact, GoldenRunner};
+use temporal_vec::sim::{run_functional, Hbm};
+use temporal_vec::util::cli::Cli;
+use temporal_vec::util::Rng;
+use temporal_vec::{apps, codegen};
+
+fn main() {
+    let cli = Cli::new("tvec", "temporal vectorization / automatic multi-pumping")
+        .subcommand("experiment", "regenerate a paper table or figure")
+        .subcommand("compile", "compile a DSL program and print reports")
+        .subcommand("run", "simulate an app and check against the golden model")
+        .subcommand("report", "print the device model (Table 1)")
+        .opt_default("seed", "P&R jitter seed", "1")
+        .opt("config", "experiment config file (see configs/)")
+        .opt("pump", "pumping factor for compile/run (e.g. 2)")
+        .opt_default("mode", "pump mode: resource|throughput", "resource")
+        .opt("n", "problem size override")
+        .flag("emit", "write generated HLS/RTL text files to ./generated")
+        .flag("verbose", "print pass logs");
+    let args = cli.parse_env();
+    let seed = args.get_u64("seed").unwrap_or(1);
+
+    let result = match args.subcommand.as_deref() {
+        Some("experiment") => cmd_experiment(&args, seed),
+        Some("compile") => cmd_compile(&args, seed),
+        Some("run") => cmd_run(&args, seed),
+        Some("report") => {
+            println!("{}", temporal_vec::coordinator::experiment::table1().rendered);
+            Ok(())
+        }
+        _ => {
+            eprintln!("{}", cli.help_text());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_experiment(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), String> {
+    let id = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or("usage: tvec experiment <table1..table6|fig4|all>")?;
+    let ids: Vec<&str> = if id == "all" {
+        vec!["table1", "table2", "table3", "table4", "table5", "table6", "fig4"]
+    } else {
+        vec![id]
+    };
+    let cfg = match args.get("config") {
+        Some(path) => Some(temporal_vec::coordinator::Config::load(std::path::Path::new(path))?),
+        None => None,
+    };
+    for id in ids {
+        let r = temporal_vec::coordinator::experiment::run_experiment_with(id, seed, cfg.as_ref())?;
+        println!("{}", r.rendered);
+    }
+    Ok(())
+}
+
+fn cmd_compile(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), String> {
+    let path = args
+        .positional
+        .first()
+        .ok_or("usage: tvec compile <file.tv> [--pump 2] [--emit]")?;
+    let source = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let sdfg = temporal_vec::frontend::compile(&source)?;
+    println!("parsed program '{}':", sdfg.name);
+    println!("{}", temporal_vec::ir::printer::to_text(&sdfg));
+
+    let mut spec = BuildSpec::new(sdfg).seeded(seed);
+    if let Some(factor) = args.get_usize("pump") {
+        let mode = match args.get_or("mode", "resource") {
+            "throughput" => PumpMode::Throughput,
+            _ => PumpMode::Resource,
+        };
+        spec = spec.pumped(factor, mode);
+    }
+    let n = args.get_u64("n").unwrap_or(1 << 16) as i64;
+    spec = spec.bind("N", n);
+    let c = compile(spec)?;
+    if args.flag("verbose") {
+        for line in &c.pass_log {
+            println!("pass: {line}");
+        }
+    }
+    println!(
+        "design '{}': CL0 {:.1} MHz{}, effective {:.1} MHz",
+        c.design.name,
+        c.report.cl0.achieved_mhz,
+        c.report
+            .cl1
+            .map(|r| format!(", CL1 {:.1} MHz", r.achieved_mhz))
+            .unwrap_or_default(),
+        c.report.effective_mhz
+    );
+    let u = c.report.util_percent();
+    println!(
+        "utilization: LUT {:.2}% / LUTMem {:.2}% / Regs {:.2}% / BRAM {:.2}% / DSP {:.2}%",
+        u[0], u[1], u[2], u[3], u[4]
+    );
+    if args.flag("emit") {
+        std::fs::create_dir_all("generated").map_err(|e| e.to_string())?;
+        let cpp = codegen::hls::emit_hls(&c.design);
+        std::fs::write(format!("generated/{}.cpp", c.design.name), cpp)
+            .map_err(|e| e.to_string())?;
+        let rtl = codegen::rtl::emit_rtl(&c.design);
+        for (name, text) in [
+            ("controller.sv", &rtl.controller_sv),
+            ("core.sv", &rtl.core_sv),
+            ("top.v", &rtl.toplevel_v),
+            ("package.tcl", &rtl.package_tcl),
+            ("link.cfg", &rtl.link_cfg),
+        ] {
+            std::fs::write(format!("generated/{}_{name}", c.design.name), text)
+                .map_err(|e| e.to_string())?;
+        }
+        println!("generated/ written (HLS C++ + 4 RTL kernel files + link.cfg)");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), String> {
+    let app = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or("usage: tvec run <vecadd|matmul|floyd_warshall> [--pump 2]")?;
+    let pump = args.get_usize("pump");
+    let mut rng = Rng::new(seed);
+
+    // build at golden (artifact) scale, simulate functionally, compare
+    let (c, hbm, golden_inputs, out_name): (_, Hbm, Vec<Vec<f32>>, &str) = match app {
+        "vecadd" => {
+            let n = apps::vecadd::GOLDEN_N;
+            let mut spec =
+                BuildSpec::new(apps::vecadd::build()).vectorized("vadd", 8).bind("N", n);
+            if let Some(f) = pump {
+                spec = spec.pumped(f, PumpMode::Resource);
+            }
+            let c = compile(spec.seeded(seed))?;
+            let x = rng.f32_vec(n as usize);
+            let y = rng.f32_vec(n as usize);
+            let mut hbm = Hbm::new();
+            hbm.load("x", x.clone());
+            hbm.load("y", y.clone());
+            (c, hbm, vec![x, y], "z")
+        }
+        "matmul" => {
+            let n = apps::matmul::GOLDEN_NMK;
+            let mut spec = BuildSpec::new(apps::matmul::build(4));
+            for (s, v) in apps::matmul::bindings(n) {
+                spec = spec.bind(&s, v);
+            }
+            if let Some(f) = pump {
+                spec = spec.pumped(f, PumpMode::Resource);
+            }
+            let c = compile(spec.seeded(seed))?;
+            let a = rng.f32_vec((n * n) as usize);
+            let b = rng.f32_vec((n * n) as usize);
+            let mut hbm = Hbm::new();
+            hbm.load("A", a.clone());
+            hbm.load("B", b.clone());
+            (c, hbm, vec![a, b], "C")
+        }
+        "floyd_warshall" => {
+            let n = apps::floyd_warshall::GOLDEN_N;
+            let mut spec = BuildSpec::new(apps::floyd_warshall::build()).bind("N", n);
+            if let Some(f) = pump {
+                spec = spec.pumped(f, PumpMode::Throughput);
+            }
+            let c = compile(spec.seeded(seed))?;
+            let d = apps::floyd_warshall::random_graph(n as usize, seed, 0.25);
+            let mut hbm = Hbm::new();
+            hbm.load("dist", d.clone());
+            (c, hbm, vec![d], "dist")
+        }
+        other => return Err(format!("app '{other}' not runnable here (see examples/)")),
+    };
+
+    println!("simulating '{}' functionally...", c.design.name);
+    let out = run_functional(&c.design, hbm)?;
+    let got = out.hbm.read(out_name);
+
+    println!("executing golden model via PJRT...");
+    let mut runner = GoldenRunner::new(&artifact::artifacts_dir())?;
+    let input_refs: Vec<&[f32]> = golden_inputs.iter().map(|v| v.as_slice()).collect();
+    let want = runner.run(app, &input_refs)?;
+
+    if got.len() != want.len() {
+        return Err(format!("length mismatch: sim {} vs golden {}", got.len(), want.len()));
+    }
+    let mut worst = 0.0f32;
+    for (g, w) in got.iter().zip(&want) {
+        let err = (g - w).abs() / w.abs().max(1.0);
+        worst = worst.max(err);
+    }
+    println!(
+        "simulated output matches golden model: {} elements, max rel err {worst:.2e}",
+        got.len()
+    );
+    if worst > 1e-4 {
+        return Err(format!("numeric mismatch: max rel err {worst}"));
+    }
+    println!("OK");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use std::path::{Path, PathBuf};
+
+/// One exported model.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: PathBuf,
+    /// Input shapes, e.g. [[4096], [4096]].
+    pub shapes: Vec<Vec<usize>>,
+}
+
+impl ManifestEntry {
+    /// Total element count per input.
+    pub fn input_sizes(&self) -> Vec<usize> {
+        self.shapes.iter().map(|s| s.iter().product()).collect()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Parse `artifacts/manifest.txt` (format: `name file sh1;sh2` with
+    /// shapes as `d0xd1x...`).
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 3 {
+                return Err(format!("manifest line {}: expected 3 fields", lineno + 1));
+            }
+            let shapes = parts[2]
+                .split(';')
+                .map(|s| {
+                    s.split('x')
+                        .map(|d| d.parse::<usize>().map_err(|e| format!("bad dim {d}: {e}")))
+                        .collect::<Result<Vec<_>, _>>()
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            entries.push(ManifestEntry {
+                name: parts[0].to_string(),
+                file: dir.join(parts[1]),
+                shapes,
+            });
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// Default artifacts directory: `$TVEC_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("TVEC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_format() {
+        let dir = std::env::temp_dir().join("tvec_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "vecadd vecadd.hlo.txt 4096;4096\nmatmul matmul.hlo.txt 128x64;64x32\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let mm = m.get("matmul").unwrap();
+        assert_eq!(mm.shapes, vec![vec![128, 64], vec![64, 32]]);
+        assert_eq!(mm.input_sizes(), vec![128 * 64, 64 * 32]);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

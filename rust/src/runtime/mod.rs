@@ -1,0 +1,14 @@
+//! PJRT runtime: loads and executes the AOT JAX/Pallas golden models.
+//!
+//! Python never runs on this path — `make artifacts` lowered the L2
+//! models to HLO text once; here the `xla` crate compiles them on the
+//! PJRT CPU client and executes them with concrete inputs. The
+//! simulator's functional outputs are cross-checked against these
+//! golden results by the integration tests and the end-to-end
+//! examples.
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::{Manifest, ManifestEntry};
+pub use pjrt::GoldenRunner;

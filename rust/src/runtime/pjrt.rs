@@ -1,0 +1,103 @@
+//! PJRT CPU execution of HLO-text artifacts.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: text → HloModuleProto
+//! → XlaComputation → compile → execute. Executables are cached per
+//! model name (compile once, run many — the "AOT, python never on the
+//! request path" contract).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::artifact::{Manifest, ManifestEntry};
+
+/// Loads artifacts and runs golden computations on the PJRT CPU client.
+pub struct GoldenRunner {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl GoldenRunner {
+    /// Create a runner over an artifacts directory.
+    pub fn new(dir: &Path) -> Result<GoldenRunner, String> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e}"))?;
+        Ok(GoldenRunner { client, manifest, cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable, String> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| format!("no artifact '{name}' in manifest"))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.file.to_str().ok_or("non-utf8 path")?,
+            )
+            .map_err(|e| format!("parse {}: {e}", entry.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| format!("compile '{name}': {e}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute model `name` on f32 inputs (shapes from the manifest).
+    /// Returns the flattened f32 output of the (single-output) model.
+    pub fn run(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>, String> {
+        let entry: ManifestEntry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| format!("no artifact '{name}'"))?
+            .clone();
+        if inputs.len() != entry.shapes.len() {
+            return Err(format!(
+                "'{name}' expects {} inputs, got {}",
+                entry.shapes.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&entry.shapes) {
+            let expect: usize = shape.iter().product();
+            if data.len() != expect {
+                return Err(format!(
+                    "'{name}': input length {} != shape {:?}",
+                    data.len(),
+                    shape
+                ));
+            }
+            let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| format!("reshape: {e}"))?;
+            literals.push(lit);
+        }
+        let exe = self.compile(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute '{name}': {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch result: {e}"))?;
+        // models are lowered with return_tuple=True → 1-tuple
+        let tuple = out.to_tuple1().map_err(|e| format!("untuple: {e}"))?;
+        tuple.to_vec::<f32>().map_err(|e| format!("to_vec: {e}"))
+    }
+}
+
+// NOTE: integration coverage for this module lives in
+// rust/tests/runtime_golden.rs (requires `make artifacts` first); unit
+// tests here would need the artifacts present in the crate test env.

@@ -1,0 +1,132 @@
+//! Bounded FIFO channels carrying wide transactions.
+
+use std::collections::VecDeque;
+
+/// One transaction: `lanes` f32 values.
+pub type Txn = Box<[f32]>;
+
+/// A FIFO with bounded capacity (transactions).
+#[derive(Debug)]
+pub struct Fifo {
+    pub name: String,
+    pub lanes: usize,
+    pub capacity: usize,
+    q: VecDeque<Txn>,
+    pub pushed: u64,
+    pub popped: u64,
+}
+
+impl Fifo {
+    pub fn new(name: &str, lanes: usize, capacity: usize) -> Self {
+        Fifo {
+            name: name.to_string(),
+            lanes,
+            capacity: capacity.max(1),
+            q: VecDeque::with_capacity(capacity.max(1)),
+            pushed: 0,
+            popped: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.capacity
+    }
+
+    /// Space for one more transaction?
+    pub fn can_push(&self) -> bool {
+        !self.is_full()
+    }
+
+    pub fn push(&mut self, t: Txn) -> Result<(), Txn> {
+        if self.is_full() {
+            return Err(t);
+        }
+        debug_assert_eq!(t.len(), self.lanes, "channel {} lane mismatch", self.name);
+        self.q.push_back(t);
+        self.pushed += 1;
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<Txn> {
+        let t = self.q.pop_front();
+        if t.is_some() {
+            self.popped += 1;
+        }
+        t
+    }
+
+    pub fn peek(&self) -> Option<&Txn> {
+        self.q.front()
+    }
+
+    /// Unbounded push for the functional mode.
+    pub fn push_unbounded(&mut self, t: Txn) {
+        debug_assert_eq!(t.len(), self.lanes);
+        self.q.push_back(t);
+        self.pushed += 1;
+    }
+}
+
+/// The pool of channels of a running design, indexed by id; modules
+/// hold pre-resolved indices so the hot loop never hashes names.
+#[derive(Debug, Default)]
+pub struct Channels {
+    pub fifos: Vec<Fifo>,
+}
+
+impl Channels {
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.fifos.iter().position(|f| f.name == name)
+    }
+
+    pub fn by_name(&mut self, name: &str) -> &mut Fifo {
+        let i = self.index_of(name).unwrap_or_else(|| panic!("no channel '{name}'"));
+        &mut self.fifos[i]
+    }
+
+    pub fn all_empty(&self) -> bool {
+        self.fifos.iter().all(|f| f.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let mut f = Fifo::new("s", 2, 2);
+        assert!(f.push(vec![1.0, 2.0].into()).is_ok());
+        assert!(f.push(vec![3.0, 4.0].into()).is_ok());
+        assert!(f.is_full());
+        assert!(f.push(vec![5.0, 6.0].into()).is_err());
+        assert_eq!(&*f.pop().unwrap(), &[1.0, 2.0]);
+        assert_eq!(f.pushed, 2);
+        assert_eq!(f.popped, 1);
+    }
+
+    #[test]
+    fn channels_lookup() {
+        let mut ch = Channels::default();
+        ch.fifos.push(Fifo::new("a", 1, 4));
+        ch.fifos.push(Fifo::new("b", 1, 4));
+        assert_eq!(ch.index_of("b"), Some(1));
+        ch.by_name("a").push_unbounded(vec![7.0].into());
+        assert!(!ch.all_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "no channel")]
+    fn unknown_channel_panics() {
+        let mut ch = Channels::default();
+        ch.by_name("ghost");
+    }
+}

@@ -1,0 +1,230 @@
+//! Compiled tasklet programs for the simulator hot loop.
+//!
+//! `TaskExpr::eval` walks a tree and looks connectors up in a
+//! `BTreeMap<String, f32>` — fine for validation, far too slow for the
+//! per-lane inner loop of the exact engine (§Perf log in
+//! EXPERIMENTS.md). [`CompiledTasklet`] flattens the expression into a
+//! postorder stack program over *positional* inputs once at process
+//! build time; evaluation is then a branch-predictable loop with no
+//! allocation and no hashing.
+
+use crate::ir::{BinOp, TaskExpr, Tasklet, UnOp};
+
+/// One stack-machine instruction.
+#[derive(Clone, Copy, Debug)]
+pub enum TOp {
+    Const(f32),
+    /// Push input value at position `i` (position = index into the
+    /// module's input-connector list).
+    Load(usize),
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+    Neg,
+    Abs,
+    /// Pops c, b, a; pushes a*b + c.
+    MulAdd,
+}
+
+/// A compiled single-output tasklet.
+#[derive(Clone, Debug)]
+pub struct CompiledTasklet {
+    ops: Vec<TOp>,
+    /// Maximum stack depth, precomputed so eval can use a fixed buffer.
+    depth: usize,
+}
+
+fn flatten(e: &TaskExpr, conns: &[String], out: &mut Vec<TOp>) -> Result<(), String> {
+    match e {
+        TaskExpr::In(name) => {
+            let pos = conns
+                .iter()
+                .position(|c| c == name)
+                .ok_or_else(|| format!("connector '{name}' not wired"))?;
+            out.push(TOp::Load(pos));
+        }
+        TaskExpr::Const(v) => out.push(TOp::Const(*v)),
+        TaskExpr::Bin(op, a, b) => {
+            flatten(a, conns, out)?;
+            flatten(b, conns, out)?;
+            out.push(match op {
+                BinOp::Add => TOp::Add,
+                BinOp::Sub => TOp::Sub,
+                BinOp::Mul => TOp::Mul,
+                BinOp::Div => TOp::Div,
+                BinOp::Min => TOp::Min,
+                BinOp::Max => TOp::Max,
+            });
+        }
+        TaskExpr::Un(op, a) => {
+            flatten(a, conns, out)?;
+            out.push(match op {
+                UnOp::Neg => TOp::Neg,
+                UnOp::Abs => TOp::Abs,
+            });
+        }
+        TaskExpr::MulAdd(a, b, c) => {
+            flatten(a, conns, out)?;
+            flatten(b, conns, out)?;
+            flatten(c, conns, out)?;
+            out.push(TOp::MulAdd);
+        }
+    }
+    Ok(())
+}
+
+impl CompiledTasklet {
+    /// Compile the first output of `t` against the positional
+    /// connector list `conns`.
+    pub fn compile(t: &Tasklet, conns: &[String]) -> Result<CompiledTasklet, String> {
+        let expr = &t
+            .outputs
+            .first()
+            .ok_or_else(|| format!("tasklet '{}' has no outputs", t.name))?
+            .1;
+        let mut ops = Vec::new();
+        flatten(expr, conns, &mut ops)?;
+        // max stack depth
+        let mut depth = 0usize;
+        let mut cur = 0usize;
+        for op in &ops {
+            match op {
+                TOp::Const(_) | TOp::Load(_) => {
+                    cur += 1;
+                    depth = depth.max(cur);
+                }
+                TOp::Neg | TOp::Abs => {}
+                TOp::MulAdd => cur -= 2,
+                _ => cur -= 1,
+            }
+        }
+        Ok(CompiledTasklet { ops, depth: depth.max(1) })
+    }
+
+    pub fn stack_depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Evaluate on positional inputs using the caller-provided stack
+    /// buffer (len ≥ `stack_depth()`).
+    #[inline]
+    pub fn eval(&self, inputs: &[f32], stack: &mut [f32]) -> f32 {
+        let mut sp = 0usize;
+        for op in &self.ops {
+            match *op {
+                TOp::Const(v) => {
+                    stack[sp] = v;
+                    sp += 1;
+                }
+                TOp::Load(i) => {
+                    stack[sp] = inputs[i];
+                    sp += 1;
+                }
+                TOp::Add => {
+                    sp -= 1;
+                    stack[sp - 1] += stack[sp];
+                }
+                TOp::Sub => {
+                    sp -= 1;
+                    stack[sp - 1] -= stack[sp];
+                }
+                TOp::Mul => {
+                    sp -= 1;
+                    stack[sp - 1] *= stack[sp];
+                }
+                TOp::Div => {
+                    sp -= 1;
+                    stack[sp - 1] /= stack[sp];
+                }
+                TOp::Min => {
+                    sp -= 1;
+                    stack[sp - 1] = stack[sp - 1].min(stack[sp]);
+                }
+                TOp::Max => {
+                    sp -= 1;
+                    stack[sp - 1] = stack[sp - 1].max(stack[sp]);
+                }
+                TOp::Neg => stack[sp - 1] = -stack[sp - 1],
+                TOp::Abs => stack[sp - 1] = stack[sp - 1].abs(),
+                TOp::MulAdd => {
+                    sp -= 2;
+                    stack[sp - 1] = stack[sp - 1] * stack[sp] + stack[sp + 1];
+                }
+            }
+        }
+        debug_assert_eq!(sp, 1);
+        stack[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::TaskExpr;
+    use crate::util::Rng;
+    use std::collections::BTreeMap;
+
+    fn conns(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn compiled_matches_tree_eval() {
+        let exprs = vec![
+            TaskExpr::input("a").add(TaskExpr::input("b")),
+            TaskExpr::input("a")
+                .mul(TaskExpr::c(2.5))
+                .sub(TaskExpr::input("b"))
+                .min(TaskExpr::input("c")),
+            TaskExpr::muladd(
+                TaskExpr::input("a"),
+                TaskExpr::input("b"),
+                TaskExpr::input("c"),
+            )
+            .max(TaskExpr::c(-1.0)),
+            TaskExpr::Un(crate::ir::UnOp::Abs, Box::new(TaskExpr::input("a").sub(TaskExpr::input("c")))),
+        ];
+        let cs = conns(&["a", "b", "c"]);
+        let mut rng = Rng::new(5);
+        for e in exprs {
+            let t = Tasklet::new("t", vec![("o", e.clone())]);
+            let compiled = CompiledTasklet::compile(&t, &cs).unwrap();
+            let mut stack = vec![0.0f32; compiled.stack_depth()];
+            for _ in 0..100 {
+                let vals = [rng.f32_range(-9.0, 9.0), rng.f32_range(-9.0, 9.0), rng.f32_range(-9.0, 9.0)];
+                let mut env = BTreeMap::new();
+                env.insert("a".to_string(), vals[0]);
+                env.insert("b".to_string(), vals[1]);
+                env.insert("c".to_string(), vals[2]);
+                let want = e.eval(&env);
+                let got = compiled.eval(&vals, &mut stack);
+                assert!(
+                    (got - want).abs() < 1e-6 || (got.is_nan() && want.is_nan()),
+                    "{e:?}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unwired_connector_rejected() {
+        let t = Tasklet::new("t", vec![("o", TaskExpr::input("ghost"))]);
+        assert!(CompiledTasklet::compile(&t, &conns(&["a"])).is_err());
+    }
+
+    #[test]
+    fn stack_depth_is_sufficient_and_tight() {
+        // deep right-leaning chain: a + (b + (c + const))
+        let e = TaskExpr::input("a").add(
+            TaskExpr::input("b").add(TaskExpr::input("c").add(TaskExpr::c(1.0))),
+        );
+        let t = Tasklet::new("t", vec![("o", e)]);
+        let c = CompiledTasklet::compile(&t, &conns(&["a", "b", "c"])).unwrap();
+        assert_eq!(c.stack_depth(), 4);
+        let mut stack = vec![0.0; c.stack_depth()];
+        assert_eq!(c.eval(&[1.0, 2.0, 3.0], &mut stack), 7.0);
+    }
+}

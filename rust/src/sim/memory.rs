@@ -1,0 +1,72 @@
+//! HBM memory model: one exclusive bank per container (paper §4).
+
+use std::collections::BTreeMap;
+
+/// Off-chip memory state: named containers of f32 data.
+#[derive(Clone, Debug, Default)]
+pub struct Hbm {
+    banks: BTreeMap<String, Vec<f32>>,
+}
+
+impl Hbm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install a container's initial contents.
+    pub fn load(&mut self, name: &str, data: Vec<f32>) {
+        self.banks.insert(name.to_string(), data);
+    }
+
+    /// Allocate a zeroed output container.
+    pub fn alloc(&mut self, name: &str, elems: usize) {
+        self.banks.entry(name.to_string()).or_insert_with(|| vec![0.0; elems]);
+    }
+
+    pub fn read(&self, name: &str) -> &[f32] {
+        self.banks
+            .get(name)
+            .unwrap_or_else(|| panic!("HBM container '{name}' not loaded"))
+    }
+
+    pub fn read_mut(&mut self, name: &str) -> &mut Vec<f32> {
+        self.banks
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("HBM container '{name}' not loaded"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.banks.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_read_roundtrip() {
+        let mut h = Hbm::new();
+        h.load("x", vec![1.0, 2.0]);
+        h.alloc("z", 4);
+        assert_eq!(h.read("x"), &[1.0, 2.0]);
+        assert_eq!(h.read("z").len(), 4);
+        h.read_mut("z")[1] = 9.0;
+        assert_eq!(h.read("z")[1], 9.0);
+        assert!(h.contains("x") && !h.contains("y"));
+    }
+
+    #[test]
+    fn alloc_does_not_clobber() {
+        let mut h = Hbm::new();
+        h.load("z", vec![5.0]);
+        h.alloc("z", 3);
+        assert_eq!(h.read("z"), &[5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not loaded")]
+    fn missing_container_panics() {
+        Hbm::new().read("ghost");
+    }
+}

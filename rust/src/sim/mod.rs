@@ -1,0 +1,37 @@
+//! Multi-clock-domain simulator for generated designs.
+//!
+//! Three complementary execution modes over the same netlist
+//! ([`crate::codegen::Design`]):
+//!
+//! * **Functional** ([`engine::run_functional`]) — executes the design
+//!   on real `f32` data in dataflow order with unbounded queues: the
+//!   output containers end up with exactly the values the hardware
+//!   would produce. Checked against the PJRT-executed JAX/Pallas
+//!   golden models by the integration tests and examples.
+//! * **Exact** ([`engine::run_exact`]) — cycle-stepped simulation with
+//!   bounded FIFOs, backpressure, per-domain clocking (fast domain
+//!   ticks M× per slow tick), CDC transfer latency, pipeline fill and
+//!   initiation intervals. Used on small instances to validate the
+//!   rate model; counts stalls per module.
+//! * **Analytic** ([`engine::rate_model`]) — steady-state rate analysis
+//!   giving the cycle count of arbitrarily large workloads in O(1):
+//!   the bottleneck service rate over all modules plus fill latency.
+//!   Exact and analytic agree within a few percent on the designs the
+//!   paper evaluates (asserted by tests).
+//!
+//! Hardware wall-clock time is then `cycles / effective_clock` with the
+//! effective clock from the timing model — the quantity the paper's
+//! Time/Perf rows report.
+
+pub mod channel;
+pub mod compute;
+pub mod engine;
+pub mod memory;
+pub mod process;
+pub mod stats;
+pub mod trace;
+
+pub use engine::{rate_model, run_exact, run_functional, SimOutcome};
+pub use memory::Hbm;
+pub use stats::SimStats;
+pub use trace::{run_traced, Trace};

@@ -1,0 +1,908 @@
+//! Runtime process state machines, one per netlist module.
+//!
+//! Each process exposes two entry points used by the two execution
+//! modes: [`Proc::tick`] advances one cycle in the process's own clock
+//! domain (exact mode, respecting FIFO capacity), and
+//! [`Proc::drain_functional`] processes everything available with
+//! unbounded queues (functional mode). Both share the same data path
+//! code, so they cannot diverge functionally.
+
+use super::channel::{Channels, Txn};
+use super::memory::Hbm;
+use crate::codegen::design::ModuleSpec;
+use crate::ir::{ClockDomain, StencilKind};
+
+/// Per-process runtime state.
+pub struct Proc {
+    pub label: String,
+    pub domain: ClockDomain,
+    pub state: ProcState,
+    /// Cycles this process spent stalled (exact mode).
+    pub stalls: u64,
+    /// Cycles this process did useful work (exact mode).
+    pub busy: u64,
+}
+
+/// The behavioural state per module kind.
+pub enum ProcState {
+    Reader {
+        data: String,
+        out: usize,
+        lanes: usize,
+        elems: usize,
+        pos: usize,
+        /// Slow-cycles per transaction (≥1 when the port is wider than
+        /// the HBM bus).
+        cycles_per_txn: u64,
+        credit: u64,
+    },
+    Writer {
+        data: String,
+        input: usize,
+        lanes: usize,
+        elems: usize,
+        pos: usize,
+        cycles_per_txn: u64,
+        credit: u64,
+    },
+    Compute {
+        /// Tasklet compiled to a stack program over positional inputs
+        /// (§Perf: the tree-walking eval with string lookups dominated
+        /// the exact engine's profile).
+        program: super::compute::CompiledTasklet,
+        inputs: Vec<usize>,
+        output: usize,
+        lanes: usize,
+        iterations: usize,
+        fired: usize,
+        ii: u64,
+        cooldown: u64,
+        /// In-flight pipeline: (ready_at_tick, txn).
+        pipe: std::collections::VecDeque<(u64, Txn)>,
+        latency: u64,
+        /// Scratch buffers reused across firings (no hot-loop allocs).
+        stack: Vec<f32>,
+        vals: Vec<f32>,
+    },
+    Sync {
+        input: usize,
+        output: usize,
+    },
+    Issuer {
+        input: usize,
+        output: usize,
+        factor: usize,
+        /// Partially issued wide transaction.
+        hold: Option<(Txn, usize)>,
+    },
+    Packer {
+        input: usize,
+        output: usize,
+        factor: usize,
+        accum: Vec<f32>,
+        wide_lanes: usize,
+    },
+    Gemm {
+        a_in: usize,
+        b_in: usize,
+        c_out: usize,
+        n: usize,
+        m: usize,
+        k: usize,
+        macs_per_cycle: usize,
+        lanes: usize,
+        a_buf: Vec<f32>,
+        b_buf: Vec<f32>,
+        work_done: u64,
+        total_work: u64,
+        c_buf: Option<Vec<f32>>,
+        c_pos: usize,
+    },
+    Stencil {
+        kind: StencilKind,
+        input: usize,
+        output: usize,
+        nx: usize,
+        ny: usize,
+        nz: usize,
+        lanes: usize,
+        /// Full input plane history needed for the 3-D neighbourhood:
+        /// ring of 3 planes (prev, curr, next as it streams).
+        ring: Vec<f32>,
+        in_count: usize,
+        out_count: usize,
+        total: usize,
+    },
+    Fw {
+        input: usize,
+        output: usize,
+        n: usize,
+        k: usize,
+        row_cur: Vec<f32>,
+        col_cur: Vec<f32>,
+        row_next: Vec<f32>,
+        col_next: Vec<f32>,
+        pos: usize,
+        ii: u64,
+        cooldown: u64,
+    },
+}
+
+impl Proc {
+    /// Build the runtime process for a module spec.
+    pub fn build(spec: &ModuleSpec, domain: ClockDomain, ch: &Channels) -> Proc {
+        let idx = |name: &str| {
+            ch.index_of(name)
+                .unwrap_or_else(|| panic!("module references unknown channel '{name}'"))
+        };
+        let state = match spec {
+            ModuleSpec::Reader { data, stream, lanes, elems, bytes_per_cycle } => {
+                ProcState::Reader {
+                    data: data.clone(),
+                    out: idx(stream),
+                    lanes: *lanes,
+                    elems: *elems,
+                    pos: 0,
+                    cycles_per_txn: ((lanes * 4 + bytes_per_cycle - 1) / bytes_per_cycle).max(1)
+                        as u64,
+                    credit: 0,
+                }
+            }
+            ModuleSpec::Writer { data, stream, lanes, elems, bytes_per_cycle } => {
+                ProcState::Writer {
+                    data: data.clone(),
+                    input: idx(stream),
+                    lanes: *lanes,
+                    elems: *elems,
+                    pos: 0,
+                    cycles_per_txn: ((lanes * 4 + bytes_per_cycle - 1) / bytes_per_cycle).max(1)
+                        as u64,
+                    credit: 0,
+                }
+            }
+            ModuleSpec::Compute { tasklet, inputs, output, lanes, iterations, ii, latency, .. } => {
+                let conns: Vec<String> = inputs.iter().map(|(_, c)| c.clone()).collect();
+                let program = super::compute::CompiledTasklet::compile(tasklet, &conns)
+                    .expect("validated tasklet compiles");
+                let stack = vec![0.0f32; program.stack_depth()];
+                ProcState::Compute {
+                    program,
+                    inputs: inputs.iter().map(|(s, _)| idx(s)).collect(),
+                    output: idx(&output.0),
+                    lanes: *lanes,
+                    iterations: *iterations,
+                    fired: 0,
+                    ii: *ii,
+                    cooldown: 0,
+                    pipe: Default::default(),
+                    latency: *latency,
+                    stack,
+                    vals: vec![0.0f32; inputs.len()],
+                }
+            }
+            ModuleSpec::Sync { input, output } => {
+                ProcState::Sync { input: idx(input), output: idx(output) }
+            }
+            ModuleSpec::Issuer { input, output, factor } => ProcState::Issuer {
+                input: idx(input),
+                output: idx(output),
+                factor: *factor,
+                hold: None,
+            },
+            ModuleSpec::Packer { input, output, factor } => {
+                let wide_lanes = ch.fifos[idx(output)].lanes;
+                ProcState::Packer {
+                    input: idx(input),
+                    output: idx(output),
+                    factor: *factor,
+                    accum: Vec::with_capacity(wide_lanes),
+                    wide_lanes,
+                }
+            }
+            ModuleSpec::GemmCore { a, b, c, n, m, k, pes, lanes, .. } => ProcState::Gemm {
+                a_in: idx(a),
+                b_in: idx(b),
+                c_out: idx(c),
+                n: *n,
+                m: *m,
+                k: *k,
+                macs_per_cycle: pes * lanes,
+                lanes: *lanes,
+                a_buf: Vec::new(),
+                b_buf: Vec::new(),
+                work_done: 0,
+                total_work: (*n as u64) * (*m as u64) * (*k as u64),
+                c_buf: None,
+                c_pos: 0,
+            },
+            ModuleSpec::StencilCore { kind, input, output, nx, ny, nz, lanes, .. } => {
+                ProcState::Stencil {
+                    kind: *kind,
+                    input: idx(input),
+                    output: idx(output),
+                    nx: *nx,
+                    ny: *ny,
+                    nz: *nz,
+                    lanes: *lanes,
+                    ring: Vec::new(),
+                    in_count: 0,
+                    out_count: 0,
+                    total: nx * ny * nz,
+                }
+            }
+            ModuleSpec::FwCore { input, output, n, lanes: _, ii, .. } => ProcState::Fw {
+                input: idx(input),
+                output: idx(output),
+                n: *n,
+                k: 0,
+                row_cur: vec![f32::INFINITY; *n],
+                col_cur: vec![f32::INFINITY; *n],
+                row_next: vec![f32::INFINITY; *n],
+                col_next: vec![f32::INFINITY; *n],
+                pos: 0,
+                ii: *ii,
+                cooldown: 0,
+                // lanes kept for throughput-mode accounting
+            },
+        };
+        let _ = match spec {
+            ModuleSpec::FwCore { lanes, .. } => *lanes,
+            _ => 1,
+        };
+        Proc { label: spec.label(), domain, state, stalls: 0, busy: 0 }
+    }
+
+    /// Does `done()` never regress for this process kind? True for
+    /// stateful endpoints (their work counters only grow); false for
+    /// flow-through modules whose doneness depends on upstream pushes.
+    pub fn monotone_done(&self) -> bool {
+        !matches!(
+            self.state,
+            ProcState::Sync { .. } | ProcState::Issuer { .. } | ProcState::Packer { .. }
+        )
+    }
+
+    /// Is the process finished with all its work?
+    pub fn done(&self, ch: &Channels) -> bool {
+        match &self.state {
+            ProcState::Reader { pos, elems, .. } => *pos >= *elems,
+            ProcState::Writer { pos, elems, .. } => *pos >= *elems,
+            ProcState::Compute { fired, iterations, pipe, .. } => {
+                *fired >= *iterations && pipe.is_empty()
+            }
+            ProcState::Sync { input, .. }
+            | ProcState::Issuer { input, hold: None, .. }
+            | ProcState::Packer { input, .. } => ch.fifos[*input].is_empty(),
+            ProcState::Issuer { .. } => false,
+            ProcState::Gemm { work_done, total_work, c_buf, .. } => {
+                *work_done >= *total_work && c_buf.is_none()
+            }
+            ProcState::Stencil { out_count, total, lanes, .. } => *out_count >= total / lanes,
+            ProcState::Fw { pos, n, .. } => *pos >= n * n,
+        }
+    }
+
+    /// Reset per-repeat state (sequential outer loop): processes start
+    /// a fresh pass over the data.
+    pub fn reset_for_repeat(&mut self) {
+        match &mut self.state {
+            ProcState::Reader { pos, .. } | ProcState::Writer { pos, .. } => *pos = 0,
+            ProcState::Compute { fired, .. } => *fired = 0,
+            ProcState::Gemm { work_done, c_pos, a_buf, b_buf, c_buf, .. } => {
+                *work_done = 0;
+                *c_pos = 0;
+                a_buf.clear();
+                b_buf.clear();
+                *c_buf = None;
+            }
+            ProcState::Stencil { in_count, out_count, ring, .. } => {
+                *in_count = 0;
+                *out_count = 0;
+                ring.clear();
+            }
+            ProcState::Fw { pos, k, row_cur, col_cur, row_next, col_next, .. } => {
+                *pos = 0;
+                *k += 1;
+                std::mem::swap(row_cur, row_next);
+                std::mem::swap(col_cur, col_next);
+            }
+            _ => {}
+        }
+    }
+
+    /// One cycle in this process's clock domain. Returns true if the
+    /// process made progress.
+    pub fn tick(&mut self, now: u64, ch: &mut Channels, hbm: &mut Hbm) -> bool {
+        let progressed = self.step(now, ch, hbm, false);
+        if progressed {
+            self.busy += 1;
+        } else if !self.done(ch) {
+            self.stalls += 1;
+        }
+        progressed
+    }
+
+    /// Functional mode: loop steps until nothing more can be done.
+    pub fn drain_functional(&mut self, ch: &mut Channels, hbm: &mut Hbm) -> bool {
+        let mut any = false;
+        while self.step(0, ch, hbm, true) {
+            any = true;
+        }
+        any
+    }
+
+    /// Shared datapath. `unbounded` disables capacity/II/latency
+    /// modelling (functional mode).
+    fn step(&mut self, now: u64, ch: &mut Channels, hbm: &mut Hbm, unbounded: bool) -> bool {
+        match &mut self.state {
+            ProcState::Reader { data, out, lanes, elems, pos, cycles_per_txn, credit } => {
+                if *pos >= *elems {
+                    return false;
+                }
+                if !unbounded {
+                    *credit += 1;
+                    if *credit < *cycles_per_txn {
+                        return true; // burst in progress
+                    }
+                    if !ch.fifos[*out].can_push() {
+                        *credit = *cycles_per_txn; // hold the beat
+                        return false;
+                    }
+                    *credit = 0;
+                }
+                let mem = hbm.read(data);
+                let base = *pos * *lanes;
+                let txn: Txn = (0..*lanes)
+                    .map(|l| mem.get(base + l).copied().unwrap_or(0.0))
+                    .collect();
+                if unbounded {
+                    ch.fifos[*out].push_unbounded(txn);
+                } else {
+                    ch.fifos[*out].push(txn).expect("checked can_push");
+                }
+                *pos += 1;
+                true
+            }
+            ProcState::Writer { data, input, lanes, elems, pos, cycles_per_txn, credit } => {
+                if *pos >= *elems {
+                    return false;
+                }
+                if !unbounded {
+                    *credit += 1;
+                    if *credit < *cycles_per_txn {
+                        return true;
+                    }
+                }
+                let txn = match ch.fifos[*input].pop() {
+                    Some(t) => t,
+                    None => return false,
+                };
+                if !unbounded {
+                    *credit = 0;
+                }
+                let mem = hbm.read_mut(data);
+                let base = *pos * *lanes;
+                for (l, v) in txn.iter().enumerate() {
+                    if base + l < mem.len() {
+                        mem[base + l] = *v;
+                    }
+                }
+                *pos += 1;
+                true
+            }
+            ProcState::Compute {
+                program,
+                inputs,
+                output,
+                lanes,
+                iterations,
+                fired,
+                ii,
+                cooldown,
+                pipe,
+                latency,
+                stack,
+                vals,
+            } => {
+                let mut progressed = false;
+                // retire finished transactions
+                if !unbounded {
+                    if let Some((ready, _)) = pipe.front() {
+                        if *ready <= now && ch.fifos[*output].can_push() {
+                            let (_, txn) = pipe.pop_front().unwrap();
+                            ch.fifos[*output].push(txn).expect("checked");
+                            progressed = true;
+                        }
+                    }
+                    if *cooldown > 0 {
+                        *cooldown -= 1;
+                        return true; // pipeline advancing
+                    }
+                }
+                if *fired >= *iterations {
+                    return progressed;
+                }
+                // need one txn on every input
+                if inputs.iter().any(|i| ch.fifos[*i].is_empty()) {
+                    return progressed;
+                }
+                let mut popped: Vec<Txn> = Vec::with_capacity(inputs.len());
+                for i in inputs.iter() {
+                    popped.push(ch.fifos[*i].pop().unwrap());
+                }
+                // evaluate per lane with the compiled stack program
+                let mut out = vec![0.0f32; *lanes];
+                for lane in 0..*lanes {
+                    for (pos, txn) in popped.iter().enumerate() {
+                        vals[pos] = txn[lane.min(txn.len() - 1)];
+                    }
+                    out[lane] = program.eval(vals, stack);
+                }
+                *fired += 1;
+                if unbounded {
+                    ch.fifos[*output].push_unbounded(out.into());
+                } else {
+                    pipe.push_back((now + *latency, out.into()));
+                    *cooldown = ii.saturating_sub(1);
+                }
+                true
+            }
+            ProcState::Sync { input, output } => {
+                if ch.fifos[*input].is_empty() {
+                    return false;
+                }
+                if !unbounded && !ch.fifos[*output].can_push() {
+                    return false;
+                }
+                let t = ch.fifos[*input].pop().unwrap();
+                if unbounded {
+                    ch.fifos[*output].push_unbounded(t);
+                } else {
+                    ch.fifos[*output].push(t).expect("checked");
+                }
+                true
+            }
+            ProcState::Issuer { input, output, factor, hold } => {
+                if hold.is_none() {
+                    match ch.fifos[*input].pop() {
+                        Some(t) => *hold = Some((t, 0)),
+                        None => return false,
+                    }
+                }
+                if !unbounded && !ch.fifos[*output].can_push() {
+                    return false;
+                }
+                let narrow_lanes = ch.fifos[*output].lanes;
+                let (wide, idx) = hold.as_mut().unwrap();
+                let base = *idx * narrow_lanes;
+                let txn: Txn =
+                    (0..narrow_lanes).map(|l| wide.get(base + l).copied().unwrap_or(0.0)).collect();
+                if unbounded {
+                    ch.fifos[*output].push_unbounded(txn);
+                } else {
+                    ch.fifos[*output].push(txn).expect("checked");
+                }
+                *idx += 1;
+                if *idx >= *factor {
+                    *hold = None;
+                }
+                true
+            }
+            ProcState::Packer { input, output, factor, accum, wide_lanes } => {
+                let _ = factor;
+                if accum.len() < *wide_lanes {
+                    match ch.fifos[*input].pop() {
+                        Some(t) => {
+                            accum.extend_from_slice(&t);
+                        }
+                        None => return false,
+                    }
+                }
+                if accum.len() >= *wide_lanes {
+                    if !unbounded && !ch.fifos[*output].can_push() {
+                        return false;
+                    }
+                    let txn: Txn = accum.drain(..*wide_lanes).collect();
+                    if unbounded {
+                        ch.fifos[*output].push_unbounded(txn);
+                    } else {
+                        ch.fifos[*output].push(txn).expect("checked");
+                    }
+                }
+                true
+            }
+            ProcState::Gemm {
+                a_in,
+                b_in,
+                c_out,
+                n,
+                m,
+                k,
+                macs_per_cycle,
+                lanes,
+                a_buf,
+                b_buf,
+                work_done,
+                total_work,
+                c_buf,
+                c_pos,
+            } => {
+                let mut progressed = false;
+                // ingest at most one txn per input per cycle
+                if a_buf.len() < *n * *k {
+                    if let Some(t) = ch.fifos[*a_in].pop() {
+                        a_buf.extend_from_slice(&t);
+                        progressed = true;
+                    }
+                }
+                if b_buf.len() < *k * *m {
+                    if let Some(t) = ch.fifos[*b_in].pop() {
+                        b_buf.extend_from_slice(&t);
+                        progressed = true;
+                    }
+                }
+                // compute: cannot run ahead of delivered input fraction
+                if *work_done < *total_work {
+                    let frac =
+                        (a_buf.len() as f64 / (*n * *k) as f64).min(b_buf.len() as f64 / (*k * *m) as f64);
+                    let allowed = (*total_work as f64 * frac) as u64;
+                    if *work_done < allowed {
+                        let step = if unbounded {
+                            allowed - *work_done
+                        } else {
+                            (*macs_per_cycle as u64).min(allowed - *work_done)
+                        };
+                        *work_done += step;
+                        progressed = true;
+                    }
+                }
+                // drain C
+                if *work_done >= *total_work {
+                    if c_buf.is_none() && a_buf.len() >= *n * *k && b_buf.len() >= *k * *m {
+                        // functional matmul
+                        let mut c = vec![0.0f32; *n * *m];
+                        for i in 0..*n {
+                            for kk in 0..*k {
+                                let a = a_buf[i * *k + kk];
+                                if a == 0.0 {
+                                    continue;
+                                }
+                                let brow = &b_buf[kk * *m..(kk + 1) * *m];
+                                let crow = &mut c[i * *m..(i + 1) * *m];
+                                for j in 0..*m {
+                                    crow[j] += a * brow[j];
+                                }
+                            }
+                        }
+                        *c_buf = Some(c);
+                    }
+                    if let Some(c) = c_buf {
+                        let total_txns = *n * *m / *lanes;
+                        while *c_pos < total_txns {
+                            if !unbounded && !ch.fifos[*c_out].can_push() {
+                                break;
+                            }
+                            let base = *c_pos * *lanes;
+                            let txn: Txn = c[base..base + *lanes].to_vec().into();
+                            if unbounded {
+                                ch.fifos[*c_out].push_unbounded(txn);
+                            } else {
+                                ch.fifos[*c_out].push(txn).expect("checked");
+                            }
+                            *c_pos += 1;
+                            progressed = true;
+                            if !unbounded {
+                                break; // one txn per cycle
+                            }
+                        }
+                        if *c_pos >= total_txns {
+                            *c_buf = None;
+                            *work_done = *total_work; // done
+                        }
+                    }
+                }
+                progressed
+            }
+            ProcState::Stencil {
+                kind,
+                input,
+                output,
+                nx,
+                ny,
+                nz,
+                lanes,
+                ring,
+                in_count,
+                out_count,
+                total,
+            } => {
+                let mut progressed = false;
+                // ingest one txn
+                if *in_count < *total / *lanes {
+                    if let Some(t) = ch.fifos[*input].pop() {
+                        ring.extend_from_slice(&t);
+                        *in_count += 1;
+                        progressed = true;
+                    }
+                }
+                // emit once the neighbourhood is available: output txn
+                // t requires input up to (t*lanes + plane + row + 1)
+                let plane = *ny * *nz;
+                let have = ring.len();
+                let want_out = *out_count * *lanes;
+                if want_out < *total && have >= (want_out + plane + *nz + 1).min(*total) {
+                    if !unbounded && !ch.fifos[*output].can_push() {
+                        return progressed;
+                    }
+                    let txn: Txn = (0..*lanes)
+                        .map(|l| {
+                            stencil_point(*kind, ring, want_out + l, *nx, *ny, *nz)
+                        })
+                        .collect();
+                    if unbounded {
+                        ch.fifos[*output].push_unbounded(txn);
+                    } else {
+                        ch.fifos[*output].push(txn).expect("checked");
+                    }
+                    *out_count += 1;
+                    progressed = true;
+                }
+                progressed
+            }
+            ProcState::Fw {
+                input,
+                output,
+                n,
+                k,
+                row_cur,
+                col_cur,
+                row_next,
+                col_next,
+                pos,
+                ii,
+                cooldown,
+            } => {
+                if *pos >= *n * *n {
+                    return false;
+                }
+                if !unbounded && *cooldown > 0 {
+                    *cooldown -= 1;
+                    return true;
+                }
+                if !unbounded && !ch.fifos[*output].can_push() {
+                    return false;
+                }
+                let t = match ch.fifos[*input].pop() {
+                    Some(t) => t,
+                    None => return false,
+                };
+                let i = *pos / *n;
+                let j = *pos % *n;
+                let d = t[0];
+                // k=0 first pass: row/col 0 not yet buffered; capture
+                // directly (d[0][j] and d[i][0] stream before use only
+                // for i==0/j==0 — handle by capturing on the fly)
+                if i == *k {
+                    row_cur[j] = d;
+                }
+                if j == *k {
+                    col_cur[i] = d;
+                }
+                let relaxed = if row_cur[j].is_finite() && col_cur[i].is_finite() {
+                    d.min(col_cur[i] + row_cur[j])
+                } else {
+                    d
+                };
+                // capture next iteration's row/col from the *relaxed*
+                // values
+                let kn = *k + 1;
+                if i == kn {
+                    row_next[j] = relaxed;
+                }
+                if j == kn {
+                    col_next[i] = relaxed;
+                }
+                let txn: Txn = vec![relaxed].into();
+                if unbounded {
+                    ch.fifos[*output].push_unbounded(txn);
+                } else {
+                    ch.fifos[*output].push(txn).expect("checked");
+                    *cooldown = ii.saturating_sub(1);
+                }
+                *pos += 1;
+                true
+            }
+        }
+    }
+}
+
+/// Evaluate one stencil output point from the flat input array.
+/// Boundary points pass through unchanged (halo copy), matching the
+/// golden models in `python/compile/kernels/ref.py`.
+pub fn stencil_point(
+    kind: StencilKind,
+    data: &[f32],
+    idx: usize,
+    nx: usize,
+    ny: usize,
+    nz: usize,
+) -> f32 {
+    let plane = ny * nz;
+    let x = idx / plane;
+    let y = (idx % plane) / nz;
+    let z = idx % nz;
+    let at = |xx: usize, yy: usize, zz: usize| data[xx * plane + yy * nz + zz];
+    if x == 0 || x + 1 >= nx || y == 0 || y + 1 >= ny || z == 0 || z + 1 >= nz {
+        return data[idx];
+    }
+    let (xm, xp) = (at(x - 1, y, z), at(x + 1, y, z));
+    let (ym, yp) = (at(x, y - 1, z), at(x, y + 1, z));
+    let (zm, zp) = (at(x, y, z - 1), at(x, y, z + 1));
+    let c = data[idx];
+    match kind {
+        // w * (sum of 6 neighbours): 5 adds + 1 mul
+        StencilKind::Jacobi3D => (xm + xp + ym + yp + zm + zp) * (1.0 / 6.0),
+        // c0*center + cx*(x neighbours) + cy*(y) + cz*(z): 6 adds + 4 muls
+        StencilKind::Diffusion3D => {
+            0.5 * c + 0.125 * (xm + xp) + 0.0833 * (ym + yp) + 0.0917 * (zm + zp)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Tasklet;
+    use crate::sim::channel::{Channels, Fifo};
+
+    fn chans(names: &[(&str, usize, usize)]) -> Channels {
+        let mut ch = Channels::default();
+        for (n, lanes, cap) in names {
+            ch.fifos.push(Fifo::new(n, *lanes, *cap));
+        }
+        ch
+    }
+
+    #[test]
+    fn reader_streams_memory() {
+        let mut ch = chans(&[("s", 2, 8)]);
+        let mut hbm = Hbm::new();
+        hbm.load("x", vec![1.0, 2.0, 3.0, 4.0]);
+        let spec = ModuleSpec::Reader {
+            data: "x".into(),
+            stream: "s".into(),
+            lanes: 2,
+            elems: 2,
+            bytes_per_cycle: 32,
+        };
+        let mut p = Proc::build(&spec, ClockDomain::Slow, &ch);
+        while !p.done(&ch) {
+            p.tick(0, &mut ch, &mut hbm);
+        }
+        assert_eq!(&*ch.by_name("s").pop().unwrap(), &[1.0, 2.0]);
+        assert_eq!(&*ch.by_name("s").pop().unwrap(), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn issuer_splits_packer_packs() {
+        let mut ch = chans(&[("w", 4, 4), ("n", 2, 8), ("w2", 4, 4)]);
+        let mut hbm = Hbm::new();
+        ch.by_name("w").push_unbounded(vec![1.0, 2.0, 3.0, 4.0].into());
+        let mut issuer = Proc::build(
+            &ModuleSpec::Issuer { input: "w".into(), output: "n".into(), factor: 2 },
+            ClockDomain::Fast { factor: 2 },
+            &ch,
+        );
+        issuer.drain_functional(&mut ch, &mut hbm);
+        assert_eq!(ch.by_name("n").len(), 2);
+        let mut packer = Proc::build(
+            &ModuleSpec::Packer { input: "n".into(), output: "w2".into(), factor: 2 },
+            ClockDomain::Fast { factor: 2 },
+            &ch,
+        );
+        packer.drain_functional(&mut ch, &mut hbm);
+        assert_eq!(&*ch.by_name("w2").pop().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn compute_applies_tasklet_per_lane() {
+        use crate::ir::TaskExpr;
+        let mut ch = chans(&[("a", 2, 8), ("b", 2, 8), ("o", 2, 8)]);
+        let mut hbm = Hbm::new();
+        ch.by_name("a").push_unbounded(vec![1.0, 2.0].into());
+        ch.by_name("b").push_unbounded(vec![10.0, 20.0].into());
+        let spec = ModuleSpec::Compute {
+            name: "add".into(),
+            tasklet: Tasklet::new("add", vec![("o", TaskExpr::input("x").add(TaskExpr::input("y")))]),
+            inputs: vec![("a".into(), "x".into()), ("b".into(), "y".into())],
+            output: ("o".into(), "o".into()),
+            lanes: 2,
+            iterations: 1,
+            ii: 1,
+            latency: 8,
+        };
+        let mut p = Proc::build(&spec, ClockDomain::Slow, &ch);
+        p.drain_functional(&mut ch, &mut hbm);
+        assert_eq!(&*ch.by_name("o").pop().unwrap(), &[11.0, 22.0]);
+    }
+
+    #[test]
+    fn compute_exact_mode_respects_latency() {
+        use crate::ir::TaskExpr;
+        let mut ch = chans(&[("a", 1, 8), ("o", 1, 8)]);
+        let mut hbm = Hbm::new();
+        ch.by_name("a").push_unbounded(vec![5.0].into());
+        let spec = ModuleSpec::Compute {
+            name: "id".into(),
+            tasklet: Tasklet::new("id", vec![("o", TaskExpr::input("x"))]),
+            inputs: vec![("a".into(), "x".into())],
+            output: ("o".into(), "o".into()),
+            lanes: 1,
+            iterations: 1,
+            ii: 1,
+            latency: 5,
+        };
+        let mut p = Proc::build(&spec, ClockDomain::Slow, &ch);
+        p.tick(0, &mut ch, &mut hbm); // accepted into pipe
+        assert!(ch.by_name("o").is_empty()); // latency not elapsed
+        for t in 1..=5 {
+            p.tick(t, &mut ch, &mut hbm);
+        }
+        assert_eq!(ch.by_name("o").len(), 1);
+    }
+
+    #[test]
+    fn stencil_point_jacobi_interior() {
+        // 3×3×3 cube of ones: interior average = 1
+        let data = vec![1.0f32; 27];
+        let v = stencil_point(StencilKind::Jacobi3D, &data, 13, 3, 3, 3);
+        assert!((v - 1.0).abs() < 1e-6);
+        // boundary passes through
+        assert_eq!(stencil_point(StencilKind::Jacobi3D, &data, 0, 3, 3, 3), 1.0);
+    }
+
+    #[test]
+    fn fw_core_relaxes_small_graph() {
+        // 3-node graph: 0→1 (1.0), 1→2 (2.0), 0→2 (9.0); after FW the
+        // 0→2 distance becomes 3.0
+        let inf = 1e30f32;
+        let n = 3usize;
+        #[rustfmt::skip]
+        let mut dist = vec![
+            0.0, 1.0, 9.0,
+            inf, 0.0, 2.0,
+            inf, inf, 0.0,
+        ];
+        // run n sequential passes through the core
+        for k in 0..n {
+            let mut ch = chans(&[("in", 1, 64), ("out", 1, 64)]);
+            let mut hbm = Hbm::new();
+            for v in &dist {
+                ch.by_name("in").push_unbounded(vec![*v].into());
+            }
+            let spec = ModuleSpec::FwCore {
+                name: "fw".into(),
+                input: "in".into(),
+                output: "out".into(),
+                n,
+                lanes: 1,
+                ii: 21,
+            };
+            let mut p = Proc::build(&spec, ClockDomain::Slow, &ch);
+            // preload row/col buffers for pass k (captured in pass k-1
+            // on hardware; equivalently compute from current matrix)
+            if let ProcState::Fw { row_cur, col_cur, k: kk, .. } = &mut p.state {
+                *kk = k;
+                for j in 0..n {
+                    row_cur[j] = dist[k * n + j];
+                    col_cur[j] = dist[j * n + k];
+                }
+            }
+            p.drain_functional(&mut ch, &mut hbm);
+            for v in dist.iter_mut() {
+                *v = ch.by_name("out").pop().unwrap()[0];
+            }
+        }
+        assert_eq!(dist[2], 3.0);
+    }
+}

@@ -1,0 +1,42 @@
+//! Simulation statistics.
+
+/// Outcome counters of a simulated execution.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    /// Total slow-domain (CL0) cycles.
+    pub slow_cycles: u64,
+    /// Fast-domain cycles (= slow_cycles × M when pumped).
+    pub fast_cycles: u64,
+    /// The module limiting throughput.
+    pub bottleneck: String,
+    /// Per-module (label, busy cycles, stall cycles).
+    pub modules: Vec<(String, u64, u64)>,
+    /// Transactions through the design (writer side).
+    pub transactions: u64,
+}
+
+impl SimStats {
+    /// Wall-clock seconds at an effective clock in MHz.
+    pub fn seconds_at(&self, effective_mhz: f64) -> f64 {
+        self.slow_cycles as f64 / (effective_mhz * 1e6)
+    }
+
+    /// Throughput in GOp/s given total flops and an effective clock.
+    pub fn gops_at(&self, total_flops: f64, effective_mhz: f64) -> f64 {
+        total_flops / self.seconds_at(effective_mhz) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_and_gops() {
+        let s = SimStats { slow_cycles: 300_000_000, ..Default::default() };
+        let secs = s.seconds_at(300.0);
+        assert!((secs - 1.0).abs() < 1e-9);
+        let gops = s.gops_at(2e9, 300.0);
+        assert!((gops - 2.0).abs() < 1e-9);
+    }
+}

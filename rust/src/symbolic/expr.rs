@@ -1,0 +1,330 @@
+//! Affine integer expressions over named symbols.
+//!
+//! Expressions are kept in a canonical linear form
+//! `c0 + c1*s1 + c2*s2 + ...` (constant plus integer-scaled symbols),
+//! which makes equality, substitution, and divisibility checks exact —
+//! the operations the transformation feasibility checks rely on.
+//! Non-affine constructs (e.g. data-dependent indices) are represented
+//! by [`Expr::Opaque`] and conservatively fail all structural checks,
+//! which is precisely the paper's restriction: "the participating
+//! operations must not involve data-dependent external memory I/O".
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Interned symbol name (cheap clone; names are short and few).
+pub type Sym = String;
+
+/// An integer expression in canonical affine form, or an opaque
+/// (unanalyzable) term.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub enum Expr {
+    /// `constant + Σ coeff·symbol`, with zero coefficients removed and
+    /// symbols ordered (BTreeMap) so equal expressions compare equal.
+    Affine { constant: i64, terms: BTreeMap<Sym, i64> },
+    /// A term the analysis cannot reason about (data-dependent index,
+    /// modulo, division with remainder...). Carries a display string.
+    Opaque(String),
+}
+
+impl Expr {
+    pub fn int(c: i64) -> Expr {
+        Expr::Affine { constant: c, terms: BTreeMap::new() }
+    }
+
+    pub fn sym(name: &str) -> Expr {
+        let mut terms = BTreeMap::new();
+        terms.insert(name.to_string(), 1);
+        Expr::Affine { constant: 0, terms }
+    }
+
+    pub fn opaque(desc: impl Into<String>) -> Expr {
+        Expr::Opaque(desc.into())
+    }
+
+    pub fn zero() -> Expr {
+        Expr::int(0)
+    }
+
+    pub fn is_opaque(&self) -> bool {
+        matches!(self, Expr::Opaque(_))
+    }
+
+    /// The constant value if the expression has no symbolic part.
+    pub fn as_const(&self) -> Option<i64> {
+        match self {
+            Expr::Affine { constant, terms } if terms.is_empty() => Some(*constant),
+            _ => None,
+        }
+    }
+
+    /// Coefficient of `s` (0 if absent); None for opaque.
+    pub fn coeff(&self, s: &str) -> Option<i64> {
+        match self {
+            Expr::Affine { terms, .. } => Some(terms.get(s).copied().unwrap_or(0)),
+            Expr::Opaque(_) => None,
+        }
+    }
+
+    /// Free symbols of the expression.
+    pub fn symbols(&self) -> Vec<Sym> {
+        match self {
+            Expr::Affine { terms, .. } => terms.keys().cloned().collect(),
+            Expr::Opaque(_) => Vec::new(),
+        }
+    }
+
+    /// Whether the expression mentions `s`.
+    pub fn uses(&self, s: &str) -> bool {
+        match self {
+            Expr::Affine { terms, .. } => terms.contains_key(s),
+            // conservative: opaque may depend on anything
+            Expr::Opaque(_) => true,
+        }
+    }
+
+    pub fn add(&self, other: &Expr) -> Expr {
+        match (self, other) {
+            (
+                Expr::Affine { constant: c1, terms: t1 },
+                Expr::Affine { constant: c2, terms: t2 },
+            ) => {
+                let mut terms = t1.clone();
+                for (s, c) in t2 {
+                    let e = terms.entry(s.clone()).or_insert(0);
+                    *e += c;
+                    if *e == 0 {
+                        terms.remove(s);
+                    }
+                }
+                Expr::Affine { constant: c1 + c2, terms }
+            }
+            _ => Expr::Opaque(format!("({self} + {other})")),
+        }
+    }
+
+    pub fn sub(&self, other: &Expr) -> Expr {
+        self.add(&other.scale(-1))
+    }
+
+    pub fn scale(&self, k: i64) -> Expr {
+        match self {
+            Expr::Affine { constant, terms } => {
+                if k == 0 {
+                    return Expr::zero();
+                }
+                Expr::Affine {
+                    constant: constant * k,
+                    terms: terms.iter().map(|(s, c)| (s.clone(), c * k)).collect(),
+                }
+            }
+            Expr::Opaque(d) => Expr::Opaque(format!("({k} * {d})")),
+        }
+    }
+
+    /// Multiply two expressions; affine only if one side is constant.
+    pub fn mul(&self, other: &Expr) -> Expr {
+        match (self.as_const(), other.as_const()) {
+            (Some(k), _) => other.scale(k),
+            (_, Some(k)) => self.scale(k),
+            _ => Expr::Opaque(format!("({self} * {other})")),
+        }
+    }
+
+    /// Exact division by a constant: all coefficients and the constant
+    /// must be divisible. This is the vectorization-divisibility check.
+    pub fn div_exact(&self, k: i64) -> Option<Expr> {
+        assert!(k != 0);
+        match self {
+            Expr::Affine { constant, terms } => {
+                if constant % k != 0 || terms.values().any(|c| c % k != 0) {
+                    return None;
+                }
+                Some(Expr::Affine {
+                    constant: constant / k,
+                    terms: terms.iter().map(|(s, c)| (s.clone(), c / k)).collect(),
+                })
+            }
+            Expr::Opaque(_) => None,
+        }
+    }
+
+    /// Substitute symbol `s` with expression `e`.
+    pub fn subst(&self, s: &str, e: &Expr) -> Expr {
+        match self {
+            Expr::Affine { constant, terms } => {
+                let mut out = Expr::int(*constant);
+                for (name, c) in terms {
+                    let term = if name == s { e.scale(*c) } else { Expr::sym(name).scale(*c) };
+                    out = out.add(&term);
+                }
+                out
+            }
+            Expr::Opaque(d) => Expr::Opaque(format!("{d}[{s}:={e}]")),
+        }
+    }
+
+    /// Evaluate under a symbol binding; None if a symbol is unbound or
+    /// the expression is opaque.
+    pub fn eval(&self, env: &SymbolTable) -> Option<i64> {
+        match self {
+            Expr::Affine { constant, terms } => {
+                let mut acc = *constant;
+                for (s, c) in terms {
+                    acc += c * env.get(s)?;
+                }
+                Some(acc)
+            }
+            Expr::Opaque(_) => None,
+        }
+    }
+
+    /// Structural equality of the difference to zero: `self == other`
+    /// exactly (None for opaque operands — unknown).
+    pub fn eq_exact(&self, other: &Expr) -> Option<bool> {
+        if self.is_opaque() || other.is_opaque() {
+            return None;
+        }
+        Some(self.sub(other).as_const() == Some(0))
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Affine { constant, terms } => {
+                let mut parts: Vec<String> = Vec::new();
+                for (s, c) in terms {
+                    parts.push(match *c {
+                        1 => s.clone(),
+                        -1 => format!("-{s}"),
+                        c => format!("{c}*{s}"),
+                    });
+                }
+                if *constant != 0 || parts.is_empty() {
+                    parts.push(constant.to_string());
+                }
+                let mut out = String::new();
+                for (i, p) in parts.iter().enumerate() {
+                    if i > 0 && !p.starts_with('-') {
+                        out.push_str(" + ");
+                    } else if i > 0 {
+                        out.push_str(" ");
+                    }
+                    out.push_str(p);
+                }
+                write!(f, "{out}")
+            }
+            Expr::Opaque(d) => write!(f, "⟨{d}⟩"),
+        }
+    }
+}
+
+impl fmt::Debug for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+/// Concrete bindings for symbols (map-scope parameters, program sizes).
+#[derive(Clone, Debug, Default)]
+pub struct SymbolTable {
+    bindings: BTreeMap<Sym, i64>,
+}
+
+impl SymbolTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with(mut self, s: &str, v: i64) -> Self {
+        self.set(s, v);
+        self
+    }
+
+    pub fn set(&mut self, s: &str, v: i64) {
+        self.bindings.insert(s.to_string(), v);
+    }
+
+    pub fn get(&self, s: &str) -> Option<i64> {
+        self.bindings.get(s).copied()
+    }
+
+    pub fn symbols(&self) -> impl Iterator<Item = (&Sym, &i64)> {
+        self.bindings.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_form_equality() {
+        // i + 2 + i == 2*i + 2
+        let a = Expr::sym("i").add(&Expr::int(2)).add(&Expr::sym("i"));
+        let b = Expr::sym("i").scale(2).add(&Expr::int(2));
+        assert_eq!(a, b);
+        assert_eq!(a.eq_exact(&b), Some(true));
+    }
+
+    #[test]
+    fn zero_coefficients_removed() {
+        let a = Expr::sym("i").sub(&Expr::sym("i"));
+        assert_eq!(a.as_const(), Some(0));
+        assert!(a.symbols().is_empty());
+    }
+
+    #[test]
+    fn mul_constant_folds() {
+        let e = Expr::sym("i").add(&Expr::int(1)).mul(&Expr::int(4));
+        assert_eq!(e.coeff("i"), Some(4));
+        assert_eq!(e, Expr::sym("i").scale(4).add(&Expr::int(4)));
+    }
+
+    #[test]
+    fn mul_symbols_is_opaque() {
+        let e = Expr::sym("i").mul(&Expr::sym("j"));
+        assert!(e.is_opaque());
+        assert_eq!(e.eq_exact(&e.clone()), None);
+    }
+
+    #[test]
+    fn div_exact_checks_divisibility() {
+        let e = Expr::sym("i").scale(8).add(&Expr::int(4));
+        assert_eq!(e.div_exact(4).unwrap(), Expr::sym("i").scale(2).add(&Expr::int(1)));
+        assert!(e.div_exact(3).is_none());
+    }
+
+    #[test]
+    fn subst_replaces() {
+        // (2*i + 1)[i := 4*j] = 8*j + 1
+        let e = Expr::sym("i").scale(2).add(&Expr::int(1));
+        let r = e.subst("i", &Expr::sym("j").scale(4));
+        assert_eq!(r, Expr::sym("j").scale(8).add(&Expr::int(1)));
+    }
+
+    #[test]
+    fn eval_with_bindings() {
+        let e = Expr::sym("i").scale(3).add(&Expr::sym("j")).add(&Expr::int(-2));
+        let env = SymbolTable::new().with("i", 5).with("j", 7);
+        assert_eq!(e.eval(&env), Some(20));
+        let partial = SymbolTable::new().with("i", 5);
+        assert_eq!(e.eval(&partial), None);
+    }
+
+    #[test]
+    fn opaque_is_contagious() {
+        let o = Expr::opaque("A[i]");
+        assert!(o.add(&Expr::int(1)).is_opaque());
+        assert!(Expr::sym("i").mul(&o).is_opaque());
+        assert!(o.uses("anything"));
+    }
+
+    #[test]
+    fn display_roundtrip_readable() {
+        let e = Expr::sym("i").scale(2).add(&Expr::sym("j").scale(-1)).add(&Expr::int(3));
+        let s = format!("{e}");
+        assert!(s.contains("2*i") && s.contains("-j") && s.contains('3'), "{s}");
+    }
+}

@@ -1,0 +1,19 @@
+//! Symbolic integer algebra for memlets.
+//!
+//! DaCe memlets describe data movement with symbolic index expressions
+//! (`i`, `2*i+1`, `i*V .. i*V+V`). The streamability and vectorizability
+//! analyses in [`crate::analysis`] reason about these expressions:
+//! equality of access order, disjointness of write sets, divisibility of
+//! ranges by a vectorization factor. This module provides exactly the
+//! machinery needed: affine expressions over named symbols
+//! ([`expr::Expr`]), strided ranges ([`range::Range`]) and
+//! multi-dimensional subsets ([`subset::Subset`]) with intersection and
+//! containment tests, plus concrete evaluation under symbol bindings.
+
+pub mod expr;
+pub mod range;
+pub mod subset;
+
+pub use expr::{Expr, SymbolTable};
+pub use range::Range;
+pub use subset::Subset;

@@ -1,0 +1,194 @@
+//! Strided symbolic ranges `begin : end : step` (end exclusive).
+//!
+//! Map scopes iterate over ranges; memlet subsets are per-dimension
+//! ranges. Vectorization rewrites ranges (`0:N:1` → `0:N/V:1` with the
+//! element index scaled), so ranges carry symbolic begin/end and a
+//! constant step.
+
+use super::expr::{Expr, SymbolTable};
+
+/// `begin : end : step`, end exclusive, step a positive constant.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct Range {
+    pub begin: Expr,
+    pub end: Expr,
+    pub step: i64,
+}
+
+impl Range {
+    pub fn new(begin: Expr, end: Expr, step: i64) -> Self {
+        assert!(step > 0, "only positive steps are supported");
+        Range { begin, end, step }
+    }
+
+    /// `0 : n : 1` for a constant extent.
+    pub fn upto(n: i64) -> Self {
+        Range::new(Expr::int(0), Expr::int(n), 1)
+    }
+
+    /// `0 : sym : 1`.
+    pub fn upto_sym(s: &str) -> Self {
+        Range::new(Expr::int(0), Expr::sym(s), 1)
+    }
+
+    /// A degenerate single-index range `e : e+1 : 1`.
+    pub fn index(e: Expr) -> Self {
+        let end = e.add(&Expr::int(1));
+        Range::new(e, end, 1)
+    }
+
+    /// Is this a single index (`end == begin + 1`)?
+    pub fn is_index(&self) -> bool {
+        self.end.sub(&self.begin).as_const() == Some(1)
+    }
+
+    /// Symbolic element count `(end - begin) / step` if exact.
+    pub fn extent(&self) -> Option<Expr> {
+        self.end.sub(&self.begin).div_exact(self.step)
+    }
+
+    /// Concrete element count under bindings.
+    pub fn count(&self, env: &SymbolTable) -> Option<i64> {
+        let b = self.begin.eval(env)?;
+        let e = self.end.eval(env)?;
+        if e <= b {
+            return Some(0);
+        }
+        Some((e - b + self.step - 1) / self.step)
+    }
+
+    /// Substitute a symbol throughout.
+    pub fn subst(&self, s: &str, e: &Expr) -> Range {
+        Range { begin: self.begin.subst(s, e), end: self.end.subst(s, e), step: self.step }
+    }
+
+    /// Divide the extent by `v` (vectorization): `0:N:1` → `0:N/v:1`.
+    /// Only applies when begin is unchanged and the extent divides.
+    pub fn divide_extent(&self, v: i64) -> Option<Range> {
+        let extent = self.extent()?;
+        let new_extent = extent.div_exact(v)?;
+        let end = self.begin.add(&new_extent.scale(self.step));
+        Some(Range { begin: self.begin.clone(), end, step: self.step })
+    }
+
+    /// Do two concrete ranges overlap under `env`?
+    pub fn overlaps(&self, other: &Range, env: &SymbolTable) -> Option<bool> {
+        let (b1, e1) = (self.begin.eval(env)?, self.end.eval(env)?);
+        let (b2, e2) = (other.begin.eval(env)?, other.end.eval(env)?);
+        if e1 <= b2 || e2 <= b1 {
+            return Some(false);
+        }
+        if self.step == 1 || other.step == 1 {
+            return Some(true);
+        }
+        // strided: walk the shorter one (ranges here are small in tests;
+        // analyses use the symbolic paths in practice)
+        let (wb, we, ws, ob, oe, os) = if (e1 - b1) / self.step <= (e2 - b2) / other.step {
+            (b1, e1, self.step, b2, e2, other.step)
+        } else {
+            (b2, e2, other.step, b1, e1, self.step)
+        };
+        let mut x = wb;
+        while x < we {
+            if x >= ob && x < oe && (x - ob) % os == 0 {
+                return Some(true);
+            }
+            x += ws;
+        }
+        Some(false)
+    }
+
+    /// Iterate concrete values under `env` (for the simulator/tests).
+    pub fn iter_concrete(&self, env: &SymbolTable) -> Option<Vec<i64>> {
+        let b = self.begin.eval(env)?;
+        let e = self.end.eval(env)?;
+        let mut out = Vec::new();
+        let mut x = b;
+        while x < e {
+            out.push(x);
+            x += self.step;
+        }
+        Some(out)
+    }
+}
+
+impl std::fmt::Display for Range {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_index() {
+            write!(f, "{}", self.begin)
+        } else if self.step == 1 {
+            write!(f, "{}:{}", self.begin, self.end)
+        } else {
+            write!(f, "{}:{}:{}", self.begin, self.end, self.step)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extent_and_count() {
+        let r = Range::upto_sym("N");
+        assert_eq!(r.extent().unwrap(), Expr::sym("N"));
+        let env = SymbolTable::new().with("N", 10);
+        assert_eq!(r.count(&env), Some(10));
+    }
+
+    #[test]
+    fn strided_count() {
+        let r = Range::new(Expr::int(0), Expr::int(10), 3); // 0,3,6,9
+        assert_eq!(r.count(&SymbolTable::new()), Some(4));
+        assert_eq!(r.iter_concrete(&SymbolTable::new()).unwrap(), vec![0, 3, 6, 9]);
+    }
+
+    #[test]
+    fn index_range() {
+        let r = Range::index(Expr::sym("i"));
+        assert!(r.is_index());
+        assert_eq!(format!("{r}"), "i");
+    }
+
+    #[test]
+    fn divide_extent_for_vectorization() {
+        // concrete extent divides
+        let rc = Range::upto(16);
+        let dc = rc.divide_extent(4).unwrap();
+        assert_eq!(dc.count(&SymbolTable::new()), Some(4));
+        // symbolic extent N (coefficient 1) does not divide by 4
+        assert!(Range::upto_sym("N").divide_extent(4).is_none());
+    }
+
+    #[test]
+    fn symbolic_divide_requires_divisible_coeffs() {
+        // 0 : 4*T : 1 divides by 4 → 0 : T : 1
+        let r = Range::new(Expr::int(0), Expr::sym("T").scale(4), 1);
+        let d = r.divide_extent(4).unwrap();
+        assert_eq!(d.end, Expr::sym("T"));
+        // 0 : N : 1 does not divide by 4 symbolically
+        assert!(Range::upto_sym("N").divide_extent(4).is_none());
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let env = SymbolTable::new();
+        let a = Range::upto(10);
+        let b = Range::new(Expr::int(10), Expr::int(20), 1);
+        assert_eq!(a.overlaps(&b, &env), Some(false));
+        let c = Range::new(Expr::int(5), Expr::int(15), 1);
+        assert_eq!(a.overlaps(&c, &env), Some(true));
+        // disjoint strided: evens vs odds
+        let evens = Range::new(Expr::int(0), Expr::int(20), 2);
+        let odds = Range::new(Expr::int(1), Expr::int(20), 2);
+        assert_eq!(evens.overlaps(&odds, &env), Some(false));
+    }
+
+    #[test]
+    fn overlap_unknown_with_unbound_symbols() {
+        let env = SymbolTable::new();
+        let a = Range::upto_sym("N");
+        let b = Range::upto(4);
+        assert_eq!(a.overlaps(&b, &env), None);
+    }
+}

@@ -1,0 +1,210 @@
+//! Multi-dimensional subsets: the index sets memlets move.
+//!
+//! A subset is one [`Range`] per dimension (e.g. `A[i, 0:K]`). The
+//! streamability analysis compares subsets *as functions of the map
+//! parameter* to decide whether two modules touch memory in the same
+//! order (streamable) or overlap incompatibly (not streamable).
+
+use super::expr::{Expr, SymbolTable};
+use super::range::Range;
+
+/// One range per dimension.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct Subset {
+    pub dims: Vec<Range>,
+}
+
+impl Subset {
+    pub fn new(dims: Vec<Range>) -> Self {
+        Subset { dims }
+    }
+
+    /// Single-index subset `[e0, e1, ...]`.
+    pub fn indices(es: Vec<Expr>) -> Self {
+        Subset { dims: es.into_iter().map(Range::index).collect() }
+    }
+
+    /// 1-D single index.
+    pub fn index1(e: Expr) -> Self {
+        Subset::indices(vec![e])
+    }
+
+    /// 1-D covering `[0, n)`.
+    pub fn all1(n: i64) -> Self {
+        Subset::new(vec![Range::upto(n)])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total element count under bindings.
+    pub fn volume(&self, env: &SymbolTable) -> Option<i64> {
+        let mut v = 1i64;
+        for d in &self.dims {
+            v = v.checked_mul(d.count(env)?)?;
+        }
+        Some(v)
+    }
+
+    /// Symbolic element count (product of extents) if all are affine and
+    /// the product stays affine (i.e. at most one symbolic extent).
+    pub fn volume_sym(&self) -> Expr {
+        let mut acc = Expr::int(1);
+        for d in &self.dims {
+            match d.extent() {
+                Some(e) => acc = acc.mul(&e),
+                None => return Expr::opaque(format!("volume({self})")),
+            }
+        }
+        acc
+    }
+
+    /// Substitute a symbol in every dimension.
+    pub fn subst(&self, s: &str, e: &Expr) -> Subset {
+        Subset { dims: self.dims.iter().map(|d| d.subst(s, e)).collect() }
+    }
+
+    /// Do the subsets coincide exactly (same begin/end/step per dim)?
+    /// None if any component is opaque.
+    pub fn same_as(&self, other: &Subset) -> Option<bool> {
+        if self.rank() != other.rank() {
+            return Some(false);
+        }
+        let mut all = true;
+        for (a, b) in self.dims.iter().zip(&other.dims) {
+            if a.step != b.step {
+                return Some(false);
+            }
+            match (a.begin.eq_exact(&b.begin), a.end.eq_exact(&b.end)) {
+                (Some(x), Some(y)) => all &= x && y,
+                _ => return None,
+            }
+        }
+        Some(all)
+    }
+
+    /// Conservative concrete intersection test: Some(false) only when
+    /// provably disjoint in at least one dimension.
+    pub fn intersects(&self, other: &Subset, env: &SymbolTable) -> Option<bool> {
+        if self.rank() != other.rank() {
+            return None;
+        }
+        let mut unknown = false;
+        for (a, b) in self.dims.iter().zip(&other.dims) {
+            match a.overlaps(b, env) {
+                Some(false) => return Some(false),
+                Some(true) => {}
+                None => unknown = true,
+            }
+        }
+        if unknown {
+            None
+        } else {
+            Some(true)
+        }
+    }
+
+    /// Does the access order induced by iterating `param` over its range
+    /// advance linearly with unit progression in the innermost dimension?
+    /// This is the contiguity condition the streaming transformation
+    /// needs: module reads element `f(p)` at step `p`, with
+    /// `f(p+1) - f(p) == 1` in flattened order. We check the common case
+    /// where the innermost dim is `param`-affine with coefficient `c>0`
+    /// and outer dims do not depend on `param`.
+    pub fn linear_in(&self, param: &str) -> Option<i64> {
+        if self.dims.is_empty() {
+            return None;
+        }
+        let inner = self.dims.last().unwrap();
+        if !inner.is_index() {
+            return None;
+        }
+        let c = inner.begin.coeff(param)?;
+        if c <= 0 {
+            return None;
+        }
+        for outer in &self.dims[..self.dims.len() - 1] {
+            if outer.begin.uses(param) || outer.end.uses(param) {
+                return None;
+            }
+        }
+        Some(c)
+    }
+}
+
+impl std::fmt::Display for Subset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parts: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "[{}]", parts.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_concrete_and_symbolic() {
+        let s = Subset::new(vec![Range::upto(4), Range::upto_sym("K")]);
+        let env = SymbolTable::new().with("K", 8);
+        assert_eq!(s.volume(&env), Some(32));
+        let vs = s.volume_sym();
+        assert_eq!(vs.eval(&env), Some(32));
+    }
+
+    #[test]
+    fn same_as_exact() {
+        let a = Subset::index1(Expr::sym("i"));
+        let b = Subset::index1(Expr::sym("i"));
+        let c = Subset::index1(Expr::sym("i").add(&Expr::int(1)));
+        assert_eq!(a.same_as(&b), Some(true));
+        assert_eq!(a.same_as(&c), Some(false));
+    }
+
+    #[test]
+    fn same_as_opaque_is_unknown() {
+        let a = Subset::index1(Expr::opaque("A[i]"));
+        let b = Subset::index1(Expr::sym("i"));
+        assert_eq!(a.same_as(&b), None);
+    }
+
+    #[test]
+    fn intersects_disjoint_dim_wins() {
+        let env = SymbolTable::new();
+        let a = Subset::new(vec![Range::upto(4), Range::upto(10)]);
+        let b = Subset::new(vec![Range::new(Expr::int(4), Expr::int(8), 1), Range::upto(10)]);
+        assert_eq!(a.intersects(&b, &env), Some(false));
+    }
+
+    #[test]
+    fn linear_in_detects_streaming_order() {
+        // A[i] iterated by i → linear with stride 1
+        assert_eq!(Subset::index1(Expr::sym("i")).linear_in("i"), Some(1));
+        // A[2*i] → stride 2 (vectorized access)
+        assert_eq!(Subset::index1(Expr::sym("i").scale(2)).linear_in("i"), Some(2));
+        // A[j, i] with outer j independent of i → linear in i
+        let s = Subset::indices(vec![Expr::sym("j"), Expr::sym("i")]);
+        assert_eq!(s.linear_in("i"), Some(1));
+        // ...but iterating j strides by whole rows → not innermost-linear
+        assert_eq!(s.linear_in("j"), None);
+        let t = Subset::indices(vec![Expr::sym("i"), Expr::sym("j")]);
+        assert_eq!(t.linear_in("i"), None);
+        // reversed access → not linear
+        assert_eq!(Subset::index1(Expr::sym("i").scale(-1)).linear_in("i"), None);
+    }
+
+    #[test]
+    fn subst_applies_everywhere() {
+        let s = Subset::indices(vec![Expr::sym("i"), Expr::sym("i").add(&Expr::int(1))]);
+        let r = s.subst("i", &Expr::sym("v").scale(4));
+        assert_eq!(r.dims[0].begin, Expr::sym("v").scale(4));
+        assert_eq!(r.dims[1].begin, Expr::sym("v").scale(4).add(&Expr::int(1)));
+    }
+
+    #[test]
+    fn display_readable() {
+        let s = Subset::new(vec![Range::index(Expr::sym("i")), Range::upto(8)]);
+        assert_eq!(format!("{s}"), "[i, 0:8]");
+    }
+}

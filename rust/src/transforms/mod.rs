@@ -1,0 +1,25 @@
+//! Data-centric graph transformations (paper §3).
+//!
+//! Transformations are checked graph rewrites, DaCe-style: each has a
+//! `can_apply` feasibility check and an `apply` mutation, and the pass
+//! manager re-validates the graph after every application so a rewrite
+//! can never corrupt it.
+//!
+//! * [`vectorize::Vectorize`] — traditional vectorization (Figure 3 ①):
+//!   divides the map range by V and widens container types;
+//! * [`streaming::StreamingComposition`] — converts memory dependencies
+//!   to queue access, injecting reader/writer modules (Figure 3 ②);
+//! * [`multipump::MultiPump`] — the paper's contribution (Figure 3 ③):
+//!   places the streamed computational subgraph in a faster clock
+//!   domain and injects synchronizer/issuer/packer plumbing, in either
+//!   resource or throughput mode.
+
+pub mod multipump;
+pub mod pass;
+pub mod streaming;
+pub mod vectorize;
+
+pub use multipump::MultiPump;
+pub use pass::{PassManager, Transform, TransformReport};
+pub use streaming::StreamingComposition;
+pub use vectorize::Vectorize;

@@ -1,0 +1,457 @@
+//! The multi-pumping transformation (paper Figure 3, box ③) — the
+//! paper's central contribution, as an automatic graph rewrite.
+//!
+//! Preconditions (checked by `can_apply`):
+//! * the graph has been streamed ([`super::StreamingComposition`]) —
+//!   the compute subgraph talks to readers/writers through streams;
+//! * the compute scopes pass the *temporal* vectorizability check
+//!   ([`crate::analysis::check_temporal`]): dependencies allowed, no
+//!   data-dependent external I/O;
+//! * resource mode additionally requires the internal vector width to
+//!   divide by the pumping factor M.
+//!
+//! The rewrite constructs two clock domains (readers/writers stay in
+//! CL0; the entire compute subgraph moves to CL1 = M·CL0) and injects
+//! the three AXI4-Stream plumbing modules on every crossing stream:
+//!
+//! ```text
+//!  into the domain:  s ──[synchronizer]── s_x ──[issuer ÷M]── s_fast
+//!  out of the domain: s_fast ──[packer ×M]── s_x ──[synchronizer]── s
+//! ```
+//!
+//! * **Resource mode** (waveform ③, §2.1): the fast-side streams carry
+//!   `lanes/M` elements per transaction; the compute block needs only
+//!   `V/M` lanes to sustain the same throughput — DSP/BRAM cut by M.
+//! * **Throughput mode** (waveform ②, §2.1): the slow-side streams and
+//!   reader/writer ports are widened to `lanes·M`; the compute block is
+//!   unchanged and processes M transactions per slow cycle — M× the
+//!   throughput at equal compute resources (Floyd–Warshall's mode).
+
+use super::pass::{Transform, TransformReport};
+use crate::analysis::movement::scope_movement;
+use crate::analysis::vectorizability::check_temporal;
+use crate::ir::{
+    CdcKind, ContainerKind, DataDecl, Memlet, MultipumpInfo, Node, NodeId, PumpMode, Sdfg,
+    Storage,
+};
+use crate::symbolic::{Expr, Subset};
+
+/// Apply multi-pumping at `factor` in the given mode.
+pub struct MultiPump {
+    pub factor: usize,
+    pub mode: PumpMode,
+}
+
+impl MultiPump {
+    pub fn resource(factor: usize) -> Self {
+        MultiPump { factor, mode: PumpMode::Resource }
+    }
+
+    pub fn throughput(factor: usize) -> Self {
+        MultiPump { factor, mode: PumpMode::Throughput }
+    }
+}
+
+/// Streams that cross from the slow domain into the compute domain
+/// (fed by a Reader) and out of it (drained by a Writer).
+fn boundary_streams(g: &Sdfg) -> (Vec<String>, Vec<String>) {
+    let mut into = Vec::new();
+    let mut out_of = Vec::new();
+    for id in g.node_ids() {
+        match g.node(id) {
+            Node::Reader { stream, .. } => into.push(stream.clone()),
+            Node::Writer { stream, .. } => out_of.push(stream.clone()),
+            _ => {}
+        }
+    }
+    (into, out_of)
+}
+
+/// All compute-side nodes: everything that is not a reader/writer, not
+/// an external access, and not a boundary-stream access.
+fn compute_side(g: &Sdfg, boundary: &[String]) -> Vec<NodeId> {
+    g.node_ids()
+        .filter(|id| match g.node(*id) {
+            Node::Reader { .. } | Node::Writer { .. } | Node::Cdc { .. } => false,
+            Node::Access { data } => {
+                let decl = g.container(data).expect("validated");
+                // stream accesses inside the domain belong to it;
+                // boundary streams and external arrays do not
+                decl.kind == ContainerKind::Stream && !boundary.contains(data)
+            }
+            _ => true,
+        })
+        .collect()
+}
+
+impl Transform for MultiPump {
+    fn name(&self) -> String {
+        format!(
+            "MultiPump[M={} {}]",
+            self.factor,
+            match self.mode {
+                PumpMode::Resource => "resource",
+                PumpMode::Throughput => "throughput",
+            }
+        )
+    }
+
+    fn can_apply(&self, g: &Sdfg) -> Result<(), String> {
+        if self.factor < 2 {
+            return Err("pumping factor must be ≥ 2".into());
+        }
+        if g.multipump.is_some() {
+            return Err("already multi-pumped".into());
+        }
+        let (into, out_of) = boundary_streams(g);
+        if into.is_empty() && out_of.is_empty() {
+            return Err("graph is not streamed (run StreamingComposition first)".into());
+        }
+        // temporal vectorizability of every map scope
+        for id in g.node_ids() {
+            if matches!(g.node(id), Node::MapEntry { .. }) {
+                let mv = scope_movement(g, id)?;
+                let verdict = check_temporal(g, &mv, 1);
+                if !verdict.is_ok() {
+                    return Err(format!(
+                        "scope '{}': {}",
+                        g.node(id).label(),
+                        verdict.reasons().join("; ")
+                    ));
+                }
+            }
+        }
+        // resource mode: internal width must divide
+        if self.mode == PumpMode::Resource {
+            for s in into.iter().chain(out_of.iter()) {
+                let lanes = g.container(s).expect("stream declared").vtype.lanes;
+                if lanes % self.factor != 0 {
+                    return Err(format!(
+                        "resource mode: stream '{s}' width {lanes} not divisible by M={}",
+                        self.factor
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn apply(&self, g: &mut Sdfg) -> Result<TransformReport, String> {
+        let (into, out_of) = boundary_streams(g);
+        let m = self.factor;
+        let mut plumbing = 0usize;
+
+        // the fast domain contains the compute subgraph
+        let fast_nodes = compute_side(g, &[into.clone(), out_of.clone()].concat());
+
+        for s in &into {
+            let decl = g.container(s).unwrap().clone();
+            let depth = match decl.storage {
+                Storage::Stream { depth } => depth,
+                _ => unreachable!("boundary stream has stream storage"),
+            };
+            let (slow_lanes, fast_lanes) = match self.mode {
+                // wide outside stays, narrow inside
+                PumpMode::Resource => (decl.vtype.lanes, decl.vtype.lanes / m),
+                // widen outside, keep inside
+                PumpMode::Throughput => (decl.vtype.lanes * m, decl.vtype.lanes),
+            };
+            // widen the slow-side stream (throughput mode) and its
+            // source array port
+            if self.mode == PumpMode::Throughput {
+                g.containers.get_mut(s).unwrap().vtype.lanes = slow_lanes;
+            }
+            let mut vt_x = decl.vtype;
+            vt_x.lanes = slow_lanes;
+            let mut vt_fast = decl.vtype;
+            vt_fast.lanes = fast_lanes;
+
+            let sx = format!("{s}_cdc");
+            let sfast = format!("{s}_fast");
+            g.declare(DataDecl {
+                name: sx.clone(),
+                kind: ContainerKind::Stream,
+                vtype: vt_x,
+                shape: vec![],
+                storage: Storage::Stream { depth },
+                transient: true,
+            });
+            g.declare(DataDecl {
+                name: sfast.clone(),
+                kind: ContainerKind::Stream,
+                vtype: vt_fast,
+                shape: vec![],
+                storage: Storage::Stream { depth: depth * m },
+                transient: true,
+            });
+            let sync = g.add_node(Node::Cdc {
+                name: format!("sync_{s}"),
+                kind: CdcKind::Synchronizer,
+                input: s.clone(),
+                output: sx.clone(),
+                factor: m,
+            });
+            let issuer = g.add_node(Node::Cdc {
+                name: format!("issue_{s}"),
+                kind: CdcKind::Issuer,
+                input: sx.clone(),
+                output: sfast.clone(),
+                factor: m,
+            });
+            let sx_acc = g.add_node(Node::Access { data: sx.clone() });
+            let sfast_acc = g.add_node(Node::Access { data: sfast.clone() });
+            // original stream access node (slow side)
+            let s_acc = g
+                .node_ids()
+                .find(|id| matches!(g.node(*id), Node::Access { data } if data == s))
+                .expect("stream access node exists");
+            // consumers of s (compute side) move to s_fast
+            let consumer_edges: Vec<usize> = g
+                .edge_ids()
+                .filter(|e| {
+                    let edge = g.edge(*e);
+                    edge.src == s_acc && edge.memlet.data == *s
+                })
+                .map(|e| e.0)
+                .collect();
+            for eidx in consumer_edges {
+                g.edges[eidx].src = sfast_acc;
+                g.edges[eidx].memlet.data = sfast.clone();
+            }
+            // inner scope edges popping s move to s_fast
+            for e in g.edge_ids().collect::<Vec<_>>() {
+                if g.edge(e).memlet.data == *s && g.edge(e).src != s_acc && g.edge(e).dst != s_acc
+                {
+                    g.edge_mut(e).memlet.data = sfast.clone();
+                }
+            }
+            let pop = |d: &str| Memlet::new(d, Subset::index1(Expr::int(0)));
+            g.add_edge(s_acc, sync, pop(s));
+            g.add_edge(sync, sx_acc, pop(&sx));
+            g.add_edge(sx_acc, issuer, pop(&sx));
+            g.add_edge(issuer, sfast_acc, pop(&sfast));
+            plumbing += 2;
+        }
+
+        for s in &out_of {
+            let decl = g.container(s).unwrap().clone();
+            let depth = match decl.storage {
+                Storage::Stream { depth } => depth,
+                _ => unreachable!(),
+            };
+            let (slow_lanes, fast_lanes) = match self.mode {
+                PumpMode::Resource => (decl.vtype.lanes, decl.vtype.lanes / m),
+                PumpMode::Throughput => (decl.vtype.lanes * m, decl.vtype.lanes),
+            };
+            if self.mode == PumpMode::Throughput {
+                g.containers.get_mut(s).unwrap().vtype.lanes = slow_lanes;
+            }
+            let mut vt_x = decl.vtype;
+            vt_x.lanes = slow_lanes;
+            let mut vt_fast = decl.vtype;
+            vt_fast.lanes = fast_lanes;
+
+            let sx = format!("{s}_cdc");
+            let sfast = format!("{s}_fast");
+            g.declare(DataDecl {
+                name: sx.clone(),
+                kind: ContainerKind::Stream,
+                vtype: vt_x,
+                shape: vec![],
+                storage: Storage::Stream { depth },
+                transient: true,
+            });
+            g.declare(DataDecl {
+                name: sfast.clone(),
+                kind: ContainerKind::Stream,
+                vtype: vt_fast,
+                shape: vec![],
+                storage: Storage::Stream { depth: depth * m },
+                transient: true,
+            });
+            let packer = g.add_node(Node::Cdc {
+                name: format!("pack_{s}"),
+                kind: CdcKind::Packer,
+                input: sfast.clone(),
+                output: sx.clone(),
+                factor: m,
+            });
+            let sync = g.add_node(Node::Cdc {
+                name: format!("sync_{s}"),
+                kind: CdcKind::Synchronizer,
+                input: sx.clone(),
+                output: s.clone(),
+                factor: m,
+            });
+            let sx_acc = g.add_node(Node::Access { data: sx.clone() });
+            let sfast_acc = g.add_node(Node::Access { data: sfast.clone() });
+            let s_acc = g
+                .node_ids()
+                .find(|id| matches!(g.node(*id), Node::Access { data } if data == s))
+                .expect("stream access node exists");
+            // producers into s (compute side) move to s_fast
+            let producer_edges: Vec<usize> = g
+                .edge_ids()
+                .filter(|e| {
+                    let edge = g.edge(*e);
+                    edge.dst == s_acc && edge.memlet.data == *s
+                })
+                .map(|e| e.0)
+                .collect();
+            for eidx in producer_edges {
+                g.edges[eidx].dst = sfast_acc;
+                g.edges[eidx].memlet.data = sfast.clone();
+            }
+            for e in g.edge_ids().collect::<Vec<_>>() {
+                if g.edge(e).memlet.data == *s && g.edge(e).src != s_acc && g.edge(e).dst != s_acc
+                {
+                    g.edge_mut(e).memlet.data = sfast.clone();
+                }
+            }
+            let pop = |d: &str| Memlet::new(d, Subset::index1(Expr::int(0)));
+            g.add_edge(sfast_acc, packer, pop(&sfast));
+            g.add_edge(packer, sx_acc, pop(&sx));
+            g.add_edge(sx_acc, sync, pop(&sx));
+            g.add_edge(sync, s_acc, pop(s));
+            plumbing += 2;
+        }
+
+        // resource mode: the compute block's internal width shrinks —
+        // narrow every non-boundary stream and scale PE/lane counts
+        if self.mode == PumpMode::Resource {
+            let boundary: Vec<String> = into.iter().chain(out_of.iter()).cloned().collect();
+            let names: Vec<String> = g.containers.keys().cloned().collect();
+            for name in names {
+                let decl = g.containers.get_mut(&name).unwrap();
+                let is_fast_stream = decl.kind == ContainerKind::Stream
+                    && !boundary.contains(&name)
+                    && !name.ends_with("_cdc");
+                if is_fast_stream && !name.ends_with("_fast") && decl.vtype.lanes % m == 0 {
+                    decl.vtype.lanes /= m;
+                }
+            }
+            // library nodes shrink their lane width (PE vectorization)
+            for id in g.node_ids().collect::<Vec<_>>() {
+                if let Node::Library { op, .. } = g.node_mut(id) {
+                    match op {
+                        crate::ir::LibraryOp::SystolicGemm { vec_width, .. } => {
+                            if *vec_width % m == 0 {
+                                *vec_width /= m;
+                            }
+                        }
+                        crate::ir::LibraryOp::StencilStage { vec_width, .. } => {
+                            if *vec_width % m == 0 {
+                                *vec_width /= m;
+                            }
+                        }
+                        // FW keeps its compute width: resource mode does
+                        // not apply to an unvectorized datapath
+                        crate::ir::LibraryOp::FloydWarshall { .. } => {}
+                    }
+                }
+            }
+        }
+
+        g.multipump = Some(MultipumpInfo { factor: m, mode: self.mode, fast_nodes });
+
+        Ok(TransformReport {
+            transform: self.name(),
+            summary: format!(
+                "2 clock domains constructed; {plumbing} plumbing modules injected over {} in / {} out streams",
+                into.len(),
+                out_of.len()
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::vecadd_sdfg;
+    use crate::ir::validate::validate;
+    use crate::transforms::pass::PassManager;
+    use crate::transforms::{StreamingComposition, Vectorize};
+
+    fn streamed_vecadd(lanes: usize) -> Sdfg {
+        let mut g = vecadd_sdfg(1);
+        let mut pm = PassManager::new();
+        if lanes > 1 {
+            pm.run(&mut g, &Vectorize::new("vadd", lanes)).unwrap();
+        }
+        pm.run(&mut g, &StreamingComposition::default()).unwrap();
+        g
+    }
+
+    #[test]
+    fn requires_streaming_first() {
+        let g = vecadd_sdfg(1);
+        let err = MultiPump::resource(2).can_apply(&g).unwrap_err();
+        assert!(err.contains("not streamed"), "{err}");
+    }
+
+    #[test]
+    fn resource_mode_requires_divisible_width() {
+        let g = streamed_vecadd(1); // scalar streams
+        let err = MultiPump::resource(2).can_apply(&g).unwrap_err();
+        assert!(err.contains("not divisible"), "{err}");
+        // width 4 divides
+        let g4 = streamed_vecadd(4);
+        MultiPump::resource(2).can_apply(&g4).unwrap();
+    }
+
+    #[test]
+    fn double_pump_vecadd_resource_mode() {
+        let mut g = streamed_vecadd(4);
+        let mut pm = PassManager::new();
+        let report = pm.run(&mut g, &MultiPump::resource(2)).unwrap().clone();
+        validate(&g).unwrap();
+        assert!(report.summary.contains("2 clock domains"), "{}", report.summary);
+        let mp = g.multipump.as_ref().unwrap();
+        assert_eq!(mp.factor, 2);
+        assert_eq!(mp.mode, PumpMode::Resource);
+        // per boundary stream: sync+issuer or packer+sync
+        let cdc = g.node_ids().filter(|i| g.node(*i).is_cdc()).count();
+        assert_eq!(cdc, 6); // 3 streams × 2 modules
+        // fast-side stream narrowed to 2 lanes, slow side stays 4
+        assert_eq!(g.container("x_to_vadd[entry]").unwrap().vtype.lanes, 4);
+        assert_eq!(g.container("x_to_vadd[entry]_fast").unwrap().vtype.lanes, 2);
+        // compute scope is in the fast domain, readers are not
+        let entry = g.find_map_entry("vadd").unwrap();
+        assert!(g.in_fast_domain(entry));
+        let rd = g
+            .node_ids()
+            .find(|i| matches!(g.node(*i), Node::Reader { .. }))
+            .unwrap();
+        assert!(!g.in_fast_domain(rd));
+    }
+
+    #[test]
+    fn double_pump_throughput_mode_widens_boundary() {
+        let mut g = streamed_vecadd(2);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &MultiPump::throughput(2)).unwrap();
+        validate(&g).unwrap();
+        // slow-side stream doubled to 4 lanes, fast side keeps 2
+        assert_eq!(g.container("x_to_vadd[entry]").unwrap().vtype.lanes, 4);
+        assert_eq!(g.container("x_to_vadd[entry]_fast").unwrap().vtype.lanes, 2);
+    }
+
+    #[test]
+    fn cannot_pump_twice() {
+        let mut g = streamed_vecadd(4);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &MultiPump::resource(2)).unwrap();
+        let err = pm.run(&mut g, &MultiPump::resource(2)).unwrap_err();
+        assert!(err.contains("already multi-pumped"), "{err}");
+    }
+
+    #[test]
+    fn quad_pump_resource_mode() {
+        let mut g = streamed_vecadd(8);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &MultiPump::resource(4)).unwrap();
+        assert_eq!(g.container("x_to_vadd[entry]_fast").unwrap().vtype.lanes, 2);
+        assert_eq!(g.multipump.as_ref().unwrap().factor, 4);
+    }
+}

@@ -1,0 +1,133 @@
+//! The transformation pass manager.
+
+use crate::ir::validate::validate;
+use crate::ir::Sdfg;
+
+/// Result summary of one applied transformation.
+#[derive(Clone, Debug)]
+pub struct TransformReport {
+    pub transform: String,
+    pub summary: String,
+}
+
+/// A checked graph rewrite.
+pub trait Transform {
+    fn name(&self) -> String;
+
+    /// Feasibility check; Err carries the human-readable reason.
+    fn can_apply(&self, g: &Sdfg) -> Result<(), String>;
+
+    /// Mutate the graph. Only called after `can_apply` succeeded.
+    fn apply(&self, g: &mut Sdfg) -> Result<TransformReport, String>;
+}
+
+/// Applies transformations in sequence with validation around each.
+#[derive(Default)]
+pub struct PassManager {
+    pub reports: Vec<TransformReport>,
+    /// Validate before/after each pass (always on in tests; kept
+    /// switchable for the simulator's inner-loop benchmarks).
+    pub validate: bool,
+}
+
+impl PassManager {
+    pub fn new() -> Self {
+        PassManager { reports: Vec::new(), validate: true }
+    }
+
+    /// Run one transformation, validating the graph before and after.
+    pub fn run(&mut self, g: &mut Sdfg, t: &dyn Transform) -> Result<&TransformReport, String> {
+        if self.validate {
+            validate(g).map_err(|e| format!("pre-{}: {e}", t.name()))?;
+        }
+        t.can_apply(g).map_err(|e| format!("{} not applicable: {e}", t.name()))?;
+        let report = t.apply(g).map_err(|e| format!("{} failed: {e}", t.name()))?;
+        if self.validate {
+            validate(g).map_err(|e| format!("post-{}: {e}", t.name()))?;
+        }
+        self.reports.push(report);
+        Ok(self.reports.last().unwrap())
+    }
+
+    /// Try a transformation; Ok(false) when not applicable.
+    pub fn try_run(&mut self, g: &mut Sdfg, t: &dyn Transform) -> Result<bool, String> {
+        if self.validate {
+            validate(g).map_err(|e| format!("pre-{}: {e}", t.name()))?;
+        }
+        if t.can_apply(g).is_err() {
+            return Ok(false);
+        }
+        self.run(g, t)?;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::vecadd_sdfg;
+
+    struct Rename;
+    impl Transform for Rename {
+        fn name(&self) -> String {
+            "Rename".into()
+        }
+        fn can_apply(&self, g: &Sdfg) -> Result<(), String> {
+            if g.name.is_empty() {
+                Err("unnamed".into())
+            } else {
+                Ok(())
+            }
+        }
+        fn apply(&self, g: &mut Sdfg) -> Result<TransformReport, String> {
+            g.name = format!("{}_renamed", g.name);
+            Ok(TransformReport { transform: self.name(), summary: g.name.clone() })
+        }
+    }
+
+    struct Corrupt;
+    impl Transform for Corrupt {
+        fn name(&self) -> String {
+            "Corrupt".into()
+        }
+        fn can_apply(&self, _: &Sdfg) -> Result<(), String> {
+            Ok(())
+        }
+        fn apply(&self, g: &mut Sdfg) -> Result<TransformReport, String> {
+            // introduce a cycle: last node → first node
+            let a = crate::ir::NodeId(0);
+            let b = crate::ir::NodeId(g.nodes.len() - 1);
+            let data = g.containers.keys().next().unwrap().clone();
+            g.add_edge(b, a, crate::ir::Memlet::new(&data, crate::symbolic::Subset::all1(1)));
+            g.add_edge(a, b, crate::ir::Memlet::new(&data, crate::symbolic::Subset::all1(1)));
+            Ok(TransformReport { transform: self.name(), summary: "corrupted".into() })
+        }
+    }
+
+    #[test]
+    fn run_applies_and_records() {
+        let mut g = vecadd_sdfg(1);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &Rename).unwrap();
+        assert_eq!(g.name, "vecadd_renamed");
+        assert_eq!(pm.reports.len(), 1);
+    }
+
+    #[test]
+    fn corrupting_transform_caught_by_post_validation() {
+        let mut g = vecadd_sdfg(1);
+        let mut pm = PassManager::new();
+        let err = pm.run(&mut g, &Corrupt).unwrap_err();
+        assert!(err.contains("post-Corrupt"), "{err}");
+    }
+
+    #[test]
+    fn try_run_skips_inapplicable() {
+        let mut g = vecadd_sdfg(1);
+        g.name = String::new();
+        // bypass: Rename.can_apply fails on empty name
+        let mut pm = PassManager::new();
+        assert!(!pm.try_run(&mut g, &Rename).unwrap());
+        assert!(pm.reports.is_empty());
+    }
+}

@@ -1,0 +1,403 @@
+//! Streaming composition (paper Figure 3, box ②).
+//!
+//! *"the streaming transformation extracts the reads (writes) out of
+//! the computation by introducing other components that access x and y
+//! (z) in the same order as the computation, and push (pop) the values
+//! into streams. [...] Now that the communication on the streams drives
+//! control flow, all the four components (two readers, compute, and
+//! writer) can run in parallel."*
+//!
+//! Three rewrites compose:
+//! 1. external array reads of a compute scope become
+//!    `access → Reader → stream → scope`;
+//! 2. external array writes become `scope → stream → Writer → access`;
+//! 3. transient arrays between two compute modules (stencil chain
+//!    stages) become direct streams.
+
+use super::pass::{Transform, TransformReport};
+use crate::analysis::movement::scope_movement;
+use crate::analysis::streamability::{streamable_access, Streamability};
+use crate::ir::{
+    ContainerKind, DataDecl, Memlet, Node, NodeId, Sdfg, Storage,
+};
+use crate::symbolic::{Expr, Range, Subset};
+
+/// Stream depth for injected FIFOs (transactions). The paper relies on
+/// the Xilinx AXI infra defaults; 16 covers CDC latency comfortably.
+pub const DEFAULT_STREAM_DEPTH: usize = 16;
+
+/// Convert the whole application to streaming form (greedy, §3.4).
+pub struct StreamingComposition {
+    pub stream_depth: usize,
+}
+
+impl Default for StreamingComposition {
+    fn default() -> Self {
+        StreamingComposition { stream_depth: DEFAULT_STREAM_DEPTH }
+    }
+}
+
+/// Compute "modules" at the streaming level: map scopes (by entry) and
+/// library nodes.
+fn compute_modules(g: &Sdfg) -> Vec<NodeId> {
+    g.node_ids()
+        .filter(|id| {
+            matches!(g.node(*id), Node::MapEntry { .. } | Node::Library { .. })
+        })
+        .collect()
+}
+
+/// The boundary node data flows into for a module (entry for maps,
+/// the node itself for libraries), and out of (exit / itself).
+fn module_io(g: &Sdfg, id: NodeId) -> (NodeId, NodeId) {
+    match g.node(id) {
+        Node::MapEntry { name, .. } => (id, g.find_map_exit(name).expect("validated")),
+        _ => (id, id),
+    }
+}
+
+impl StreamingComposition {
+    /// Check one module's external accesses for streamability; returns
+    /// the list of (container, is_read) conversions it would perform.
+    fn plan_module(&self, g: &Sdfg, module: NodeId) -> Result<Vec<(String, bool)>, String> {
+        let mut plan = Vec::new();
+        match g.node(module) {
+            Node::MapEntry { .. } => {
+                let mv = scope_movement(g, module)?;
+                for acc in mv.all() {
+                    let decl = g
+                        .container(&acc.data)
+                        .ok_or_else(|| format!("unknown container {}", acc.data))?;
+                    if decl.kind == ContainerKind::Stream {
+                        continue; // already a stream
+                    }
+                    match streamable_access(acc, mv.inner_param()) {
+                        Streamability::Streamable { .. } => {
+                            plan.push((acc.data.clone(), acc.is_read))
+                        }
+                        Streamability::Blocked(r) => {
+                            return Err(format!("module {}: {r}", g.node(module).label()))
+                        }
+                    }
+                }
+                // a container must not be accessed under two different
+                // subsets (stencil neighbours need library nodes with
+                // internal line buffers, not plain streaming)
+                for acc in mv.reads.iter() {
+                    let same: Vec<_> =
+                        mv.reads.iter().filter(|a| a.data == acc.data).collect();
+                    if same.len() > 1
+                        && same
+                            .iter()
+                            .any(|a| a.subset.same_as(&acc.subset) != Some(true))
+                    {
+                        return Err(format!(
+                            "container '{}' read under multiple subsets; requires a library node with line buffers",
+                            acc.data
+                        ));
+                    }
+                }
+            }
+            Node::Library { .. } => {
+                // library nodes access their arrays linearly by
+                // construction (feeders/drainers); all arrays qualify
+                for e in g.in_edges(module) {
+                    let data = g.edge(e).memlet.data.clone();
+                    if g.container(&data).map(|d| d.kind) == Some(ContainerKind::Array) {
+                        plan.push((data, true));
+                    }
+                }
+                for e in g.out_edges(module) {
+                    let data = g.edge(e).memlet.data.clone();
+                    if g.container(&data).map(|d| d.kind) == Some(ContainerKind::Array) {
+                        plan.push((data, false));
+                    }
+                }
+            }
+            _ => {}
+        }
+        Ok(plan)
+    }
+}
+
+impl Transform for StreamingComposition {
+    fn name(&self) -> String {
+        "StreamingComposition".into()
+    }
+
+    fn can_apply(&self, g: &Sdfg) -> Result<(), String> {
+        let modules = compute_modules(g);
+        if modules.is_empty() {
+            return Err("no computational modules".into());
+        }
+        if g.node_ids().any(|id| g.node(id).is_io_module()) {
+            return Err("already streamed".into());
+        }
+        let mut any = false;
+        for m in modules {
+            if !self.plan_module(g, m)?.is_empty() {
+                any = true;
+            }
+        }
+        if !any {
+            return Err("no external array accesses to stream".into());
+        }
+        Ok(())
+    }
+
+    fn apply(&self, g: &mut Sdfg) -> Result<TransformReport, String> {
+        let modules = compute_modules(g);
+        let mut readers = 0usize;
+        let mut writers = 0usize;
+        let mut fused = 0usize;
+
+        // 3. transient arrays between two compute modules → streams
+        //    (detected as: access node with ≥1 compute producer and ≥1
+        //    compute consumer, container transient)
+        let mut inter: Vec<NodeId> = Vec::new();
+        for id in g.node_ids() {
+            if let Node::Access { data } = g.node(id) {
+                let decl = g.container(data).unwrap();
+                if !decl.transient || decl.kind != ContainerKind::Array {
+                    continue;
+                }
+                let has_producer = !g.in_edges(id).is_empty();
+                let has_consumer = !g.out_edges(id).is_empty();
+                if has_producer && has_consumer {
+                    inter.push(id);
+                }
+            }
+        }
+        for id in inter {
+            let data = match g.node(id) {
+                Node::Access { data } => data.clone(),
+                _ => unreachable!(),
+            };
+            let decl = g.containers.get_mut(&data).unwrap();
+            decl.kind = ContainerKind::Stream;
+            decl.storage = Storage::Stream { depth: self.stream_depth };
+            decl.shape = vec![];
+            fused += 1;
+        }
+
+        // 1 & 2: wrap external arrays of every module with Reader/Writer
+        for module in modules {
+            let plan = self.plan_module(g, module)?;
+            let (inflow, outflow) = module_io(g, module);
+            for (data, is_read) in plan {
+                let decl = g.container(&data).unwrap().clone();
+                if decl.kind == ContainerKind::Stream {
+                    continue; // converted by step 3 already
+                }
+                let vtype = decl.vtype;
+                let full = Subset::new(
+                    decl.shape
+                        .iter()
+                        .map(|d| Range::new(Expr::int(0), d.clone(), 1))
+                        .collect(),
+                );
+                if is_read {
+                    let sname = format!("{data}_to_{}", g.node(module).label());
+                    g.declare(DataDecl {
+                        name: sname.clone(),
+                        kind: ContainerKind::Stream,
+                        vtype,
+                        shape: vec![],
+                        storage: Storage::Stream { depth: self.stream_depth },
+                        transient: true,
+                    });
+                    let rd = g.add_node(Node::Reader {
+                        name: format!("read_{data}"),
+                        data: data.clone(),
+                        stream: sname.clone(),
+                    });
+                    let sa = g.add_node(Node::Access { data: sname.clone() });
+                    // original access node feeding the module
+                    let src_access = g
+                        .in_edges(inflow)
+                        .into_iter()
+                        .map(|e| g.edge(e).src)
+                        .find(|n| matches!(g.node(*n), Node::Access { data: d } if *d == data));
+                    let src_access = match src_access {
+                        Some(a) => a,
+                        None => continue, // already rewired (shared container)
+                    };
+                    // preserve the original inner connector name
+                    let inner_conn = g
+                        .in_edges(inflow)
+                        .iter()
+                        .find_map(|e| {
+                            let edge = g.edge(*e);
+                            if edge.src == src_access && edge.memlet.data == data {
+                                edge.memlet.dst_conn.clone()
+                            } else {
+                                None
+                            }
+                        });
+                    g.retain_edges(|e| {
+                        !(e.src == src_access && e.dst == inflow && e.memlet.data == data)
+                    });
+                    g.add_edge(src_access, rd, Memlet::new(&data, full.clone()));
+                    g.add_edge(rd, sa, Memlet::new(&sname, Subset::index1(Expr::int(0))));
+                    let mut to_module = Memlet::new(&sname, Subset::index1(Expr::int(0)));
+                    to_module.dst_conn = inner_conn;
+                    g.add_edge(sa, inflow, to_module);
+                    // rewrite inner edges (entry → tasklet) to pop the
+                    // stream. Library nodes have no inner edges (inflow
+                    // == outflow == the node), so skip them — rewriting
+                    // there would clobber the node's output edge.
+                    if inflow != outflow {
+                        for eid in g.edge_ids().collect::<Vec<_>>() {
+                            let e = g.edge(eid);
+                            if e.src == inflow && e.memlet.data == data {
+                                let conn = e.memlet.dst_conn.clone();
+                                let em = g.edge_mut(eid);
+                                em.memlet = Memlet {
+                                    data: sname.clone(),
+                                    subset: Subset::index1(Expr::int(0)),
+                                    src_conn: None,
+                                    dst_conn: conn,
+                                    dynamic: false,
+                                };
+                            }
+                        }
+                    }
+                    readers += 1;
+                } else {
+                    let sname = format!("{data}_from_{}", g.node(module).label());
+                    g.declare(DataDecl {
+                        name: sname.clone(),
+                        kind: ContainerKind::Stream,
+                        vtype,
+                        shape: vec![],
+                        storage: Storage::Stream { depth: self.stream_depth },
+                        transient: true,
+                    });
+                    let wr = g.add_node(Node::Writer {
+                        name: format!("write_{data}"),
+                        data: data.clone(),
+                        stream: sname.clone(),
+                    });
+                    let sa = g.add_node(Node::Access { data: sname.clone() });
+                    let dst_access = g
+                        .out_edges(outflow)
+                        .into_iter()
+                        .map(|e| g.edge(e).dst)
+                        .find(|n| matches!(g.node(*n), Node::Access { data: d } if *d == data));
+                    let dst_access = match dst_access {
+                        Some(a) => a,
+                        None => continue,
+                    };
+                    let inner_conn = g
+                        .out_edges(outflow)
+                        .iter()
+                        .find_map(|e| {
+                            let edge = g.edge(*e);
+                            if edge.dst == dst_access && edge.memlet.data == data {
+                                edge.memlet.src_conn.clone()
+                            } else {
+                                None
+                            }
+                        });
+                    g.retain_edges(|e| {
+                        !(e.src == outflow && e.dst == dst_access && e.memlet.data == data)
+                    });
+                    let mut from_module = Memlet::new(&sname, Subset::index1(Expr::int(0)));
+                    from_module.src_conn = inner_conn;
+                    g.add_edge(outflow, sa, from_module);
+                    g.add_edge(sa, wr, Memlet::new(&sname, Subset::index1(Expr::int(0))));
+                    g.add_edge(wr, dst_access, Memlet::new(&data, full.clone()));
+                    // rewrite inner edges (tasklet → exit); skip library
+                    // nodes (no inner edges)
+                    if inflow != outflow {
+                        for eid in g.edge_ids().collect::<Vec<_>>() {
+                            let e = g.edge(eid);
+                            if e.dst == outflow && e.memlet.data == data {
+                                let conn = e.memlet.src_conn.clone();
+                                let em = g.edge_mut(eid);
+                                em.memlet = Memlet {
+                                    data: sname.clone(),
+                                    subset: Subset::index1(Expr::int(0)),
+                                    src_conn: conn,
+                                    dst_conn: None,
+                                    dynamic: false,
+                                };
+                            }
+                        }
+                    }
+                    writers += 1;
+                }
+            }
+        }
+
+        Ok(TransformReport {
+            transform: self.name(),
+            summary: format!(
+                "{readers} readers, {writers} writers injected, {fused} transient arrays fused to streams"
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::vecadd_sdfg;
+    use crate::ir::validate::validate;
+    use crate::transforms::pass::PassManager;
+
+    #[test]
+    fn vecadd_streams_into_four_components() {
+        let mut g = vecadd_sdfg(1);
+        let mut pm = PassManager::new();
+        let report = pm.run(&mut g, &StreamingComposition::default()).unwrap().clone();
+        validate(&g).unwrap();
+        assert!(report.summary.contains("2 readers"), "{}", report.summary);
+        assert!(report.summary.contains("1 writers"), "{}", report.summary);
+        // paper: two readers, compute, writer
+        let readers = g
+            .node_ids()
+            .filter(|i| matches!(g.node(*i), Node::Reader { .. }))
+            .count();
+        let writers = g
+            .node_ids()
+            .filter(|i| matches!(g.node(*i), Node::Writer { .. }))
+            .count();
+        assert_eq!((readers, writers), (2, 1));
+        // inner tasklet edges now pop streams
+        let t = g
+            .node_ids()
+            .find(|i| matches!(g.node(*i), Node::Tasklet(_)))
+            .unwrap();
+        for e in g.in_edges(t) {
+            let d = &g.edge(e).memlet.data;
+            assert!(g.container(d).unwrap().kind == ContainerKind::Stream, "{d}");
+        }
+    }
+
+    #[test]
+    fn idempotence_guard() {
+        let mut g = vecadd_sdfg(1);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &StreamingComposition::default()).unwrap();
+        let err = pm
+            .run(&mut g, &StreamingComposition::default())
+            .unwrap_err();
+        assert!(err.contains("already streamed"), "{err}");
+    }
+
+    #[test]
+    fn stencil_neighbours_rejected_for_plain_maps() {
+        // 1-D smooth via the DSL: reads a[i-1], a[i], a[i+1]
+        let src = "
+program smooth(N):
+  a: f32[N] @ hbm
+  b: f32[N] @ hbm
+  map i in 1:N-1:
+    b[i] = 0.25 * a[i-1] + 0.5 * a[i] + 0.25 * a[i+1]
+";
+        let g = crate::frontend::compile(src).unwrap();
+        let err = StreamingComposition::default().can_apply(&g).unwrap_err();
+        assert!(err.contains("multiple subsets"), "{err}");
+    }
+}

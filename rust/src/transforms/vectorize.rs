@@ -1,0 +1,222 @@
+//! Traditional vectorization (paper Figure 3, box ①).
+//!
+//! *"it changes the range of the parametric scope by dividing them by
+//! V, the applied vectorization factor; it converts the type of data
+//! containers to a vector data type; and modifies the edges' addresses
+//! accordingly."*
+
+use super::pass::{Transform, TransformReport};
+use crate::analysis::movement::scope_movement;
+use crate::analysis::vectorizability::check_traditional;
+use crate::ir::graph::DerivedSymbol;
+use crate::ir::{Node, Sdfg};
+use crate::symbolic::{Expr, SymbolTable};
+
+/// Vectorize the map named `map_name` by `factor`.
+pub struct Vectorize {
+    pub map_name: String,
+    pub factor: usize,
+}
+
+impl Vectorize {
+    pub fn new(map_name: &str, factor: usize) -> Self {
+        Vectorize { map_name: map_name.to_string(), factor }
+    }
+}
+
+impl Transform for Vectorize {
+    fn name(&self) -> String {
+        format!("Vectorize[{} x{}]", self.map_name, self.factor)
+    }
+
+    fn can_apply(&self, g: &Sdfg) -> Result<(), String> {
+        if self.factor < 2 {
+            return Err("factor must be ≥ 2".into());
+        }
+        let entry = g
+            .find_map_entry(&self.map_name)
+            .ok_or_else(|| format!("no map '{}'", self.map_name))?;
+        let mv = scope_movement(g, entry)?;
+        // traditional rules; extent divisibility is established via a
+        // derived symbol, so pass factor 1 to skip the symbolic check
+        // and verify stride-1 linearity + dependence freedom here.
+        let verdict = check_traditional(g, &mv, 1, &SymbolTable::new());
+        if !verdict.is_ok() {
+            return Err(verdict.reasons().join("; "));
+        }
+        // all accesses must be unit-stride (stride V access cannot be
+        // re-vectorized without gather)
+        for acc in mv.all() {
+            match acc.subset.linear_in(mv.inner_param()) {
+                Some(1) => {}
+                Some(s) => return Err(format!("access to '{}' has stride {s} ≠ 1", acc.data)),
+                None => return Err(format!("access to '{}' not linear", acc.data)),
+            }
+        }
+        Ok(())
+    }
+
+    fn apply(&self, g: &mut Sdfg) -> Result<TransformReport, String> {
+        let entry = g.find_map_entry(&self.map_name).unwrap();
+        let mv = scope_movement(g, entry)?;
+        let param = mv.inner_param().to_string();
+        let v = self.factor as i64;
+
+        // 1. divide the map range by V (introducing a derived symbol if
+        //    the extent is symbolic)
+        let mut widened_containers: Vec<String> = Vec::new();
+        if let Node::MapEntry { ranges, .. } = g.node_mut(entry) {
+            let inner = ranges.last_mut().unwrap();
+            if let Some(divided) = inner.divide_extent(v) {
+                *inner = divided;
+            } else {
+                // symbolic extent: N → N_div_V
+                let extent = inner.extent().ok_or("non-affine extent")?;
+                let base = match extent.symbols().as_slice() {
+                    [s] if extent.coeff(s) == Some(1) && extent.as_const().is_none() => s.clone(),
+                    _ => return Err(format!("cannot divide extent {extent} symbolically")),
+                };
+                let derived_name = format!("{base}_div_{v}");
+                inner.end = inner.begin.add(&Expr::sym(&derived_name));
+                g.derived.push(DerivedSymbol { name: derived_name.clone(), base, divisor: v });
+                g.add_symbol(&derived_name);
+            }
+        }
+
+        // 2. widen the vector type of every container the scope accesses
+        for acc in mv.all() {
+            if !widened_containers.contains(&acc.data) {
+                widened_containers.push(acc.data.clone());
+            }
+        }
+        let mut new_derived: Vec<(String, String)> = Vec::new();
+        for name in &widened_containers {
+            // decide the shape rewrite first (immutable), then mutate
+            let last_dim = g.containers[name].shape.last().cloned();
+            let rewritten = match &last_dim {
+                Some(last) => {
+                    if let Some(divided) = last.div_exact(v) {
+                        Some(divided)
+                    } else if let [s] = last.symbols().as_slice() {
+                        let derived_name = format!("{s}_div_{v}");
+                        if !g.symbols.contains(&derived_name)
+                            && !new_derived.iter().any(|(n, _)| n == &derived_name)
+                        {
+                            new_derived.push((derived_name.clone(), s.clone()));
+                        }
+                        Some(Expr::sym(&derived_name))
+                    } else {
+                        None
+                    }
+                }
+                None => None,
+            };
+            let decl = g.containers.get_mut(name).unwrap();
+            decl.vtype.lanes *= self.factor;
+            if let (Some(last), Some(new_dim)) = (decl.shape.last_mut(), rewritten) {
+                *last = new_dim;
+            }
+        }
+        for (name, base) in new_derived {
+            g.derived.push(DerivedSymbol { name: name.clone(), base, divisor: v });
+            g.add_symbol(&name);
+        }
+
+        // 3. memlet subsets keep their form: index `i` now addresses
+        //    vector i (of V lanes). Outer full-range memlets shrink.
+        let known_symbols = g.symbols.clone();
+        for eid in g.edge_ids().collect::<Vec<_>>() {
+            let e = g.edge_mut(eid);
+            if widened_containers.contains(&e.memlet.data) {
+                for dim in &mut e.memlet.subset.dims {
+                    if dim.is_index() {
+                        continue;
+                    }
+                    if let Some(divided) = dim.clone().divide_extent(v) {
+                        *dim = divided;
+                    } else if let Some(extent) = dim.extent() {
+                        if let [s] = extent.symbols().as_slice() {
+                            let derived_name = format!("{s}_div_{v}");
+                            if known_symbols.contains(&derived_name) {
+                                dim.end = dim.begin.add(&Expr::sym(&derived_name));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let _ = param;
+        Ok(TransformReport {
+            transform: self.name(),
+            summary: format!(
+                "map '{}' divided by {}, containers widened: {}",
+                self.map_name,
+                self.factor,
+                widened_containers.join(", ")
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::vecadd_sdfg;
+    use crate::ir::validate::validate;
+    use crate::transforms::pass::PassManager;
+
+    #[test]
+    fn vectorize_vecadd_by_4() {
+        let mut g = vecadd_sdfg(1);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &Vectorize::new("vadd", 4)).unwrap();
+        validate(&g).unwrap();
+        // containers widened
+        assert_eq!(g.container("x").unwrap().vtype.lanes, 4);
+        assert_eq!(g.container("z").unwrap().vtype.lanes, 4);
+        // derived symbol registered
+        assert!(g.symbols.contains(&"N_div_4".to_string()));
+        let env = g.bind(&[("N", 64)]).unwrap();
+        assert_eq!(env.get("N_div_4"), Some(16));
+        // map range divided
+        let entry = g.find_map_entry("vadd").unwrap();
+        if let Node::MapEntry { ranges, .. } = g.node(entry) {
+            assert_eq!(ranges[0].count(&env), Some(16));
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn non_divisible_binding_rejected_at_bind_time() {
+        let mut g = vecadd_sdfg(1);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &Vectorize::new("vadd", 4)).unwrap();
+        assert!(g.bind(&[("N", 65)]).is_err());
+    }
+
+    #[test]
+    fn factor_one_rejected() {
+        let g = vecadd_sdfg(1);
+        assert!(Vectorize::new("vadd", 1).can_apply(&g).is_err());
+    }
+
+    #[test]
+    fn missing_map_rejected() {
+        let g = vecadd_sdfg(1);
+        assert!(Vectorize::new("nope", 2).can_apply(&g).is_err());
+    }
+
+    #[test]
+    fn double_vectorization_compounds() {
+        let mut g = vecadd_sdfg(1);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &Vectorize::new("vadd", 2)).unwrap();
+        pm.run(&mut g, &Vectorize::new("vadd", 2)).unwrap();
+        assert_eq!(g.container("x").unwrap().vtype.lanes, 4);
+        let env = g.bind(&[("N", 64)]).unwrap();
+        assert_eq!(env.get("N_div_2"), Some(32));
+        assert_eq!(env.get("N_div_2_div_2"), Some(16));
+    }
+}

@@ -1,0 +1,172 @@
+//! Bench timing harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`bench`] /
+//! [`BenchSuite`]: warmup, fixed-count timed runs, median + MAD, and a
+//! one-line report compatible with quick eyeballing and the §Perf log.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub median: Duration,
+    pub mad: Duration,
+    pub iters: u32,
+    /// Optional derived throughput (unit/s) if the caller supplied units.
+    pub throughput: Option<f64>,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        let thr = self
+            .throughput
+            .map(|t| format!("  {:>10}/s", human(t)))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>12}  ±{:>10}  ({} iters){}",
+            self.name,
+            human_dur(self.median),
+            human_dur(self.mad),
+            self.iters,
+            thr
+        )
+    }
+}
+
+fn human_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn human(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Time `f`, returning median/MAD over `iters` runs after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<Duration> = samples
+        .iter()
+        .map(|s| if *s > median { *s - median } else { median - *s })
+        .collect();
+    devs.sort();
+    let mad = devs[devs.len() / 2];
+    Measurement { name: name.to_string(), median, mad, iters: iters.max(1), throughput: None }
+}
+
+/// Time `f` and derive throughput from `units` work items per call.
+pub fn bench_throughput<F: FnMut()>(
+    name: &str,
+    warmup: u32,
+    iters: u32,
+    units: f64,
+    f: F,
+) -> Measurement {
+    let mut m = bench(name, warmup, iters, f);
+    let secs = m.median.as_secs_f64();
+    if secs > 0.0 {
+        m.throughput = Some(units / secs);
+    }
+    m
+}
+
+/// A named collection of measurements printed as a block; bench binaries
+/// build one suite and call [`BenchSuite::finish`].
+#[derive(Default)]
+pub struct BenchSuite {
+    pub title: String,
+    pub results: Vec<Measurement>,
+}
+
+impl BenchSuite {
+    pub fn new(title: impl Into<String>) -> Self {
+        BenchSuite { title: title.into(), results: Vec::new() }
+    }
+
+    pub fn add(&mut self, m: Measurement) {
+        println!("  {}", m.report());
+        self.results.push(m);
+    }
+
+    /// Print the footer. Returns the results for further processing.
+    pub fn finish(self) -> Vec<Measurement> {
+        println!("== {} : {} benchmarks ==", self.title, self.results.len());
+        self.results
+    }
+
+    pub fn start(&self) {
+        println!("== {} ==", self.title);
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(m.median > Duration::ZERO);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn throughput_derived() {
+        let m = bench_throughput("t", 0, 3, 1e6, || {
+            std::thread::sleep(Duration::from_micros(200));
+        });
+        let thr = m.throughput.unwrap();
+        assert!(thr > 0.0 && thr < 1e10, "{thr}");
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human(500.0), "500.0");
+        assert_eq!(human(2_000.0), "2.00k");
+        assert_eq!(human(3e6), "3.00M");
+        assert_eq!(human(4e9), "4.00G");
+        assert!(human_dur(Duration::from_nanos(12)).contains("ns"));
+        assert!(human_dur(Duration::from_micros(12)).contains("µs"));
+        assert!(human_dur(Duration::from_millis(12)).contains("ms"));
+        assert!(human_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,240 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A parsed command line: subcommand, options and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+}
+
+/// Command-line schema: named options + whether a subcommand is expected.
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub subcommands: Vec<(&'static str, &'static str)>,
+    pub options: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli { program, about, subcommands: Vec::new(), options: Vec::new() }
+    }
+
+    pub fn subcommand(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.options.push(OptSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> Self {
+        self.options.push(OptSpec { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.options.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} ", self.program, self.about, self.program);
+        if !self.subcommands.is_empty() {
+            s.push_str("<SUBCOMMAND> ");
+        }
+        s.push_str("[OPTIONS] [ARGS...]\n");
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for (name, help) in &self.subcommands {
+                s.push_str(&format!("  {name:<14} {help}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.options {
+            let v = if o.takes_value { " <VALUE>" } else { "" };
+            let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{v:<9} {}{d}\n", o.name, o.help));
+        }
+        s.push_str("  --help       print this message\n");
+        s
+    }
+
+    /// Parse a raw argument list (without argv[0]).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut out = Parsed::default();
+        for spec in &self.options {
+            if let Some(d) = spec.default {
+                out.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .options
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.help_text()))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| format!("option --{name} requires a value"))?,
+                    };
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} does not take a value"));
+                    }
+                    out.flags.insert(name.to_string(), true);
+                }
+            } else if out.subcommand.is_none()
+                && !self.subcommands.is_empty()
+                && out.positional.is_empty()
+            {
+                if !self.subcommands.iter().any(|(n, _)| n == a) {
+                    return Err(format!("unknown subcommand '{a}'\n\n{}", self.help_text()));
+                }
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse `std::env::args()`, printing help/errors and exiting on failure.
+    pub fn parse_env(&self) -> Parsed {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&args) {
+            Ok(p) => p,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with(self.program) { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("tvec", "test")
+            .subcommand("run", "run it")
+            .subcommand("report", "report it")
+            .opt_default("size", "problem size", "16")
+            .opt("config", "config file")
+            .flag("verbose", "talk more")
+    }
+
+    fn parse(args: &[&str]) -> Result<Parsed, String> {
+        cli().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags_positionals() {
+        let p = parse(&["run", "--size", "32", "--verbose", "extra"]).unwrap();
+        assert_eq!(p.subcommand.as_deref(), Some("run"));
+        assert_eq!(p.get_usize("size"), Some(32));
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let p = parse(&["run", "--size=64"]).unwrap();
+        assert_eq!(p.get_usize("size"), Some(64));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = parse(&["report"]).unwrap();
+        assert_eq!(p.get_or("size", "?"), "16");
+        assert!(!p.flag("verbose"));
+        assert_eq!(p.get("config"), None);
+    }
+
+    #[test]
+    fn unknown_option_is_an_error() {
+        assert!(parse(&["run", "--bogus"]).is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_is_an_error() {
+        assert!(parse(&["frobnicate"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(parse(&["run", "--size"]).is_err());
+    }
+
+    #[test]
+    fn help_lists_everything() {
+        let h = cli().help_text();
+        for needle in ["run", "report", "--size", "--config", "--verbose", "default: 16"] {
+            assert!(h.contains(needle), "help missing {needle}: {h}");
+        }
+    }
+}

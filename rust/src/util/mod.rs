@@ -1,0 +1,13 @@
+//! Small in-repo substrates for facilities whose crates are unavailable in
+//! the offline build environment (rand, clap, criterion, proptest):
+//! a seeded PRNG, a CLI argument parser, table formatting, a bench timing
+//! harness and a miniature property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod quickcheck;
+pub mod rng;
+pub mod table;
+
+pub use rng::Rng;
+pub use table::Table;

@@ -1,0 +1,128 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! [`forall`] runs a property over `n` generated cases from a seeded
+//! [`Rng`](crate::util::Rng); on failure it reports the case index and
+//! seed so the exact case can be replayed. Shrinking is intentionally
+//! omitted — cases are generated small-biased instead (see [`Gen`]).
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to properties: wraps the PRNG with size-biased
+/// helpers so most generated cases are small (easier to debug) while the
+/// tail still covers large inputs.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+}
+
+impl<'a> Gen<'a> {
+    /// usize in `[lo, hi)`, biased towards small values (~50% in the
+    /// bottom eighth of the range).
+    pub fn small_usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        let span = hi - lo;
+        if self.rng.f64() < 0.5 {
+            lo + self.rng.below((span as u64 / 8).max(1)) as usize
+        } else {
+            lo + self.rng.below(span as u64) as usize
+        }
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo < hi);
+        lo + self.rng.below((hi - lo) as u64) as i64
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+
+    pub fn choose<'b, T>(&mut self, xs: &'b [T]) -> &'b T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        self.rng.f32_vec(n)
+    }
+}
+
+/// Run `prop` on `n` generated cases. Panics with seed + case index on the
+/// first failure (a property returns `Err(reason)` or panics itself).
+pub fn forall<F>(name: &str, seed: u64, n: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..n {
+        let mut rng = root.fork(case as u64);
+        let mut g = Gen { rng: &mut rng };
+        if let Err(reason) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{n} (seed {seed}): {reason}\n\
+                 replay: forall(\"{name}\", {seed}, {}, ..) and inspect case {case}",
+                case + 1
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("add-commutes", 1, 200, |g| {
+            let a = g.i64(-1000, 1000);
+            let b = g.i64(-1000, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math is broken".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        forall("always-fails", 2, 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn small_bias_produces_small_and_large() {
+        let mut rng = Rng::new(3);
+        let mut g = Gen { rng: &mut rng };
+        let xs: Vec<usize> = (0..500).map(|_| g.small_usize(0, 1000)).collect();
+        assert!(xs.iter().filter(|&&x| x < 125).count() > 200);
+        assert!(xs.iter().any(|&x| x > 500));
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-6, 1e-6).is_err());
+    }
+}

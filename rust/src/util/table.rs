@@ -1,0 +1,137 @@
+//! ASCII table formatting for experiment reports — every table the
+//! experiment runner prints (Tables 1–6, Figure 4 series) goes through
+//! this formatter so benches and the CLI produce identical artifacts.
+
+/// A simple column-aligned table with a title and optional footnote.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub footnote: Option<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            footnote: None,
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn footnote(&mut self, s: impl Into<String>) -> &mut Self {
+        self.footnote = Some(s.into());
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let sep: String = w.iter().map(|n| format!("+{}", "-".repeat(n + 2))).collect::<String>() + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                // right-align numeric-looking cells, left-align labels
+                let numeric = c.chars().next().map_or(false, |ch| ch.is_ascii_digit() || ch == '-' || ch == '+')
+                    && c.parse::<f64>().is_ok();
+                if numeric {
+                    s.push_str(&format!("| {:>width$} ", c, width = w[i]));
+                } else {
+                    s.push_str(&format!("| {:<width$} ", c, width = w[i]));
+                }
+            }
+            s.push('|');
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        if let Some(f) = &self.footnote {
+            out.push_str(&format!("note: {f}\n"));
+        }
+        out
+    }
+}
+
+/// Format a float with `d` decimals, trimming to a clean cell.
+pub fn fnum(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+/// Format a percentage (already 0–100 scaled) with two decimals.
+pub fn pct(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["name", "value"]);
+        t.row(vec!["a".into(), "1.5".into()]);
+        t.row(vec!["longer".into(), "20".into()]);
+        let r = t.render();
+        assert!(r.contains("| name   |"));
+        assert!(r.contains("| longer |"));
+        // numeric right-aligned within width 5 ("value")
+        assert!(r.contains("|   1.5 |"), "{r}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn footnote_rendered() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into()]);
+        t.footnote("hello");
+        assert!(t.render().contains("note: hello"));
+    }
+
+    #[test]
+    fn fnum_and_pct() {
+        assert_eq!(fnum(1.23456, 2), "1.23");
+        assert_eq!(pct(88.888), "88.89");
+    }
+}

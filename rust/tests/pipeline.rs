@@ -1,0 +1,137 @@
+//! Integration: the full compile pipeline across apps and transform
+//! combinations.
+
+use temporal_vec::apps;
+use temporal_vec::coordinator::{compile, BuildSpec};
+use temporal_vec::ir::PumpMode;
+
+#[test]
+fn dsl_to_pumped_design() {
+    let src = "
+program axpy(N):
+  x: f32[N] @ hbm
+  y: f32[N] @ hbm
+  map i in 0:N:
+    y[i] = 2.0 * x[i] + y[i]
+";
+    let sdfg = temporal_vec::frontend::compile(src).unwrap();
+    let c = compile(
+        BuildSpec::new(sdfg)
+            .vectorized("map0", 4)
+            .pumped(2, PumpMode::Resource)
+            .bind("N", 4096),
+    )
+    .unwrap();
+    assert!(c.report.cl1.is_some());
+    // axpy: mul(3) + add(2) = 5 DSP/lane; 2 internal lanes after DP
+    assert_eq!(c.report.resources.dsp, 10.0);
+}
+
+#[test]
+fn all_apps_compile_original_and_pumped() {
+    // vecadd
+    for pump in [None, Some((2, PumpMode::Resource))] {
+        let mut spec =
+            BuildSpec::new(apps::vecadd::build()).vectorized("vadd", 8).bind("N", 1 << 14);
+        if let Some((f, m)) = pump {
+            spec = spec.pumped(f, m);
+        }
+        compile(spec).unwrap();
+    }
+    // matmul
+    for pump in [None, Some((2, PumpMode::Resource))] {
+        let mut spec = BuildSpec::new(apps::matmul::build(8));
+        for (s, v) in apps::matmul::bindings(256) {
+            spec = spec.bind(&s, v);
+        }
+        if let Some((f, m)) = pump {
+            spec = spec.pumped(f, m);
+        }
+        compile(spec).unwrap();
+    }
+    // stencils
+    for kind in [
+        temporal_vec::ir::StencilKind::Jacobi3D,
+        temporal_vec::ir::StencilKind::Diffusion3D,
+    ] {
+        let w = apps::stencil::paper_vec_width(kind);
+        for pump in [None, Some((2, PumpMode::Resource))] {
+            let mut spec = BuildSpec::new(apps::stencil::build(kind, 4, w))
+                .bind("NX", 64)
+                .bind("NY", 32)
+                .bind("NZ", 32)
+                .bind("NZ_v", 32 / w as i64);
+            if let Some((f, m)) = pump {
+                spec = spec.pumped(f, m);
+            }
+            compile(spec).unwrap();
+        }
+    }
+    // floyd-warshall (throughput mode)
+    for pump in [None, Some((2, PumpMode::Throughput))] {
+        let mut spec = BuildSpec::new(apps::floyd_warshall::build()).bind("N", 32);
+        if let Some((f, m)) = pump {
+            spec = spec.pumped(f, m);
+        }
+        compile(spec).unwrap();
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let mk = || {
+        compile(
+            BuildSpec::new(apps::vecadd::build())
+                .vectorized("vadd", 4)
+                .pumped(2, PumpMode::Resource)
+                .bind("N", 1 << 12)
+                .seeded(99),
+        )
+        .unwrap()
+    };
+    let (a, b) = (mk(), mk());
+    assert_eq!(a.report.cl0.achieved_mhz, b.report.cl0.achieved_mhz);
+    assert_eq!(
+        a.report.cl1.unwrap().achieved_mhz,
+        b.report.cl1.unwrap().achieved_mhz
+    );
+    assert_eq!(a.report.resources.dsp, b.report.resources.dsp);
+}
+
+#[test]
+fn unbound_symbol_reported() {
+    let err = match compile(BuildSpec::new(apps::vecadd::build()).vectorized("vadd", 4)) {
+        Err(e) => e,
+        Ok(_) => panic!("expected unbound-symbol error"),
+    };
+    assert!(err.contains("unbound") || err.contains("N"), "{err}");
+}
+
+#[test]
+fn quad_pumping_compiles() {
+    let c = compile(
+        BuildSpec::new(apps::vecadd::build())
+            .vectorized("vadd", 8)
+            .pumped(4, PumpMode::Resource)
+            .bind("N", 1 << 14),
+    )
+    .unwrap();
+    assert_eq!(c.report.pump_factor, 4);
+    // internal lanes 8/4 = 2 → 4 DSP
+    assert_eq!(c.report.resources.dsp, 4.0);
+}
+
+#[test]
+fn pass_log_records_transform_sequence() {
+    let c = compile(
+        BuildSpec::new(apps::vecadd::build())
+            .vectorized("vadd", 2)
+            .pumped(2, PumpMode::Resource)
+            .bind("N", 1 << 10),
+    )
+    .unwrap();
+    assert_eq!(c.pass_log.len(), 3);
+    assert!(c.pass_log[0].contains("Vectorize"));
+    assert!(c.pass_log[1].contains("Streaming"));
+    assert!(c.pass_log[2].contains("MultiPump"));
+}

@@ -1,0 +1,245 @@
+//! Property-based tests (util::quickcheck) over the compiler's
+//! invariants: transformations preserve semantics and resources behave
+//! as the paper claims for *any* valid parameter combination.
+
+use temporal_vec::apps;
+use temporal_vec::coordinator::{compile, BuildSpec};
+use temporal_vec::ir::PumpMode;
+use temporal_vec::sim::{run_functional, Hbm};
+use temporal_vec::symbolic::{Expr, SymbolTable};
+use temporal_vec::util::quickcheck::{assert_allclose, forall};
+
+#[test]
+fn prop_affine_algebra_ring_laws() {
+    forall("affine-ring", 0xA1, 300, |g| {
+        let mk = |g: &mut temporal_vec::util::quickcheck::Gen| {
+            let c = g.i64(-50, 50);
+            let a = g.i64(-5, 5);
+            let b = g.i64(-5, 5);
+            Expr::int(c)
+                .add(&Expr::sym("i").scale(a))
+                .add(&Expr::sym("j").scale(b))
+        };
+        let (x, y, z) = (mk(g), mk(g), mk(g));
+        // commutativity + associativity + distributivity over scale
+        if x.add(&y) != y.add(&x) {
+            return Err("add not commutative".into());
+        }
+        if x.add(&y.add(&z)) != x.add(&y).add(&z) {
+            return Err("add not associative".into());
+        }
+        let k = g.i64(-4, 4);
+        if x.add(&y).scale(k) != x.scale(k).add(&y.scale(k)) {
+            return Err("scale not distributive".into());
+        }
+        // eval is a homomorphism
+        let env = SymbolTable::new().with("i", g.i64(-10, 10)).with("j", g.i64(-10, 10));
+        let lhs = x.add(&y).eval(&env).unwrap();
+        let rhs = x.eval(&env).unwrap() + y.eval(&env).unwrap();
+        if lhs != rhs {
+            return Err(format!("eval mismatch {lhs} vs {rhs}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_subst_then_eval_equals_eval_extended() {
+    forall("subst-eval", 0xA2, 200, |g| {
+        let a = g.i64(-6, 6);
+        let c = g.i64(-20, 20);
+        let e = Expr::sym("i").scale(a).add(&Expr::int(c));
+        let inner = Expr::sym("j").scale(g.i64(-4, 4)).add(&Expr::int(g.i64(-9, 9)));
+        let j = g.i64(-8, 8);
+        let env_j = SymbolTable::new().with("j", j);
+        let substituted = e.subst("i", &inner).eval(&env_j).unwrap();
+        let i_val = inner.eval(&env_j).unwrap();
+        let direct = e.eval(&SymbolTable::new().with("i", i_val)).unwrap();
+        if substituted != direct {
+            return Err(format!("{substituted} vs {direct}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vecadd_pipeline_correct_for_any_width_and_factor() {
+    forall("vecadd-widths", 0xB1, 12, |g| {
+        let factor = *g.choose(&[2usize, 4]);
+        let lanes = factor * *g.choose(&[1usize, 2, 4]);
+        let blocks = g.usize(4, 40) as i64;
+        let n = blocks * lanes as i64;
+        let c = compile(
+            BuildSpec::new(apps::vecadd::build())
+                .vectorized("vadd", lanes)
+                .pumped(factor, PumpMode::Resource)
+                .bind("N", n),
+        )
+        .map_err(|e| e.to_string())?;
+        let x = g.vec_f32(n as usize);
+        let y = g.vec_f32(n as usize);
+        let mut hbm = Hbm::new();
+        hbm.load("x", x.clone());
+        hbm.load("y", y.clone());
+        let out = run_functional(&c.design, hbm).map_err(|e| e.to_string())?;
+        let want: Vec<f32> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        assert_allclose(out.hbm.read("z"), &want, 0.0, 0.0)
+    });
+}
+
+#[test]
+fn prop_dsp_scales_inversely_with_pump_factor() {
+    forall("dsp-inverse", 0xB2, 10, |g| {
+        let factor = *g.choose(&[2usize, 4]);
+        let lanes = factor * 2;
+        let n = 64 * lanes as i64;
+        let base = compile(
+            BuildSpec::new(apps::vecadd::build()).vectorized("vadd", lanes).bind("N", n),
+        )
+        .map_err(|e| e.to_string())?;
+        let pumped = compile(
+            BuildSpec::new(apps::vecadd::build())
+                .vectorized("vadd", lanes)
+                .pumped(factor, PumpMode::Resource)
+                .bind("N", n),
+        )
+        .map_err(|e| e.to_string())?;
+        let want = base.report.resources.dsp / factor as f64;
+        if (pumped.report.resources.dsp - want).abs() > 1e-9 {
+            return Err(format!(
+                "factor {factor}: dsp {} (want {want})",
+                pumped.report.resources.dsp
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fw_pumping_invariant_over_random_graphs() {
+    forall("fw-invariance", 0xB3, 6, |g| {
+        let n = *g.choose(&[8usize, 12, 16]);
+        let density = g.f32(0.15, 0.6) as f64;
+        let seed = g.usize(0, 1 << 30) as u64;
+        let d = apps::floyd_warshall::random_graph(n, seed, density);
+        let mut results = Vec::new();
+        for pump in [false, true] {
+            let mut spec =
+                BuildSpec::new(apps::floyd_warshall::build()).bind("N", n as i64);
+            if pump {
+                spec = spec.pumped(2, PumpMode::Throughput);
+            }
+            let c = compile(spec).map_err(|e| e.to_string())?;
+            let mut hbm = Hbm::new();
+            hbm.load("dist", d.clone());
+            let out = run_functional(&c.design, hbm).map_err(|e| e.to_string())?;
+            results.push(out.hbm.read("dist").to_vec());
+        }
+        if results[0] != results[1] {
+            return Err("pumped FW diverged from original".into());
+        }
+        // and both equal the CPU reference
+        let want = apps::floyd_warshall::reference(&d, n);
+        assert_allclose(&results[0], &want, 0.0, 0.0)
+    });
+}
+
+#[test]
+fn prop_effective_clock_never_exceeds_cl0() {
+    forall("eff-clock", 0xB4, 20, |g| {
+        let lanes = *g.choose(&[2usize, 4, 8]);
+        let n = 128 * lanes as i64;
+        let seed = g.usize(0, 1 << 20) as u64;
+        let c = compile(
+            BuildSpec::new(apps::vecadd::build())
+                .vectorized("vadd", lanes)
+                .pumped(2, PumpMode::Resource)
+                .bind("N", n)
+                .seeded(seed),
+        )
+        .map_err(|e| e.to_string())?;
+        let eff = c.report.effective_mhz;
+        let cl0 = c.report.cl0.achieved_mhz;
+        let cl1 = c.report.cl1.unwrap().achieved_mhz;
+        if eff > cl0 + 1e-9 || eff > cl1 / 2.0 + 1e-9 {
+            return Err(format!("eff {eff} vs cl0 {cl0} cl1 {cl1}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fifo_preserves_order_and_counts() {
+    use temporal_vec::sim::channel::Fifo;
+    forall("fifo-order", 0xC1, 100, |g| {
+        let cap = g.usize(1, 32);
+        let lanes = g.usize(1, 4);
+        let mut f = Fifo::new("q", lanes, cap);
+        let n = g.usize(1, 200);
+        let mut sent: Vec<f32> = Vec::new();
+        let mut got: Vec<f32> = Vec::new();
+        let mut next = 0u32;
+        for _ in 0..n {
+            if g.bool() && !f.is_full() {
+                let txn: Vec<f32> = (0..lanes).map(|l| (next + l as u32) as f32).collect();
+                sent.extend_from_slice(&txn);
+                f.push(txn.into()).map_err(|_| "push failed".to_string())?;
+                next += lanes as u32;
+            } else if let Some(t) = f.pop() {
+                got.extend_from_slice(&t);
+            }
+            if f.len() > cap {
+                return Err("capacity exceeded".into());
+            }
+        }
+        while let Some(t) = f.pop() {
+            got.extend_from_slice(&t);
+        }
+        if got != sent {
+            return Err("order not preserved".into());
+        }
+        if f.pushed != f.popped {
+            return Err("push/pop accounting mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiny_workloads_never_hang() {
+    // degenerate sizes: one transaction end-to-end
+    forall("tiny-sizes", 0xC2, 8, |g| {
+        let lanes = *g.choose(&[2usize, 4]);
+        let n = lanes as i64; // a single wide transaction
+        let c = compile(
+            BuildSpec::new(apps::vecadd::build())
+                .vectorized("vadd", lanes)
+                .pumped(2, PumpMode::Resource)
+                .bind("N", n),
+        )
+        .map_err(|e| e.to_string())?;
+        let x = g.vec_f32(n as usize);
+        let y = g.vec_f32(n as usize);
+        let mut hbm = Hbm::new();
+        hbm.load("x", x.clone());
+        hbm.load("y", y.clone());
+        let out = run_functional(&c.design, hbm).map_err(|e| e.to_string())?;
+        let want: Vec<f32> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        assert_allclose(out.hbm.read("z"), &want, 0.0, 0.0)
+    });
+}
+
+#[test]
+fn prop_rng_streams_statistically_distinct() {
+    forall("rng-fork", 0xC3, 30, |g| {
+        let seed = g.usize(0, 1 << 30) as u64;
+        let mut root = temporal_vec::util::Rng::new(seed);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let matches = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        if matches > 0 {
+            return Err(format!("forked streams collided {matches} times"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,122 @@
+//! Integration: PJRT golden-model execution (requires `make artifacts`).
+//!
+//! The decisive end-to-end checks: for every application, the Rust
+//! simulator's functional output equals the AOT-compiled JAX/Pallas
+//! model executed through the PJRT CPU client.
+
+use std::path::Path;
+
+use temporal_vec::apps;
+use temporal_vec::coordinator::{compile, BuildSpec};
+use temporal_vec::ir::PumpMode;
+use temporal_vec::runtime::{artifact, GoldenRunner};
+use temporal_vec::sim::{run_functional, Hbm};
+use temporal_vec::util::Rng;
+
+fn runner() -> GoldenRunner {
+    let dir = artifact::artifacts_dir();
+    assert!(
+        Path::new(&dir).join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    GoldenRunner::new(&dir).unwrap()
+}
+
+#[test]
+fn manifest_lists_all_models() {
+    let r = runner();
+    for name in ["vecadd", "matmul", "jacobi3d", "diffusion3d", "floyd_warshall"] {
+        assert!(r.manifest().get(name).is_some(), "missing {name}");
+    }
+}
+
+#[test]
+fn vecadd_sim_equals_golden() {
+    let n = apps::vecadd::GOLDEN_N;
+    let c = compile(
+        BuildSpec::new(apps::vecadd::build())
+            .vectorized("vadd", 8)
+            .pumped(2, PumpMode::Resource)
+            .bind("N", n),
+    )
+    .unwrap();
+    let mut rng = Rng::new(101);
+    let x = rng.f32_vec(n as usize);
+    let y = rng.f32_vec(n as usize);
+    let mut hbm = Hbm::new();
+    hbm.load("x", x.clone());
+    hbm.load("y", y.clone());
+    let got = run_functional(&c.design, hbm).unwrap();
+    let want = runner().run("vecadd", &[&x, &y]).unwrap();
+    assert_eq!(got.hbm.read("z"), want.as_slice());
+}
+
+#[test]
+fn matmul_sim_equals_golden() {
+    let n = apps::matmul::GOLDEN_NMK;
+    let mut spec = BuildSpec::new(apps::matmul::build(4)).pumped(2, PumpMode::Resource);
+    for (s, v) in apps::matmul::bindings(n) {
+        spec = spec.bind(&s, v);
+    }
+    let c = compile(spec).unwrap();
+    let mut rng = Rng::new(102);
+    let a = rng.f32_vec((n * n) as usize);
+    let b = rng.f32_vec((n * n) as usize);
+    let mut hbm = Hbm::new();
+    hbm.load("A", a.clone());
+    hbm.load("B", b.clone());
+    let got = run_functional(&c.design, hbm).unwrap();
+    let want = runner().run("matmul", &[&a, &b]).unwrap();
+    for (i, (g, w)) in got.hbm.read("C").iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-4 * w.abs().max(1.0),
+            "elem {i}: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn stencil_chains_sim_equal_golden() {
+    for (name, kind) in [
+        ("jacobi3d", temporal_vec::ir::StencilKind::Jacobi3D),
+        ("diffusion3d", temporal_vec::ir::StencilKind::Diffusion3D),
+    ] {
+        let w = apps::stencil::paper_vec_width(kind);
+        let nx = apps::stencil::GOLDEN_NX;
+        let c = compile(
+            BuildSpec::new(apps::stencil::build(kind, apps::stencil::GOLDEN_STAGES, w))
+                .pumped(2, PumpMode::Resource)
+                .bind("NX", nx)
+                .bind("NY", 32)
+                .bind("NZ", 32)
+                .bind("NZ_v", 32 / w as i64),
+        )
+        .unwrap();
+        let mut rng = Rng::new(103);
+        let v = rng.f32_vec((nx * 32 * 32) as usize);
+        let mut hbm = Hbm::new();
+        hbm.load("v_in", v.clone());
+        let got = run_functional(&c.design, hbm).unwrap();
+        let want = runner().run(name, &[&v]).unwrap();
+        for (i, (g, wv)) in got.hbm.read("v_out").iter().zip(&want).enumerate() {
+            assert!((g - wv).abs() < 1e-4, "{name} elem {i}: {g} vs {wv}");
+        }
+    }
+}
+
+#[test]
+fn floyd_warshall_sim_equals_golden() {
+    let n = apps::floyd_warshall::GOLDEN_N;
+    let c = compile(
+        BuildSpec::new(apps::floyd_warshall::build())
+            .pumped(2, PumpMode::Throughput)
+            .bind("N", n),
+    )
+    .unwrap();
+    let d = apps::floyd_warshall::random_graph(n as usize, 104, 0.25);
+    let mut hbm = Hbm::new();
+    hbm.load("dist", d.clone());
+    let got = run_functional(&c.design, hbm).unwrap();
+    let want = runner().run("floyd_warshall", &[&d]).unwrap();
+    assert_eq!(got.hbm.read("dist"), want.as_slice());
+}

@@ -1,0 +1,92 @@
+//! Integration: transformation sequences and their error paths.
+
+use temporal_vec::analysis::scope_movement;
+use temporal_vec::ir::builder::vecadd_sdfg;
+use temporal_vec::ir::validate::validate;
+use temporal_vec::ir::{Node, PumpMode};
+use temporal_vec::transforms::{MultiPump, PassManager, StreamingComposition, Transform, Vectorize};
+
+#[test]
+fn canonical_sequence_matches_paper_figure3() {
+    // Figure 3: vectorize (box 1) → streaming (box 2) → multipump (box 3)
+    let mut g = vecadd_sdfg(1);
+    let mut pm = PassManager::new();
+    pm.run(&mut g, &Vectorize::new("vadd", 4)).unwrap();
+    pm.run(&mut g, &StreamingComposition::default()).unwrap();
+    pm.run(&mut g, &MultiPump::resource(2)).unwrap();
+    validate(&g).unwrap();
+
+    // final graph: 2 readers, 1 writer, 6 CDC modules, compute in CL1
+    let count = |f: &dyn Fn(&Node) -> bool| g.node_ids().filter(|i| f(g.node(*i))).count();
+    assert_eq!(count(&|n| matches!(n, Node::Reader { .. })), 2);
+    assert_eq!(count(&|n| matches!(n, Node::Writer { .. })), 1);
+    assert_eq!(count(&|n| n.is_cdc()), 6);
+    let entry = g.find_map_entry("vadd").unwrap();
+    assert!(g.in_fast_domain(entry));
+}
+
+#[test]
+fn streaming_is_required_before_pumping() {
+    let mut g = vecadd_sdfg(4);
+    let err = MultiPump::resource(2).can_apply(&g).unwrap_err();
+    assert!(err.contains("not streamed"));
+    let mut pm = PassManager::new();
+    pm.run(&mut g, &StreamingComposition::default()).unwrap();
+    MultiPump::resource(2).can_apply(&g).unwrap();
+}
+
+#[test]
+fn order_vectorize_after_streaming_rejected() {
+    // vectorization requires direct array access; after streaming the
+    // scope pops streams, so the rewrite must refuse
+    let mut g = vecadd_sdfg(1);
+    let mut pm = PassManager::new();
+    pm.run(&mut g, &StreamingComposition::default()).unwrap();
+    assert!(Vectorize::new("vadd", 4).can_apply(&g).is_err());
+}
+
+#[test]
+fn throughput_mode_on_scalar_streams() {
+    // throughput mode has no divisibility requirement
+    let mut g = vecadd_sdfg(1);
+    let mut pm = PassManager::new();
+    pm.run(&mut g, &StreamingComposition::default()).unwrap();
+    pm.run(&mut g, &MultiPump::throughput(2)).unwrap();
+    validate(&g).unwrap();
+    // external streams widened to 2 lanes
+    let wide = g
+        .containers
+        .values()
+        .filter(|d| d.storage.is_stream() && d.vtype.lanes == 2)
+        .count();
+    assert!(wide >= 3, "expected widened boundary streams, got {wide}");
+}
+
+#[test]
+fn movement_tracing_after_streaming_sees_streams() {
+    let mut g = vecadd_sdfg(2);
+    let mut pm = PassManager::new();
+    pm.run(&mut g, &StreamingComposition::default()).unwrap();
+    let entry = g.find_map_entry("vadd").unwrap();
+    let mv = scope_movement(&g, entry).unwrap();
+    for acc in mv.all() {
+        let decl = g.container(&acc.data).unwrap();
+        assert!(decl.storage.is_stream(), "{} not a stream", acc.data);
+    }
+}
+
+#[test]
+fn pumping_factor_three_resource_mode() {
+    let mut g = vecadd_sdfg(1);
+    let mut pm = PassManager::new();
+    pm.run(&mut g, &Vectorize::new("vadd", 6)).unwrap();
+    pm.run(&mut g, &StreamingComposition::default()).unwrap();
+    pm.run(&mut g, &MultiPump { factor: 3, mode: PumpMode::Resource }).unwrap();
+    // fast side = 2 lanes
+    let fast = g
+        .containers
+        .iter()
+        .filter(|(n, d)| n.ends_with("_fast") && d.vtype.lanes == 2)
+        .count();
+    assert_eq!(fast, 3);
+}
