@@ -1,0 +1,112 @@
+//! Bench: design-space exploration search cost on matmul — exhaustive
+//! vs greedy, cold vs memoized. The §Perf trajectory tracks search
+//! wall-time from here on: the DSE subsystem is the new scaling
+//! surface (more candidates, more apps, bigger grids).
+
+use temporal_vec::apps;
+use temporal_vec::coordinator::BuildSpec;
+use temporal_vec::dse::{
+    run_search, Evaluator, Objective, SearchBase, SearchConfig, SpaceOptions,
+};
+use temporal_vec::hw::Device;
+use temporal_vec::util::bench::{bench, BenchSuite};
+
+fn matmul_bases(seed: u64) -> Vec<SearchBase> {
+    let n = 1024i64;
+    [16usize, 32, 64]
+        .iter()
+        .map(|&pes| {
+            let mut spec = BuildSpec::new(apps::matmul::build(pes)).cl0(270.0).seeded(seed);
+            for (s, v) in apps::matmul::bindings(n) {
+                spec = spec.bind(&s, v);
+            }
+            SearchBase { spec, flops: apps::matmul::flops(n, n, n) }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("dse_sweep");
+    suite.start();
+    let device = Device::u280();
+    let bases = matmul_bases(1);
+    let opts = SpaceOptions::for_device(&device);
+
+    // headline numbers once, so the bench log shows what was searched
+    let ev = Evaluator::new();
+    let out = run_search(
+        &ev,
+        &bases,
+        &device,
+        &opts,
+        &SearchConfig::exhaustive(Objective::resource()),
+    )
+    .expect("exhaustive search");
+    println!(
+        "exhaustive: {} candidates evaluated, frontier {}, chosen {}",
+        out.evaluated,
+        out.frontier.len(),
+        out.chosen.as_ref().map(|c| c.label.as_str()).unwrap_or("-")
+    );
+
+    suite.add(bench("exhaustive matmul sweep (cold cache)", 1, 5, || {
+        let ev = Evaluator::new();
+        let out = run_search(
+            &ev,
+            &bases,
+            &device,
+            &opts,
+            &SearchConfig::exhaustive(Objective::resource()),
+        )
+        .unwrap();
+        assert!(out.frontier.len() >= 6);
+    }));
+
+    suite.add(bench("greedy matmul sweep (cold cache)", 1, 5, || {
+        let ev = Evaluator::new();
+        let out = run_search(
+            &ev,
+            &bases,
+            &device,
+            &opts,
+            &SearchConfig::greedy(Objective::resource()),
+        )
+        .unwrap();
+        assert!(out.chosen.is_some());
+    }));
+
+    // memoized: repeated sweeps are the incremental-retuning path
+    let warm = Evaluator::new();
+    run_search(
+        &warm,
+        &bases,
+        &device,
+        &opts,
+        &SearchConfig::exhaustive(Objective::resource()),
+    )
+    .unwrap();
+    suite.add(bench("exhaustive matmul sweep (warm cache)", 1, 10, || {
+        run_search(
+            &warm,
+            &bases,
+            &device,
+            &opts,
+            &SearchConfig::exhaustive(Objective::resource()),
+        )
+        .unwrap();
+    }));
+
+    suite.add(bench("single candidate evaluation (cold)", 1, 10, || {
+        let ev = Evaluator::new();
+        let base = &bases[1];
+        let point = temporal_vec::dse::DesignPoint {
+            vectorize: None,
+            pump: Some((2, temporal_vec::ir::PumpMode::Resource)),
+            replicas: 1,
+            cl0_request_mhz: None,
+        };
+        ev.evaluate(&base.spec, &point, base.flops).unwrap();
+    }));
+
+    suite.finish();
+}

@@ -1,0 +1,143 @@
+//! Autotuning walkthrough: the `dse` subsystem picking the paper's
+//! configurations automatically.
+//!
+//! 1. **vecadd** — search Table 2's grid (V ∈ {2,4,8} × pumping) with
+//!    the *resource* objective: the search lands on V=8 double-pumped,
+//!    the paper's headline half-the-DSPs-for-free configuration;
+//! 2. **matmul** — sweep the PE counts of Table 3 and the full pump
+//!    grid; print the resource-vs-throughput Pareto frontier and the
+//!    selected design;
+//! 3. **strategies** — exhaustive vs greedy hill-climbing on the same
+//!    space, sharing one memoized evaluator: the second search is
+//!    mostly cache hits (incremental sweeps).
+//!
+//! Run with: `cargo run --release --example autotune`
+
+use temporal_vec::apps;
+use temporal_vec::coordinator::BuildSpec;
+use temporal_vec::dse::{
+    run_search, Evaluator, Objective, SearchBase, SearchConfig, SpaceOptions, Strategy,
+};
+use temporal_vec::hw::Device;
+use temporal_vec::util::table::{fnum, pct, Table};
+
+fn frontier_table(outcome: &temporal_vec::dse::SearchOutcome) -> String {
+    let mut t = Table::new(
+        format!(
+            "Pareto frontier ({} non-dominated design points)",
+            outcome.frontier.len()
+        ),
+        &["config", "DSPs", "DSP%", "BRAM%", "eff MHz", "GOp/s", "score"],
+    );
+    for e in &outcome.frontier {
+        let u = e.report.util_percent();
+        t.row(vec![
+            e.label.clone(),
+            fnum(e.total_resources.dsp, 0),
+            pct(u[4]),
+            pct(u[3]),
+            fnum(e.report.effective_mhz, 1),
+            fnum(e.gops, 1),
+            fnum(e.resource_score, 3),
+        ]);
+    }
+    t.render()
+}
+
+fn main() -> Result<(), String> {
+    let device = Device::u280();
+    let seed = 1u64;
+
+    println!("=== 1. vecadd: Table 2's grid, resource objective ===");
+    let n = 1i64 << 22;
+    let vecadd_bases = [SearchBase {
+        spec: BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(seed),
+        flops: apps::vecadd::flops(n),
+    }];
+    let vecadd_opts = SpaceOptions {
+        vector_widths: vec![2, 4, 8],
+        pump_factors: vec![2, 4],
+        pump_modes: vec![temporal_vec::ir::PumpMode::Resource],
+        max_replicas: 1,
+        cl0_requests_mhz: vec![],
+    };
+    let ev = Evaluator::new();
+    let out = run_search(
+        &ev,
+        &vecadd_bases,
+        &device,
+        &vecadd_opts,
+        &SearchConfig::exhaustive(Objective::resource()),
+    )?;
+    println!("{}", frontier_table(&out));
+    let reference = out.reference.as_ref().unwrap();
+    let chosen = out.chosen.as_ref().unwrap();
+    println!(
+        "paper Table 2 best DP config: V=8 DP — search chose: {} \
+         ({:.0}% of unpumped DSPs, {:.0}% of unpumped throughput)\n",
+        chosen.label,
+        chosen.total_resources.dsp / reference.total_resources.dsp * 100.0,
+        chosen.gops / reference.gops * 100.0
+    );
+
+    println!("=== 2. matmul: PE sweep x pump grid, both objectives ===");
+    let nmk = 1024i64;
+    let mm_bases: Vec<SearchBase> = [16usize, 32, 64]
+        .iter()
+        .map(|&pes| {
+            let mut spec = BuildSpec::new(apps::matmul::build(pes)).cl0(270.0).seeded(seed);
+            for (s, v) in apps::matmul::bindings(nmk) {
+                spec = spec.bind(&s, v);
+            }
+            SearchBase { spec, flops: apps::matmul::flops(nmk, nmk, nmk) }
+        })
+        .collect();
+    let mm_opts = SpaceOptions::for_device(&device);
+    let mm_ev = Evaluator::new();
+    for objective in [Objective::resource(), Objective::throughput()] {
+        let out = run_search(
+            &mm_ev,
+            &mm_bases,
+            &device,
+            &mm_opts,
+            &SearchConfig::exhaustive(objective),
+        )?;
+        println!("objective: {}", objective.name());
+        println!("{}", frontier_table(&out));
+        let reference = out.reference.as_ref().unwrap();
+        if let Some(chosen) = &out.chosen {
+            println!(
+                "chosen: {} — {:.0} DSPs ({:.0}% of unpumped), {:.1} GOp/s \
+                 ({:.0}% of unpumped)\n",
+                chosen.label,
+                chosen.total_resources.dsp,
+                chosen.total_resources.dsp / reference.total_resources.dsp * 100.0,
+                chosen.gops,
+                chosen.gops / reference.gops * 100.0
+            );
+        }
+    }
+    println!(
+        "shared evaluator across the two objectives: {} compiles, {} cache hits",
+        mm_ev.cache_misses(),
+        mm_ev.cache_hits()
+    );
+
+    println!("\n=== 3. exhaustive vs greedy on the same space ===");
+    let shared = Evaluator::new();
+    for (name, strategy) in [("exhaustive", Strategy::Exhaustive), ("greedy", Strategy::Greedy)]
+    {
+        let cfg = SearchConfig { strategy, objective: Objective::resource(), budget: None };
+        let before = shared.cache_misses();
+        let out = run_search(&shared, &mm_bases, &device, &mm_opts, &cfg)?;
+        let chosen = out.chosen.as_ref().unwrap();
+        println!(
+            "{name:<11} evaluations issued: {:>3} (new compiles: {:>3})  chosen: {}",
+            out.evaluated,
+            shared.cache_misses() - before,
+            chosen.label
+        );
+    }
+    println!("greedy after exhaustive is pure cache: incremental re-tuning works");
+    Ok(())
+}

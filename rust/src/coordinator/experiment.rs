@@ -356,8 +356,9 @@ pub fn run_experiment_with(
         "table5" => table5(size("table5", "nx", snx), seed),
         "table6" => table6(size("table6", "n", fwn), seed),
         "fig4" => super::report::figure4(seed),
+        "dse" => super::autotune::dse_experiment(seed),
         other => Err(format!(
-            "unknown experiment '{other}' (try table1..table6, fig4)"
+            "unknown experiment '{other}' (try table1..table6, fig4, dse)"
         )),
     }
 }

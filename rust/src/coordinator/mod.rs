@@ -4,11 +4,13 @@
 //!
 //! This is the L3 entry layer the CLI (`tvec`) and the benches drive.
 
+pub mod autotune;
 pub mod config;
 pub mod experiment;
 pub mod pipeline;
 pub mod report;
 
+pub use autotune::{autotune_all, dse_experiment, DseChoice};
 pub use config::Config;
 pub use experiment::{run_experiment, ExperimentResult};
 pub use pipeline::{compile, BuildSpec, Compiled};

@@ -1,0 +1,313 @@
+//! Candidate evaluation: compile + price + rate-model, in parallel,
+//! behind a content-hashed memoization cache.
+//!
+//! Every candidate runs through the real pipeline
+//! ([`crate::coordinator::pipeline::compile`]) — the same path the
+//! experiment tables use — then derives the two Pareto axes: a
+//! DSP-weighted resource score from the [`DesignReport`] and a modeled
+//! throughput from the analytic rate model at the achieved effective
+//! clock. Evaluations are fanned out over OS threads with
+//! `std::thread::scope` (no external dependencies), and keyed by a
+//! fingerprint of the *content* of the work (printed SDFG, bindings,
+//! candidate, seed), so repeated sweeps — a greedy refinement after an
+//! exhaustive pass, a re-run with a wider grid — are incremental.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::codegen::DesignReport;
+use crate::coordinator::pipeline::{compile, BuildSpec};
+use crate::hw::ResourceVec;
+use crate::ir::{printer, PumpMode};
+use crate::sim::rate_model;
+
+use super::pareto::resource_score;
+use super::space::DesignPoint;
+
+/// An evaluated candidate: the priced design plus the derived metrics
+/// the Pareto analysis and the search rank on.
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    pub point: DesignPoint,
+    /// `<design name> <point label>`, e.g. `gemm_p32 R2`.
+    pub label: String,
+    pub report: DesignReport,
+    /// Rate-model cycle count of one workload execution (slow domain).
+    pub slow_cycles: u64,
+    /// Modeled wall-clock seconds at the achieved effective clock.
+    pub time_s: f64,
+    /// Modeled throughput in GOp/s across all replicas.
+    pub gops: f64,
+    /// Resources summed over SLR replicas.
+    pub total_resources: ResourceVec,
+    /// Scalar resource axis (lower is better), × replicas.
+    pub resource_score: f64,
+    /// Does one replica fit its SLR pool?
+    pub fits: bool,
+}
+
+/// FNV-1a over a byte slice, chained.
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn pump_tag(p: &Option<(usize, PumpMode)>) -> String {
+    match p {
+        None => "-".into(),
+        Some((f, PumpMode::Resource)) => format!("r{f}"),
+        Some((f, PumpMode::Throughput)) => format!("t{f}"),
+    }
+}
+
+/// Content fingerprint of one (spec, candidate, workload) evaluation.
+/// Hashes the printed SDFG, so two sweeps over structurally identical
+/// graphs share cache entries regardless of how they were built.
+pub fn fingerprint(base: &BuildSpec, point: &DesignPoint, flops: f64) -> u64 {
+    let mut h = fnv1a(0xcbf29ce484222325, printer::to_text(&base.sdfg).as_bytes());
+    for (s, v) in &base.bindings {
+        h = fnv1a(h, s.as_bytes());
+        h = fnv1a(h, &v.to_le_bytes());
+    }
+    h = fnv1a(h, &base.seed.to_le_bytes());
+    h = fnv1a(h, &[base.stream as u8]);
+    if let Some(mhz) = base.cl0_request_mhz {
+        h = fnv1a(h, &mhz.to_bits().to_le_bytes());
+    }
+    if let Some((map, w)) = &base.vectorize {
+        h = fnv1a(h, map.as_bytes());
+        h = fnv1a(h, &(*w as u64).to_le_bytes());
+    }
+    h = fnv1a(h, pump_tag(&base.pump).as_bytes());
+    h = fnv1a(h, &(base.slr_replicas as u64).to_le_bytes());
+    // the candidate
+    if let Some((map, w)) = &point.vectorize {
+        h = fnv1a(h, map.as_bytes());
+        h = fnv1a(h, &(*w as u64).to_le_bytes());
+    }
+    h = fnv1a(h, pump_tag(&point.pump).as_bytes());
+    h = fnv1a(h, &(point.replicas as u64).to_le_bytes());
+    if let Some(mhz) = point.cl0_request_mhz {
+        h = fnv1a(h, &mhz.to_bits().to_le_bytes());
+    }
+    fnv1a(h, &flops.to_bits().to_le_bytes())
+}
+
+/// Compile and price one candidate; `flops` is the workload size the
+/// throughput axis is derived from.
+pub fn evaluate_point(
+    base: &BuildSpec,
+    point: &DesignPoint,
+    flops: f64,
+) -> Result<Evaluation, String> {
+    let spec = point.apply_to(base);
+    let c = compile(spec)?;
+    let stats = rate_model(&c.design);
+    let time_s = stats.seconds_at(c.report.effective_mhz);
+    let replicas = point.replicas.max(1) as f64;
+    let gops = flops * replicas / time_s / 1e9;
+    Ok(Evaluation {
+        label: format!("{} {}", c.design.name, point.label()),
+        point: point.clone(),
+        slow_cycles: stats.slow_cycles,
+        time_s,
+        gops,
+        total_resources: c.report.resources.scaled(replicas),
+        resource_score: resource_score(&c.report.util) * replicas,
+        fits: c.report.util.max_fraction() <= 1.0,
+        report: c.report,
+    })
+}
+
+/// Memoizing, thread-parallel candidate evaluator. Failures are cached
+/// too: an infeasible candidate (e.g. an indivisible binding) is not
+/// recompiled on repeated sweeps.
+#[derive(Default)]
+pub struct Evaluator {
+    cache: Mutex<HashMap<u64, Result<Evaluation, String>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl Evaluator {
+    pub fn new() -> Evaluator {
+        Evaluator::default()
+    }
+
+    pub fn cache_hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Evaluate one candidate, hitting the cache when the same content
+    /// was evaluated before.
+    pub fn evaluate(
+        &self,
+        base: &BuildSpec,
+        point: &DesignPoint,
+        flops: f64,
+    ) -> Result<Evaluation, String> {
+        let key = fingerprint(base, point, flops);
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        let ev = evaluate_point(base, point, flops);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.cache.lock().unwrap().insert(key, ev.clone());
+        ev
+    }
+
+    /// Evaluate a batch of candidates across OS threads. Results come
+    /// back in input order; per-candidate failures (e.g. a binding that
+    /// does not divide) are reported in place, not fatal.
+    pub fn evaluate_all(
+        &self,
+        base: &BuildSpec,
+        points: &[DesignPoint],
+        flops: f64,
+    ) -> Vec<Result<Evaluation, String>> {
+        let n = points.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(n);
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<Result<Evaluation, String>>>> =
+            Mutex::new(vec![None; n]);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = self.evaluate(base, &points[i], flops);
+                    slots.lock().unwrap()[i] = Some(r);
+                });
+            }
+        });
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("every slot filled by a worker"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::BuildSpec;
+    use crate::dse::space::DesignPoint;
+
+    fn vecadd_base() -> BuildSpec {
+        BuildSpec::new(apps::vecadd::build()).bind("N", 1 << 14).seeded(7)
+    }
+
+    fn dp_point() -> DesignPoint {
+        DesignPoint {
+            vectorize: Some(("vadd".into(), 8)),
+            pump: Some((2, crate::ir::PumpMode::Resource)),
+            replicas: 1,
+            cl0_request_mhz: None,
+        }
+    }
+
+    #[test]
+    fn cache_hit_returns_identical_report() {
+        let ev = Evaluator::new();
+        let base = vecadd_base();
+        let flops = apps::vecadd::flops(1 << 14);
+        let a = ev.evaluate(&base, &dp_point(), flops).unwrap();
+        assert_eq!(ev.cache_misses(), 1);
+        let b = ev.evaluate(&base, &dp_point(), flops).unwrap();
+        assert_eq!(ev.cache_hits(), 1);
+        // identical DesignReport, bit for bit
+        assert_eq!(a.report.cl0.achieved_mhz, b.report.cl0.achieved_mhz);
+        assert_eq!(
+            a.report.cl1.map(|c| c.achieved_mhz),
+            b.report.cl1.map(|c| c.achieved_mhz)
+        );
+        assert_eq!(a.report.resources, b.report.resources);
+        assert_eq!(a.gops, b.gops);
+        assert_eq!(a.resource_score, b.resource_score);
+        // and the cached result equals a fresh out-of-cache evaluation
+        let fresh = evaluate_point(&base, &dp_point(), flops).unwrap();
+        assert_eq!(fresh.report.cl0.achieved_mhz, a.report.cl0.achieved_mhz);
+        assert_eq!(fresh.slow_cycles, a.slow_cycles);
+    }
+
+    #[test]
+    fn fingerprint_separates_points_and_seeds() {
+        let base = vecadd_base();
+        let o = DesignPoint::original();
+        let f = apps::vecadd::flops(1 << 14);
+        assert_ne!(fingerprint(&base, &o, f), fingerprint(&base, &dp_point(), f));
+        let reseeded = vecadd_base().seeded(8);
+        assert_ne!(fingerprint(&base, &o, f), fingerprint(&reseeded, &o, f));
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential() {
+        let base = vecadd_base();
+        let flops = apps::vecadd::flops(1 << 14);
+        let points: Vec<DesignPoint> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&w| DesignPoint {
+                vectorize: if w == 1 { None } else { Some(("vadd".into(), w)) },
+                pump: None,
+                replicas: 1,
+                cl0_request_mhz: None,
+            })
+            .collect();
+        let par = Evaluator::new();
+        let batch = par.evaluate_all(&base, &points, flops);
+        assert_eq!(batch.len(), points.len());
+        for (p, r) in points.iter().zip(&batch) {
+            let seq = evaluate_point(&base, p, flops).unwrap();
+            let got = r.as_ref().unwrap();
+            assert_eq!(got.label, seq.label);
+            assert_eq!(got.report.cl0.achieved_mhz, seq.report.cl0.achieved_mhz);
+            assert_eq!(got.slow_cycles, seq.slow_cycles);
+        }
+    }
+
+    #[test]
+    fn pumped_vecadd_halves_dsp_and_holds_throughput() {
+        let base = vecadd_base();
+        let flops = apps::vecadd::flops(1 << 14);
+        let o_point = DesignPoint {
+            vectorize: Some(("vadd".into(), 8)),
+            ..DesignPoint::original()
+        };
+        let o = evaluate_point(&base, &o_point, flops).unwrap();
+        let dp = evaluate_point(&base, &dp_point(), flops).unwrap();
+        assert!((dp.total_resources.dsp - o.total_resources.dsp / 2.0).abs() < 1e-9);
+        let drift = (dp.time_s - o.time_s).abs() / o.time_s;
+        assert!(drift < 0.2, "time drift {drift}");
+        assert!(dp.resource_score < o.resource_score, "pumping must lower the resource axis");
+        assert!(dp.fits && o.fits);
+    }
+
+    #[test]
+    fn infeasible_binding_is_a_per_point_error() {
+        // N = 100 does not divide by 8: the candidate fails cleanly
+        let base = BuildSpec::new(apps::vecadd::build()).bind("N", 100);
+        let ev = Evaluator::new();
+        let r = ev.evaluate(&base, &dp_point(), 100.0);
+        assert!(r.is_err());
+    }
+}

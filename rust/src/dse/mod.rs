@@ -1,0 +1,32 @@
+//! Automatic design-space exploration and autotuning over the
+//! multi-pumping pipeline.
+//!
+//! The paper frames multi-pumping as a superclass of vectorization and
+//! hand-picks every design point — vector width, pump factor and mode,
+//! SLR replica count — per application. This subsystem searches that
+//! (spatial × temporal) space automatically:
+//!
+//! * [`space`] — candidate-grid generation driven by the legality
+//!   analyses (vectorizability, temporal legality, stream-width
+//!   divisibility) instead of brute force;
+//! * [`evaluate`] — parallel candidate evaluation through the real
+//!   compile pipeline, behind a content-hashed memoization cache so
+//!   repeated sweeps are incremental;
+//! * [`pareto`] — the resource-vs-throughput Pareto frontier and the
+//!   two search objectives generalizing the paper's pumping modes
+//!   (min-resource at iso-throughput / max-throughput at iso-resource);
+//! * [`search`] — exhaustive and greedy (coordinate-descent) strategies
+//!   with an early-cutoff evaluation budget.
+//!
+//! Entry points: `tvec dse --app <name>` on the CLI, the `dse`
+//! experiment in [`crate::coordinator`], and `examples/autotune.rs`.
+
+pub mod evaluate;
+pub mod pareto;
+pub mod search;
+pub mod space;
+
+pub use evaluate::{Evaluation, Evaluator};
+pub use pareto::{dominates, frontier, resource_score, Objective};
+pub use search::{run_search, SearchBase, SearchConfig, SearchOutcome, Strategy};
+pub use space::{generate, DesignPoint, SpaceOptions};

@@ -1,0 +1,254 @@
+//! Resource-vs-throughput Pareto analysis over evaluated candidates.
+//!
+//! The two axes generalize the paper's two pumping modes into search
+//! objectives (§2.1): *resource mode* is "minimum resource at
+//! iso-throughput", *throughput mode* is "maximum throughput at
+//! iso-resource". The resource axis is a scalar blend of the
+//! [`DesignReport`](crate::codegen::DesignReport) utilization classes,
+//! weighted toward the compute resources the paper's headline results
+//! are about (DSP first, BRAM second, fabric third).
+
+use std::cmp::Ordering;
+
+use crate::hw::Utilization;
+
+use super::evaluate::Evaluation;
+
+/// Scalar resource score of one replica in [0, ~1]: DSP-dominant blend
+/// of the utilization classes (DSP / BRAM / LUT+register fabric). The
+/// weighting makes the paper's halved-DSP configurations strictly
+/// cheaper than their originals even when the design is BRAM- or
+/// fabric-bound overall.
+pub fn resource_score(u: &Utilization) -> f64 {
+    0.70 * u.dsp + 0.20 * u.bram + 0.10 * u.fabric_pressure()
+}
+
+/// Does `a` Pareto-dominate `b`? No worse on both axes and strictly
+/// better on at least one.
+pub fn dominates(a: &Evaluation, b: &Evaluation) -> bool {
+    let no_worse = a.resource_score <= b.resource_score && a.gops >= b.gops;
+    let strictly = a.resource_score < b.resource_score || a.gops > b.gops;
+    no_worse && strictly
+}
+
+/// Non-dominated subset of the fitting candidates, in a stable,
+/// deterministic order: ascending resource score, then descending
+/// throughput, then label.
+pub fn frontier(evals: &[Evaluation]) -> Vec<Evaluation> {
+    let fitting: Vec<Evaluation> = evals.iter().filter(|e| e.fits).cloned().collect();
+    let mut out: Vec<Evaluation> = Vec::new();
+    for e in &fitting {
+        if !fitting.iter().any(|o| dominates(o, e)) {
+            out.push(e.clone());
+        }
+    }
+    out.sort_by(cmp_frontier);
+    out.dedup_by(|a, b| a.label == b.label);
+    out
+}
+
+fn cmp_frontier(a: &Evaluation, b: &Evaluation) -> Ordering {
+    a.resource_score
+        .partial_cmp(&b.resource_score)
+        .unwrap_or(Ordering::Equal)
+        .then(b.gops.partial_cmp(&a.gops).unwrap_or(Ordering::Equal))
+        .then(a.label.cmp(&b.label))
+}
+
+/// A search objective: which end of the frontier to walk to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// Minimize the resource score subject to
+    /// `throughput ≥ (1 − tolerance) × reference` — the generalized
+    /// *resource* pumping mode.
+    MinResourceAtIsoThroughput { tolerance: f64 },
+    /// Maximize throughput subject to
+    /// `resource ≤ (1 + tolerance) × reference` — the generalized
+    /// *throughput* pumping mode.
+    MaxThroughputAtIsoResource { tolerance: f64 },
+}
+
+impl Objective {
+    /// Default resource objective: 20 % throughput slack, matching the
+    /// paper's observed DP-vs-O drift (Table 3: DP-32 reaches 85 % of
+    /// O-32 throughput at half the DSPs).
+    pub fn resource() -> Objective {
+        Objective::MinResourceAtIsoThroughput { tolerance: 0.20 }
+    }
+
+    /// Default throughput objective: 10 % resource slack.
+    pub fn throughput() -> Objective {
+        Objective::MaxThroughputAtIsoResource { tolerance: 0.10 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::MinResourceAtIsoThroughput { .. } => "min-resource @ iso-throughput",
+            Objective::MaxThroughputAtIsoResource { .. } => "max-throughput @ iso-resource",
+        }
+    }
+
+    /// Does a candidate satisfy the iso-constraint against the
+    /// reference (the best unpumped single-replica design)?
+    pub fn feasible(&self, e: &Evaluation, reference: &Evaluation) -> bool {
+        if !e.fits {
+            return false;
+        }
+        match self {
+            Objective::MinResourceAtIsoThroughput { tolerance } => {
+                e.gops >= reference.gops * (1.0 - tolerance)
+            }
+            Objective::MaxThroughputAtIsoResource { tolerance } => {
+                e.resource_score <= reference.resource_score * (1.0 + tolerance)
+            }
+        }
+    }
+
+    /// Rank key (lower is better): feasible candidates first, ordered
+    /// by the objective metric; infeasible ones ordered by how close
+    /// they are to feasibility, so greedy search can climb toward the
+    /// feasible region.
+    pub fn rank(&self, e: &Evaluation, reference: &Evaluation) -> (u8, f64) {
+        let feasible = self.feasible(e, reference);
+        match self {
+            Objective::MinResourceAtIsoThroughput { .. } => {
+                if feasible {
+                    (0, e.resource_score)
+                } else {
+                    (1, -e.gops)
+                }
+            }
+            Objective::MaxThroughputAtIsoResource { .. } => {
+                if feasible {
+                    (0, -e.gops)
+                } else {
+                    (1, e.resource_score)
+                }
+            }
+        }
+    }
+
+    /// Pick the best feasible candidate (deterministic: rank, then
+    /// label). None when nothing satisfies the constraint.
+    pub fn select<'a>(
+        &self,
+        evals: &'a [Evaluation],
+        reference: &Evaluation,
+    ) -> Option<&'a Evaluation> {
+        evals
+            .iter()
+            .filter(|e| self.feasible(e, reference))
+            .min_by(|a, b| {
+                let (ra, rb) = (self.rank(a, reference), self.rank(b, reference));
+                ra.0.cmp(&rb.0)
+                    .then(ra.1.partial_cmp(&rb.1).unwrap_or(Ordering::Equal))
+                    .then(a.label.cmp(&b.label))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::BuildSpec;
+    use crate::dse::evaluate::evaluate_point;
+    use crate::dse::space::DesignPoint;
+
+    /// A real evaluation with the Pareto axes overridden, so dominance
+    /// patterns can be crafted exactly.
+    fn ev(label: &str, score: f64, gops: f64) -> Evaluation {
+        let base = BuildSpec::new(apps::vecadd::build()).bind("N", 1 << 10);
+        let mut e =
+            evaluate_point(&base, &DesignPoint::original(), apps::vecadd::flops(1 << 10))
+                .unwrap();
+        e.label = label.to_string();
+        e.resource_score = score;
+        e.gops = gops;
+        e.fits = true;
+        e
+    }
+
+    #[test]
+    fn dominated_points_removed() {
+        let evals = vec![
+            ev("cheap-slow", 0.2, 10.0),
+            ev("mid", 0.5, 50.0),
+            ev("dominated", 0.6, 40.0), // worse than "mid" on both axes
+            ev("fast-costly", 0.9, 90.0),
+        ];
+        let f = frontier(&evals);
+        let labels: Vec<&str> = f.iter().map(|e| e.label.as_str()).collect();
+        assert_eq!(labels, vec!["cheap-slow", "mid", "fast-costly"]);
+    }
+
+    #[test]
+    fn frontier_order_is_stable_and_sorted() {
+        let evals = vec![
+            ev("b", 0.5, 50.0),
+            ev("a", 0.2, 10.0),
+            ev("c", 0.9, 90.0),
+        ];
+        let f1 = frontier(&evals);
+        let mut reversed = evals.clone();
+        reversed.reverse();
+        let f2 = frontier(&reversed);
+        let l1: Vec<&str> = f1.iter().map(|e| e.label.as_str()).collect();
+        let l2: Vec<&str> = f2.iter().map(|e| e.label.as_str()).collect();
+        assert_eq!(l1, l2, "order must not depend on input order");
+        assert_eq!(l1, vec!["a", "b", "c"]);
+        // ascending resource score
+        assert!(f1.windows(2).all(|w| w[0].resource_score <= w[1].resource_score));
+    }
+
+    #[test]
+    fn equal_points_both_survive() {
+        // neither strictly dominates the other
+        let evals = vec![ev("x", 0.5, 50.0), ev("y", 0.5, 50.0)];
+        assert_eq!(frontier(&evals).len(), 2);
+        assert!(!dominates(&evals[0], &evals[1]));
+    }
+
+    #[test]
+    fn non_fitting_points_excluded() {
+        let mut big = ev("too-big", 0.1, 999.0);
+        big.fits = false;
+        let evals = vec![big, ev("ok", 0.5, 50.0)];
+        let f = frontier(&evals);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].label, "ok");
+    }
+
+    #[test]
+    fn resource_objective_selects_cheapest_feasible() {
+        let reference = ev("ref", 0.8, 100.0);
+        let evals = vec![
+            ev("half-dsp", 0.4, 90.0),     // feasible at tol 0.2, cheapest
+            ev("quarter-dsp", 0.2, 60.0),  // cheaper but too slow
+            reference.clone(),
+        ];
+        let obj = Objective::resource();
+        let chosen = obj.select(&evals, &reference).unwrap();
+        assert_eq!(chosen.label, "half-dsp");
+    }
+
+    #[test]
+    fn throughput_objective_selects_fastest_within_budget() {
+        let reference = ev("ref", 0.5, 100.0);
+        let evals = vec![
+            ev("fast-within", 0.54, 150.0), // within 10 % resource slack
+            ev("faster-over", 0.9, 300.0),  // over budget
+            reference.clone(),
+        ];
+        let obj = Objective::throughput();
+        let chosen = obj.select(&evals, &reference).unwrap();
+        assert_eq!(chosen.label, "fast-within");
+    }
+
+    #[test]
+    fn select_is_none_when_nothing_feasible() {
+        let reference = ev("ref", 0.8, 100.0);
+        let evals = vec![ev("slow", 0.1, 10.0)];
+        assert!(Objective::resource().select(&evals, &reference).is_none());
+    }
+}

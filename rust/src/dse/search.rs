@@ -1,0 +1,385 @@
+//! Search strategies over the candidate grid.
+//!
+//! * **Exhaustive** — evaluate every generated candidate (the grid is
+//!   already legality-pruned, and evaluations are parallel + memoized,
+//!   so this is affordable for the paper's applications);
+//! * **Greedy** — coordinate-descent hill climbing from the original
+//!   (unpumped, unreplicated) point: evaluate all single-dimension
+//!   neighbours, move to the best-ranked one, repeat until no
+//!   neighbour improves. Orders of magnitude fewer evaluations on
+//!   large grids, at the risk of a local optimum.
+//!
+//! Both honour an early-cutoff **budget** (maximum candidate
+//! evaluations); exhaustive search truncates the grid and records that
+//! it did, so a capped sweep never silently reads as a full one.
+
+use crate::coordinator::pipeline::BuildSpec;
+use crate::hw::Device;
+
+use super::evaluate::{Evaluation, Evaluator};
+use super::pareto::{frontier, Objective};
+use super::space::{generate, DesignPoint, SpaceOptions};
+
+/// How to walk the space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Exhaustive,
+    Greedy,
+}
+
+/// One search problem: a base spec plus the workload size (flops) its
+/// throughput axis is derived from.
+pub struct SearchBase {
+    pub spec: BuildSpec,
+    pub flops: f64,
+}
+
+/// Search configuration.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub strategy: Strategy,
+    pub objective: Objective,
+    /// Early cutoff: maximum candidate evaluations across all bases.
+    /// The baseline sweep (unpumped candidates, which anchor the
+    /// iso-constraints) is always evaluated in full, so `evaluated`
+    /// can exceed a budget smaller than the baseline.
+    pub budget: Option<usize>,
+}
+
+impl SearchConfig {
+    pub fn exhaustive(objective: Objective) -> SearchConfig {
+        SearchConfig { strategy: Strategy::Exhaustive, objective, budget: None }
+    }
+
+    pub fn greedy(objective: Objective) -> SearchConfig {
+        SearchConfig { strategy: Strategy::Greedy, objective, budget: None }
+    }
+}
+
+/// Outcome of one search run.
+pub struct SearchOutcome {
+    /// Every successful evaluation, in a deterministic order.
+    pub evaluations: Vec<Evaluation>,
+    /// The resource-vs-throughput Pareto frontier of the fitting points.
+    pub frontier: Vec<Evaluation>,
+    /// The best unpumped single-replica design (iso-constraint anchor).
+    pub reference: Option<Evaluation>,
+    /// The candidate the objective selects.
+    pub chosen: Option<Evaluation>,
+    /// Candidate evaluations issued (cache hits included).
+    pub evaluated: usize,
+    /// Candidates that failed to compile (illegal bindings etc.).
+    pub infeasible: usize,
+    /// True when the budget truncated the sweep.
+    pub truncated: bool,
+}
+
+/// Number of search dimensions two points differ in.
+fn differing_dims(a: &DesignPoint, b: &DesignPoint) -> usize {
+    (a.vectorize != b.vectorize) as usize
+        + (a.pump != b.pump) as usize
+        + (a.replicas != b.replicas) as usize
+        + (a.cl0_request_mhz != b.cl0_request_mhz) as usize
+}
+
+/// Run a search over one or more bases (e.g. a PE-count sweep supplies
+/// one base per PE configuration; the frontier and selection span all
+/// of them).
+pub fn run_search(
+    evaluator: &Evaluator,
+    bases: &[SearchBase],
+    device: &Device,
+    opts: &SpaceOptions,
+    cfg: &SearchConfig,
+) -> Result<SearchOutcome, String> {
+    if bases.is_empty() {
+        return Err("search needs at least one base spec".into());
+    }
+    let mut evaluations: Vec<Evaluation> = Vec::new();
+    let mut evaluated = 0usize;
+    let mut infeasible = 0usize;
+    let mut truncated = false;
+
+    // one legality-pruned grid per base
+    let grids: Vec<Vec<DesignPoint>> =
+        bases.iter().map(|b| generate(&b.spec, device, opts)).collect();
+    let is_baseline = |p: &DesignPoint| {
+        p.pump.is_none() && p.replicas == 1 && p.cl0_request_mhz.is_none()
+    };
+
+    // Baseline sweep: every unpumped single-replica candidate (the
+    // conventional designs). The best-throughput fitting one anchors
+    // the iso-constraints — "iso-throughput" means not losing against
+    // the best design traditional vectorization alone can reach.
+    let mut reference: Option<Evaluation> = None;
+    for (base, grid) in bases.iter().zip(&grids) {
+        let baseline: Vec<DesignPoint> =
+            grid.iter().filter(|p| is_baseline(p)).cloned().collect();
+        evaluated += baseline.len();
+        for r in evaluator.evaluate_all(&base.spec, &baseline, base.flops) {
+            match r {
+                Ok(e) => {
+                    if e.fits
+                        && reference.as_ref().map(|r| e.gops > r.gops).unwrap_or(true)
+                    {
+                        reference = Some(e.clone());
+                    }
+                    evaluations.push(e);
+                }
+                Err(_) => infeasible += 1,
+            }
+        }
+    }
+    let reference = match reference {
+        Some(r) => r,
+        None => return Err("no unpumped configuration fits the device".into()),
+    };
+
+    for (base, grid) in bases.iter().zip(&grids) {
+        let full_grid: Vec<DesignPoint> = grid
+            .iter()
+            .filter(|p| **p != DesignPoint::original())
+            .cloned()
+            .collect();
+        match cfg.strategy {
+            Strategy::Exhaustive => {
+                // the baseline points are already evaluated
+                let mut batch: Vec<DesignPoint> = full_grid
+                    .into_iter()
+                    .filter(|p| !is_baseline(p))
+                    .collect();
+                if let Some(budget) = cfg.budget {
+                    let remaining = budget.saturating_sub(evaluated);
+                    if batch.len() > remaining {
+                        batch.truncate(remaining);
+                        truncated = true;
+                    }
+                }
+                evaluated += batch.len();
+                for r in evaluator.evaluate_all(&base.spec, &batch, base.flops) {
+                    match r {
+                        Ok(e) => evaluations.push(e),
+                        Err(_) => infeasible += 1,
+                    }
+                }
+            }
+            Strategy::Greedy => {
+                // the full grid (baseline included) so the climb can
+                // route through unpumped intermediates; re-evaluations
+                // are cache hits
+                let (evs, stats) = greedy_climb(
+                    evaluator,
+                    base,
+                    &full_grid,
+                    &cfg.objective,
+                    &reference,
+                    cfg.budget.map(|b| b.saturating_sub(evaluated)),
+                );
+                evaluated += stats.0;
+                infeasible += stats.1;
+                truncated |= stats.2;
+                evaluations.extend(evs);
+            }
+        }
+    }
+
+    let front = frontier(&evaluations);
+    let chosen = cfg
+        .objective
+        .select(&evaluations, &reference)
+        .cloned()
+        // never pick something the reference dominates outright
+        .filter(|c| {
+            cfg.objective
+                .rank(c, &reference)
+                .le(&cfg.objective.rank(&reference, &reference))
+        })
+        .or_else(|| Some(reference.clone()));
+
+    Ok(SearchOutcome {
+        frontier: front,
+        reference: Some(reference),
+        chosen,
+        evaluations,
+        evaluated,
+        infeasible,
+        truncated,
+    })
+}
+
+/// Coordinate-descent hill climb from the original point. Returns the
+/// evaluations performed and (issued, infeasible, truncated).
+fn greedy_climb(
+    evaluator: &Evaluator,
+    base: &SearchBase,
+    grid: &[DesignPoint],
+    objective: &Objective,
+    reference: &Evaluation,
+    budget: Option<usize>,
+) -> (Vec<Evaluation>, (usize, usize, bool)) {
+    let mut evaluations: Vec<Evaluation> = Vec::new();
+    let mut issued = 0usize;
+    let mut infeasible = 0usize;
+    let mut truncated = false;
+    let mut visited: Vec<bool> = vec![false; grid.len()];
+
+    let mut current = DesignPoint::original();
+    let mut current_eval: Option<Evaluation> =
+        evaluator.evaluate(&base.spec, &current, base.flops).ok();
+    loop {
+        let neighbour_idx: Vec<usize> = grid
+            .iter()
+            .enumerate()
+            .filter(|&(i, p)| !visited[i] && differing_dims(p, &current) == 1)
+            .map(|(i, _)| i)
+            .collect();
+        if neighbour_idx.is_empty() {
+            break;
+        }
+        let mut batch: Vec<DesignPoint> = Vec::new();
+        for &i in &neighbour_idx {
+            if let Some(b) = budget {
+                if issued >= b {
+                    truncated = true;
+                    break;
+                }
+            }
+            visited[i] = true;
+            batch.push(grid[i].clone());
+            issued += 1;
+        }
+        if batch.is_empty() {
+            break;
+        }
+        let mut best_step: Option<Evaluation> = None;
+        for r in evaluator.evaluate_all(&base.spec, &batch, base.flops) {
+            match r {
+                Ok(e) => {
+                    let better = best_step
+                        .as_ref()
+                        .map(|b| objective.rank(&e, reference) < objective.rank(b, reference))
+                        .unwrap_or(true);
+                    if better {
+                        best_step = Some(e.clone());
+                    }
+                    evaluations.push(e);
+                }
+                Err(_) => infeasible += 1,
+            }
+        }
+        let step = match best_step {
+            Some(s) => s,
+            None => break,
+        };
+        let improves = current_eval
+            .as_ref()
+            .map(|c| objective.rank(&step, reference) < objective.rank(c, reference))
+            .unwrap_or(true);
+        if !improves || truncated {
+            break;
+        }
+        current = step.point.clone();
+        current_eval = Some(step);
+    }
+    (evaluations, (issued, infeasible, truncated))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::BuildSpec;
+    use crate::ir::PumpMode;
+
+    fn vecadd_bases() -> Vec<SearchBase> {
+        let n = 1i64 << 14;
+        vec![SearchBase {
+            spec: BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(3),
+            flops: apps::vecadd::flops(n),
+        }]
+    }
+
+    fn small_opts() -> SpaceOptions {
+        SpaceOptions {
+            vector_widths: vec![2, 4, 8],
+            pump_factors: vec![2, 4],
+            pump_modes: vec![PumpMode::Resource],
+            max_replicas: 1,
+            cl0_requests_mhz: vec![],
+        }
+    }
+
+    #[test]
+    fn exhaustive_finds_pumped_optimum_for_vecadd() {
+        let device = Device::u280();
+        let ev = Evaluator::new();
+        let out = run_search(
+            &ev,
+            &vecadd_bases(),
+            &device,
+            &small_opts(),
+            &SearchConfig::exhaustive(Objective::resource()),
+        )
+        .unwrap();
+        assert!(!out.frontier.is_empty());
+        let chosen = out.chosen.as_ref().unwrap();
+        assert_eq!(chosen.point.pump, Some((2, PumpMode::Resource)));
+        assert_eq!(chosen.point.vectorize, Some(("vadd".into(), 8)));
+        assert!(!out.truncated);
+    }
+
+    #[test]
+    fn budget_cuts_off_early_and_is_recorded() {
+        let device = Device::u280();
+        let ev = Evaluator::new();
+        let cfg = SearchConfig {
+            strategy: Strategy::Exhaustive,
+            objective: Objective::resource(),
+            budget: Some(4),
+        };
+        let out =
+            run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
+        assert!(out.evaluated <= 4);
+        assert!(out.truncated);
+    }
+
+    #[test]
+    fn greedy_reaches_the_exhaustive_choice_on_vecadd() {
+        let device = Device::u280();
+        let opts = small_opts();
+        let ex = run_search(
+            &Evaluator::new(),
+            &vecadd_bases(),
+            &device,
+            &opts,
+            &SearchConfig::exhaustive(Objective::resource()),
+        )
+        .unwrap();
+        let gr = run_search(
+            &Evaluator::new(),
+            &vecadd_bases(),
+            &device,
+            &opts,
+            &SearchConfig::greedy(Objective::resource()),
+        )
+        .unwrap();
+        let (ec, gc) = (ex.chosen.unwrap(), gr.chosen.unwrap());
+        assert_eq!(ec.point, gc.point, "greedy diverged: {} vs {}", ec.label, gc.label);
+    }
+
+    #[test]
+    fn repeated_search_is_fully_cached() {
+        let device = Device::u280();
+        let ev = Evaluator::new();
+        let cfg = SearchConfig::exhaustive(Objective::resource());
+        run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
+        let misses_after_first = ev.cache_misses();
+        run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
+        assert_eq!(
+            ev.cache_misses(),
+            misses_after_first,
+            "second sweep must be served from the cache"
+        );
+        assert!(ev.cache_hits() > 0);
+    }
+}

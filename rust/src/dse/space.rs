@@ -1,0 +1,379 @@
+//! Candidate-grid generation: the legal (spatial × temporal) design
+//! space of one SDFG.
+//!
+//! The grid is driven by the same analyses the transformations use —
+//! [`crate::analysis::vectorizability`] for legal vector widths and
+//! temporal legality, container lane counts for pump-factor
+//! divisibility — rather than brute-force enumeration, so illegal
+//! points (a pump factor that does not divide the vectorized stream
+//! width, resource-mode pumping of an unvectorizable scalar datapath,
+//! more replicas than the device has SLRs) are pruned before a single
+//! compile runs. Floyd–Warshall therefore only ever receives
+//! throughput-mode candidates, exactly the paper's §4.4 argument.
+
+use crate::analysis::movement::scope_movement;
+use crate::analysis::vectorizability::{check_temporal, check_traditional};
+use crate::coordinator::pipeline::BuildSpec;
+use crate::hw::Device;
+use crate::ir::{ContainerKind, LibraryOp, Node, PumpMode, Sdfg};
+use crate::symbolic::SymbolTable;
+
+/// One candidate configuration of the compile pipeline. The point owns
+/// the dimensions the search explores; everything else (bindings, seed,
+/// base clock request) is inherited from the base [`BuildSpec`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct DesignPoint {
+    /// Traditional vectorization of a named map, if any.
+    pub vectorize: Option<(String, usize)>,
+    /// Multi-pumping (factor, mode), if any.
+    pub pump: Option<(usize, PumpMode)>,
+    /// SLR replication count (≥ 1).
+    pub replicas: usize,
+    /// CL0 request override in MHz (None → keep the base spec's).
+    pub cl0_request_mhz: Option<f64>,
+}
+
+impl DesignPoint {
+    /// The unpumped, unreplicated origin of the space.
+    pub fn original() -> DesignPoint {
+        DesignPoint { vectorize: None, pump: None, replicas: 1, cl0_request_mhz: None }
+    }
+
+    /// Compact label, e.g. `V8 R2`, `O`, `T2 x3SLR`.
+    pub fn label(&self) -> String {
+        let mut s = String::new();
+        if let Some((_, w)) = &self.vectorize {
+            s.push_str(&format!("V{w} "));
+        }
+        match self.pump {
+            None => s.push('O'),
+            Some((f, PumpMode::Resource)) => s.push_str(&format!("R{f}")),
+            Some((f, PumpMode::Throughput)) => s.push_str(&format!("T{f}")),
+        }
+        if self.replicas > 1 {
+            s.push_str(&format!(" x{}SLR", self.replicas));
+        }
+        if let Some(mhz) = self.cl0_request_mhz {
+            s.push_str(&format!(" @{mhz:.0}"));
+        }
+        s
+    }
+
+    /// Instantiate the candidate over a base spec. The point owns the
+    /// vectorize / pump / replica dimensions and overwrites them even
+    /// when `None`; bindings, seed and streaming are inherited.
+    pub fn apply_to(&self, base: &BuildSpec) -> BuildSpec {
+        let mut spec = base.clone();
+        spec.vectorize = self.vectorize.clone();
+        spec.pump = self.pump;
+        spec.slr_replicas = self.replicas;
+        if self.cl0_request_mhz.is_some() {
+            spec.cl0_request_mhz = self.cl0_request_mhz;
+        }
+        spec
+    }
+}
+
+/// Bounds of the candidate grid.
+#[derive(Clone, Debug)]
+pub struct SpaceOptions {
+    /// Vector widths to probe per vectorizable map.
+    pub vector_widths: Vec<usize>,
+    /// Pump factors to probe (each mode separately).
+    pub pump_factors: Vec<usize>,
+    /// Pump modes to probe. Restricting to one mode is useful because
+    /// the modes are duals (throughput-pumping V=4 lowers to the same
+    /// netlist as resource-pumping V=8): a Table-2-style resource
+    /// study explores `[Resource]` only.
+    pub pump_modes: Vec<PumpMode>,
+    /// Maximum SLR replication (≥ 1).
+    pub max_replicas: usize,
+    /// Extra CL0 requests to probe besides the base spec's.
+    pub cl0_requests_mhz: Vec<f64>,
+}
+
+impl SpaceOptions {
+    /// Defaults bounded by the device: replicas up to the SLR count.
+    pub fn for_device(device: &Device) -> SpaceOptions {
+        SpaceOptions {
+            vector_widths: vec![2, 4, 8, 16],
+            pump_factors: vec![2, 4, 8],
+            pump_modes: vec![PumpMode::Resource, PumpMode::Throughput],
+            max_replicas: device.slrs.len().max(1),
+            cl0_requests_mhz: Vec::new(),
+        }
+    }
+}
+
+/// Environment from the base spec's concrete bindings.
+fn base_env(base: &BuildSpec) -> SymbolTable {
+    let mut env = SymbolTable::new();
+    for (s, v) in &base.bindings {
+        env.set(s, *v);
+    }
+    env
+}
+
+/// Legal `(map name, width)` vectorization options (plus `None`),
+/// established with the traditional SIMD conditions and a concrete
+/// trip-count divisibility check against the base bindings.
+fn vector_options(
+    g: &Sdfg,
+    env: &SymbolTable,
+    widths: &[usize],
+) -> Vec<Option<(String, usize)>> {
+    let mut out: Vec<Option<(String, usize)>> = vec![None];
+    for id in g.node_ids() {
+        let name = match g.node(id) {
+            Node::MapEntry { name, .. } => name.clone(),
+            _ => continue,
+        };
+        let mv = match scope_movement(g, id) {
+            Ok(mv) => mv,
+            Err(_) => continue,
+        };
+        // the strict conditions minus divisibility (factor 1), exactly
+        // as Vectorize::can_apply establishes them
+        if !check_traditional(g, &mv, 1, env).is_ok() {
+            continue;
+        }
+        // unit-stride accesses only (stride-V cannot be re-vectorized)
+        if mv
+            .all()
+            .any(|acc| acc.subset.linear_in(mv.inner_param()) != Some(1))
+        {
+            continue;
+        }
+        let trip = match g.node(id) {
+            Node::MapEntry { ranges, .. } => {
+                ranges.last().and_then(|r| r.count(env))
+            }
+            _ => None,
+        };
+        for &w in widths {
+            if w < 2 {
+                continue;
+            }
+            // concrete extent must divide; symbolic extents defer to
+            // the derived-symbol check at bind time and are accepted
+            if let Some(t) = trip {
+                if t % w as i64 != 0 {
+                    continue;
+                }
+            }
+            out.push(Some((name.clone(), w)));
+        }
+    }
+    out
+}
+
+/// The narrowest stream width the streamed design will carry under a
+/// given vectorization choice: external array lanes (vectorization
+/// widens every container the map touches) and fused transient arrays.
+fn boundary_width(g: &Sdfg, vectorize: &Option<(String, usize)>) -> usize {
+    let vw = vectorize.as_ref().map(|(_, w)| *w).unwrap_or(1);
+    let mut min_lanes = usize::MAX;
+    for decl in g.containers.values() {
+        if decl.kind == ContainerKind::Array {
+            min_lanes = min_lanes.min(decl.vtype.lanes);
+        }
+    }
+    if min_lanes == usize::MAX {
+        min_lanes = 1;
+    }
+    min_lanes * vw
+}
+
+/// Is every map scope temporally vectorizable (the multi-pumping
+/// precondition)? Graphs whose compute lives in library nodes pass
+/// vacuously, mirroring `MultiPump::can_apply`.
+fn temporally_legal(g: &Sdfg) -> bool {
+    for id in g.node_ids() {
+        if matches!(g.node(id), Node::MapEntry { .. }) {
+            match scope_movement(g, id) {
+                Ok(mv) => {
+                    if !check_temporal(g, &mv, 1).is_ok() {
+                        return false;
+                    }
+                }
+                Err(_) => return false,
+            }
+        }
+    }
+    true
+}
+
+/// Do all library datapaths keep an integer lane count at factor `m`?
+fn library_widths_divide(g: &Sdfg, m: usize) -> bool {
+    for id in g.node_ids() {
+        if let Node::Library { op, .. } = g.node(id) {
+            let w = match op {
+                LibraryOp::SystolicGemm { vec_width, .. }
+                | LibraryOp::StencilStage { vec_width, .. } => *vec_width,
+                // FW keeps its datapath width in resource mode
+                LibraryOp::FloydWarshall { .. } => continue,
+            };
+            if w % m != 0 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Legal pump options (plus `None`) for one vectorization choice.
+fn pump_options(
+    g: &Sdfg,
+    vectorize: &Option<(String, usize)>,
+    opts: &SpaceOptions,
+) -> Vec<Option<(usize, PumpMode)>> {
+    let mut out: Vec<Option<(usize, PumpMode)>> = vec![None];
+    if !temporally_legal(g) {
+        return out;
+    }
+    let width = boundary_width(g, vectorize);
+    for &m in &opts.pump_factors {
+        if m < 2 {
+            continue;
+        }
+        // resource mode: the internal width must divide by M
+        if opts.pump_modes.contains(&PumpMode::Resource)
+            && width % m == 0
+            && width / m >= 1
+            && library_widths_divide(g, m)
+        {
+            out.push(Some((m, PumpMode::Resource)));
+        }
+        // throughput mode widens the boundary instead — always legal
+        if opts.pump_modes.contains(&PumpMode::Throughput) {
+            out.push(Some((m, PumpMode::Throughput)));
+        }
+    }
+    out
+}
+
+/// Generate the pruned candidate grid for a base spec on a device.
+pub fn generate(base: &BuildSpec, _device: &Device, opts: &SpaceOptions) -> Vec<DesignPoint> {
+    let g = &base.sdfg;
+    let env = base_env(base);
+    let mut cl0s: Vec<Option<f64>> = vec![None];
+    for &mhz in &opts.cl0_requests_mhz {
+        cl0s.push(Some(mhz));
+    }
+    let mut out = Vec::new();
+    for vec_opt in vector_options(g, &env, &opts.vector_widths) {
+        for pump_opt in pump_options(g, &vec_opt, opts) {
+            for replicas in 1..=opts.max_replicas.max(1) {
+                for cl0 in &cl0s {
+                    out.push(DesignPoint {
+                        vectorize: vec_opt.clone(),
+                        pump: pump_opt,
+                        replicas,
+                        cl0_request_mhz: *cl0,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::BuildSpec;
+
+    fn space_for(spec: &BuildSpec) -> Vec<DesignPoint> {
+        let device = Device::u280();
+        let opts = SpaceOptions::for_device(&device);
+        generate(spec, &device, &opts)
+    }
+
+    #[test]
+    fn vecadd_space_has_vector_and_pump_axes() {
+        let spec = BuildSpec::new(apps::vecadd::build()).bind("N", 1 << 16);
+        let points = space_for(&spec);
+        // contains the paper's Table 2 double-pumped configuration
+        assert!(points.iter().any(|p| {
+            p.vectorize == Some(("vadd".into(), 8))
+                && p.pump == Some((2, PumpMode::Resource))
+                && p.replicas == 1
+        }));
+        // the original is always present
+        assert!(points.contains(&DesignPoint::original()));
+        // every resource-mode factor divides its vector width
+        for p in &points {
+            if let Some((m, PumpMode::Resource)) = p.pump {
+                let w = p.vectorize.as_ref().map(|(_, w)| *w).unwrap_or(1);
+                assert_eq!(w % m, 0, "illegal point {}", p.label());
+            }
+        }
+        // replicas bounded by the SLR count
+        assert!(points.iter().all(|p| (1..=3).contains(&p.replicas)));
+    }
+
+    #[test]
+    fn indivisible_trip_count_prunes_widths() {
+        // N = 20: widths 2 and 4 divide, 8 and 16 do not
+        let spec = BuildSpec::new(apps::vecadd::build()).bind("N", 20);
+        let points = space_for(&spec);
+        let widths: Vec<usize> = points
+            .iter()
+            .filter_map(|p| p.vectorize.as_ref().map(|(_, w)| *w))
+            .collect();
+        assert!(widths.contains(&2) && widths.contains(&4));
+        assert!(!widths.contains(&8), "w=8 must be pruned for N=20");
+        assert!(!widths.contains(&16));
+    }
+
+    #[test]
+    fn floyd_warshall_space_is_throughput_only() {
+        // FW: scalar boundary stream, dependent datapath — resource
+        // mode is illegal, throughput mode is the paper's §4.4 choice
+        let spec = BuildSpec::new(apps::floyd_warshall::build()).bind("N", 64);
+        let points = space_for(&spec);
+        assert!(!points.is_empty());
+        assert!(points
+            .iter()
+            .all(|p| !matches!(p.pump, Some((_, PumpMode::Resource)))));
+        assert!(points
+            .iter()
+            .any(|p| matches!(p.pump, Some((2, PumpMode::Throughput)))));
+        // no maps → no vectorization options
+        assert!(points.iter().all(|p| p.vectorize.is_none()));
+    }
+
+    #[test]
+    fn matmul_space_prunes_by_library_width() {
+        let mut spec = BuildSpec::new(apps::matmul::build(8));
+        for (s, v) in apps::matmul::bindings(256) {
+            spec = spec.bind(&s, v);
+        }
+        let points = space_for(&spec);
+        // vec width is 16: resource factors 2, 4, 8 all divide
+        for m in [2usize, 4, 8] {
+            assert!(
+                points
+                    .iter()
+                    .any(|p| p.pump == Some((m, PumpMode::Resource))),
+                "missing R{m}"
+            );
+        }
+    }
+
+    #[test]
+    fn labels_are_compact_and_distinct() {
+        let a = DesignPoint::original();
+        assert_eq!(a.label(), "O");
+        let b = DesignPoint {
+            vectorize: Some(("vadd".into(), 8)),
+            pump: Some((2, PumpMode::Resource)),
+            replicas: 3,
+            cl0_request_mhz: None,
+        };
+        assert_eq!(b.label(), "V8 R2 x3SLR");
+        let c = DesignPoint { pump: Some((4, PumpMode::Throughput)), ..a.clone() };
+        assert_eq!(c.label(), "T4");
+    }
+}

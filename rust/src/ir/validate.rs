@@ -7,13 +7,27 @@ use super::graph::{NodeId, Sdfg};
 use super::node::Node;
 
 /// A validation failure with its location.
-#[derive(Clone, Debug, thiserror::Error)]
-#[error("validation of '{sdfg}' failed at {loc}: {reason}")]
+///
+/// (Hand-rolled `Display`/`Error` impls — `thiserror` is unavailable in
+/// the offline build environment, DESIGN.md §4.)
+#[derive(Clone, Debug)]
 pub struct ValidationError {
     pub sdfg: String,
     pub loc: String,
     pub reason: String,
 }
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "validation of '{}' failed at {}: {}",
+            self.sdfg, self.loc, self.reason
+        )
+    }
+}
+
+impl std::error::Error for ValidationError {}
 
 fn err(g: &Sdfg, loc: impl Into<String>, reason: impl Into<String>) -> ValidationError {
     ValidationError { sdfg: g.name.clone(), loc: loc.into(), reason: reason.into() }

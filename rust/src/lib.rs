@@ -26,13 +26,17 @@
 //! * [`runtime`] — PJRT execution of the AOT JAX/Pallas golden models;
 //! * [`coordinator`] — config system, compilation pipeline, experiment
 //!   registry regenerating every table and figure of the paper;
+//! * [`dse`] — automatic design-space exploration: enumerates, prunes,
+//!   evaluates and ranks candidate build configurations over the
+//!   resource-vs-throughput Pareto frontier, generalizing the paper's
+//!   hand-picked per-app configurations into a search;
 //! * [`apps`] — the four evaluated applications (vector addition,
 //!   systolic matrix multiplication, Jacobi-3D / Diffusion-3D stencil
 //!   chains, Floyd–Warshall).
 //!
 //! See `DESIGN.md` for the substitution table (what the paper ran on
-//! physical hardware vs. what this repo models) and `EXPERIMENTS.md`
-//! for paper-vs-measured results.
+//! physical hardware vs. what this repo models), the experiment index,
+//! and the `dse` subsystem's architecture and search objectives.
 
 pub mod util;
 pub mod symbolic;
@@ -45,4 +49,5 @@ pub mod codegen;
 pub mod sim;
 pub mod runtime;
 pub mod coordinator;
+pub mod dse;
 pub mod apps;

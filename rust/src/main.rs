@@ -23,12 +23,17 @@ fn main() {
         .subcommand("experiment", "regenerate a paper table or figure")
         .subcommand("compile", "compile a DSL program and print reports")
         .subcommand("run", "simulate an app and check against the golden model")
+        .subcommand("dse", "autotune an app over the design space")
         .subcommand("report", "print the device model (Table 1)")
         .opt_default("seed", "P&R jitter seed", "1")
         .opt("config", "experiment config file (see configs/)")
         .opt("pump", "pumping factor for compile/run (e.g. 2)")
         .opt_default("mode", "pump mode: resource|throughput", "resource")
         .opt("n", "problem size override")
+        .opt("app", "dse: application (vecadd|matmul|jacobi|diffusion|fw|all)")
+        .opt_default("objective", "dse: resource|throughput", "resource")
+        .opt_default("strategy", "dse: exhaustive|greedy", "exhaustive")
+        .opt("budget", "dse: max candidate evaluations (early cutoff)")
         .flag("emit", "write generated HLS/RTL text files to ./generated")
         .flag("verbose", "print pass logs");
     let args = cli.parse_env();
@@ -38,6 +43,7 @@ fn main() {
         Some("experiment") => cmd_experiment(&args, seed),
         Some("compile") => cmd_compile(&args, seed),
         Some("run") => cmd_run(&args, seed),
+        Some("dse") => cmd_dse(&args, seed),
         Some("report") => {
             println!("{}", temporal_vec::coordinator::experiment::table1().rendered);
             Ok(())
@@ -220,5 +226,170 @@ fn cmd_run(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
         return Err(format!("numeric mismatch: max rel err {worst}"));
     }
     println!("OK");
+    Ok(())
+}
+
+fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), String> {
+    use temporal_vec::dse::{
+        run_search, Evaluator, Objective, SearchBase, SearchConfig, SpaceOptions, Strategy,
+    };
+    use temporal_vec::hw::Device;
+    use temporal_vec::ir::StencilKind;
+    use temporal_vec::util::table::{fnum, pct, Table};
+
+    let app = args
+        .get("app")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.first().cloned())
+        .unwrap_or_else(|| "all".to_string());
+    let objective = match args.get_or("objective", "resource") {
+        "throughput" => Objective::throughput(),
+        "resource" => Objective::resource(),
+        other => return Err(format!("unknown objective '{other}' (resource|throughput)")),
+    };
+    let strategy = match args.get_or("strategy", "exhaustive") {
+        "greedy" => Strategy::Greedy,
+        "exhaustive" => Strategy::Exhaustive,
+        other => return Err(format!("unknown strategy '{other}' (exhaustive|greedy)")),
+    };
+    let cfg = SearchConfig { strategy, objective, budget: args.get_usize("budget") };
+    let device = Device::u280();
+    let names: Vec<&str> = match app.as_str() {
+        "all" => vec!["vecadd", "matmul", "jacobi", "diffusion", "fw"],
+        other => vec![other],
+    };
+    let n_override = args.get_u64("n").map(|v| v as i64);
+    // one evaluator across apps: the content-hashed cache dedups
+    // shared substructure between sweeps
+    let evaluator = Evaluator::new();
+
+    for name in names {
+        // per-app bases: the matmul PE sweep supplies several
+        let (bases, opts): (Vec<SearchBase>, SpaceOptions) = match name {
+            "vecadd" => {
+                let n = n_override.unwrap_or(apps::vecadd::PAPER_N);
+                (
+                    vec![SearchBase {
+                        spec: BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(seed),
+                        flops: apps::vecadd::flops(n),
+                    }],
+                    SpaceOptions::for_device(&device),
+                )
+            }
+            "matmul" => {
+                let n = n_override.unwrap_or(apps::matmul::PAPER_NMK);
+                if n % 16 != 0 {
+                    return Err(format!("matmul size {n} must be a multiple of 16"));
+                }
+                let bases = [16usize, 32, 64]
+                    .iter()
+                    .map(|&pes| {
+                        let mut spec =
+                            BuildSpec::new(apps::matmul::build(pes)).cl0(270.0).seeded(seed);
+                        for (s, v) in apps::matmul::bindings(n) {
+                            spec = spec.bind(&s, v);
+                        }
+                        SearchBase { spec, flops: apps::matmul::flops(n, n, n) }
+                    })
+                    .collect();
+                (bases, SpaceOptions::for_device(&device))
+            }
+            "jacobi" | "diffusion" => {
+                let kind = if name == "jacobi" {
+                    StencilKind::Jacobi3D
+                } else {
+                    StencilKind::Diffusion3D
+                };
+                let nx = n_override.unwrap_or(apps::stencil::PAPER_NX);
+                let (ny, nz) = (apps::stencil::PAPER_NY, apps::stencil::PAPER_NZ);
+                let w = apps::stencil::paper_vec_width(kind);
+                let stages = 16usize;
+                (
+                    vec![SearchBase {
+                        spec: BuildSpec::new(apps::stencil::build(kind, stages, w))
+                            .bind("NX", nx)
+                            .bind("NY", ny)
+                            .bind("NZ", nz)
+                            .bind("NZ_v", nz / w as i64)
+                            .cl0(315.0)
+                            .seeded(seed),
+                        flops: apps::stencil::flops(kind, nx, ny, nz, stages),
+                    }],
+                    SpaceOptions::for_device(&device),
+                )
+            }
+            "fw" | "floyd_warshall" => {
+                let n = n_override.unwrap_or(apps::floyd_warshall::PAPER_N);
+                (
+                    vec![SearchBase {
+                        spec: BuildSpec::new(apps::floyd_warshall::build())
+                            .bind("N", n)
+                            .cl0(apps::floyd_warshall::CL0_REQUEST_MHZ)
+                            .seeded(seed),
+                        flops: apps::floyd_warshall::flops(n),
+                    }],
+                    SpaceOptions::for_device(&device),
+                )
+            }
+            other => {
+                return Err(format!(
+                    "unknown app '{other}' (vecadd|matmul|jacobi|diffusion|fw|all)"
+                ))
+            }
+        };
+
+        let hits_before = evaluator.cache_hits();
+        let outcome = run_search(&evaluator, &bases, &device, &opts, &cfg)?;
+        println!(
+            "=== dse: {name} — {} base config(s), {:?}, {} ===",
+            bases.len(),
+            cfg.strategy,
+            cfg.objective.name()
+        );
+        println!(
+            "Pareto frontier ({} non-dominated design points):",
+            outcome.frontier.len()
+        );
+        let mut t = Table::new(
+            "resource-vs-throughput frontier (ascending resource score)",
+            &["config", "SLRs", "DSPs", "DSP%", "BRAM%", "eff MHz", "GOp/s", "score"],
+        );
+        for e in &outcome.frontier {
+            let u = e.report.util_percent();
+            t.row(vec![
+                e.label.clone(),
+                e.point.replicas.to_string(),
+                fnum(e.total_resources.dsp, 0),
+                pct(u[4]),
+                pct(u[3]),
+                fnum(e.report.effective_mhz, 1),
+                fnum(e.gops, 1),
+                fnum(e.resource_score, 3),
+            ]);
+        }
+        println!("{}", t.render());
+        let reference = outcome.reference.as_ref().expect("search produced a reference");
+        println!(
+            "reference (best unpumped): {} — {} DSPs, {:.1} GOp/s",
+            reference.label, reference.total_resources.dsp, reference.gops
+        );
+        if let Some(chosen) = &outcome.chosen {
+            let dsp_pct = chosen.total_resources.dsp / reference.total_resources.dsp.max(1e-9)
+                * 100.0;
+            let gops_pct = chosen.gops / reference.gops.max(1e-12) * 100.0;
+            println!(
+                "chosen: {} — {} DSPs = {:.1}% of the unpumped DSP count, at {:.1}% of \
+                 reference throughput",
+                chosen.label, chosen.total_resources.dsp, dsp_pct, gops_pct
+            );
+        }
+        println!(
+            "evaluations: {} issued ({} cache hits, {} infeasible{})\n",
+            outcome.evaluated,
+            evaluator.cache_hits() - hits_before,
+            outcome.infeasible,
+            if outcome.truncated { ", budget hit" } else { "" }
+        );
+    }
     Ok(())
 }

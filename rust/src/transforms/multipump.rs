@@ -31,8 +31,8 @@ use super::pass::{Transform, TransformReport};
 use crate::analysis::movement::scope_movement;
 use crate::analysis::vectorizability::check_temporal;
 use crate::ir::{
-    CdcKind, ContainerKind, DataDecl, Memlet, MultipumpInfo, Node, NodeId, PumpMode, Sdfg,
-    Storage,
+    CdcKind, ContainerKind, DataDecl, LibraryOp, Memlet, MultipumpInfo, Node, NodeId, PumpMode,
+    Sdfg, Storage,
 };
 use crate::symbolic::{Expr, Subset};
 
@@ -121,15 +121,41 @@ impl Transform for MultiPump {
                 }
             }
         }
-        // resource mode: internal width must divide
+        // resource mode: every stream the design carries — boundary
+        // AND internal (stencil-chain inter-kernel streams) — must
+        // narrow exactly, and every library datapath must keep an
+        // integer lane count. Rejecting here keeps an illegal factor
+        // from surfacing later as a confusing lower/estimate error on
+        // a half-narrowed graph.
         if self.mode == PumpMode::Resource {
-            for s in into.iter().chain(out_of.iter()) {
-                let lanes = g.container(s).expect("stream declared").vtype.lanes;
+            for (name, decl) in &g.containers {
+                if decl.kind != ContainerKind::Stream {
+                    continue;
+                }
+                let lanes = decl.vtype.lanes;
                 if lanes % self.factor != 0 {
                     return Err(format!(
-                        "resource mode: stream '{s}' width {lanes} not divisible by M={}",
+                        "resource mode: stream '{name}' width {lanes} not divisible by M={} \
+                         (choose a factor dividing the vectorized stream width)",
                         self.factor
                     ));
+                }
+            }
+            for id in g.node_ids() {
+                if let Node::Library { name, op } = g.node(id) {
+                    let w = match op {
+                        LibraryOp::SystolicGemm { vec_width, .. }
+                        | LibraryOp::StencilStage { vec_width, .. } => *vec_width,
+                        // FW keeps its datapath width in resource mode
+                        LibraryOp::FloydWarshall { .. } => continue,
+                    };
+                    if w % self.factor != 0 {
+                        return Err(format!(
+                            "resource mode: library '{name}' vector width {w} not divisible \
+                             by M={}",
+                            self.factor
+                        ));
+                    }
                 }
             }
         }
@@ -435,6 +461,40 @@ mod tests {
         // slow-side stream doubled to 4 lanes, fast side keeps 2
         assert_eq!(g.container("x_to_vadd[entry]").unwrap().vtype.lanes, 4);
         assert_eq!(g.container("x_to_vadd[entry]_fast").unwrap().vtype.lanes, 2);
+    }
+
+    #[test]
+    fn resource_mode_rejects_indivisible_internal_stream() {
+        // stencil chain: the inter-kernel tmp stream is internal (no
+        // reader/writer touches it). Desynchronize its width so only
+        // the *internal* check can catch the illegal factor — before
+        // this check, the factor slipped through can_apply and left a
+        // half-narrowed graph for lower() to choke on.
+        let mut g = crate::apps::stencil::build(crate::ir::StencilKind::Jacobi3D, 2, 4);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &StreamingComposition::default()).unwrap();
+        g.containers.get_mut("tmp0").unwrap().vtype.lanes = 2;
+        let err = MultiPump::resource(4).can_apply(&g).unwrap_err();
+        assert!(err.contains("tmp0") && err.contains("not divisible"), "{err}");
+    }
+
+    #[test]
+    fn resource_mode_rejects_indivisible_library_width() {
+        let mut g = crate::apps::stencil::build(crate::ir::StencilKind::Jacobi3D, 1, 4);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &StreamingComposition::default()).unwrap();
+        // a datapath whose lane count would not stay an integer
+        for id in g.node_ids().collect::<Vec<_>>() {
+            if let Node::Library {
+                op: crate::ir::LibraryOp::StencilStage { vec_width, .. },
+                ..
+            } = g.node_mut(id)
+            {
+                *vec_width = 3;
+            }
+        }
+        let err = MultiPump::resource(2).can_apply(&g).unwrap_err();
+        assert!(err.contains("library") && err.contains("not divisible"), "{err}");
     }
 
     #[test]
