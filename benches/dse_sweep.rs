@@ -108,5 +108,39 @@ fn main() {
         ev.evaluate(&base.spec, &point, base.flops).unwrap();
     }));
 
+    // persistent cache: the incremental-CLI path. "cold disk" pays a
+    // full sweep plus the flush; "warm disk" loads the store and
+    // re-runs the whole sweep without a single compile.
+    let cache_dir =
+        std::env::temp_dir().join(format!("tvec-dse-sweep-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&cache_dir).expect("create bench cache dir");
+    suite.add(bench("exhaustive matmul sweep (cold disk cache + flush)", 1, 3, || {
+        let _ = std::fs::remove_dir_all(&cache_dir);
+        std::fs::create_dir_all(&cache_dir).unwrap();
+        let ev = Evaluator::with_cache_dir(&cache_dir);
+        run_search(
+            &ev,
+            &bases,
+            &device,
+            &opts,
+            &SearchConfig::exhaustive(Objective::resource()),
+        )
+        .unwrap();
+        ev.flush().unwrap();
+    }));
+    suite.add(bench("exhaustive matmul sweep (warm disk cache)", 1, 10, || {
+        let ev = Evaluator::with_cache_dir(&cache_dir);
+        run_search(
+            &ev,
+            &bases,
+            &device,
+            &opts,
+            &SearchConfig::exhaustive(Objective::resource()),
+        )
+        .unwrap();
+        assert_eq!(ev.cache_misses(), 0, "warm disk run must not compile");
+    }));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+
     suite.finish();
 }

@@ -7,9 +7,13 @@
 //! 2. **matmul** — sweep the PE counts of Table 3 and the full pump
 //!    grid; print the resource-vs-throughput Pareto frontier and the
 //!    selected design;
-//! 3. **strategies** — exhaustive vs greedy hill-climbing on the same
-//!    space, sharing one memoized evaluator: the second search is
-//!    mostly cache hits (incremental sweeps).
+//! 3. **strategies** — exhaustive, greedy hill-climbing, seeded
+//!    simulated annealing and successive halving on the same space,
+//!    sharing one memoized evaluator: later searches are mostly cache
+//!    hits (incremental sweeps);
+//! 4. **persistence** — the same evaluator cache flushed to disk and
+//!    reloaded by a "second process": the reload re-runs the full
+//!    sweep with zero new compiles, the `--cache-dir` story.
 //!
 //! Run with: `cargo run --release --example autotune`
 
@@ -123,21 +127,55 @@ fn main() -> Result<(), String> {
         mm_ev.cache_hits()
     );
 
-    println!("\n=== 3. exhaustive vs greedy on the same space ===");
+    println!("\n=== 3. four strategies on the same space ===");
     let shared = Evaluator::new();
-    for (name, strategy) in [("exhaustive", Strategy::Exhaustive), ("greedy", Strategy::Greedy)]
-    {
-        let cfg = SearchConfig { strategy, objective: Objective::resource(), budget: None };
+    for strategy in [
+        Strategy::Exhaustive,
+        Strategy::Greedy,
+        Strategy::Anneal,
+        Strategy::Halving,
+    ] {
+        let cfg = SearchConfig {
+            strategy,
+            objective: Objective::resource(),
+            budget: None,
+            seed: 17,
+        };
         let before = shared.cache_misses();
         let out = run_search(&shared, &mm_bases, &device, &mm_opts, &cfg)?;
         let chosen = out.chosen.as_ref().unwrap();
         println!(
-            "{name:<11} evaluations issued: {:>3} (new compiles: {:>3})  chosen: {}",
+            "{:<11} evaluations issued: {:>3} (new compiles: {:>3})  chosen: {}",
+            strategy.name(),
             out.evaluated,
             shared.cache_misses() - before,
             chosen.label
         );
     }
-    println!("greedy after exhaustive is pure cache: incremental re-tuning works");
+    println!("later strategies after exhaustive are mostly cache: incremental re-tuning works");
+
+    println!("\n=== 4. persistent cache across processes ===");
+    let cache_dir = std::env::temp_dir().join(format!("tvec-autotune-{}", std::process::id()));
+    std::fs::create_dir_all(&cache_dir).map_err(|e| e.to_string())?;
+    let cfg = SearchConfig::exhaustive(Objective::resource());
+    let first = Evaluator::with_cache_dir(&cache_dir);
+    run_search(&first, &mm_bases, &device, &mm_opts, &cfg)?;
+    let flushed = first.flush()?;
+    println!(
+        "process 1: {} compiles, flushed {flushed} entries to {}",
+        first.cache_misses(),
+        cache_dir.display()
+    );
+    let second = Evaluator::with_cache_dir(&cache_dir);
+    run_search(&second, &mm_bases, &device, &mm_opts, &cfg)?;
+    println!(
+        "process 2: loaded {} entries, re-ran the sweep with {} new compiles \
+         ({} cache hits)",
+        second.loaded_entries(),
+        second.cache_misses(),
+        second.cache_hits()
+    );
+    assert_eq!(second.cache_misses(), 0, "warm re-run must not compile anything");
+    let _ = std::fs::remove_dir_all(&cache_dir);
     Ok(())
 }

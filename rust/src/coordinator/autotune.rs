@@ -14,9 +14,181 @@ use crate::dse::{
 use crate::hw::Device;
 use crate::ir::{PumpMode, StencilKind};
 use crate::util::table::{fnum, Table};
+use crate::util::Rng;
 
 use super::experiment::ExperimentResult;
 use super::pipeline::BuildSpec;
+
+/// The PE counts the matmul sweep explores (Table 3's columns).
+const MATMUL_PES: [usize; 3] = [16, 32, 64];
+/// Clock requests and chain length shared by search and verify bases.
+const MATMUL_CL0_MHZ: f64 = 270.0;
+const STENCIL_CL0_MHZ: f64 = 315.0;
+const STENCIL_STAGES: usize = 16;
+
+/// One app's base specs at a given problem scale. This is the single
+/// source of truth the CLI search (paper scale) and the `--verify`
+/// golden rig (artifact scale) both build from, so the two stay
+/// aligned index for index.
+fn app_bases(app: &str, n: i64, seed: u64) -> Result<Vec<BuildSpec>, String> {
+    match app {
+        "vecadd" => Ok(vec![BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(seed)]),
+        "matmul" => {
+            if n % 16 != 0 {
+                return Err(format!("matmul size {n} must be a multiple of 16"));
+            }
+            Ok(MATMUL_PES
+                .iter()
+                .map(|&pes| {
+                    let mut spec = BuildSpec::new(apps::matmul::build(pes))
+                        .cl0(MATMUL_CL0_MHZ)
+                        .seeded(seed);
+                    for (s, v) in apps::matmul::bindings(n) {
+                        spec = spec.bind(&s, v);
+                    }
+                    spec
+                })
+                .collect())
+        }
+        "jacobi" | "diffusion" => {
+            let kind = stencil_kind(app);
+            let w = apps::stencil::paper_vec_width(kind);
+            let (ny, nz) = (apps::stencil::PAPER_NY, apps::stencil::PAPER_NZ);
+            Ok(vec![BuildSpec::new(apps::stencil::build(kind, STENCIL_STAGES, w))
+                .bind("NX", n)
+                .bind("NY", ny)
+                .bind("NZ", nz)
+                .bind("NZ_v", nz / w as i64)
+                .cl0(STENCIL_CL0_MHZ)
+                .seeded(seed)])
+        }
+        "fw" | "floyd_warshall" => Ok(vec![BuildSpec::new(apps::floyd_warshall::build())
+            .bind("N", n)
+            .cl0(apps::floyd_warshall::CL0_REQUEST_MHZ)
+            .seeded(seed)]),
+        other => Err(format!(
+            "unknown app '{other}' (vecadd|matmul|jacobi|diffusion|fw)"
+        )),
+    }
+}
+
+fn stencil_kind(app: &str) -> StencilKind {
+    if app == "jacobi" {
+        StencilKind::Jacobi3D
+    } else {
+        StencilKind::Diffusion3D
+    }
+}
+
+/// Default (paper-scale) problem size of a DSE app.
+fn paper_n(app: &str) -> i64 {
+    match app {
+        "vecadd" => apps::vecadd::PAPER_N,
+        "matmul" => apps::matmul::PAPER_NMK,
+        "jacobi" | "diffusion" => apps::stencil::PAPER_NX,
+        _ => apps::floyd_warshall::PAPER_N,
+    }
+}
+
+/// Workload flops of one app at size `n` (the throughput axis).
+fn app_flops(app: &str, n: i64) -> f64 {
+    match app {
+        "vecadd" => apps::vecadd::flops(n),
+        "matmul" => apps::matmul::flops(n, n, n),
+        "jacobi" | "diffusion" => {
+            let kind = stencil_kind(app);
+            apps::stencil::flops(
+                kind,
+                n,
+                apps::stencil::PAPER_NY,
+                apps::stencil::PAPER_NZ,
+                STENCIL_STAGES,
+            )
+        }
+        _ => apps::floyd_warshall::flops(n),
+    }
+}
+
+/// The search problem `tvec dse` runs for one app: paper-scale bases
+/// (or `n_override`) plus the device-bounded candidate-space options.
+pub fn search_problem(
+    app: &str,
+    n_override: Option<i64>,
+    seed: u64,
+    device: &Device,
+) -> Result<(Vec<SearchBase>, SpaceOptions), String> {
+    let n = n_override.unwrap_or_else(|| paper_n(app));
+    let flops = app_flops(app, n);
+    let bases = app_bases(app, n, seed)?
+        .into_iter()
+        .map(|spec| SearchBase { spec, flops })
+        .collect();
+    Ok((bases, SpaceOptions::for_device(device)))
+}
+
+/// Everything `tvec dse --verify` needs to exact-simulate one app's
+/// frontier points at golden (artifact) scale: base specs aligned
+/// index-for-index with the search's [`SearchBase`] list, plus the
+/// input containers the exact run reads.
+pub struct GoldenRig {
+    pub bases: Vec<BuildSpec>,
+    pub inputs: Vec<(String, Vec<f32>)>,
+}
+
+/// Build the golden-scale verification rig for a DSE app name (the
+/// names `tvec dse --app` accepts). The bases come from the same
+/// [`app_bases`] constructor as [`search_problem`] — same SDFG
+/// structure and base count, golden-scale bindings — so any frontier
+/// `DesignPoint` can be re-applied to its base by index.
+pub fn golden_rig(app: &str, seed: u64) -> Result<GoldenRig, String> {
+    let mut rng = Rng::new(seed ^ 0x601de5ca1e);
+    let (golden_n, inputs): (i64, Vec<(String, Vec<f32>)>) = match app {
+        "vecadd" => {
+            let n = apps::vecadd::GOLDEN_N;
+            (
+                n,
+                vec![
+                    ("x".to_string(), rng.f32_vec(n as usize)),
+                    ("y".to_string(), rng.f32_vec(n as usize)),
+                ],
+            )
+        }
+        "matmul" => {
+            let n = apps::matmul::GOLDEN_NMK;
+            (
+                n,
+                vec![
+                    ("A".to_string(), rng.f32_vec((n * n) as usize)),
+                    ("B".to_string(), rng.f32_vec((n * n) as usize)),
+                ],
+            )
+        }
+        "jacobi" | "diffusion" => {
+            // same chain length as the search bases (app_bases): only
+            // the domain shrinks, the design structure stays identical
+            let nx = apps::stencil::GOLDEN_NX;
+            let points = nx * apps::stencil::PAPER_NY * apps::stencil::PAPER_NZ;
+            (nx, vec![("v_in".to_string(), rng.f32_vec(points as usize))])
+        }
+        "fw" | "floyd_warshall" => {
+            let n = apps::floyd_warshall::GOLDEN_N;
+            (
+                n,
+                vec![(
+                    "dist".to_string(),
+                    apps::floyd_warshall::random_graph(n as usize, seed, 0.25),
+                )],
+            )
+        }
+        other => {
+            return Err(format!(
+                "no golden verification rig for app '{other}' \
+                 (vecadd|matmul|jacobi|diffusion|fw)"
+            ))
+        }
+    };
+    Ok(GoldenRig { bases: app_bases(app, golden_n, seed)?, inputs })
+}
 
 /// One application's autotuning outcome.
 pub struct DseChoice {
@@ -204,6 +376,69 @@ mod tests {
             assert!(r.rendered.contains(app), "missing {app}:\n{}", r.rendered);
         }
         assert_eq!(r.id, "dse");
+    }
+
+    #[test]
+    fn golden_rig_bases_align_with_search_bases() {
+        // the rig must mirror the search bases index for index (both
+        // are built by app_bases, but the invariant is load-bearing
+        // for --verify's Evaluation.base → golden base mapping)
+        let device = Device::u280();
+        for app in ["vecadd", "matmul", "jacobi", "diffusion", "fw"] {
+            let (search_bases, _) = search_problem(app, None, 1, &device).unwrap();
+            let rig = golden_rig(app, 1).unwrap();
+            assert_eq!(rig.bases.len(), search_bases.len(), "{app}");
+            assert!(!rig.inputs.is_empty(), "{app}");
+            for (s, g) in search_bases.iter().zip(&rig.bases) {
+                assert_eq!(s.spec.sdfg.name, g.sdfg.name, "{app}: SDFG structure differs");
+            }
+        }
+        assert_eq!(golden_rig("matmul", 1).unwrap().bases.len(), 3);
+        assert!(golden_rig("nonsense", 1).is_err());
+        assert!(search_problem("nonsense", None, 1, &device).is_err());
+    }
+
+    #[test]
+    fn vecadd_frontier_verifies_against_exact_sim() {
+        // the full --verify path in miniature: search at paper-ish
+        // scale, then exact-sim-check every frontier point at golden
+        // scale and demand rate-model agreement
+        use crate::dse::{verify_frontier, SearchBase, SpaceOptions, DEFAULT_TOLERANCE};
+        let n = 1i64 << 20;
+        let device = Device::u280();
+        let bases = [SearchBase {
+            spec: BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(1),
+            flops: apps::vecadd::flops(n),
+        }];
+        let opts = SpaceOptions {
+            vector_widths: vec![2, 4, 8],
+            pump_factors: vec![2],
+            pump_modes: vec![PumpMode::Resource],
+            max_replicas: 1,
+            cl0_requests_mhz: vec![],
+        };
+        let out = run_search(
+            &Evaluator::new(),
+            &bases,
+            &device,
+            &opts,
+            &SearchConfig::exhaustive(Objective::resource()),
+        )
+        .unwrap();
+        assert!(!out.frontier.is_empty());
+        let rig = golden_rig("vecadd", 1).unwrap();
+        let reports =
+            verify_frontier(&out.frontier, &rig.bases, &rig.inputs, DEFAULT_TOLERANCE)
+                .unwrap();
+        assert_eq!(reports.len(), out.frontier.len());
+        for r in &reports {
+            assert!(r.skipped.is_none(), "{}: unexpected skip", r.label);
+            assert!(
+                r.within,
+                "{}: rate {} vs exact {} (ratio {:.3})",
+                r.label, r.rate_cycles, r.exact_cycles, r.ratio
+            );
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod experiment;
 pub mod pipeline;
 pub mod report;
 
-pub use autotune::{autotune_all, dse_experiment, DseChoice};
+pub use autotune::{autotune_all, dse_experiment, golden_rig, search_problem, DseChoice, GoldenRig};
 pub use config::Config;
 pub use experiment::{run_experiment, ExperimentResult};
-pub use pipeline::{compile, BuildSpec, Compiled};
+pub use pipeline::{compile, compile_staged, BuildSpec, Compiled, Stage, StagedError};

@@ -83,8 +83,38 @@ pub struct Compiled {
     pub pass_log: Vec<String>,
 }
 
+/// Which pipeline stage rejected a spec. Transform and Bind failures
+/// are *legality* rejections (an illegal candidate, e.g. a factor that
+/// does not divide); Lower failures are genuine compile errors. The
+/// `dse` evaluator caches failures under this classification.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Transform,
+    Bind,
+    Lower,
+}
+
+/// A pipeline failure tagged with the stage that produced it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StagedError {
+    pub stage: Stage,
+    pub message: String,
+}
+
+impl std::fmt::Display for StagedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
 /// Run the pipeline.
 pub fn compile(spec: BuildSpec) -> Result<Compiled, String> {
+    compile_staged(spec).map_err(|e| e.message)
+}
+
+/// Run the pipeline, reporting *which stage* rejected the spec.
+pub fn compile_staged(spec: BuildSpec) -> Result<Compiled, StagedError> {
+    let err = |stage: Stage| move |message: String| StagedError { stage, message };
     let device = Device::u280();
     let tm = TimingModel::default();
     let cost = CostModel::default();
@@ -92,21 +122,24 @@ pub fn compile(spec: BuildSpec) -> Result<Compiled, String> {
     let mut pm = PassManager::new();
 
     if let Some((map, factor)) = &spec.vectorize {
-        pm.run(&mut g, &Vectorize::new(map, *factor))?;
+        pm.run(&mut g, &Vectorize::new(map, *factor)).map_err(err(Stage::Transform))?;
     }
     if spec.stream {
-        pm.run(&mut g, &StreamingComposition::default())?;
+        pm.run(&mut g, &StreamingComposition::default()).map_err(err(Stage::Transform))?;
     }
     if let Some((factor, mode)) = spec.pump {
         if !spec.stream {
-            return Err("multi-pumping requires streaming".into());
+            return Err(StagedError {
+                stage: Stage::Transform,
+                message: "multi-pumping requires streaming".into(),
+            });
         }
-        pm.run(&mut g, &MultiPump { factor, mode })?;
+        pm.run(&mut g, &MultiPump { factor, mode }).map_err(err(Stage::Transform))?;
     }
 
     let base: Vec<(&str, i64)> = spec.bindings.iter().map(|(s, v)| (s.as_str(), *v)).collect();
-    let env = g.bind(&base)?;
-    let mut design = lower(&g, &env, &cost)?;
+    let env = g.bind(&base).map_err(err(Stage::Bind))?;
+    let mut design = lower(&g, &env, &cost).map_err(err(Stage::Lower))?;
     design.cl0_request_mhz = spec.cl0_request_mhz;
     design.slr_replicas = spec.slr_replicas;
     let report = estimate(&design, &device, &tm, spec.seed);

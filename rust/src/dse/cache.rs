@@ -1,0 +1,532 @@
+//! Persistent on-disk store for the evaluation memo cache.
+//!
+//! Layout: one text file, one record per line ("JSON-lines" style, but
+//! tab-separated `key=value` tokens so it parses with zero dependencies
+//! — DESIGN.md §6). The first line is a schema-versioned header:
+//!
+//! ```text
+//! #tvec-dse-cache v1
+//! k=00ab…	st=ok	label=vecadd V8 R2	…
+//! k=17ff…	st=err	kind=legality	msg=trip count 100 …
+//! ```
+//!
+//! Floats are stored as their IEEE-754 bit patterns (16 hex digits) so
+//! a round trip is *bit exact* — the cache-hit determinism guarantees
+//! of the in-memory cache carry over to the disk tier. Values are
+//! percent-escaped (`%`, tab, CR, LF), so labels and error messages
+//! survive verbatim.
+//!
+//! Failure policy: a missing file is a silent cold start; an
+//! unreadable, version-mismatched, truncated or otherwise corrupt file
+//! is a cold start *with a reason* — never a crash and never a
+//! half-loaded store (a file that fails to parse anywhere is dropped
+//! whole, because a partially applied store could mask real entries on
+//! the next merge). Writes go to a temp file and are renamed into
+//! place, so a crashed writer leaves the previous store intact.
+//! Flushes merge with a fresh re-read of the file, but there is no
+//! cross-process lock: simultaneous flushers can race and the last
+//! writer wins for entries produced inside that window — keys are
+//! content hashes, so a lost entry only costs a later recompile.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::hw::{ClockReport, ResourceVec, Utilization};
+use crate::ir::PumpMode;
+
+use super::evaluate::{EvalError, Evaluation, FailKind};
+use super::space::DesignPoint;
+use crate::codegen::DesignReport;
+
+/// Bump on any change to the record layout: old stores then load cold
+/// instead of misparsing.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// File name inside a `--cache-dir`.
+pub const FILE_NAME: &str = "dse_cache.tsv";
+
+fn header() -> String {
+    format!("#tvec-dse-cache v{SCHEMA_VERSION}")
+}
+
+/// The result of loading a store.
+pub struct Loaded {
+    pub entries: HashMap<u64, Result<Evaluation, EvalError>>,
+    /// `Some(reason)` when a present store was discarded.
+    pub cold_reason: Option<String>,
+}
+
+// ---- escaping -------------------------------------------------------
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '%' => out.push_str("%25"),
+            '\t' => out.push_str("%09"),
+            '\n' => out.push_str("%0A"),
+            '\r' => out.push_str("%0D"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let bytes = s.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            let hex = s.get(i + 1..i + 3).ok_or("truncated escape")?;
+            let v = u8::from_str_radix(hex, 16).map_err(|_| "bad escape")?;
+            out.push(v as char);
+            i += 3;
+        } else {
+            // char boundaries: push the full char
+            let c = s[i..].chars().next().unwrap();
+            out.push(c);
+            i += c.len_utf8();
+        }
+    }
+    Ok(out)
+}
+
+// ---- primitive field codecs ----------------------------------------
+
+fn f64_enc(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn f64_dec(s: &str) -> Result<f64, String> {
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|_| format!("bad f64 bits '{s}'"))
+}
+
+fn fvec_enc(vs: &[f64]) -> String {
+    vs.iter().map(|v| f64_enc(*v)).collect::<Vec<_>>().join(",")
+}
+
+fn fvec_dec(s: &str, n: usize) -> Result<Vec<f64>, String> {
+    let parts: Vec<&str> = s.split(',').collect();
+    if parts.len() != n {
+        return Err(format!("expected {n} floats, got {}", parts.len()));
+    }
+    parts.iter().map(|p| f64_dec(p)).collect()
+}
+
+fn clock_enc(c: &ClockReport) -> String {
+    fvec_enc(&[c.achieved_mhz, c.requested_mhz, c.congestion])
+}
+
+fn clock_dec(s: &str) -> Result<ClockReport, String> {
+    let v = fvec_dec(s, 3)?;
+    Ok(ClockReport { achieved_mhz: v[0], requested_mhz: v[1], congestion: v[2] })
+}
+
+fn res_enc(r: &ResourceVec) -> String {
+    fvec_enc(&[r.lut_logic, r.lut_memory, r.registers, r.bram, r.dsp])
+}
+
+fn res_dec(s: &str) -> Result<ResourceVec, String> {
+    let v = fvec_dec(s, 5)?;
+    Ok(ResourceVec::new(v[0], v[1], v[2], v[3], v[4]))
+}
+
+fn util_dec(s: &str) -> Result<Utilization, String> {
+    let v = fvec_dec(s, 5)?;
+    Ok(Utilization {
+        lut_logic: v[0],
+        lut_memory: v[1],
+        registers: v[2],
+        bram: v[3],
+        dsp: v[4],
+    })
+}
+
+fn pump_enc(p: &Option<(usize, PumpMode)>) -> String {
+    match p {
+        None => "-".into(),
+        Some((f, PumpMode::Resource)) => format!("r{f}"),
+        Some((f, PumpMode::Throughput)) => format!("t{f}"),
+    }
+}
+
+fn pump_dec(s: &str) -> Result<Option<(usize, PumpMode)>, String> {
+    if s == "-" {
+        return Ok(None);
+    }
+    let (mode, digits) = s.split_at(1);
+    let f: usize = digits.parse().map_err(|_| format!("bad pump '{s}'"))?;
+    match mode {
+        "r" => Ok(Some((f, PumpMode::Resource))),
+        "t" => Ok(Some((f, PumpMode::Throughput))),
+        _ => Err(format!("bad pump mode '{s}'")),
+    }
+}
+
+fn vec_opt_enc(v: &Option<(String, usize)>) -> String {
+    match v {
+        None => "-".into(),
+        Some((map, w)) => format!("{w}:{}", escape(map)),
+    }
+}
+
+fn vec_opt_dec(s: &str) -> Result<Option<(String, usize)>, String> {
+    if s == "-" {
+        return Ok(None);
+    }
+    let (w, map) = s.split_once(':').ok_or_else(|| format!("bad vectorize '{s}'"))?;
+    let w: usize = w.parse().map_err(|_| format!("bad width '{s}'"))?;
+    Ok(Some((unescape(map)?, w)))
+}
+
+fn opt_f64_enc(v: &Option<f64>) -> String {
+    match v {
+        None => "-".into(),
+        Some(x) => f64_enc(*x),
+    }
+}
+
+fn opt_f64_dec(s: &str) -> Result<Option<f64>, String> {
+    if s == "-" {
+        return Ok(None);
+    }
+    Ok(Some(f64_dec(s)?))
+}
+
+// ---- record codec ---------------------------------------------------
+
+fn encode_record(key: u64, entry: &Result<Evaluation, EvalError>) -> String {
+    match entry {
+        Err(e) => format!(
+            "k={key:016x}\tst=err\tkind={}\tmsg={}",
+            e.kind.name(),
+            escape(&e.message)
+        ),
+        Ok(ev) => {
+            let r = &ev.report;
+            let cl1 = r.cl1.as_ref().map(clock_enc).unwrap_or_else(|| "-".into());
+            let u = [
+                r.util.lut_logic,
+                r.util.lut_memory,
+                r.util.registers,
+                r.util.bram,
+                r.util.dsp,
+            ];
+            format!(
+                "k={key:016x}\tst=ok\tlabel={}\tpv={}\tpp={}\trep={}\tpclk={}\t\
+                 name={}\tres={}\tutil={}\tcl0={}\tcl1={}\teff={}\tpf={}\t\
+                 cyc={}\ttime={}\tgops={}\ttot={}\tscore={}\tfits={}",
+                escape(&ev.label),
+                vec_opt_enc(&ev.point.vectorize),
+                pump_enc(&ev.point.pump),
+                ev.point.replicas,
+                opt_f64_enc(&ev.point.cl0_request_mhz),
+                escape(&r.name),
+                res_enc(&r.resources),
+                fvec_enc(&u),
+                clock_enc(&r.cl0),
+                cl1,
+                f64_enc(r.effective_mhz),
+                r.pump_factor,
+                ev.slow_cycles,
+                f64_enc(ev.time_s),
+                f64_enc(ev.gops),
+                res_enc(&ev.total_resources),
+                f64_enc(ev.resource_score),
+                ev.fits as u8,
+            )
+        }
+    }
+}
+
+fn decode_record(line: &str) -> Result<(u64, Result<Evaluation, EvalError>), String> {
+    let mut fields: HashMap<&str, &str> = HashMap::new();
+    for tok in line.split('\t') {
+        let (k, v) = tok.split_once('=').ok_or_else(|| format!("bad token '{tok}'"))?;
+        fields.insert(k, v);
+    }
+    let get = |name: &str| -> Result<&str, String> {
+        fields.get(name).copied().ok_or_else(|| format!("missing field '{name}'"))
+    };
+    let key = u64::from_str_radix(get("k")?, 16).map_err(|_| "bad key".to_string())?;
+    match get("st")? {
+        "err" => {
+            let kind = match get("kind")? {
+                "legality" => FailKind::Legality,
+                "compile" => FailKind::Compile,
+                other => return Err(format!("bad failure kind '{other}'")),
+            };
+            let message = unescape(get("msg")?)?;
+            Ok((key, Err(EvalError { kind, message })))
+        }
+        "ok" => {
+            let cl1 = match get("cl1")? {
+                "-" => None,
+                s => Some(clock_dec(s)?),
+            };
+            let report = DesignReport {
+                name: unescape(get("name")?)?,
+                resources: res_dec(get("res")?)?,
+                util: util_dec(get("util")?)?,
+                cl0: clock_dec(get("cl0")?)?,
+                cl1,
+                effective_mhz: f64_dec(get("eff")?)?,
+                pump_factor: get("pf")?.parse().map_err(|_| "bad pf".to_string())?,
+            };
+            let point = DesignPoint {
+                vectorize: vec_opt_dec(get("pv")?)?,
+                pump: pump_dec(get("pp")?)?,
+                replicas: get("rep")?.parse().map_err(|_| "bad rep".to_string())?,
+                cl0_request_mhz: opt_f64_dec(get("pclk")?)?,
+            };
+            let ev = Evaluation {
+                label: unescape(get("label")?)?,
+                point,
+                base: 0,
+                report,
+                slow_cycles: get("cyc")?.parse().map_err(|_| "bad cyc".to_string())?,
+                time_s: f64_dec(get("time")?)?,
+                gops: f64_dec(get("gops")?)?,
+                total_resources: res_dec(get("tot")?)?,
+                resource_score: f64_dec(get("score")?)?,
+                fits: get("fits")? == "1",
+            };
+            Ok((key, Ok(ev)))
+        }
+        other => Err(format!("bad status '{other}'")),
+    }
+}
+
+// ---- store API ------------------------------------------------------
+
+/// Load a store. Missing file → empty, no reason. Present but
+/// unreadable / wrong version / corrupt anywhere → empty, with the
+/// reason recorded. Never an error.
+pub fn load(path: &Path) -> Loaded {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Loaded { entries: HashMap::new(), cold_reason: None }
+        }
+        Err(e) => {
+            return Loaded {
+                entries: HashMap::new(),
+                cold_reason: Some(format!("unreadable cache ({e}); cold start")),
+            }
+        }
+    };
+    let cold = |reason: String| Loaded {
+        entries: HashMap::new(),
+        cold_reason: Some(format!("{reason}; cold start")),
+    };
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(h) if h == header() => {}
+        Some(h) if h.starts_with("#tvec-dse-cache") => {
+            return cold(format!("schema mismatch (file '{h}', want '{}')", header()))
+        }
+        _ => return cold("unrecognized cache header".into()),
+    }
+    let mut entries = HashMap::new();
+    for (i, line) in lines.enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        match decode_record(line) {
+            Ok((k, v)) => {
+                entries.insert(k, v);
+            }
+            Err(e) => return cold(format!("corrupt record at line {} ({e})", i + 2)),
+        }
+    }
+    Loaded { entries, cold_reason: None }
+}
+
+/// Merge `from` into `into`. Existing entries win (keys are content
+/// hashes, so colliding entries should be identical anyway).
+pub fn merge(
+    into: &mut HashMap<u64, Result<Evaluation, EvalError>>,
+    from: HashMap<u64, Result<Evaluation, EvalError>>,
+) {
+    for (k, v) in from {
+        into.entry(k).or_insert(v);
+    }
+}
+
+/// Write a store atomically (temp file + rename). Records are sorted
+/// by key so identical caches serialize identically.
+pub fn save(
+    path: &Path,
+    entries: &HashMap<u64, Result<Evaluation, EvalError>>,
+) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+    }
+    let mut keys: Vec<&u64> = entries.keys().collect();
+    keys.sort();
+    let mut text = header();
+    text.push('\n');
+    for k in keys {
+        text.push_str(&encode_record(*k, &entries[k]));
+        text.push('\n');
+    }
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, text).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("rename {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::BuildSpec;
+    use crate::dse::evaluate::{evaluate_point, fingerprint};
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "tvec-cache-test-{}-{tag}.tsv",
+            std::process::id()
+        ))
+    }
+
+    fn sample_entries() -> HashMap<u64, Result<Evaluation, EvalError>> {
+        let base = BuildSpec::new(apps::vecadd::build()).bind("N", 1 << 12).seeded(3);
+        let flops = apps::vecadd::flops(1 << 12);
+        let mut m = HashMap::new();
+        for (w, pump) in [(4usize, None), (8, Some((2, PumpMode::Resource)))] {
+            let p = DesignPoint {
+                vectorize: Some(("vadd".into(), w)),
+                pump,
+                replicas: 1,
+                cl0_request_mhz: None,
+            };
+            let key = fingerprint(&base, &p, flops);
+            m.insert(key, evaluate_point(&base, &p, flops));
+        }
+        m.insert(
+            0xdead,
+            Err(EvalError::legality("N = 100 does not divide by 8")),
+        );
+        m.insert(0xbeef, Err(EvalError::compile("lowering exploded %\t weirdly")));
+        m
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let path = tmp_path("roundtrip");
+        let entries = sample_entries();
+        save(&path, &entries).unwrap();
+        let loaded = load(&path);
+        assert!(loaded.cold_reason.is_none());
+        assert_eq!(loaded.entries.len(), entries.len());
+        for (k, v) in &entries {
+            let got = loaded.entries.get(k).expect("key survived");
+            match (v, got) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.label, b.label);
+                    assert_eq!(a.point, b.point);
+                    assert_eq!(a.slow_cycles, b.slow_cycles);
+                    // bit-exact floats
+                    assert_eq!(a.gops.to_bits(), b.gops.to_bits());
+                    assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+                    assert_eq!(a.resource_score.to_bits(), b.resource_score.to_bits());
+                    assert_eq!(a.report.effective_mhz.to_bits(), b.report.effective_mhz.to_bits());
+                    assert_eq!(a.report.resources, b.report.resources);
+                    assert_eq!(a.report.util, b.report.util);
+                    assert_eq!(
+                        a.report.cl0.achieved_mhz.to_bits(),
+                        b.report.cl0.achieved_mhz.to_bits()
+                    );
+                    assert_eq!(
+                        a.report.cl1.map(|c| c.achieved_mhz.to_bits()),
+                        b.report.cl1.map(|c| c.achieved_mhz.to_bits())
+                    );
+                    assert_eq!(a.fits, b.fits);
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b),
+                _ => panic!("ok/err mismatch for key {k:x}"),
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn merge_unions_two_stores() {
+        let (pa, pb) = (tmp_path("merge-a"), tmp_path("merge-b"));
+        let all = sample_entries();
+        let mut a = HashMap::new();
+        let mut b = HashMap::new();
+        for (i, (k, v)) in all.iter().enumerate() {
+            if i % 2 == 0 {
+                a.insert(*k, v.clone());
+            } else {
+                b.insert(*k, v.clone());
+            }
+        }
+        save(&pa, &a).unwrap();
+        save(&pb, &b).unwrap();
+        let mut merged = load(&pa).entries;
+        merge(&mut merged, load(&pb).entries);
+        assert_eq!(merged.len(), all.len());
+        for k in all.keys() {
+            assert!(merged.contains_key(k));
+        }
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
+    }
+
+    #[test]
+    fn schema_version_mismatch_is_cold_start() {
+        let path = tmp_path("version");
+        std::fs::write(&path, "#tvec-dse-cache v999\nk=0\tst=err\tkind=legality\tmsg=x\n")
+            .unwrap();
+        let loaded = load(&path);
+        assert!(loaded.entries.is_empty());
+        let reason = loaded.cold_reason.expect("has a reason");
+        assert!(reason.contains("schema mismatch"), "{reason}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_or_corrupt_file_is_cold_start() {
+        let path = tmp_path("corrupt");
+        // a valid store, truncated mid-record
+        let entries = sample_entries();
+        save(&path, &entries).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // cut mid-token inside the last record: "…\tst" without its '='
+        let cut = text.rfind("\tst=").unwrap() + "\tst".len();
+        std::fs::write(&path, &text[..cut]).unwrap();
+        let loaded = load(&path);
+        assert!(loaded.entries.is_empty(), "truncated store must not half-load");
+        assert!(loaded.cold_reason.is_some());
+        // outright garbage
+        std::fs::write(&path, "not a cache at all\n").unwrap();
+        let loaded = load(&path);
+        assert!(loaded.entries.is_empty());
+        assert!(loaded.cold_reason.is_some());
+        // empty file
+        std::fs::write(&path, "").unwrap();
+        let loaded = load(&path);
+        assert!(loaded.entries.is_empty());
+        assert!(loaded.cold_reason.is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_silent_cold_start() {
+        let loaded = load(&tmp_path("never-written"));
+        assert!(loaded.entries.is_empty());
+        assert!(loaded.cold_reason.is_none());
+    }
+
+    #[test]
+    fn escaping_round_trips_hostile_strings() {
+        for s in ["plain", "tabs\tand\nnewlines", "100%\r%25", "κλίμα ≠ ascii"] {
+            assert_eq!(unescape(&escape(s)).unwrap(), s, "{s:?}");
+        }
+    }
+}

@@ -11,19 +11,70 @@
 //! fingerprint of the *content* of the work (printed SDFG, bindings,
 //! candidate, seed), so repeated sweeps — a greedy refinement after an
 //! exhaustive pass, a re-run with a wider grid — are incremental.
+//!
+//! The cache has two tiers: the in-process `HashMap` and, when the
+//! evaluator is created with [`Evaluator::with_cache_dir`], the on-disk
+//! store of [`super::cache`], so repeated *CLI invocations* are
+//! incremental too ([`Evaluator::flush`] persists new entries).
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::codegen::DesignReport;
-use crate::coordinator::pipeline::{compile, BuildSpec};
+use crate::coordinator::pipeline::{compile_staged, BuildSpec, Stage};
 use crate::hw::ResourceVec;
 use crate::ir::{printer, PumpMode};
 use crate::sim::rate_model;
 
+use super::cache;
 use super::pareto::resource_score;
 use super::space::DesignPoint;
+
+/// Why a cached candidate failed: rejected by a legality check
+/// (transform precondition, indivisible binding) or by a genuine
+/// compile error in lowering. Reports and `--verify` keep the two
+/// apart — a legality rejection is expected pruning, a compile error
+/// is a bug surface.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailKind {
+    Legality,
+    Compile,
+}
+
+impl FailKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailKind::Legality => "legality",
+            FailKind::Compile => "compile",
+        }
+    }
+}
+
+/// A per-candidate failure, cached alongside successes so infeasible
+/// points are never re-compiled.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalError {
+    pub kind: FailKind,
+    pub message: String,
+}
+
+impl EvalError {
+    pub fn legality(message: impl Into<String>) -> EvalError {
+        EvalError { kind: FailKind::Legality, message: message.into() }
+    }
+
+    pub fn compile(message: impl Into<String>) -> EvalError {
+        EvalError { kind: FailKind::Compile, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for EvalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.kind.name(), self.message)
+    }
+}
 
 /// An evaluated candidate: the priced design plus the derived metrics
 /// the Pareto analysis and the search rank on.
@@ -32,6 +83,10 @@ pub struct Evaluation {
     pub point: DesignPoint,
     /// `<design name> <point label>`, e.g. `gemm_p32 R2`.
     pub label: String,
+    /// Index of the [`super::search::SearchBase`] this evaluation came
+    /// from — stamped by `run_search` (0 for direct evaluations), used
+    /// by `--verify` to rebuild the point at golden scale.
+    pub base: usize,
     pub report: DesignReport,
     /// Rate-model cycle count of one workload execution (slow domain).
     pub slow_cycles: u64,
@@ -103,9 +158,12 @@ pub fn evaluate_point(
     base: &BuildSpec,
     point: &DesignPoint,
     flops: f64,
-) -> Result<Evaluation, String> {
+) -> Result<Evaluation, EvalError> {
     let spec = point.apply_to(base);
-    let c = compile(spec)?;
+    let c = compile_staged(spec).map_err(|e| match e.stage {
+        Stage::Transform | Stage::Bind => EvalError::legality(e.message),
+        Stage::Lower => EvalError::compile(e.message),
+    })?;
     let stats = rate_model(&c.design);
     let time_s = stats.seconds_at(c.report.effective_mhz);
     let replicas = point.replicas.max(1) as f64;
@@ -113,6 +171,7 @@ pub fn evaluate_point(
     Ok(Evaluation {
         label: format!("{} {}", c.design.name, point.label()),
         point: point.clone(),
+        base: 0,
         slow_cycles: stats.slow_cycles,
         time_s,
         gops,
@@ -124,18 +183,43 @@ pub fn evaluate_point(
 }
 
 /// Memoizing, thread-parallel candidate evaluator. Failures are cached
-/// too: an infeasible candidate (e.g. an indivisible binding) is not
-/// recompiled on repeated sweeps.
+/// too — tagged legality vs compile — so an infeasible candidate is
+/// never recompiled on repeated sweeps. With a cache directory the
+/// memo table is additionally loaded from / flushed to a versioned
+/// on-disk store, making separate processes incremental.
 #[derive(Default)]
 pub struct Evaluator {
-    cache: Mutex<HashMap<u64, Result<Evaluation, String>>>,
+    cache: Mutex<HashMap<u64, Result<Evaluation, EvalError>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    /// Persistent store path, when created with `with_cache_dir`.
+    disk_path: Option<PathBuf>,
+    /// Entries loaded from disk at construction.
+    loaded: usize,
+    /// Why the disk store was ignored, if it was.
+    cold_reason: Option<String>,
 }
 
 impl Evaluator {
     pub fn new() -> Evaluator {
         Evaluator::default()
+    }
+
+    /// An evaluator whose memo cache is backed by
+    /// `<dir>/<cache::FILE_NAME>`. A missing store is a silent cold
+    /// start; an unreadable or corrupt one is a cold start with a
+    /// reason ([`Evaluator::cold_reason`]) — never an error.
+    pub fn with_cache_dir(dir: &Path) -> Evaluator {
+        let path = dir.join(cache::FILE_NAME);
+        let loaded = cache::load(&path);
+        let n = loaded.entries.len();
+        Evaluator {
+            cache: Mutex::new(loaded.entries),
+            disk_path: Some(path),
+            loaded: n,
+            cold_reason: loaded.cold_reason,
+            ..Evaluator::default()
+        }
     }
 
     pub fn cache_hits(&self) -> usize {
@@ -146,6 +230,37 @@ impl Evaluator {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Entries loaded from the persistent store at construction.
+    pub fn loaded_entries(&self) -> usize {
+        self.loaded
+    }
+
+    /// Why the persistent store was discarded at load, if it was
+    /// (schema mismatch, corruption).
+    pub fn cold_reason(&self) -> Option<&str> {
+        self.cold_reason.as_deref()
+    }
+
+    /// Persist the memo cache to the store this evaluator was created
+    /// with. Re-reads the file immediately before writing and merges
+    /// (in-memory entries win), then writes atomically (tmp + rename).
+    /// There is no cross-process lock, so two simultaneous flushes can
+    /// race and the last writer wins for entries evaluated inside that
+    /// window — keys are content hashes, so a lost entry costs one
+    /// recompile later, never a wrong result. Returns the total
+    /// entries written, or an error string on IO failure. A no-op
+    /// `Ok(0)` without a cache directory.
+    pub fn flush(&self) -> Result<usize, String> {
+        let path = match &self.disk_path {
+            Some(p) => p.clone(),
+            None => return Ok(0),
+        };
+        let mut merged = self.cache.lock().unwrap().clone();
+        cache::merge(&mut merged, cache::load(&path).entries);
+        cache::save(&path, &merged)?;
+        Ok(merged.len())
+    }
+
     /// Evaluate one candidate, hitting the cache when the same content
     /// was evaluated before.
     pub fn evaluate(
@@ -153,7 +268,7 @@ impl Evaluator {
         base: &BuildSpec,
         point: &DesignPoint,
         flops: f64,
-    ) -> Result<Evaluation, String> {
+    ) -> Result<Evaluation, EvalError> {
         let key = fingerprint(base, point, flops);
         if let Some(hit) = self.cache.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -173,7 +288,7 @@ impl Evaluator {
         base: &BuildSpec,
         points: &[DesignPoint],
         flops: f64,
-    ) -> Vec<Result<Evaluation, String>> {
+    ) -> Vec<Result<Evaluation, EvalError>> {
         let n = points.len();
         if n == 0 {
             return Vec::new();
@@ -183,7 +298,7 @@ impl Evaluator {
             .unwrap_or(1)
             .min(n);
         let next = AtomicUsize::new(0);
-        let slots: Mutex<Vec<Option<Result<Evaluation, String>>>> =
+        let slots: Mutex<Vec<Option<Result<Evaluation, EvalError>>>> =
             Mutex::new(vec![None; n]);
         std::thread::scope(|s| {
             for _ in 0..workers {
@@ -303,11 +418,17 @@ mod tests {
     }
 
     #[test]
-    fn infeasible_binding_is_a_per_point_error() {
-        // N = 100 does not divide by 8: the candidate fails cleanly
+    fn infeasible_binding_is_a_legality_error() {
+        // N = 100 does not divide by 8: the candidate fails cleanly,
+        // and the failure is classified legality — not a compile error
         let base = BuildSpec::new(apps::vecadd::build()).bind("N", 100);
         let ev = Evaluator::new();
         let r = ev.evaluate(&base, &dp_point(), 100.0);
-        assert!(r.is_err());
+        let e = r.unwrap_err();
+        assert_eq!(e.kind, FailKind::Legality, "{e}");
+        // the cached failure keeps its kind
+        let again = ev.evaluate(&base, &dp_point(), 100.0).unwrap_err();
+        assert_eq!(again.kind, FailKind::Legality);
+        assert_eq!(ev.cache_hits(), 1);
     }
 }

@@ -15,18 +15,28 @@
 //! * [`pareto`] — the resource-vs-throughput Pareto frontier and the
 //!   two search objectives generalizing the paper's pumping modes
 //!   (min-resource at iso-throughput / max-throughput at iso-resource);
-//! * [`search`] — exhaustive and greedy (coordinate-descent) strategies
-//!   with an early-cutoff evaluation budget.
+//! * [`search`] — exhaustive, greedy (coordinate-descent), simulated
+//!   annealing and successive-halving strategies with an early-cutoff
+//!   evaluation budget;
+//! * [`cache`] — the schema-versioned on-disk store behind
+//!   `--cache-dir`: the memo cache persisted across processes, so
+//!   repeated CLI invocations are incremental too;
+//! * [`verify`] — exact-simulator spot checks of chosen frontier
+//!   points at golden scale (`tvec dse --verify`), guarding the
+//!   analytic rate model the whole search ranks on.
 //!
 //! Entry points: `tvec dse --app <name>` on the CLI, the `dse`
 //! experiment in [`crate::coordinator`], and `examples/autotune.rs`.
 
+pub mod cache;
 pub mod evaluate;
 pub mod pareto;
 pub mod search;
 pub mod space;
+pub mod verify;
 
-pub use evaluate::{Evaluation, Evaluator};
+pub use evaluate::{EvalError, Evaluation, Evaluator, FailKind};
 pub use pareto::{dominates, frontier, resource_score, Objective};
 pub use search::{run_search, SearchBase, SearchConfig, SearchOutcome, Strategy};
 pub use space::{generate, DesignPoint, SpaceOptions};
+pub use verify::{verify_frontier, VerifyReport, DEFAULT_TOLERANCE};

@@ -8,15 +8,31 @@
 //!   neighbours, move to the best-ranked one, repeat until no
 //!   neighbour improves. Orders of magnitude fewer evaluations on
 //!   large grids, at the risk of a local optimum.
+//! * **Anneal** — simulated annealing with a deterministic seeded RNG
+//!   ([`crate::util::Rng`]): propose single-dimension moves (with an
+//!   occasional random restart), accept uphill moves with probability
+//!   `exp(-Δ/T)` under a geometric cooling schedule. Same seed ⇒ same
+//!   walk ⇒ same chosen point.
+//! * **Halving** — successive halving over the legality-pruned grid.
+//!   The fidelity axis is the number of P&R jitter seeds averaged per
+//!   candidate: round 0 scores every candidate under the base seed,
+//!   each later round re-prices the surviving half under one more seed
+//!   and ranks by mean energy, so survivors are configurations that
+//!   are good *robustly*, not by one lucky timing draw.
 //!
-//! Both honour an early-cutoff **budget** (maximum candidate
-//! evaluations); exhaustive search truncates the grid and records that
-//! it did, so a capped sweep never silently reads as a full one.
+//! All strategies honour an early-cutoff **budget** (maximum candidate
+//! evaluations); budget truncation is recorded, so a capped sweep never
+//! silently reads as a full one. All are memo-backed — re-evaluations
+//! (and repeated invocations through a persistent cache directory) are
+//! cache hits.
+
+use std::collections::HashMap;
 
 use crate::coordinator::pipeline::BuildSpec;
 use crate::hw::Device;
+use crate::util::Rng;
 
-use super::evaluate::{Evaluation, Evaluator};
+use super::evaluate::{EvalError, Evaluation, Evaluator, FailKind};
 use super::pareto::{frontier, Objective};
 use super::space::{generate, DesignPoint, SpaceOptions};
 
@@ -25,6 +41,30 @@ use super::space::{generate, DesignPoint, SpaceOptions};
 pub enum Strategy {
     Exhaustive,
     Greedy,
+    Anneal,
+    Halving,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Exhaustive => "exhaustive",
+            Strategy::Greedy => "greedy",
+            Strategy::Anneal => "anneal",
+            Strategy::Halving => "halving",
+        }
+    }
+
+    /// Parse a CLI strategy name.
+    pub fn from_name(name: &str) -> Option<Strategy> {
+        match name {
+            "exhaustive" => Some(Strategy::Exhaustive),
+            "greedy" => Some(Strategy::Greedy),
+            "anneal" => Some(Strategy::Anneal),
+            "halving" => Some(Strategy::Halving),
+            _ => None,
+        }
+    }
 }
 
 /// One search problem: a base spec plus the workload size (flops) its
@@ -44,15 +84,31 @@ pub struct SearchConfig {
     /// iso-constraints) is always evaluated in full, so `evaluated`
     /// can exceed a budget smaller than the baseline.
     pub budget: Option<usize>,
+    /// Seed for the stochastic strategies (anneal's walk, halving's
+    /// sampling order). Deterministic: same seed ⇒ same outcome.
+    pub seed: u64,
 }
 
 impl SearchConfig {
     pub fn exhaustive(objective: Objective) -> SearchConfig {
-        SearchConfig { strategy: Strategy::Exhaustive, objective, budget: None }
+        SearchConfig { strategy: Strategy::Exhaustive, objective, budget: None, seed: 1 }
     }
 
     pub fn greedy(objective: Objective) -> SearchConfig {
-        SearchConfig { strategy: Strategy::Greedy, objective, budget: None }
+        SearchConfig { strategy: Strategy::Greedy, objective, budget: None, seed: 1 }
+    }
+
+    pub fn anneal(objective: Objective) -> SearchConfig {
+        SearchConfig { strategy: Strategy::Anneal, objective, budget: None, seed: 1 }
+    }
+
+    pub fn halving(objective: Objective) -> SearchConfig {
+        SearchConfig { strategy: Strategy::Halving, objective, budget: None, seed: 1 }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> SearchConfig {
+        self.seed = seed;
+        self
     }
 }
 
@@ -68,10 +124,37 @@ pub struct SearchOutcome {
     pub chosen: Option<Evaluation>,
     /// Candidate evaluations issued (cache hits included).
     pub evaluated: usize,
-    /// Candidates that failed to compile (illegal bindings etc.).
-    pub infeasible: usize,
+    /// Candidates rejected by a legality check (expected pruning).
+    pub illegal: usize,
+    /// Candidates that failed with a genuine compile error.
+    pub compile_failed: usize,
     /// True when the budget truncated the sweep.
     pub truncated: bool,
+}
+
+impl SearchOutcome {
+    /// Total candidates that did not evaluate, either kind.
+    pub fn infeasible(&self) -> usize {
+        self.illegal + self.compile_failed
+    }
+}
+
+/// Per-strategy bookkeeping: evaluations issued and failures by kind.
+#[derive(Default)]
+struct WalkStats {
+    issued: usize,
+    illegal: usize,
+    compile_failed: usize,
+    truncated: bool,
+}
+
+impl WalkStats {
+    fn count_failure(&mut self, e: &EvalError) {
+        match e.kind {
+            FailKind::Legality => self.illegal += 1,
+            FailKind::Compile => self.compile_failed += 1,
+        }
+    }
 }
 
 /// Number of search dimensions two points differ in.
@@ -80,6 +163,14 @@ fn differing_dims(a: &DesignPoint, b: &DesignPoint) -> usize {
         + (a.pump != b.pump) as usize
         + (a.replicas != b.replicas) as usize
         + (a.cl0_request_mhz != b.cl0_request_mhz) as usize
+}
+
+/// Scalar energy for the stochastic strategies (lower is better):
+/// the objective's rank metric, with an offset that keeps every
+/// infeasible point above every feasible one.
+fn energy(objective: &Objective, e: &Evaluation, reference: &Evaluation) -> f64 {
+    let (class, metric) = objective.rank(e, reference);
+    metric + class as f64 * 1e9
 }
 
 /// Run a search over one or more bases (e.g. a PE-count sweep supplies
@@ -97,8 +188,12 @@ pub fn run_search(
     }
     let mut evaluations: Vec<Evaluation> = Vec::new();
     let mut evaluated = 0usize;
-    let mut infeasible = 0usize;
+    let mut illegal = 0usize;
+    let mut compile_failed = 0usize;
     let mut truncated = false;
+    // candidates the stochastic strategies endorse over the plain
+    // rank-selection (halving's robust winner)
+    let mut winners: Vec<Evaluation> = Vec::new();
 
     // one legality-pruned grid per base
     let grids: Vec<Vec<DesignPoint>> =
@@ -112,13 +207,14 @@ pub fn run_search(
     // the iso-constraints — "iso-throughput" means not losing against
     // the best design traditional vectorization alone can reach.
     let mut reference: Option<Evaluation> = None;
-    for (base, grid) in bases.iter().zip(&grids) {
+    for (i, (base, grid)) in bases.iter().zip(&grids).enumerate() {
         let baseline: Vec<DesignPoint> =
             grid.iter().filter(|p| is_baseline(p)).cloned().collect();
         evaluated += baseline.len();
         for r in evaluator.evaluate_all(&base.spec, &baseline, base.flops) {
             match r {
-                Ok(e) => {
+                Ok(mut e) => {
+                    e.base = i;
                     if e.fits
                         && reference.as_ref().map(|r| e.gops > r.gops).unwrap_or(true)
                     {
@@ -126,7 +222,10 @@ pub fn run_search(
                     }
                     evaluations.push(e);
                 }
-                Err(_) => infeasible += 1,
+                Err(err) => match err.kind {
+                    FailKind::Legality => illegal += 1,
+                    FailKind::Compile => compile_failed += 1,
+                },
             }
         }
     }
@@ -135,64 +234,110 @@ pub fn run_search(
         None => return Err("no unpumped configuration fits the device".into()),
     };
 
-    for (base, grid) in bases.iter().zip(&grids) {
+    for (i, (base, grid)) in bases.iter().zip(&grids).enumerate() {
         let full_grid: Vec<DesignPoint> = grid
             .iter()
             .filter(|p| **p != DesignPoint::original())
             .cloned()
             .collect();
-        match cfg.strategy {
+        let remaining_budget = cfg.budget.map(|b| b.saturating_sub(evaluated));
+        let (mut evs, winner, stats) = match cfg.strategy {
             Strategy::Exhaustive => {
                 // the baseline points are already evaluated
+                let mut stats = WalkStats::default();
                 let mut batch: Vec<DesignPoint> = full_grid
                     .into_iter()
                     .filter(|p| !is_baseline(p))
                     .collect();
-                if let Some(budget) = cfg.budget {
-                    let remaining = budget.saturating_sub(evaluated);
+                if let Some(remaining) = remaining_budget {
                     if batch.len() > remaining {
                         batch.truncate(remaining);
-                        truncated = true;
+                        stats.truncated = true;
                     }
                 }
-                evaluated += batch.len();
+                stats.issued = batch.len();
+                let mut evs = Vec::new();
                 for r in evaluator.evaluate_all(&base.spec, &batch, base.flops) {
                     match r {
-                        Ok(e) => evaluations.push(e),
-                        Err(_) => infeasible += 1,
+                        Ok(e) => evs.push(e),
+                        Err(err) => stats.count_failure(&err),
                     }
                 }
+                (evs, None, stats)
             }
             Strategy::Greedy => {
                 // the full grid (baseline included) so the climb can
                 // route through unpumped intermediates; re-evaluations
                 // are cache hits
-                let (evs, stats) = greedy_climb(
+                greedy_climb(
                     evaluator,
                     base,
                     &full_grid,
                     &cfg.objective,
                     &reference,
-                    cfg.budget.map(|b| b.saturating_sub(evaluated)),
-                );
-                evaluated += stats.0;
-                infeasible += stats.1;
-                truncated |= stats.2;
-                evaluations.extend(evs);
+                    remaining_budget,
+                )
             }
+            Strategy::Anneal => anneal_walk(
+                evaluator,
+                base,
+                &full_grid,
+                &cfg.objective,
+                &reference,
+                remaining_budget,
+                cfg.seed.wrapping_add(i as u64),
+            ),
+            Strategy::Halving => halving_rounds(
+                evaluator,
+                base,
+                &full_grid,
+                &cfg.objective,
+                &reference,
+                remaining_budget,
+                cfg.seed.wrapping_add(i as u64),
+            ),
+        };
+        for e in &mut evs {
+            e.base = i;
+        }
+        evaluated += stats.issued;
+        illegal += stats.illegal;
+        compile_failed += stats.compile_failed;
+        truncated |= stats.truncated;
+        evaluations.extend(evs);
+        if let Some(mut w) = winner {
+            w.base = i;
+            winners.push(w);
         }
     }
 
     let front = frontier(&evaluations);
-    let chosen = cfg
-        .objective
-        .select(&evaluations, &reference)
-        .cloned()
-        // never pick something the reference dominates outright
-        .filter(|c| {
+    // never pick something the reference dominates outright
+    let beats_reference = |c: &Evaluation| {
+        cfg.objective
+            .rank(c, &reference)
+            .le(&cfg.objective.rank(&reference, &reference))
+    };
+    // the stochastic strategies may endorse a specific winner (e.g.
+    // halving's robust multi-seed choice); a dominated endorsement
+    // falls back to rank-selection over everything evaluated, not
+    // straight to the reference
+    let endorsed = winners
+        .into_iter()
+        .filter(|w| cfg.objective.feasible(w, &reference))
+        .min_by(|a, b| {
+            let (ra, rb) = (cfg.objective.rank(a, &reference), cfg.objective.rank(b, &reference));
+            ra.0.cmp(&rb.0)
+                .then(ra.1.partial_cmp(&rb.1).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.label.cmp(&b.label))
+        });
+    let chosen = endorsed
+        .filter(|c| beats_reference(c))
+        .or_else(|| {
             cfg.objective
-                .rank(c, &reference)
-                .le(&cfg.objective.rank(&reference, &reference))
+                .select(&evaluations, &reference)
+                .cloned()
+                .filter(|c| beats_reference(c))
         })
         .or_else(|| Some(reference.clone()));
 
@@ -202,13 +347,13 @@ pub fn run_search(
         chosen,
         evaluations,
         evaluated,
-        infeasible,
+        illegal,
+        compile_failed,
         truncated,
     })
 }
 
-/// Coordinate-descent hill climb from the original point. Returns the
-/// evaluations performed and (issued, infeasible, truncated).
+/// Coordinate-descent hill climb from the original point.
 fn greedy_climb(
     evaluator: &Evaluator,
     base: &SearchBase,
@@ -216,11 +361,9 @@ fn greedy_climb(
     objective: &Objective,
     reference: &Evaluation,
     budget: Option<usize>,
-) -> (Vec<Evaluation>, (usize, usize, bool)) {
+) -> (Vec<Evaluation>, Option<Evaluation>, WalkStats) {
     let mut evaluations: Vec<Evaluation> = Vec::new();
-    let mut issued = 0usize;
-    let mut infeasible = 0usize;
-    let mut truncated = false;
+    let mut stats = WalkStats::default();
     let mut visited: Vec<bool> = vec![false; grid.len()];
 
     let mut current = DesignPoint::original();
@@ -239,14 +382,14 @@ fn greedy_climb(
         let mut batch: Vec<DesignPoint> = Vec::new();
         for &i in &neighbour_idx {
             if let Some(b) = budget {
-                if issued >= b {
-                    truncated = true;
+                if stats.issued >= b {
+                    stats.truncated = true;
                     break;
                 }
             }
             visited[i] = true;
             batch.push(grid[i].clone());
-            issued += 1;
+            stats.issued += 1;
         }
         if batch.is_empty() {
             break;
@@ -264,7 +407,7 @@ fn greedy_climb(
                     }
                     evaluations.push(e);
                 }
-                Err(_) => infeasible += 1,
+                Err(err) => stats.count_failure(&err),
             }
         }
         let step = match best_step {
@@ -275,13 +418,229 @@ fn greedy_climb(
             .as_ref()
             .map(|c| objective.rank(&step, reference) < objective.rank(c, reference))
             .unwrap_or(true);
-        if !improves || truncated {
+        if !improves || stats.truncated {
             break;
         }
         current = step.point.clone();
         current_eval = Some(step);
     }
-    (evaluations, (issued, infeasible, truncated))
+    (evaluations, None, stats)
+}
+
+/// Simulated annealing over the grid. Deterministic for a fixed seed:
+/// proposals come from a seeded [`Rng`], the schedule is geometric, and
+/// evaluations are pure, so the whole walk replays identically.
+fn anneal_walk(
+    evaluator: &Evaluator,
+    base: &SearchBase,
+    grid: &[DesignPoint],
+    objective: &Objective,
+    reference: &Evaluation,
+    budget: Option<usize>,
+    seed: u64,
+) -> (Vec<Evaluation>, Option<Evaluation>, WalkStats) {
+    let mut stats = WalkStats::default();
+    if grid.is_empty() {
+        return (Vec::new(), None, stats);
+    }
+    let mut rng = Rng::new(seed ^ 0xa95ea1);
+    let default_iters = (grid.len() * 2).max(8);
+    let iters = match budget {
+        Some(b) => default_iters.min(b),
+        None => default_iters,
+    };
+    if iters < default_iters {
+        stats.truncated = true;
+    }
+
+    let mut evaluations: Vec<Evaluation> = Vec::new();
+    let mut visited: Vec<bool> = vec![false; grid.len()];
+
+    // start at the original (already priced in the baseline sweep)
+    let mut current = DesignPoint::original();
+    let mut current_energy = evaluator
+        .evaluate(&base.spec, &current, base.flops)
+        .ok()
+        .map(|e| energy(objective, &e, reference))
+        .unwrap_or(f64::INFINITY);
+
+    let t0 = 0.5f64;
+    let t_end = 1e-3f64;
+    for step in 0..iters {
+        let frac = step as f64 / iters.max(1) as f64;
+        let t = t0 * (t_end / t0).powf(frac);
+
+        // Propose: a 1-dimension neighbour, or (15 %) a random jump.
+        // Unvisited points are preferred in both branches — the walk is
+        // coverage-biased, so a full-length run on a grid that fits the
+        // iteration count provably prices every candidate (and the best
+        // tracker then equals the exhaustive optimum).
+        let neighbours: Vec<usize> = grid
+            .iter()
+            .enumerate()
+            .filter(|(i, p)| !visited[*i] && differing_dims(p, &current) == 1)
+            .map(|(i, _)| i)
+            .collect();
+        let jump = neighbours.is_empty() || rng.f64() < 0.15;
+        let cand_idx = if !jump {
+            neighbours[rng.range(0, neighbours.len())]
+        } else {
+            let unvisited: Vec<usize> =
+                (0..grid.len()).filter(|&i| !visited[i]).collect();
+            if unvisited.is_empty() {
+                // fully covered: keep refining among visited neighbours
+                let revisitable: Vec<usize> = grid
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, p)| differing_dims(p, &current) == 1)
+                    .map(|(i, _)| i)
+                    .collect();
+                if revisitable.is_empty() {
+                    rng.range(0, grid.len())
+                } else {
+                    revisitable[rng.range(0, revisitable.len())]
+                }
+            } else {
+                unvisited[rng.range(0, unvisited.len())]
+            }
+        };
+        let first_visit = !visited[cand_idx];
+        visited[cand_idx] = true;
+
+        stats.issued += 1;
+        match evaluator.evaluate(&base.spec, &grid[cand_idx], base.flops) {
+            Ok(e) => {
+                let cand_energy = energy(objective, &e, reference);
+                if first_visit {
+                    evaluations.push(e.clone());
+                }
+                let d = cand_energy - current_energy;
+                if d <= 0.0 || rng.f64() < (-d / t).exp() {
+                    current = grid[cand_idx].clone();
+                    current_energy = cand_energy;
+                }
+            }
+            Err(err) => stats.count_failure(&err),
+        }
+    }
+    // No endorsed winner: everything the walk priced is in
+    // `evaluations`, and `run_search`'s rank-selection additionally
+    // sees the baseline sweep — a subset endorsement could only tie or
+    // lose against it. (Halving *does* endorse, because its multi-seed
+    // mean deliberately overrides the single-seed rank.)
+    (evaluations, None, stats)
+}
+
+/// Successive halving. Fidelity = number of P&R jitter seeds averaged:
+/// every survivor of round *r* has been priced under `r + 1` seeds and
+/// is ranked by its mean energy, so the final winner is robust to
+/// timing jitter rather than lucky under one draw. The budget is spent
+/// half on the opening full-grid round, half on the refinement rounds.
+fn halving_rounds(
+    evaluator: &Evaluator,
+    base: &SearchBase,
+    grid: &[DesignPoint],
+    objective: &Objective,
+    reference: &Evaluation,
+    budget: Option<usize>,
+    seed: u64,
+) -> (Vec<Evaluation>, Option<Evaluation>, WalkStats) {
+    let mut stats = WalkStats::default();
+    if grid.is_empty() {
+        return (Vec::new(), None, stats);
+    }
+    // deterministic sampling order, so a budget-truncated opening round
+    // is an unbiased sample rather than a prefix artifact
+    let mut order: Vec<usize> = (0..grid.len()).collect();
+    Rng::new(seed ^ 0x4a1f).shuffle(&mut order);
+
+    let mut survivors: Vec<usize> = order;
+    if let Some(b) = budget {
+        let opening = (b / 2).max(1).min(survivors.len());
+        if opening < survivors.len() {
+            survivors.truncate(opening);
+            stats.truncated = true;
+        }
+    }
+
+    let mut evaluations: Vec<Evaluation> = Vec::new();
+    // candidate index → (energy sum, samples, base-seed evaluation)
+    let mut scores: HashMap<usize, (f64, u32, Option<Evaluation>)> = HashMap::new();
+    let mut remaining = budget;
+
+    let max_rounds = 4usize;
+    for round in 0..max_rounds {
+        if survivors.is_empty() {
+            break;
+        }
+        if let Some(rem) = remaining {
+            if rem == 0 {
+                stats.truncated = true;
+                break;
+            }
+            if survivors.len() > rem {
+                survivors.truncate(rem);
+                stats.truncated = true;
+            }
+        }
+        // round 0 prices under the base seed (sharing cache entries
+        // with every other strategy); later rounds add jitter seeds
+        let spec_r = if round == 0 {
+            base.spec.clone()
+        } else {
+            let s = base.spec.seed.wrapping_add(round as u64);
+            base.spec.clone().seeded(s)
+        };
+        let points: Vec<DesignPoint> = survivors.iter().map(|&i| grid[i].clone()).collect();
+        stats.issued += points.len();
+        if let Some(rem) = remaining.as_mut() {
+            *rem = rem.saturating_sub(points.len());
+        }
+        let results = evaluator.evaluate_all(&spec_r, &points, base.flops);
+        let mut alive: Vec<usize> = Vec::new();
+        for (&idx, r) in survivors.iter().zip(&results) {
+            match r {
+                Ok(e) => {
+                    let en = energy(objective, e, reference);
+                    let slot = scores.entry(idx).or_insert((0.0, 0, None));
+                    slot.0 += en;
+                    slot.1 += 1;
+                    if round == 0 {
+                        slot.2 = Some(e.clone());
+                        evaluations.push(e.clone());
+                    }
+                    alive.push(idx);
+                }
+                Err(err) => stats.count_failure(err),
+            }
+        }
+        // rank by mean energy, keep the better half
+        alive.sort_by(|a, b| {
+            let ma = scores[a].0 / scores[a].1 as f64;
+            let mb = scores[b].0 / scores[b].1 as f64;
+            ma.partial_cmp(&mb)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(b))
+        });
+        if alive.len() <= 2 {
+            survivors = alive;
+            break;
+        }
+        alive.truncate((alive.len() + 1) / 2);
+        survivors = alive;
+    }
+
+    // winner: the surviving candidate with the best mean energy,
+    // reported through its base-seed evaluation
+    let winner = survivors
+        .iter()
+        .filter_map(|i| {
+            let (sum, n, ev) = scores.get(i)?;
+            ev.clone().map(|e| (sum / *n as f64, e))
+        })
+        .min_by(|(a, _), (b, _)| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(_, e)| e);
+    (evaluations, winner, stats)
 }
 
 #[cfg(test)]
@@ -336,6 +695,7 @@ mod tests {
             strategy: Strategy::Exhaustive,
             objective: Objective::resource(),
             budget: Some(4),
+            seed: 1,
         };
         let out =
             run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
@@ -368,6 +728,117 @@ mod tests {
     }
 
     #[test]
+    fn anneal_reaches_the_exhaustive_choice_on_vecadd() {
+        // the vecadd space is small: a full-length annealing walk must
+        // find the same optimum the exhaustive sweep proves is best
+        let device = Device::u280();
+        let opts = small_opts();
+        let ex = run_search(
+            &Evaluator::new(),
+            &vecadd_bases(),
+            &device,
+            &opts,
+            &SearchConfig::exhaustive(Objective::resource()),
+        )
+        .unwrap();
+        let an = run_search(
+            &Evaluator::new(),
+            &vecadd_bases(),
+            &device,
+            &opts,
+            &SearchConfig::anneal(Objective::resource()).with_seed(42),
+        )
+        .unwrap();
+        let (ec, ac) = (ex.chosen.unwrap(), an.chosen.unwrap());
+        assert_eq!(ec.point, ac.point, "anneal diverged: {} vs {}", ec.label, ac.label);
+    }
+
+    #[test]
+    fn anneal_is_deterministic_for_a_seed() {
+        let device = Device::u280();
+        let opts = small_opts();
+        let run = |seed: u64| {
+            let out = run_search(
+                &Evaluator::new(),
+                &vecadd_bases(),
+                &device,
+                &opts,
+                &SearchConfig::anneal(Objective::resource()).with_seed(seed),
+            )
+            .unwrap();
+            (
+                out.chosen.unwrap().point,
+                out.evaluated,
+                out.evaluations.iter().map(|e| e.label.clone()).collect::<Vec<_>>(),
+            )
+        };
+        let (p1, n1, l1) = run(7);
+        let (p2, n2, l2) = run(7);
+        assert_eq!(p1, p2, "same seed must choose the same point");
+        assert_eq!(n1, n2, "same seed must issue the same evaluation count");
+        assert_eq!(l1, l2, "same seed must walk the same path");
+    }
+
+    #[test]
+    fn anneal_respects_budget() {
+        let device = Device::u280();
+        let cfg = SearchConfig {
+            strategy: Strategy::Anneal,
+            objective: Objective::resource(),
+            budget: Some(10),
+            seed: 5,
+        };
+        let out =
+            run_search(&Evaluator::new(), &vecadd_bases(), &device, &small_opts(), &cfg)
+                .unwrap();
+        assert!(out.evaluated <= 10 + 4, "baseline + ≤ budget proposals");
+        // a budgeted anneal still returns something sane
+        let chosen = out.chosen.unwrap();
+        let reference = out.reference.unwrap();
+        assert!(chosen.resource_score <= reference.resource_score + 1e-12);
+    }
+
+    #[test]
+    fn halving_reaches_the_exhaustive_choice_on_vecadd() {
+        let device = Device::u280();
+        let opts = small_opts();
+        let ex = run_search(
+            &Evaluator::new(),
+            &vecadd_bases(),
+            &device,
+            &opts,
+            &SearchConfig::exhaustive(Objective::resource()),
+        )
+        .unwrap();
+        let ha = run_search(
+            &Evaluator::new(),
+            &vecadd_bases(),
+            &device,
+            &opts,
+            &SearchConfig::halving(Objective::resource()).with_seed(11),
+        )
+        .unwrap();
+        let (ec, hc) = (ex.chosen.unwrap(), ha.chosen.unwrap());
+        assert_eq!(ec.point, hc.point, "halving diverged: {} vs {}", ec.label, hc.label);
+    }
+
+    #[test]
+    fn halving_budget_samples_instead_of_full_grid() {
+        let device = Device::u280();
+        let cfg = SearchConfig {
+            strategy: Strategy::Halving,
+            objective: Objective::resource(),
+            budget: Some(8),
+            seed: 2,
+        };
+        let out =
+            run_search(&Evaluator::new(), &vecadd_bases(), &device, &small_opts(), &cfg)
+                .unwrap();
+        assert!(out.truncated, "a tight budget must be recorded as truncation");
+        assert!(out.chosen.is_some());
+    }
+
+    #[test]
     fn repeated_search_is_fully_cached() {
         let device = Device::u280();
         let ev = Evaluator::new();
@@ -381,5 +852,13 @@ mod tests {
             "second sweep must be served from the cache"
         );
         assert!(ev.cache_hits() > 0);
+    }
+
+    #[test]
+    fn strategy_names_round_trip() {
+        for s in [Strategy::Exhaustive, Strategy::Greedy, Strategy::Anneal, Strategy::Halving] {
+            assert_eq!(Strategy::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::from_name("nonsense"), None);
     }
 }

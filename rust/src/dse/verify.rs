@@ -1,0 +1,222 @@
+//! Exact-simulator verification of search results (`tvec dse --verify`).
+//!
+//! The whole search ranks candidates by the **analytic rate model**
+//! ([`crate::sim::rate_model`]) — O(#modules) per candidate, which is
+//! what makes thousand-point sweeps affordable. The rate model is a
+//! model, though, and a model that drifts would silently mis-rank the
+//! frontier. This module re-runs frontier points through the **exact
+//! cycle-stepped simulator** ([`crate::sim::run_exact`]) at *golden
+//! scale* (the small problem sizes the AOT golden artifacts use, where
+//! exact simulation is affordable) and fails loudly when the two
+//! disagree beyond a tolerance.
+//!
+//! A point whose golden-scale rebuild is rejected by a legality check
+//! (e.g. a vector width that divides the paper-scale extent but not
+//! the golden one) is reported as *skipped* with the reason — visible,
+//! never silent. A genuine compile error at golden scale is a failure:
+//! the same configuration compiled at search scale, so lowering must
+//! not break when only the bindings shrink.
+
+use crate::coordinator::pipeline::{compile_staged, BuildSpec, Stage};
+use crate::sim::{rate_model, run_exact, Hbm};
+
+use super::evaluate::Evaluation;
+
+/// Accept rate-model vs exact-sim cycle ratios within ±40 % — the
+/// envelope the simulator's own cross-validation tests use (vecadd
+/// ±15 %, FW ±25 %, GEMM ±40 %).
+pub const DEFAULT_TOLERANCE: f64 = 0.40;
+
+/// Exact-sim cycle budget per verified point (slow cycles).
+pub const MAX_VERIFY_CYCLES: u64 = 50_000_000;
+
+/// One verified frontier point.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub label: String,
+    /// Analytic rate-model slow-cycle count at golden scale.
+    pub rate_cycles: u64,
+    /// Exact-simulator slow-cycle count at golden scale.
+    pub exact_cycles: u64,
+    /// `rate_cycles / exact_cycles` (1.0 = perfect agreement).
+    pub ratio: f64,
+    /// Within tolerance?
+    pub within: bool,
+    /// `Some(reason)` when the point could not be rebuilt at golden
+    /// scale (legality at the smaller bindings) and was skipped.
+    pub skipped: Option<String>,
+}
+
+/// Verify one evaluation's design point against a golden-scale base
+/// spec. `inputs` are the HBM containers the exact run needs.
+pub fn verify_point(
+    golden_base: &BuildSpec,
+    e: &Evaluation,
+    inputs: &[(String, Vec<f32>)],
+    tolerance: f64,
+) -> Result<VerifyReport, String> {
+    let spec = e.point.apply_to(golden_base);
+    let c = match compile_staged(spec) {
+        Ok(c) => c,
+        Err(err) if matches!(err.stage, Stage::Transform | Stage::Bind) => {
+            return Ok(VerifyReport {
+                label: e.label.clone(),
+                rate_cycles: 0,
+                exact_cycles: 0,
+                ratio: 0.0,
+                within: false,
+                skipped: Some(format!("not legal at golden scale: {}", err.message)),
+            })
+        }
+        Err(err) => {
+            return Err(format!(
+                "{}: compile error at golden scale (compiled fine at search scale): {}",
+                e.label, err.message
+            ))
+        }
+    };
+    let rate = rate_model(&c.design).slow_cycles;
+    let mut hbm = Hbm::new();
+    for (name, data) in inputs {
+        hbm.load(name, data.clone());
+    }
+    let exact = run_exact(&c.design, hbm, MAX_VERIFY_CYCLES)
+        .map_err(|err| format!("{}: exact simulation failed: {err}", e.label))?
+        .stats
+        .slow_cycles;
+    let ratio = rate as f64 / exact.max(1) as f64;
+    Ok(VerifyReport {
+        label: e.label.clone(),
+        rate_cycles: rate,
+        exact_cycles: exact,
+        ratio,
+        within: (ratio - 1.0).abs() <= tolerance,
+        skipped: None,
+    })
+}
+
+/// Verify every frontier point against its base's golden-scale spec
+/// (`golden_bases[i]` corresponds to `SearchBase` index `i` of the
+/// search that produced the frontier). Returns one report per point;
+/// use [`failures`] to turn the reports into a hard pass/fail.
+pub fn verify_frontier(
+    frontier: &[Evaluation],
+    golden_bases: &[BuildSpec],
+    inputs: &[(String, Vec<f32>)],
+    tolerance: f64,
+) -> Result<Vec<VerifyReport>, String> {
+    let mut out = Vec::with_capacity(frontier.len());
+    for e in frontier {
+        let base = golden_bases.get(e.base).ok_or_else(|| {
+            format!(
+                "{}: no golden base for search base index {} ({} available)",
+                e.label,
+                e.base,
+                golden_bases.len()
+            )
+        })?;
+        out.push(verify_point(base, e, inputs, tolerance)?);
+    }
+    Ok(out)
+}
+
+/// The labels of reports that ran and disagreed beyond tolerance.
+pub fn failures(reports: &[VerifyReport]) -> Vec<&VerifyReport> {
+    reports.iter().filter(|r| r.skipped.is_none() && !r.within).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::BuildSpec;
+    use crate::dse::evaluate::evaluate_point;
+    use crate::dse::space::DesignPoint;
+    use crate::ir::PumpMode;
+    use crate::util::Rng;
+
+    fn vecadd_golden() -> (BuildSpec, Vec<(String, Vec<f32>)>) {
+        let n = apps::vecadd::GOLDEN_N;
+        let spec = BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(9);
+        let mut rng = Rng::new(2024);
+        let inputs = vec![
+            ("x".to_string(), rng.f32_vec(n as usize)),
+            ("y".to_string(), rng.f32_vec(n as usize)),
+        ];
+        (spec, inputs)
+    }
+
+    fn eval_at_paper_scale(point: DesignPoint) -> Evaluation {
+        let n = 1i64 << 20;
+        let base = BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(9);
+        evaluate_point(&base, &point, apps::vecadd::flops(n)).unwrap()
+    }
+
+    #[test]
+    fn rate_model_agrees_with_exact_on_pumped_vecadd() {
+        let (golden, inputs) = vecadd_golden();
+        for pump in [None, Some((2, PumpMode::Resource))] {
+            let e = eval_at_paper_scale(DesignPoint {
+                vectorize: Some(("vadd".into(), 8)),
+                pump,
+                replicas: 1,
+                cl0_request_mhz: None,
+            });
+            let r = verify_point(&golden, &e, &inputs, DEFAULT_TOLERANCE).unwrap();
+            assert!(r.skipped.is_none());
+            assert!(r.exact_cycles > 0 && r.rate_cycles > 0);
+            assert!(
+                r.within,
+                "{}: rate {} vs exact {} (ratio {:.3})",
+                r.label, r.rate_cycles, r.exact_cycles, r.ratio
+            );
+        }
+    }
+
+    #[test]
+    fn golden_scale_legality_rejection_is_a_visible_skip() {
+        // width 8 is legal at N = 2^20 but not at a golden N of 100
+        let spec = BuildSpec::new(apps::vecadd::build()).bind("N", 100).seeded(9);
+        let e = eval_at_paper_scale(DesignPoint {
+            vectorize: Some(("vadd".into(), 8)),
+            pump: None,
+            replicas: 1,
+            cl0_request_mhz: None,
+        });
+        let r = verify_point(&spec, &e, &[], DEFAULT_TOLERANCE).unwrap();
+        let reason = r.skipped.expect("must be skipped, not failed");
+        assert!(reason.contains("not legal at golden scale"), "{reason}");
+    }
+
+    #[test]
+    fn verify_frontier_rejects_missing_base() {
+        let (golden, inputs) = vecadd_golden();
+        let mut e = eval_at_paper_scale(DesignPoint::original());
+        e.base = 3; // no such base
+        let err = verify_frontier(&[e], &[golden], &inputs, DEFAULT_TOLERANCE).unwrap_err();
+        assert!(err.contains("no golden base"), "{err}");
+    }
+
+    #[test]
+    fn failures_filter_excludes_skips() {
+        let ok = VerifyReport {
+            label: "ok".into(),
+            rate_cycles: 100,
+            exact_cycles: 100,
+            ratio: 1.0,
+            within: true,
+            skipped: None,
+        };
+        let bad = VerifyReport { label: "bad".into(), ratio: 2.0, within: false, ..ok.clone() };
+        let skip = VerifyReport {
+            label: "skip".into(),
+            within: false,
+            skipped: Some("n/a".into()),
+            ..ok.clone()
+        };
+        let reports = vec![ok, bad, skip];
+        let f = failures(&reports);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].label, "bad");
+    }
+}

@@ -29,7 +29,11 @@
 //! * [`dse`] — automatic design-space exploration: enumerates, prunes,
 //!   evaluates and ranks candidate build configurations over the
 //!   resource-vs-throughput Pareto frontier, generalizing the paper's
-//!   hand-picked per-app configurations into a search;
+//!   hand-picked per-app configurations into a search — with four
+//!   strategies (exhaustive / greedy / seeded annealing / successive
+//!   halving), a persistent cross-process evaluation cache
+//!   (`--cache-dir`), and exact-simulator verification of frontier
+//!   points (`--verify`);
 //! * [`apps`] — the four evaluated applications (vector addition,
 //!   systolic matrix multiplication, Jacobi-3D / Diffusion-3D stencil
 //!   chains, Floyd–Warshall).

@@ -32,8 +32,11 @@ fn main() {
         .opt("n", "problem size override")
         .opt("app", "dse: application (vecadd|matmul|jacobi|diffusion|fw|all)")
         .opt_default("objective", "dse: resource|throughput", "resource")
-        .opt_default("strategy", "dse: exhaustive|greedy", "exhaustive")
+        .opt_default("strategy", "dse: exhaustive|greedy|anneal|halving", "exhaustive")
         .opt("budget", "dse: max candidate evaluations (early cutoff)")
+        .opt("cache-dir", "dse: directory for the persistent evaluation cache")
+        .opt_default("tolerance", "dse --verify: rate-vs-exact relative tolerance", "0.4")
+        .flag("verify", "dse: exact-sim-check every frontier point at golden scale")
         .flag("emit", "write generated HLS/RTL text files to ./generated")
         .flag("verbose", "print pass logs");
     let args = cli.parse_env();
@@ -230,12 +233,8 @@ fn cmd_run(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
 }
 
 fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), String> {
-    use temporal_vec::dse::{
-        run_search, Evaluator, Objective, SearchBase, SearchConfig, SpaceOptions, Strategy,
-    };
+    use temporal_vec::dse::{Evaluator, Objective, SearchConfig, Strategy};
     use temporal_vec::hw::Device;
-    use temporal_vec::ir::StencilKind;
-    use temporal_vec::util::table::{fnum, pct, Table};
 
     let app = args
         .get("app")
@@ -247,12 +246,19 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
         "resource" => Objective::resource(),
         other => return Err(format!("unknown objective '{other}' (resource|throughput)")),
     };
-    let strategy = match args.get_or("strategy", "exhaustive") {
-        "greedy" => Strategy::Greedy,
-        "exhaustive" => Strategy::Exhaustive,
-        other => return Err(format!("unknown strategy '{other}' (exhaustive|greedy)")),
-    };
-    let cfg = SearchConfig { strategy, objective, budget: args.get_usize("budget") };
+    let strategy = Strategy::from_name(args.get_or("strategy", "exhaustive")).ok_or_else(
+        || {
+            format!(
+                "unknown strategy '{}' (exhaustive|greedy|anneal|halving)",
+                args.get_or("strategy", "exhaustive")
+            )
+        },
+    )?;
+    let cfg = SearchConfig { strategy, objective, budget: args.get_usize("budget"), seed };
+    let tol_raw = args.get_or("tolerance", "0.4");
+    let tolerance: f64 = tol_raw
+        .parse()
+        .map_err(|_| format!("invalid --tolerance '{tol_raw}' (want a number, e.g. 0.4)"))?;
     let device = Device::u280();
     let names: Vec<&str> = match app.as_str() {
         "all" => vec!["vecadd", "matmul", "jacobi", "diffusion", "fw"],
@@ -260,136 +266,185 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
     };
     let n_override = args.get_u64("n").map(|v| v as i64);
     // one evaluator across apps: the content-hashed cache dedups
-    // shared substructure between sweeps
-    let evaluator = Evaluator::new();
+    // shared substructure between sweeps; with --cache-dir the cache
+    // additionally persists across processes
+    let evaluator = match args.get("cache-dir") {
+        Some(dir) => {
+            let ev = Evaluator::with_cache_dir(std::path::Path::new(dir));
+            match ev.cold_reason() {
+                Some(reason) => println!("cache: {reason}"),
+                None => println!("cache: loaded {} entries from {dir}", ev.loaded_entries()),
+            }
+            ev
+        }
+        None => Evaluator::new(),
+    };
+    let mut verify_failures: Vec<String> = Vec::new();
+    // a fatal error still flushes the cache first — nothing already
+    // compiled is lost to a late failure
+    let mut fatal: Option<String> = None;
 
     for name in names {
-        // per-app bases: the matmul PE sweep supplies several
-        let (bases, opts): (Vec<SearchBase>, SpaceOptions) = match name {
-            "vecadd" => {
-                let n = n_override.unwrap_or(apps::vecadd::PAPER_N);
-                (
-                    vec![SearchBase {
-                        spec: BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(seed),
-                        flops: apps::vecadd::flops(n),
-                    }],
-                    SpaceOptions::for_device(&device),
-                )
-            }
-            "matmul" => {
-                let n = n_override.unwrap_or(apps::matmul::PAPER_NMK);
-                if n % 16 != 0 {
-                    return Err(format!("matmul size {n} must be a multiple of 16"));
-                }
-                let bases = [16usize, 32, 64]
-                    .iter()
-                    .map(|&pes| {
-                        let mut spec =
-                            BuildSpec::new(apps::matmul::build(pes)).cl0(270.0).seeded(seed);
-                        for (s, v) in apps::matmul::bindings(n) {
-                            spec = spec.bind(&s, v);
-                        }
-                        SearchBase { spec, flops: apps::matmul::flops(n, n, n) }
-                    })
-                    .collect();
-                (bases, SpaceOptions::for_device(&device))
-            }
-            "jacobi" | "diffusion" => {
-                let kind = if name == "jacobi" {
-                    StencilKind::Jacobi3D
-                } else {
-                    StencilKind::Diffusion3D
-                };
-                let nx = n_override.unwrap_or(apps::stencil::PAPER_NX);
-                let (ny, nz) = (apps::stencil::PAPER_NY, apps::stencil::PAPER_NZ);
-                let w = apps::stencil::paper_vec_width(kind);
-                let stages = 16usize;
-                (
-                    vec![SearchBase {
-                        spec: BuildSpec::new(apps::stencil::build(kind, stages, w))
-                            .bind("NX", nx)
-                            .bind("NY", ny)
-                            .bind("NZ", nz)
-                            .bind("NZ_v", nz / w as i64)
-                            .cl0(315.0)
-                            .seeded(seed),
-                        flops: apps::stencil::flops(kind, nx, ny, nz, stages),
-                    }],
-                    SpaceOptions::for_device(&device),
-                )
-            }
-            "fw" | "floyd_warshall" => {
-                let n = n_override.unwrap_or(apps::floyd_warshall::PAPER_N);
-                (
-                    vec![SearchBase {
-                        spec: BuildSpec::new(apps::floyd_warshall::build())
-                            .bind("N", n)
-                            .cl0(apps::floyd_warshall::CL0_REQUEST_MHZ)
-                            .seeded(seed),
-                        flops: apps::floyd_warshall::flops(n),
-                    }],
-                    SpaceOptions::for_device(&device),
-                )
-            }
-            other => {
-                return Err(format!(
-                    "unknown app '{other}' (vecadd|matmul|jacobi|diffusion|fw|all)"
-                ))
-            }
-        };
+        let step = run_dse_app(
+            name,
+            n_override,
+            seed,
+            &device,
+            &cfg,
+            &evaluator,
+            args.flag("verify"),
+            tolerance,
+            &mut verify_failures,
+        );
+        if let Err(e) = step {
+            fatal = Some(e);
+            break;
+        }
+    }
 
-        let hits_before = evaluator.cache_hits();
-        let outcome = run_search(&evaluator, &bases, &device, &opts, &cfg)?;
-        println!(
-            "=== dse: {name} — {} base config(s), {:?}, {} ===",
-            bases.len(),
-            cfg.strategy,
-            cfg.objective.name()
-        );
-        println!(
-            "Pareto frontier ({} non-dominated design points):",
-            outcome.frontier.len()
-        );
-        let mut t = Table::new(
-            "resource-vs-throughput frontier (ascending resource score)",
-            &["config", "SLRs", "DSPs", "DSP%", "BRAM%", "eff MHz", "GOp/s", "score"],
-        );
-        for e in &outcome.frontier {
-            let u = e.report.util_percent();
-            t.row(vec![
-                e.label.clone(),
-                e.point.replicas.to_string(),
-                fnum(e.total_resources.dsp, 0),
-                pct(u[4]),
-                pct(u[3]),
-                fnum(e.report.effective_mhz, 1),
-                fnum(e.gops, 1),
-                fnum(e.resource_score, 3),
-            ]);
+    let mut flush_err: Option<String> = None;
+    if args.get("cache-dir").is_some() {
+        match evaluator.flush() {
+            Ok(flushed) => println!("cache: flushed {flushed} entries"),
+            Err(e) => flush_err = Some(e),
         }
-        println!("{}", t.render());
-        let reference = outcome.reference.as_ref().expect("search produced a reference");
-        println!(
-            "reference (best unpumped): {} — {} DSPs, {:.1} GOp/s",
-            reference.label, reference.total_resources.dsp, reference.gops
-        );
-        if let Some(chosen) = &outcome.chosen {
-            let dsp_pct = chosen.total_resources.dsp / reference.total_resources.dsp.max(1e-9)
-                * 100.0;
-            let gops_pct = chosen.gops / reference.gops.max(1e-12) * 100.0;
-            println!(
-                "chosen: {} — {} DSPs = {:.1}% of the unpumped DSP count, at {:.1}% of \
-                 reference throughput",
-                chosen.label, chosen.total_resources.dsp, dsp_pct, gops_pct
-            );
+    }
+    if let Some(e) = fatal {
+        // the root-cause error outranks a flush failure; still surface both
+        if let Some(f) = flush_err {
+            eprintln!("warning: cache flush also failed: {f}");
         }
+        return Err(e);
+    }
+    if let Some(f) = flush_err {
+        return Err(format!("cache flush failed: {f}"));
+    }
+    if !verify_failures.is_empty() {
+        return Err(format!(
+            "rate model disagrees with the exact simulator beyond ±{tolerance} on {} \
+             frontier point(s):\n  {}",
+            verify_failures.len(),
+            verify_failures.join("\n  ")
+        ));
+    }
+    Ok(())
+}
+
+/// Search (and optionally verify) one DSE app through the shared
+/// evaluator, printing the frontier/selection/evaluation report.
+#[allow(clippy::too_many_arguments)]
+fn run_dse_app(
+    name: &str,
+    n_override: Option<i64>,
+    seed: u64,
+    device: &temporal_vec::hw::Device,
+    cfg: &temporal_vec::dse::SearchConfig,
+    evaluator: &temporal_vec::dse::Evaluator,
+    verify: bool,
+    tolerance: f64,
+    verify_failures: &mut Vec<String>,
+) -> Result<(), String> {
+    use temporal_vec::dse::{run_search, verify_frontier};
+    use temporal_vec::util::table::{fnum, pct, Table};
+
+    // per-app bases: the matmul PE sweep supplies several — built by
+    // the same constructor the --verify golden rig uses, so frontier
+    // points always map back to a golden base by index
+    let (bases, opts) = temporal_vec::coordinator::search_problem(name, n_override, seed, device)?;
+
+    let hits_before = evaluator.cache_hits();
+    let misses_before = evaluator.cache_misses();
+    let outcome = run_search(evaluator, &bases, device, &opts, cfg)?;
+    println!(
+        "=== dse: {name} — {} base config(s), {:?}, {} ===",
+        bases.len(),
+        cfg.strategy,
+        cfg.objective.name()
+    );
+    println!(
+        "Pareto frontier ({} non-dominated design points):",
+        outcome.frontier.len()
+    );
+    let mut t = Table::new(
+        "resource-vs-throughput frontier (ascending resource score)",
+        &["config", "SLRs", "DSPs", "DSP%", "BRAM%", "eff MHz", "GOp/s", "score"],
+    );
+    for e in &outcome.frontier {
+        let u = e.report.util_percent();
+        t.row(vec![
+            e.label.clone(),
+            e.point.replicas.to_string(),
+            fnum(e.total_resources.dsp, 0),
+            pct(u[4]),
+            pct(u[3]),
+            fnum(e.report.effective_mhz, 1),
+            fnum(e.gops, 1),
+            fnum(e.resource_score, 3),
+        ]);
+    }
+    println!("{}", t.render());
+    let reference = outcome.reference.as_ref().expect("search produced a reference");
+    println!(
+        "reference (best unpumped): {} — {} DSPs, {:.1} GOp/s",
+        reference.label, reference.total_resources.dsp, reference.gops
+    );
+    if let Some(chosen) = &outcome.chosen {
+        let dsp_pct =
+            chosen.total_resources.dsp / reference.total_resources.dsp.max(1e-9) * 100.0;
+        let gops_pct = chosen.gops / reference.gops.max(1e-12) * 100.0;
         println!(
-            "evaluations: {} issued ({} cache hits, {} infeasible{})\n",
-            outcome.evaluated,
-            evaluator.cache_hits() - hits_before,
-            outcome.infeasible,
-            if outcome.truncated { ", budget hit" } else { "" }
+            "chosen: {} — {} DSPs = {:.1}% of the unpumped DSP count, at {:.1}% of \
+             reference throughput",
+            chosen.label, chosen.total_resources.dsp, dsp_pct, gops_pct
         );
     }
+    println!(
+        "evaluations: {} issued ({} cache hits, {} new compiles, {} legality-pruned, \
+         {} compile failures{})",
+        outcome.evaluated,
+        evaluator.cache_hits() - hits_before,
+        evaluator.cache_misses() - misses_before,
+        outcome.illegal,
+        outcome.compile_failed,
+        if outcome.truncated { ", budget hit" } else { "" }
+    );
+
+    if verify {
+        let rig = temporal_vec::coordinator::golden_rig(name, seed)?;
+        let reports = verify_frontier(&outcome.frontier, &rig.bases, &rig.inputs, tolerance)?;
+        let mut vt = Table::new(
+            format!("--verify: rate model vs exact simulator at golden scale (±{tolerance})"),
+            &["config", "rate cycles", "exact cycles", "ratio", "status"],
+        );
+        for r in &reports {
+            let status = match &r.skipped {
+                Some(reason) => format!("SKIP ({reason})"),
+                None if r.within => "ok".to_string(),
+                None => "FAIL".to_string(),
+            };
+            vt.row(vec![
+                r.label.clone(),
+                r.rate_cycles.to_string(),
+                r.exact_cycles.to_string(),
+                fnum(r.ratio, 3),
+                status,
+            ]);
+        }
+        println!("{}", vt.render());
+        let checked = reports.iter().filter(|r| r.skipped.is_none()).count();
+        let skipped = reports.len() - checked;
+        let ok = reports.iter().filter(|r| r.skipped.is_none() && r.within).count();
+        println!(
+            "verify: {ok}/{checked} frontier points within tolerance \
+             ({skipped} skipped at golden scale)"
+        );
+        for r in temporal_vec::dse::verify::failures(&reports) {
+            verify_failures.push(format!(
+                "{}: rate {} vs exact {} (ratio {:.3})",
+                r.label, r.rate_cycles, r.exact_cycles, r.ratio
+            ));
+        }
+    }
+    println!();
     Ok(())
 }

@@ -216,6 +216,7 @@ fn dse_greedy_respects_budget_and_stays_sane() {
         strategy: Strategy::Greedy,
         objective: Objective::resource(),
         budget: Some(30),
+        seed: 1,
     };
     let out = run_search(&Evaluator::new(), &bases, &device, &opts, &cfg).unwrap();
     assert!(out.evaluated <= 30);
@@ -223,4 +224,136 @@ fn dse_greedy_respects_budget_and_stays_sane() {
     // greedy must at least not regress below the unpumped reference
     let reference = out.reference.unwrap();
     assert!(chosen.resource_score <= reference.resource_score + 1e-12);
+}
+
+#[test]
+fn dse_all_strategies_agree_on_the_small_vecadd_space() {
+    // Table 2's space is small enough that every strategy — including
+    // the stochastic ones — must land on the same optimum the
+    // exhaustive sweep proves is best.
+    let device = Device::u280();
+    let (bases, opts) = vecadd_problem(11);
+    let ev = Evaluator::new();
+    let mut chosen_points = Vec::new();
+    for strategy in [
+        Strategy::Exhaustive,
+        Strategy::Greedy,
+        Strategy::Anneal,
+        Strategy::Halving,
+    ] {
+        let cfg = SearchConfig {
+            strategy,
+            objective: Objective::resource(),
+            budget: None,
+            seed: 23,
+        };
+        let out = run_search(&ev, &bases, &device, &opts, &cfg).unwrap();
+        chosen_points.push((strategy, out.chosen.unwrap().point));
+    }
+    for (s, p) in &chosen_points[1..] {
+        assert_eq!(
+            p, &chosen_points[0].1,
+            "{} diverged from exhaustive",
+            s.name()
+        );
+    }
+}
+
+#[test]
+fn dse_persistent_cache_round_trips_across_evaluators() {
+    // "two processes" sharing a --cache-dir: the first sweeps and
+    // flushes, the second loads and re-runs the identical sweep with
+    // zero new compiles and a bit-identical chosen report.
+    let dir = std::env::temp_dir().join(format!("tvec-dse-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let device = Device::u280();
+    let (bases, opts) = vecadd_problem(11);
+    let cfg = SearchConfig::exhaustive(Objective::resource());
+
+    let first = Evaluator::with_cache_dir(&dir);
+    assert_eq!(first.loaded_entries(), 0);
+    let out1 = run_search(&first, &bases, &device, &opts, &cfg).unwrap();
+    assert!(first.cache_misses() > 0, "cold run must compile");
+    let flushed = first.flush().unwrap();
+    assert!(flushed >= first.cache_misses());
+
+    let second = Evaluator::with_cache_dir(&dir);
+    assert_eq!(second.loaded_entries(), flushed);
+    assert!(second.cold_reason().is_none());
+    let out2 = run_search(&second, &bases, &device, &opts, &cfg).unwrap();
+    assert_eq!(
+        second.cache_misses(),
+        0,
+        "warm run must evaluate 0 uncached candidates"
+    );
+    assert_eq!(out1.evaluated, out2.evaluated);
+    let (a, b) = (out1.chosen.unwrap(), out2.chosen.unwrap());
+    assert_eq!(a.point, b.point);
+    assert_eq!(a.gops.to_bits(), b.gops.to_bits(), "disk round trip must be bit exact");
+    assert_eq!(a.report.cl0.achieved_mhz.to_bits(), b.report.cl0.achieved_mhz.to_bits());
+    assert_eq!(a.report.resources, b.report.resources);
+
+    // flushing the second evaluator merges, never shrinks
+    let reflushed = second.flush().unwrap();
+    assert_eq!(reflushed, flushed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dse_persistent_cache_survives_corruption_as_cold_start() {
+    let dir = std::env::temp_dir().join(format!("tvec-dse-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(temporal_vec::dse::cache::FILE_NAME);
+    std::fs::write(&path, "#tvec-dse-cache v1\ngarbage line without tabs\n").unwrap();
+    let ev = Evaluator::with_cache_dir(&dir);
+    assert_eq!(ev.loaded_entries(), 0);
+    assert!(ev.cold_reason().is_some(), "corruption must be reported, not ignored");
+    // and the evaluator still works end to end
+    let device = Device::u280();
+    let (bases, opts) = vecadd_problem(11);
+    let out = run_search(&ev, &bases, &device, &opts, &SearchConfig::exhaustive(Objective::resource()))
+        .unwrap();
+    assert!(out.chosen.is_some());
+    // a flush repairs the store
+    ev.flush().unwrap();
+    let repaired = Evaluator::with_cache_dir(&dir);
+    assert!(repaired.cold_reason().is_none());
+    assert!(repaired.loaded_entries() > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dse_failure_kinds_are_reported_separately() {
+    // an indivisible problem size: the grid prunes width 8 up front,
+    // nothing hard-fails compilation, and the outcome's two failure
+    // counters stay consistent with the aggregate
+    let n = 24i64; // widths 2, 4 divide; 8 does not
+    let device = Device::u280();
+    let bases = vec![SearchBase {
+        spec: BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(2),
+        flops: apps::vecadd::flops(n),
+    }];
+    let opts = SpaceOptions {
+        vector_widths: vec![2, 4, 8],
+        pump_factors: vec![2],
+        pump_modes: vec![PumpMode::Resource],
+        max_replicas: 1,
+        cl0_requests_mhz: vec![],
+    };
+    let out = run_search(
+        &Evaluator::new(),
+        &bases,
+        &device,
+        &opts,
+        &SearchConfig::exhaustive(Objective::resource()),
+    )
+    .unwrap();
+    assert!(
+        out.evaluations
+            .iter()
+            .all(|e| e.point.vectorize.as_ref().map(|(_, w)| *w) != Some(8)),
+        "width 8 must be legality-pruned from the grid for N = 24"
+    );
+    assert_eq!(out.compile_failed, 0, "nothing should hard-fail compilation");
+    assert_eq!(out.infeasible(), out.illegal + out.compile_failed);
 }
