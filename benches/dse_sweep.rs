@@ -100,10 +100,8 @@ fn main() {
         let ev = Evaluator::new();
         let base = &bases[1];
         let point = temporal_vec::dse::DesignPoint {
-            vectorize: None,
             pump: Some((2, temporal_vec::ir::PumpMode::Resource)),
-            replicas: 1,
-            cl0_request_mhz: None,
+            ..temporal_vec::dse::DesignPoint::original()
         };
         ev.evaluate(&base.spec, &point, base.flops).unwrap();
     }));
@@ -141,6 +139,34 @@ fn main() {
         assert_eq!(ev.cache_misses(), 0, "warm disk run must not compile");
     }));
     let _ = std::fs::remove_dir_all(&cache_dir);
+
+    // the mixed per-region dimension multiplies the stencil grid: track
+    // its sweep cost separately (it is the new largest axis)
+    let (stencil_bases, stencil_opts) = {
+        let (bases, mut opts) = temporal_vec::coordinator::search_problem(
+            "stencil",
+            Some(1 << 10),
+            1,
+            &device,
+        )
+        .expect("stencil problem");
+        opts.mixed_factors = true;
+        opts.pump_modes = vec![temporal_vec::ir::PumpMode::Resource];
+        opts.max_replicas = 1;
+        (bases, opts)
+    };
+    suite.add(bench("exhaustive stencil sweep with mixed factors (cold)", 1, 3, || {
+        let ev = Evaluator::new();
+        let out = run_search(
+            &ev,
+            &stencil_bases,
+            &device,
+            &stencil_opts,
+            &SearchConfig::exhaustive(Objective::resource()),
+        )
+        .unwrap();
+        assert!(out.evaluations.iter().any(|e| e.point.regions.is_some()));
+    }));
 
     suite.finish();
 }

@@ -10,7 +10,9 @@
 //!   scope (the "capturing all data movement" step);
 //! * [`streamability`] — can the memory between two connected modules
 //!   be pipelined into a FIFO? (order-preserving linear access check,
-//!   the "intersection check on each pair of connected modules");
+//!   the "intersection check on each pair of connected modules"), and
+//!   the decomposition into streamable regions — the atoms of a
+//!   per-subgraph pump-factor assignment;
 //! * [`vectorizability`] — the traditional SIMD conditions and the
 //!   *relaxed temporal* conditions (internal sequential dependencies
 //!   allowed; only data-dependent external I/O is disqualifying).
@@ -20,5 +22,5 @@ pub mod streamability;
 pub mod vectorizability;
 
 pub use movement::{scope_movement, ScopeMovement};
-pub use streamability::{streamable_between, Streamability};
+pub use streamability::{partition_streamable, streamable_between, StreamRegion, Streamability};
 pub use vectorizability::{check_temporal, check_traditional, Vectorizability};

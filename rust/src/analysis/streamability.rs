@@ -16,7 +16,7 @@
 //! read order (identical subsets as functions of their parameters).
 
 use super::movement::{ScopeMovement, TracedAccess};
-use crate::ir::{ContainerKind, Sdfg};
+use crate::ir::{ContainerKind, LibraryOp, Node, NodeId, Sdfg};
 use crate::symbolic::Expr;
 
 /// Verdict for one access or one producer/consumer pair.
@@ -105,6 +105,97 @@ pub fn streamable_between(
             "cannot prove write/read order equality for '{data}' (opaque index)"
         )),
     }
+}
+
+/// One streamable region: a compute module (map scope or library node)
+/// that must share a single clock domain internally. Module-to-module
+/// links are streams (or transient buffers the streaming composition
+/// fuses into streams), i.e. exactly the places where clock-domain
+/// crossings can legally be inserted — so regions are the atoms of a
+/// per-subgraph pump-factor assignment. The paper's §3.4 choice (pump
+/// the largest streamable subgraph as a whole) is the assignment that
+/// gives every region the same factor; mixed assignments split the
+/// subgraph at region boundaries instead.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamRegion {
+    /// Anchor node: the map entry or library node.
+    pub module: NodeId,
+    /// Human-readable label, e.g. `jacobi3d_stage3`.
+    pub label: String,
+    /// Narrowest stream/datapath lane count the region carries — a
+    /// resource-mode pump factor must divide this width.
+    pub width: usize,
+}
+
+impl StreamRegion {
+    /// The subset of `candidates` that are legal resource-mode factors
+    /// for this region (≥ 2 and dividing the region's width).
+    pub fn legal_factors(&self, candidates: &[usize]) -> Vec<usize> {
+        candidates
+            .iter()
+            .copied()
+            .filter(|&f| f >= 2 && self.width % f == 0)
+            .collect()
+    }
+}
+
+/// Boundary nodes data flows into / out of for a compute module:
+/// (entry, exit) for maps, (self, self) for library nodes. Shared with
+/// the mixed multi-pumping transform so both sides of the "space and
+/// transform agree by construction" invariant use one definition.
+pub(crate) fn module_io(g: &Sdfg, id: NodeId) -> (NodeId, NodeId) {
+    match g.node(id) {
+        Node::MapEntry { name, .. } => {
+            (id, g.find_map_exit(name).expect("validated map has an exit"))
+        }
+        _ => (id, id),
+    }
+}
+
+/// Decompose an SDFG into its streamable regions, in deterministic
+/// (node-id, i.e. construction) order. Works identically on the
+/// pre-streamed graph (transient chain buffers are region boundaries)
+/// and the streamed graph (the fused inter-module streams are region
+/// boundaries), so the candidate space and the transformation agree on
+/// region count and order by construction.
+pub fn partition_streamable(g: &Sdfg) -> Vec<StreamRegion> {
+    let mut out = Vec::new();
+    for id in g.node_ids() {
+        let is_module = matches!(g.node(id), Node::MapEntry { .. } | Node::Library { .. });
+        if !is_module {
+            continue;
+        }
+        let (inflow, outflow) = module_io(g, id);
+        // narrowest lane count across every container the module touches
+        let mut width = usize::MAX;
+        let mut touch = |data: &str| {
+            if let Some(decl) = g.container(data) {
+                width = width.min(decl.vtype.lanes);
+            }
+        };
+        for e in g.in_edges(inflow) {
+            touch(&g.edge(e).memlet.data);
+        }
+        for e in g.out_edges(outflow) {
+            touch(&g.edge(e).memlet.data);
+        }
+        // the datapath width of library nodes bounds the region too;
+        // Floyd–Warshall's dependent scalar datapath reports width 1,
+        // which legalizes no resource-mode factor — the §4.4 argument
+        // at region granularity.
+        if let Node::Library { op, .. } = g.node(id) {
+            width = width.min(match op {
+                LibraryOp::SystolicGemm { vec_width, .. }
+                | LibraryOp::StencilStage { vec_width, .. } => *vec_width,
+                LibraryOp::FloydWarshall { .. } => 1,
+            });
+        }
+        if width == usize::MAX {
+            width = 1;
+        }
+        out.push(StreamRegion { module: id, label: g.node(id).label(), width });
+    }
+    out
 }
 
 #[cfg(test)]
@@ -197,5 +288,53 @@ mod tests {
             Streamability::Blocked(r) => assert!(r.contains("order"), "{r}"),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn vecadd_is_a_single_region() {
+        let g = vecadd_sdfg(4);
+        let regions = partition_streamable(&g);
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].module, g.find_map_entry("vadd").unwrap());
+        assert_eq!(regions[0].width, 4);
+        assert_eq!(regions[0].legal_factors(&[2, 3, 4, 8]), vec![2, 4]);
+    }
+
+    #[test]
+    fn stencil_chain_partitions_into_one_region_per_stage() {
+        let g = crate::apps::stencil::build(crate::ir::StencilKind::Jacobi3D, 4, 8);
+        let regions = partition_streamable(&g);
+        assert_eq!(regions.len(), 4);
+        for (i, r) in regions.iter().enumerate() {
+            assert_eq!(r.label, format!("jacobi3d_stage{i}"), "regions must be in chain order");
+            assert_eq!(r.width, 8);
+        }
+    }
+
+    #[test]
+    fn partition_agrees_before_and_after_streaming() {
+        // the candidate space partitions the pre-streamed base graph;
+        // the transformation partitions the streamed one — count, order
+        // and widths must match or per-region assignments dangle
+        use crate::transforms::{pass::PassManager, StreamingComposition};
+        let mut g = crate::apps::stencil::build(crate::ir::StencilKind::Diffusion3D, 6, 4);
+        let before = partition_streamable(&g);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &StreamingComposition::default()).unwrap();
+        let after = partition_streamable(&g);
+        assert_eq!(before.len(), after.len());
+        for (b, a) in before.iter().zip(&after) {
+            assert_eq!(b.module, a.module);
+            assert_eq!(b.label, a.label);
+            assert_eq!(b.width, a.width);
+        }
+    }
+
+    #[test]
+    fn floyd_warshall_region_legalizes_no_resource_factor() {
+        let g = crate::apps::floyd_warshall::build();
+        let regions = partition_streamable(&g);
+        assert_eq!(regions.len(), 1);
+        assert!(regions[0].legal_factors(&[2, 4, 8]).is_empty());
     }
 }

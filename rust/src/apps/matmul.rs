@@ -10,7 +10,7 @@ use crate::symbolic::{Expr, Range, Subset};
 pub const VEC_WIDTH: usize = 16;
 
 /// Memory tile sizes (calibrated so 32 PEs fill ≈80 % of SLR BRAM as
-/// in Table 3; DESIGN.md §7).
+/// in Table 3; DESIGN.md §8).
 pub const TILE_M: usize = 128;
 pub const TILE_N: usize = 64;
 

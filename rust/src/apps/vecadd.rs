@@ -5,7 +5,7 @@ use crate::ir::Sdfg;
 
 /// Problem size of the paper-scale run. The paper does not state N;
 /// 2²⁶ elements reproduce the ~0.1 s runtimes of Table 2 at the
-/// reported clocks (DESIGN.md §7).
+/// reported clocks (DESIGN.md §8).
 pub const PAPER_N: i64 = 1 << 26;
 
 /// Verification-scale size matching the AOT artifact.

@@ -180,7 +180,10 @@ impl Design {
         acc
     }
 
-    /// Resources of the fast domain only.
+    /// Resources summed over *all* fast domains. Mixed per-region
+    /// designs carry several fast domains — `estimate` prices each
+    /// distinct factor separately; this is the combined fast-side
+    /// total (reporting/debug, not a timing input).
     pub fn fast_resources(&self) -> ResourceVec {
         let mut acc = ResourceVec::ZERO;
         for m in self.fast_modules() {

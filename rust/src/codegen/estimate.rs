@@ -15,10 +15,14 @@ pub struct DesignReport {
     pub util: Utilization,
     /// Slow-domain (shell) clock after P&R.
     pub cl0: ClockReport,
-    /// Fast-domain clock, if multi-pumped.
+    /// Fastest fast-domain clock, if multi-pumped. Mixed per-region
+    /// designs close one clock per distinct factor; this reports the
+    /// largest-factor domain (CL1 in the uniform case), while
+    /// `effective_mhz` already accounts for every domain.
     pub cl1: Option<ClockReport>,
-    /// Effective clock rate min(CL0, CL1/M) in MHz.
+    /// Effective clock rate min(CL0, min over domains of CLd/Md) in MHz.
     pub effective_mhz: f64,
+    /// Largest pump factor (1 when unpumped).
     pub pump_factor: usize,
 }
 
@@ -87,26 +91,54 @@ pub fn estimate(design: &Design, device: &Device, tm: &TimingModel, seed: u64) -
             };
             let cl0 = tm.achieve(cl0_request, &slow_profile, &mut rng);
 
-            // fast domain: the isolated compute subgraph — short local
-            // paths only, no IO span
-            let fast_res = design.fast_resources();
-            let fast_util = fast_res.utilization(&pool);
-            let fast_profile = DomainProfile {
-                util: fast_util,
-                design_util: util,
-                touches_io: false,
-                slr_crossings: crossings,
-            };
-            let requested = (cl0.achieved_mhz * factor as f64).min(device.max_requested_mhz);
-            let cl1 = tm.achieve(requested, &fast_profile, &mut rng);
+            // fast domains: one clock per distinct factor (uniform
+            // pumping has exactly one — identical draws to the legacy
+            // path). Each domain is an isolated compute subgraph —
+            // short local paths only, no IO span — and each bounds the
+            // effective rate by CLd / Md.
+            let mut factors: Vec<usize> = design
+                .modules
+                .iter()
+                .filter_map(|m| match m.domain {
+                    crate::ir::ClockDomain::Fast { factor } => Some(factor),
+                    crate::ir::ClockDomain::Slow => None,
+                })
+                .collect();
+            factors.sort_unstable();
+            factors.dedup();
+            if factors.is_empty() {
+                factors.push(factor); // degenerate: tagged pumped, no fast module
+            }
+            let mut cl1: Option<ClockReport> = None;
+            let mut eff_fast = f64::INFINITY;
+            for &f in &factors {
+                let fast_res: ResourceVec = design
+                    .modules
+                    .iter()
+                    .filter(|m| m.domain == crate::ir::ClockDomain::Fast { factor: f })
+                    .fold(ResourceVec::ZERO, |acc, m| acc + m.resources);
+                let fast_util = fast_res.utilization(&pool);
+                let fast_profile = DomainProfile {
+                    util: fast_util,
+                    design_util: util,
+                    touches_io: false,
+                    slr_crossings: crossings,
+                };
+                let requested = (cl0.achieved_mhz * f as f64).min(device.max_requested_mhz);
+                let cl = tm.achieve(requested, &fast_profile, &mut rng);
+                eff_fast = eff_fast.min(cl.achieved_mhz / f as f64);
+                // ascending factor order: the last report is the
+                // fastest (largest-factor) domain — CL1 when uniform
+                cl1 = Some(cl);
+            }
 
-            let eff = effective_clock(cl0.achieved_mhz, Some(cl1.achieved_mhz), factor);
+            let eff = effective_clock(cl0.achieved_mhz, Some(eff_fast), 1);
             DesignReport {
                 name: design.name.clone(),
                 resources: total,
                 util,
                 cl0,
-                cl1: Some(cl1),
+                cl1,
                 effective_mhz: eff,
                 pump_factor: factor,
             }

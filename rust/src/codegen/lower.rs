@@ -75,8 +75,9 @@ pub fn lower(g: &Sdfg, env: &SymbolTable, cost: &CostModel) -> Result<Design, St
     let mut modules: Vec<ModuleInst> = Vec::new();
     let mut channels: Vec<ChannelSpec> = Vec::new();
     let mut arrays: Vec<(String, usize, usize)> = Vec::new();
-    let pump = g.multipump.as_ref().map(|mp| (mp.factor, mp.mode));
-    let fast_factor = pump.map(|(m, _)| m).unwrap_or(1);
+    // design-level pump tag: the *largest* factor (the fast time base);
+    // per-module domains below carry each region's own factor
+    let pump = g.multipump.as_ref().map(|mp| (mp.max_factor(), mp.mode));
 
     // channels from stream containers
     for (name, decl) in &g.containers {
@@ -101,17 +102,17 @@ pub fn lower(g: &Sdfg, env: &SymbolTable, cost: &CostModel) -> Result<Design, St
     }
 
     let domain_of = |id: NodeId| -> ClockDomain {
-        if g.in_fast_domain(id) {
-            ClockDomain::Fast { factor: fast_factor }
-        } else {
-            ClockDomain::Slow
+        match g.fast_factor_of(id) {
+            Some(f) => ClockDomain::Fast { factor: f },
+            None => ClockDomain::Slow,
         }
     };
-    // CDC halves: sync slow-side, issuer/packer fast-side
-    let cdc_domain = |kind: CdcKind| -> ClockDomain {
+    // CDC halves: sync slow-side, issuer/packer fast-side at the
+    // crossing's own ratio (regions may differ under mixed pumping)
+    let cdc_domain = |kind: CdcKind, factor: usize| -> ClockDomain {
         match kind {
             CdcKind::Synchronizer => ClockDomain::Slow,
-            _ => ClockDomain::Fast { factor: fast_factor },
+            _ => ClockDomain::Fast { factor },
         }
     };
 
@@ -177,7 +178,7 @@ pub fn lower(g: &Sdfg, env: &SymbolTable, cost: &CostModel) -> Result<Design, St
                         cost.width_converter(wide * 4, *factor),
                     ),
                 };
-                modules.push(ModuleInst { spec, domain: cdc_domain(*kind), resources: res });
+                modules.push(ModuleInst { spec, domain: cdc_domain(*kind, *factor), resources: res });
             }
             Node::MapEntry { name, schedule, .. } => {
                 // find the tasklet inside the scope
@@ -253,13 +254,10 @@ pub fn lower(g: &Sdfg, env: &SymbolTable, cost: &CostModel) -> Result<Design, St
                     };
                     // the compute consumes narrow transactions in
                     // resource mode: range was defined on wide txns
-                    let widen = if g.in_fast_domain(id) {
-                        match pump {
-                            Some((m, crate::ir::PumpMode::Resource)) => m,
-                            _ => 1,
-                        }
-                    } else {
-                        1
+                    // (each region narrows by its own factor)
+                    let widen = match (g.fast_factor_of(id), pump) {
+                        (Some(f), Some((_, crate::ir::PumpMode::Resource))) => f,
+                        _ => 1,
                     };
                     count * widen
                 };
@@ -536,7 +534,7 @@ fn library_streams(g: &Sdfg, id: NodeId) -> (Vec<String>, Vec<String>) {
 }
 
 /// Op counts per output element for the stencil flavours (calibration
-/// in DESIGN.md §7).
+/// in DESIGN.md §8).
 pub fn stencil_ops(kind: crate::ir::StencilKind) -> crate::ir::tasklet::OpCounts {
     match kind {
         // 5 adds to sum 6 neighbours + 1 const mul = 13 DSP/lane

@@ -50,7 +50,8 @@ fn app_bases(app: &str, n: i64, seed: u64) -> Result<Vec<BuildSpec>, String> {
                 })
                 .collect())
         }
-        "jacobi" | "diffusion" => {
+        // "stencil" is the chain alias `--mixed-factors` smoke runs use
+        "jacobi" | "diffusion" | "stencil" => {
             let kind = stencil_kind(app);
             let w = apps::stencil::paper_vec_width(kind);
             let (ny, nz) = (apps::stencil::PAPER_NY, apps::stencil::PAPER_NZ);
@@ -67,13 +68,13 @@ fn app_bases(app: &str, n: i64, seed: u64) -> Result<Vec<BuildSpec>, String> {
             .cl0(apps::floyd_warshall::CL0_REQUEST_MHZ)
             .seeded(seed)]),
         other => Err(format!(
-            "unknown app '{other}' (vecadd|matmul|jacobi|diffusion|fw)"
+            "unknown app '{other}' (vecadd|matmul|jacobi|diffusion|stencil|fw)"
         )),
     }
 }
 
 fn stencil_kind(app: &str) -> StencilKind {
-    if app == "jacobi" {
+    if app == "jacobi" || app == "stencil" {
         StencilKind::Jacobi3D
     } else {
         StencilKind::Diffusion3D
@@ -85,7 +86,7 @@ fn paper_n(app: &str) -> i64 {
     match app {
         "vecadd" => apps::vecadd::PAPER_N,
         "matmul" => apps::matmul::PAPER_NMK,
-        "jacobi" | "diffusion" => apps::stencil::PAPER_NX,
+        "jacobi" | "diffusion" | "stencil" => apps::stencil::PAPER_NX,
         _ => apps::floyd_warshall::PAPER_N,
     }
 }
@@ -95,7 +96,7 @@ fn app_flops(app: &str, n: i64) -> f64 {
     match app {
         "vecadd" => apps::vecadd::flops(n),
         "matmul" => apps::matmul::flops(n, n, n),
-        "jacobi" | "diffusion" => {
+        "jacobi" | "diffusion" | "stencil" => {
             let kind = stencil_kind(app);
             apps::stencil::flops(
                 kind,
@@ -163,7 +164,7 @@ pub fn golden_rig(app: &str, seed: u64) -> Result<GoldenRig, String> {
                 ],
             )
         }
-        "jacobi" | "diffusion" => {
+        "jacobi" | "diffusion" | "stencil" => {
             // same chain length as the search bases (app_bases): only
             // the domain shrinks, the design structure stays identical
             let nx = apps::stencil::GOLDEN_NX;
@@ -183,7 +184,7 @@ pub fn golden_rig(app: &str, seed: u64) -> Result<GoldenRig, String> {
         other => {
             return Err(format!(
                 "no golden verification rig for app '{other}' \
-                 (vecadd|matmul|jacobi|diffusion|fw)"
+                 (vecadd|matmul|jacobi|diffusion|stencil|fw)"
             ))
         }
     };
@@ -252,6 +253,7 @@ pub fn autotune_all(seed: u64) -> Result<Vec<DseChoice>, String> {
             pump_modes: vec![PumpMode::Resource],
             max_replicas: 1,
             cl0_requests_mhz: vec![],
+            mixed_factors: false,
         };
         let cfg = SearchConfig::exhaustive(Objective::resource());
         let o = run_search(&evaluator, &bases, &device, &opts, &cfg)?;
@@ -299,6 +301,7 @@ pub fn autotune_all(seed: u64) -> Result<Vec<DseChoice>, String> {
             pump_modes: vec![PumpMode::Resource],
             max_replicas: 1,
             cl0_requests_mhz: vec![],
+            mixed_factors: false,
         };
         let cfg = SearchConfig::exhaustive(Objective::resource());
         let o = run_search(&evaluator, &bases, &device, &opts, &cfg)?;
@@ -321,6 +324,7 @@ pub fn autotune_all(seed: u64) -> Result<Vec<DseChoice>, String> {
             pump_modes: vec![PumpMode::Throughput],
             max_replicas: 1,
             cl0_requests_mhz: vec![],
+            mixed_factors: false,
         };
         let cfg = SearchConfig::exhaustive(Objective::throughput());
         let o = run_search(&evaluator, &bases, &device, &opts, &cfg)?;
@@ -384,7 +388,7 @@ mod tests {
         // are built by app_bases, but the invariant is load-bearing
         // for --verify's Evaluation.base → golden base mapping)
         let device = Device::u280();
-        for app in ["vecadd", "matmul", "jacobi", "diffusion", "fw"] {
+        for app in ["vecadd", "matmul", "jacobi", "diffusion", "stencil", "fw"] {
             let (search_bases, _) = search_problem(app, None, 1, &device).unwrap();
             let rig = golden_rig(app, 1).unwrap();
             assert_eq!(rig.bases.len(), search_bases.len(), "{app}");
@@ -416,6 +420,7 @@ mod tests {
             pump_modes: vec![PumpMode::Resource],
             max_replicas: 1,
             cl0_requests_mhz: vec![],
+            mixed_factors: false,
         };
         let out = run_search(
             &Evaluator::new(),

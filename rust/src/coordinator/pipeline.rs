@@ -17,8 +17,13 @@ pub struct BuildSpec {
     pub vectorize: Option<(String, usize)>,
     /// Apply the streaming composition (required before pumping).
     pub stream: bool,
-    /// Apply multi-pumping (factor, mode).
+    /// Apply multi-pumping (factor, mode) over the whole streamed
+    /// subgraph — the paper's §3.4 choice.
     pub pump: Option<(usize, PumpMode)>,
+    /// Apply *mixed* multi-pumping: one resource-mode factor per
+    /// streamable region (partition order; `None` entries stay in
+    /// CL0). Mutually exclusive with `pump`.
+    pub pump_regions: Option<Vec<Option<usize>>>,
     /// Concrete symbol bindings.
     pub bindings: Vec<(String, i64)>,
     /// Shell clock request override (MHz).
@@ -36,6 +41,7 @@ impl BuildSpec {
             vectorize: None,
             stream: true,
             pump: None,
+            pump_regions: None,
             bindings: Vec::new(),
             cl0_request_mhz: None,
             slr_replicas: 1,
@@ -50,6 +56,13 @@ impl BuildSpec {
 
     pub fn pumped(mut self, factor: usize, mode: PumpMode) -> Self {
         self.pump = Some((factor, mode));
+        self
+    }
+
+    /// Mixed per-region resource-mode pumping (one factor per
+    /// streamable region, `None` = stay in CL0).
+    pub fn pumped_regions(mut self, factors: Vec<Option<usize>>) -> Self {
+        self.pump_regions = Some(factors);
         self
     }
 
@@ -127,14 +140,29 @@ pub fn compile_staged(spec: BuildSpec) -> Result<Compiled, StagedError> {
     if spec.stream {
         pm.run(&mut g, &StreamingComposition::default()).map_err(err(Stage::Transform))?;
     }
-    if let Some((factor, mode)) = spec.pump {
+    if let Some(factors) = &spec.pump_regions {
+        if spec.pump.is_some() {
+            return Err(StagedError {
+                stage: Stage::Transform,
+                message: "both uniform and per-region pumping requested".into(),
+            });
+        }
         if !spec.stream {
             return Err(StagedError {
                 stage: Stage::Transform,
                 message: "multi-pumping requires streaming".into(),
             });
         }
-        pm.run(&mut g, &MultiPump { factor, mode }).map_err(err(Stage::Transform))?;
+        pm.run(&mut g, &MultiPump::mixed(factors.clone(), PumpMode::Resource))
+            .map_err(err(Stage::Transform))?;
+    } else if let Some((factor, mode)) = spec.pump {
+        if !spec.stream {
+            return Err(StagedError {
+                stage: Stage::Transform,
+                message: "multi-pumping requires streaming".into(),
+            });
+        }
+        pm.run(&mut g, &MultiPump::uniform(factor, mode)).map_err(err(Stage::Transform))?;
     }
 
     let base: Vec<(&str, i64)> = spec.bindings.iter().map(|(s, v)| (s.as_str(), *v)).collect();
@@ -195,6 +223,52 @@ mod tests {
         assert_eq!(c.design.repeat, 64);
         let cl1 = c.report.cl1.unwrap();
         assert!(cl1.achieved_mhz > c.report.cl0.achieved_mhz);
+    }
+
+    #[test]
+    fn mixed_region_pipeline_builds_two_fast_domains() {
+        // 4-stage jacobi chain, first half at M=4, second half at M=2:
+        // the report carries the largest factor, CL1 exists, and the
+        // effective clock is bounded by the slowest domain ratio
+        let spec = BuildSpec::new(apps::stencil::build(
+            crate::ir::StencilKind::Jacobi3D,
+            4,
+            8,
+        ))
+        .pumped_regions(vec![Some(4), Some(4), Some(2), Some(2)])
+        .bind("NX", 64)
+        .bind("NY", 32)
+        .bind("NZ", 32)
+        .bind("NZ_v", 4);
+        let c = compile(spec).unwrap();
+        assert_eq!(c.report.pump_factor, 4);
+        assert!(c.report.cl1.is_some());
+        let cl1 = c.report.cl1.unwrap();
+        assert!(c.report.effective_mhz <= cl1.achieved_mhz / 2.0 + 1e-9);
+        assert!(c.design.modules.iter().any(|m| {
+            m.domain == crate::ir::ClockDomain::Fast { factor: 4 }
+        }));
+        assert!(c.design.modules.iter().any(|m| {
+            m.domain == crate::ir::ClockDomain::Fast { factor: 2 }
+        }));
+    }
+
+    #[test]
+    fn uniform_and_per_region_pumping_are_exclusive() {
+        let mut spec = BuildSpec::new(apps::stencil::build(
+            crate::ir::StencilKind::Jacobi3D,
+            2,
+            8,
+        ))
+        .pumped(2, PumpMode::Resource)
+        .bind("NX", 64)
+        .bind("NY", 32)
+        .bind("NZ", 32)
+        .bind("NZ_v", 4);
+        spec.pump_regions = Some(vec![Some(2), Some(2)]);
+        let err = compile_staged(spec).unwrap_err();
+        assert_eq!(err.stage, Stage::Transform);
+        assert!(err.message.contains("both uniform and per-region"), "{}", err.message);
     }
 
     #[test]

@@ -5,8 +5,9 @@
 //! — DESIGN.md §6). The first line is a schema-versioned header:
 //!
 //! ```text
-//! #tvec-dse-cache v1
-//! k=00ab…	st=ok	label=vecadd V8 R2	…
+//! #tvec-dse-cache v2
+//! k=00ab…	st=ok	label=vecadd V8 R2	pr=-	…
+//! k=11cd…	st=ok	label=jacobi Mx[4x2+2x2]	pr=m:4,4,2,2	…
 //! k=17ff…	st=err	kind=legality	msg=trip count 100 …
 //! ```
 //!
@@ -39,8 +40,10 @@ use super::space::DesignPoint;
 use crate::codegen::DesignReport;
 
 /// Bump on any change to the record layout: old stores then load cold
-/// instead of misparsing.
-pub const SCHEMA_VERSION: u32 = 1;
+/// instead of misparsing. v2 added the mixed per-region pump
+/// assignment (`pr=`) to ok-records; v1 files cold-start with the
+/// schema-mismatch reason.
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// File name inside a `--cache-dir`.
 pub const FILE_NAME: &str = "dse_cache.tsv";
@@ -182,6 +185,27 @@ fn vec_opt_dec(s: &str) -> Result<Option<(String, usize)>, String> {
     Ok(Some((unescape(map)?, w)))
 }
 
+// encoding shared with the fingerprint tag: `super::evaluate::regions_tag`
+
+fn regions_dec(s: &str) -> Result<Option<Vec<Option<usize>>>, String> {
+    if s == "-" {
+        return Ok(None);
+    }
+    let body = s.strip_prefix("m:").ok_or_else(|| format!("bad regions '{s}'"))?;
+    body.split(',')
+        .map(|t| {
+            if t == "-" {
+                Ok(None)
+            } else {
+                t.parse::<usize>()
+                    .map(Some)
+                    .map_err(|_| format!("bad region factor '{t}'"))
+            }
+        })
+        .collect::<Result<Vec<_>, _>>()
+        .map(Some)
+}
+
 fn opt_f64_enc(v: &Option<f64>) -> String {
     match v {
         None => "-".into(),
@@ -216,12 +240,13 @@ fn encode_record(key: u64, entry: &Result<Evaluation, EvalError>) -> String {
                 r.util.dsp,
             ];
             format!(
-                "k={key:016x}\tst=ok\tlabel={}\tpv={}\tpp={}\trep={}\tpclk={}\t\
+                "k={key:016x}\tst=ok\tlabel={}\tpv={}\tpp={}\tpr={}\trep={}\tpclk={}\t\
                  name={}\tres={}\tutil={}\tcl0={}\tcl1={}\teff={}\tpf={}\t\
                  cyc={}\ttime={}\tgops={}\ttot={}\tscore={}\tfits={}",
                 escape(&ev.label),
                 vec_opt_enc(&ev.point.vectorize),
                 pump_enc(&ev.point.pump),
+                super::evaluate::regions_tag(&ev.point.regions),
                 ev.point.replicas,
                 opt_f64_enc(&ev.point.cl0_request_mhz),
                 escape(&r.name),
@@ -279,6 +304,7 @@ fn decode_record(line: &str) -> Result<(u64, Result<Evaluation, EvalError>), Str
             let point = DesignPoint {
                 vectorize: vec_opt_dec(get("pv")?)?,
                 pump: pump_dec(get("pp")?)?,
+                regions: regions_dec(get("pr")?)?,
                 replicas: get("rep")?.parse().map_err(|_| "bad rep".to_string())?,
                 cl0_request_mhz: opt_f64_dec(get("pclk")?)?,
             };
@@ -400,12 +426,22 @@ mod tests {
             let p = DesignPoint {
                 vectorize: Some(("vadd".into(), w)),
                 pump,
-                replicas: 1,
-                cl0_request_mhz: None,
+                ..DesignPoint::original()
             };
             let key = fingerprint(&base, &p, flops);
             m.insert(key, evaluate_point(&base, &p, flops));
         }
+        // a mixed per-region evaluation (the single-region assignment
+        // delegates to the uniform transform, so it compiles)
+        let mixed = DesignPoint {
+            vectorize: Some(("vadd".into(), 8)),
+            regions: Some(vec![Some(2)]),
+            ..DesignPoint::original()
+        };
+        m.insert(
+            fingerprint(&base, &mixed, flops),
+            evaluate_point(&base, &mixed, flops),
+        );
         m.insert(
             0xdead,
             Err(EvalError::legality("N = 100 does not divide by 8")),
@@ -488,6 +524,38 @@ mod tests {
         let reason = loaded.cold_reason.expect("has a reason");
         assert!(reason.contains("schema mismatch"), "{reason}");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v1_store_cold_starts_with_printed_reason() {
+        // a pre-mixed-factors (v1) store: no `pr=` field, old header —
+        // must load cold with the schema-mismatch reason, never misparse
+        let path = tmp_path("v1-upgrade");
+        std::fs::write(
+            &path,
+            "#tvec-dse-cache v1\nk=00000000000000ab\tst=err\tkind=legality\tmsg=old\n",
+        )
+        .unwrap();
+        let loaded = load(&path);
+        assert!(loaded.entries.is_empty(), "v1 entries must not half-load into v2");
+        let reason = loaded.cold_reason.expect("cold start has a reason");
+        assert!(reason.contains("schema mismatch") && reason.contains("v1"), "{reason}");
+        assert!(reason.contains("v2"), "{reason}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn regions_codec_round_trips() {
+        use crate::dse::evaluate::regions_tag;
+        for r in [
+            None,
+            Some(vec![Some(2), Some(4), None, Some(2)]),
+            Some(vec![None, Some(8)]),
+        ] {
+            assert_eq!(regions_dec(&regions_tag(&r)).unwrap(), r);
+        }
+        assert!(regions_dec("garbage").is_err());
+        assert!(regions_dec("m:2,x").is_err());
     }
 
     #[test]

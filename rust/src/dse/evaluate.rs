@@ -119,6 +119,23 @@ fn pump_tag(p: &Option<(usize, PumpMode)>) -> String {
     }
 }
 
+/// Tag of a mixed per-region assignment, e.g. `m:2,4,-` (`-` = none).
+/// Shared with the cache codec (`pr=` field) so the on-disk encoding
+/// and the fingerprint tag cannot diverge.
+pub(crate) fn regions_tag(r: &Option<Vec<Option<usize>>>) -> String {
+    match r {
+        None => "-".into(),
+        Some(fs) => {
+            let body = fs
+                .iter()
+                .map(|f| f.map(|x| x.to_string()).unwrap_or_else(|| "-".into()))
+                .collect::<Vec<_>>()
+                .join(",");
+            format!("m:{body}")
+        }
+    }
+}
+
 /// Content fingerprint of one (spec, candidate, workload) evaluation.
 /// Hashes the printed SDFG, so two sweeps over structurally identical
 /// graphs share cache entries regardless of how they were built.
@@ -138,6 +155,7 @@ pub fn fingerprint(base: &BuildSpec, point: &DesignPoint, flops: f64) -> u64 {
         h = fnv1a(h, &(*w as u64).to_le_bytes());
     }
     h = fnv1a(h, pump_tag(&base.pump).as_bytes());
+    h = fnv1a(h, regions_tag(&base.pump_regions).as_bytes());
     h = fnv1a(h, &(base.slr_replicas as u64).to_le_bytes());
     // the candidate
     if let Some((map, w)) = &point.vectorize {
@@ -145,6 +163,7 @@ pub fn fingerprint(base: &BuildSpec, point: &DesignPoint, flops: f64) -> u64 {
         h = fnv1a(h, &(*w as u64).to_le_bytes());
     }
     h = fnv1a(h, pump_tag(&point.pump).as_bytes());
+    h = fnv1a(h, regions_tag(&point.regions).as_bytes());
     h = fnv1a(h, &(point.replicas as u64).to_le_bytes());
     if let Some(mhz) = point.cl0_request_mhz {
         h = fnv1a(h, &mhz.to_bits().to_le_bytes());
@@ -261,6 +280,14 @@ impl Evaluator {
         Ok(merged.len())
     }
 
+    /// Is this exact (spec, candidate, workload) content already in the
+    /// memo cache? Used by the search budget, which meters *new
+    /// compiles* only — cache hits are free.
+    pub fn contains(&self, base: &BuildSpec, point: &DesignPoint, flops: f64) -> bool {
+        let key = fingerprint(base, point, flops);
+        self.cache.lock().unwrap().contains_key(&key)
+    }
+
     /// Evaluate one candidate, hitting the cache when the same content
     /// was evaluated before.
     pub fn evaluate(
@@ -336,8 +363,7 @@ mod tests {
         DesignPoint {
             vectorize: Some(("vadd".into(), 8)),
             pump: Some((2, crate::ir::PumpMode::Resource)),
-            replicas: 1,
-            cl0_request_mhz: None,
+            ..DesignPoint::original()
         }
     }
 
@@ -376,6 +402,38 @@ mod tests {
     }
 
     #[test]
+    fn fingerprint_separates_region_assignments() {
+        let base = vecadd_base();
+        let f = apps::vecadd::flops(1 << 14);
+        let a = DesignPoint {
+            regions: Some(vec![Some(2), Some(4)]),
+            ..DesignPoint::original()
+        };
+        let b = DesignPoint {
+            regions: Some(vec![Some(4), Some(2)]),
+            ..DesignPoint::original()
+        };
+        let c = DesignPoint { regions: Some(vec![Some(2), None]), ..DesignPoint::original() };
+        assert_ne!(fingerprint(&base, &a, f), fingerprint(&base, &b, f));
+        assert_ne!(fingerprint(&base, &a, f), fingerprint(&base, &c, f));
+        assert_ne!(
+            fingerprint(&base, &DesignPoint::original(), f),
+            fingerprint(&base, &c, f)
+        );
+    }
+
+    #[test]
+    fn contains_peeks_without_counting_hits() {
+        let ev = Evaluator::new();
+        let base = vecadd_base();
+        let flops = apps::vecadd::flops(1 << 14);
+        assert!(!ev.contains(&base, &dp_point(), flops));
+        ev.evaluate(&base, &dp_point(), flops).unwrap();
+        assert!(ev.contains(&base, &dp_point(), flops));
+        assert_eq!(ev.cache_hits(), 0, "contains() must not count as a hit");
+    }
+
+    #[test]
     fn parallel_batch_matches_sequential() {
         let base = vecadd_base();
         let flops = apps::vecadd::flops(1 << 14);
@@ -383,9 +441,7 @@ mod tests {
             .iter()
             .map(|&w| DesignPoint {
                 vectorize: if w == 1 { None } else { Some(("vadd".into(), w)) },
-                pump: None,
-                replicas: 1,
-                cl0_request_mhz: None,
+                ..DesignPoint::original()
             })
             .collect();
         let par = Evaluator::new();

@@ -8,7 +8,10 @@
 //!
 //! * [`space`] — candidate-grid generation driven by the legality
 //!   analyses (vectorizability, temporal legality, stream-width
-//!   divisibility) instead of brute force;
+//!   divisibility) instead of brute force, including the *mixed
+//!   per-region pump assignment* axis (`--mixed-factors`): one
+//!   resource-mode factor per streamable region, legality pruned per
+//!   region (DESIGN.md §7);
 //! * [`evaluate`] — parallel candidate evaluation through the real
 //!   compile pipeline, behind a content-hashed memoization cache so
 //!   repeated sweeps are incremental;

@@ -23,19 +23,34 @@ pub fn resource_score(u: &Utilization) -> f64 {
     0.70 * u.dsp + 0.20 * u.bram + 0.10 * u.fabric_pressure()
 }
 
+/// Are both Pareto metrics finite? A candidate with a NaN/∞ `gops` or
+/// resource score (a degenerate rate-model or report) can neither be
+/// ranked nor meaningfully dominate anything: `partial_cmp` on NaN
+/// answers `None`, which used to default to `Equal` and let a poisoned
+/// candidate survive into — or scramble — the frontier. Every ranking
+/// entry point filters on this first.
+pub fn finite_metrics(e: &Evaluation) -> bool {
+    e.gops.is_finite() && e.resource_score.is_finite()
+}
+
 /// Does `a` Pareto-dominate `b`? No worse on both axes and strictly
-/// better on at least one.
+/// better on at least one. Nothing with a non-finite metric dominates
+/// or is dominated — such candidates are filtered out before ranking.
 pub fn dominates(a: &Evaluation, b: &Evaluation) -> bool {
+    if !finite_metrics(a) || !finite_metrics(b) {
+        return false;
+    }
     let no_worse = a.resource_score <= b.resource_score && a.gops >= b.gops;
     let strictly = a.resource_score < b.resource_score || a.gops > b.gops;
     no_worse && strictly
 }
 
-/// Non-dominated subset of the fitting candidates, in a stable,
-/// deterministic order: ascending resource score, then descending
-/// throughput, then label.
+/// Non-dominated subset of the fitting, finite-metric candidates, in a
+/// stable, deterministic order: ascending resource score, then
+/// descending throughput, then label.
 pub fn frontier(evals: &[Evaluation]) -> Vec<Evaluation> {
-    let fitting: Vec<Evaluation> = evals.iter().filter(|e| e.fits).cloned().collect();
+    let fitting: Vec<Evaluation> =
+        evals.iter().filter(|e| e.fits && finite_metrics(e)).cloned().collect();
     let mut out: Vec<Evaluation> = Vec::new();
     for e in &fitting {
         if !fitting.iter().any(|o| dominates(o, e)) {
@@ -89,9 +104,10 @@ impl Objective {
     }
 
     /// Does a candidate satisfy the iso-constraint against the
-    /// reference (the best unpumped single-replica design)?
+    /// reference (the best unpumped single-replica design)? A
+    /// non-finite metric is never feasible.
     pub fn feasible(&self, e: &Evaluation, reference: &Evaluation) -> bool {
-        if !e.fits {
+        if !e.fits || !finite_metrics(e) {
             return false;
         }
         match self {
@@ -107,22 +123,23 @@ impl Objective {
     /// Rank key (lower is better): feasible candidates first, ordered
     /// by the objective metric; infeasible ones ordered by how close
     /// they are to feasibility, so greedy search can climb toward the
-    /// feasible region.
+    /// feasible region. A non-finite metric ranks last, deterministically.
     pub fn rank(&self, e: &Evaluation, reference: &Evaluation) -> (u8, f64) {
+        let finite = |m: f64| if m.is_finite() { m } else { f64::INFINITY };
         let feasible = self.feasible(e, reference);
         match self {
             Objective::MinResourceAtIsoThroughput { .. } => {
                 if feasible {
-                    (0, e.resource_score)
+                    (0, finite(e.resource_score))
                 } else {
-                    (1, -e.gops)
+                    (1, finite(-e.gops))
                 }
             }
             Objective::MaxThroughputAtIsoResource { .. } => {
                 if feasible {
-                    (0, -e.gops)
+                    (0, finite(-e.gops))
                 } else {
-                    (1, e.resource_score)
+                    (1, finite(e.resource_score))
                 }
             }
         }
@@ -250,5 +267,41 @@ mod tests {
         let reference = ev("ref", 0.8, 100.0);
         let evals = vec![ev("slow", 0.1, 10.0)];
         assert!(Objective::resource().select(&evals, &reference).is_none());
+    }
+
+    #[test]
+    fn poisoned_candidates_never_reach_the_frontier() {
+        // regression: NaN metrics used to compare Equal under
+        // partial_cmp().unwrap_or(Equal) and could survive into (or
+        // scramble the order of) the frontier
+        let evals = vec![
+            ev("nan-gops", 0.3, f64::NAN),
+            ev("nan-score", f64::NAN, 80.0),
+            ev("inf-gops", 0.01, f64::INFINITY),
+            ev("ok-cheap", 0.2, 10.0),
+            ev("ok-fast", 0.9, 90.0),
+        ];
+        let f = frontier(&evals);
+        let labels: Vec<&str> = f.iter().map(|e| e.label.as_str()).collect();
+        assert_eq!(labels, vec!["ok-cheap", "ok-fast"], "poisoned candidates survived");
+        // poisoned points neither dominate nor are dominated
+        assert!(!dominates(&evals[0], &evals[3]));
+        assert!(!dominates(&evals[3], &evals[0]));
+        assert!(!dominates(&evals[2], &evals[3]), "∞ gops must not dominate everything");
+    }
+
+    #[test]
+    fn poisoned_candidates_are_infeasible_and_rank_last() {
+        let reference = ev("ref", 0.8, 100.0);
+        let poisoned = ev("poisoned", f64::NAN, f64::NAN);
+        let obj = Objective::resource();
+        assert!(!obj.feasible(&poisoned, &reference));
+        let healthy = ev("healthy", 0.4, 90.0);
+        assert!(obj.rank(&poisoned, &reference) > obj.rank(&healthy, &reference));
+        // selection over a poisoned-only pool picks nothing
+        assert!(obj.select(&[poisoned], &reference).is_none());
+        // and a mixed pool picks the healthy candidate
+        let pool = vec![ev("poisoned", f64::NAN, f64::NAN), healthy];
+        assert_eq!(obj.select(&pool, &reference).unwrap().label, "healthy");
     }
 }

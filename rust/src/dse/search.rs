@@ -33,7 +33,7 @@ use crate::hw::Device;
 use crate::util::Rng;
 
 use super::evaluate::{EvalError, Evaluation, Evaluator, FailKind};
-use super::pareto::{frontier, Objective};
+use super::pareto::{finite_metrics, frontier, Objective};
 use super::space::{generate, DesignPoint, SpaceOptions};
 
 /// How to walk the space.
@@ -79,10 +79,14 @@ pub struct SearchBase {
 pub struct SearchConfig {
     pub strategy: Strategy,
     pub objective: Objective,
-    /// Early cutoff: maximum candidate evaluations across all bases.
-    /// The baseline sweep (unpumped candidates, which anchor the
-    /// iso-constraints) is always evaluated in full, so `evaluated`
-    /// can exceed a budget smaller than the baseline.
+    /// Early cutoff: maximum *new compiles* across all bases. Memo and
+    /// disk-cache hits are free — a warm cache therefore explores at
+    /// least as many points as a cold one under the same budget (it
+    /// used to be charged per evaluation, so a fully warm cache could
+    /// exhaust the budget while compiling nothing). The baseline sweep
+    /// (unpumped candidates, which anchor the iso-constraints) is
+    /// always evaluated in full, so its compiles can exceed a budget
+    /// smaller than the baseline.
     pub budget: Option<usize>,
     /// Seed for the stochastic strategies (anneal's walk, halving's
     /// sampling order). Deterministic: same seed ⇒ same outcome.
@@ -157,20 +161,36 @@ impl WalkStats {
     }
 }
 
-/// Number of search dimensions two points differ in.
+/// Number of search dimensions two points differ in. Two mixed
+/// assignments of equal length count their per-region differences —
+/// an anneal proposal at distance 1 mutates exactly one region's
+/// factor; a uniform↔mixed move counts as one pump-axis step.
+fn pump_dims(a: &DesignPoint, b: &DesignPoint) -> usize {
+    match (&a.regions, &b.regions) {
+        (Some(x), Some(y)) if x.len() == y.len() => {
+            x.iter().zip(y).filter(|(p, q)| p != q).count()
+        }
+        (None, None) => (a.pump != b.pump) as usize,
+        _ => 1,
+    }
+}
+
 fn differing_dims(a: &DesignPoint, b: &DesignPoint) -> usize {
     (a.vectorize != b.vectorize) as usize
-        + (a.pump != b.pump) as usize
+        + pump_dims(a, b)
         + (a.replicas != b.replicas) as usize
         + (a.cl0_request_mhz != b.cl0_request_mhz) as usize
 }
 
 /// Scalar energy for the stochastic strategies (lower is better):
 /// the objective's rank metric, with an offset that keeps every
-/// infeasible point above every feasible one.
-fn energy(objective: &Objective, e: &Evaluation, reference: &Evaluation) -> f64 {
+/// infeasible point above every feasible one. `None` for a candidate
+/// whose metrics are non-finite — such a point can never become the
+/// walk's current state (∞ − ∞ acceptance terms were undefined).
+fn energy(objective: &Objective, e: &Evaluation, reference: &Evaluation) -> Option<f64> {
     let (class, metric) = objective.rank(e, reference);
-    metric + class as f64 * 1e9
+    let en = metric + class as f64 * 1e9;
+    en.is_finite().then_some(en)
 }
 
 /// Run a search over one or more bases (e.g. a PE-count sweep supplies
@@ -195,11 +215,17 @@ pub fn run_search(
     // rank-selection (halving's robust winner)
     let mut winners: Vec<Evaluation> = Vec::new();
 
+    // budget meters new compiles only: cache hits are free
+    let misses_start = evaluator.cache_misses();
+
     // one legality-pruned grid per base
     let grids: Vec<Vec<DesignPoint>> =
         bases.iter().map(|b| generate(&b.spec, device, opts)).collect();
     let is_baseline = |p: &DesignPoint| {
-        p.pump.is_none() && p.replicas == 1 && p.cl0_request_mhz.is_none()
+        p.pump.is_none()
+            && p.regions.is_none()
+            && p.replicas == 1
+            && p.cl0_request_mhz.is_none()
     };
 
     // Baseline sweep: every unpumped single-replica candidate (the
@@ -216,6 +242,7 @@ pub fn run_search(
                 Ok(mut e) => {
                     e.base = i;
                     if e.fits
+                        && finite_metrics(&e)
                         && reference.as_ref().map(|r| e.gops > r.gops).unwrap_or(true)
                     {
                         reference = Some(e.clone());
@@ -240,7 +267,8 @@ pub fn run_search(
             .filter(|p| **p != DesignPoint::original())
             .cloned()
             .collect();
-        let remaining_budget = cfg.budget.map(|b| b.saturating_sub(evaluated));
+        let compiles_so_far = evaluator.cache_misses() - misses_start;
+        let remaining_budget = cfg.budget.map(|b| b.saturating_sub(compiles_so_far));
         let (mut evs, winner, stats) = match cfg.strategy {
             Strategy::Exhaustive => {
                 // the baseline points are already evaluated
@@ -250,10 +278,23 @@ pub fn run_search(
                     .filter(|p| !is_baseline(p))
                     .collect();
                 if let Some(remaining) = remaining_budget {
-                    if batch.len() > remaining {
-                        batch.truncate(remaining);
-                        stats.truncated = true;
+                    // keep every cached point (free) and up to
+                    // `remaining` uncached ones
+                    let mut new_compiles = 0usize;
+                    let mut kept = Vec::with_capacity(batch.len());
+                    for p in batch {
+                        if evaluator.contains(&base.spec, &p, base.flops) {
+                            kept.push(p);
+                            continue;
+                        }
+                        if new_compiles < remaining {
+                            new_compiles += 1;
+                            kept.push(p);
+                        } else {
+                            stats.truncated = true;
+                        }
                     }
+                    batch = kept;
                 }
                 stats.issued = batch.len();
                 let mut evs = Vec::new();
@@ -365,6 +406,8 @@ fn greedy_climb(
     let mut evaluations: Vec<Evaluation> = Vec::new();
     let mut stats = WalkStats::default();
     let mut visited: Vec<bool> = vec![false; grid.len()];
+    // budget meters new compiles only — cached neighbours are free
+    let mut new_compiles = 0usize;
 
     let mut current = DesignPoint::original();
     let mut current_eval: Option<Evaluation> =
@@ -381,11 +424,15 @@ fn greedy_climb(
         }
         let mut batch: Vec<DesignPoint> = Vec::new();
         for &i in &neighbour_idx {
-            if let Some(b) = budget {
-                if stats.issued >= b {
-                    stats.truncated = true;
-                    break;
+            let cached = evaluator.contains(&base.spec, &grid[i], base.flops);
+            if !cached {
+                if let Some(b) = budget {
+                    if new_compiles >= b {
+                        stats.truncated = true;
+                        break;
+                    }
                 }
+                new_compiles += 1;
             }
             visited[i] = true;
             batch.push(grid[i].clone());
@@ -444,25 +491,49 @@ fn anneal_walk(
         return (Vec::new(), None, stats);
     }
     let mut rng = Rng::new(seed ^ 0xa95ea1);
-    let default_iters = (grid.len() * 2).max(8);
-    let iters = match budget {
-        Some(b) => default_iters.min(b),
-        None => default_iters,
-    };
-    if iters < default_iters {
-        stats.truncated = true;
-    }
+    let iters = (grid.len() * 2).max(8);
+    // budget meters new compiles only; the walk stops early (and is
+    // recorded truncated) when a proposal would exceed it
+    let mut new_compiles = 0usize;
 
     let mut evaluations: Vec<Evaluation> = Vec::new();
     let mut visited: Vec<bool> = vec![false; grid.len()];
 
-    // start at the original (already priced in the baseline sweep)
+    // Start at the original (already priced in the baseline sweep).
+    // If the original fails to evaluate — or prices to a non-finite
+    // energy — seed the walk from the known-legal reference point
+    // instead: a walk anchored at an undefined energy used to compute
+    // ∞ − ∞ = NaN acceptance terms, making fail→fail proposals
+    // undefined behaviour. `current_energy == None` now means "not
+    // anchored yet": the first successfully priced proposal is
+    // accepted unconditionally, and failed proposals are explicit
+    // rejects.
     let mut current = DesignPoint::original();
-    let mut current_energy = evaluator
+    let mut current_energy: Option<f64> = evaluator
         .evaluate(&base.spec, &current, base.flops)
         .ok()
-        .map(|e| energy(objective, &e, reference))
-        .unwrap_or(f64::INFINITY);
+        .and_then(|e| energy(objective, &e, reference));
+    if current_energy.is_none() {
+        // Re-anchor only at a point of *this base's* grid (the global
+        // reference may come from another base of a multi-base sweep,
+        // which would leave every neighbour set empty), and meter the
+        // evaluation like any other proposal — the budget caps new
+        // compiles, re-anchoring included.
+        if let Some(idx) = grid.iter().position(|p| *p == reference.point) {
+            let cached = evaluator.contains(&base.spec, &grid[idx], base.flops);
+            let affordable = cached || budget.map(|b| new_compiles < b).unwrap_or(true);
+            if affordable {
+                if !cached {
+                    new_compiles += 1;
+                }
+                current = grid[idx].clone();
+                current_energy = evaluator
+                    .evaluate(&base.spec, &current, base.flops)
+                    .ok()
+                    .and_then(|e| energy(objective, &e, reference));
+            }
+        }
+    }
 
     let t0 = 0.5f64;
     let t_end = 1e-3f64;
@@ -504,6 +575,16 @@ fn anneal_walk(
                 unvisited[rng.range(0, unvisited.len())]
             }
         };
+        // budget: an uncached proposal is a new compile
+        if !evaluator.contains(&base.spec, &grid[cand_idx], base.flops) {
+            if let Some(b) = budget {
+                if new_compiles >= b {
+                    stats.truncated = true;
+                    break;
+                }
+            }
+            new_compiles += 1;
+        }
         let first_visit = !visited[cand_idx];
         visited[cand_idx] = true;
 
@@ -514,12 +595,25 @@ fn anneal_walk(
                 if first_visit {
                     evaluations.push(e.clone());
                 }
-                let d = cand_energy - current_energy;
-                if d <= 0.0 || rng.f64() < (-d / t).exp() {
-                    current = grid[cand_idx].clone();
-                    current_energy = cand_energy;
+                match (cand_energy, current_energy) {
+                    // a non-finite candidate is an explicit reject
+                    (None, _) => {}
+                    // unanchored walk: first priced point is accepted
+                    (Some(ce), None) => {
+                        current = grid[cand_idx].clone();
+                        current_energy = Some(ce);
+                    }
+                    (Some(ce), Some(cur)) => {
+                        let d = ce - cur;
+                        if d <= 0.0 || rng.f64() < (-d / t).exp() {
+                            current = grid[cand_idx].clone();
+                            current_energy = Some(ce);
+                        }
+                    }
                 }
             }
+            // a failed proposal is an explicit reject: the walk stays
+            // where it is (fail→fail no longer computes ∞ − ∞)
             Err(err) => stats.count_failure(&err),
         }
     }
@@ -555,33 +649,18 @@ fn halving_rounds(
     Rng::new(seed ^ 0x4a1f).shuffle(&mut order);
 
     let mut survivors: Vec<usize> = order;
-    if let Some(b) = budget {
-        let opening = (b / 2).max(1).min(survivors.len());
-        if opening < survivors.len() {
-            survivors.truncate(opening);
-            stats.truncated = true;
-        }
-    }
-
     let mut evaluations: Vec<Evaluation> = Vec::new();
     // candidate index → (energy sum, samples, base-seed evaluation)
     let mut scores: HashMap<usize, (f64, u32, Option<Evaluation>)> = HashMap::new();
+    // budget meters new compiles only; round 0 (the opening sample)
+    // spends at most half of it, the refinement rounds the rest —
+    // cached candidates ride along for free
     let mut remaining = budget;
 
     let max_rounds = 4usize;
     for round in 0..max_rounds {
         if survivors.is_empty() {
             break;
-        }
-        if let Some(rem) = remaining {
-            if rem == 0 {
-                stats.truncated = true;
-                break;
-            }
-            if survivors.len() > rem {
-                survivors.truncate(rem);
-                stats.truncated = true;
-            }
         }
         // round 0 prices under the base seed (sharing cache entries
         // with every other strategy); later rounds add jitter seeds
@@ -591,23 +670,53 @@ fn halving_rounds(
             let s = base.spec.seed.wrapping_add(round as u64);
             base.spec.clone().seeded(s)
         };
+        if let Some(rem) = remaining.as_mut() {
+            // half the budget for the opening sample, but never more
+            // than what is actually left (a zero budget stays zero)
+            let cap = if round == 0 { (*rem / 2).max(1).min(*rem) } else { *rem };
+            let mut uncached = 0usize;
+            let mut kept = Vec::with_capacity(survivors.len());
+            for &idx in &survivors {
+                if evaluator.contains(&spec_r, &grid[idx], base.flops) {
+                    kept.push(idx);
+                    continue;
+                }
+                if uncached < cap {
+                    uncached += 1;
+                    kept.push(idx);
+                } else {
+                    stats.truncated = true;
+                }
+            }
+            *rem = rem.saturating_sub(uncached);
+            survivors = kept;
+            if survivors.is_empty() {
+                stats.truncated = true;
+                break;
+            }
+        }
         let points: Vec<DesignPoint> = survivors.iter().map(|&i| grid[i].clone()).collect();
         stats.issued += points.len();
-        if let Some(rem) = remaining.as_mut() {
-            *rem = rem.saturating_sub(points.len());
-        }
         let results = evaluator.evaluate_all(&spec_r, &points, base.flops);
         let mut alive: Vec<usize> = Vec::new();
         for (&idx, r) in survivors.iter().zip(&results) {
             match r {
                 Ok(e) => {
-                    let en = energy(objective, e, reference);
+                    if round == 0 {
+                        evaluations.push(e.clone());
+                    }
+                    // a non-finite energy cannot be ranked: the
+                    // candidate drops out of the tournament (but its
+                    // evaluation is still reported above)
+                    let en = match energy(objective, e, reference) {
+                        Some(en) => en,
+                        None => continue,
+                    };
                     let slot = scores.entry(idx).or_insert((0.0, 0, None));
                     slot.0 += en;
                     slot.1 += 1;
                     if round == 0 {
                         slot.2 = Some(e.clone());
-                        evaluations.push(e.clone());
                     }
                     alive.push(idx);
                 }
@@ -665,6 +774,7 @@ mod tests {
             pump_modes: vec![PumpMode::Resource],
             max_replicas: 1,
             cl0_requests_mhz: vec![],
+            mixed_factors: false,
         }
     }
 
@@ -781,21 +891,54 @@ mod tests {
 
     #[test]
     fn anneal_respects_budget() {
+        // budget meters new compiles: the walk may issue more
+        // evaluations than the budget (cache hits are free) but must
+        // not compile more than baseline + budget candidates
         let device = Device::u280();
         let cfg = SearchConfig {
             strategy: Strategy::Anneal,
             objective: Objective::resource(),
-            budget: Some(10),
+            budget: Some(3),
             seed: 5,
         };
-        let out =
-            run_search(&Evaluator::new(), &vecadd_bases(), &device, &small_opts(), &cfg)
-                .unwrap();
-        assert!(out.evaluated <= 10 + 4, "baseline + ≤ budget proposals");
+        let ev = Evaluator::new();
+        let out = run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
+        // baseline (4 unpumped candidates) + at most 3 walk compiles
+        assert!(ev.cache_misses() <= 4 + 3, "compiled {} candidates", ev.cache_misses());
         // a budgeted anneal still returns something sane
         let chosen = out.chosen.unwrap();
         let reference = out.reference.unwrap();
         assert!(chosen.resource_score <= reference.resource_score + 1e-12);
+    }
+
+    #[test]
+    fn budget_meters_new_compiles_so_warm_cache_explores_more() {
+        // regression: cache hits used to count against the budget, so
+        // a warm cache could exhaust it while compiling nothing. Now a
+        // warm run under the same budget explores at least as many
+        // points as the cold one — strictly more here, because the
+        // cold run's budget was spent entirely on the baseline.
+        let device = Device::u280();
+        let cfg = SearchConfig {
+            strategy: Strategy::Exhaustive,
+            objective: Objective::resource(),
+            budget: Some(4),
+            seed: 1,
+        };
+        let ev = Evaluator::new();
+        let cold = run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
+        assert!(cold.truncated, "tight budget must truncate the cold sweep");
+        let warm = run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
+        assert!(
+            warm.evaluations.len() > cold.evaluations.len(),
+            "warm run explored {} ≤ cold {}",
+            warm.evaluations.len(),
+            cold.evaluations.len()
+        );
+        // and a run over a fully warmed cache is never truncated
+        let full = run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
+        let again = run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
+        assert!(again.evaluations.len() >= full.evaluations.len());
     }
 
     #[test]

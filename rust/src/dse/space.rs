@@ -12,11 +12,13 @@
 //! throughput-mode candidates, exactly the paper's §4.4 argument.
 
 use crate::analysis::movement::scope_movement;
+use crate::analysis::streamability::partition_streamable;
 use crate::analysis::vectorizability::{check_temporal, check_traditional};
 use crate::coordinator::pipeline::BuildSpec;
 use crate::hw::Device;
 use crate::ir::{ContainerKind, LibraryOp, Node, PumpMode, Sdfg};
 use crate::symbolic::SymbolTable;
+use crate::transforms::multipump::assignment_label;
 
 /// One candidate configuration of the compile pipeline. The point owns
 /// the dimensions the search explores; everything else (bindings, seed,
@@ -25,8 +27,12 @@ use crate::symbolic::SymbolTable;
 pub struct DesignPoint {
     /// Traditional vectorization of a named map, if any.
     pub vectorize: Option<(String, usize)>,
-    /// Multi-pumping (factor, mode), if any.
+    /// Uniform multi-pumping (factor, mode), if any.
     pub pump: Option<(usize, PumpMode)>,
+    /// Mixed per-region resource-mode pump assignment (one entry per
+    /// streamable region in partition order; `None` stays in CL0).
+    /// Mutually exclusive with `pump`.
+    pub regions: Option<Vec<Option<usize>>>,
     /// SLR replication count (≥ 1).
     pub replicas: usize,
     /// CL0 request override in MHz (None → keep the base spec's).
@@ -36,19 +42,26 @@ pub struct DesignPoint {
 impl DesignPoint {
     /// The unpumped, unreplicated origin of the space.
     pub fn original() -> DesignPoint {
-        DesignPoint { vectorize: None, pump: None, replicas: 1, cl0_request_mhz: None }
+        DesignPoint {
+            vectorize: None,
+            pump: None,
+            regions: None,
+            replicas: 1,
+            cl0_request_mhz: None,
+        }
     }
 
-    /// Compact label, e.g. `V8 R2`, `O`, `T2 x3SLR`.
+    /// Compact label, e.g. `V8 R2`, `O`, `T2 x3SLR`, `Mx[4x8+2x8]`.
     pub fn label(&self) -> String {
         let mut s = String::new();
         if let Some((_, w)) = &self.vectorize {
             s.push_str(&format!("V{w} "));
         }
-        match self.pump {
-            None => s.push('O'),
-            Some((f, PumpMode::Resource)) => s.push_str(&format!("R{f}")),
-            Some((f, PumpMode::Throughput)) => s.push_str(&format!("T{f}")),
+        match (&self.regions, self.pump) {
+            (Some(fs), _) => s.push_str(&format!("Mx[{}]", assignment_label(fs))),
+            (None, None) => s.push('O'),
+            (None, Some((f, PumpMode::Resource))) => s.push_str(&format!("R{f}")),
+            (None, Some((f, PumpMode::Throughput))) => s.push_str(&format!("T{f}")),
         }
         if self.replicas > 1 {
             s.push_str(&format!(" x{}SLR", self.replicas));
@@ -66,6 +79,7 @@ impl DesignPoint {
         let mut spec = base.clone();
         spec.vectorize = self.vectorize.clone();
         spec.pump = self.pump;
+        spec.pump_regions = self.regions.clone();
         spec.slr_replicas = self.replicas;
         if self.cl0_request_mhz.is_some() {
             spec.cl0_request_mhz = self.cl0_request_mhz;
@@ -90,6 +104,11 @@ pub struct SpaceOptions {
     pub max_replicas: usize,
     /// Extra CL0 requests to probe besides the base spec's.
     pub cl0_requests_mhz: Vec<f64>,
+    /// Also enumerate *mixed* per-region pump assignments (resource
+    /// mode): two-block contiguous splits of the region chain, each
+    /// block at its own factor (or unpumped). Off by default — the
+    /// dimension multiplies the grid on multi-region graphs.
+    pub mixed_factors: bool,
 }
 
 impl SpaceOptions {
@@ -101,6 +120,7 @@ impl SpaceOptions {
             pump_modes: vec![PumpMode::Resource, PumpMode::Throughput],
             max_replicas: device.slrs.len().max(1),
             cl0_requests_mhz: Vec::new(),
+            mixed_factors: false,
         }
     }
 }
@@ -252,6 +272,72 @@ fn pump_options(
     out
 }
 
+/// Mixed per-region assignments (resource mode): for every split point
+/// of the region chain, a prefix factor and a suffix factor (each a
+/// legality-pruned factor of that block's regions, or `None` = CL0),
+/// prefix ≠ suffix. Equal-factor blocks cluster contiguously because
+/// every extra factor change along the chain pays a full
+/// packer/sync/issuer crossing — and the anneal walk can still reach
+/// any other assignment through single-region mutations. Pure-uniform
+/// assignments are omitted: they are exactly the legacy `pump` axis.
+fn mixed_options(g: &Sdfg, opts: &SpaceOptions) -> Vec<Vec<Option<usize>>> {
+    if !opts.mixed_factors || !opts.pump_modes.contains(&PumpMode::Resource) {
+        return Vec::new();
+    }
+    let regions = partition_streamable(g);
+    if regions.len() < 2 {
+        return Vec::new();
+    }
+    // per-region legal factors: width divisibility plus the temporal
+    // check for map-anchored regions
+    let legal: Vec<Vec<usize>> = regions
+        .iter()
+        .map(|r| {
+            if matches!(g.node(r.module), Node::MapEntry { .. }) {
+                let temporal_ok = scope_movement(g, r.module)
+                    .map(|mv| check_temporal(g, &mv, 1).is_ok())
+                    .unwrap_or(false);
+                if !temporal_ok {
+                    return Vec::new();
+                }
+            }
+            r.legal_factors(&opts.pump_factors)
+        })
+        .collect();
+    // factors legal on a whole contiguous block
+    let block_options = |range: std::ops::Range<usize>| -> Vec<Option<usize>> {
+        let mut out: Vec<Option<usize>> = vec![None];
+        for &f in &opts.pump_factors {
+            if f >= 2 && legal[range.clone()].iter().all(|l| l.contains(&f)) {
+                out.push(Some(f));
+            }
+        }
+        out
+    };
+    let compatible = |a: Option<usize>, b: Option<usize>| match (a, b) {
+        // fast domains must share one fast time base
+        (Some(x), Some(y)) => x.max(y) % x.min(y) == 0,
+        _ => true,
+    };
+    let mut out = Vec::new();
+    for split in 1..regions.len() {
+        for &a in &block_options(0..split) {
+            for &b in &block_options(split..regions.len()) {
+                if a == b || !compatible(a, b) || (a.is_none() && b.is_none()) {
+                    continue;
+                }
+                let mut v = vec![a; split];
+                v.extend(std::iter::repeat(b).take(regions.len() - split));
+                out.push(v);
+            }
+        }
+    }
+    // adjacent splits can coincide when a block option vanishes
+    out.sort();
+    out.dedup();
+    out
+}
+
 /// Generate the pruned candidate grid for a base spec on a device.
 pub fn generate(base: &BuildSpec, _device: &Device, opts: &SpaceOptions) -> Vec<DesignPoint> {
     let g = &base.sdfg;
@@ -268,10 +354,26 @@ pub fn generate(base: &BuildSpec, _device: &Device, opts: &SpaceOptions) -> Vec<
                     out.push(DesignPoint {
                         vectorize: vec_opt.clone(),
                         pump: pump_opt,
+                        regions: None,
                         replicas,
                         cl0_request_mhz: *cl0,
                     });
                 }
+            }
+        }
+    }
+    // the mixed per-region axis rides alongside the uniform pump axis
+    // (unvectorized: the multi-region apps are library chains)
+    for assignment in mixed_options(g, opts) {
+        for replicas in 1..=opts.max_replicas.max(1) {
+            for cl0 in &cl0s {
+                out.push(DesignPoint {
+                    vectorize: None,
+                    pump: None,
+                    regions: Some(assignment.clone()),
+                    replicas,
+                    cl0_request_mhz: *cl0,
+                });
             }
         }
     }
@@ -369,11 +471,90 @@ mod tests {
         let b = DesignPoint {
             vectorize: Some(("vadd".into(), 8)),
             pump: Some((2, PumpMode::Resource)),
+            regions: None,
             replicas: 3,
             cl0_request_mhz: None,
         };
         assert_eq!(b.label(), "V8 R2 x3SLR");
         let c = DesignPoint { pump: Some((4, PumpMode::Throughput)), ..a.clone() };
         assert_eq!(c.label(), "T4");
+        let m = DesignPoint {
+            regions: Some(vec![Some(4), Some(4), Some(2), None]),
+            ..a.clone()
+        };
+        assert_eq!(m.label(), "Mx[4x2+2x1+-x1]");
+    }
+
+    #[test]
+    fn stencil_space_gains_mixed_assignments_when_enabled() {
+        let mut spec = BuildSpec::new(apps::stencil::build(
+            crate::ir::StencilKind::Jacobi3D,
+            4,
+            8,
+        ));
+        for (s, v) in [("NX", 64i64), ("NY", 32), ("NZ", 32), ("NZ_v", 4)] {
+            spec = spec.bind(s, v);
+        }
+        let device = Device::u280();
+        let mut opts = SpaceOptions::for_device(&device);
+        opts.max_replicas = 1;
+        // off by default: no mixed points
+        assert!(generate(&spec, &device, &opts).iter().all(|p| p.regions.is_none()));
+        opts.mixed_factors = true;
+        let points = generate(&spec, &device, &opts);
+        let mixed: Vec<&DesignPoint> = points.iter().filter(|p| p.regions.is_some()).collect();
+        assert!(!mixed.is_empty(), "mixed dimension produced no candidates");
+        for p in &mixed {
+            let fs = p.regions.as_ref().unwrap();
+            assert_eq!(fs.len(), 4, "assignment must cover every region: {}", p.label());
+            // legality: every factor divides the stage width 8
+            assert!(fs.iter().flatten().all(|f| 8 % f == 0), "{}", p.label());
+            // not a pure-uniform assignment (those live on the pump axis)
+            assert!(
+                !(fs.iter().all(|f| f.is_some()) && fs.windows(2).all(|w| w[0] == w[1])),
+                "uniform assignment duplicated on the mixed axis: {}",
+                p.label()
+            );
+            assert!(fs.iter().any(|f| f.is_some()));
+        }
+        // the canonical half/half split is present
+        assert!(mixed
+            .iter()
+            .any(|p| p.regions.as_ref().unwrap() == &vec![Some(4), Some(4), Some(2), Some(2)]));
+    }
+
+    #[test]
+    fn mixed_assignments_prune_per_region_legality() {
+        // desynchronize one stage's datapath width: factors that do not
+        // divide it must vanish from every assignment touching that region
+        let mut g = apps::stencil::build(crate::ir::StencilKind::Jacobi3D, 4, 8);
+        for id in g.node_ids().collect::<Vec<_>>() {
+            if let Node::Library {
+                op: LibraryOp::StencilStage { vec_width, .. },
+                name,
+            } = g.node_mut(id)
+            {
+                if name.ends_with("stage3") {
+                    *vec_width = 2;
+                }
+            }
+        }
+        let mut spec = BuildSpec::new(g);
+        for (s, v) in [("NX", 64i64), ("NY", 32), ("NZ", 32), ("NZ_v", 4)] {
+            spec = spec.bind(s, v);
+        }
+        let device = Device::u280();
+        let mut opts = SpaceOptions::for_device(&device);
+        opts.max_replicas = 1;
+        opts.mixed_factors = true;
+        let points = generate(&spec, &device, &opts);
+        for p in points.iter().filter(|p| p.regions.is_some()) {
+            let fs = p.regions.as_ref().unwrap();
+            assert!(
+                fs[3].map(|f| 2 % f == 0).unwrap_or(true),
+                "region 3 (width 2) got an illegal factor: {}",
+                p.label()
+            );
+        }
     }
 }

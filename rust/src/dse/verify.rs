@@ -159,8 +159,7 @@ mod tests {
             let e = eval_at_paper_scale(DesignPoint {
                 vectorize: Some(("vadd".into(), 8)),
                 pump,
-                replicas: 1,
-                cl0_request_mhz: None,
+                ..DesignPoint::original()
             });
             let r = verify_point(&golden, &e, &inputs, DEFAULT_TOLERANCE).unwrap();
             assert!(r.skipped.is_none());
@@ -179,9 +178,7 @@ mod tests {
         let spec = BuildSpec::new(apps::vecadd::build()).bind("N", 100).seeded(9);
         let e = eval_at_paper_scale(DesignPoint {
             vectorize: Some(("vadd".into(), 8)),
-            pump: None,
-            replicas: 1,
-            cl0_request_mhz: None,
+            ..DesignPoint::original()
         });
         let r = verify_point(&spec, &e, &[], DEFAULT_TOLERANCE).unwrap();
         let reason = r.skipped.expect("must be skipped, not failed");

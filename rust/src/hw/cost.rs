@@ -1,6 +1,6 @@
 //! Per-operation / per-module resource cost model.
 //!
-//! Calibrated against the paper's tables (DESIGN.md §7):
+//! Calibrated against the paper's tables (DESIGN.md §8):
 //!
 //! * f32 add/sub: 2 DSP (Table 2: V=8 ⇒ 16 DSP = 0.56 % of 2880);
 //! * f32 mul: 3 DSP (Table 3: 32 PE × 16 lanes × (3+2) = 2560 ≈ 90 %);

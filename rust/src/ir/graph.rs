@@ -51,13 +51,50 @@ pub enum PumpMode {
     Throughput,
 }
 
-/// Record of an applied multi-pumping transformation.
+/// One pumped region: a set of nodes sharing a fast clock domain at
+/// `factor` × CL0. The whole-graph transformation produces a single
+/// region (the paper's §3.4 largest-streamable-subgraph choice); the
+/// mixed per-subgraph transformation produces one region per distinct
+/// clock ratio assignment.
+#[derive(Clone, Debug)]
+pub struct PumpedRegion {
+    pub factor: usize,
+    /// Nodes placed in this region's fast clock domain.
+    pub nodes: Vec<NodeId>,
+}
+
+/// Record of an applied multi-pumping transformation: the pump mode
+/// plus the list of pumped regions. Uniform (whole-graph) pumping is
+/// the single-region special case.
 #[derive(Clone, Debug)]
 pub struct MultipumpInfo {
-    pub factor: usize,
     pub mode: PumpMode,
-    /// Nodes placed in the fast clock domain CL1.
-    pub fast_nodes: Vec<NodeId>,
+    pub regions: Vec<PumpedRegion>,
+}
+
+impl MultipumpInfo {
+    /// A single region covering the whole compute subgraph — the
+    /// legacy whole-graph transformation's shape.
+    pub fn uniform(factor: usize, mode: PumpMode, fast_nodes: Vec<NodeId>) -> MultipumpInfo {
+        MultipumpInfo { mode, regions: vec![PumpedRegion { factor, nodes: fast_nodes }] }
+    }
+
+    /// The largest pump factor across regions — the ratio of the
+    /// fastest fast clock to CL0 (drives the global fast time base of
+    /// the exact simulator and the reported `pump_factor`).
+    pub fn max_factor(&self) -> usize {
+        self.regions.iter().map(|r| r.factor).max().unwrap_or(1)
+    }
+
+    /// The pump factor of the region containing `id`, if any.
+    pub fn factor_of(&self, id: NodeId) -> Option<usize> {
+        self.regions.iter().find(|r| r.nodes.contains(&id)).map(|r| r.factor)
+    }
+
+    /// More than one fast clock domain?
+    pub fn is_mixed(&self) -> bool {
+        self.regions.len() > 1
+    }
 }
 
 /// The dataflow program: containers, symbols, nodes, edges, and an
@@ -244,12 +281,14 @@ impl Sdfg {
         Ok(env)
     }
 
-    /// Is a node in the fast (multi-pumped) clock domain?
+    /// Is a node in a fast (multi-pumped) clock domain?
     pub fn in_fast_domain(&self, id: NodeId) -> bool {
-        self.multipump
-            .as_ref()
-            .map(|mp| mp.fast_nodes.contains(&id))
-            .unwrap_or(false)
+        self.fast_factor_of(id).is_some()
+    }
+
+    /// The pump factor of the fast domain containing `id`, if any.
+    pub fn fast_factor_of(&self, id: NodeId) -> Option<usize> {
+        self.multipump.as_ref().and_then(|mp| mp.factor_of(id))
     }
 
     /// Topological order of all nodes (errors on cycles).

@@ -15,7 +15,8 @@
 //! * [`analysis`] — data-movement tracing, streamability and (temporal)
 //!   vectorizability checks;
 //! * [`transforms`] — `Vectorize`, `StreamingComposition`, `MultiPump`
-//!   (resource & throughput modes) and supporting rewrites;
+//!   (resource & throughput modes, uniform or mixed per-region
+//!   factors) and supporting rewrites;
 //! * [`hw`] — the hardware substrate the paper ran on, as a model:
 //!   Alveo U280 SLR resource pools, per-op cost model, congestion-based
 //!   frequency model, clock domains;

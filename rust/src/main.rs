@@ -33,14 +33,29 @@ fn main() {
         .opt("app", "dse: application (vecadd|matmul|jacobi|diffusion|fw|all)")
         .opt_default("objective", "dse: resource|throughput", "resource")
         .opt_default("strategy", "dse: exhaustive|greedy|anneal|halving", "exhaustive")
-        .opt("budget", "dse: max candidate evaluations (early cutoff)")
+        .opt("budget", "dse: max new compiles (early cutoff; cache hits are free)")
         .opt("cache-dir", "dse: directory for the persistent evaluation cache")
         .opt_default("tolerance", "dse --verify: rate-vs-exact relative tolerance", "0.4")
         .flag("verify", "dse: exact-sim-check every frontier point at golden scale")
+        .flag(
+            "mixed-factors",
+            "dse: search mixed per-region pump assignments (resource mode)",
+        )
         .flag("emit", "write generated HLS/RTL text files to ./generated")
         .flag("verbose", "print pass logs");
     let args = cli.parse_env();
-    let seed = args.get_u64("seed").unwrap_or(1);
+    // a typo'd --seed used to silently fall back to 1; reject it loudly
+    let seed = match args.get("seed").map(str::parse::<u64>) {
+        None => 1,
+        Some(Ok(s)) => s,
+        Some(Err(_)) => {
+            eprintln!(
+                "error: invalid --seed '{}' (want an unsigned integer)",
+                args.get("seed").unwrap()
+            );
+            std::process::exit(2);
+        }
+    };
 
     let result = match args.subcommand.as_deref() {
         Some("experiment") => cmd_experiment(&args, seed),
@@ -254,11 +269,21 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
             )
         },
     )?;
-    let cfg = SearchConfig { strategy, objective, budget: args.get_usize("budget"), seed };
+    // --budget: parse failures used to be swallowed by get_usize (a
+    // typo silently meant "no budget"); reject them instead
+    let budget = match args.get("budget") {
+        None => None,
+        Some(raw) => Some(raw.parse::<usize>().map_err(|_| {
+            format!("invalid --budget '{raw}' (want a non-negative integer)")
+        })?),
+    };
+    let cfg = SearchConfig { strategy, objective, budget, seed };
+    // --tolerance: a NaN parses fine but fails every |ratio − 1| ≤ tol
+    // comparison (and a negative one fails all, a huge one passes all)
+    // without any hint of the bad flag — demand a finite non-negative
+    // value up front
     let tol_raw = args.get_or("tolerance", "0.4");
-    let tolerance: f64 = tol_raw
-        .parse()
-        .map_err(|_| format!("invalid --tolerance '{tol_raw}' (want a number, e.g. 0.4)"))?;
+    let tolerance = parse_tolerance(tol_raw)?;
     let device = Device::u280();
     let names: Vec<&str> = match app.as_str() {
         "all" => vec!["vecadd", "matmul", "jacobi", "diffusion", "fw"],
@@ -293,6 +318,7 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
             &cfg,
             &evaluator,
             args.flag("verify"),
+            args.flag("mixed-factors"),
             tolerance,
             &mut verify_failures,
         );
@@ -330,6 +356,21 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
     Ok(())
 }
 
+/// Reject non-finite or negative `--tolerance` values: they would make
+/// every `dse --verify` comparison silently fail (NaN/negative) or
+/// silently pass (∞) with no hint of the bad flag.
+fn parse_tolerance(raw: &str) -> Result<f64, String> {
+    let t: f64 = raw
+        .parse()
+        .map_err(|_| format!("invalid --tolerance '{raw}' (want a number, e.g. 0.4)"))?;
+    if !t.is_finite() || t < 0.0 {
+        return Err(format!(
+            "invalid --tolerance '{raw}': must be a finite non-negative number"
+        ));
+    }
+    Ok(t)
+}
+
 /// Search (and optionally verify) one DSE app through the shared
 /// evaluator, printing the frontier/selection/evaluation report.
 #[allow(clippy::too_many_arguments)]
@@ -341,6 +382,7 @@ fn run_dse_app(
     cfg: &temporal_vec::dse::SearchConfig,
     evaluator: &temporal_vec::dse::Evaluator,
     verify: bool,
+    mixed_factors: bool,
     tolerance: f64,
     verify_failures: &mut Vec<String>,
 ) -> Result<(), String> {
@@ -350,7 +392,20 @@ fn run_dse_app(
     // per-app bases: the matmul PE sweep supplies several — built by
     // the same constructor the --verify golden rig uses, so frontier
     // points always map back to a golden base by index
-    let (bases, opts) = temporal_vec::coordinator::search_problem(name, n_override, seed, device)?;
+    let (bases, mut opts) =
+        temporal_vec::coordinator::search_problem(name, n_override, seed, device)?;
+    opts.mixed_factors = mixed_factors;
+    // one partition per app: every base of an app shares the SDFG
+    // structure, so region count and order are identical across them
+    let regions = mixed_factors
+        .then(|| temporal_vec::analysis::partition_streamable(&bases[0].spec.sdfg));
+    if let Some(regions) = &regions {
+        println!(
+            "mixed factors: {} streamable region(s) in '{name}'{}",
+            regions.len(),
+            if regions.len() < 2 { " — single region, uniform axis only" } else { "" }
+        );
+    }
 
     let hits_before = evaluator.cache_hits();
     let misses_before = evaluator.cache_misses();
@@ -397,6 +452,17 @@ fn run_dse_app(
              reference throughput",
             chosen.label, chosen.total_resources.dsp, dsp_pct, gops_pct
         );
+        if let (Some(fs), Some(regions)) = (&chosen.point.regions, &regions) {
+            let detail: Vec<String> = regions
+                .iter()
+                .zip(fs)
+                .map(|(r, f)| {
+                    let tag = f.map(|x| format!("M{x}")).unwrap_or_else(|| "CL0".into());
+                    format!("{}={tag}", r.label)
+                })
+                .collect();
+            println!("chosen per-region factors: {}", detail.join(", "));
+        }
     }
     println!(
         "evaluations: {} issued ({} cache hits, {} new compiles, {} legality-pruned, \
@@ -447,4 +513,19 @@ fn run_dse_app(
     }
     println!();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_tolerance;
+
+    #[test]
+    fn tolerance_validation_rejects_degenerate_values() {
+        assert_eq!(parse_tolerance("0.4").unwrap(), 0.4);
+        assert_eq!(parse_tolerance("0").unwrap(), 0.0);
+        for bad in ["NaN", "nan", "-0.1", "inf", "-inf", "not-a-number"] {
+            let err = parse_tolerance(bad).unwrap_err();
+            assert!(err.contains("tolerance"), "{bad}: {err}");
+        }
+    }
 }

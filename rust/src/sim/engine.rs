@@ -32,6 +32,21 @@ fn build_procs(design: &Design, ch: &Channels) -> Vec<Proc> {
         .collect()
 }
 
+/// The fast time base: the largest clock ratio in the design. Mixed
+/// per-region designs carry several fast domains; every factor divides
+/// this one (enforced by `MultiPump::can_apply`), so a domain at
+/// factor f ticks every `base / f` fast cycles and the slow domain
+/// every `base`.
+fn fast_time_base(design: &Design) -> u64 {
+    design
+        .modules
+        .iter()
+        .map(|m| m.domain.factor() as u64)
+        .max()
+        .unwrap_or(1)
+        .max(design.pump.map(|(m, _)| m as u64).unwrap_or(1))
+}
+
 /// Functional execution: dataflow order, unbounded queues, real data.
 /// `hbm` must hold every input container; output containers are
 /// allocated automatically.
@@ -98,7 +113,7 @@ pub fn run_exact(design: &Design, mut hbm: Hbm, max_cycles: u64) -> Result<SimOu
     for (name, elems, _) in &design.arrays {
         hbm.alloc(name, *elems);
     }
-    let factor = design.pump.map(|(m, _)| m as u64).unwrap_or(1);
+    let factor = fast_time_base(design);
     let mut ch = build_channels(design);
     let mut procs = build_procs(design, &ch);
 
@@ -115,7 +130,9 @@ pub fn run_exact(design: &Design, mut hbm: Hbm, max_cycles: u64) -> Result<SimOu
             for p in procs.iter_mut() {
                 let ticks_now = match p.domain {
                     ClockDomain::Slow => fast_t % factor == 0,
-                    ClockDomain::Fast { .. } => true,
+                    ClockDomain::Fast { factor: f } => {
+                        fast_t % (factor / (f as u64)).max(1) == 0
+                    }
                 };
                 if ticks_now && p.tick(fast_t, &mut ch, &mut hbm) {
                     any = true;
@@ -176,7 +193,7 @@ pub fn run_exact(design: &Design, mut hbm: Hbm, max_cycles: u64) -> Result<SimOu
 /// largest total service time; pipeline-fill latencies are added along
 /// the module list (designs here are feed-forward chains).
 pub fn rate_model(design: &Design) -> SimStats {
-    let factor = design.pump.map(|(m, _)| m as u64).unwrap_or(1);
+    let factor = fast_time_base(design);
     let mut worst: (f64, String) = (0.0, String::new());
     let mut fill: f64 = 0.0;
     let mut modules = Vec::new();

@@ -12,14 +12,17 @@
 //! * [`multipump::MultiPump`] — the paper's contribution (Figure 3 ③):
 //!   places the streamed computational subgraph in a faster clock
 //!   domain and injects synchronizer/issuer/packer plumbing, in either
-//!   resource or throughput mode.
+//!   resource or throughput mode. Supports both the paper's §3.4
+//!   whole-subgraph factor and *mixed* per-region assignments
+//!   ([`multipump::PumpFactors::PerRegion`], resource mode), with full
+//!   crossings between fast domains of different ratios.
 
 pub mod multipump;
 pub mod pass;
 pub mod streaming;
 pub mod vectorize;
 
-pub use multipump::MultiPump;
+pub use multipump::{MultiPump, PumpFactors};
 pub use pass::{PassManager, Transform, TransformReport};
 pub use streaming::StreamingComposition;
 pub use vectorize::Vectorize;

@@ -26,29 +26,173 @@
 //!   reader/writer ports are widened to `lanes·M`; the compute block is
 //!   unchanged and processes M transactions per slow cycle — M× the
 //!   throughput at equal compute resources (Floyd–Warshall's mode).
+//!
+//! # Mixed per-subgraph factors
+//!
+//! The paper (§3.4) pumps the *largest streamable subgraph* as a
+//! whole; [`PumpFactors::PerRegion`] instead assigns one factor per
+//! [streamable region](crate::analysis::streamability::partition_streamable)
+//! (resource mode only). Adjacent regions with equal factors share one
+//! fast clock domain with no extra plumbing; at a boundary where the
+//! factors differ the rewrite inserts the full crossing
+//!
+//! ```text
+//!  fast A ──[packer ×M_a]── wide ──[sync]── wide ──[issuer ÷M_b]── fast B
+//! ```
+//!
+//! so every domain still exchanges one wide transaction per slow
+//! cycle. A region left at `None` stays in CL0.
 
 use super::pass::{Transform, TransformReport};
 use crate::analysis::movement::scope_movement;
+use crate::analysis::streamability::{module_io, partition_streamable};
 use crate::analysis::vectorizability::check_temporal;
 use crate::ir::{
     CdcKind, ContainerKind, DataDecl, LibraryOp, Memlet, MultipumpInfo, Node, NodeId, PumpMode,
-    Sdfg, Storage,
+    PumpedRegion, Sdfg, Storage,
 };
 use crate::symbolic::{Expr, Subset};
+use std::collections::HashMap;
 
-/// Apply multi-pumping at `factor` in the given mode.
+/// How the pump factor is assigned over the streamable regions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PumpFactors {
+    /// One factor for the whole streamed compute subgraph — the
+    /// paper's §3.4 largest-streamable-subgraph choice.
+    Uniform(usize),
+    /// One factor per region, in [`partition_streamable`] order.
+    /// `None` leaves that region in CL0. Resource mode only.
+    PerRegion(Vec<Option<usize>>),
+}
+
+/// Compact run-length label of a per-region assignment,
+/// e.g. `4x8+2x8` (8 regions at M=4, then 8 at M=2) or `2x3+-x1`.
+pub fn assignment_label(factors: &[Option<usize>]) -> String {
+    let mut segs: Vec<(Option<usize>, usize)> = Vec::new();
+    for f in factors {
+        match segs.last_mut() {
+            Some((v, n)) if v == f => *n += 1,
+            _ => segs.push((*f, 1)),
+        }
+    }
+    segs.iter()
+        .map(|(f, n)| {
+            let f = f.map(|x| x.to_string()).unwrap_or_else(|| "-".into());
+            format!("{f}x{n}")
+        })
+        .collect::<Vec<_>>()
+        .join("+")
+}
+
+/// `Some(m)` when every region gets the same concrete factor — such an
+/// assignment is exactly the legacy whole-graph transformation and is
+/// delegated to it, so single-region graphs (and all-equal
+/// assignments) reproduce today's behaviour bit for bit.
+fn uniform_factor(fs: &[Option<usize>]) -> Option<usize> {
+    let first = *fs.first()?;
+    let m = first?;
+    fs.iter().all(|f| *f == Some(m)).then_some(m)
+}
+
+/// Which region produces / consumes each stream. Mixed pumping
+/// rewires each crossing stream through a single `{s}_fast` per side,
+/// so a stream shared by two producer or two consumer regions cannot
+/// be split per-region — `Err` rejects the assignment loudly instead
+/// of mis-rewiring it (used by `can_apply` and `apply` alike).
+#[allow(clippy::type_complexity)]
+fn stream_sides(
+    g: &Sdfg,
+    anchors: &[NodeId],
+) -> Result<(HashMap<String, usize>, HashMap<String, usize>), String> {
+    let mut producer: HashMap<String, usize> = HashMap::new();
+    let mut consumer: HashMap<String, usize> = HashMap::new();
+    for (ri, &m) in anchors.iter().enumerate() {
+        let (inflow, outflow) = module_io(g, m);
+        for e in g.in_edges(inflow) {
+            let d = g.edge(e).memlet.data.clone();
+            if g.container(&d).map(|c| c.kind) == Some(ContainerKind::Stream) {
+                if let Some(prev) = consumer.insert(d.clone(), ri) {
+                    if prev != ri {
+                        return Err(format!(
+                            "stream '{d}' is consumed by two regions — per-region \
+                             factors cannot split a fan-out stream"
+                        ));
+                    }
+                }
+            }
+        }
+        for e in g.out_edges(outflow) {
+            let d = g.edge(e).memlet.data.clone();
+            if g.container(&d).map(|c| c.kind) == Some(ContainerKind::Stream) {
+                if let Some(prev) = producer.insert(d.clone(), ri) {
+                    if prev != ri {
+                        return Err(format!(
+                            "stream '{d}' is produced by two regions — per-region \
+                             factors cannot split a fan-in stream"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    // A crossing is rewired through the stream's single access node,
+    // so any additional endpoint sharing it (a second region, or a
+    // slow Reader/Writer next to a region consumer) would be silently
+    // mis-wired or mis-narrowed. Every participating stream must have
+    // exactly one producer edge and one consumer edge at its access
+    // node.
+    let mut seen: Vec<&String> = producer.keys().chain(consumer.keys()).collect();
+    seen.sort();
+    seen.dedup();
+    for s in seen {
+        let s_acc = g
+            .node_ids()
+            .find(|id| matches!(g.node(*id), Node::Access { data } if data == s))
+            .ok_or_else(|| format!("stream '{s}' has no access node"))?;
+        let ins = g.in_edges(s_acc).len();
+        let outs = g.out_edges(s_acc).len();
+        if ins > 1 || outs > 1 {
+            return Err(format!(
+                "stream '{s}' fans out ({ins} producer / {outs} consumer edges) — \
+                 per-region factors cannot split a shared stream"
+            ));
+        }
+    }
+    Ok((producer, consumer))
+}
+
+/// Apply multi-pumping in the given mode.
 pub struct MultiPump {
-    pub factor: usize,
     pub mode: PumpMode,
+    pub factors: PumpFactors,
 }
 
 impl MultiPump {
+    pub fn uniform(factor: usize, mode: PumpMode) -> Self {
+        MultiPump { mode, factors: PumpFactors::Uniform(factor) }
+    }
+
     pub fn resource(factor: usize) -> Self {
-        MultiPump { factor, mode: PumpMode::Resource }
+        MultiPump::uniform(factor, PumpMode::Resource)
     }
 
     pub fn throughput(factor: usize) -> Self {
-        MultiPump { factor, mode: PumpMode::Throughput }
+        MultiPump::uniform(factor, PumpMode::Throughput)
+    }
+
+    /// Mixed per-region assignment (resource mode only; see module docs).
+    pub fn mixed(factors: Vec<Option<usize>>, mode: PumpMode) -> Self {
+        MultiPump { mode, factors: PumpFactors::PerRegion(factors) }
+    }
+
+    /// Pump a single region of a `region_count`-region graph at
+    /// `factor` (resource mode), leaving every other region in CL0.
+    pub fn for_region(region: usize, region_count: usize, factor: usize) -> Self {
+        let mut fs = vec![None; region_count];
+        if region < region_count {
+            fs[region] = Some(factor);
+        }
+        MultiPump::mixed(fs, PumpMode::Resource)
     }
 }
 
@@ -86,18 +230,51 @@ fn compute_side(g: &Sdfg, boundary: &[String]) -> Vec<NodeId> {
 
 impl Transform for MultiPump {
     fn name(&self) -> String {
-        format!(
-            "MultiPump[M={} {}]",
-            self.factor,
-            match self.mode {
-                PumpMode::Resource => "resource",
-                PumpMode::Throughput => "throughput",
+        let mode = match self.mode {
+            PumpMode::Resource => "resource",
+            PumpMode::Throughput => "throughput",
+        };
+        match &self.factors {
+            PumpFactors::Uniform(m) => format!("MultiPump[M={m} {mode}]"),
+            PumpFactors::PerRegion(fs) => {
+                format!("MultiPump[mixed {} {mode}]", assignment_label(fs))
             }
-        )
+        }
     }
 
     fn can_apply(&self, g: &Sdfg) -> Result<(), String> {
-        if self.factor < 2 {
+        match &self.factors {
+            PumpFactors::Uniform(m) => self.can_apply_uniform(g, *m),
+            PumpFactors::PerRegion(fs) => {
+                let n = partition_streamable(g).len();
+                if fs.len() != n {
+                    return Err(format!(
+                        "assignment has {} factors but the graph has {n} streamable regions",
+                        fs.len()
+                    ));
+                }
+                match uniform_factor(fs) {
+                    Some(m) => self.can_apply_uniform(g, m),
+                    None => self.can_apply_mixed(g, fs),
+                }
+            }
+        }
+    }
+
+    fn apply(&self, g: &mut Sdfg) -> Result<TransformReport, String> {
+        match &self.factors {
+            PumpFactors::Uniform(m) => self.apply_uniform(g, *m),
+            PumpFactors::PerRegion(fs) => match uniform_factor(fs) {
+                Some(m) => self.apply_uniform(g, m),
+                None => self.apply_mixed(g, fs),
+            },
+        }
+    }
+}
+
+impl MultiPump {
+    fn can_apply_uniform(&self, g: &Sdfg, factor: usize) -> Result<(), String> {
+        if factor < 2 {
             return Err("pumping factor must be ≥ 2".into());
         }
         if g.multipump.is_some() {
@@ -133,11 +310,11 @@ impl Transform for MultiPump {
                     continue;
                 }
                 let lanes = decl.vtype.lanes;
-                if lanes % self.factor != 0 {
+                if lanes % factor != 0 {
                     return Err(format!(
                         "resource mode: stream '{name}' width {lanes} not divisible by M={} \
                          (choose a factor dividing the vectorized stream width)",
-                        self.factor
+                        factor
                     ));
                 }
             }
@@ -149,11 +326,11 @@ impl Transform for MultiPump {
                         // FW keeps its datapath width in resource mode
                         LibraryOp::FloydWarshall { .. } => continue,
                     };
-                    if w % self.factor != 0 {
+                    if w % factor != 0 {
                         return Err(format!(
                             "resource mode: library '{name}' vector width {w} not divisible \
                              by M={}",
-                            self.factor
+                            factor
                         ));
                     }
                 }
@@ -162,9 +339,88 @@ impl Transform for MultiPump {
         Ok(())
     }
 
-    fn apply(&self, g: &mut Sdfg) -> Result<TransformReport, String> {
+    /// Per-region legality: resource mode only, one legal factor per
+    /// pumped region (width divisibility, temporal check on map
+    /// scopes), and every factor dividing the largest one so all fast
+    /// domains share the exact simulator's fast time base.
+    fn can_apply_mixed(&self, g: &Sdfg, fs: &[Option<usize>]) -> Result<(), String> {
+        if self.mode != PumpMode::Resource {
+            return Err(
+                "mixed per-region pump factors support resource mode only \
+                 (throughput mode widens the shared external interface)"
+                    .into(),
+            );
+        }
+        if g.multipump.is_some() {
+            return Err("already multi-pumped".into());
+        }
         let (into, out_of) = boundary_streams(g);
-        let m = self.factor;
+        if into.is_empty() && out_of.is_empty() {
+            return Err("graph is not streamed (run StreamingComposition first)".into());
+        }
+        let regions = partition_streamable(g);
+        let max_f = fs.iter().flatten().copied().max().unwrap_or(0);
+        if max_f == 0 {
+            return Err("mixed assignment pumps no region (every factor is None)".into());
+        }
+        // reject fan-out/fan-in streams up front (see stream_sides)
+        let anchors: Vec<NodeId> = regions.iter().map(|r| r.module).collect();
+        stream_sides(g, &anchors)?;
+        for (r, f) in regions.iter().zip(fs) {
+            let f = match f {
+                Some(f) => *f,
+                None => continue,
+            };
+            if f < 2 {
+                return Err(format!("region '{}': pumping factor must be ≥ 2", r.label));
+            }
+            if r.width % f != 0 {
+                return Err(format!(
+                    "region '{}': width {} not divisible by M={f}",
+                    r.label, r.width
+                ));
+            }
+            // every individual stream the region touches must narrow
+            // (or re-issue) exactly — the minimum width above does not
+            // cover a wider sibling stream whose lane count M does not
+            // divide (the uniform path errors per stream too)
+            let (inflow, outflow) = module_io(g, r.module);
+            for e in g.in_edges(inflow).into_iter().chain(g.out_edges(outflow)) {
+                let data = &g.edge(e).memlet.data;
+                if let Some(decl) = g.container(data) {
+                    if decl.kind == ContainerKind::Stream && decl.vtype.lanes % f != 0 {
+                        return Err(format!(
+                            "region '{}': stream '{data}' width {} not divisible by M={f}",
+                            r.label, decl.vtype.lanes
+                        ));
+                    }
+                }
+            }
+            if max_f % f != 0 {
+                return Err(format!(
+                    "region '{}': factor {f} does not divide the assignment's largest \
+                     factor {max_f} (fast domains must share one fast time base)",
+                    r.label
+                ));
+            }
+            if matches!(g.node(r.module), Node::MapEntry { .. }) {
+                let mv = scope_movement(g, r.module)?;
+                let verdict = check_temporal(g, &mv, 1);
+                if !verdict.is_ok() {
+                    return Err(format!(
+                        "region '{}': {}",
+                        r.label,
+                        verdict.reasons().join("; ")
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_uniform(&self, g: &mut Sdfg, factor: usize) -> Result<TransformReport, String> {
+        let (into, out_of) = boundary_streams(g);
+        let m = factor;
         let mut plumbing = 0usize;
 
         // the fast domain contains the compute subgraph
@@ -378,7 +634,7 @@ impl Transform for MultiPump {
             }
         }
 
-        g.multipump = Some(MultipumpInfo { factor: m, mode: self.mode, fast_nodes });
+        g.multipump = Some(MultipumpInfo::uniform(m, self.mode, fast_nodes));
 
         Ok(TransformReport {
             transform: self.name(),
@@ -389,6 +645,287 @@ impl Transform for MultiPump {
             ),
         })
     }
+
+    /// Mixed assignment: one fast domain per distinct factor, crossings
+    /// injected wherever two sides of a stream disagree on the clock
+    /// ratio (including the slow side, factor 1).
+    fn apply_mixed(&self, g: &mut Sdfg, fs: &[Option<usize>]) -> Result<TransformReport, String> {
+        let regions = partition_streamable(g);
+        let anchors: Vec<NodeId> = regions.iter().map(|r| r.module).collect();
+        let factor_of_region = |ri: usize| fs[ri].unwrap_or(1);
+
+        // region node sets (anchor + scope internals)
+        let mut region_nodes: Vec<Vec<NodeId>> = Vec::with_capacity(anchors.len());
+        for &m in &anchors {
+            let mut ns = vec![m];
+            if let Node::MapEntry { name, .. } = g.node(m) {
+                let name = name.clone();
+                ns.extend(g.scope_nodes(m));
+                if let Some(x) = g.find_map_exit(&name) {
+                    ns.push(x);
+                }
+            }
+            region_nodes.push(ns);
+        }
+
+        // which region produces / consumes each stream (fan-out was
+        // rejected by can_apply)
+        let (producer, consumer) = stream_sides(g, &anchors)?;
+        let side_factors = |s: &str| -> (usize, usize) {
+            (
+                producer.get(s).map(|&ri| factor_of_region(ri)).unwrap_or(1),
+                consumer.get(s).map(|&ri| factor_of_region(ri)).unwrap_or(1),
+            )
+        };
+
+        let pop = |d: &str| Memlet::new(d, Subset::index1(Expr::int(0)));
+        let mut plumbing = 0usize;
+        let mut crossings = 0usize;
+
+        let stream_names: Vec<String> = g
+            .containers
+            .iter()
+            .filter(|(_, d)| d.kind == ContainerKind::Stream)
+            .map(|(n, _)| n.clone())
+            .collect();
+        for s in stream_names {
+            let (f_src, f_dst) = side_factors(&s);
+            if f_src == f_dst {
+                continue; // same domain: no crossing
+            }
+            crossings += 1;
+            let decl = g.container(&s).unwrap().clone();
+            let depth = match decl.storage {
+                Storage::Stream { depth } => depth,
+                _ => unreachable!("stream container has stream storage"),
+            };
+            let w = decl.vtype.lanes;
+            let s_acc = g
+                .node_ids()
+                .find(|id| matches!(g.node(*id), Node::Access { data } if data == &s))
+                .expect("stream access node exists");
+            let declare_stream = |g: &mut Sdfg, name: &str, lanes: usize, depth: usize| {
+                let mut vt = decl.vtype;
+                vt.lanes = lanes;
+                g.declare(DataDecl {
+                    name: name.to_string(),
+                    kind: ContainerKind::Stream,
+                    vtype: vt,
+                    shape: vec![],
+                    storage: Storage::Stream { depth },
+                    transient: true,
+                });
+            };
+            // rename edges interior to a region (entry→tasklet pops)
+            let rename_inner = |g: &mut Sdfg, region: &[NodeId], from: &str, to: &str| {
+                for e in g.edge_ids().collect::<Vec<_>>() {
+                    let edge = g.edge(e);
+                    if edge.memlet.data == from
+                        && region.contains(&edge.src)
+                        && region.contains(&edge.dst)
+                    {
+                        g.edge_mut(e).memlet.data = to.to_string();
+                    }
+                }
+            };
+
+            if f_src == 1 {
+                // slow → fast: the uniform "into the domain" plumbing
+                let m = f_dst;
+                let sx = format!("{s}_cdc");
+                let sfast = format!("{s}_fast");
+                declare_stream(g, &sx, w, depth);
+                declare_stream(g, &sfast, w / m, depth * m);
+                let sync = g.add_node(Node::Cdc {
+                    name: format!("sync_{s}"),
+                    kind: CdcKind::Synchronizer,
+                    input: s.clone(),
+                    output: sx.clone(),
+                    factor: m,
+                });
+                let issuer = g.add_node(Node::Cdc {
+                    name: format!("issue_{s}"),
+                    kind: CdcKind::Issuer,
+                    input: sx.clone(),
+                    output: sfast.clone(),
+                    factor: m,
+                });
+                let sx_acc = g.add_node(Node::Access { data: sx.clone() });
+                let sfast_acc = g.add_node(Node::Access { data: sfast.clone() });
+                for e in g.edge_ids().collect::<Vec<_>>() {
+                    let edge = g.edge(e);
+                    if edge.src == s_acc && edge.memlet.data == s {
+                        g.edges[e.0].src = sfast_acc;
+                        g.edges[e.0].memlet.data = sfast.clone();
+                    }
+                }
+                if let Some(&ri) = consumer.get(&s) {
+                    rename_inner(g, &region_nodes[ri], &s, &sfast);
+                    region_nodes[ri].extend([issuer, sfast_acc]);
+                }
+                g.add_edge(s_acc, sync, pop(&s));
+                g.add_edge(sync, sx_acc, pop(&sx));
+                g.add_edge(sx_acc, issuer, pop(&sx));
+                g.add_edge(issuer, sfast_acc, pop(&sfast));
+                plumbing += 2;
+            } else if f_dst == 1 {
+                // fast → slow: the uniform "out of the domain" plumbing
+                let m = f_src;
+                let sx = format!("{s}_cdc");
+                let sfast = format!("{s}_fast");
+                declare_stream(g, &sx, w, depth);
+                declare_stream(g, &sfast, w / m, depth * m);
+                let packer = g.add_node(Node::Cdc {
+                    name: format!("pack_{s}"),
+                    kind: CdcKind::Packer,
+                    input: sfast.clone(),
+                    output: sx.clone(),
+                    factor: m,
+                });
+                let sync = g.add_node(Node::Cdc {
+                    name: format!("sync_{s}"),
+                    kind: CdcKind::Synchronizer,
+                    input: sx.clone(),
+                    output: s.clone(),
+                    factor: m,
+                });
+                let sx_acc = g.add_node(Node::Access { data: sx.clone() });
+                let sfast_acc = g.add_node(Node::Access { data: sfast.clone() });
+                for e in g.edge_ids().collect::<Vec<_>>() {
+                    let edge = g.edge(e);
+                    if edge.dst == s_acc && edge.memlet.data == s {
+                        g.edges[e.0].dst = sfast_acc;
+                        g.edges[e.0].memlet.data = sfast.clone();
+                    }
+                }
+                if let Some(&ri) = producer.get(&s) {
+                    rename_inner(g, &region_nodes[ri], &s, &sfast);
+                    region_nodes[ri].extend([packer, sfast_acc]);
+                }
+                g.add_edge(sfast_acc, packer, pop(&sfast));
+                g.add_edge(packer, sx_acc, pop(&sx));
+                g.add_edge(sx_acc, sync, pop(&sx));
+                g.add_edge(sync, s_acc, pop(&s));
+                plumbing += 2;
+            } else {
+                // fast A → fast B: pack to the wide slow rate, cross,
+                // re-issue at the destination ratio. The producer keeps
+                // `s` (narrowed to w/f_src below); the consumer moves
+                // to `{s}_fast` at w/f_dst.
+                let sx1 = format!("{s}_pack_cdc");
+                let sx2 = format!("{s}_cdc");
+                let sfast = format!("{s}_fast");
+                declare_stream(g, &sx1, w, depth);
+                declare_stream(g, &sx2, w, depth);
+                declare_stream(g, &sfast, w / f_dst, depth * f_dst);
+                let packer = g.add_node(Node::Cdc {
+                    name: format!("pack_{s}"),
+                    kind: CdcKind::Packer,
+                    input: s.clone(),
+                    output: sx1.clone(),
+                    factor: f_src,
+                });
+                let sync = g.add_node(Node::Cdc {
+                    name: format!("sync_{s}"),
+                    kind: CdcKind::Synchronizer,
+                    input: sx1.clone(),
+                    output: sx2.clone(),
+                    factor: f_dst,
+                });
+                let issuer = g.add_node(Node::Cdc {
+                    name: format!("issue_{s}"),
+                    kind: CdcKind::Issuer,
+                    input: sx2.clone(),
+                    output: sfast.clone(),
+                    factor: f_dst,
+                });
+                let sx1_acc = g.add_node(Node::Access { data: sx1.clone() });
+                let sx2_acc = g.add_node(Node::Access { data: sx2.clone() });
+                let sfast_acc = g.add_node(Node::Access { data: sfast.clone() });
+                for e in g.edge_ids().collect::<Vec<_>>() {
+                    let edge = g.edge(e);
+                    if edge.src == s_acc && edge.memlet.data == s {
+                        g.edges[e.0].src = sfast_acc;
+                        g.edges[e.0].memlet.data = sfast.clone();
+                    }
+                }
+                if let Some(&ri) = consumer.get(&s) {
+                    rename_inner(g, &region_nodes[ri], &s, &sfast);
+                    region_nodes[ri].extend([issuer, sfast_acc]);
+                }
+                if let Some(&ri) = producer.get(&s) {
+                    region_nodes[ri].push(packer);
+                }
+                g.add_edge(s_acc, packer, pop(&s));
+                g.add_edge(packer, sx1_acc, pop(&sx1));
+                g.add_edge(sx1_acc, sync, pop(&sx1));
+                g.add_edge(sync, sx2_acc, pop(&sx2));
+                g.add_edge(sx2_acc, issuer, pop(&sx2));
+                g.add_edge(issuer, sfast_acc, pop(&sfast));
+                plumbing += 3;
+            }
+        }
+
+        // narrow every stream interior to a pumped domain (both sides
+        // fast: either the same domain, or the producer side of a
+        // fast→fast crossing) — the created `_cdc`/`_fast` plumbing
+        // streams are already at their final widths
+        let names: Vec<String> = g.containers.keys().cloned().collect();
+        for name in names {
+            if name.ends_with("_cdc") || name.ends_with("_fast") {
+                continue;
+            }
+            let (f_src, f_dst) = side_factors(&name);
+            if f_src > 1 && f_dst > 1 {
+                let decl = g.containers.get_mut(&name).unwrap();
+                if decl.kind == ContainerKind::Stream && decl.vtype.lanes % f_src == 0 {
+                    decl.vtype.lanes /= f_src;
+                }
+            }
+        }
+        // narrow the pumped regions' library datapaths
+        for (ri, &m) in anchors.iter().enumerate() {
+            let f = factor_of_region(ri);
+            if f < 2 {
+                continue;
+            }
+            if let Node::Library { op, .. } = g.node_mut(m) {
+                match op {
+                    LibraryOp::SystolicGemm { vec_width, .. }
+                    | LibraryOp::StencilStage { vec_width, .. } => {
+                        if *vec_width % f == 0 {
+                            *vec_width /= f;
+                        }
+                    }
+                    LibraryOp::FloydWarshall { .. } => {}
+                }
+            }
+        }
+
+        let info_regions: Vec<PumpedRegion> = region_nodes
+            .into_iter()
+            .enumerate()
+            .filter(|(ri, _)| factor_of_region(*ri) >= 2)
+            .map(|(ri, nodes)| PumpedRegion { factor: factor_of_region(ri), nodes })
+            .collect();
+        let domains: usize = {
+            let mut d: Vec<usize> = info_regions.iter().map(|r| r.factor).collect();
+            d.sort_unstable();
+            d.dedup();
+            d.len()
+        };
+        g.multipump = Some(MultipumpInfo { mode: self.mode, regions: info_regions });
+
+        Ok(TransformReport {
+            transform: self.name(),
+            summary: format!(
+                "{} fast clock domain(s) over {} pumped region(s); {plumbing} plumbing \
+                 modules injected over {crossings} crossings",
+                domains,
+                fs.iter().flatten().count(),
+            ),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -396,6 +933,7 @@ mod tests {
     use super::*;
     use crate::ir::builder::vecadd_sdfg;
     use crate::ir::validate::validate;
+    use crate::ir::StencilKind;
     use crate::transforms::pass::PassManager;
     use crate::transforms::{StreamingComposition, Vectorize};
 
@@ -405,6 +943,13 @@ mod tests {
         if lanes > 1 {
             pm.run(&mut g, &Vectorize::new("vadd", lanes)).unwrap();
         }
+        pm.run(&mut g, &StreamingComposition::default()).unwrap();
+        g
+    }
+
+    fn streamed_stencil(stages: usize, w: usize) -> Sdfg {
+        let mut g = crate::apps::stencil::build(StencilKind::Jacobi3D, stages, w);
+        let mut pm = PassManager::new();
         pm.run(&mut g, &StreamingComposition::default()).unwrap();
         g
     }
@@ -434,8 +979,9 @@ mod tests {
         validate(&g).unwrap();
         assert!(report.summary.contains("2 clock domains"), "{}", report.summary);
         let mp = g.multipump.as_ref().unwrap();
-        assert_eq!(mp.factor, 2);
+        assert_eq!(mp.max_factor(), 2);
         assert_eq!(mp.mode, PumpMode::Resource);
+        assert!(!mp.is_mixed());
         // per boundary stream: sync+issuer or packer+sync
         let cdc = g.node_ids().filter(|i| g.node(*i).is_cdc()).count();
         assert_eq!(cdc, 6); // 3 streams × 2 modules
@@ -445,6 +991,7 @@ mod tests {
         // compute scope is in the fast domain, readers are not
         let entry = g.find_map_entry("vadd").unwrap();
         assert!(g.in_fast_domain(entry));
+        assert_eq!(g.fast_factor_of(entry), Some(2));
         let rd = g
             .node_ids()
             .find(|i| matches!(g.node(*i), Node::Reader { .. }))
@@ -512,6 +1059,191 @@ mod tests {
         let mut pm = PassManager::new();
         pm.run(&mut g, &MultiPump::resource(4)).unwrap();
         assert_eq!(g.container("x_to_vadd[entry]_fast").unwrap().vtype.lanes, 2);
-        assert_eq!(g.multipump.as_ref().unwrap().factor, 4);
+        assert_eq!(g.multipump.as_ref().unwrap().max_factor(), 4);
+    }
+
+    // ---- mixed per-region assignments -------------------------------
+
+    #[test]
+    fn uniform_per_region_assignment_matches_whole_graph_transform() {
+        // a single-region graph with a full assignment must reproduce
+        // the legacy transformation bit for bit (delegation)
+        let mut a = streamed_vecadd(4);
+        let mut b = streamed_vecadd(4);
+        let mut pm = PassManager::new();
+        pm.run(&mut a, &MultiPump::resource(2)).unwrap();
+        pm.run(&mut b, &MultiPump::mixed(vec![Some(2)], PumpMode::Resource)).unwrap();
+        assert_eq!(
+            crate::ir::printer::to_text(&a),
+            crate::ir::printer::to_text(&b),
+            "uniform assignment diverged from the whole-graph transform"
+        );
+        assert_eq!(
+            a.multipump.as_ref().unwrap().max_factor(),
+            b.multipump.as_ref().unwrap().max_factor()
+        );
+    }
+
+    #[test]
+    fn mixed_assignment_rejects_bad_shapes() {
+        let g = streamed_stencil(4, 8);
+        // wrong length
+        let err = MultiPump::mixed(vec![Some(2); 3], PumpMode::Resource)
+            .can_apply(&g)
+            .unwrap_err();
+        assert!(err.contains("4 streamable regions"), "{err}");
+        // throughput mode
+        let err = MultiPump::mixed(vec![Some(2), Some(4), None, None], PumpMode::Throughput)
+            .can_apply(&g)
+            .unwrap_err();
+        assert!(err.contains("resource mode only"), "{err}");
+        // all None
+        let err = MultiPump::mixed(vec![None; 4], PumpMode::Resource)
+            .can_apply(&g)
+            .unwrap_err();
+        assert!(err.contains("pumps no region"), "{err}");
+        // indivisible width (w=8, factor 3 illegal)
+        let err = MultiPump::mixed(vec![Some(3), None, None, None], PumpMode::Resource)
+            .can_apply(&g)
+            .unwrap_err();
+        assert!(err.contains("not divisible"), "{err}");
+        // width-legal power-of-two pairs share a fast time base
+        MultiPump::mixed(vec![Some(4), Some(8), None, None], PumpMode::Resource)
+            .can_apply(&g)
+            .unwrap();
+    }
+
+    #[test]
+    fn mixed_assignment_rejects_incompatible_time_bases() {
+        // widen everything to 12 lanes so factors 4 and 6 are both
+        // width-legal — but 4 does not divide the assignment's largest
+        // factor 6, so the fast domains cannot share one time base
+        let mut g = streamed_stencil(2, 8);
+        for id in g.node_ids().collect::<Vec<_>>() {
+            if let Node::Library {
+                op: LibraryOp::StencilStage { vec_width, .. },
+                ..
+            } = g.node_mut(id)
+            {
+                *vec_width = 12;
+            }
+        }
+        for name in ["v_in_to_jacobi3d_stage0", "tmp0", "v_out_from_jacobi3d_stage1"] {
+            if let Some(decl) = g.containers.get_mut(name) {
+                decl.vtype.lanes = 12;
+            }
+        }
+        let err = MultiPump::mixed(vec![Some(4), Some(6)], PumpMode::Resource)
+            .can_apply(&g)
+            .unwrap_err();
+        assert!(err.contains("fast time base"), "{err}");
+    }
+
+    #[test]
+    fn mixed_stencil_chain_builds_two_domains() {
+        // 4-stage chain: first two stages at M=4, last two at M=2
+        let mut g = streamed_stencil(4, 8);
+        let mut pm = PassManager::new();
+        let report = pm
+            .run(&mut g, &MultiPump::mixed(vec![Some(4), Some(4), Some(2), Some(2)], PumpMode::Resource))
+            .unwrap()
+            .clone();
+        validate(&g).unwrap();
+        assert!(report.summary.contains("2 fast clock domain(s)"), "{}", report.summary);
+        let mp = g.multipump.as_ref().unwrap();
+        assert!(mp.is_mixed());
+        assert_eq!(mp.max_factor(), 4);
+        // per-stage factors via the IR query
+        let regions = partition_streamable(&g);
+        assert_eq!(
+            regions.iter().map(|r| g.fast_factor_of(r.module)).collect::<Vec<_>>(),
+            vec![Some(4), Some(4), Some(2), Some(2)]
+        );
+        // boundary crossings (in + out) + one interior 4→2 crossing:
+        // 2 + 2 + 3 plumbing modules
+        let cdc = g.node_ids().filter(|i| g.node(*i).is_cdc()).count();
+        assert_eq!(cdc, 7, "expected sync+issuer, packer+sync and packer+sync+issuer");
+        // stream interior to the M=4 domain narrowed to 2 lanes; the
+        // crossing stream tmp1 is owned by its producer (M=4); interior
+        // to the M=2 domain narrowed to 4
+        assert_eq!(g.container("tmp0").unwrap().vtype.lanes, 2);
+        assert_eq!(g.container("tmp1").unwrap().vtype.lanes, 2);
+        assert_eq!(g.container("tmp1_pack_cdc").unwrap().vtype.lanes, 8);
+        assert_eq!(g.container("tmp1_cdc").unwrap().vtype.lanes, 8);
+        assert_eq!(g.container("tmp1_fast").unwrap().vtype.lanes, 4);
+        assert_eq!(g.container("tmp2").unwrap().vtype.lanes, 4);
+        // library datapaths narrowed per region
+        let widths: Vec<usize> = g
+            .node_ids()
+            .filter_map(|id| match g.node(id) {
+                Node::Library { op: LibraryOp::StencilStage { vec_width, .. }, .. } => {
+                    Some(*vec_width)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(widths, vec![2, 2, 4, 4]);
+    }
+
+    #[test]
+    fn for_region_pumps_exactly_one_region() {
+        // pump only stage 1 of a 2-stage chain: stage 0 stays in CL0
+        let mut g = streamed_stencil(2, 8);
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &MultiPump::for_region(1, 2, 2)).unwrap();
+        validate(&g).unwrap();
+        let regions = partition_streamable(&g);
+        assert_eq!(g.fast_factor_of(regions[0].module), None);
+        assert_eq!(g.fast_factor_of(regions[1].module), Some(2));
+        // tmp0 crosses slow → fast: sync + issuer; writer boundary
+        // crosses fast → slow: packer + sync; reader boundary stays slow
+        let cdc = g.node_ids().filter(|i| g.node(*i).is_cdc()).count();
+        assert_eq!(cdc, 4);
+        // stage 0 keeps its full width, stage 1 is narrowed
+        let widths: Vec<usize> = g
+            .node_ids()
+            .filter_map(|id| match g.node(id) {
+                Node::Library { op: LibraryOp::StencilStage { vec_width, .. }, .. } => {
+                    Some(*vec_width)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(widths, vec![8, 4]);
+    }
+
+    #[test]
+    fn mixed_chain_functional_results_match_unpumped() {
+        // multi-pumping must never change results: run the mixed chain
+        // and the original functionally on the same input
+        use crate::codegen::lower::lower;
+        use crate::hw::cost::CostModel;
+        use crate::sim::{run_functional, Hbm};
+        let bindings: [(&str, i64); 4] = [("NX", 8), ("NY", 8), ("NZ", 8), ("NZ_v", 1)];
+        let build = |mixed: bool| {
+            let mut g = crate::apps::stencil::build(StencilKind::Jacobi3D, 3, 8);
+            let mut pm = PassManager::new();
+            pm.run(&mut g, &StreamingComposition::default()).unwrap();
+            if mixed {
+                pm.run(
+                    &mut g,
+                    &MultiPump::mixed(vec![Some(4), Some(2), None], PumpMode::Resource),
+                )
+                .unwrap();
+            }
+            let env = g.bind(&bindings).unwrap();
+            lower(&g, &env, &CostModel::default()).unwrap()
+        };
+        let mut rng = crate::util::Rng::new(11);
+        let input = rng.f32_vec(8 * 8 * 8);
+        let mut hbm = Hbm::new();
+        hbm.load("v_in", input.clone());
+        let plain = run_functional(&build(false), hbm.clone()).unwrap();
+        let mixed = run_functional(&build(true), hbm).unwrap();
+        assert_eq!(
+            plain.hbm.read("v_out"),
+            mixed.hbm.read("v_out"),
+            "mixed multi-pumping changed results"
+        );
     }
 }

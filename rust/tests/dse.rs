@@ -24,6 +24,7 @@ fn vecadd_problem(seed: u64) -> (Vec<SearchBase>, SpaceOptions) {
         pump_modes: vec![PumpMode::Resource],
         max_replicas: 1,
         cl0_requests_mhz: vec![],
+        mixed_factors: false,
     };
     (bases, opts)
 }
@@ -50,8 +51,7 @@ fn dse_best_resource_vecadd_matches_paper_table2() {
         DesignPoint {
             vectorize: Some(("vadd".into(), 8)),
             pump: Some((2, PumpMode::Resource)),
-            replicas: 1,
-            cl0_request_mhz: None,
+            ..DesignPoint::original()
         },
         "chosen {} is not the paper's V=8 DP configuration",
         chosen.label
@@ -161,6 +161,7 @@ fn dse_floyd_warshall_selects_throughput_mode() {
         pump_modes: vec![PumpMode::Resource, PumpMode::Throughput],
         max_replicas: 1,
         cl0_requests_mhz: vec![],
+        mixed_factors: false,
     };
     let out = run_search(
         &Evaluator::new(),
@@ -304,7 +305,14 @@ fn dse_persistent_cache_survives_corruption_as_cold_start() {
     let dir = std::env::temp_dir().join(format!("tvec-dse-corrupt-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join(temporal_vec::dse::cache::FILE_NAME);
-    std::fs::write(&path, "#tvec-dse-cache v1\ngarbage line without tabs\n").unwrap();
+    std::fs::write(
+        &path,
+        format!(
+            "#tvec-dse-cache v{}\ngarbage line without tabs\n",
+            temporal_vec::dse::cache::SCHEMA_VERSION
+        ),
+    )
+    .unwrap();
     let ev = Evaluator::with_cache_dir(&dir);
     assert_eq!(ev.loaded_entries(), 0);
     assert!(ev.cold_reason().is_some(), "corruption must be reported, not ignored");
@@ -320,6 +328,117 @@ fn dse_persistent_cache_survives_corruption_as_cold_start() {
     assert!(repaired.cold_reason().is_none());
     assert!(repaired.loaded_entries() > 0);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The mixed per-region search problem for the stencil chain. `n`
+/// overrides NX (resources and clocks are NX-independent, so the
+/// frontier structure is the same at any scale — small NX keeps the
+/// sweep fast). Resource mode only, single SLR: the Table-2-style
+/// resource study the mixed dimension extends.
+fn stencil_mixed_problem(n: i64) -> (Vec<SearchBase>, SpaceOptions) {
+    let device = Device::u280();
+    let (bases, mut opts) =
+        temporal_vec::coordinator::search_problem("stencil", Some(n), 1, &device).unwrap();
+    opts.mixed_factors = true;
+    opts.pump_modes = vec![PumpMode::Resource];
+    opts.max_replicas = 1;
+    (bases, opts)
+}
+
+#[test]
+fn dse_mixed_assignment_reaches_the_frontier_and_beats_best_uniform_resource() {
+    // The PR's acceptance criterion: with --mixed-factors on the
+    // stencil chain, at least one mixed per-region assignment survives
+    // to the Pareto frontier and strictly undercuts the best uniform
+    // point (the one the resource objective selects) on the resource
+    // axis. The mechanism: at CL0 ≈ 315 MHz a factor-4 domain is capped
+    // by the 650 MHz request ceiling, so uniform R4 sacrifices
+    // throughput; uniform R2 holds throughput but pays double the
+    // compute width everywhere. A 4/2 split keeps part of the chain at
+    // quarter width — cheaper than R2 — while its small factor-4
+    // domain closes timing at the cap, faster than uniform R4.
+    let (bases, opts) = stencil_mixed_problem(1 << 10);
+    let device = Device::u280();
+    let out = run_search(
+        &Evaluator::new(),
+        &bases,
+        &device,
+        &opts,
+        &SearchConfig::exhaustive(Objective::resource()),
+    )
+    .unwrap();
+
+    let mixed_on_frontier: Vec<_> =
+        out.frontier.iter().filter(|e| e.point.regions.is_some()).collect();
+    assert!(
+        !mixed_on_frontier.is_empty(),
+        "no mixed assignment on the frontier: {:?}",
+        out.frontier.iter().map(|e| e.label.clone()).collect::<Vec<_>>()
+    );
+
+    // best uniform point under the resource objective
+    let reference = out.reference.as_ref().unwrap();
+    let uniform: Vec<_> = out
+        .evaluations
+        .iter()
+        .filter(|e| e.point.regions.is_none())
+        .cloned()
+        .collect();
+    let best_uniform = Objective::resource()
+        .select(&uniform, reference)
+        .expect("a uniform point satisfies the objective")
+        .clone();
+    let cheapest_mixed = mixed_on_frontier
+        .iter()
+        .map(|e| e.resource_score)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        cheapest_mixed < best_uniform.resource_score,
+        "mixed frontier points (cheapest score {cheapest_mixed:.3}) do not undercut the \
+         best uniform point {} (score {:.3})",
+        best_uniform.label,
+        best_uniform.resource_score
+    );
+}
+
+#[test]
+fn dse_mixed_frontier_verifies_at_golden_scale() {
+    // acceptance: `dse --verify` over the mixed frontier — rebuild
+    // mixed frontier points at golden (artifact) scale and demand
+    // rate-model vs exact-simulator agreement within the default
+    // tolerance. The search already runs at golden scale here, so the
+    // verified points are exactly the reported ones.
+    use temporal_vec::dse::{verify_frontier, DEFAULT_TOLERANCE};
+    let golden_nx = temporal_vec::apps::stencil::GOLDEN_NX;
+    let (bases, opts) = stencil_mixed_problem(golden_nx);
+    let device = Device::u280();
+    let out = run_search(
+        &Evaluator::new(),
+        &bases,
+        &device,
+        &opts,
+        &SearchConfig::exhaustive(Objective::resource()),
+    )
+    .unwrap();
+    let mixed: Vec<temporal_vec::dse::Evaluation> = out
+        .frontier
+        .iter()
+        .filter(|e| e.point.regions.is_some())
+        .take(3) // bound the exact-sim time; any surviving point qualifies
+        .cloned()
+        .collect();
+    assert!(!mixed.is_empty(), "no mixed frontier point to verify");
+    let rig = temporal_vec::coordinator::golden_rig("stencil", 1).unwrap();
+    let reports = verify_frontier(&mixed, &rig.bases, &rig.inputs, DEFAULT_TOLERANCE).unwrap();
+    assert_eq!(reports.len(), mixed.len());
+    for r in &reports {
+        assert!(r.skipped.is_none(), "{}: unexpected golden-scale skip", r.label);
+        assert!(
+            r.within,
+            "{}: rate {} vs exact {} (ratio {:.3})",
+            r.label, r.rate_cycles, r.exact_cycles, r.ratio
+        );
+    }
 }
 
 #[test]
@@ -339,6 +458,7 @@ fn dse_failure_kinds_are_reported_separately() {
         pump_modes: vec![PumpMode::Resource],
         max_replicas: 1,
         cl0_requests_mhz: vec![],
+        mixed_factors: false,
     };
     let out = run_search(
         &Evaluator::new(),

@@ -81,7 +81,7 @@ fn pumping_factor_three_resource_mode() {
     let mut pm = PassManager::new();
     pm.run(&mut g, &Vectorize::new("vadd", 6)).unwrap();
     pm.run(&mut g, &StreamingComposition::default()).unwrap();
-    pm.run(&mut g, &MultiPump { factor: 3, mode: PumpMode::Resource }).unwrap();
+    pm.run(&mut g, &MultiPump::uniform(3, PumpMode::Resource)).unwrap();
     // fast side = 2 lanes
     let fast = g
         .containers
