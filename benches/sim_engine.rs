@@ -1,0 +1,120 @@
+//! Bench: event-driven exact engine vs the legacy per-cycle stepper.
+//!
+//! The tentpole claim of the engine rebuild — slow-cycles/sec on the
+//! golden-scale designs the `dse --verify` hot path simulates — with
+//! the legacy stepper measured side by side so the speedup is printed,
+//! not assumed. `tvec bench --json` emits the same numbers as the
+//! machine-readable BENCH_sim.json artifact (DESIGN.md §9).
+
+use temporal_vec::coordinator::{compile, BuildSpec};
+use temporal_vec::ir::{PumpMode, StencilKind};
+use temporal_vec::sim::{run_exact, run_exact_reference, Hbm};
+use temporal_vec::util::bench::{bench_throughput, black_box, BenchSuite};
+use temporal_vec::util::Rng;
+use temporal_vec::{apps, sim};
+
+fn main() {
+    let mut suite = BenchSuite::new("sim_engine");
+    suite.start();
+    let mut rng = Rng::new(9);
+
+    // vecadd V8 R2 at golden scale
+    let n = apps::vecadd::GOLDEN_N;
+    let c_va = compile(
+        BuildSpec::new(apps::vecadd::build())
+            .vectorized("vadd", 8)
+            .pumped(2, PumpMode::Resource)
+            .bind("N", n),
+    )
+    .unwrap();
+    let (x, y) = (rng.f32_vec(n as usize), rng.f32_vec(n as usize));
+    let va_hbm = || {
+        let mut h = Hbm::new();
+        h.load("x", x.clone());
+        h.load("y", y.clone());
+        h
+    };
+    let va_cycles =
+        run_exact(&c_va.design, va_hbm(), 100_000_000).unwrap().stats.slow_cycles as f64;
+    suite.add(bench_throughput("event engine, vecadd V8 R2 (slow cyc/s)", 1, 5, va_cycles, || {
+        black_box(run_exact(&c_va.design, va_hbm(), 100_000_000).unwrap().stats.slow_cycles);
+    }));
+    suite.add(bench_throughput("legacy stepper, vecadd V8 R2 (slow cyc/s)", 1, 5, va_cycles, || {
+        black_box(
+            run_exact_reference(&c_va.design, va_hbm(), 100_000_000).unwrap().stats.slow_cycles,
+        );
+    }));
+
+    // the 16-stage jacobi chain R4 at golden scale — the fill/drain
+    // phases are where sleeping blocked processes pay off
+    let w = apps::stencil::paper_vec_width(StencilKind::Jacobi3D);
+    let (nx, ny, nz) =
+        (apps::stencil::GOLDEN_NX, apps::stencil::PAPER_NY, apps::stencil::PAPER_NZ);
+    let c_st = compile(
+        BuildSpec::new(apps::stencil::build(StencilKind::Jacobi3D, 16, w))
+            .pumped(4, PumpMode::Resource)
+            .bind("NX", nx)
+            .bind("NY", ny)
+            .bind("NZ", nz)
+            .bind("NZ_v", nz / w as i64),
+    )
+    .unwrap();
+    let v_in = rng.f32_vec((nx * ny * nz) as usize);
+    let st_hbm = || {
+        let mut h = Hbm::new();
+        h.load("v_in", v_in.clone());
+        h
+    };
+    let st_cycles =
+        run_exact(&c_st.design, st_hbm(), 100_000_000).unwrap().stats.slow_cycles as f64;
+    suite.add(bench_throughput("event engine, stencil S16 R4 (slow cyc/s)", 1, 3, st_cycles, || {
+        black_box(run_exact(&c_st.design, st_hbm(), 100_000_000).unwrap().stats.slow_cycles);
+    }));
+    suite.add(bench_throughput(
+        "legacy stepper, stencil S16 R4 (slow cyc/s)",
+        1,
+        3,
+        st_cycles,
+        || {
+            black_box(
+                run_exact_reference(&c_st.design, st_hbm(), 100_000_000)
+                    .unwrap()
+                    .stats
+                    .slow_cycles,
+            );
+        },
+    ));
+
+    // matmul R2 at golden scale
+    let nm = apps::matmul::GOLDEN_NMK;
+    let mut spec = BuildSpec::new(apps::matmul::build(4)).pumped(2, PumpMode::Resource);
+    for (s, v) in apps::matmul::bindings(nm) {
+        spec = spec.bind(&s, v);
+    }
+    let c_mm = compile(spec).unwrap();
+    let (a, b) = (rng.f32_vec((nm * nm) as usize), rng.f32_vec((nm * nm) as usize));
+    let mm_hbm = || {
+        let mut h = Hbm::new();
+        h.load("A", a.clone());
+        h.load("B", b.clone());
+        h
+    };
+    let mm_cycles =
+        run_exact(&c_mm.design, mm_hbm(), 100_000_000).unwrap().stats.slow_cycles as f64;
+    suite.add(bench_throughput("event engine, matmul R2 (slow cyc/s)", 1, 3, mm_cycles, || {
+        black_box(run_exact(&c_mm.design, mm_hbm(), 100_000_000).unwrap().stats.slow_cycles);
+    }));
+    suite.add(bench_throughput("legacy stepper, matmul R2 (slow cyc/s)", 1, 3, mm_cycles, || {
+        black_box(
+            run_exact_reference(&c_mm.design, mm_hbm(), 100_000_000).unwrap().stats.slow_cycles,
+        );
+    }));
+
+    // rate model for scale: the O(#modules) analytic path the search
+    // ranks on, next to the exact engines it is verified against
+    suite.add(bench_throughput("rate model, stencil S16 R4 (designs/s)", 10, 50, 1.0, || {
+        black_box(sim::rate_model(&c_st.design).slow_cycles);
+    }));
+
+    suite.finish();
+}

@@ -191,7 +191,7 @@ fn main() -> Result<(), String> {
     st_opts.mixed_factors = true;
     st_opts.pump_modes = vec![temporal_vec::ir::PumpMode::Resource];
     st_opts.max_replicas = 1;
-    let regions = temporal_vec::analysis::partition_streamable(&st_bases[0].spec.sdfg);
+    let regions = temporal_vec::analysis::partition_streamable(st_bases[0].spec.sdfg());
     println!("stencil chain: {} streamable regions", regions.len());
     let st_out = run_search(
         &Evaluator::new(),

@@ -110,6 +110,23 @@ fn app_flops(app: &str, n: i64) -> f64 {
     }
 }
 
+/// Default `dse --verify` (and `bench` drift-gate) tolerance per app.
+/// Each app's rate model has its own validated envelope — the engine's
+/// cross-validation tests bound vecadd at ±15 %, FW at ±25 %, GEMM at
+/// ±40 % — so one global ±0.40 was simultaneously too loose for vecadd
+/// (real drift hid under it) and the binding constraint for GEMM. An
+/// explicit CLI `--tolerance` always wins; unknown apps fall back to
+/// the conservative [`crate::dse::DEFAULT_TOLERANCE`].
+pub fn verify_tolerance(app: &str) -> f64 {
+    match app {
+        "vecadd" => 0.20,
+        "matmul" => 0.40,
+        "jacobi" | "diffusion" | "stencil" => 0.40,
+        "fw" | "floyd_warshall" => 0.25,
+        _ => crate::dse::DEFAULT_TOLERANCE,
+    }
+}
+
 /// The search problem `tvec dse` runs for one app: paper-scale bases
 /// (or `n_override`) plus the device-bounded candidate-space options.
 pub fn search_problem(
@@ -400,6 +417,22 @@ mod tests {
         assert_eq!(golden_rig("matmul", 1).unwrap().bases.len(), 3);
         assert!(golden_rig("nonsense", 1).is_err());
         assert!(search_problem("nonsense", None, 1, &device).is_err());
+    }
+
+    #[test]
+    fn per_app_tolerance_tightens_vecadd_and_keeps_gemm_loose() {
+        // the satellite's contract: GEMM's envelope is looser than
+        // vecadd's, every known app has a finite non-negative default,
+        // unknown apps fall back to the global DEFAULT_TOLERANCE
+        assert!(verify_tolerance("vecadd") < verify_tolerance("matmul"));
+        for app in ["vecadd", "matmul", "jacobi", "diffusion", "stencil", "fw", "floyd_warshall"]
+        {
+            let t = verify_tolerance(app);
+            assert!(t.is_finite() && t > 0.0 && t <= 1.0, "{app}: {t}");
+        }
+        assert_eq!(verify_tolerance("unknown"), crate::dse::DEFAULT_TOLERANCE);
+        // the per-app envelopes never exceed the global fallback
+        assert!(verify_tolerance("vecadd") <= crate::dse::DEFAULT_TOLERANCE);
     }
 
     #[test]

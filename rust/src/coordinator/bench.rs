@@ -1,0 +1,379 @@
+//! `tvec bench` — measured throughput of the exact-simulator engines
+//! and the DSE sweep path, with a machine-readable `BENCH_sim.json`
+//! artifact.
+//!
+//! Three golden-scale designs (vecadd V8 R2, matmul R2, the 16-stage
+//! jacobi chain R4) run through both the event-driven [`run_exact`]
+//! and the legacy stepper [`run_exact_reference`]; the report carries
+//! slow-cycles/sec for each plus the speedup, and cross-checks the
+//! analytic rate model against the exact count under each app's
+//! per-app verify tolerance — the CI drift gate (`--smoke` shrinks the
+//! problem sizes for that job). A cold-vs-warm DSE sweep over a
+//! throwaway cache directory rounds out the report. The JSON schema is
+//! documented in DESIGN.md §9.
+
+use std::time::Instant;
+
+use crate::apps;
+use crate::dse::{run_search, Evaluator, Objective, SearchBase, SearchConfig, SpaceOptions};
+use crate::hw::Device;
+use crate::ir::{PumpMode, StencilKind};
+use crate::sim::{
+    exact_engines_agree, rate_model, run_exact, run_exact_reference, Hbm, SimOutcome,
+};
+use crate::util::Rng;
+
+use super::autotune::verify_tolerance;
+use super::pipeline::{compile, BuildSpec};
+
+/// One design's exact-simulator measurement.
+pub struct SimBench {
+    /// App key (matches `verify_tolerance` / `tvec dse --app` names).
+    pub app: String,
+    /// Candidate label, e.g. `V8 R2`.
+    pub config: String,
+    /// Slow cycles one exact run takes (identical across engines —
+    /// the property tests enforce it; asserted again here).
+    pub slow_cycles: u64,
+    /// Best-of-iters wall-clock of the event-driven engine.
+    pub event_secs: f64,
+    /// Best-of-iters wall-clock of the legacy stepper.
+    pub reference_secs: f64,
+    /// Analytic rate-model slow-cycle count for the same design.
+    pub rate_cycles: u64,
+    /// Per-app drift tolerance the gate applies.
+    pub tolerance: f64,
+}
+
+impl SimBench {
+    pub fn event_cycles_per_sec(&self) -> f64 {
+        self.slow_cycles as f64 / self.event_secs.max(1e-12)
+    }
+
+    pub fn reference_cycles_per_sec(&self) -> f64 {
+        self.slow_cycles as f64 / self.reference_secs.max(1e-12)
+    }
+
+    /// Event-engine speedup over the legacy stepper.
+    pub fn speedup(&self) -> f64 {
+        self.reference_secs / self.event_secs.max(1e-12)
+    }
+
+    /// `rate_cycles / exact_cycles` (1.0 = perfect agreement).
+    pub fn drift_ratio(&self) -> f64 {
+        self.rate_cycles as f64 / self.slow_cycles.max(1) as f64
+    }
+
+    pub fn within_tolerance(&self) -> bool {
+        (self.drift_ratio() - 1.0).abs() <= self.tolerance
+    }
+}
+
+/// Cold-vs-warm DSE sweep wall-clock over a throwaway cache directory.
+pub struct DseBench {
+    pub app: String,
+    pub cold_secs: f64,
+    pub warm_secs: f64,
+    pub cold_new_compiles: usize,
+    pub warm_new_compiles: usize,
+}
+
+/// The full `tvec bench` outcome.
+pub struct BenchReport {
+    pub smoke: bool,
+    pub sims: Vec<SimBench>,
+    pub dse: DseBench,
+}
+
+impl BenchReport {
+    /// Render as `BENCH_sim.json` (schema: DESIGN.md §9).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str("  \"schema\": \"tvec-bench-sim v1\",\n");
+        out.push_str(&format!("  \"smoke\": {},\n", self.smoke));
+        out.push_str("  \"sim\": [\n");
+        for (i, s) in self.sims.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"app\": \"{}\", \"config\": \"{}\", \"slow_cycles\": {}, \
+                 \"event_secs\": {:.6}, \"event_cycles_per_sec\": {:.1}, \
+                 \"reference_secs\": {:.6}, \"reference_cycles_per_sec\": {:.1}, \
+                 \"speedup\": {:.3}, \"rate_cycles\": {}, \"drift_ratio\": {:.4}, \
+                 \"tolerance\": {:.2}, \"within_tolerance\": {}}}{}\n",
+                s.app,
+                s.config,
+                s.slow_cycles,
+                s.event_secs,
+                s.event_cycles_per_sec(),
+                s.reference_secs,
+                s.reference_cycles_per_sec(),
+                s.speedup(),
+                s.rate_cycles,
+                s.drift_ratio(),
+                s.tolerance,
+                s.within_tolerance(),
+                if i + 1 < self.sims.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str(&format!(
+            "  \"dse\": {{\"app\": \"{}\", \"cold_secs\": {:.6}, \"warm_secs\": {:.6}, \
+             \"warm_speedup\": {:.3}, \"cold_new_compiles\": {}, \"warm_new_compiles\": {}}}\n",
+            self.dse.app,
+            self.dse.cold_secs,
+            self.dse.warm_secs,
+            self.dse.cold_secs / self.dse.warm_secs.max(1e-12),
+            self.dse.cold_new_compiles,
+            self.dse.warm_new_compiles,
+        ));
+        out.push('}');
+        out.push('\n');
+        out
+    }
+
+    /// Apps whose exact-vs-rate drift exceeds their tolerance (the CI
+    /// gate fails on any).
+    pub fn drift_failures(&self) -> Vec<String> {
+        self.sims
+            .iter()
+            .filter(|s| !s.within_tolerance())
+            .map(|s| {
+                format!(
+                    "{} {}: rate {} vs exact {} (ratio {:.3}, tolerance ±{})",
+                    s.app,
+                    s.config,
+                    s.rate_cycles,
+                    s.slow_cycles,
+                    s.drift_ratio(),
+                    s.tolerance
+                )
+            })
+            .collect()
+    }
+}
+
+/// Best-of-`iters` wall-clock of `f` in seconds.
+fn time_best<F: FnMut()>(iters: u32, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+const SIM_BUDGET: u64 = 100_000_000;
+
+fn bench_design(
+    app: &str,
+    config: &str,
+    spec: BuildSpec,
+    inputs: Vec<(String, Vec<f32>)>,
+    iters: u32,
+    tolerance_override: Option<f64>,
+) -> Result<SimBench, String> {
+    let c = compile(spec)?;
+    let mk_hbm = || {
+        let mut h = Hbm::new();
+        for (name, data) in &inputs {
+            h.load(name, data.clone());
+        }
+        h
+    };
+    // the shared oracle up front: the engines must be cycle-exact
+    // before the timings mean anything (this also serves as warmup)
+    exact_engines_agree(&c.design, mk_hbm(), SIM_BUDGET, &[])
+        .map_err(|e| format!("{app} {config}: engines disagree — benchmark void: {e}"))?;
+    let mut slow_cycles = 0u64;
+    let event_secs = time_best(iters, || {
+        let out: SimOutcome = run_exact(&c.design, mk_hbm(), SIM_BUDGET).expect("checked above");
+        slow_cycles = out.stats.slow_cycles;
+    });
+    let reference_secs = time_best(iters, || {
+        run_exact_reference(&c.design, mk_hbm(), SIM_BUDGET).expect("checked above");
+    });
+    Ok(SimBench {
+        app: app.to_string(),
+        config: config.to_string(),
+        slow_cycles,
+        event_secs,
+        reference_secs,
+        rate_cycles: rate_model(&c.design).slow_cycles,
+        tolerance: tolerance_override.unwrap_or_else(|| verify_tolerance(app)),
+    })
+}
+
+/// Run the full bench suite. `smoke` shrinks problem sizes and
+/// iteration counts to CI scale; `seed` feeds the input generators;
+/// `tolerance_override` (the CLI's `--tolerance`) replaces every
+/// app's default drift envelope when given.
+pub fn run_bench(
+    smoke: bool,
+    seed: u64,
+    tolerance_override: Option<f64>,
+) -> Result<BenchReport, String> {
+    let iters = if smoke { 2 } else { 5 };
+    let mut rng = Rng::new(seed ^ 0xbe9c);
+    let mut sims = Vec::new();
+
+    // vecadd V8 R2 at golden scale
+    {
+        let n = apps::vecadd::GOLDEN_N;
+        let spec = BuildSpec::new(apps::vecadd::build())
+            .vectorized("vadd", 8)
+            .pumped(2, PumpMode::Resource)
+            .bind("N", n)
+            .seeded(seed);
+        let inputs = vec![
+            ("x".to_string(), rng.f32_vec(n as usize)),
+            ("y".to_string(), rng.f32_vec(n as usize)),
+        ];
+        sims.push(bench_design("vecadd", "V8 R2", spec, inputs, iters, tolerance_override)?);
+    }
+
+    // matmul R2 at golden scale (smoke: a quarter-size problem)
+    {
+        let n = if smoke { 64 } else { apps::matmul::GOLDEN_NMK };
+        let mut spec = BuildSpec::new(apps::matmul::build(4))
+            .pumped(2, PumpMode::Resource)
+            .seeded(seed);
+        for (s, v) in apps::matmul::bindings(n) {
+            spec = spec.bind(&s, v);
+        }
+        let inputs = vec![
+            ("A".to_string(), rng.f32_vec((n * n) as usize)),
+            ("B".to_string(), rng.f32_vec((n * n) as usize)),
+        ];
+        sims.push(bench_design("matmul", "R2", spec, inputs, iters, tolerance_override)?);
+    }
+
+    // the 16-stage jacobi chain, R4 — the tentpole's headline design
+    {
+        let stages = 16usize;
+        let w = apps::stencil::paper_vec_width(StencilKind::Jacobi3D);
+        let (nx, ny, nz) = if smoke {
+            (8i64, 16i64, 16i64)
+        } else {
+            (apps::stencil::GOLDEN_NX, apps::stencil::PAPER_NY, apps::stencil::PAPER_NZ)
+        };
+        let spec = BuildSpec::new(apps::stencil::build(StencilKind::Jacobi3D, stages, w))
+            .pumped(4, PumpMode::Resource)
+            .bind("NX", nx)
+            .bind("NY", ny)
+            .bind("NZ", nz)
+            .bind("NZ_v", nz / w as i64)
+            .seeded(seed);
+        let inputs =
+            vec![("v_in".to_string(), rng.f32_vec((nx * ny * nz) as usize))];
+        sims.push(bench_design("stencil", "S16 R4", spec, inputs, iters, tolerance_override)?);
+    }
+
+    // cold vs warm DSE sweep over a throwaway persistent cache
+    let dse = {
+        let dir = std::env::temp_dir().join(format!("tvec-bench-dse-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+        let n = 1i64 << 14;
+        let bases = vec![SearchBase {
+            spec: BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(seed),
+            flops: apps::vecadd::flops(n),
+        }];
+        let device = Device::u280();
+        let opts = SpaceOptions {
+            vector_widths: vec![2, 4, 8],
+            pump_factors: vec![2, 4],
+            pump_modes: vec![PumpMode::Resource],
+            max_replicas: 1,
+            cl0_requests_mhz: vec![],
+            mixed_factors: false,
+        };
+        let cfg = SearchConfig::exhaustive(Objective::resource());
+
+        let cold_ev = Evaluator::with_cache_dir(&dir);
+        let t0 = Instant::now();
+        run_search(&cold_ev, &bases, &device, &opts, &cfg)?;
+        let cold_secs = t0.elapsed().as_secs_f64();
+        let cold_new_compiles = cold_ev.cache_misses();
+        cold_ev.flush()?;
+
+        let warm_ev = Evaluator::with_cache_dir(&dir);
+        let t0 = Instant::now();
+        run_search(&warm_ev, &bases, &device, &opts, &cfg)?;
+        let warm_secs = t0.elapsed().as_secs_f64();
+        let warm_new_compiles = warm_ev.cache_misses();
+        let _ = std::fs::remove_dir_all(&dir);
+        DseBench {
+            app: "vecadd".to_string(),
+            cold_secs,
+            warm_secs,
+            cold_new_compiles,
+            warm_new_compiles,
+        }
+    };
+
+    Ok(BenchReport { smoke, sims, dse })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_bench_report_is_well_formed() {
+        let r = run_bench(true, 1, None).unwrap();
+        assert_eq!(r.sims.len(), 3);
+        assert!(r.sims.iter().any(|s| s.app == "stencil"));
+        for s in &r.sims {
+            assert!(s.slow_cycles > 0, "{}: no cycles simulated", s.app);
+            assert!(s.event_secs > 0.0 && s.reference_secs > 0.0);
+            assert!(s.rate_cycles > 0);
+        }
+        assert_eq!(r.dse.warm_new_compiles, 0, "warm DSE sweep must compile nothing");
+        assert!(r.dse.cold_new_compiles > 0);
+        let json = r.to_json();
+        for key in [
+            "\"schema\": \"tvec-bench-sim v1\"",
+            "\"sim\": [",
+            "\"event_cycles_per_sec\"",
+            "\"speedup\"",
+            "\"drift_ratio\"",
+            "\"dse\": {",
+            "\"warm_new_compiles\": 0",
+        ] {
+            assert!(json.contains(key), "missing {key} in:\n{json}");
+        }
+        // crude structural validity: balanced braces/brackets
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn json_marks_drift_failures() {
+        let row = SimBench {
+            app: "vecadd".into(),
+            config: "V8 R2".into(),
+            slow_cycles: 100,
+            event_secs: 0.001,
+            reference_secs: 0.01,
+            rate_cycles: 200, // 2x drift: outside any sane tolerance
+            tolerance: 0.2,
+        };
+        assert!(!row.within_tolerance());
+        assert!((row.speedup() - 10.0).abs() < 1e-9);
+        let report = BenchReport {
+            smoke: true,
+            sims: vec![row],
+            dse: DseBench {
+                app: "vecadd".into(),
+                cold_secs: 1.0,
+                warm_secs: 0.1,
+                cold_new_compiles: 5,
+                warm_new_compiles: 0,
+            },
+        };
+        let failures = report.drift_failures();
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("vecadd"), "{}", failures[0]);
+        assert!(report.to_json().contains("\"within_tolerance\": false"));
+    }
+}

@@ -5,12 +5,20 @@
 //! This is the L3 entry layer the CLI (`tvec`) and the benches drive.
 
 pub mod autotune;
+pub mod bench;
 pub mod config;
 pub mod experiment;
 pub mod pipeline;
 pub mod report;
 
-pub use autotune::{autotune_all, dse_experiment, golden_rig, search_problem, DseChoice, GoldenRig};
+pub use autotune::{
+    autotune_all, dse_experiment, golden_rig, search_problem, verify_tolerance, DseChoice,
+    GoldenRig,
+};
+pub use bench::{run_bench, BenchReport};
 pub use config::Config;
 pub use experiment::{run_experiment, ExperimentResult};
-pub use pipeline::{compile, compile_staged, BuildSpec, Compiled, Stage, StagedError};
+pub use pipeline::{
+    compile, compile_from_prefix, compile_staged, stage_prefix, BuildSpec, Compiled, Stage,
+    StagedError, StagedPrefix,
+};

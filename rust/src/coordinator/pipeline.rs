@@ -2,17 +2,33 @@
 //!
 //! The single entry point every experiment, example and test drives.
 
+use std::sync::Arc;
+
 use crate::codegen::{estimate, lower, Design, DesignReport};
 use crate::hw::cost::CostModel;
 use crate::hw::{Device, TimingModel};
-use crate::ir::{PumpMode, Sdfg};
+use crate::ir::{printer, PumpMode, Sdfg};
 use crate::symbolic::SymbolTable;
+use crate::transforms::pass::TransformReport;
 use crate::transforms::{MultiPump, PassManager, StreamingComposition, Vectorize};
+use crate::util::{fnv1a, FNV_OFFSET};
 
 /// What to build and how.
+///
+/// The base graph is `Arc`-shared: cloning a spec — which the dse
+/// evaluator does once per candidate, per halving fidelity seed, per
+/// grid generation — bumps a reference count instead of deep-copying
+/// the SDFG. The only full-graph clone left on a candidate's path is
+/// the one the (cached, shared) transform prefix hands to
+/// [`compile_from_prefix`], because transforms mutate in place.
 #[derive(Clone)]
 pub struct BuildSpec {
-    pub sdfg: Sdfg,
+    /// The shared base graph. Crate-visible only: swapping it after
+    /// construction would leave the cached `sdfg_fnv` stale and poison
+    /// every content-hash key (fingerprints, the prefix cache) — build
+    /// a fresh spec via [`BuildSpec::new`]/[`BuildSpec::shared`]
+    /// instead. External callers read it through [`BuildSpec::sdfg`].
+    pub(crate) sdfg: Arc<Sdfg>,
     /// Apply traditional vectorization to a named map first.
     pub vectorize: Option<(String, usize)>,
     /// Apply the streaming composition (required before pumping).
@@ -32,10 +48,22 @@ pub struct BuildSpec {
     pub slr_replicas: usize,
     /// P&R jitter seed.
     pub seed: u64,
+    /// FNV-1a of the printed base graph, computed once at
+    /// construction. Content-hash keys (the dse fingerprint, the
+    /// prefix cache) chain from this instead of re-printing the whole
+    /// SDFG per candidate — printing dominated warm-cache sweeps.
+    sdfg_fnv: u64,
 }
 
 impl BuildSpec {
     pub fn new(sdfg: Sdfg) -> Self {
+        BuildSpec::shared(Arc::new(sdfg))
+    }
+
+    /// Build a spec over an already-shared graph (several bases over
+    /// one SDFG share both the graph and its print hash).
+    pub fn shared(sdfg: Arc<Sdfg>) -> Self {
+        let sdfg_fnv = fnv1a(FNV_OFFSET, printer::to_text(&sdfg).as_bytes());
         BuildSpec {
             sdfg,
             vectorize: None,
@@ -46,7 +74,18 @@ impl BuildSpec {
             cl0_request_mhz: None,
             slr_replicas: 1,
             seed: 1,
+            sdfg_fnv,
         }
+    }
+
+    /// The shared base graph.
+    pub fn sdfg(&self) -> &Sdfg {
+        &self.sdfg
+    }
+
+    /// Content hash of the printed base graph (see the field docs).
+    pub fn sdfg_fnv(&self) -> u64 {
+        self.sdfg_fnv
     }
 
     pub fn vectorized(mut self, map: &str, factor: usize) -> Self {
@@ -120,26 +159,51 @@ impl std::fmt::Display for StagedError {
     }
 }
 
-/// Run the pipeline.
-pub fn compile(spec: BuildSpec) -> Result<Compiled, String> {
-    compile_staged(spec).map_err(|e| e.message)
+/// The transformed-but-unpumped front of the pipeline: the base graph
+/// after vectorization and streaming. Every candidate that agrees on
+/// those two choices lowers from the same prefix — the dse evaluator
+/// caches these behind an `Arc` so a sweep re-runs the (expensive)
+/// vectorize/stream rewrites once per distinct prefix instead of once
+/// per candidate.
+pub struct StagedPrefix {
+    pub sdfg: Sdfg,
+    pub reports: Vec<TransformReport>,
 }
 
-/// Run the pipeline, reporting *which stage* rejected the spec.
-pub fn compile_staged(spec: BuildSpec) -> Result<Compiled, StagedError> {
+/// Run the vectorize + streaming front of the pipeline on a base
+/// graph. Clones the graph once (transforms mutate in place).
+pub fn stage_prefix(
+    sdfg: &Sdfg,
+    vectorize: &Option<(String, usize)>,
+    stream: bool,
+) -> Result<StagedPrefix, StagedError> {
+    let err = |stage: Stage| move |message: String| StagedError { stage, message };
+    let mut g = sdfg.clone();
+    let mut pm = PassManager::new();
+    if let Some((map, factor)) = vectorize {
+        pm.run(&mut g, &Vectorize::new(map, *factor)).map_err(err(Stage::Transform))?;
+    }
+    if stream {
+        pm.run(&mut g, &StreamingComposition::default()).map_err(err(Stage::Transform))?;
+    }
+    Ok(StagedPrefix { sdfg: g, reports: pm.reports })
+}
+
+/// Finish the pipeline from a shared prefix: pump, bind, lower, price.
+/// `compile_staged(spec)` ≡ `compile_from_prefix(&stage_prefix(..), &spec)`
+/// by construction — the two entry points share this body.
+pub fn compile_from_prefix(
+    prefix: &StagedPrefix,
+    spec: &BuildSpec,
+) -> Result<Compiled, StagedError> {
     let err = |stage: Stage| move |message: String| StagedError { stage, message };
     let device = Device::u280();
     let tm = TimingModel::default();
     let cost = CostModel::default();
-    let mut g = spec.sdfg;
+    let mut g = prefix.sdfg.clone();
     let mut pm = PassManager::new();
+    pm.reports = prefix.reports.clone();
 
-    if let Some((map, factor)) = &spec.vectorize {
-        pm.run(&mut g, &Vectorize::new(map, *factor)).map_err(err(Stage::Transform))?;
-    }
-    if spec.stream {
-        pm.run(&mut g, &StreamingComposition::default()).map_err(err(Stage::Transform))?;
-    }
     if let Some(factors) = &spec.pump_regions {
         if spec.pump.is_some() {
             return Err(StagedError {
@@ -173,6 +237,17 @@ pub fn compile_staged(spec: BuildSpec) -> Result<Compiled, StagedError> {
     let report = estimate(&design, &device, &tm, spec.seed);
     let pass_log = pm.reports.iter().map(|r| format!("{}: {}", r.transform, r.summary)).collect();
     Ok(Compiled { sdfg: g, design, report, env, pass_log })
+}
+
+/// Run the pipeline.
+pub fn compile(spec: BuildSpec) -> Result<Compiled, String> {
+    compile_staged(spec).map_err(|e| e.message)
+}
+
+/// Run the pipeline, reporting *which stage* rejected the spec.
+pub fn compile_staged(spec: BuildSpec) -> Result<Compiled, StagedError> {
+    let prefix = stage_prefix(&spec.sdfg, &spec.vectorize, spec.stream)?;
+    compile_from_prefix(&prefix, &spec)
 }
 
 #[cfg(test)]
@@ -269,6 +344,39 @@ mod tests {
         let err = compile_staged(spec).unwrap_err();
         assert_eq!(err.stage, Stage::Transform);
         assert!(err.message.contains("both uniform and per-region"), "{}", err.message);
+    }
+
+    #[test]
+    fn prefix_split_is_equivalent_to_full_compile() {
+        let spec = BuildSpec::new(apps::vecadd::build())
+            .vectorized("vadd", 8)
+            .pumped(2, PumpMode::Resource)
+            .bind("N", 1 << 12);
+        let prefix = stage_prefix(&spec.sdfg, &spec.vectorize, spec.stream).unwrap();
+        let split = compile_from_prefix(&prefix, &spec).unwrap();
+        let whole = compile_staged(spec).unwrap();
+        assert_eq!(
+            crate::ir::printer::to_text(&whole.sdfg),
+            crate::ir::printer::to_text(&split.sdfg),
+            "prefix-split compile produced a different graph"
+        );
+        assert_eq!(whole.pass_log, split.pass_log);
+        assert_eq!(whole.report.resources, split.report.resources);
+        assert_eq!(whole.report.cl0.achieved_mhz, split.report.cl0.achieved_mhz);
+        assert_eq!(whole.report.effective_mhz, split.report.effective_mhz);
+    }
+
+    #[test]
+    fn cloned_specs_share_one_base_graph() {
+        // zero-copy invariant: a spec clone (one per dse candidate)
+        // bumps the Arc instead of deep-copying the SDFG
+        let spec = BuildSpec::new(apps::vecadd::build()).bind("N", 64);
+        let clone = spec.clone();
+        assert!(std::sync::Arc::ptr_eq(&spec.sdfg, &clone.sdfg));
+        assert_eq!(spec.sdfg_fnv(), clone.sdfg_fnv());
+        // content-identical graphs built twice still hash identically
+        let rebuilt = BuildSpec::new(apps::vecadd::build());
+        assert_eq!(spec.sdfg_fnv(), rebuilt.sdfg_fnv());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! — DESIGN.md §6). The first line is a schema-versioned header:
 //!
 //! ```text
-//! #tvec-dse-cache v2
+//! #tvec-dse-cache v3
 //! k=00ab…	st=ok	label=vecadd V8 R2	pr=-	…
 //! k=11cd…	st=ok	label=jacobi Mx[4x2+2x2]	pr=m:4,4,2,2	…
 //! k=17ff…	st=err	kind=legality	msg=trip count 100 …
@@ -39,11 +39,14 @@ use super::evaluate::{EvalError, Evaluation, FailKind};
 use super::space::DesignPoint;
 use crate::codegen::DesignReport;
 
-/// Bump on any change to the record layout: old stores then load cold
-/// instead of misparsing. v2 added the mixed per-region pump
-/// assignment (`pr=`) to ok-records; v1 files cold-start with the
-/// schema-mismatch reason.
-pub const SCHEMA_VERSION: u32 = 2;
+/// Bump on any change to the record layout *or* the fingerprint key
+/// derivation: old stores then load cold instead of misparsing (or
+/// silently never hitting). v2 added the mixed per-region pump
+/// assignment (`pr=`) to ok-records; v3 re-derived fingerprints from
+/// the cached base-graph hash (keys changed, so v2 records could never
+/// hit again — carrying them would only grow the file). Older files
+/// cold-start with the schema-mismatch reason.
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// File name inside a `--cache-dir`.
 pub const FILE_NAME: &str = "dse_cache.tsv";
@@ -404,6 +407,36 @@ pub fn save(
     std::fs::rename(&tmp, path).map_err(|e| format!("rename {}: {e}", path.display()))
 }
 
+/// Raw record count of a store file (non-empty lines minus the
+/// header), independent of whether the records parse — a stale-schema
+/// file still reports its size, which is exactly what compaction is
+/// about to reclaim. 0 for a missing/unreadable file.
+pub fn count_records(path: &Path) -> usize {
+    match std::fs::read_to_string(path) {
+        Ok(text) => text
+            .lines()
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .count(),
+        Err(_) => 0,
+    }
+}
+
+/// Compacting rewrite: replace the store with exactly `entries`,
+/// dropping whatever else the file held — superseded records, and
+/// records whose schema (header *or* fingerprint derivation) no longer
+/// matches and therefore could never hit again. The inverse of the
+/// merging [`save`]-after-[`load`] flush, used by `--cache-compact` so
+/// month-scale stores stop growing append-only. Returns
+/// `(records on disk before, records written)`.
+pub fn compact(
+    path: &Path,
+    entries: &HashMap<u64, Result<Evaluation, EvalError>>,
+) -> Result<(usize, usize), String> {
+    let before = count_records(path);
+    save(path, entries)?;
+    Ok((before, entries.len()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -527,20 +560,64 @@ mod tests {
     }
 
     #[test]
-    fn v1_store_cold_starts_with_printed_reason() {
-        // a pre-mixed-factors (v1) store: no `pr=` field, old header —
-        // must load cold with the schema-mismatch reason, never misparse
-        let path = tmp_path("v1-upgrade");
+    fn old_version_stores_cold_start_with_printed_reason() {
+        // v1 (pre-mixed-factors) and v2 (pre-rekeyed-fingerprint)
+        // stores must load cold with the schema-mismatch reason, never
+        // misparse or silently never-hit
+        for old in ["v1", "v2"] {
+            let path = tmp_path(&format!("{old}-upgrade"));
+            std::fs::write(
+                &path,
+                format!(
+                    "#tvec-dse-cache {old}\nk=00000000000000ab\tst=err\tkind=legality\tmsg=old\n"
+                ),
+            )
+            .unwrap();
+            let loaded = load(&path);
+            assert!(loaded.entries.is_empty(), "{old} entries must not half-load into v3");
+            let reason = loaded.cold_reason.expect("cold start has a reason");
+            assert!(reason.contains("schema mismatch") && reason.contains(old), "{reason}");
+            assert!(reason.contains("v3"), "{reason}");
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn compact_shrinks_a_grown_store() {
+        let path = tmp_path("compact");
+        let entries = sample_entries();
+        save(&path, &entries).unwrap();
+        let full = count_records(&path);
+        assert_eq!(full, entries.len());
+        // keep one entry: the rewrite must shed the rest
+        let keep: HashMap<_, _> =
+            entries.iter().take(1).map(|(k, v)| (*k, v.clone())).collect();
+        let (before, after) = compact(&path, &keep).unwrap();
+        assert_eq!(before, full);
+        assert_eq!(after, 1);
+        assert!(count_records(&path) < full, "compacted file did not shrink");
+        let reloaded = load(&path);
+        assert!(reloaded.cold_reason.is_none());
+        assert_eq!(reloaded.entries.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compact_counts_stale_schema_records_before_dropping_them() {
+        // a cold-started old store still reports its size, and the
+        // compaction drops its dead records wholesale
+        let path = tmp_path("compact-stale");
         std::fs::write(
             &path,
-            "#tvec-dse-cache v1\nk=00000000000000ab\tst=err\tkind=legality\tmsg=old\n",
+            "#tvec-dse-cache v2\nk=0000000000000001\tst=err\tkind=legality\tmsg=a\n\
+             k=0000000000000002\tst=err\tkind=legality\tmsg=b\n",
         )
         .unwrap();
-        let loaded = load(&path);
-        assert!(loaded.entries.is_empty(), "v1 entries must not half-load into v2");
-        let reason = loaded.cold_reason.expect("cold start has a reason");
-        assert!(reason.contains("schema mismatch") && reason.contains("v1"), "{reason}");
-        assert!(reason.contains("v2"), "{reason}");
+        let (before, after) = compact(&path, &HashMap::new()).unwrap();
+        assert_eq!(before, 2);
+        assert_eq!(after, 0);
+        assert_eq!(count_records(&path), 0);
+        assert!(load(&path).cold_reason.is_none(), "compacted store must be current-schema");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -17,16 +17,20 @@
 //! store of [`super::cache`], so repeated *CLI invocations* are
 //! incremental too ([`Evaluator::flush`] persists new entries).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::codegen::DesignReport;
-use crate::coordinator::pipeline::{compile_staged, BuildSpec, Stage};
+use crate::coordinator::pipeline::{
+    compile_from_prefix, compile_staged, stage_prefix, BuildSpec, Compiled, Stage, StagedError,
+    StagedPrefix,
+};
 use crate::hw::ResourceVec;
-use crate::ir::{printer, PumpMode};
+use crate::ir::PumpMode;
 use crate::sim::rate_model;
+use crate::util::{fnv1a, FNV_OFFSET};
 
 use super::cache;
 use super::pareto::resource_score;
@@ -102,15 +106,6 @@ pub struct Evaluation {
     pub fits: bool,
 }
 
-/// FNV-1a over a byte slice, chained.
-fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
-
 fn pump_tag(p: &Option<(usize, PumpMode)>) -> String {
     match p {
         None => "-".into(),
@@ -137,10 +132,14 @@ pub(crate) fn regions_tag(r: &Option<Vec<Option<usize>>>) -> String {
 }
 
 /// Content fingerprint of one (spec, candidate, workload) evaluation.
-/// Hashes the printed SDFG, so two sweeps over structurally identical
-/// graphs share cache entries regardless of how they were built.
+/// Chains from the base's cached print hash ([`BuildSpec::sdfg_fnv`]),
+/// so two sweeps over structurally identical graphs share cache
+/// entries regardless of how they were built — without re-printing the
+/// whole SDFG per candidate, which used to dominate warm-cache sweeps.
+/// (Key derivation changed with this optimization: on-disk cache
+/// schema v3, older stores cold-start.)
 pub fn fingerprint(base: &BuildSpec, point: &DesignPoint, flops: f64) -> u64 {
-    let mut h = fnv1a(0xcbf29ce484222325, printer::to_text(&base.sdfg).as_bytes());
+    let mut h = fnv1a(FNV_OFFSET, &base.sdfg_fnv().to_le_bytes());
     for (s, v) in &base.bindings {
         h = fnv1a(h, s.as_bytes());
         h = fnv1a(h, &v.to_le_bytes());
@@ -171,23 +170,14 @@ pub fn fingerprint(base: &BuildSpec, point: &DesignPoint, flops: f64) -> u64 {
     fnv1a(h, &flops.to_bits().to_le_bytes())
 }
 
-/// Compile and price one candidate; `flops` is the workload size the
-/// throughput axis is derived from.
-pub fn evaluate_point(
-    base: &BuildSpec,
-    point: &DesignPoint,
-    flops: f64,
-) -> Result<Evaluation, EvalError> {
-    let spec = point.apply_to(base);
-    let c = compile_staged(spec).map_err(|e| match e.stage {
-        Stage::Transform | Stage::Bind => EvalError::legality(e.message),
-        Stage::Lower => EvalError::compile(e.message),
-    })?;
+/// Derive the Pareto metrics from a compiled candidate (shared by the
+/// direct and the prefix-cached compile paths, so they cannot diverge).
+fn finish_evaluation(c: Compiled, point: &DesignPoint, flops: f64) -> Evaluation {
     let stats = rate_model(&c.design);
     let time_s = stats.seconds_at(c.report.effective_mhz);
     let replicas = point.replicas.max(1) as f64;
     let gops = flops * replicas / time_s / 1e9;
-    Ok(Evaluation {
+    Evaluation {
         label: format!("{} {}", c.design.name, point.label()),
         point: point.clone(),
         base: 0,
@@ -198,7 +188,42 @@ pub fn evaluate_point(
         resource_score: resource_score(&c.report.util) * replicas,
         fits: c.report.util.max_fraction() <= 1.0,
         report: c.report,
-    })
+    }
+}
+
+fn classify(e: StagedError) -> EvalError {
+    match e.stage {
+        Stage::Transform | Stage::Bind => EvalError::legality(e.message),
+        Stage::Lower => EvalError::compile(e.message),
+    }
+}
+
+/// Compile and price one candidate; `flops` is the workload size the
+/// throughput axis is derived from.
+pub fn evaluate_point(
+    base: &BuildSpec,
+    point: &DesignPoint,
+    flops: f64,
+) -> Result<Evaluation, EvalError> {
+    let spec = point.apply_to(base);
+    let c = compile_staged(spec).map_err(classify)?;
+    Ok(finish_evaluation(c, point, flops))
+}
+
+/// Key of one shared transform prefix: (base graph content hash,
+/// vectorize choice, streaming on). Seed, bindings, pump and replicas
+/// all apply *after* the prefix, so they stay out of the key — a
+/// halving sweep re-pricing under five jitter seeds reuses one prefix.
+type PrefixKey = (u64, Option<(String, usize)>, bool);
+
+/// The memo table plus the keys this run used, under ONE lock so the
+/// warm-cache hot path pays a single acquisition per evaluation.
+#[derive(Default)]
+struct MemoState {
+    entries: HashMap<u64, Result<Evaluation, EvalError>>,
+    /// Keys used this run (hits + new compiles):
+    /// [`Evaluator::flush_compacted`] persists only these.
+    touched: HashSet<u64>,
 }
 
 /// Memoizing, thread-parallel candidate evaluator. Failures are cached
@@ -206,9 +231,17 @@ pub fn evaluate_point(
 /// never recompiled on repeated sweeps. With a cache directory the
 /// memo table is additionally loaded from / flushed to a versioned
 /// on-disk store, making separate processes incremental.
+///
+/// Candidate compilation is zero-copy with respect to the base graph:
+/// specs share the SDFG behind an `Arc`, and the vectorize+stream
+/// transform prefix is computed once per distinct choice and shared
+/// across every candidate (and worker thread) that agrees on it.
 #[derive(Default)]
 pub struct Evaluator {
-    cache: Mutex<HashMap<u64, Result<Evaluation, EvalError>>>,
+    cache: Mutex<MemoState>,
+    /// Shared vectorize+stream prefixes (failures cached too, so a
+    /// broken prefix is not recomputed per candidate).
+    prefixes: Mutex<HashMap<PrefixKey, Arc<Result<StagedPrefix, StagedError>>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
     /// Persistent store path, when created with `with_cache_dir`.
@@ -233,7 +266,7 @@ impl Evaluator {
         let loaded = cache::load(&path);
         let n = loaded.entries.len();
         Evaluator {
-            cache: Mutex::new(loaded.entries),
+            cache: Mutex::new(MemoState { entries: loaded.entries, touched: HashSet::new() }),
             disk_path: Some(path),
             loaded: n,
             cold_reason: loaded.cold_reason,
@@ -274,10 +307,42 @@ impl Evaluator {
             Some(p) => p.clone(),
             None => return Ok(0),
         };
-        let mut merged = self.cache.lock().unwrap().clone();
+        let mut merged = self.cache.lock().unwrap().entries.clone();
         cache::merge(&mut merged, cache::load(&path).entries);
         cache::save(&path, &merged)?;
         Ok(merged.len())
+    }
+
+    /// Compacting flush (`--cache-compact`): an *eviction*, not a
+    /// merge. The store is rewritten with exactly the entries this run
+    /// used — cache hits and new compiles — so records whose
+    /// fingerprint schema no longer matches (an old-version store that
+    /// cold-started) are shed, and so is every valid entry the run did
+    /// not touch: month-scale stores stop growing append-only at the
+    /// price of recompiling anything evicted that a later sweep wants
+    /// again. Compact from a run that exercises what should survive
+    /// (e.g. `--app all`), not a narrow one-app sweep over a shared
+    /// store. Returns `(records on disk before, records written)`; a
+    /// no-op `(0, 0)` without a cache directory.
+    pub fn flush_compacted(&self) -> Result<(usize, usize), String> {
+        let path = match &self.disk_path {
+            Some(p) => p.clone(),
+            None => return Ok((0, 0)),
+        };
+        let state = self.cache.lock().unwrap();
+        let kept: HashMap<u64, Result<Evaluation, EvalError>> = state
+            .entries
+            .iter()
+            .filter(|(k, _)| state.touched.contains(*k))
+            .map(|(k, v)| (*k, v.clone()))
+            .collect();
+        cache::compact(&path, &kept)
+    }
+
+    /// Distinct transform prefixes computed so far (one per
+    /// (graph, vectorize, stream) choice — *not* one per candidate).
+    pub fn prefix_entries(&self) -> usize {
+        self.prefixes.lock().unwrap().len()
     }
 
     /// Is this exact (spec, candidate, workload) content already in the
@@ -285,11 +350,11 @@ impl Evaluator {
     /// compiles* only — cache hits are free.
     pub fn contains(&self, base: &BuildSpec, point: &DesignPoint, flops: f64) -> bool {
         let key = fingerprint(base, point, flops);
-        self.cache.lock().unwrap().contains_key(&key)
+        self.cache.lock().unwrap().entries.contains_key(&key)
     }
 
     /// Evaluate one candidate, hitting the cache when the same content
-    /// was evaluated before.
+    /// was evaluated before. One lock acquisition on the hit path.
     pub fn evaluate(
         &self,
         base: &BuildSpec,
@@ -297,14 +362,60 @@ impl Evaluator {
         flops: f64,
     ) -> Result<Evaluation, EvalError> {
         let key = fingerprint(base, point, flops);
-        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return hit.clone();
+        {
+            let mut state = self.cache.lock().unwrap();
+            if let Some(hit) = state.entries.get(&key) {
+                let hit = hit.clone();
+                state.touched.insert(key);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return hit;
+            }
         }
-        let ev = evaluate_point(base, point, flops);
+        let ev = self.evaluate_uncached(base, point, flops);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.cache.lock().unwrap().insert(key, ev.clone());
+        let mut state = self.cache.lock().unwrap();
+        state.touched.insert(key);
+        state.entries.insert(key, ev.clone());
         ev
+    }
+
+    /// The miss path: compile through a shared transform prefix.
+    /// Identical to [`evaluate_point`] by construction —
+    /// `compile_staged` is `stage_prefix` + `compile_from_prefix` —
+    /// but the prefix is computed once per (graph, vectorize, stream)
+    /// choice and shared across candidates and worker threads.
+    fn evaluate_uncached(
+        &self,
+        base: &BuildSpec,
+        point: &DesignPoint,
+        flops: f64,
+    ) -> Result<Evaluation, EvalError> {
+        let spec = point.apply_to(base);
+        let key: PrefixKey = (spec.sdfg_fnv(), spec.vectorize.clone(), spec.stream);
+        let prefix = {
+            let cached = self.prefixes.lock().unwrap().get(&key).cloned();
+            match cached {
+                Some(p) => p,
+                None => {
+                    // computed outside the lock: two racing workers may
+                    // both build it (deterministic, so identical); the
+                    // first insert wins
+                    let built =
+                        Arc::new(stage_prefix(&spec.sdfg, &spec.vectorize, spec.stream));
+                    self.prefixes
+                        .lock()
+                        .unwrap()
+                        .entry(key)
+                        .or_insert_with(|| built.clone())
+                        .clone()
+                }
+            }
+        };
+        let c = match prefix.as_ref() {
+            Err(e) => return Err(classify(e.clone())),
+            Ok(p) => compile_from_prefix(p, &spec).map_err(classify)?,
+        };
+        Ok(finish_evaluation(c, point, flops))
     }
 
     /// Evaluate a batch of candidates across OS threads. Results come
@@ -471,6 +582,55 @@ mod tests {
         assert!(drift < 0.2, "time drift {drift}");
         assert!(dp.resource_score < o.resource_score, "pumping must lower the resource axis");
         assert!(dp.fits && o.fits);
+    }
+
+    #[test]
+    fn apply_to_shares_the_base_graph() {
+        // zero-copy: instantiating a candidate over a base must not
+        // deep-clone the SDFG — warm-cache candidates therefore clone
+        // zero graph bytes end to end
+        let base = vecadd_base();
+        let spec = dp_point().apply_to(&base);
+        assert!(std::sync::Arc::ptr_eq(&base.sdfg, &spec.sdfg));
+        assert_eq!(base.sdfg_fnv(), spec.sdfg_fnv());
+    }
+
+    #[test]
+    fn prefix_cache_is_per_vectorize_choice_not_per_candidate() {
+        let ev = Evaluator::new();
+        let base = vecadd_base();
+        let flops = apps::vecadd::flops(1 << 14);
+        // 6 candidates over 2 distinct vectorize choices
+        let points: Vec<DesignPoint> = [
+            (4usize, None),
+            (4, Some((2, crate::ir::PumpMode::Resource))),
+            (4, Some((4, crate::ir::PumpMode::Resource))),
+            (8, None),
+            (8, Some((2, crate::ir::PumpMode::Resource))),
+            (8, Some((4, crate::ir::PumpMode::Resource))),
+        ]
+        .iter()
+        .map(|(w, pump)| DesignPoint {
+            vectorize: Some(("vadd".into(), *w)),
+            pump: *pump,
+            ..DesignPoint::original()
+        })
+        .collect();
+        for r in ev.evaluate_all(&base, &points, flops) {
+            r.unwrap();
+        }
+        assert_eq!(
+            ev.prefix_entries(),
+            2,
+            "expected one shared prefix per vectorize choice"
+        );
+        // and the prefix-cached path matches the direct compile exactly
+        let direct = evaluate_point(&base, &points[1], flops).unwrap();
+        let cached = ev.evaluate(&base, &points[1], flops).unwrap();
+        assert_eq!(direct.report.cl0.achieved_mhz, cached.report.cl0.achieved_mhz);
+        assert_eq!(direct.slow_cycles, cached.slow_cycles);
+        assert_eq!(direct.gops, cached.gops);
+        assert_eq!(direct.resource_score, cached.resource_score);
     }
 
     #[test]

@@ -24,23 +24,36 @@ fn main() {
         .subcommand("compile", "compile a DSL program and print reports")
         .subcommand("run", "simulate an app and check against the golden model")
         .subcommand("dse", "autotune an app over the design space")
+        .subcommand("bench", "measure simulator/DSE throughput (BENCH_sim.json)")
         .subcommand("report", "print the device model (Table 1)")
         .opt_default("seed", "P&R jitter seed", "1")
         .opt("config", "experiment config file (see configs/)")
         .opt("pump", "pumping factor for compile/run (e.g. 2)")
         .opt_default("mode", "pump mode: resource|throughput", "resource")
         .opt("n", "problem size override")
-        .opt("app", "dse: application (vecadd|matmul|jacobi|diffusion|fw|all)")
+        .opt(
+            "app",
+            "dse: application (vecadd|matmul|jacobi|diffusion|stencil|fw|all)",
+        )
         .opt_default("objective", "dse: resource|throughput", "resource")
         .opt_default("strategy", "dse: exhaustive|greedy|anneal|halving", "exhaustive")
         .opt("budget", "dse: max new compiles (early cutoff; cache hits are free)")
         .opt("cache-dir", "dse: directory for the persistent evaluation cache")
-        .opt_default("tolerance", "dse --verify: rate-vs-exact relative tolerance", "0.4")
+        .opt(
+            "tolerance",
+            "dse --verify / bench: rate-vs-exact tolerance (default: per app)",
+        )
         .flag("verify", "dse: exact-sim-check every frontier point at golden scale")
         .flag(
             "mixed-factors",
             "dse: search mixed per-region pump assignments (resource mode)",
         )
+        .flag(
+            "cache-compact",
+            "dse: evicting flush — keep ONLY the entries this run used",
+        )
+        .flag("json", "bench: write the BENCH_sim.json artifact")
+        .flag("smoke", "bench: CI-scale problem sizes and iteration counts")
         .flag("emit", "write generated HLS/RTL text files to ./generated")
         .flag("verbose", "print pass logs");
     let args = cli.parse_env();
@@ -62,6 +75,7 @@ fn main() {
         Some("compile") => cmd_compile(&args, seed),
         Some("run") => cmd_run(&args, seed),
         Some("dse") => cmd_dse(&args, seed),
+        Some("bench") => cmd_bench(&args, seed),
         Some("report") => {
             println!("{}", temporal_vec::coordinator::experiment::table1().rendered);
             Ok(())
@@ -281,9 +295,12 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
     // --tolerance: a NaN parses fine but fails every |ratio − 1| ≤ tol
     // comparison (and a negative one fails all, a huge one passes all)
     // without any hint of the bad flag — demand a finite non-negative
-    // value up front
-    let tol_raw = args.get_or("tolerance", "0.4");
-    let tolerance = parse_tolerance(tol_raw)?;
+    // value up front. Left unset, each app verifies under its own
+    // default envelope (coordinator::verify_tolerance).
+    let cli_tolerance = match args.get("tolerance") {
+        Some(raw) => Some(parse_tolerance(raw)?),
+        None => None,
+    };
     let device = Device::u280();
     let names: Vec<&str> = match app.as_str() {
         "all" => vec!["vecadd", "matmul", "jacobi", "diffusion", "fw"],
@@ -319,7 +336,7 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
             &evaluator,
             args.flag("verify"),
             args.flag("mixed-factors"),
-            tolerance,
+            cli_tolerance,
             &mut verify_failures,
         );
         if let Err(e) = step {
@@ -329,10 +346,29 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
     }
 
     let mut flush_err: Option<String> = None;
+    if args.flag("cache-compact") && args.get("cache-dir").is_none() {
+        eprintln!("warning: --cache-compact does nothing without --cache-dir");
+    }
     if args.get("cache-dir").is_some() {
-        match evaluator.flush() {
-            Ok(flushed) => println!("cache: flushed {flushed} entries"),
-            Err(e) => flush_err = Some(e),
+        // compaction keeps only the entries this run touched — after a
+        // fatal mid-run abort that set would be an arbitrary prefix of
+        // the sweep, so an aborted run falls back to the merging flush
+        // rather than truncating months of untouched records
+        if args.flag("cache-compact") && fatal.is_none() {
+            match evaluator.flush_compacted() {
+                Ok((before, after)) => {
+                    println!("cache: compacted {before} → {after} entries")
+                }
+                Err(e) => flush_err = Some(e),
+            }
+        } else {
+            if args.flag("cache-compact") && fatal.is_some() {
+                eprintln!("warning: run failed — merging flush instead of compaction");
+            }
+            match evaluator.flush() {
+                Ok(flushed) => println!("cache: flushed {flushed} entries"),
+                Err(e) => flush_err = Some(e),
+            }
         }
     }
     if let Some(e) = fatal {
@@ -347,10 +383,64 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
     }
     if !verify_failures.is_empty() {
         return Err(format!(
-            "rate model disagrees with the exact simulator beyond ±{tolerance} on {} \
+            "rate model disagrees with the exact simulator beyond tolerance on {} \
              frontier point(s):\n  {}",
             verify_failures.len(),
             verify_failures.join("\n  ")
+        ));
+    }
+    Ok(())
+}
+
+/// `tvec bench`: measure both exact-simulator engines and the DSE
+/// sweep path; `--json` writes the BENCH_sim.json artifact and the
+/// command fails when exact-vs-rate drift exceeds an app's tolerance
+/// (the CI drift gate).
+fn cmd_bench(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), String> {
+    let smoke = args.flag("smoke");
+    // an explicit --tolerance overrides every app's drift envelope,
+    // mirroring dse --verify
+    let tolerance_override = match args.get("tolerance") {
+        Some(raw) => Some(parse_tolerance(raw)?),
+        None => None,
+    };
+    let report = temporal_vec::coordinator::run_bench(smoke, seed, tolerance_override)?;
+    println!(
+        "== tvec bench ({}) ==",
+        if smoke { "smoke scale" } else { "golden scale" }
+    );
+    for s in &report.sims {
+        println!(
+            "  {:<8} {:<8} {:>9} slow cycles   event {:>12.1} cyc/s   legacy {:>12.1} cyc/s   \
+             speedup {:>6.2}x   drift {:>6.3} (±{})",
+            s.app,
+            s.config,
+            s.slow_cycles,
+            s.event_cycles_per_sec(),
+            s.reference_cycles_per_sec(),
+            s.speedup(),
+            s.drift_ratio(),
+            s.tolerance
+        );
+    }
+    println!(
+        "  dse {:<12} cold {:.3}s ({} compiles)   warm {:.3}s ({} compiles)",
+        report.dse.app,
+        report.dse.cold_secs,
+        report.dse.cold_new_compiles,
+        report.dse.warm_secs,
+        report.dse.warm_new_compiles
+    );
+    if args.flag("json") {
+        std::fs::write("BENCH_sim.json", report.to_json())
+            .map_err(|e| format!("write BENCH_sim.json: {e}"))?;
+        println!("wrote BENCH_sim.json");
+    }
+    let failures = report.drift_failures();
+    if !failures.is_empty() {
+        return Err(format!(
+            "exact-sim vs rate-model drift beyond per-app tolerance:\n  {}",
+            failures.join("\n  ")
         ));
     }
     Ok(())
@@ -383,11 +473,15 @@ fn run_dse_app(
     evaluator: &temporal_vec::dse::Evaluator,
     verify: bool,
     mixed_factors: bool,
-    tolerance: f64,
+    cli_tolerance: Option<f64>,
     verify_failures: &mut Vec<String>,
 ) -> Result<(), String> {
     use temporal_vec::dse::{run_search, verify_frontier};
     use temporal_vec::util::table::{fnum, pct, Table};
+
+    // per-app default envelope; an explicit --tolerance always wins
+    let tolerance =
+        cli_tolerance.unwrap_or_else(|| temporal_vec::coordinator::verify_tolerance(name));
 
     // per-app bases: the matmul PE sweep supplies several — built by
     // the same constructor the --verify golden rig uses, so frontier
@@ -398,7 +492,7 @@ fn run_dse_app(
     // one partition per app: every base of an app shares the SDFG
     // structure, so region count and order are identical across them
     let regions = mixed_factors
-        .then(|| temporal_vec::analysis::partition_streamable(&bases[0].spec.sdfg));
+        .then(|| temporal_vec::analysis::partition_streamable(bases[0].spec.sdfg()));
     if let Some(regions) = &regions {
         println!(
             "mixed factors: {} streamable region(s) in '{name}'{}",
@@ -506,7 +600,7 @@ fn run_dse_app(
         );
         for r in temporal_vec::dse::verify::failures(&reports) {
             verify_failures.push(format!(
-                "{}: rate {} vs exact {} (ratio {:.3})",
+                "{}: rate {} vs exact {} (ratio {:.3}, tolerance ±{tolerance})",
                 r.label, r.rate_cycles, r.exact_cycles, r.ratio
             ));
         }

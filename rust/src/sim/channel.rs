@@ -73,6 +73,16 @@ impl Fifo {
         self.q.push_back(t);
         self.pushed += 1;
     }
+
+    /// Monotone activity counter: bumps on every push *and* every pop.
+    /// The event-driven engine snapshots this around a process tick to
+    /// decide which blocked endpoints to wake — a change means the
+    /// fifo's occupancy moved, so a consumer may now have data or a
+    /// producer may now have space. (A process never has the same fifo
+    /// as both input and output, so a push and a pop can't cancel.)
+    pub fn activity(&self) -> u64 {
+        self.pushed + self.popped
+    }
 }
 
 /// The pool of channels of a running design, indexed by id; modules
@@ -111,6 +121,7 @@ mod tests {
         assert_eq!(&*f.pop().unwrap(), &[1.0, 2.0]);
         assert_eq!(f.pushed, 2);
         assert_eq!(f.popped, 1);
+        assert_eq!(f.activity(), 3);
     }
 
     #[test]

@@ -32,6 +32,21 @@ fn build_procs(design: &Design, ch: &Channels) -> Vec<Proc> {
         .collect()
 }
 
+/// The stepper-verbatim deadlock report (cycle number is the legacy
+/// post-increment `fast_t`, i.e. the triggering cycle + 1). One
+/// definition for both of the event engine's detection paths, so the
+/// byte-identical-message contract with [`run_exact_reference`] cannot
+/// drift per call site.
+fn deadlock_report(design: &Design, procs: &[Proc], ch: &Channels, t0: u64) -> String {
+    let stuck: Vec<&str> =
+        procs.iter().filter(|p| !p.done(ch)).map(|p| p.label.as_str()).collect();
+    format!(
+        "deadlock in '{}' at fast cycle {}: stuck modules {stuck:?}",
+        design.name,
+        t0 + 1
+    )
+}
+
 /// The fast time base: the largest clock ratio in the design. Mixed
 /// per-region designs carry several fast domains; every factor divides
 /// this one (enforced by `MultiPump::can_apply`), so a domain at
@@ -107,9 +122,302 @@ pub fn run_functional(design: &Design, mut hbm: Hbm) -> Result<SimOutcome, Strin
     })
 }
 
-/// Exact cycle-stepped execution with bounded FIFOs and backpressure.
-/// Intended for small instances (tests validating the rate model).
+/// Exact cycle-accurate execution with bounded FIFOs and backpressure,
+/// on the event-driven scheduler: processes sleep when blocked and are
+/// woken by the channel push/pop that unblocks them, each clock domain
+/// ticks at its own stride, and quiescent stretches are skipped to the
+/// next wake time instead of being polled cycle by cycle. Cycle
+/// semantics, stall/busy accounting and error messages are identical
+/// to the legacy stepper ([`run_exact_reference`]) — asserted by the
+/// property tests in `rust/tests/properties.rs`.
 pub fn run_exact(design: &Design, mut hbm: Hbm, max_cycles: u64) -> Result<SimOutcome, String> {
+    for (name, elems, _) in &design.arrays {
+        hbm.alloc(name, *elems);
+    }
+    let factor = fast_time_base(design);
+    // the legacy stepper errors once its (post-increment) fast_t
+    // exceeds this, idle cycles included
+    let budget = max_cycles.saturating_mul(factor);
+    let exceeded = || {
+        format!("exact simulation of '{}' exceeded {max_cycles} slow cycles", design.name)
+    };
+    let mut ch = build_channels(design);
+    let mut procs = build_procs(design, &ch);
+    let n = procs.len();
+
+    // per-process tick stride in fast cycles (the legacy `ticks_now`
+    // modulo, precomputed)
+    let stride: Vec<u64> = procs
+        .iter()
+        .map(|p| match p.domain {
+            ClockDomain::Slow => factor,
+            ClockDomain::Fast { factor: f } => (factor / (f as u64)).max(1),
+        })
+        .collect();
+    // wake subscriptions per fifo: consumers wake on a push, producers
+    // on a pop. Spurious wakes are harmless — a woken process executes
+    // a tick the legacy stepper also executed — only *missed* wakes
+    // would diverge, so a changed fifo wakes both sides.
+    let mut push_subs: Vec<Vec<usize>> = vec![Vec::new(); ch.fifos.len()];
+    let mut pop_subs: Vec<Vec<usize>> = vec![Vec::new(); ch.fifos.len()];
+    let own_ch: Vec<Vec<usize>> = procs
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let ins = p.input_channels();
+            let outs = p.output_channels();
+            for &c in &ins {
+                push_subs[c].push(i);
+            }
+            for &c in &outs {
+                pop_subs[c].push(i);
+            }
+            ins.into_iter().chain(outs).collect()
+        })
+        .collect();
+    let max_own = own_ch.iter().map(|c| c.len()).max().unwrap_or(0);
+    let mut scratch: Vec<u64> = vec![0; max_own];
+
+    /// Asleep with no armed wake.
+    const IDLE: u64 = u64::MAX;
+    /// First scheduled cycle of stride `s` at or after `t`.
+    fn align(t: u64, s: u64) -> u64 {
+        let r = t % s;
+        if r == 0 {
+            t
+        } else {
+            t + (s - r)
+        }
+    }
+    /// Arm a sleeping process `j` after an event at cycle `t` fired by
+    /// process `cur`: same cycle if `j` is scheduled now and comes
+    /// after `cur` in module order (the legacy stepper would tick it
+    /// later this very cycle), else its next scheduled cycle.
+    fn wake_proc(
+        j: usize,
+        t: u64,
+        cur: usize,
+        stride: &[u64],
+        awake: &[bool],
+        next_tick: &mut [u64],
+    ) {
+        if awake[j] {
+            return; // ticking every scheduled cycle already
+        }
+        let s = stride[j];
+        let at = if j > cur && t % s == 0 { t } else { (t / s + 1) * s };
+        if at < next_tick[j] {
+            next_tick[j] = at;
+        }
+    }
+
+    // scheduling state
+    let mut awake: Vec<bool> = vec![true; n];
+    let mut next_tick: Vec<u64> = vec![0; n];
+    let mut sleep_at: Vec<u64> = vec![0; n];
+    let mut sleep_done: Vec<bool> = vec![false; n];
+
+    let mut fast_t: u64 = 0; // the legacy stepper's fast_t at rep boundaries
+    for rep in 0..design.repeat {
+        if rep > 0 {
+            for p in procs.iter_mut() {
+                p.reset_for_repeat();
+            }
+        }
+        for i in 0..n {
+            awake[i] = true;
+            next_tick[i] = align(fast_t, stride[i]);
+        }
+        // the cycle at which the legacy idle streak would exceed
+        // 8·factor this rep (its fast_t error message quotes t0 + 1)
+        let mut deadlock_t0 = fast_t + 8 * factor;
+        // first cycle the legacy stepper would test quiescence at
+        let mut break_t0 = fast_t;
+
+        let final_t0: u64; // the rep's last legacy cycle (break cycle)
+        loop {
+            let t = next_tick.iter().copied().min().unwrap_or(IDLE);
+            if t > break_t0 {
+                // a gap: the legacy stepper had an idle cycle at
+                // break_t0. State is static across the gap (nothing
+                // ticks), so the quiescence predicate — computed here
+                // lazily, never on busy cycles — decides termination,
+                // then the stepper's budget/deadlock countdowns apply.
+                let quiet = procs.iter().all(|p| p.done(&ch)) && ch.all_empty();
+                if quiet {
+                    if break_t0 + 1 > budget {
+                        return Err(exceeded());
+                    }
+                    final_t0 = break_t0;
+                    break;
+                }
+                let gap = deadlock_t0.min(budget);
+                if t > gap {
+                    if budget <= deadlock_t0 {
+                        return Err(exceeded());
+                    }
+                    return Err(deadlock_report(design, &procs, &ch, deadlock_t0));
+                }
+            }
+
+            // execute cycle t in module order; wakes fired during the
+            // cycle can only add later-indexed processes at t itself
+            let mut progress = false;
+            for i in 0..n {
+                if next_tick[i] != t {
+                    continue;
+                }
+                if !awake[i] && !sleep_done[i] {
+                    // the legacy stepper stalled this process at every
+                    // scheduled cycle we skipped while it slept
+                    procs[i].stalls += ((t - sleep_at[i]) / stride[i]).saturating_sub(1);
+                }
+                let chans = &own_ch[i];
+                for (k, &c) in chans.iter().enumerate() {
+                    scratch[k] = ch.fifos[c].activity();
+                }
+                let prog = procs[i].tick(t, &mut ch, &mut hbm);
+                if prog {
+                    progress = true;
+                    awake[i] = true;
+                    next_tick[i] = t + stride[i];
+                } else {
+                    awake[i] = false;
+                    sleep_at[i] = t;
+                    sleep_done[i] = procs[i].done(&ch);
+                    next_tick[i] = match procs[i].next_retire_time() {
+                        // a future retirement needs a timed wake; one
+                        // already due is waiting on output space and
+                        // the pop subscription covers it
+                        Some(ready) if ready > t => align(ready, stride[i]),
+                        _ => IDLE,
+                    };
+                }
+                for (k, &c) in chans.iter().enumerate() {
+                    if ch.fifos[c].activity() != scratch[k] {
+                        for &j in push_subs[c].iter().chain(pop_subs[c].iter()) {
+                            wake_proc(j, t, i, &stride, &awake, &mut next_tick);
+                        }
+                    }
+                }
+            }
+
+            // post-cycle checks, in the legacy stepper's order: cycle
+            // budget first, then termination, then the idle streak.
+            // The quiescence predicate is only computed on no-progress
+            // cycles — exactly when the stepper computed it — so busy
+            // steady-state cycles pay no O(modules + fifos) scan.
+            if t + 1 > budget {
+                return Err(exceeded());
+            }
+            if !progress {
+                let quiet = procs.iter().all(|p| p.done(&ch)) && ch.all_empty();
+                if quiet {
+                    final_t0 = t;
+                    break;
+                }
+                if t >= deadlock_t0 {
+                    return Err(deadlock_report(design, &procs, &ch, t));
+                }
+            } else {
+                deadlock_t0 = t + 8 * factor + 1;
+                break_t0 = t + 1;
+            }
+        }
+
+        // the legacy stepper ticked every scheduled sleeping process
+        // through the rep's break cycle — settle their stall counters
+        for i in 0..n {
+            if !awake[i] && !sleep_done[i] {
+                procs[i].stalls += final_t0 / stride[i] - sleep_at[i] / stride[i];
+            }
+        }
+        fast_t = final_t0 + 1;
+    }
+
+    let slow_cycles = fast_t / factor;
+    let bottleneck = procs
+        .iter()
+        .max_by_key(|p| p.busy)
+        .map(|p| p.label.clone())
+        .unwrap_or_default();
+    let modules = procs.iter().map(|p| (p.label.clone(), p.busy, p.stalls)).collect();
+    let transactions = ch.fifos.iter().map(|f| f.pushed).sum();
+    Ok(SimOutcome {
+        stats: SimStats {
+            slow_cycles,
+            fast_cycles: fast_t,
+            bottleneck,
+            modules,
+            transactions,
+        },
+        hbm,
+    })
+}
+
+/// Run both exact engines on one design + input and demand full
+/// equivalence: slow/fast cycle counts, transactions, bottleneck,
+/// per-module busy/stall counters, and every named output container.
+/// The single definition of the cycle-exactness oracle — the property
+/// tests, integration tests and `tvec bench` all call this, so the
+/// contract cannot drift per call site.
+pub fn exact_engines_agree(
+    design: &Design,
+    hbm: Hbm,
+    max_cycles: u64,
+    outputs: &[&str],
+) -> Result<(), String> {
+    let e = run_exact(design, hbm.clone(), max_cycles).map_err(|err| format!("event: {err}"))?;
+    let r = run_exact_reference(design, hbm, max_cycles)
+        .map_err(|err| format!("reference: {err}"))?;
+    if e.stats.slow_cycles != r.stats.slow_cycles {
+        return Err(format!(
+            "slow cycles: event {} vs reference {}",
+            e.stats.slow_cycles, r.stats.slow_cycles
+        ));
+    }
+    if e.stats.fast_cycles != r.stats.fast_cycles {
+        return Err(format!(
+            "fast cycles: event {} vs reference {}",
+            e.stats.fast_cycles, r.stats.fast_cycles
+        ));
+    }
+    if e.stats.transactions != r.stats.transactions {
+        return Err(format!(
+            "transactions: event {} vs reference {}",
+            e.stats.transactions, r.stats.transactions
+        ));
+    }
+    if e.stats.bottleneck != r.stats.bottleneck {
+        return Err(format!(
+            "bottleneck: event '{}' vs reference '{}'",
+            e.stats.bottleneck, r.stats.bottleneck
+        ));
+    }
+    if e.stats.modules != r.stats.modules {
+        return Err(format!(
+            "per-module busy/stall counters diverged:\n  event     {:?}\n  reference {:?}",
+            e.stats.modules, r.stats.modules
+        ));
+    }
+    for out in outputs {
+        if e.hbm.read(out) != r.hbm.read(out) {
+            return Err(format!("output '{out}' differs between engines"));
+        }
+    }
+    Ok(())
+}
+
+/// The legacy cycle-stepped stepper: polls every module on every fast
+/// cycle. Kept verbatim as the oracle the event-driven [`run_exact`]
+/// is property-tested against (and the baseline `benches/sim_engine.rs`
+/// and `tvec bench` measure the speedup over). Prefer [`run_exact`]
+/// everywhere else.
+pub fn run_exact_reference(
+    design: &Design,
+    mut hbm: Hbm,
+    max_cycles: u64,
+) -> Result<SimOutcome, String> {
     for (name, elems, _) in &design.arrays {
         hbm.alloc(name, *elems);
     }
@@ -389,5 +697,42 @@ mod tests {
         }
         let err = run_exact(&d, input_hbm(64, 7), 100_000).unwrap_err();
         assert!(err.contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn event_engine_matches_reference_on_vecadd() {
+        for (lanes, pump) in [(1usize, false), (4, false), (4, true), (8, true)] {
+            let n = 512usize;
+            let d = vecadd_design(n as i64, lanes, pump);
+            exact_engines_agree(&d, input_hbm(n, 40 + lanes as u64), 10_000_000, &["z"])
+                .unwrap_or_else(|e| panic!("lanes {lanes} pump {pump}: {e}"));
+        }
+    }
+
+    #[test]
+    fn event_engine_reproduces_reference_deadlock_verbatim() {
+        // the deadlock detection (ready queue empty with work
+        // outstanding) must report the same fast cycle and stuck list
+        // the legacy idle-streak scan did
+        for pump in [false, true] {
+            let mut d = vecadd_design(64, 4, pump);
+            for m in &mut d.modules {
+                if let ModuleSpec::Writer { elems, .. } = &mut m.spec {
+                    *elems += 10;
+                }
+            }
+            let e = run_exact(&d, input_hbm(64, 7), 100_000).unwrap_err();
+            let r = run_exact_reference(&d, input_hbm(64, 7), 100_000).unwrap_err();
+            assert_eq!(e, r, "deadlock reports diverged (pump={pump})");
+        }
+    }
+
+    #[test]
+    fn event_engine_reproduces_reference_cycle_budget_error() {
+        let d = vecadd_design(4096, 4, true);
+        let e = run_exact(&d, input_hbm(4096, 8), 10).unwrap_err();
+        let r = run_exact_reference(&d, input_hbm(4096, 8), 10).unwrap_err();
+        assert_eq!(e, r);
+        assert!(e.contains("exceeded"), "{e}");
     }
 }

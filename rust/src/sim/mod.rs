@@ -8,11 +8,16 @@
 //!   output containers end up with exactly the values the hardware
 //!   would produce. Checked against the PJRT-executed JAX/Pallas
 //!   golden models by the integration tests and examples.
-//! * **Exact** ([`engine::run_exact`]) — cycle-stepped simulation with
+//! * **Exact** ([`engine::run_exact`]) — cycle-accurate simulation with
 //!   bounded FIFOs, backpressure, per-domain clocking (fast domain
 //!   ticks M× per slow tick), CDC transfer latency, pipeline fill and
 //!   initiation intervals. Used on small instances to validate the
-//!   rate model; counts stalls per module.
+//!   rate model; counts stalls per module. Since the event-driven
+//!   rebuild (DESIGN.md §9) blocked processes sleep until the channel
+//!   push/pop that unblocks them and quiescent stretches are skipped;
+//!   the legacy per-cycle stepper survives as
+//!   [`engine::run_exact_reference`], the oracle the property tests
+//!   compare against.
 //! * **Analytic** ([`engine::rate_model`]) — steady-state rate analysis
 //!   giving the cycle count of arbitrarily large workloads in O(1):
 //!   the bottleneck service rate over all modules plus fill latency.
@@ -31,7 +36,9 @@ pub mod process;
 pub mod stats;
 pub mod trace;
 
-pub use engine::{rate_model, run_exact, run_functional, SimOutcome};
+pub use engine::{
+    exact_engines_agree, rate_model, run_exact, run_exact_reference, run_functional, SimOutcome,
+};
 pub use memory::Hbm;
 pub use stats::SimStats;
 pub use trace::{run_traced, Trace};

@@ -252,6 +252,51 @@ impl Proc {
         Proc { label: spec.label(), domain, state, stalls: 0, busy: 0 }
     }
 
+    /// Channel indices this process pops from. A blocked process can
+    /// only unblock when one of these receives a push (or one of
+    /// [`Proc::output_channels`] is popped, or its pipeline retires) —
+    /// the event-driven engine's wake conditions.
+    pub fn input_channels(&self) -> Vec<usize> {
+        match &self.state {
+            ProcState::Reader { .. } => vec![],
+            ProcState::Writer { input, .. }
+            | ProcState::Sync { input, .. }
+            | ProcState::Issuer { input, .. }
+            | ProcState::Packer { input, .. }
+            | ProcState::Stencil { input, .. }
+            | ProcState::Fw { input, .. } => vec![*input],
+            ProcState::Compute { inputs, .. } => inputs.clone(),
+            ProcState::Gemm { a_in, b_in, .. } => vec![*a_in, *b_in],
+        }
+    }
+
+    /// Channel indices this process pushes into (see
+    /// [`Proc::input_channels`]).
+    pub fn output_channels(&self) -> Vec<usize> {
+        match &self.state {
+            ProcState::Reader { out, .. } => vec![*out],
+            ProcState::Writer { .. } => vec![],
+            ProcState::Compute { output, .. }
+            | ProcState::Sync { output, .. }
+            | ProcState::Issuer { output, .. }
+            | ProcState::Packer { output, .. }
+            | ProcState::Stencil { output, .. }
+            | ProcState::Fw { output, .. } => vec![*output],
+            ProcState::Gemm { c_out, .. } => vec![*c_out],
+        }
+    }
+
+    /// Fast-time at which the earliest in-flight pipelined result can
+    /// retire, for processes with a latency pipe. A process blocked
+    /// with work in flight needs a *timed* wake at this tick even when
+    /// no channel event arrives.
+    pub fn next_retire_time(&self) -> Option<u64> {
+        match &self.state {
+            ProcState::Compute { pipe, .. } => pipe.front().map(|(ready, _)| *ready),
+            _ => None,
+        }
+    }
+
     /// Does `done()` never regress for this process kind? True for
     /// stateful endpoints (their work counters only grow); false for
     /// flow-through modules whose doneness depends on upstream pushes.

@@ -161,6 +161,178 @@ fn stream_sides(
     Ok((producer, consumer))
 }
 
+/// Inject one clock-domain crossing on stream `s`, parameterized by
+/// the two side ratios (`1` = slow). The general shape is
+///
+/// ```text
+///   [packer ×f_src]? ── wide ── [sync] ── wide ── [issuer ÷f_dst]?
+/// ```
+///
+/// with the packer present iff the producer side is fast and the
+/// issuer iff the consumer side is fast — which specializes to the
+/// three former hand-written branches (slow→fast sync+issuer,
+/// fast→slow packer+sync, fast→fast packer+sync+issuer). Node and
+/// edge creation order reproduces each branch exactly, so graphs (and
+/// their printed text) are bit-for-bit what the specialized code
+/// produced — guarded by the printer-equality and crossing-shape
+/// tests. The fast-side endpoints of `s` are rewired to `{s}_fast`;
+/// `producer`/`consumer` name the owning regions so their node sets
+/// absorb the fast-side plumbing. Returns the plumbing module count.
+fn inject_crossing(
+    g: &mut Sdfg,
+    s: &str,
+    f_src: usize,
+    f_dst: usize,
+    producer: Option<usize>,
+    consumer: Option<usize>,
+    region_nodes: &mut [Vec<NodeId>],
+) -> usize {
+    let has_pack = f_src > 1;
+    let has_issue = f_dst > 1;
+    debug_assert!(has_pack || has_issue, "no crossing between two slow sides");
+
+    let decl = g.container(s).unwrap().clone();
+    let depth = match decl.storage {
+        Storage::Stream { depth } => depth,
+        _ => unreachable!("stream container has stream storage"),
+    };
+    let w = decl.vtype.lanes;
+    let s_acc = g
+        .node_ids()
+        .find(|id| matches!(g.node(*id), Node::Access { data } if data == s))
+        .expect("stream access node exists");
+    let declare_stream = |g: &mut Sdfg, name: &str, lanes: usize, depth: usize| {
+        let mut vt = decl.vtype;
+        vt.lanes = lanes;
+        g.declare(DataDecl {
+            name: name.to_string(),
+            kind: ContainerKind::Stream,
+            vtype: vt,
+            shape: vec![],
+            storage: Storage::Stream { depth },
+            transient: true,
+        });
+    };
+    // rename edges interior to a region (entry→tasklet pops)
+    let rename_inner = |g: &mut Sdfg, region: &[NodeId], from: &str, to: &str| {
+        for e in g.edge_ids().collect::<Vec<_>>() {
+            let edge = g.edge(e);
+            if edge.memlet.data == from
+                && region.contains(&edge.src)
+                && region.contains(&edge.dst)
+            {
+                g.edge_mut(e).memlet.data = to.to_string();
+            }
+        }
+    };
+    let pop = |d: &str| Memlet::new(d, Subset::index1(Expr::int(0)));
+
+    // wide-rate streams: a fast→fast crossing packs into `{s}_pack_cdc`
+    // before the synchronizer and re-issues from `{s}_cdc` after it;
+    // one-sided crossings need a single wide `{s}_cdc`
+    let pack_out = format!("{}{}", s, if has_pack && has_issue { "_pack_cdc" } else { "_cdc" });
+    let sync_out = format!("{s}_cdc");
+    let sfast = format!("{s}_fast");
+    // the fast ratio `{s}_fast` carries: the consumer's when it is
+    // fast, else the producer's
+    let fast_f = if has_issue { f_dst } else { f_src };
+    if has_pack && has_issue {
+        declare_stream(g, &pack_out, w, depth);
+    }
+    declare_stream(g, &sync_out, w, depth);
+    declare_stream(g, &sfast, w / fast_f, depth * fast_f);
+
+    // plumbing modules, in chain order
+    let packer = has_pack.then(|| {
+        g.add_node(Node::Cdc {
+            name: format!("pack_{s}"),
+            kind: CdcKind::Packer,
+            input: if has_issue { s.to_string() } else { sfast.clone() },
+            output: pack_out.clone(),
+            factor: f_src,
+        })
+    });
+    let sync = g.add_node(Node::Cdc {
+        name: format!("sync_{s}"),
+        kind: CdcKind::Synchronizer,
+        input: if has_pack { pack_out.clone() } else { s.to_string() },
+        output: if has_issue { sync_out.clone() } else { s.to_string() },
+        factor: if has_issue { f_dst } else { f_src },
+    });
+    let issuer = has_issue.then(|| {
+        g.add_node(Node::Cdc {
+            name: format!("issue_{s}"),
+            kind: CdcKind::Issuer,
+            input: sync_out.clone(),
+            output: sfast.clone(),
+            factor: f_dst,
+        })
+    });
+    // access nodes, wide(s) then fast
+    let pack_out_acc =
+        (has_pack && has_issue).then(|| g.add_node(Node::Access { data: pack_out.clone() }));
+    let sync_out_acc = g.add_node(Node::Access { data: sync_out.clone() });
+    let sfast_acc = g.add_node(Node::Access { data: sfast.clone() });
+
+    // rewire the fast-side endpoints of `s` to `{s}_fast`: its
+    // consumers when the consumer side is fast, else its producers
+    for e in g.edge_ids().collect::<Vec<_>>() {
+        let edge = g.edge(e);
+        if has_issue {
+            if edge.src == s_acc && edge.memlet.data == s {
+                g.edges[e.0].src = sfast_acc;
+                g.edges[e.0].memlet.data = sfast.clone();
+            }
+        } else if edge.dst == s_acc && edge.memlet.data == s {
+            g.edges[e.0].dst = sfast_acc;
+            g.edges[e.0].memlet.data = sfast.clone();
+        }
+    }
+    if has_issue {
+        if let Some(ri) = consumer {
+            rename_inner(g, &region_nodes[ri], s, &sfast);
+            region_nodes[ri].extend([issuer.unwrap(), sfast_acc]);
+        }
+    }
+    if has_pack {
+        if let Some(ri) = producer {
+            if has_issue {
+                region_nodes[ri].push(packer.unwrap());
+            } else {
+                rename_inner(g, &region_nodes[ri], s, &sfast);
+                region_nodes[ri].extend([packer.unwrap(), sfast_acc]);
+            }
+        }
+    }
+
+    // the crossing chain: head access → [packer] → wide(s)/sync → [issuer] → tail
+    let head = if has_pack && !has_issue { (sfast_acc, sfast.clone()) } else { (s_acc, s.to_string()) };
+    let mut prev = head;
+    let mut chain: Vec<(NodeId, NodeId, String)> = Vec::new();
+    if let Some(p) = packer {
+        let acc = if has_issue { pack_out_acc.unwrap() } else { sync_out_acc };
+        chain.push((p, acc, pack_out.clone()));
+    }
+    {
+        let (acc, out) = if has_issue {
+            (sync_out_acc, sync_out.clone())
+        } else {
+            (s_acc, s.to_string())
+        };
+        chain.push((sync, acc, out));
+    }
+    if let Some(i) = issuer {
+        chain.push((i, sfast_acc, sfast.clone()));
+    }
+    for (module, out_acc, out_name) in chain {
+        g.add_edge(prev.0, module, pop(&prev.1));
+        g.add_edge(module, out_acc, pop(&out_name));
+        prev = (out_acc, out_name);
+    }
+
+    1 + has_pack as usize + has_issue as usize
+}
+
 /// Apply multi-pumping in the given mode.
 pub struct MultiPump {
     pub mode: PumpMode,
@@ -678,7 +850,6 @@ impl MultiPump {
             )
         };
 
-        let pop = |d: &str| Memlet::new(d, Subset::index1(Expr::int(0)));
         let mut plumbing = 0usize;
         let mut crossings = 0usize;
 
@@ -694,176 +865,15 @@ impl MultiPump {
                 continue; // same domain: no crossing
             }
             crossings += 1;
-            let decl = g.container(&s).unwrap().clone();
-            let depth = match decl.storage {
-                Storage::Stream { depth } => depth,
-                _ => unreachable!("stream container has stream storage"),
-            };
-            let w = decl.vtype.lanes;
-            let s_acc = g
-                .node_ids()
-                .find(|id| matches!(g.node(*id), Node::Access { data } if data == &s))
-                .expect("stream access node exists");
-            let declare_stream = |g: &mut Sdfg, name: &str, lanes: usize, depth: usize| {
-                let mut vt = decl.vtype;
-                vt.lanes = lanes;
-                g.declare(DataDecl {
-                    name: name.to_string(),
-                    kind: ContainerKind::Stream,
-                    vtype: vt,
-                    shape: vec![],
-                    storage: Storage::Stream { depth },
-                    transient: true,
-                });
-            };
-            // rename edges interior to a region (entry→tasklet pops)
-            let rename_inner = |g: &mut Sdfg, region: &[NodeId], from: &str, to: &str| {
-                for e in g.edge_ids().collect::<Vec<_>>() {
-                    let edge = g.edge(e);
-                    if edge.memlet.data == from
-                        && region.contains(&edge.src)
-                        && region.contains(&edge.dst)
-                    {
-                        g.edge_mut(e).memlet.data = to.to_string();
-                    }
-                }
-            };
-
-            if f_src == 1 {
-                // slow → fast: the uniform "into the domain" plumbing
-                let m = f_dst;
-                let sx = format!("{s}_cdc");
-                let sfast = format!("{s}_fast");
-                declare_stream(g, &sx, w, depth);
-                declare_stream(g, &sfast, w / m, depth * m);
-                let sync = g.add_node(Node::Cdc {
-                    name: format!("sync_{s}"),
-                    kind: CdcKind::Synchronizer,
-                    input: s.clone(),
-                    output: sx.clone(),
-                    factor: m,
-                });
-                let issuer = g.add_node(Node::Cdc {
-                    name: format!("issue_{s}"),
-                    kind: CdcKind::Issuer,
-                    input: sx.clone(),
-                    output: sfast.clone(),
-                    factor: m,
-                });
-                let sx_acc = g.add_node(Node::Access { data: sx.clone() });
-                let sfast_acc = g.add_node(Node::Access { data: sfast.clone() });
-                for e in g.edge_ids().collect::<Vec<_>>() {
-                    let edge = g.edge(e);
-                    if edge.src == s_acc && edge.memlet.data == s {
-                        g.edges[e.0].src = sfast_acc;
-                        g.edges[e.0].memlet.data = sfast.clone();
-                    }
-                }
-                if let Some(&ri) = consumer.get(&s) {
-                    rename_inner(g, &region_nodes[ri], &s, &sfast);
-                    region_nodes[ri].extend([issuer, sfast_acc]);
-                }
-                g.add_edge(s_acc, sync, pop(&s));
-                g.add_edge(sync, sx_acc, pop(&sx));
-                g.add_edge(sx_acc, issuer, pop(&sx));
-                g.add_edge(issuer, sfast_acc, pop(&sfast));
-                plumbing += 2;
-            } else if f_dst == 1 {
-                // fast → slow: the uniform "out of the domain" plumbing
-                let m = f_src;
-                let sx = format!("{s}_cdc");
-                let sfast = format!("{s}_fast");
-                declare_stream(g, &sx, w, depth);
-                declare_stream(g, &sfast, w / m, depth * m);
-                let packer = g.add_node(Node::Cdc {
-                    name: format!("pack_{s}"),
-                    kind: CdcKind::Packer,
-                    input: sfast.clone(),
-                    output: sx.clone(),
-                    factor: m,
-                });
-                let sync = g.add_node(Node::Cdc {
-                    name: format!("sync_{s}"),
-                    kind: CdcKind::Synchronizer,
-                    input: sx.clone(),
-                    output: s.clone(),
-                    factor: m,
-                });
-                let sx_acc = g.add_node(Node::Access { data: sx.clone() });
-                let sfast_acc = g.add_node(Node::Access { data: sfast.clone() });
-                for e in g.edge_ids().collect::<Vec<_>>() {
-                    let edge = g.edge(e);
-                    if edge.dst == s_acc && edge.memlet.data == s {
-                        g.edges[e.0].dst = sfast_acc;
-                        g.edges[e.0].memlet.data = sfast.clone();
-                    }
-                }
-                if let Some(&ri) = producer.get(&s) {
-                    rename_inner(g, &region_nodes[ri], &s, &sfast);
-                    region_nodes[ri].extend([packer, sfast_acc]);
-                }
-                g.add_edge(sfast_acc, packer, pop(&sfast));
-                g.add_edge(packer, sx_acc, pop(&sx));
-                g.add_edge(sx_acc, sync, pop(&sx));
-                g.add_edge(sync, s_acc, pop(&s));
-                plumbing += 2;
-            } else {
-                // fast A → fast B: pack to the wide slow rate, cross,
-                // re-issue at the destination ratio. The producer keeps
-                // `s` (narrowed to w/f_src below); the consumer moves
-                // to `{s}_fast` at w/f_dst.
-                let sx1 = format!("{s}_pack_cdc");
-                let sx2 = format!("{s}_cdc");
-                let sfast = format!("{s}_fast");
-                declare_stream(g, &sx1, w, depth);
-                declare_stream(g, &sx2, w, depth);
-                declare_stream(g, &sfast, w / f_dst, depth * f_dst);
-                let packer = g.add_node(Node::Cdc {
-                    name: format!("pack_{s}"),
-                    kind: CdcKind::Packer,
-                    input: s.clone(),
-                    output: sx1.clone(),
-                    factor: f_src,
-                });
-                let sync = g.add_node(Node::Cdc {
-                    name: format!("sync_{s}"),
-                    kind: CdcKind::Synchronizer,
-                    input: sx1.clone(),
-                    output: sx2.clone(),
-                    factor: f_dst,
-                });
-                let issuer = g.add_node(Node::Cdc {
-                    name: format!("issue_{s}"),
-                    kind: CdcKind::Issuer,
-                    input: sx2.clone(),
-                    output: sfast.clone(),
-                    factor: f_dst,
-                });
-                let sx1_acc = g.add_node(Node::Access { data: sx1.clone() });
-                let sx2_acc = g.add_node(Node::Access { data: sx2.clone() });
-                let sfast_acc = g.add_node(Node::Access { data: sfast.clone() });
-                for e in g.edge_ids().collect::<Vec<_>>() {
-                    let edge = g.edge(e);
-                    if edge.src == s_acc && edge.memlet.data == s {
-                        g.edges[e.0].src = sfast_acc;
-                        g.edges[e.0].memlet.data = sfast.clone();
-                    }
-                }
-                if let Some(&ri) = consumer.get(&s) {
-                    rename_inner(g, &region_nodes[ri], &s, &sfast);
-                    region_nodes[ri].extend([issuer, sfast_acc]);
-                }
-                if let Some(&ri) = producer.get(&s) {
-                    region_nodes[ri].push(packer);
-                }
-                g.add_edge(s_acc, packer, pop(&s));
-                g.add_edge(packer, sx1_acc, pop(&sx1));
-                g.add_edge(sx1_acc, sync, pop(&sx1));
-                g.add_edge(sync, sx2_acc, pop(&sx2));
-                g.add_edge(sx2_acc, issuer, pop(&sx2));
-                g.add_edge(issuer, sfast_acc, pop(&sfast));
-                plumbing += 3;
-            }
+            plumbing += inject_crossing(
+                g,
+                &s,
+                f_src,
+                f_dst,
+                producer.get(&s).copied(),
+                consumer.get(&s).copied(),
+                &mut region_nodes,
+            );
         }
 
         // narrow every stream interior to a pumped domain (both sides

@@ -11,3 +11,30 @@ pub mod table;
 
 pub use rng::Rng;
 pub use table::Table;
+
+/// The FNV-1a 64-bit offset basis: the seed every content hash in the
+/// crate chains from (dse fingerprints, the cached SDFG print hash).
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// FNV-1a over a byte slice, chained: `fnv1a(fnv1a(h, a), b)` hashes
+/// the concatenation `a ++ b`.
+pub fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_chains_like_concatenation() {
+        let ab = fnv1a(FNV_OFFSET, b"ab");
+        let chained = fnv1a(fnv1a(FNV_OFFSET, b"a"), b"b");
+        assert_eq!(ab, chained);
+        assert_ne!(fnv1a(FNV_OFFSET, b"a"), fnv1a(FNV_OFFSET, b"b"));
+    }
+}

@@ -48,6 +48,16 @@ impl<'a> Gen<'a> {
         &xs[self.rng.range(0, xs.len())]
     }
 
+    /// `Some(x)` half the time, `None` otherwise — for optional
+    /// dimensions (a region's pump factor, an optional transform).
+    pub fn option<T>(&mut self, x: T) -> Option<T> {
+        if self.bool() {
+            Some(x)
+        } else {
+            None
+        }
+    }
+
     pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
         self.rng.f32_vec(n)
     }
@@ -108,6 +118,15 @@ mod tests {
     #[should_panic(expected = "property 'always-fails' failed")]
     fn failing_property_reports() {
         forall("always-fails", 2, 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn option_produces_both_variants() {
+        let mut rng = Rng::new(5);
+        let mut g = Gen { rng: &mut rng };
+        let xs: Vec<Option<u8>> = (0..100).map(|_| g.option(1u8)).collect();
+        assert!(xs.iter().any(|x| x.is_some()));
+        assert!(xs.iter().any(|x| x.is_none()));
     }
 
     #[test]

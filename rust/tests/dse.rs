@@ -442,6 +442,52 @@ fn dse_mixed_frontier_verifies_at_golden_scale() {
 }
 
 #[test]
+fn dse_cache_compaction_shrinks_a_grown_store() {
+    // the append-only growth fix: a run that touches a subset of a big
+    // store and flushes with --cache-compact rewrites the file with
+    // only the entries it used — the file shrinks instead of merging
+    // every stale record back forever
+    let dir = std::env::temp_dir().join(format!("tvec-dse-compact-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let device = Device::u280();
+
+    // seed the store with a full sweep
+    let (bases, opts) = vecadd_problem(11);
+    let seeder = Evaluator::with_cache_dir(&dir);
+    run_search(&seeder, &bases, &device, &opts, &SearchConfig::exhaustive(Objective::resource()))
+        .unwrap();
+    let full = seeder.flush().unwrap();
+    assert!(full > 2, "need a non-trivial store to compact, got {full} entries");
+    let path = dir.join(temporal_vec::dse::cache::FILE_NAME);
+    let bytes_before = std::fs::metadata(&path).unwrap().len();
+
+    // a later run touches only one candidate, then compacts
+    let toucher = Evaluator::with_cache_dir(&dir);
+    assert_eq!(toucher.loaded_entries(), full);
+    let base = &bases[0];
+    toucher.evaluate(&base.spec, &DesignPoint::original(), base.flops).unwrap();
+    assert_eq!(toucher.cache_misses(), 0, "the touched point must be a cache hit");
+    let (before, after) = toucher.flush_compacted().unwrap();
+    assert_eq!(before, full);
+    assert_eq!(after, 1);
+    let bytes_after = std::fs::metadata(&path).unwrap().len();
+    assert!(
+        bytes_after < bytes_before,
+        "compacted file did not shrink ({bytes_before} → {bytes_after} bytes)"
+    );
+
+    // the survivor still round-trips
+    let reloaded = Evaluator::with_cache_dir(&dir);
+    assert!(reloaded.cold_reason().is_none());
+    assert_eq!(reloaded.loaded_entries(), 1);
+    let again = reloaded.evaluate(&base.spec, &DesignPoint::original(), base.flops).unwrap();
+    assert_eq!(reloaded.cache_misses(), 0, "survivor must hit");
+    assert!(again.fits);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn dse_failure_kinds_are_reported_separately() {
     // an indivisible problem size: the grid prunes width 8 up front,
     // nothing hard-fails compilation, and the outcome's two failure

@@ -243,3 +243,85 @@ fn prop_rng_streams_statistically_distinct() {
         Ok(())
     });
 }
+
+/// Full-stats equality of the event-driven exact engine against the
+/// legacy per-cycle stepper on one design+input — the tentpole's
+/// cycle-exactness contract, via the shared library oracle
+/// `sim::exact_engines_agree` (one definition for every call site).
+fn engines_must_agree(
+    design: &temporal_vec::codegen::Design,
+    hbm: Hbm,
+    out_name: &str,
+) -> Result<(), String> {
+    temporal_vec::sim::exact_engines_agree(design, hbm, 10_000_000, &[out_name])
+}
+
+#[test]
+fn prop_event_engine_is_cycle_exact_on_random_pumped_vecadd() {
+    // randomized (width, pump mode/factor, size): the event-driven
+    // run_exact must match the legacy stepper cycle for cycle
+    forall("event-exact-vecadd", 0xD1, 10, |g| {
+        let lanes = *g.choose(&[2usize, 4, 8]);
+        let pump: Option<(usize, PumpMode)> = match g.usize(0, 4) {
+            0 => None,
+            1 => Some((2, PumpMode::Resource)),
+            2 => Some((2, PumpMode::Throughput)),
+            _ => Some((4, PumpMode::Resource)),
+        };
+        // resource mode must divide the width
+        let pump = match pump {
+            Some((m, PumpMode::Resource)) if lanes % m != 0 => None,
+            p => p,
+        };
+        let n = (g.usize(6, 48) * lanes.max(4)) as i64;
+        let mut spec =
+            BuildSpec::new(apps::vecadd::build()).vectorized("vadd", lanes).bind("N", n);
+        if let Some((m, mode)) = pump {
+            spec = spec.pumped(m, mode);
+        }
+        // a randomly illegal combination (e.g. a throughput-widened
+        // boundary that no longer divides N) is vacuous, not a failure
+        let c = match compile(spec) {
+            Ok(c) => c,
+            Err(_) => return Ok(()),
+        };
+        let mut hbm = Hbm::new();
+        hbm.load("x", g.vec_f32(n as usize));
+        hbm.load("y", g.vec_f32(n as usize));
+        engines_must_agree(&c.design, hbm, "z")
+            .map_err(|e| format!("lanes {lanes} pump {pump:?} n {n}: {e}"))
+    });
+}
+
+#[test]
+fn prop_event_engine_is_cycle_exact_on_random_mixed_stencils() {
+    // randomized per-region pump assignments over a small jacobi chain:
+    // several fast domains at different strides plus CL0 regions in one
+    // design — the hardest scheduling shape the engine supports
+    forall("event-exact-mixed", 0xD2, 8, |g| {
+        use temporal_vec::ir::StencilKind;
+        let stages = g.usize(2, 4);
+        let factors: Vec<Option<usize>> = (0..stages)
+            .map(|_| {
+                let f = *g.choose(&[2usize, 4]);
+                g.option(f)
+            })
+            .collect();
+        let mut spec = BuildSpec::new(apps::stencil::build(StencilKind::Jacobi3D, stages, 8))
+            .bind("NX", 8)
+            .bind("NY", 8)
+            .bind("NZ", 8)
+            .bind("NZ_v", 1);
+        if factors.iter().any(|f| f.is_some()) {
+            spec = spec.pumped_regions(factors.clone());
+        }
+        let c = match compile(spec) {
+            Ok(c) => c,
+            Err(_) => return Ok(()), // illegal assignment: vacuous case
+        };
+        let mut hbm = Hbm::new();
+        hbm.load("v_in", g.vec_f32(8 * 8 * 8));
+        engines_must_agree(&c.design, hbm, "v_out")
+            .map_err(|e| format!("stages {stages} factors {factors:?}: {e}"))
+    });
+}
