@@ -8,7 +8,7 @@
 
 use temporal_vec::coordinator::{compile, BuildSpec};
 use temporal_vec::ir::{PumpMode, StencilKind};
-use temporal_vec::sim::{run_exact, run_exact_reference, Hbm};
+use temporal_vec::sim::{run_exact, run_exact_in, run_exact_reference, Arena, Hbm};
 use temporal_vec::util::bench::{bench_throughput, black_box, BenchSuite};
 use temporal_vec::util::Rng;
 use temporal_vec::{apps, sim};
@@ -44,6 +44,24 @@ fn main() {
             run_exact_reference(&c_va.design, va_hbm(), 100_000_000).unwrap().stats.slow_cycles,
         );
     }));
+    // the pooled-arena path the DSE verify loop runs: slabs grow once,
+    // every later transaction is a recycled slot (DESIGN.md §10)
+    let mut va_arena = Arena::new();
+    run_exact_in(&c_va.design, va_hbm(), 100_000_000, &mut va_arena).unwrap(); // warm the slabs
+    suite.add(bench_throughput(
+        "event engine, vecadd V8 R2, pooled arena (slow cyc/s)",
+        1,
+        5,
+        va_cycles,
+        || {
+            black_box(
+                run_exact_in(&c_va.design, va_hbm(), 100_000_000, &mut va_arena)
+                    .unwrap()
+                    .stats
+                    .slow_cycles,
+            );
+        },
+    ));
 
     // the 16-stage jacobi chain R4 at golden scale — the fill/drain
     // phases are where sleeping blocked processes pay off

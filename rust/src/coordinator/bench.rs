@@ -3,14 +3,17 @@
 //! artifact.
 //!
 //! Three golden-scale designs (vecadd V8 R2, matmul R2, the 16-stage
-//! jacobi chain R4) run through both the event-driven [`run_exact`]
-//! and the legacy stepper [`run_exact_reference`]; the report carries
-//! slow-cycles/sec for each plus the speedup, and cross-checks the
-//! analytic rate model against the exact count under each app's
-//! per-app verify tolerance — the CI drift gate (`--smoke` shrinks the
-//! problem sizes for that job). A cold-vs-warm DSE sweep over a
-//! throwaway cache directory rounds out the report. The JSON schema is
-//! documented in DESIGN.md §9.
+//! jacobi chain R4) run through both the event-driven
+//! [`run_exact_in`] and the legacy stepper [`run_exact_reference_in`],
+//! every run inside ONE shared transaction arena (the pooled data
+//! plane of DESIGN.md §10, measured as the DSE loop deploys it); the
+//! report carries slow-cycles/sec for each plus the speedup, the
+//! arena's slot/recycling counters with a per-app flat-high-water
+//! check, and cross-checks the analytic rate model against the exact
+//! count under each app's per-app verify tolerance — the CI drift
+//! gate (`--smoke` shrinks the problem sizes for that job). A
+//! cold-vs-warm DSE sweep over a throwaway cache directory rounds out
+//! the report. The JSON schema is documented in DESIGN.md §9.
 
 use std::time::Instant;
 
@@ -19,7 +22,8 @@ use crate::dse::{run_search, Evaluator, Objective, SearchBase, SearchConfig, Spa
 use crate::hw::Device;
 use crate::ir::{PumpMode, StencilKind};
 use crate::sim::{
-    exact_engines_agree, rate_model, run_exact, run_exact_reference, Hbm, SimOutcome,
+    exact_engines_agree_in, rate_model, run_exact_in, run_exact_reference_in, Arena, ArenaStats,
+    Hbm, SimOutcome,
 };
 use crate::util::Rng;
 
@@ -43,6 +47,11 @@ pub struct SimBench {
     pub rate_cycles: u64,
     /// Per-app drift tolerance the gate applies.
     pub tolerance: f64,
+    /// Did the shared arena's slot count and high-water mark stay flat
+    /// across this app's repeated timed runs (after the warmup run
+    /// established them)? A growing mark means the pool is leaking or
+    /// re-growing instead of recycling.
+    pub arena_flat: bool,
 }
 
 impl SimBench {
@@ -82,14 +91,23 @@ pub struct DseBench {
 pub struct BenchReport {
     pub smoke: bool,
     pub sims: Vec<SimBench>,
+    /// Final counters of the one arena every sim bench (both engines,
+    /// warmup + timed iterations) ran inside.
+    pub arena: ArenaStats,
     pub dse: DseBench,
 }
 
 impl BenchReport {
-    /// Render as `BENCH_sim.json` (schema: DESIGN.md §9).
+    /// Every app's repeated runs kept the arena's high-water mark flat.
+    pub fn arena_flat(&self) -> bool {
+        self.sims.iter().all(|s| s.arena_flat)
+    }
+
+    /// Render as `BENCH_sim.json` (schema: DESIGN.md §9; v2 added the
+    /// `arena` block).
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
-        out.push_str("  \"schema\": \"tvec-bench-sim v1\",\n");
+        out.push_str("  \"schema\": \"tvec-bench-sim v2\",\n");
         out.push_str(&format!("  \"smoke\": {},\n", self.smoke));
         out.push_str("  \"sim\": [\n");
         for (i, s) in self.sims.iter().enumerate() {
@@ -115,6 +133,16 @@ impl BenchReport {
             ));
         }
         out.push_str("  ],\n");
+        out.push_str(&format!(
+            "  \"arena\": {{\"classes\": {}, \"slots\": {}, \"peak_live\": {}, \
+             \"recycle_hits\": {}, \"resets\": {}, \"flat_high_water\": {}}},\n",
+            self.arena.classes,
+            self.arena.slots,
+            self.arena.peak_live,
+            self.arena.recycle_hits,
+            self.arena.resets,
+            self.arena_flat(),
+        ));
         out.push_str(&format!(
             "  \"dse\": {{\"app\": \"{}\", \"cold_secs\": {:.6}, \"warm_secs\": {:.6}, \
              \"warm_speedup\": {:.3}, \"cold_new_compiles\": {}, \"warm_new_compiles\": {}}}\n",
@@ -171,6 +199,7 @@ fn bench_design(
     inputs: Vec<(String, Vec<f32>)>,
     iters: u32,
     tolerance_override: Option<f64>,
+    arena: &mut Arena,
 ) -> Result<SimBench, String> {
     let c = compile(spec)?;
     let mk_hbm = || {
@@ -181,17 +210,25 @@ fn bench_design(
         h
     };
     // the shared oracle up front: the engines must be cycle-exact
-    // before the timings mean anything (this also serves as warmup)
-    exact_engines_agree(&c.design, mk_hbm(), SIM_BUDGET, &[])
+    // before the timings mean anything (this also serves as warmup —
+    // for the engines and for the shared arena, whose slabs it grows
+    // to this design's high-water mark)
+    exact_engines_agree_in(&c.design, mk_hbm(), SIM_BUDGET, &[], arena)
         .map_err(|e| format!("{app} {config}: engines disagree — benchmark void: {e}"))?;
+    let warm = arena.stats();
     let mut slow_cycles = 0u64;
     let event_secs = time_best(iters, || {
-        let out: SimOutcome = run_exact(&c.design, mk_hbm(), SIM_BUDGET).expect("checked above");
+        let out: SimOutcome =
+            run_exact_in(&c.design, mk_hbm(), SIM_BUDGET, arena).expect("checked above");
         slow_cycles = out.stats.slow_cycles;
     });
     let reference_secs = time_best(iters, || {
-        run_exact_reference(&c.design, mk_hbm(), SIM_BUDGET).expect("checked above");
+        run_exact_reference_in(&c.design, mk_hbm(), SIM_BUDGET, arena).expect("checked above");
     });
+    // repeated runs of a design the warmup already simulated must be
+    // served entirely from recycled slots
+    let after = arena.stats();
+    let arena_flat = after.slots == warm.slots && after.peak_live == warm.peak_live;
     Ok(SimBench {
         app: app.to_string(),
         config: config.to_string(),
@@ -200,6 +237,7 @@ fn bench_design(
         reference_secs,
         rate_cycles: rate_model(&c.design).slow_cycles,
         tolerance: tolerance_override.unwrap_or_else(|| verify_tolerance(app)),
+        arena_flat,
     })
 }
 
@@ -215,6 +253,9 @@ pub fn run_bench(
     let iters = if smoke { 2 } else { 5 };
     let mut rng = Rng::new(seed ^ 0xbe9c);
     let mut sims = Vec::new();
+    // one arena across every engine run of every app: the pooled data
+    // plane the DSE evaluation loop uses, measured as deployed
+    let mut arena = Arena::new();
 
     // vecadd V8 R2 at golden scale
     {
@@ -228,7 +269,15 @@ pub fn run_bench(
             ("x".to_string(), rng.f32_vec(n as usize)),
             ("y".to_string(), rng.f32_vec(n as usize)),
         ];
-        sims.push(bench_design("vecadd", "V8 R2", spec, inputs, iters, tolerance_override)?);
+        sims.push(bench_design(
+            "vecadd",
+            "V8 R2",
+            spec,
+            inputs,
+            iters,
+            tolerance_override,
+            &mut arena,
+        )?);
     }
 
     // matmul R2 at golden scale (smoke: a quarter-size problem)
@@ -244,7 +293,15 @@ pub fn run_bench(
             ("A".to_string(), rng.f32_vec((n * n) as usize)),
             ("B".to_string(), rng.f32_vec((n * n) as usize)),
         ];
-        sims.push(bench_design("matmul", "R2", spec, inputs, iters, tolerance_override)?);
+        sims.push(bench_design(
+            "matmul",
+            "R2",
+            spec,
+            inputs,
+            iters,
+            tolerance_override,
+            &mut arena,
+        )?);
     }
 
     // the 16-stage jacobi chain, R4 — the tentpole's headline design
@@ -265,7 +322,15 @@ pub fn run_bench(
             .seeded(seed);
         let inputs =
             vec![("v_in".to_string(), rng.f32_vec((nx * ny * nz) as usize))];
-        sims.push(bench_design("stencil", "S16 R4", spec, inputs, iters, tolerance_override)?);
+        sims.push(bench_design(
+            "stencil",
+            "S16 R4",
+            spec,
+            inputs,
+            iters,
+            tolerance_override,
+            &mut arena,
+        )?);
     }
 
     // cold vs warm DSE sweep over a throwaway persistent cache
@@ -311,7 +376,7 @@ pub fn run_bench(
         }
     };
 
-    Ok(BenchReport { smoke, sims, dse })
+    Ok(BenchReport { smoke, sims, arena: arena.stats(), dse })
 }
 
 #[cfg(test)]
@@ -330,13 +395,21 @@ mod tests {
         }
         assert_eq!(r.dse.warm_new_compiles, 0, "warm DSE sweep must compile nothing");
         assert!(r.dse.cold_new_compiles > 0);
+        // the shared arena must be alive (recycling) and flat across
+        // each app's repeated runs — the CI smoke gate's contract
+        assert!(r.arena.slots > 0 && r.arena.recycle_hits > 0, "arena wired but dead");
+        assert_eq!(r.arena.live, 0, "all transactions must be freed after the runs");
+        assert!(r.arena_flat(), "arena high-water mark grew across repeated runs");
         let json = r.to_json();
         for key in [
-            "\"schema\": \"tvec-bench-sim v1\"",
+            "\"schema\": \"tvec-bench-sim v2\"",
             "\"sim\": [",
             "\"event_cycles_per_sec\"",
             "\"speedup\"",
             "\"drift_ratio\"",
+            "\"arena\": {",
+            "\"recycle_hits\"",
+            "\"flat_high_water\": true",
             "\"dse\": {",
             "\"warm_new_compiles\": 0",
         ] {
@@ -357,12 +430,14 @@ mod tests {
             reference_secs: 0.01,
             rate_cycles: 200, // 2x drift: outside any sane tolerance
             tolerance: 0.2,
+            arena_flat: true,
         };
         assert!(!row.within_tolerance());
         assert!((row.speedup() - 10.0).abs() < 1e-9);
         let report = BenchReport {
             smoke: true,
             sims: vec![row],
+            arena: ArenaStats::default(),
             dse: DseBench {
                 app: "vecadd".into(),
                 cold_secs: 1.0,

@@ -29,7 +29,7 @@ use crate::coordinator::pipeline::{
 };
 use crate::hw::ResourceVec;
 use crate::ir::PumpMode;
-use crate::sim::rate_model;
+use crate::sim::{rate_model, Arena, ArenaStats};
 use crate::util::{fnv1a, FNV_OFFSET};
 
 use super::cache;
@@ -216,6 +216,47 @@ pub fn evaluate_point(
 /// halving sweep re-pricing under five jitter seeds reuses one prefix.
 type PrefixKey = (u64, Option<(String, usize)>, bool);
 
+/// Reservoir of simulation arenas for the evaluation/verification
+/// loop: one arena per concurrently simulating worker, checked out
+/// around each exact-sim run and checked back in afterwards, so a
+/// sweep over thousands of candidates reuses a handful of arenas whose
+/// slabs grew once to the workload's high-water mark — the
+/// zero-steady-state-allocation loop (DESIGN.md §10). Sequential
+/// callers keep hitting the same warmed arena; concurrent callers pop
+/// distinct ones (the pool grows to the observed parallelism, never
+/// beyond it). The engines perform the high-water-mark reset on entry,
+/// so a checked-in arena is always reusable even after an errored run.
+#[derive(Default)]
+pub struct ArenaPool {
+    arenas: Mutex<Vec<Arena>>,
+}
+
+impl ArenaPool {
+    /// Run `f` inside a pooled arena (checkout → run → checkin).
+    pub fn run<R>(&self, f: impl FnOnce(&mut Arena) -> R) -> R {
+        let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
+        let out = f(&mut arena);
+        self.arenas.lock().unwrap().push(arena);
+        out
+    }
+
+    /// Arenas currently resident in the pool.
+    pub fn pooled(&self) -> usize {
+        self.arenas.lock().unwrap().len()
+    }
+
+    /// Counters summed over every pooled arena (checked-out arenas are
+    /// invisible until they return).
+    pub fn stats(&self) -> ArenaStats {
+        let arenas = self.arenas.lock().unwrap();
+        let mut sum = ArenaStats::default();
+        for a in arenas.iter() {
+            sum.accumulate(&a.stats());
+        }
+        sum
+    }
+}
+
 /// The memo table plus the keys this run used, under ONE lock so the
 /// warm-cache hot path pays a single acquisition per evaluation.
 #[derive(Default)]
@@ -250,6 +291,9 @@ pub struct Evaluator {
     loaded: usize,
     /// Why the disk store was ignored, if it was.
     cold_reason: Option<String>,
+    /// Per-worker simulation arenas for the exact-sim paths hanging off
+    /// this evaluator (`dse --verify`, golden spot checks).
+    arenas: ArenaPool,
 }
 
 impl Evaluator {
@@ -291,6 +335,13 @@ impl Evaluator {
     /// (schema mismatch, corruption).
     pub fn cold_reason(&self) -> Option<&str> {
         self.cold_reason.as_deref()
+    }
+
+    /// The evaluator's simulation-arena pool: exact-sim spot checks
+    /// (`dse --verify`) run inside it so repeated candidates reuse the
+    /// slabs the first one grew.
+    pub fn arenas(&self) -> &ArenaPool {
+        &self.arenas
     }
 
     /// Persist the memo cache to the store this evaluator was created
@@ -631,6 +682,27 @@ mod tests {
         assert_eq!(direct.slow_cycles, cached.slow_cycles);
         assert_eq!(direct.gops, cached.gops);
         assert_eq!(direct.resource_score, cached.resource_score);
+    }
+
+    #[test]
+    fn arena_pool_reuses_one_arena_for_sequential_runs() {
+        let pool = ArenaPool::default();
+        assert_eq!(pool.pooled(), 0);
+        let slots_first = pool.run(|a| {
+            let t = a.alloc_from(&[1.0, 2.0]);
+            a.free(t);
+            a.stats().slots
+        });
+        assert_eq!(pool.pooled(), 1);
+        // the second sequential run gets the same warmed arena back
+        pool.run(|a| {
+            assert_eq!(a.stats().slots, slots_first, "pool must hand back the warmed arena");
+            let _ = a.alloc(2);
+        });
+        assert_eq!(pool.pooled(), 1, "sequential use must not grow the pool");
+        let s = pool.stats();
+        assert_eq!(s.slots, 1);
+        assert!(s.recycle_hits >= 1);
     }
 
     #[test]

@@ -38,8 +38,8 @@ pub mod search;
 pub mod space;
 pub mod verify;
 
-pub use evaluate::{EvalError, Evaluation, Evaluator, FailKind};
+pub use evaluate::{ArenaPool, EvalError, Evaluation, Evaluator, FailKind};
 pub use pareto::{dominates, frontier, resource_score, Objective};
 pub use search::{run_search, SearchBase, SearchConfig, SearchOutcome, Strategy};
 pub use space::{generate, DesignPoint, SpaceOptions};
-pub use verify::{verify_frontier, VerifyReport, DEFAULT_TOLERANCE};
+pub use verify::{verify_frontier, verify_frontier_in, VerifyReport, DEFAULT_TOLERANCE};

@@ -18,9 +18,9 @@
 //! not break when only the bindings shrink.
 
 use crate::coordinator::pipeline::{compile_staged, BuildSpec, Stage};
-use crate::sim::{rate_model, run_exact, Hbm};
+use crate::sim::{rate_model, run_exact_in, Arena, Hbm};
 
-use super::evaluate::Evaluation;
+use super::evaluate::{ArenaPool, Evaluation};
 
 /// Accept rate-model vs exact-sim cycle ratios within ±40 % — the
 /// envelope the simulator's own cross-validation tests use (vecadd
@@ -48,12 +48,16 @@ pub struct VerifyReport {
 }
 
 /// Verify one evaluation's design point against a golden-scale base
-/// spec. `inputs` are the HBM containers the exact run needs.
+/// spec. `inputs` are the HBM containers the exact run needs; the
+/// exact simulation runs inside `arena`, so a caller verifying many
+/// points on one arena (or through an [`ArenaPool`]) pays the slab
+/// growth once and allocates nothing per transaction afterwards.
 pub fn verify_point(
     golden_base: &BuildSpec,
     e: &Evaluation,
     inputs: &[(String, Vec<f32>)],
     tolerance: f64,
+    arena: &mut Arena,
 ) -> Result<VerifyReport, String> {
     let spec = e.point.apply_to(golden_base);
     let c = match compile_staged(spec) {
@@ -80,7 +84,7 @@ pub fn verify_point(
     for (name, data) in inputs {
         hbm.load(name, data.clone());
     }
-    let exact = run_exact(&c.design, hbm, MAX_VERIFY_CYCLES)
+    let exact = run_exact_in(&c.design, hbm, MAX_VERIFY_CYCLES, arena)
         .map_err(|err| format!("{}: exact simulation failed: {err}", e.label))?
         .stats
         .slow_cycles;
@@ -105,19 +109,41 @@ pub fn verify_frontier(
     inputs: &[(String, Vec<f32>)],
     tolerance: f64,
 ) -> Result<Vec<VerifyReport>, String> {
+    // a throwaway pool: sequential `run` calls reuse exactly one
+    // arena, so the first simulation grows the slabs and the rest
+    // recycle them — one loop definition shared with the pooled path
+    verify_frontier_in(frontier, golden_bases, inputs, tolerance, &ArenaPool::default())
+}
+
+/// [`verify_frontier`] through a shared [`ArenaPool`] (the evaluator's
+/// — `tvec dse --verify` reports the pool's counters afterwards).
+pub fn verify_frontier_in(
+    frontier: &[Evaluation],
+    golden_bases: &[BuildSpec],
+    inputs: &[(String, Vec<f32>)],
+    tolerance: f64,
+    pool: &ArenaPool,
+) -> Result<Vec<VerifyReport>, String> {
     let mut out = Vec::with_capacity(frontier.len());
     for e in frontier {
-        let base = golden_bases.get(e.base).ok_or_else(|| {
-            format!(
-                "{}: no golden base for search base index {} ({} available)",
-                e.label,
-                e.base,
-                golden_bases.len()
-            )
-        })?;
-        out.push(verify_point(base, e, inputs, tolerance)?);
+        let base = frontier_base(golden_bases, e)?;
+        out.push(pool.run(|arena| verify_point(base, e, inputs, tolerance, arena))?);
     }
     Ok(out)
+}
+
+fn frontier_base<'a>(
+    golden_bases: &'a [BuildSpec],
+    e: &Evaluation,
+) -> Result<&'a BuildSpec, String> {
+    golden_bases.get(e.base).ok_or_else(|| {
+        format!(
+            "{}: no golden base for search base index {} ({} available)",
+            e.label,
+            e.base,
+            golden_bases.len()
+        )
+    })
 }
 
 /// The labels of reports that ran and disagreed beyond tolerance.
@@ -161,7 +187,8 @@ mod tests {
                 pump,
                 ..DesignPoint::original()
             });
-            let r = verify_point(&golden, &e, &inputs, DEFAULT_TOLERANCE).unwrap();
+            let r = verify_point(&golden, &e, &inputs, DEFAULT_TOLERANCE, &mut Arena::new())
+                .unwrap();
             assert!(r.skipped.is_none());
             assert!(r.exact_cycles > 0 && r.rate_cycles > 0);
             assert!(
@@ -173,6 +200,28 @@ mod tests {
     }
 
     #[test]
+    fn pooled_verify_reuses_arena_slabs_across_points() {
+        // two verifications of the same point through one pool: the
+        // second must grow nothing (flat slots + flat high-water mark)
+        let (golden, inputs) = vecadd_golden();
+        let e = eval_at_paper_scale(DesignPoint {
+            vectorize: Some(("vadd".into(), 8)),
+            pump: Some((2, PumpMode::Resource)),
+            ..DesignPoint::original()
+        });
+        let pool = ArenaPool::default();
+        let points = vec![e.clone(), e];
+        let reports =
+            verify_frontier_in(&points, &[golden], &inputs, DEFAULT_TOLERANCE, &pool).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].exact_cycles, reports[1].exact_cycles);
+        assert_eq!(pool.pooled(), 1, "sequential verify must reuse one arena");
+        let s = pool.stats();
+        assert!(s.slots > 0);
+        assert!(s.recycle_hits > 0, "second verification must recycle the first's slots");
+    }
+
+    #[test]
     fn golden_scale_legality_rejection_is_a_visible_skip() {
         // width 8 is legal at N = 2^20 but not at a golden N of 100
         let spec = BuildSpec::new(apps::vecadd::build()).bind("N", 100).seeded(9);
@@ -180,7 +229,7 @@ mod tests {
             vectorize: Some(("vadd".into(), 8)),
             ..DesignPoint::original()
         });
-        let r = verify_point(&spec, &e, &[], DEFAULT_TOLERANCE).unwrap();
+        let r = verify_point(&spec, &e, &[], DEFAULT_TOLERANCE, &mut Arena::new()).unwrap();
         let reason = r.skipped.expect("must be skipped, not failed");
         assert!(reason.contains("not legal at golden scale"), "{reason}");
     }

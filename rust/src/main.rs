@@ -424,6 +424,14 @@ fn cmd_bench(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), St
         );
     }
     println!(
+        "  arena    {} class(es), {} slots, peak live {}, {} recycle hits, high-water {}",
+        report.arena.classes,
+        report.arena.slots,
+        report.arena.peak_live,
+        report.arena.recycle_hits,
+        if report.arena_flat() { "flat" } else { "GREW" }
+    );
+    println!(
         "  dse {:<12} cold {:.3}s ({} compiles)   warm {:.3}s ({} compiles)",
         report.dse.app,
         report.dse.cold_secs,
@@ -476,7 +484,7 @@ fn run_dse_app(
     cli_tolerance: Option<f64>,
     verify_failures: &mut Vec<String>,
 ) -> Result<(), String> {
-    use temporal_vec::dse::{run_search, verify_frontier};
+    use temporal_vec::dse::{run_search, verify_frontier_in};
     use temporal_vec::util::table::{fnum, pct, Table};
 
     // per-app default envelope; an explicit --tolerance always wins
@@ -571,7 +579,15 @@ fn run_dse_app(
 
     if verify {
         let rig = temporal_vec::coordinator::golden_rig(name, seed)?;
-        let reports = verify_frontier(&outcome.frontier, &rig.bases, &rig.inputs, tolerance)?;
+        // exact sims run inside the evaluator's arena pool: every
+        // frontier point after the first recycles the same slabs
+        let reports = verify_frontier_in(
+            &outcome.frontier,
+            &rig.bases,
+            &rig.inputs,
+            tolerance,
+            evaluator.arenas(),
+        )?;
         let mut vt = Table::new(
             format!("--verify: rate model vs exact simulator at golden scale (±{tolerance})"),
             &["config", "rate cycles", "exact cycles", "ratio", "status"],
@@ -597,6 +613,14 @@ fn run_dse_app(
         println!(
             "verify: {ok}/{checked} frontier points within tolerance \
              ({skipped} skipped at golden scale)"
+        );
+        let a = evaluator.arenas().stats();
+        println!(
+            "verify arena: {} pooled arena(s), {} slots, peak live {}, {} recycle hits",
+            evaluator.arenas().pooled(),
+            a.slots,
+            a.peak_live,
+            a.recycle_hits
         );
         for r in temporal_vec::dse::verify::failures(&reports) {
             verify_failures.push(format!(

@@ -1,0 +1,364 @@
+//! Pooled transaction arena: the simulator data plane's slot allocator.
+//!
+//! Before this module every transaction travelling a FIFO was an owned
+//! `Box<[f32]>` — one heap allocation per push, one free per
+//! consumption, in the innermost loop of both exact engines (ROADMAP
+//! "Simulator performance"). The arena replaces that with per-lane-class
+//! slabs and free lists: a [`Txn`] is now a lightweight `Copy` handle
+//! (slot index + lane class) that FIFOs enqueue by value and processes
+//! read/write through [`Arena::get`]/[`Arena::get_mut`]. A pop-to-push
+//! hop along a pipeline frees the consumed slot and immediately
+//! recycles it for the produced one (the free list is LIFO), so a
+//! steady-state simulation performs **zero** per-transaction heap
+//! allocation — the slabs grow to the design's high-water mark on the
+//! first run and are then reused forever.
+//!
+//! Lifecycle contract:
+//! * every [`Arena::alloc`] is fully initialised by its producer before
+//!   the handle is pushed (readers fill from HBM, computes copy their
+//!   evaluated lanes, issuers/packers copy and zero-pad) — recycled
+//!   slot contents can never leak into results;
+//! * every consumed handle is [`Arena::free`]d exactly once (a debug
+//!   build asserts against double frees and use-after-free);
+//! * [`Arena::reset`] is a *high-water-mark reset*: live slots drop to
+//!   zero and every slot returns to its free list, but slabs, slot
+//!   counts and the peak-live statistic are retained — the reset an
+//!   engine performs on entry and the DSE evaluator's
+//!   [`crate::dse::evaluate::ArenaPool`] performs between candidates,
+//!   so repeated evaluations tear nothing down and allocate nothing.
+//!
+//! Both exact engines ([`super::engine::run_exact`] and the oracle
+//! [`super::engine::run_exact_reference`]) share one arena through the
+//! `_in` entry points, keeping the cycle-exactness property suite
+//! comparing like for like (DESIGN.md §10).
+
+/// Handle to one pooled transaction: `lanes` f32 values living in the
+/// arena's lane class `class` at slot `slot`. 8 bytes, `Copy` — FIFOs
+/// move these by value; only the arena touches the payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Txn {
+    class: u16,
+    lanes: u16,
+    slot: u32,
+}
+
+impl Txn {
+    /// Lane width of the payload — carried in the handle so a FIFO can
+    /// enforce its lane invariant without an arena reference.
+    pub fn lanes(&self) -> usize {
+        self.lanes as usize
+    }
+}
+
+/// One lane-width class: a contiguous slab of `slots × lanes` values
+/// plus the free list of recyclable slot indices. Liveness is counted
+/// arena-wide (a single simultaneous high-water mark across classes).
+#[derive(Debug, Default)]
+struct LaneClass {
+    lanes: usize,
+    data: Vec<f32>,
+    free: Vec<u32>,
+    /// Slot liveness, for double-free/use-after-free debug assertions.
+    live_flag: Vec<bool>,
+    slots: u32,
+}
+
+impl LaneClass {
+    fn new(lanes: usize) -> LaneClass {
+        LaneClass { lanes, ..LaneClass::default() }
+    }
+}
+
+/// Aggregate arena counters, surfaced through
+/// [`super::stats::SimStats`], the `BENCH_sim.json` `arena` block and
+/// the `dse --verify` report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Distinct lane-width classes (slabs).
+    pub classes: usize,
+    /// Slots ever carved across all slabs — flat across repeated runs
+    /// of the same design once the first run established the peak.
+    pub slots: u64,
+    /// Slots currently checked out.
+    pub live: u64,
+    /// High-water mark of simultaneously live slots.
+    pub peak_live: u64,
+    /// Allocations served from a free list instead of slab growth.
+    pub recycle_hits: u64,
+    /// High-water-mark resets performed.
+    pub resets: u64,
+}
+
+impl ArenaStats {
+    /// Fold another arena's counters in (pool-level aggregation):
+    /// capacity and activity counters sum, but `classes` takes the max
+    /// — pool members simulating the same workloads carry the *same*
+    /// lane classes, so summing would overcount the distinct widths.
+    pub fn accumulate(&mut self, other: &ArenaStats) {
+        self.classes = self.classes.max(other.classes);
+        self.slots += other.slots;
+        self.live += other.live;
+        self.peak_live += other.peak_live;
+        self.recycle_hits += other.recycle_hits;
+        self.resets += other.resets;
+    }
+}
+
+/// The per-simulation transaction slab allocator.
+#[derive(Debug, Default)]
+pub struct Arena {
+    classes: Vec<LaneClass>,
+    /// O(1) lane-width → class lookup (class index + 1; 0 = unmapped),
+    /// indexed by lane width — `alloc` sits in the engines' innermost
+    /// loop, so no per-transaction scan of the class list.
+    class_by_lanes: Vec<u32>,
+    /// Currently live slots, across all classes.
+    live: u64,
+    /// True high-water mark of *simultaneously* live slots.
+    peak_live: u64,
+    recycle_hits: u64,
+    resets: u64,
+    /// Staging buffer for intra-arena copies (issuer wide→narrow
+    /// splits), reused so the hot loop never allocates.
+    scratch: Vec<f32>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// Class index for a lane width, creating the class on first use.
+    fn class_for(&mut self, lanes: usize) -> usize {
+        assert!(lanes <= u16::MAX as usize, "arena lane width limit exceeded");
+        if lanes >= self.class_by_lanes.len() {
+            self.class_by_lanes.resize(lanes + 1, 0);
+        }
+        let mapped = self.class_by_lanes[lanes];
+        if mapped != 0 {
+            return (mapped - 1) as usize;
+        }
+        assert!(self.classes.len() < u16::MAX as usize, "arena lane-class limit exceeded");
+        self.classes.push(LaneClass::new(lanes));
+        self.class_by_lanes[lanes] = self.classes.len() as u32;
+        self.classes.len() - 1
+    }
+
+    /// Check out a `lanes`-wide slot. Served from the lane class's free
+    /// list when possible (a recycle hit); slab growth otherwise. The
+    /// caller must fully initialise the payload before publishing the
+    /// handle.
+    pub fn alloc(&mut self, lanes: usize) -> Txn {
+        let class = self.class_for(lanes);
+        let c = &mut self.classes[class];
+        let slot = match c.free.pop() {
+            Some(s) => {
+                self.recycle_hits += 1;
+                s
+            }
+            None => {
+                let s = c.slots;
+                c.slots += 1;
+                c.data.resize(c.data.len() + lanes, 0.0);
+                c.live_flag.push(false);
+                s
+            }
+        };
+        debug_assert!(!c.live_flag[slot as usize], "allocated a live arena slot");
+        c.live_flag[slot as usize] = true;
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+        Txn { class: class as u16, lanes: lanes as u16, slot }
+    }
+
+    /// Check out a slot pre-filled from `values`.
+    pub fn alloc_from(&mut self, values: &[f32]) -> Txn {
+        let t = self.alloc(values.len());
+        self.get_mut(t).copy_from_slice(values);
+        t
+    }
+
+    /// Check out a `lanes`-wide slot holding `src[offset ..
+    /// offset+lanes]` of an existing slot, zero-filled past the
+    /// source's end — the issuer's wide→narrow split. Staged through
+    /// the arena's scratch buffer because source and destination may
+    /// share a slab.
+    pub fn alloc_copy_sub(&mut self, src: Txn, offset: usize, lanes: usize) -> Txn {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        {
+            let s = self.get(src);
+            for l in 0..lanes {
+                scratch.push(s.get(offset + l).copied().unwrap_or(0.0));
+            }
+        }
+        let t = self.alloc(lanes);
+        self.get_mut(t).copy_from_slice(&scratch);
+        self.scratch = scratch;
+        t
+    }
+
+    /// Return a consumed slot to its free list, making it the next
+    /// allocation's recycle hit.
+    pub fn free(&mut self, t: Txn) {
+        let c = &mut self.classes[t.class as usize];
+        debug_assert_eq!(c.lanes, t.lanes as usize, "handle/class lane mismatch");
+        debug_assert!(c.live_flag[t.slot as usize], "double free of arena slot");
+        c.live_flag[t.slot as usize] = false;
+        self.live -= 1;
+        c.free.push(t.slot);
+    }
+
+    /// The payload of a live slot.
+    pub fn get(&self, t: Txn) -> &[f32] {
+        let c = &self.classes[t.class as usize];
+        debug_assert!(c.live_flag[t.slot as usize], "read of a freed arena slot");
+        let base = t.slot as usize * c.lanes;
+        &c.data[base..base + c.lanes]
+    }
+
+    /// Mutable payload of a live slot.
+    pub fn get_mut(&mut self, t: Txn) -> &mut [f32] {
+        let c = &mut self.classes[t.class as usize];
+        debug_assert!(c.live_flag[t.slot as usize], "write to a freed arena slot");
+        let base = t.slot as usize * c.lanes;
+        &mut c.data[base..base + c.lanes]
+    }
+
+    /// High-water-mark reset: every slot returns to its free list and
+    /// the live count drops to zero, but slabs, slot counts and
+    /// `peak_live` persist — the next run reuses the established
+    /// capacity and allocates nothing in steady state.
+    pub fn reset(&mut self) {
+        for c in &mut self.classes {
+            c.free.clear();
+            c.free.extend((0..c.slots).rev());
+            c.live_flag.fill(false);
+        }
+        self.live = 0;
+        self.resets += 1;
+    }
+
+    /// Counter snapshot across all lane classes.
+    pub fn stats(&self) -> ArenaStats {
+        let mut s = ArenaStats {
+            classes: self.classes.len(),
+            live: self.live,
+            peak_live: self.peak_live,
+            recycle_hits: self.recycle_hits,
+            resets: self.resets,
+            ..ArenaStats::default()
+        };
+        for c in &self.classes {
+            s.slots += c.slots as u64;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_recycles_the_slot() {
+        let mut a = Arena::new();
+        let t1 = a.alloc_from(&[1.0, 2.0]);
+        assert_eq!(a.get(t1), &[1.0, 2.0]);
+        assert_eq!(t1.lanes(), 2);
+        a.free(t1);
+        let t2 = a.alloc(2);
+        // LIFO free list: the freed slot comes straight back
+        assert_eq!(a.stats().slots, 1);
+        assert_eq!(a.stats().recycle_hits, 1);
+        a.get_mut(t2).copy_from_slice(&[3.0, 4.0]);
+        assert_eq!(a.get(t2), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn lane_classes_are_segregated() {
+        let mut a = Arena::new();
+        let w = a.alloc_from(&[1.0, 2.0, 3.0, 4.0]);
+        let n = a.alloc_from(&[9.0]);
+        assert_eq!(a.stats().classes, 2);
+        assert_eq!(a.get(w).len(), 4);
+        assert_eq!(a.get(n).len(), 1);
+        a.free(w);
+        // freeing the wide slot cannot satisfy a narrow allocation
+        let n2 = a.alloc(1);
+        assert_eq!(a.stats().slots, 3, "narrow alloc must not recycle the wide slot");
+        assert_eq!(a.get(n2).len(), 1);
+    }
+
+    #[test]
+    fn peak_live_tracks_the_high_water_mark() {
+        let mut a = Arena::new();
+        let ts: Vec<Txn> = (0..5).map(|i| a.alloc_from(&[i as f32])).collect();
+        assert_eq!(a.stats().peak_live, 5);
+        for t in ts {
+            a.free(t);
+        }
+        assert_eq!(a.stats().live, 0);
+        assert_eq!(a.stats().peak_live, 5, "peak survives frees");
+    }
+
+    #[test]
+    fn reset_keeps_slabs_and_peak_but_zeroes_live() {
+        let mut a = Arena::new();
+        let t = a.alloc_from(&[1.0, 2.0]);
+        let _leaked = a.alloc_from(&[3.0, 4.0]); // deliberately not freed
+        a.free(t);
+        a.reset();
+        let s = a.stats();
+        assert_eq!(s.live, 0);
+        assert_eq!(s.slots, 2);
+        assert_eq!(s.peak_live, 2);
+        assert_eq!(s.resets, 1);
+        // post-reset allocations reuse the established slabs
+        let _r1 = a.alloc(2);
+        let _r2 = a.alloc(2);
+        assert_eq!(a.stats().slots, 2, "reset must not grow slabs");
+        assert!(a.stats().recycle_hits >= 2);
+    }
+
+    #[test]
+    fn copy_sub_zero_pads_past_the_source() {
+        let mut a = Arena::new();
+        let wide = a.alloc_from(&[1.0, 2.0, 3.0, 4.0]);
+        let lo = a.alloc_copy_sub(wide, 0, 2);
+        let hi = a.alloc_copy_sub(wide, 2, 2);
+        let off_end = a.alloc_copy_sub(wide, 3, 2);
+        assert_eq!(a.get(lo), &[1.0, 2.0]);
+        assert_eq!(a.get(hi), &[3.0, 4.0]);
+        assert_eq!(a.get(off_end), &[4.0, 0.0], "out-of-range lanes zero-fill");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "double free")]
+    fn double_free_asserts_in_debug() {
+        let mut a = Arena::new();
+        let t = a.alloc_from(&[1.0]);
+        a.free(t);
+        a.free(t);
+    }
+
+    #[test]
+    fn stats_accumulate_sums_capacity_and_maxes_classes() {
+        let mut a = Arena::new();
+        let mut b = Arena::new();
+        let t = a.alloc_from(&[1.0]);
+        a.free(t);
+        let _ = a.alloc(1);
+        let _b1 = b.alloc_from(&[1.0]);
+        let _b2 = b.alloc_from(&[1.0, 2.0]);
+        let mut sum = a.stats();
+        sum.accumulate(&b.stats());
+        // capacity/activity counters sum; classes take the max (pool
+        // members over the same workloads share their lane widths)
+        assert_eq!(sum.classes, 2);
+        assert_eq!(sum.slots, 3);
+        assert_eq!(sum.live, 3);
+        assert_eq!(sum.recycle_hits, 1);
+    }
+}

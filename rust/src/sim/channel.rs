@@ -1,9 +1,13 @@
 //! Bounded FIFO channels carrying wide transactions.
+//!
+//! Since the arena refactor (DESIGN.md §10) a [`Txn`] is a `Copy`
+//! handle into the per-simulation [`super::arena::Arena`]; FIFOs queue
+//! handles by value and never touch the payload, so a push/pop hop
+//! moves 8 bytes instead of reallocating a `Box<[f32]>`.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
-/// One transaction: `lanes` f32 values.
-pub type Txn = Box<[f32]>;
+pub use super::arena::Txn;
 
 /// A FIFO with bounded capacity (transactions).
 #[derive(Debug)]
@@ -45,11 +49,18 @@ impl Fifo {
         !self.is_full()
     }
 
+    /// The channel invariant: every transaction entering this FIFO is
+    /// exactly `lanes` wide. One shared check so the bounded and
+    /// unbounded push paths cannot drift apart.
+    fn check_lanes(&self, t: Txn) {
+        debug_assert_eq!(t.lanes(), self.lanes, "channel {} lane mismatch", self.name);
+    }
+
     pub fn push(&mut self, t: Txn) -> Result<(), Txn> {
         if self.is_full() {
             return Err(t);
         }
-        debug_assert_eq!(t.len(), self.lanes, "channel {} lane mismatch", self.name);
+        self.check_lanes(t);
         self.q.push_back(t);
         self.pushed += 1;
         Ok(())
@@ -63,13 +74,14 @@ impl Fifo {
         t
     }
 
-    pub fn peek(&self) -> Option<&Txn> {
-        self.q.front()
+    pub fn peek(&self) -> Option<Txn> {
+        self.q.front().copied()
     }
 
-    /// Unbounded push for the functional mode.
+    /// Unbounded push for the functional mode. Enforces the same lane
+    /// invariant as [`Fifo::push`].
     pub fn push_unbounded(&mut self, t: Txn) {
-        debug_assert_eq!(t.len(), self.lanes);
+        self.check_lanes(t);
         self.q.push_back(t);
         self.pushed += 1;
     }
@@ -86,15 +98,30 @@ impl Fifo {
 }
 
 /// The pool of channels of a running design, indexed by id; modules
-/// hold pre-resolved indices so the hot loop never hashes names.
+/// hold pre-resolved indices so the hot loop never hashes names, and
+/// name lookups go through a map built at construction instead of an
+/// O(n) string scan per call.
 #[derive(Debug, Default)]
 pub struct Channels {
-    pub fifos: Vec<Fifo>,
+    /// Indexed FIFO storage. `pub(crate)` so external code cannot push
+    /// past [`Channels::add`] and leave the name index stale (the same
+    /// footgun class PR 4 closed for `BuildSpec.sdfg`); in-crate code
+    /// indexes it directly on the hot path.
+    pub(crate) fifos: Vec<Fifo>,
+    index: HashMap<String, usize>,
 }
 
 impl Channels {
+    /// Register a channel, recording its index under its name (first
+    /// registration wins on a duplicate name, matching the old linear
+    /// scan's first-match semantics).
+    pub fn add(&mut self, f: Fifo) {
+        self.index.entry(f.name.clone()).or_insert(self.fifos.len());
+        self.fifos.push(f);
+    }
+
     pub fn index_of(&self, name: &str) -> Option<usize> {
-        self.fifos.iter().position(|f| f.name == name)
+        self.index.get(name).copied()
     }
 
     pub fn by_name(&mut self, name: &str) -> &mut Fifo {
@@ -110,15 +137,21 @@ impl Channels {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::arena::Arena;
 
     #[test]
     fn fifo_order_and_capacity() {
+        let mut ar = Arena::new();
         let mut f = Fifo::new("s", 2, 2);
-        assert!(f.push(vec![1.0, 2.0].into()).is_ok());
-        assert!(f.push(vec![3.0, 4.0].into()).is_ok());
+        assert!(f.push(ar.alloc_from(&[1.0, 2.0])).is_ok());
+        assert!(f.push(ar.alloc_from(&[3.0, 4.0])).is_ok());
         assert!(f.is_full());
-        assert!(f.push(vec![5.0, 6.0].into()).is_err());
-        assert_eq!(&*f.pop().unwrap(), &[1.0, 2.0]);
+        let overflow = ar.alloc_from(&[5.0, 6.0]);
+        assert!(f.push(overflow).is_err());
+        ar.free(overflow);
+        let t = f.pop().unwrap();
+        assert_eq!(ar.get(t), &[1.0, 2.0]);
+        ar.free(t);
         assert_eq!(f.pushed, 2);
         assert_eq!(f.popped, 1);
         assert_eq!(f.activity(), 3);
@@ -126,11 +159,14 @@ mod tests {
 
     #[test]
     fn channels_lookup() {
+        let mut ar = Arena::new();
         let mut ch = Channels::default();
-        ch.fifos.push(Fifo::new("a", 1, 4));
-        ch.fifos.push(Fifo::new("b", 1, 4));
+        ch.add(Fifo::new("a", 1, 4));
+        ch.add(Fifo::new("b", 1, 4));
         assert_eq!(ch.index_of("b"), Some(1));
-        ch.by_name("a").push_unbounded(vec![7.0].into());
+        assert_eq!(ch.index_of("a"), Some(0));
+        assert_eq!(ch.index_of("ghost"), None);
+        ch.by_name("a").push_unbounded(ar.alloc_from(&[7.0]));
         assert!(!ch.all_empty());
     }
 
@@ -139,5 +175,34 @@ mod tests {
     fn unknown_channel_panics() {
         let mut ch = Channels::default();
         ch.by_name("ghost");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "lane mismatch")]
+    fn bounded_push_rejects_mismatched_lane_width() {
+        let mut ar = Arena::new();
+        let mut f = Fifo::new("s", 2, 4);
+        let _ = f.push(ar.alloc_from(&[1.0, 2.0, 3.0])); // 3 lanes into a 2-lane channel
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "lane mismatch")]
+    fn unbounded_push_rejects_mismatched_lane_width() {
+        let mut ar = Arena::new();
+        let mut f = Fifo::new("s", 2, 4);
+        f.push_unbounded(ar.alloc_from(&[1.0])); // 1 lane into a 2-lane channel
+    }
+
+    #[test]
+    fn peek_returns_the_front_handle() {
+        let mut ar = Arena::new();
+        let mut f = Fifo::new("s", 1, 4);
+        assert_eq!(f.peek(), None);
+        let t = ar.alloc_from(&[42.0]);
+        f.push_unbounded(t);
+        assert_eq!(f.peek(), Some(t));
+        assert_eq!(f.len(), 1, "peek must not consume");
     }
 }

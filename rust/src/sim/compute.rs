@@ -8,6 +8,7 @@
 //! build time; evaluation is then a branch-predictable loop with no
 //! allocation and no hashing.
 
+use super::arena::{Arena, Txn};
 use crate::ir::{BinOp, TaskExpr, Tasklet, UnOp};
 
 /// One stack-machine instruction.
@@ -157,6 +158,31 @@ impl CompiledTasklet {
         }
         debug_assert_eq!(sp, 1);
         stack[0]
+    }
+
+    /// Evaluate the program across `out.len()` lanes, gathering each
+    /// lane's positional inputs from the popped arena transactions
+    /// (`vals` and `stack` are the caller's reusable scratch buffers;
+    /// `vals.len()` must equal `popped.len()`). A narrower input
+    /// broadcasts its last lane, matching the pre-arena gather. Results
+    /// are staged into `out` so the caller can free the inputs before
+    /// allocating the output slot — the pop-to-push recycling step.
+    #[inline]
+    pub fn eval_lanes(
+        &self,
+        arena: &Arena,
+        popped: &[Txn],
+        vals: &mut [f32],
+        stack: &mut [f32],
+        out: &mut [f32],
+    ) {
+        for (lane, o) in out.iter_mut().enumerate() {
+            for (pos, t) in popped.iter().enumerate() {
+                let s = arena.get(*t);
+                vals[pos] = s[lane.min(s.len() - 1)];
+            }
+            *o = self.eval(vals, stack);
+        }
     }
 }
 

@@ -1,5 +1,16 @@
 //! The three execution modes over a design netlist.
+//!
+//! All modes move their transactions through a pooled [`Arena`]
+//! (DESIGN.md §10). The plain entry points create a private arena; the
+//! `_in` variants run inside a caller-provided one, so repeated runs —
+//! a DSE verify sweep, the bench's timed iterations, the two engines
+//! inside [`exact_engines_agree`] — reuse the slabs the first run
+//! established and allocate nothing in steady state. Every `_in` entry
+//! performs a high-water-mark [`Arena::reset`] on entry (slabs and
+//! peaks persist; live slots from an aborted previous run are
+//! reclaimed).
 
+use super::arena::{Arena, ArenaStats};
 use super::channel::{Channels, Fifo};
 use super::memory::Hbm;
 use super::process::Proc;
@@ -18,7 +29,7 @@ pub struct SimOutcome {
 fn build_channels(design: &Design) -> Channels {
     let mut ch = Channels::default();
     for c in &design.channels {
-        ch.fifos.push(Fifo::new(&c.name, c.lanes, c.depth));
+        ch.add(Fifo::new(&c.name, c.lanes, c.depth));
     }
     ch
 }
@@ -65,7 +76,18 @@ fn fast_time_base(design: &Design) -> u64 {
 /// Functional execution: dataflow order, unbounded queues, real data.
 /// `hbm` must hold every input container; output containers are
 /// allocated automatically.
-pub fn run_functional(design: &Design, mut hbm: Hbm) -> Result<SimOutcome, String> {
+pub fn run_functional(design: &Design, hbm: Hbm) -> Result<SimOutcome, String> {
+    run_functional_in(design, hbm, &mut Arena::new())
+}
+
+/// [`run_functional`] inside a caller-provided transaction arena (one
+/// high-water-mark reset on entry, slabs reused across runs).
+pub fn run_functional_in(
+    design: &Design,
+    mut hbm: Hbm,
+    arena: &mut Arena,
+) -> Result<SimOutcome, String> {
+    arena.reset();
     for (name, elems, _) in &design.arrays {
         hbm.alloc(name, *elems);
     }
@@ -84,7 +106,7 @@ pub fn run_functional(design: &Design, mut hbm: Hbm) -> Result<SimOutcome, Strin
         loop {
             let mut any = false;
             for p in procs.iter_mut() {
-                if p.drain_functional(&mut ch, &mut hbm) {
+                if p.drain_functional(&mut ch, arena, &mut hbm) {
                     any = true;
                 }
             }
@@ -116,8 +138,9 @@ pub fn run_functional(design: &Design, mut hbm: Hbm) -> Result<SimOutcome, Strin
             .collect();
         return Err(format!("tokens left in channels: {leftover:?}"));
     }
+    debug_assert_eq!(arena.stats().live, 0, "transaction slots leaked");
     Ok(SimOutcome {
-        stats: SimStats { transactions, ..Default::default() },
+        stats: SimStats { transactions, arena: arena.stats(), ..Default::default() },
         hbm,
     })
 }
@@ -130,7 +153,20 @@ pub fn run_functional(design: &Design, mut hbm: Hbm) -> Result<SimOutcome, Strin
 /// semantics, stall/busy accounting and error messages are identical
 /// to the legacy stepper ([`run_exact_reference`]) — asserted by the
 /// property tests in `rust/tests/properties.rs`.
-pub fn run_exact(design: &Design, mut hbm: Hbm, max_cycles: u64) -> Result<SimOutcome, String> {
+pub fn run_exact(design: &Design, hbm: Hbm, max_cycles: u64) -> Result<SimOutcome, String> {
+    run_exact_in(design, hbm, max_cycles, &mut Arena::new())
+}
+
+/// [`run_exact`] inside a caller-provided transaction arena (one
+/// high-water-mark reset on entry, slabs reused across runs — the DSE
+/// evaluation loop's zero-steady-state-allocation path).
+pub fn run_exact_in(
+    design: &Design,
+    mut hbm: Hbm,
+    max_cycles: u64,
+    arena: &mut Arena,
+) -> Result<SimOutcome, String> {
+    arena.reset();
     for (name, elems, _) in &design.arrays {
         hbm.alloc(name, *elems);
     }
@@ -276,7 +312,7 @@ pub fn run_exact(design: &Design, mut hbm: Hbm, max_cycles: u64) -> Result<SimOu
                 for (k, &c) in chans.iter().enumerate() {
                     scratch[k] = ch.fifos[c].activity();
                 }
-                let prog = procs[i].tick(t, &mut ch, &mut hbm);
+                let prog = procs[i].tick(t, &mut ch, arena, &mut hbm);
                 if prog {
                     progress = true;
                     awake[i] = true;
@@ -343,6 +379,7 @@ pub fn run_exact(design: &Design, mut hbm: Hbm, max_cycles: u64) -> Result<SimOu
         .unwrap_or_default();
     let modules = procs.iter().map(|p| (p.label.clone(), p.busy, p.stalls)).collect();
     let transactions = ch.fifos.iter().map(|f| f.pushed).sum();
+    debug_assert_eq!(arena.stats().live, 0, "transaction slots leaked");
     Ok(SimOutcome {
         stats: SimStats {
             slow_cycles,
@@ -350,6 +387,7 @@ pub fn run_exact(design: &Design, mut hbm: Hbm, max_cycles: u64) -> Result<SimOu
             bottleneck,
             modules,
             transactions,
+            arena: arena.stats(),
         },
         hbm,
     })
@@ -367,8 +405,26 @@ pub fn exact_engines_agree(
     max_cycles: u64,
     outputs: &[&str],
 ) -> Result<(), String> {
-    let e = run_exact(design, hbm.clone(), max_cycles).map_err(|err| format!("event: {err}"))?;
-    let r = run_exact_reference(design, hbm, max_cycles)
+    exact_engines_agree_in(design, hbm, max_cycles, outputs, &mut Arena::new())
+}
+
+/// [`exact_engines_agree`] with both engines sharing one caller-owned
+/// arena — like for like: the event engine and the oracle stepper move
+/// their transactions through the same slabs, and the slot identities a
+/// recycling data plane hands out provably never influence cycle
+/// counts, counters or outputs. (Arena counters themselves are *not*
+/// part of the equality contract: the second engine inherits the
+/// first's warmed free lists, so its recycle hits legitimately differ.)
+pub fn exact_engines_agree_in(
+    design: &Design,
+    hbm: Hbm,
+    max_cycles: u64,
+    outputs: &[&str],
+    arena: &mut Arena,
+) -> Result<(), String> {
+    let e = run_exact_in(design, hbm.clone(), max_cycles, arena)
+        .map_err(|err| format!("event: {err}"))?;
+    let r = run_exact_reference_in(design, hbm, max_cycles, arena)
         .map_err(|err| format!("reference: {err}"))?;
     if e.stats.slow_cycles != r.stats.slow_cycles {
         return Err(format!(
@@ -415,9 +471,20 @@ pub fn exact_engines_agree(
 /// everywhere else.
 pub fn run_exact_reference(
     design: &Design,
-    mut hbm: Hbm,
+    hbm: Hbm,
     max_cycles: u64,
 ) -> Result<SimOutcome, String> {
+    run_exact_reference_in(design, hbm, max_cycles, &mut Arena::new())
+}
+
+/// [`run_exact_reference`] inside a caller-provided transaction arena.
+pub fn run_exact_reference_in(
+    design: &Design,
+    mut hbm: Hbm,
+    max_cycles: u64,
+    arena: &mut Arena,
+) -> Result<SimOutcome, String> {
+    arena.reset();
     for (name, elems, _) in &design.arrays {
         hbm.alloc(name, *elems);
     }
@@ -442,7 +509,7 @@ pub fn run_exact_reference(
                         fast_t % (factor / (f as u64)).max(1) == 0
                     }
                 };
-                if ticks_now && p.tick(fast_t, &mut ch, &mut hbm) {
+                if ticks_now && p.tick(fast_t, &mut ch, arena, &mut hbm) {
                     any = true;
                 }
             }
@@ -484,6 +551,7 @@ pub fn run_exact_reference(
         .unwrap_or_default();
     let modules = procs.iter().map(|p| (p.label.clone(), p.busy, p.stalls)).collect();
     let transactions = ch.fifos.iter().map(|f| f.pushed).sum();
+    debug_assert_eq!(arena.stats().live, 0, "transaction slots leaked");
     Ok(SimOutcome {
         stats: SimStats {
             slow_cycles,
@@ -491,6 +559,7 @@ pub fn run_exact_reference(
             bottleneck,
             modules,
             transactions,
+            arena: arena.stats(),
         },
         hbm,
     })
@@ -574,6 +643,7 @@ pub fn rate_model(design: &Design) -> SimStats {
         bottleneck: worst.1,
         modules,
         transactions: 0,
+        arena: ArenaStats::default(),
     }
 }
 
@@ -734,5 +804,48 @@ mod tests {
         let r = run_exact_reference(&d, input_hbm(4096, 8), 10).unwrap_err();
         assert_eq!(e, r);
         assert!(e.contains("exceeded"), "{e}");
+    }
+
+    #[test]
+    fn arena_steady_state_allocates_nothing_across_runs() {
+        // the allocation-regression gate: a golden-scale vecadd run
+        // establishes the arena's slabs; an identical second run on the
+        // same arena must be served entirely from recycled slots —
+        // identical slab/slot counts and high-water mark, with every
+        // allocation a recycle hit
+        let n = 4096usize; // apps::vecadd::GOLDEN_N
+        let d = vecadd_design(n as i64, 8, true);
+        let mut arena = Arena::new();
+        let first = run_exact_in(&d, input_hbm(n, 9), 10_000_000, &mut arena).unwrap();
+        let s1 = arena.stats();
+        assert!(s1.slots > 0 && s1.peak_live > 0);
+        assert!(s1.recycle_hits > 0, "pop-to-push hops must recycle slots mid-run");
+        let second = run_exact_in(&d, input_hbm(n, 9), 10_000_000, &mut arena).unwrap();
+        let s2 = arena.stats();
+        assert_eq!(s2.classes, s1.classes, "no new lane classes in steady state");
+        assert_eq!(s2.slots, s1.slots, "no new slots in steady state");
+        assert_eq!(s2.peak_live, s1.peak_live, "high-water mark must stay flat");
+        // flat slots + flat peak ⇒ every second-run allocation was
+        // served from a free list (slab growth is the only other path)
+        assert!(s2.recycle_hits > s1.recycle_hits);
+        // and the pooled run is semantically identical to a fresh one
+        let fresh = run_exact(&d, input_hbm(n, 9), 10_000_000).unwrap();
+        assert_eq!(first.stats.slow_cycles, fresh.stats.slow_cycles);
+        assert_eq!(second.hbm.read("z"), fresh.hbm.read("z"));
+    }
+
+    #[test]
+    fn shared_arena_engines_agree_and_report_stats() {
+        let n = 512usize;
+        let d = vecadd_design(n as i64, 4, true);
+        let mut arena = Arena::new();
+        exact_engines_agree_in(&d, input_hbm(n, 10), 10_000_000, &["z"], &mut arena)
+            .unwrap();
+        let s = arena.stats();
+        assert!(s.slots > 0 && s.recycle_hits > 0 && s.live == 0);
+        // the outcome snapshots the arena counters for stats surfacing
+        let out = run_exact_in(&d, input_hbm(n, 10), 10_000_000, &mut arena).unwrap();
+        assert_eq!(out.stats.arena.slots, s.slots);
+        assert!(out.stats.arena.recycle_hits > s.recycle_hits);
     }
 }

@@ -38,6 +38,28 @@ impl Hbm {
     pub fn contains(&self, name: &str) -> bool {
         self.banks.contains_key(name)
     }
+
+    /// Fill `dst` from `name[base..]`, zero-filling reads past the end
+    /// of the container — the reader datapath's gather, centralised so
+    /// the short-input padding semantics live in one place. Panics on a
+    /// missing container, like [`Hbm::read`].
+    pub fn fetch(&self, name: &str, base: usize, dst: &mut [f32]) {
+        let mem = self.read(name);
+        for (l, d) in dst.iter_mut().enumerate() {
+            *d = mem.get(base + l).copied().unwrap_or(0.0);
+        }
+    }
+
+    /// Store `src` at `name[base..]`, silently clamping writes past the
+    /// end of the container — the writer datapath's scatter.
+    pub fn store(&mut self, name: &str, base: usize, src: &[f32]) {
+        let mem = self.read_mut(name);
+        for (l, v) in src.iter().enumerate() {
+            if base + l < mem.len() {
+                mem[base + l] = *v;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -68,5 +90,17 @@ mod tests {
     #[should_panic(expected = "not loaded")]
     fn missing_container_panics() {
         Hbm::new().read("ghost");
+    }
+
+    #[test]
+    fn fetch_zero_fills_and_store_clamps() {
+        let mut h = Hbm::new();
+        h.load("x", vec![1.0, 2.0, 3.0]);
+        let mut dst = [0.0f32; 2];
+        h.fetch("x", 2, &mut dst);
+        assert_eq!(dst, [3.0, 0.0], "reads past the end zero-fill");
+        h.load("z", vec![0.0; 2]);
+        h.store("z", 1, &[7.0, 8.0]); // second value falls off the end
+        assert_eq!(h.read("z"), &[0.0, 7.0]);
     }
 }

@@ -27,7 +27,13 @@
 //! Hardware wall-clock time is then `cycles / effective_clock` with the
 //! effective clock from the timing model — the quantity the paper's
 //! Time/Perf rows report.
+//!
+//! All modes move transactions through the pooled [`arena::Arena`]
+//! (slot handles + per-lane-class free lists, DESIGN.md §10): the
+//! `*_in` engine variants share a caller-owned arena across runs so a
+//! DSE evaluation loop performs zero steady-state heap allocation.
 
+pub mod arena;
 pub mod channel;
 pub mod compute;
 pub mod engine;
@@ -36,8 +42,10 @@ pub mod process;
 pub mod stats;
 pub mod trace;
 
+pub use arena::{Arena, ArenaStats, Txn};
 pub use engine::{
-    exact_engines_agree, rate_model, run_exact, run_exact_reference, run_functional, SimOutcome,
+    exact_engines_agree, exact_engines_agree_in, rate_model, run_exact, run_exact_in,
+    run_exact_reference, run_exact_reference_in, run_functional, run_functional_in, SimOutcome,
 };
 pub use memory::Hbm;
 pub use stats::SimStats;

@@ -6,7 +6,16 @@
 //! [`Proc::drain_functional`] processes everything available with
 //! unbounded queues (functional mode). Both share the same data path
 //! code, so they cannot diverge functionally.
+//!
+//! Transactions live in the caller's [`Arena`] (DESIGN.md §10): a
+//! datapath pops handles, reads payloads through the arena, frees what
+//! it consumed and allocates what it produces — the free-then-alloc
+//! order on every pop-to-push hop recycles the just-freed slot, so the
+//! steady state allocates nothing. Every slot is fully written before
+//! its handle is pushed; capacity checks precede allocations so a
+//! blocked push never strands a fresh slot.
 
+use super::arena::Arena;
 use super::channel::{Channels, Txn};
 use super::memory::Hbm;
 use crate::codegen::design::ModuleSpec;
@@ -57,12 +66,18 @@ pub enum ProcState {
         fired: usize,
         ii: u64,
         cooldown: u64,
-        /// In-flight pipeline: (ready_at_tick, txn).
+        /// In-flight pipeline: (ready_at_tick, txn handle).
         pipe: std::collections::VecDeque<(u64, Txn)>,
         latency: u64,
         /// Scratch buffers reused across firings (no hot-loop allocs).
         stack: Vec<f32>,
         vals: Vec<f32>,
+        /// Popped input handles of the current firing.
+        popped: Vec<Txn>,
+        /// Per-lane evaluation results staged before the output slot is
+        /// allocated (inputs must be read — and freed — first so the
+        /// output allocation recycles one of their slots).
+        outbuf: Vec<f32>,
     },
     Sync {
         input: usize,
@@ -178,6 +193,8 @@ impl Proc {
                     latency: *latency,
                     stack,
                     vals: vec![0.0f32; inputs.len()],
+                    popped: Vec::with_capacity(inputs.len()),
+                    outbuf: vec![0.0f32; *lanes],
                 }
             }
             ModuleSpec::Sync { input, output } => {
@@ -357,8 +374,8 @@ impl Proc {
 
     /// One cycle in this process's clock domain. Returns true if the
     /// process made progress.
-    pub fn tick(&mut self, now: u64, ch: &mut Channels, hbm: &mut Hbm) -> bool {
-        let progressed = self.step(now, ch, hbm, false);
+    pub fn tick(&mut self, now: u64, ch: &mut Channels, arena: &mut Arena, hbm: &mut Hbm) -> bool {
+        let progressed = self.step(now, ch, arena, hbm, false);
         if progressed {
             self.busy += 1;
         } else if !self.done(ch) {
@@ -368,9 +385,14 @@ impl Proc {
     }
 
     /// Functional mode: loop steps until nothing more can be done.
-    pub fn drain_functional(&mut self, ch: &mut Channels, hbm: &mut Hbm) -> bool {
+    pub fn drain_functional(
+        &mut self,
+        ch: &mut Channels,
+        arena: &mut Arena,
+        hbm: &mut Hbm,
+    ) -> bool {
         let mut any = false;
-        while self.step(0, ch, hbm, true) {
+        while self.step(0, ch, arena, hbm, true) {
             any = true;
         }
         any
@@ -378,7 +400,14 @@ impl Proc {
 
     /// Shared datapath. `unbounded` disables capacity/II/latency
     /// modelling (functional mode).
-    fn step(&mut self, now: u64, ch: &mut Channels, hbm: &mut Hbm, unbounded: bool) -> bool {
+    fn step(
+        &mut self,
+        now: u64,
+        ch: &mut Channels,
+        arena: &mut Arena,
+        hbm: &mut Hbm,
+        unbounded: bool,
+    ) -> bool {
         match &mut self.state {
             ProcState::Reader { data, out, lanes, elems, pos, cycles_per_txn, credit } => {
                 if *pos >= *elems {
@@ -395,11 +424,8 @@ impl Proc {
                     }
                     *credit = 0;
                 }
-                let mem = hbm.read(data);
-                let base = *pos * *lanes;
-                let txn: Txn = (0..*lanes)
-                    .map(|l| mem.get(base + l).copied().unwrap_or(0.0))
-                    .collect();
+                let txn = arena.alloc(*lanes);
+                hbm.fetch(data, *pos * *lanes, arena.get_mut(txn));
                 if unbounded {
                     ch.fifos[*out].push_unbounded(txn);
                 } else {
@@ -425,13 +451,8 @@ impl Proc {
                 if !unbounded {
                     *credit = 0;
                 }
-                let mem = hbm.read_mut(data);
-                let base = *pos * *lanes;
-                for (l, v) in txn.iter().enumerate() {
-                    if base + l < mem.len() {
-                        mem[base + l] = *v;
-                    }
-                }
+                hbm.store(data, *pos * *lanes, arena.get(txn));
+                arena.free(txn);
                 *pos += 1;
                 true
             }
@@ -448,6 +469,8 @@ impl Proc {
                 latency,
                 stack,
                 vals,
+                popped,
+                outbuf,
             } => {
                 let mut progressed = false;
                 // retire finished transactions
@@ -471,23 +494,24 @@ impl Proc {
                 if inputs.iter().any(|i| ch.fifos[*i].is_empty()) {
                     return progressed;
                 }
-                let mut popped: Vec<Txn> = Vec::with_capacity(inputs.len());
+                popped.clear();
                 for i in inputs.iter() {
                     popped.push(ch.fifos[*i].pop().unwrap());
                 }
-                // evaluate per lane with the compiled stack program
-                let mut out = vec![0.0f32; *lanes];
-                for lane in 0..*lanes {
-                    for (pos, txn) in popped.iter().enumerate() {
-                        vals[pos] = txn[lane.min(txn.len() - 1)];
-                    }
-                    out[lane] = program.eval(vals, stack);
+                // evaluate per lane with the compiled stack program,
+                // staging results so the inputs can be freed before the
+                // output slot is allocated (recycling their slots)
+                program.eval_lanes(arena, popped, vals, stack, outbuf);
+                for t in popped.drain(..) {
+                    arena.free(t);
                 }
+                let txn = arena.alloc(*lanes);
+                arena.get_mut(txn).copy_from_slice(outbuf);
                 *fired += 1;
                 if unbounded {
-                    ch.fifos[*output].push_unbounded(out.into());
+                    ch.fifos[*output].push_unbounded(txn);
                 } else {
-                    pipe.push_back((now + *latency, out.into()));
+                    pipe.push_back((now + *latency, txn));
                     *cooldown = ii.saturating_sub(1);
                 }
                 true
@@ -499,6 +523,8 @@ impl Proc {
                 if !unbounded && !ch.fifos[*output].can_push() {
                     return false;
                 }
+                // same lane width on both sides: the handle moves
+                // through untouched — no copy, no allocation
                 let t = ch.fifos[*input].pop().unwrap();
                 if unbounded {
                     ch.fifos[*output].push_unbounded(t);
@@ -519,9 +545,9 @@ impl Proc {
                 }
                 let narrow_lanes = ch.fifos[*output].lanes;
                 let (wide, idx) = hold.as_mut().unwrap();
+                let wide = *wide;
                 let base = *idx * narrow_lanes;
-                let txn: Txn =
-                    (0..narrow_lanes).map(|l| wide.get(base + l).copied().unwrap_or(0.0)).collect();
+                let txn = arena.alloc_copy_sub(wide, base, narrow_lanes);
                 if unbounded {
                     ch.fifos[*output].push_unbounded(txn);
                 } else {
@@ -529,6 +555,7 @@ impl Proc {
                 }
                 *idx += 1;
                 if *idx >= *factor {
+                    arena.free(wide);
                     *hold = None;
                 }
                 true
@@ -538,7 +565,8 @@ impl Proc {
                 if accum.len() < *wide_lanes {
                     match ch.fifos[*input].pop() {
                         Some(t) => {
-                            accum.extend_from_slice(&t);
+                            accum.extend_from_slice(arena.get(t));
+                            arena.free(t);
                         }
                         None => return false,
                     }
@@ -547,7 +575,9 @@ impl Proc {
                     if !unbounded && !ch.fifos[*output].can_push() {
                         return false;
                     }
-                    let txn: Txn = accum.drain(..*wide_lanes).collect();
+                    let txn = arena.alloc(*wide_lanes);
+                    arena.get_mut(txn).copy_from_slice(&accum[..*wide_lanes]);
+                    accum.drain(..*wide_lanes);
                     if unbounded {
                         ch.fifos[*output].push_unbounded(txn);
                     } else {
@@ -576,13 +606,15 @@ impl Proc {
                 // ingest at most one txn per input per cycle
                 if a_buf.len() < *n * *k {
                     if let Some(t) = ch.fifos[*a_in].pop() {
-                        a_buf.extend_from_slice(&t);
+                        a_buf.extend_from_slice(arena.get(t));
+                        arena.free(t);
                         progressed = true;
                     }
                 }
                 if b_buf.len() < *k * *m {
                     if let Some(t) = ch.fifos[*b_in].pop() {
-                        b_buf.extend_from_slice(&t);
+                        b_buf.extend_from_slice(arena.get(t));
+                        arena.free(t);
                         progressed = true;
                     }
                 }
@@ -628,7 +660,8 @@ impl Proc {
                                 break;
                             }
                             let base = *c_pos * *lanes;
-                            let txn: Txn = c[base..base + *lanes].to_vec().into();
+                            let txn = arena.alloc(*lanes);
+                            arena.get_mut(txn).copy_from_slice(&c[base..base + *lanes]);
                             if unbounded {
                                 ch.fifos[*c_out].push_unbounded(txn);
                             } else {
@@ -665,7 +698,8 @@ impl Proc {
                 // ingest one txn
                 if *in_count < *total / *lanes {
                     if let Some(t) = ch.fifos[*input].pop() {
-                        ring.extend_from_slice(&t);
+                        ring.extend_from_slice(arena.get(t));
+                        arena.free(t);
                         *in_count += 1;
                         progressed = true;
                     }
@@ -679,11 +713,13 @@ impl Proc {
                     if !unbounded && !ch.fifos[*output].can_push() {
                         return progressed;
                     }
-                    let txn: Txn = (0..*lanes)
-                        .map(|l| {
-                            stencil_point(*kind, ring, want_out + l, *nx, *ny, *nz)
-                        })
-                        .collect();
+                    let txn = arena.alloc(*lanes);
+                    {
+                        let dst = arena.get_mut(txn);
+                        for (l, d) in dst.iter_mut().enumerate() {
+                            *d = stencil_point(*kind, ring, want_out + l, *nx, *ny, *nz);
+                        }
+                    }
                     if unbounded {
                         ch.fifos[*output].push_unbounded(txn);
                     } else {
@@ -721,9 +757,10 @@ impl Proc {
                     Some(t) => t,
                     None => return false,
                 };
+                let d = arena.get(t)[0];
+                arena.free(t);
                 let i = *pos / *n;
                 let j = *pos % *n;
-                let d = t[0];
                 // k=0 first pass: row/col 0 not yet buffered; capture
                 // directly (d[0][j] and d[i][0] stream before use only
                 // for i==0/j==0 — handle by capturing on the fly)
@@ -747,7 +784,8 @@ impl Proc {
                 if j == kn {
                     col_next[i] = relaxed;
                 }
-                let txn: Txn = vec![relaxed].into();
+                let txn = arena.alloc(1);
+                arena.get_mut(txn)[0] = relaxed;
                 if unbounded {
                     ch.fifos[*output].push_unbounded(txn);
                 } else {
@@ -803,7 +841,7 @@ mod tests {
     fn chans(names: &[(&str, usize, usize)]) -> Channels {
         let mut ch = Channels::default();
         for (n, lanes, cap) in names {
-            ch.fifos.push(Fifo::new(n, *lanes, *cap));
+            ch.add(Fifo::new(n, *lanes, *cap));
         }
         ch
     }
@@ -811,6 +849,7 @@ mod tests {
     #[test]
     fn reader_streams_memory() {
         let mut ch = chans(&[("s", 2, 8)]);
+        let mut ar = Arena::new();
         let mut hbm = Hbm::new();
         hbm.load("x", vec![1.0, 2.0, 3.0, 4.0]);
         let spec = ModuleSpec::Reader {
@@ -822,40 +861,55 @@ mod tests {
         };
         let mut p = Proc::build(&spec, ClockDomain::Slow, &ch);
         while !p.done(&ch) {
-            p.tick(0, &mut ch, &mut hbm);
+            p.tick(0, &mut ch, &mut ar, &mut hbm);
         }
-        assert_eq!(&*ch.by_name("s").pop().unwrap(), &[1.0, 2.0]);
-        assert_eq!(&*ch.by_name("s").pop().unwrap(), &[3.0, 4.0]);
+        let t = ch.by_name("s").pop().unwrap();
+        assert_eq!(ar.get(t), &[1.0, 2.0]);
+        ar.free(t);
+        let t = ch.by_name("s").pop().unwrap();
+        assert_eq!(ar.get(t), &[3.0, 4.0]);
+        ar.free(t);
     }
 
     #[test]
     fn issuer_splits_packer_packs() {
         let mut ch = chans(&[("w", 4, 4), ("n", 2, 8), ("w2", 4, 4)]);
+        let mut ar = Arena::new();
         let mut hbm = Hbm::new();
-        ch.by_name("w").push_unbounded(vec![1.0, 2.0, 3.0, 4.0].into());
+        let wide = ar.alloc_from(&[1.0, 2.0, 3.0, 4.0]);
+        ch.by_name("w").push_unbounded(wide);
         let mut issuer = Proc::build(
             &ModuleSpec::Issuer { input: "w".into(), output: "n".into(), factor: 2 },
             ClockDomain::Fast { factor: 2 },
             &ch,
         );
-        issuer.drain_functional(&mut ch, &mut hbm);
+        issuer.drain_functional(&mut ch, &mut ar, &mut hbm);
         assert_eq!(ch.by_name("n").len(), 2);
         let mut packer = Proc::build(
             &ModuleSpec::Packer { input: "n".into(), output: "w2".into(), factor: 2 },
             ClockDomain::Fast { factor: 2 },
             &ch,
         );
-        packer.drain_functional(&mut ch, &mut hbm);
-        assert_eq!(&*ch.by_name("w2").pop().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        packer.drain_functional(&mut ch, &mut ar, &mut hbm);
+        let t = ch.by_name("w2").pop().unwrap();
+        assert_eq!(ar.get(t), &[1.0, 2.0, 3.0, 4.0]);
+        ar.free(t);
+        // the wide input and the two narrow intermediates were all
+        // freed along the way: only the repacked wide txn was live
+        assert_eq!(ar.stats().live, 0);
+        assert!(ar.stats().recycle_hits > 0, "split→pack must recycle slots");
     }
 
     #[test]
     fn compute_applies_tasklet_per_lane() {
         use crate::ir::TaskExpr;
         let mut ch = chans(&[("a", 2, 8), ("b", 2, 8), ("o", 2, 8)]);
+        let mut ar = Arena::new();
         let mut hbm = Hbm::new();
-        ch.by_name("a").push_unbounded(vec![1.0, 2.0].into());
-        ch.by_name("b").push_unbounded(vec![10.0, 20.0].into());
+        let ta = ar.alloc_from(&[1.0, 2.0]);
+        let tb = ar.alloc_from(&[10.0, 20.0]);
+        ch.by_name("a").push_unbounded(ta);
+        ch.by_name("b").push_unbounded(tb);
         let spec = ModuleSpec::Compute {
             name: "add".into(),
             tasklet: Tasklet::new("add", vec![("o", TaskExpr::input("x").add(TaskExpr::input("y")))]),
@@ -867,16 +921,21 @@ mod tests {
             latency: 8,
         };
         let mut p = Proc::build(&spec, ClockDomain::Slow, &ch);
-        p.drain_functional(&mut ch, &mut hbm);
-        assert_eq!(&*ch.by_name("o").pop().unwrap(), &[11.0, 22.0]);
+        p.drain_functional(&mut ch, &mut ar, &mut hbm);
+        let t = ch.by_name("o").pop().unwrap();
+        assert_eq!(ar.get(t), &[11.0, 22.0]);
+        ar.free(t);
+        assert_eq!(ar.stats().live, 0, "consumed inputs must be freed");
     }
 
     #[test]
     fn compute_exact_mode_respects_latency() {
         use crate::ir::TaskExpr;
         let mut ch = chans(&[("a", 1, 8), ("o", 1, 8)]);
+        let mut ar = Arena::new();
         let mut hbm = Hbm::new();
-        ch.by_name("a").push_unbounded(vec![5.0].into());
+        let t = ar.alloc_from(&[5.0]);
+        ch.by_name("a").push_unbounded(t);
         let spec = ModuleSpec::Compute {
             name: "id".into(),
             tasklet: Tasklet::new("id", vec![("o", TaskExpr::input("x"))]),
@@ -888,10 +947,10 @@ mod tests {
             latency: 5,
         };
         let mut p = Proc::build(&spec, ClockDomain::Slow, &ch);
-        p.tick(0, &mut ch, &mut hbm); // accepted into pipe
+        p.tick(0, &mut ch, &mut ar, &mut hbm); // accepted into pipe
         assert!(ch.by_name("o").is_empty()); // latency not elapsed
         for t in 1..=5 {
-            p.tick(t, &mut ch, &mut hbm);
+            p.tick(t, &mut ch, &mut ar, &mut hbm);
         }
         assert_eq!(ch.by_name("o").len(), 1);
     }
@@ -921,9 +980,11 @@ mod tests {
         // run n sequential passes through the core
         for k in 0..n {
             let mut ch = chans(&[("in", 1, 64), ("out", 1, 64)]);
+            let mut ar = Arena::new();
             let mut hbm = Hbm::new();
             for v in &dist {
-                ch.by_name("in").push_unbounded(vec![*v].into());
+                let t = ar.alloc_from(&[*v]);
+                ch.by_name("in").push_unbounded(t);
             }
             let spec = ModuleSpec::FwCore {
                 name: "fw".into(),
@@ -943,9 +1004,11 @@ mod tests {
                     col_cur[j] = dist[j * n + k];
                 }
             }
-            p.drain_functional(&mut ch, &mut hbm);
+            p.drain_functional(&mut ch, &mut ar, &mut hbm);
             for v in dist.iter_mut() {
-                *v = ch.by_name("out").pop().unwrap()[0];
+                let t = ch.by_name("out").pop().unwrap();
+                *v = ar.get(t)[0];
+                ar.free(t);
             }
         }
         assert_eq!(dist[2], 3.0);

@@ -1,5 +1,7 @@
 //! Simulation statistics.
 
+use super::arena::ArenaStats;
+
 /// Outcome counters of a simulated execution.
 #[derive(Clone, Debug, Default)]
 pub struct SimStats {
@@ -13,6 +15,11 @@ pub struct SimStats {
     pub modules: Vec<(String, u64, u64)>,
     /// Transactions through the design (writer side).
     pub transactions: u64,
+    /// Transaction-arena counters of the run (DESIGN.md §10). *Not*
+    /// part of the engine-equality contract: a run inside a warmed
+    /// shared arena legitimately reports more recycle hits than a cold
+    /// one while being cycle-identical.
+    pub arena: ArenaStats,
 }
 
 impl SimStats {

@@ -5,6 +5,7 @@
 //! which modules made progress — then renders the result as a text
 //! waveform in the style of the paper's Figure 2.
 
+use super::arena::Arena;
 use super::channel::{Channels, Fifo};
 use super::memory::Hbm;
 use super::process::Proc;
@@ -53,9 +54,10 @@ pub fn run_traced(design: &Design, mut hbm: Hbm, max_fast_ticks: usize) -> Resul
         hbm.alloc(name, *elems);
     }
     let factor = design.pump.map(|(m, _)| m).unwrap_or(1);
+    let mut arena = Arena::new();
     let mut ch = Channels::default();
     for c in &design.channels {
-        ch.fifos.push(Fifo::new(&c.name, c.lanes, c.depth));
+        ch.add(Fifo::new(&c.name, c.lanes, c.depth));
     }
     let mut procs: Vec<Proc> = design
         .modules
@@ -74,7 +76,7 @@ pub fn run_traced(design: &Design, mut hbm: Hbm, max_fast_ticks: usize) -> Resul
                 ClockDomain::Slow => t % factor as u64 == 0,
                 ClockDomain::Fast { .. } => true,
             };
-            let fired = ticks_now && p.tick(t, &mut ch, &mut hbm);
+            let fired = ticks_now && p.tick(t, &mut ch, &mut arena, &mut hbm);
             activity[i].push(fired);
             if !p.done(&ch) {
                 all_done = false;

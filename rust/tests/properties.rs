@@ -171,9 +171,11 @@ fn prop_effective_clock_never_exceeds_cl0() {
 #[test]
 fn prop_fifo_preserves_order_and_counts() {
     use temporal_vec::sim::channel::Fifo;
+    use temporal_vec::sim::Arena;
     forall("fifo-order", 0xC1, 100, |g| {
         let cap = g.usize(1, 32);
         let lanes = g.usize(1, 4);
+        let mut ar = Arena::new();
         let mut f = Fifo::new("q", lanes, cap);
         let n = g.usize(1, 200);
         let mut sent: Vec<f32> = Vec::new();
@@ -183,23 +185,36 @@ fn prop_fifo_preserves_order_and_counts() {
             if g.bool() && !f.is_full() {
                 let txn: Vec<f32> = (0..lanes).map(|l| (next + l as u32) as f32).collect();
                 sent.extend_from_slice(&txn);
-                f.push(txn.into()).map_err(|_| "push failed".to_string())?;
+                f.push(ar.alloc_from(&txn)).map_err(|_| "push failed".to_string())?;
                 next += lanes as u32;
             } else if let Some(t) = f.pop() {
-                got.extend_from_slice(&t);
+                got.extend_from_slice(ar.get(t));
+                ar.free(t);
             }
             if f.len() > cap {
                 return Err("capacity exceeded".into());
             }
         }
         while let Some(t) = f.pop() {
-            got.extend_from_slice(&t);
+            got.extend_from_slice(ar.get(t));
+            ar.free(t);
         }
         if got != sent {
             return Err("order not preserved".into());
         }
         if f.pushed != f.popped {
             return Err("push/pop accounting mismatch".into());
+        }
+        // every popped slot was freed: the arena must be fully idle,
+        // and recycling bounds the slab to the FIFO's live peak
+        if ar.stats().live != 0 {
+            return Err("arena slots leaked".into());
+        }
+        if ar.stats().slots > cap as u64 + 1 {
+            return Err(format!(
+                "slab grew past capacity: {} slots for cap {cap}",
+                ar.stats().slots
+            ));
         }
         Ok(())
     });
@@ -290,6 +305,59 @@ fn prop_event_engine_is_cycle_exact_on_random_pumped_vecadd() {
         hbm.load("y", g.vec_f32(n as usize));
         engines_must_agree(&c.design, hbm, "z")
             .map_err(|e| format!("lanes {lanes} pump {pump:?} n {n}: {e}"))
+    });
+}
+
+#[test]
+fn prop_pooled_exact_outputs_bit_identical_to_functional_streams() {
+    // the arena data plane must be invisible in the data: outputs of
+    // the pooled exact engine — recycled slots and all — are compared
+    // bit for bit (f32::to_bits) against the reference run captured
+    // via the unbounded `push_unbounded` functional mode, and a second
+    // exact run on the SAME warmed arena (every slot now a recycle
+    // hit) must reproduce them again
+    use temporal_vec::sim::{run_exact_in, Arena};
+    forall("arena-bit-identical", 0xD3, 8, |g| {
+        let lanes = *g.choose(&[2usize, 4, 8]);
+        let pump = g.bool() && lanes % 2 == 0;
+        let n = (g.usize(6, 40) * lanes) as i64;
+        let mut spec =
+            BuildSpec::new(apps::vecadd::build()).vectorized("vadd", lanes).bind("N", n);
+        if pump {
+            spec = spec.pumped(2, PumpMode::Resource);
+        }
+        let c = match compile(spec) {
+            Ok(c) => c,
+            Err(_) => return Ok(()),
+        };
+        let x = g.vec_f32(n as usize);
+        let y = g.vec_f32(n as usize);
+        let mk_hbm = || {
+            let mut hbm = Hbm::new();
+            hbm.load("x", x.clone());
+            hbm.load("y", y.clone());
+            hbm
+        };
+        let reference: Vec<u32> = run_functional(&c.design, mk_hbm())
+            .map_err(|e| e.to_string())?
+            .hbm
+            .read("z")
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        let mut arena = Arena::new();
+        for round in 0..2 {
+            let out = run_exact_in(&c.design, mk_hbm(), 10_000_000, &mut arena)
+                .map_err(|e| e.to_string())?;
+            let bits: Vec<u32> = out.hbm.read("z").iter().map(|v| v.to_bits()).collect();
+            if bits != reference {
+                return Err(format!(
+                    "round {round}: pooled exact output diverged from the functional \
+                     byte stream (lanes {lanes}, pump {pump}, n {n})"
+                ));
+            }
+        }
+        Ok(())
     });
 }
 
