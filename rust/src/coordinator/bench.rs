@@ -85,6 +85,26 @@ pub struct DseBench {
     pub warm_secs: f64,
     pub cold_new_compiles: usize,
     pub warm_new_compiles: usize,
+    /// Memo-cache hits during the cold sweep (same-run re-evaluations).
+    pub cold_hits: usize,
+    /// Cache hits during the warm sweep (served by the persistent
+    /// store loaded at construction).
+    pub warm_hits: usize,
+}
+
+impl DseBench {
+    /// Warm-sweep cache hit rate: `hits / (hits + new compiles)`. The
+    /// CI smoke gate requires 1.0 — a second run over the flushed
+    /// store must compile nothing. An idle sweep (0 + 0) counts as
+    /// 1.0: nothing compiled is exactly the contract.
+    pub fn warm_hit_rate(&self) -> f64 {
+        let total = self.warm_hits + self.warm_new_compiles;
+        if total == 0 {
+            1.0
+        } else {
+            self.warm_hits as f64 / total as f64
+        }
+    }
 }
 
 /// The full `tvec bench` outcome.
@@ -104,10 +124,10 @@ impl BenchReport {
     }
 
     /// Render as `BENCH_sim.json` (schema: DESIGN.md §9; v2 added the
-    /// `arena` block).
+    /// `arena` block, v3 the `dse_cache` block with the warm hit rate).
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
-        out.push_str("  \"schema\": \"tvec-bench-sim v2\",\n");
+        out.push_str("  \"schema\": \"tvec-bench-sim v3\",\n");
         out.push_str(&format!("  \"smoke\": {},\n", self.smoke));
         out.push_str("  \"sim\": [\n");
         for (i, s) in self.sims.iter().enumerate() {
@@ -145,13 +165,21 @@ impl BenchReport {
         ));
         out.push_str(&format!(
             "  \"dse\": {{\"app\": \"{}\", \"cold_secs\": {:.6}, \"warm_secs\": {:.6}, \
-             \"warm_speedup\": {:.3}, \"cold_new_compiles\": {}, \"warm_new_compiles\": {}}}\n",
+             \"warm_speedup\": {:.3}, \"cold_new_compiles\": {}, \"warm_new_compiles\": {}}},\n",
             self.dse.app,
             self.dse.cold_secs,
             self.dse.warm_secs,
             self.dse.cold_secs / self.dse.warm_secs.max(1e-12),
             self.dse.cold_new_compiles,
             self.dse.warm_new_compiles,
+        ));
+        out.push_str(&format!(
+            "  \"dse_cache\": {{\"cold_hits\": {}, \"warm_hits\": {}, \
+             \"warm_new_compiles\": {}, \"warm_hit_rate\": {:.4}}}\n",
+            self.dse.cold_hits,
+            self.dse.warm_hits,
+            self.dse.warm_new_compiles,
+            self.dse.warm_hit_rate(),
         ));
         out.push('}');
         out.push('\n');
@@ -359,6 +387,7 @@ pub fn run_bench(
         run_search(&cold_ev, &bases, &device, &opts, &cfg)?;
         let cold_secs = t0.elapsed().as_secs_f64();
         let cold_new_compiles = cold_ev.cache_misses();
+        let cold_hits = cold_ev.cache_hits();
         cold_ev.flush()?;
 
         let warm_ev = Evaluator::with_cache_dir(&dir);
@@ -366,6 +395,7 @@ pub fn run_bench(
         run_search(&warm_ev, &bases, &device, &opts, &cfg)?;
         let warm_secs = t0.elapsed().as_secs_f64();
         let warm_new_compiles = warm_ev.cache_misses();
+        let warm_hits = warm_ev.cache_hits();
         let _ = std::fs::remove_dir_all(&dir);
         DseBench {
             app: "vecadd".to_string(),
@@ -373,6 +403,8 @@ pub fn run_bench(
             warm_secs,
             cold_new_compiles,
             warm_new_compiles,
+            cold_hits,
+            warm_hits,
         }
     };
 
@@ -395,6 +427,8 @@ mod tests {
         }
         assert_eq!(r.dse.warm_new_compiles, 0, "warm DSE sweep must compile nothing");
         assert!(r.dse.cold_new_compiles > 0);
+        assert!(r.dse.warm_hits > 0, "warm sweep must be served from the store");
+        assert_eq!(r.dse.warm_hit_rate(), 1.0, "warm hit rate must be perfect");
         // the shared arena must be alive (recycling) and flat across
         // each app's repeated runs — the CI smoke gate's contract
         assert!(r.arena.slots > 0 && r.arena.recycle_hits > 0, "arena wired but dead");
@@ -402,7 +436,7 @@ mod tests {
         assert!(r.arena_flat(), "arena high-water mark grew across repeated runs");
         let json = r.to_json();
         for key in [
-            "\"schema\": \"tvec-bench-sim v2\"",
+            "\"schema\": \"tvec-bench-sim v3\"",
             "\"sim\": [",
             "\"event_cycles_per_sec\"",
             "\"speedup\"",
@@ -412,6 +446,8 @@ mod tests {
             "\"flat_high_water\": true",
             "\"dse\": {",
             "\"warm_new_compiles\": 0",
+            "\"dse_cache\": {",
+            "\"warm_hit_rate\": 1.0000",
         ] {
             assert!(json.contains(key), "missing {key} in:\n{json}");
         }
@@ -444,6 +480,8 @@ mod tests {
                 warm_secs: 0.1,
                 cold_new_compiles: 5,
                 warm_new_compiles: 0,
+                cold_hits: 0,
+                warm_hits: 5,
             },
         };
         let failures = report.drift_failures();

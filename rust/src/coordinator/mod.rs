@@ -19,6 +19,8 @@ pub use bench::{run_bench, BenchReport};
 pub use config::Config;
 pub use experiment::{run_experiment, ExperimentResult};
 pub use pipeline::{
-    compile, compile_from_prefix, compile_staged, stage_prefix, BuildSpec, Compiled, Stage,
+    compile, compile_from_prefix, compile_from_prefix_observed, compile_staged,
+    compile_staged_observed, stage_prefix, stage_prefix_observed, BuildSpec, Compiled, Stage,
     StagedError, StagedPrefix,
 };
+pub use report::stall_report;

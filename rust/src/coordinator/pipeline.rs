@@ -177,13 +177,30 @@ pub fn stage_prefix(
     vectorize: &Option<(String, usize)>,
     stream: bool,
 ) -> Result<StagedPrefix, StagedError> {
+    stage_prefix_observed(sdfg, vectorize, stream, None)
+}
+
+/// [`stage_prefix`] with an optional telemetry recorder: each applied
+/// transform gets its own span (`vectorize`, `stream`).
+pub fn stage_prefix_observed(
+    sdfg: &Sdfg,
+    vectorize: &Option<(String, usize)>,
+    stream: bool,
+    rec: Option<&crate::telemetry::Recorder>,
+) -> Result<StagedPrefix, StagedError> {
     let err = |stage: Stage| move |message: String| StagedError { stage, message };
     let mut g = sdfg.clone();
     let mut pm = PassManager::new();
     if let Some((map, factor)) = vectorize {
+        let mut sp = rec.map(|r| r.span("vectorize"));
+        if let Some(s) = sp.as_mut() {
+            s.note("map", map);
+            s.note("width", factor);
+        }
         pm.run(&mut g, &Vectorize::new(map, *factor)).map_err(err(Stage::Transform))?;
     }
     if stream {
+        let _sp = rec.map(|r| r.span("stream"));
         pm.run(&mut g, &StreamingComposition::default()).map_err(err(Stage::Transform))?;
     }
     Ok(StagedPrefix { sdfg: g, reports: pm.reports })
@@ -195,6 +212,17 @@ pub fn stage_prefix(
 pub fn compile_from_prefix(
     prefix: &StagedPrefix,
     spec: &BuildSpec,
+) -> Result<Compiled, StagedError> {
+    compile_from_prefix_observed(prefix, spec, None)
+}
+
+/// [`compile_from_prefix`] with an optional telemetry recorder: one
+/// span per stage (`pump` when pumping is requested, then `bind`,
+/// `lower`, `estimate`).
+pub fn compile_from_prefix_observed(
+    prefix: &StagedPrefix,
+    spec: &BuildSpec,
+    rec: Option<&crate::telemetry::Recorder>,
 ) -> Result<Compiled, StagedError> {
     let err = |stage: Stage| move |message: String| StagedError { stage, message };
     let device = Device::u280();
@@ -217,6 +245,10 @@ pub fn compile_from_prefix(
                 message: "multi-pumping requires streaming".into(),
             });
         }
+        let mut sp = rec.map(|r| r.span("pump"));
+        if let Some(s) = sp.as_mut() {
+            s.note("regions", factors.len());
+        }
         pm.run(&mut g, &MultiPump::mixed(factors.clone(), PumpMode::Resource))
             .map_err(err(Stage::Transform))?;
     } else if let Some((factor, mode)) = spec.pump {
@@ -226,15 +258,29 @@ pub fn compile_from_prefix(
                 message: "multi-pumping requires streaming".into(),
             });
         }
+        let mut sp = rec.map(|r| r.span("pump"));
+        if let Some(s) = sp.as_mut() {
+            s.note("factor", factor);
+            s.note("mode", format!("{mode:?}"));
+        }
         pm.run(&mut g, &MultiPump::uniform(factor, mode)).map_err(err(Stage::Transform))?;
     }
 
     let base: Vec<(&str, i64)> = spec.bindings.iter().map(|(s, v)| (s.as_str(), *v)).collect();
-    let env = g.bind(&base).map_err(err(Stage::Bind))?;
-    let mut design = lower(&g, &env, &cost).map_err(err(Stage::Lower))?;
+    let env = {
+        let _sp = rec.map(|r| r.span("bind"));
+        g.bind(&base).map_err(err(Stage::Bind))?
+    };
+    let mut design = {
+        let _sp = rec.map(|r| r.span("lower"));
+        lower(&g, &env, &cost).map_err(err(Stage::Lower))?
+    };
     design.cl0_request_mhz = spec.cl0_request_mhz;
     design.slr_replicas = spec.slr_replicas;
-    let report = estimate(&design, &device, &tm, spec.seed);
+    let report = {
+        let _sp = rec.map(|r| r.span("estimate"));
+        estimate(&design, &device, &tm, spec.seed)
+    };
     let pass_log = pm.reports.iter().map(|r| format!("{}: {}", r.transform, r.summary)).collect();
     Ok(Compiled { sdfg: g, design, report, env, pass_log })
 }
@@ -246,8 +292,18 @@ pub fn compile(spec: BuildSpec) -> Result<Compiled, String> {
 
 /// Run the pipeline, reporting *which stage* rejected the spec.
 pub fn compile_staged(spec: BuildSpec) -> Result<Compiled, StagedError> {
-    let prefix = stage_prefix(&spec.sdfg, &spec.vectorize, spec.stream)?;
-    compile_from_prefix(&prefix, &spec)
+    compile_staged_observed(spec, None)
+}
+
+/// [`compile_staged`] with an optional telemetry recorder: the full
+/// stage-span set (`vectorize`/`stream`/`pump`/`bind`/`lower`/
+/// `estimate`) on one uncached compile.
+pub fn compile_staged_observed(
+    spec: BuildSpec,
+    rec: Option<&crate::telemetry::Recorder>,
+) -> Result<Compiled, StagedError> {
+    let prefix = stage_prefix_observed(&spec.sdfg, &spec.vectorize, spec.stream, rec)?;
+    compile_from_prefix_observed(&prefix, &spec, rec)
 }
 
 #[cfg(test)]

@@ -24,8 +24,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::codegen::DesignReport;
 use crate::coordinator::pipeline::{
-    compile_from_prefix, compile_staged, stage_prefix, BuildSpec, Compiled, Stage, StagedError,
-    StagedPrefix,
+    compile_from_prefix_observed, compile_staged, stage_prefix_observed, BuildSpec, Compiled,
+    Stage, StagedError, StagedPrefix,
 };
 use crate::hw::ResourceVec;
 use crate::ir::PumpMode;
@@ -229,15 +229,36 @@ type PrefixKey = (u64, Option<(String, usize)>, bool);
 #[derive(Default)]
 pub struct ArenaPool {
     arenas: Mutex<Vec<Arena>>,
+    /// Total checkouts over the pool's lifetime (telemetry).
+    checkouts: AtomicUsize,
+    /// Arenas checked out right now.
+    in_flight: AtomicUsize,
+    /// High-water mark of concurrent checkouts — the pool's eventual
+    /// resident size, since it grows to the observed parallelism.
+    peak_in_flight: AtomicUsize,
 }
 
 impl ArenaPool {
     /// Run `f` inside a pooled arena (checkout → run → checkin).
     pub fn run<R>(&self, f: impl FnOnce(&mut Arena) -> R) -> R {
         let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let now = self.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_in_flight.fetch_max(now, Ordering::Relaxed);
         let out = f(&mut arena);
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
         self.arenas.lock().unwrap().push(arena);
         out
+    }
+
+    /// Lifetime checkout count.
+    pub fn checkouts(&self) -> usize {
+        self.checkouts.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of concurrent checkouts.
+    pub fn peak_in_flight(&self) -> usize {
+        self.peak_in_flight.load(Ordering::Relaxed)
     }
 
     /// Arenas currently resident in the pool.
@@ -294,6 +315,11 @@ pub struct Evaluator {
     /// Per-worker simulation arenas for the exact-sim paths hanging off
     /// this evaluator (`dse --verify`, golden spot checks).
     arenas: ArenaPool,
+    /// Optional telemetry recorder (`--trace-out`): per-candidate spans
+    /// tagged with fingerprint + outcome, prefix-cache-hit instants,
+    /// and compile-stage spans on the miss path. `None` keeps every
+    /// instrumentation site a branch on a null handle.
+    recorder: Option<Arc<crate::telemetry::Recorder>>,
 }
 
 impl Evaluator {
@@ -316,6 +342,20 @@ impl Evaluator {
             cold_reason: loaded.cold_reason,
             ..Evaluator::default()
         }
+    }
+
+    /// Attach a telemetry recorder: every evaluation from here on
+    /// emits a `dse.candidate` span (fingerprint + outcome) and the
+    /// miss path emits per-stage compile spans.
+    pub fn observed(mut self, rec: Arc<crate::telemetry::Recorder>) -> Evaluator {
+        self.recorder = Some(rec);
+        self
+    }
+
+    /// The attached recorder as a nullable handle — the shape every
+    /// instrumentation site branches on.
+    pub fn probe(&self) -> Option<&crate::telemetry::Recorder> {
+        self.recorder.as_deref()
     }
 
     pub fn cache_hits(&self) -> usize {
@@ -413,17 +453,34 @@ impl Evaluator {
         flops: f64,
     ) -> Result<Evaluation, EvalError> {
         let key = fingerprint(base, point, flops);
+        let mut sp = self.probe().map(|r| r.span("dse.candidate"));
+        if let Some(s) = sp.as_mut() {
+            s.note("fingerprint", format!("{key:016x}"));
+        }
         {
             let mut state = self.cache.lock().unwrap();
             if let Some(hit) = state.entries.get(&key) {
                 let hit = hit.clone();
                 state.touched.insert(key);
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                if let Some(s) = sp.as_mut() {
+                    s.note("outcome", "memo_hit");
+                }
                 return hit;
             }
         }
         let ev = self.evaluate_uncached(base, point, flops);
         self.misses.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = sp.as_mut() {
+            s.note(
+                "outcome",
+                match &ev {
+                    Ok(_) => "new_compile",
+                    Err(e) if e.kind == FailKind::Legality => "legality",
+                    Err(_) => "compile_fail",
+                },
+            );
+        }
         let mut state = self.cache.lock().unwrap();
         state.touched.insert(key);
         state.entries.insert(key, ev.clone());
@@ -446,13 +503,22 @@ impl Evaluator {
         let prefix = {
             let cached = self.prefixes.lock().unwrap().get(&key).cloned();
             match cached {
-                Some(p) => p,
+                Some(p) => {
+                    if let Some(r) = self.probe() {
+                        r.instant("prefix-cache-hit");
+                    }
+                    p
+                }
                 None => {
                     // computed outside the lock: two racing workers may
                     // both build it (deterministic, so identical); the
                     // first insert wins
-                    let built =
-                        Arc::new(stage_prefix(&spec.sdfg, &spec.vectorize, spec.stream));
+                    let built = Arc::new(stage_prefix_observed(
+                        &spec.sdfg,
+                        &spec.vectorize,
+                        spec.stream,
+                        self.probe(),
+                    ));
                     self.prefixes
                         .lock()
                         .unwrap()
@@ -464,7 +530,7 @@ impl Evaluator {
         };
         let c = match prefix.as_ref() {
             Err(e) => return Err(classify(e.clone())),
-            Ok(p) => compile_from_prefix(p, &spec).map_err(classify)?,
+            Ok(p) => compile_from_prefix_observed(p, &spec, self.probe()).map_err(classify)?,
         };
         Ok(finish_evaluation(c, point, flops))
     }
@@ -703,6 +769,47 @@ mod tests {
         let s = pool.stats();
         assert_eq!(s.slots, 1);
         assert!(s.recycle_hits >= 1);
+        // telemetry counters: two checkouts, never more than one at once
+        assert_eq!(pool.checkouts(), 2);
+        assert_eq!(pool.peak_in_flight(), 1);
+    }
+
+    #[test]
+    fn observed_evaluator_tags_candidate_outcomes() {
+        use crate::telemetry::{Event, Recorder};
+        let rec = Arc::new(Recorder::new());
+        let ev = Evaluator::new().observed(rec.clone());
+        let base = vecadd_base();
+        let flops = apps::vecadd::flops(1 << 14);
+        ev.evaluate(&base, &dp_point(), flops).unwrap(); // new compile
+        ev.evaluate(&base, &dp_point(), flops).unwrap(); // memo hit
+        let events = rec.events();
+        let begins = |name: &str| {
+            events
+                .iter()
+                .filter(|e| matches!(e, Event::Begin { name: n, .. } if n == name))
+                .count()
+        };
+        assert_eq!(begins("dse.candidate"), 2);
+        // the miss path ran the full staged compile under spans
+        assert_eq!(begins("vectorize"), 1);
+        assert_eq!(begins("pump"), 1);
+        assert_eq!(begins("estimate"), 1);
+        let outcomes: Vec<&str> = events
+            .iter()
+            .filter_map(|e| match e {
+                Event::End { args, .. } => {
+                    args.iter().find(|(k, _)| k == "outcome").map(|(_, v)| v.as_str())
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(outcomes, vec!["new_compile", "memo_hit"]);
+        // every candidate span carries its content fingerprint
+        assert!(events.iter().any(|e| matches!(
+            e,
+            Event::End { args, .. } if args.iter().any(|(k, v)| k == "fingerprint" && v.len() == 16)
+        )));
     }
 
     #[test]

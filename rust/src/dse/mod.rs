@@ -42,4 +42,7 @@ pub use evaluate::{ArenaPool, EvalError, Evaluation, Evaluator, FailKind};
 pub use pareto::{dominates, frontier, resource_score, Objective};
 pub use search::{run_search, SearchBase, SearchConfig, SearchOutcome, Strategy};
 pub use space::{generate, DesignPoint, SpaceOptions};
-pub use verify::{verify_frontier, verify_frontier_in, VerifyReport, DEFAULT_TOLERANCE};
+pub use verify::{
+    verify_frontier, verify_frontier_in, verify_frontier_observed, VerifyReport,
+    DEFAULT_TOLERANCE,
+};

@@ -232,6 +232,7 @@ pub fn run_search(
     // conventional designs). The best-throughput fitting one anchors
     // the iso-constraints — "iso-throughput" means not losing against
     // the best design traditional vectorization alone can reach.
+    let mut baseline_sp = evaluator.probe().map(|r| r.span("dse.search.baseline"));
     let mut reference: Option<Evaluation> = None;
     for (i, (base, grid)) in bases.iter().zip(&grids).enumerate() {
         let baseline: Vec<DesignPoint> =
@@ -256,6 +257,10 @@ pub fn run_search(
             }
         }
     }
+    if let Some(s) = baseline_sp.as_mut() {
+        s.note("evaluated", evaluated);
+    }
+    drop(baseline_sp);
     let reference = match reference {
         Some(r) => r,
         None => return Err("no unpumped configuration fits the device".into()),
@@ -269,6 +274,15 @@ pub fn run_search(
             .collect();
         let compiles_so_far = evaluator.cache_misses() - misses_start;
         let remaining_budget = cfg.budget.map(|b| b.saturating_sub(compiles_so_far));
+        let hits_before = evaluator.cache_hits();
+        let misses_before = evaluator.cache_misses();
+        let mut round_sp = evaluator
+            .probe()
+            .map(|r| r.span(&format!("dse.search.{}", cfg.strategy.name())));
+        if let Some(s) = round_sp.as_mut() {
+            s.note("base", i);
+            s.note("grid", full_grid.len());
+        }
         let (mut evs, winner, stats) = match cfg.strategy {
             Strategy::Exhaustive => {
                 // the baseline points are already evaluated
@@ -338,6 +352,30 @@ pub fn run_search(
                 cfg.seed.wrapping_add(i as u64),
             ),
         };
+        // per-round cache health: hits vs new compiles this strategy
+        // round, the resulting hit rate, and what is left of the budget
+        if let Some(r) = evaluator.probe() {
+            let hits = (evaluator.cache_hits() - hits_before) as u64;
+            let new = (evaluator.cache_misses() - misses_before) as u64;
+            r.add("dse.cache.hits", hits);
+            r.add("dse.cache.new_compiles", new);
+            r.gauge(
+                &format!("dse.base{i}.hit_rate"),
+                hits as f64 / (hits + new).max(1) as f64,
+            );
+            if let Some(b) = cfg.budget {
+                let spent = evaluator.cache_misses() - misses_start;
+                r.gauge(
+                    &format!("dse.base{i}.budget_remaining"),
+                    b.saturating_sub(spent) as f64,
+                );
+            }
+        }
+        if let Some(s) = round_sp.as_mut() {
+            s.note("issued", stats.issued);
+            s.note("truncated", stats.truncated);
+        }
+        drop(round_sp);
         for e in &mut evs {
             e.base = i;
         }

@@ -18,7 +18,8 @@
 //! not break when only the bindings shrink.
 
 use crate::coordinator::pipeline::{compile_staged, BuildSpec, Stage};
-use crate::sim::{rate_model, run_exact_in, Arena, Hbm};
+use crate::sim::{rate_model, run_exact_observed_in, Arena, Hbm};
+use crate::telemetry::Recorder;
 
 use super::evaluate::{ArenaPool, Evaluation};
 
@@ -59,6 +60,48 @@ pub fn verify_point(
     tolerance: f64,
     arena: &mut Arena,
 ) -> Result<VerifyReport, String> {
+    verify_point_observed(golden_base, e, inputs, tolerance, arena, None)
+}
+
+/// [`verify_point`] with an optional telemetry recorder: the point gets
+/// a `dse.verify` span tagged with its label and outcome, and the exact
+/// simulation inside runs observed (per-module busy/stall counters,
+/// FIFO stall causes, per-domain utilization).
+pub fn verify_point_observed(
+    golden_base: &BuildSpec,
+    e: &Evaluation,
+    inputs: &[(String, Vec<f32>)],
+    tolerance: f64,
+    arena: &mut Arena,
+    rec: Option<&Recorder>,
+) -> Result<VerifyReport, String> {
+    let mut sp = rec.map(|r| r.span("dse.verify"));
+    if let Some(s) = sp.as_mut() {
+        s.note("label", &e.label);
+    }
+    let report = verify_point_inner(golden_base, e, inputs, tolerance, arena, rec);
+    if let Some(s) = sp.as_mut() {
+        s.note(
+            "outcome",
+            match &report {
+                Ok(r) if r.skipped.is_some() => "skipped",
+                Ok(r) if r.within => "within",
+                Ok(_) => "drift",
+                Err(_) => "error",
+            },
+        );
+    }
+    report
+}
+
+fn verify_point_inner(
+    golden_base: &BuildSpec,
+    e: &Evaluation,
+    inputs: &[(String, Vec<f32>)],
+    tolerance: f64,
+    arena: &mut Arena,
+    rec: Option<&Recorder>,
+) -> Result<VerifyReport, String> {
     let spec = e.point.apply_to(golden_base);
     let c = match compile_staged(spec) {
         Ok(c) => c,
@@ -84,7 +127,7 @@ pub fn verify_point(
     for (name, data) in inputs {
         hbm.load(name, data.clone());
     }
-    let exact = run_exact_in(&c.design, hbm, MAX_VERIFY_CYCLES, arena)
+    let exact = run_exact_observed_in(&c.design, hbm, MAX_VERIFY_CYCLES, arena, rec)
         .map_err(|err| format!("{}: exact simulation failed: {err}", e.label))?
         .stats
         .slow_cycles;
@@ -124,10 +167,25 @@ pub fn verify_frontier_in(
     tolerance: f64,
     pool: &ArenaPool,
 ) -> Result<Vec<VerifyReport>, String> {
+    verify_frontier_observed(frontier, golden_bases, inputs, tolerance, pool, None)
+}
+
+/// [`verify_frontier_in`] with an optional telemetry recorder threaded
+/// down to every point's span and exact simulation.
+pub fn verify_frontier_observed(
+    frontier: &[Evaluation],
+    golden_bases: &[BuildSpec],
+    inputs: &[(String, Vec<f32>)],
+    tolerance: f64,
+    pool: &ArenaPool,
+    rec: Option<&Recorder>,
+) -> Result<Vec<VerifyReport>, String> {
     let mut out = Vec::with_capacity(frontier.len());
     for e in frontier {
         let base = frontier_base(golden_bases, e)?;
-        out.push(pool.run(|arena| verify_point(base, e, inputs, tolerance, arena))?);
+        out.push(
+            pool.run(|arena| verify_point_observed(base, e, inputs, tolerance, arena, rec))?,
+        );
     }
     Ok(out)
 }

@@ -22,6 +22,10 @@
 //!   frequency model, clock domains;
 //! * [`codegen`] — design netlists plus HLS-C++/SystemVerilog/TCL text
 //!   emission (the paper's §3.3 four-file RTL kernels);
+//! * [`telemetry`] — zero-cost-when-disabled structured observability:
+//!   spans, counters, gauges and bounded time-series behind a nullable
+//!   `Option<&Recorder>` handle, exported as Chrome trace-event JSON
+//!   (`--trace-out`) and a flat `TELEMETRY.json` summary;
 //! * [`sim`] — a cycle-level multi-clock-domain simulator of generated
 //!   designs (FIFOs with backpressure, CDC plumbing, real f32 data);
 //! * [`runtime`] — PJRT execution of the AOT JAX/Pallas golden models;
@@ -51,6 +55,7 @@ pub mod analysis;
 pub mod transforms;
 pub mod hw;
 pub mod codegen;
+pub mod telemetry;
 pub mod sim;
 pub mod runtime;
 pub mod coordinator;

@@ -25,8 +25,14 @@ fn main() {
         .subcommand("run", "simulate an app and check against the golden model")
         .subcommand("dse", "autotune an app over the design space")
         .subcommand("bench", "measure simulator/DSE throughput (BENCH_sim.json)")
+        .subcommand("top", "print the top-k stall sources of an app (observed exact sim)")
         .subcommand("report", "print the device model (Table 1)")
         .opt_default("seed", "P&R jitter seed", "1")
+        .opt(
+            "trace-out",
+            "dse/run/top: write a Chrome trace-event JSON here (+ TELEMETRY.json alongside)",
+        )
+        .opt_default("topk", "top: stall sources to print", "8")
         .opt("config", "experiment config file (see configs/)")
         .opt("pump", "pumping factor for compile/run (e.g. 2)")
         .opt_default("mode", "pump mode: resource|throughput", "resource")
@@ -76,6 +82,7 @@ fn main() {
         Some("run") => cmd_run(&args, seed),
         Some("dse") => cmd_dse(&args, seed),
         Some("bench") => cmd_bench(&args, seed),
+        Some("top") => cmd_top(&args, seed),
         Some("report") => {
             println!("{}", temporal_vec::coordinator::experiment::table1().rendered);
             Ok(())
@@ -180,12 +187,19 @@ fn cmd_run(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
         .positional
         .first()
         .map(|s| s.as_str())
-        .ok_or("usage: tvec run <vecadd|matmul|floyd_warshall> [--pump 2]")?;
+        .ok_or("usage: tvec run <vecadd|matmul|floyd_warshall> [--pump 2] [--trace-out t.json]")?;
     let pump = args.get_usize("pump");
     let mut rng = Rng::new(seed);
+    // --trace-out: observed compile (per-stage spans) plus one observed
+    // exact simulation before the functional golden check
+    let recorder = args.get("trace-out").map(|_| temporal_vec::telemetry::Recorder::new());
+    let rec = recorder.as_ref();
+    let build = |spec: BuildSpec| -> Result<temporal_vec::coordinator::Compiled, String> {
+        temporal_vec::coordinator::compile_staged_observed(spec, rec).map_err(|e| e.message)
+    };
 
     // build at golden (artifact) scale, simulate functionally, compare
-    let (c, hbm, golden_inputs, out_name): (_, Hbm, Vec<Vec<f32>>, &str) = match app {
+    let (c, inputs, out_name): (_, Vec<(String, Vec<f32>)>, &str) = match app {
         "vecadd" => {
             let n = apps::vecadd::GOLDEN_N;
             let mut spec =
@@ -193,13 +207,10 @@ fn cmd_run(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
             if let Some(f) = pump {
                 spec = spec.pumped(f, PumpMode::Resource);
             }
-            let c = compile(spec.seeded(seed))?;
+            let c = build(spec.seeded(seed))?;
             let x = rng.f32_vec(n as usize);
             let y = rng.f32_vec(n as usize);
-            let mut hbm = Hbm::new();
-            hbm.load("x", x.clone());
-            hbm.load("y", y.clone());
-            (c, hbm, vec![x, y], "z")
+            (c, vec![("x".into(), x), ("y".into(), y)], "z")
         }
         "matmul" => {
             let n = apps::matmul::GOLDEN_NMK;
@@ -210,13 +221,10 @@ fn cmd_run(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
             if let Some(f) = pump {
                 spec = spec.pumped(f, PumpMode::Resource);
             }
-            let c = compile(spec.seeded(seed))?;
+            let c = build(spec.seeded(seed))?;
             let a = rng.f32_vec((n * n) as usize);
             let b = rng.f32_vec((n * n) as usize);
-            let mut hbm = Hbm::new();
-            hbm.load("A", a.clone());
-            hbm.load("B", b.clone());
-            (c, hbm, vec![a, b], "C")
+            (c, vec![("A".into(), a), ("B".into(), b)], "C")
         }
         "floyd_warshall" => {
             let n = apps::floyd_warshall::GOLDEN_N;
@@ -224,22 +232,38 @@ fn cmd_run(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
             if let Some(f) = pump {
                 spec = spec.pumped(f, PumpMode::Throughput);
             }
-            let c = compile(spec.seeded(seed))?;
+            let c = build(spec.seeded(seed))?;
             let d = apps::floyd_warshall::random_graph(n as usize, seed, 0.25);
-            let mut hbm = Hbm::new();
-            hbm.load("dist", d.clone());
-            (c, hbm, vec![d], "dist")
+            (c, vec![("dist".into(), d)], "dist")
         }
         other => return Err(format!("app '{other}' not runnable here (see examples/)")),
     };
+    let load = |inputs: &[(String, Vec<f32>)]| {
+        let mut hbm = Hbm::new();
+        for (name, data) in inputs {
+            hbm.load(name, data.clone());
+        }
+        hbm
+    };
+
+    if let Some(r) = rec {
+        println!("simulating '{}' exactly (observed)...", c.design.name);
+        let _ = temporal_vec::sim::run_exact_observed_in(
+            &c.design,
+            load(&inputs),
+            temporal_vec::dse::verify::MAX_VERIFY_CYCLES,
+            &mut temporal_vec::sim::Arena::new(),
+            Some(r),
+        )?;
+    }
 
     println!("simulating '{}' functionally...", c.design.name);
-    let out = run_functional(&c.design, hbm)?;
+    let out = run_functional(&c.design, load(&inputs))?;
     let got = out.hbm.read(out_name);
 
     println!("executing golden model via PJRT...");
     let mut runner = GoldenRunner::new(&artifact::artifacts_dir())?;
-    let input_refs: Vec<&[f32]> = golden_inputs.iter().map(|v| v.as_slice()).collect();
+    let input_refs: Vec<&[f32]> = inputs.iter().map(|(_, v)| v.as_slice()).collect();
     let want = runner.run(app, &input_refs)?;
 
     if got.len() != want.len() {
@@ -257,7 +281,75 @@ fn cmd_run(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
     if worst > 1e-4 {
         return Err(format!("numeric mismatch: max rel err {worst}"));
     }
+    if let (Some(r), Some(path)) = (rec, args.get("trace-out")) {
+        write_telemetry(r, path)?;
+    }
     println!("OK");
+    Ok(())
+}
+
+/// Write both telemetry exports: the Chrome trace-event JSON at `path`
+/// and the flat metrics summary as `TELEMETRY.json` next to it.
+fn write_telemetry(rec: &temporal_vec::telemetry::Recorder, path: &str) -> Result<(), String> {
+    std::fs::write(path, temporal_vec::telemetry::to_chrome_trace(rec))
+        .map_err(|e| format!("write {path}: {e}"))?;
+    let summary = std::path::Path::new(path)
+        .parent()
+        .filter(|d| !d.as_os_str().is_empty())
+        .map(|d| d.join("TELEMETRY.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("TELEMETRY.json"));
+    std::fs::write(&summary, temporal_vec::telemetry::to_summary_json(rec))
+        .map_err(|e| format!("write {}: {e}", summary.display()))?;
+    println!(
+        "wrote {path} (Chrome trace, load in chrome://tracing or Perfetto) and {} (metrics)",
+        summary.display()
+    );
+    Ok(())
+}
+
+/// `tvec top <app>`: compile the app's golden-scale base observed, run
+/// one observed exact simulation, and print the ranked stall-source
+/// report (module stalls, per-channel backpressure vs starvation, and
+/// per-clock-domain utilization).
+fn cmd_top(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), String> {
+    let app = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .or_else(|| args.get("app"))
+        .ok_or("usage: tvec top <app> [--pump 2] [--topk 8] [--trace-out t.json]")?;
+    let k = args.get_usize("topk").unwrap_or(8);
+    let rig = temporal_vec::coordinator::golden_rig(app, seed)?;
+    let mut spec = rig.bases.first().cloned().ok_or("golden rig has no base spec")?;
+    if let Some(f) = args.get_usize("pump") {
+        let mode = match args.get_or("mode", "resource") {
+            "throughput" => PumpMode::Throughput,
+            _ => PumpMode::Resource,
+        };
+        spec = spec.pumped(f, mode);
+    }
+    let rec = temporal_vec::telemetry::Recorder::new();
+    let c = temporal_vec::coordinator::compile_staged_observed(spec, Some(&rec))
+        .map_err(|e| e.message)?;
+    let mut hbm = Hbm::new();
+    for (name, data) in &rig.inputs {
+        hbm.load(name, data.clone());
+    }
+    let out = temporal_vec::sim::run_exact_observed_in(
+        &c.design,
+        hbm,
+        temporal_vec::dse::verify::MAX_VERIFY_CYCLES,
+        &mut temporal_vec::sim::Arena::new(),
+        Some(&rec),
+    )?;
+    println!(
+        "=== top: {app} ('{}', {} slow cycles, bottleneck {}) ===",
+        c.design.name, out.stats.slow_cycles, out.stats.bottleneck
+    );
+    println!("{}", temporal_vec::coordinator::stall_report(&rec, k));
+    if let Some(path) = args.get("trace-out") {
+        write_telemetry(&rec, path)?;
+    }
     Ok(())
 }
 
@@ -321,6 +413,15 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
         }
         None => Evaluator::new(),
     };
+    // --trace-out: attach a recorder — per-candidate spans, compile
+    // stage spans, search-round cache counters, observed exact sims
+    let recorder = args
+        .get("trace-out")
+        .map(|_| std::sync::Arc::new(temporal_vec::telemetry::Recorder::new()));
+    let evaluator = match &recorder {
+        Some(rec) => evaluator.observed(rec.clone()),
+        None => evaluator,
+    };
     let mut verify_failures: Vec<String> = Vec::new();
     // a fatal error still flushes the cache first — nothing already
     // compiled is lost to a late failure
@@ -342,6 +443,19 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
         if let Err(e) = step {
             fatal = Some(e);
             break;
+        }
+    }
+
+    // export the trace even after a fatal step — a partial trace is
+    // exactly what debugging that failure wants
+    if let (Some(rec), Some(path)) = (&recorder, args.get("trace-out")) {
+        rec.add("dse.arena_pool.checkouts", evaluator.arenas().checkouts() as u64);
+        rec.gauge(
+            "dse.arena_pool.peak_in_flight",
+            evaluator.arenas().peak_in_flight() as f64,
+        );
+        if let Err(e) = write_telemetry(rec, path) {
+            eprintln!("warning: {e}");
         }
     }
 
@@ -432,12 +546,16 @@ fn cmd_bench(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), St
         if report.arena_flat() { "flat" } else { "GREW" }
     );
     println!(
-        "  dse {:<12} cold {:.3}s ({} compiles)   warm {:.3}s ({} compiles)",
+        "  dse {:<12} cold {:.3}s ({} compiles, {} hits)   warm {:.3}s ({} compiles, \
+         {} hits, hit rate {:.4})",
         report.dse.app,
         report.dse.cold_secs,
         report.dse.cold_new_compiles,
+        report.dse.cold_hits,
         report.dse.warm_secs,
-        report.dse.warm_new_compiles
+        report.dse.warm_new_compiles,
+        report.dse.warm_hits,
+        report.dse.warm_hit_rate()
     );
     if args.flag("json") {
         std::fs::write("BENCH_sim.json", report.to_json())
@@ -484,7 +602,7 @@ fn run_dse_app(
     cli_tolerance: Option<f64>,
     verify_failures: &mut Vec<String>,
 ) -> Result<(), String> {
-    use temporal_vec::dse::{run_search, verify_frontier_in};
+    use temporal_vec::dse::{run_search, verify_frontier_observed};
     use temporal_vec::util::table::{fnum, pct, Table};
 
     // per-app default envelope; an explicit --tolerance always wins
@@ -577,16 +695,37 @@ fn run_dse_app(
         if outcome.truncated { ", budget hit" } else { "" }
     );
 
-    if verify {
+    if !verify {
+        // --trace-out without --verify still wants simulator telemetry:
+        // run the chosen point once, observed, at golden scale (skips
+        // that are illegal at golden scale are fine — the trace simply
+        // carries no sim spans for this app)
+        if let (Some(rec), Some(chosen)) = (evaluator.probe(), outcome.chosen.as_ref()) {
+            let rig = temporal_vec::coordinator::golden_rig(name, seed)?;
+            if let Some(base) = rig.bases.get(chosen.base) {
+                let _ = evaluator.arenas().run(|arena| {
+                    temporal_vec::dse::verify::verify_point_observed(
+                        base,
+                        chosen,
+                        &rig.inputs,
+                        tolerance,
+                        arena,
+                        Some(rec),
+                    )
+                });
+            }
+        }
+    } else {
         let rig = temporal_vec::coordinator::golden_rig(name, seed)?;
         // exact sims run inside the evaluator's arena pool: every
         // frontier point after the first recycles the same slabs
-        let reports = verify_frontier_in(
+        let reports = verify_frontier_observed(
             &outcome.frontier,
             &rig.bases,
             &rig.inputs,
             tolerance,
             evaluator.arenas(),
+            evaluator.probe(),
         )?;
         let mut vt = Table::new(
             format!("--verify: rate model vs exact simulator at golden scale (±{tolerance})"),

@@ -18,6 +18,12 @@ pub struct Fifo {
     q: VecDeque<Txn>,
     pub pushed: u64,
     pub popped: u64,
+    /// Deepest occupancy ever observed (transactions).
+    pub high_water: u64,
+    /// Stall cause: producer found the FIFO full (backpressure).
+    pub full_on_push: u64,
+    /// Stall cause: consumer found the FIFO empty (starvation).
+    pub empty_on_pop: u64,
 }
 
 impl Fifo {
@@ -29,6 +35,9 @@ impl Fifo {
             q: VecDeque::with_capacity(capacity.max(1)),
             pushed: 0,
             popped: 0,
+            high_water: 0,
+            full_on_push: 0,
+            empty_on_pop: 0,
         }
     }
 
@@ -49,6 +58,27 @@ impl Fifo {
         !self.is_full()
     }
 
+    /// [`Fifo::can_push`] at a producer's stall-decision point: a
+    /// `false` answer is counted as a full-on-push stall cause. Use
+    /// this (not `can_push`) where a process decides whether to block.
+    pub fn ready_push(&mut self) -> bool {
+        let ok = self.can_push();
+        if !ok {
+            self.full_on_push += 1;
+        }
+        ok
+    }
+
+    /// Non-empty check at a consumer's stall-decision point: a `false`
+    /// answer is counted as an empty-on-pop stall cause.
+    pub fn ready_pop(&mut self) -> bool {
+        let ok = !self.is_empty();
+        if !ok {
+            self.empty_on_pop += 1;
+        }
+        ok
+    }
+
     /// The channel invariant: every transaction entering this FIFO is
     /// exactly `lanes` wide. One shared check so the bounded and
     /// unbounded push paths cannot drift apart.
@@ -63,6 +93,7 @@ impl Fifo {
         self.check_lanes(t);
         self.q.push_back(t);
         self.pushed += 1;
+        self.high_water = self.high_water.max(self.q.len() as u64);
         Ok(())
     }
 
@@ -84,6 +115,7 @@ impl Fifo {
         self.check_lanes(t);
         self.q.push_back(t);
         self.pushed += 1;
+        self.high_water = self.high_water.max(self.q.len() as u64);
     }
 
     /// Monotone activity counter: bumps on every push *and* every pop.
@@ -155,6 +187,27 @@ mod tests {
         assert_eq!(f.pushed, 2);
         assert_eq!(f.popped, 1);
         assert_eq!(f.activity(), 3);
+    }
+
+    #[test]
+    fn stall_causes_and_high_water_are_counted() {
+        let mut ar = Arena::new();
+        let mut f = Fifo::new("s", 1, 2);
+        assert!(!f.ready_pop(), "empty fifo must report starvation");
+        assert_eq!(f.empty_on_pop, 1);
+        assert!(f.ready_push());
+        f.push(ar.alloc_from(&[1.0])).unwrap();
+        f.push(ar.alloc_from(&[2.0])).unwrap();
+        assert_eq!(f.high_water, 2);
+        assert!(!f.ready_push(), "full fifo must report backpressure");
+        assert_eq!(f.full_on_push, 1);
+        let t = f.pop().unwrap();
+        ar.free(t);
+        assert!(f.ready_pop());
+        // high water is a peak, not the current depth
+        assert_eq!(f.high_water, 2);
+        assert_eq!(f.empty_on_pop, 1);
+        assert_eq!(f.full_on_push, 1);
     }
 
     #[test]

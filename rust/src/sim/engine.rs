@@ -63,7 +63,7 @@ fn deadlock_report(design: &Design, procs: &[Proc], ch: &Channels, t0: u64) -> S
 /// this one (enforced by `MultiPump::can_apply`), so a domain at
 /// factor f ticks every `base / f` fast cycles and the slow domain
 /// every `base`.
-fn fast_time_base(design: &Design) -> u64 {
+pub(crate) fn fast_time_base(design: &Design) -> u64 {
     design
         .modules
         .iter()
@@ -162,9 +162,28 @@ pub fn run_exact(design: &Design, hbm: Hbm, max_cycles: u64) -> Result<SimOutcom
 /// evaluation loop's zero-steady-state-allocation path).
 pub fn run_exact_in(
     design: &Design,
+    hbm: Hbm,
+    max_cycles: u64,
+    arena: &mut Arena,
+) -> Result<SimOutcome, String> {
+    run_exact_observed_in(design, hbm, max_cycles, arena, None)
+}
+
+/// [`run_exact_in`] with an optional telemetry recorder attached. With
+/// `Some`, the run is wrapped in a `sim.exact` span and emits: windowed
+/// per-module busy/stall time-series (bounded memory), end-of-run
+/// per-module and per-channel stall-cause counters, FIFO occupancy
+/// high-water gauges, per-clock-domain utilization gauges, and — when
+/// the recorder carries an activity grid — per-tick module fires for
+/// waveform rendering. The instrumentation is purely observational:
+/// `SimStats` and outputs are bit-identical to the `None` path (pinned
+/// by a property test in `rust/tests/properties.rs`).
+pub fn run_exact_observed_in(
+    design: &Design,
     mut hbm: Hbm,
     max_cycles: u64,
     arena: &mut Arena,
+    rec: Option<&crate::telemetry::Recorder>,
 ) -> Result<SimOutcome, String> {
     arena.reset();
     for (name, elems, _) in &design.arrays {
@@ -180,6 +199,11 @@ pub fn run_exact_in(
     let mut ch = build_channels(design);
     let mut procs = build_procs(design, &ch);
     let n = procs.len();
+
+    let mut sim_span = rec.map(|r| r.span("sim.exact"));
+    if let Some(r) = rec {
+        r.set_activity_labels(procs.iter().map(|p| p.label.clone()).collect());
+    }
 
     // per-process tick stride in fast cycles (the legacy `ticks_now`
     // modulo, precomputed)
@@ -213,6 +237,10 @@ pub fn run_exact_in(
         .collect();
     let max_own = own_ch.iter().map(|c| c.len()).max().unwrap_or(0);
     let mut scratch: Vec<u64> = vec![0; max_own];
+    // busy/stall time-series cadence; the Series cap bounds memory for
+    // arbitrarily long runs, this just keeps the lock off the hot loop
+    let sample_every = factor * 64;
+    let mut next_sample = 0u64;
 
     /// Asleep with no armed wake.
     const IDLE: u64 = u64::MAX;
@@ -296,6 +324,16 @@ pub fn run_exact_in(
                 }
             }
 
+            if let Some(r) = rec {
+                if t >= next_sample {
+                    for p in procs.iter() {
+                        r.sample(&format!("sim.module.{}.busy", p.label), t, p.busy as f64);
+                        r.sample(&format!("sim.module.{}.stalls", p.label), t, p.stalls as f64);
+                    }
+                    next_sample = t + sample_every;
+                }
+            }
+
             // execute cycle t in module order; wakes fired during the
             // cycle can only add later-indexed processes at t itself
             let mut progress = false;
@@ -314,6 +352,9 @@ pub fn run_exact_in(
                 }
                 let prog = procs[i].tick(t, &mut ch, arena, &mut hbm);
                 if prog {
+                    if let Some(r) = rec {
+                        r.fire(i as u32, t);
+                    }
                     progress = true;
                     awake[i] = true;
                     next_tick[i] = t + stride[i];
@@ -371,7 +412,14 @@ pub fn run_exact_in(
         fast_t = final_t0 + 1;
     }
 
+    if let Some(r) = rec {
+        record_sim_metrics(r, &procs, &ch, &stride, fast_t);
+    }
     let slow_cycles = fast_t / factor;
+    if let Some(s) = sim_span.as_mut() {
+        s.note("slow_cycles", slow_cycles);
+        s.note("fast_cycles", fast_t);
+    }
     let bottleneck = procs
         .iter()
         .max_by_key(|p| p.busy)
@@ -391,6 +439,44 @@ pub fn run_exact_in(
         },
         hbm,
     })
+}
+
+/// End-of-run aggregate telemetry: per-module busy/stall totals,
+/// per-channel stall causes (backpressure vs starvation) and occupancy
+/// high-water marks, and per-clock-domain utilization — Σ busy over
+/// Σ scheduled slots per domain, the signal that shows which fast
+/// domain of a mixed-factor design is starved.
+fn record_sim_metrics(
+    rec: &crate::telemetry::Recorder,
+    procs: &[Proc],
+    ch: &Channels,
+    stride: &[u64],
+    fast_t: u64,
+) {
+    use std::collections::BTreeMap;
+    let mut domains: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    for (i, p) in procs.iter().enumerate() {
+        rec.add(&format!("sim.module.{}.busy", p.label), p.busy);
+        rec.add(&format!("sim.module.{}.stalls", p.label), p.stalls);
+        let label = match p.domain {
+            ClockDomain::Slow => "cl0".to_string(),
+            ClockDomain::Fast { factor } => format!("cl1_m{factor}"),
+        };
+        let e = domains.entry(label).or_insert((0, 0));
+        e.0 += p.busy;
+        e.1 += fast_t / stride[i].max(1);
+    }
+    for (label, (busy, slots)) in domains {
+        rec.gauge(
+            &format!("sim.domain.{label}.utilization"),
+            busy as f64 / slots.max(1) as f64,
+        );
+    }
+    for f in ch.fifos.iter() {
+        rec.add(&format!("sim.fifo.{}.full_on_push", f.name), f.full_on_push);
+        rec.add(&format!("sim.fifo.{}.empty_on_pop", f.name), f.empty_on_pop);
+        rec.gauge(&format!("sim.fifo.{}.high_water", f.name), f.high_water as f64);
+    }
 }
 
 /// Run both exact engines on one design + input and demand full
@@ -832,6 +918,42 @@ mod tests {
         let fresh = run_exact(&d, input_hbm(n, 9), 10_000_000).unwrap();
         assert_eq!(first.stats.slow_cycles, fresh.stats.slow_cycles);
         assert_eq!(second.hbm.read("z"), fresh.hbm.read("z"));
+    }
+
+    #[test]
+    fn observed_run_is_bit_identical_and_records_metrics() {
+        use crate::telemetry::{Event, Recorder};
+        let n = 512usize;
+        let d = vecadd_design(n as i64, 4, true);
+        let plain = run_exact(&d, input_hbm(n, 11), 10_000_000).unwrap();
+        let rec = Recorder::new();
+        let mut arena = Arena::new();
+        let obs =
+            run_exact_observed_in(&d, input_hbm(n, 11), 10_000_000, &mut arena, Some(&rec))
+                .unwrap();
+        // telemetry must be purely observational
+        assert_eq!(plain.stats.slow_cycles, obs.stats.slow_cycles);
+        assert_eq!(plain.stats.fast_cycles, obs.stats.fast_cycles);
+        assert_eq!(plain.stats.transactions, obs.stats.transactions);
+        assert_eq!(plain.stats.bottleneck, obs.stats.bottleneck);
+        assert_eq!(plain.stats.modules, obs.stats.modules);
+        assert_eq!(plain.hbm.read("z"), obs.hbm.read("z"));
+        // and the recorder saw the run: span, module/fifo counters,
+        // both clock domains' utilization gauges, sampled series
+        let ev = rec.events();
+        assert!(ev
+            .iter()
+            .any(|e| matches!(e, Event::Begin { name, .. } if name == "sim.exact")));
+        let counters = rec.counters();
+        assert!(counters.keys().any(|k| k.starts_with("sim.module.") && k.ends_with(".busy")));
+        assert!(counters
+            .keys()
+            .any(|k| k.starts_with("sim.fifo.") && k.ends_with(".empty_on_pop")));
+        let gauges = rec.gauges();
+        assert!(gauges.contains_key("sim.domain.cl0.utilization"));
+        assert!(gauges.keys().any(|k| k.starts_with("sim.domain.cl1_m2")));
+        assert!(gauges.values().all(|v| (0.0..=1.0).contains(v) || v.is_finite()));
+        assert!(!rec.series().is_empty(), "busy/stall series must be sampled");
     }
 
     #[test]

@@ -45,7 +45,8 @@ pub mod trace;
 pub use arena::{Arena, ArenaStats, Txn};
 pub use engine::{
     exact_engines_agree, exact_engines_agree_in, rate_model, run_exact, run_exact_in,
-    run_exact_reference, run_exact_reference_in, run_functional, run_functional_in, SimOutcome,
+    run_exact_observed_in, run_exact_reference, run_exact_reference_in, run_functional,
+    run_functional_in, SimOutcome,
 };
 pub use memory::Hbm;
 pub use stats::SimStats;

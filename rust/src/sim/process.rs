@@ -418,7 +418,7 @@ impl Proc {
                     if *credit < *cycles_per_txn {
                         return true; // burst in progress
                     }
-                    if !ch.fifos[*out].can_push() {
+                    if !ch.fifos[*out].ready_push() {
                         *credit = *cycles_per_txn; // hold the beat
                         return false;
                     }
@@ -444,10 +444,10 @@ impl Proc {
                         return true;
                     }
                 }
-                let txn = match ch.fifos[*input].pop() {
-                    Some(t) => t,
-                    None => return false,
-                };
+                if !ch.fifos[*input].ready_pop() {
+                    return false;
+                }
+                let txn = ch.fifos[*input].pop().expect("checked ready_pop");
                 if !unbounded {
                     *credit = 0;
                 }
@@ -476,7 +476,7 @@ impl Proc {
                 // retire finished transactions
                 if !unbounded {
                     if let Some((ready, _)) = pipe.front() {
-                        if *ready <= now && ch.fifos[*output].can_push() {
+                        if *ready <= now && ch.fifos[*output].ready_push() {
                             let (_, txn) = pipe.pop_front().unwrap();
                             ch.fifos[*output].push(txn).expect("checked");
                             progressed = true;
@@ -490,8 +490,15 @@ impl Proc {
                 if *fired >= *iterations {
                     return progressed;
                 }
-                // need one txn on every input
-                if inputs.iter().any(|i| ch.fifos[*i].is_empty()) {
+                // need one txn on every input (checking all of them so
+                // each starved channel records its empty-on-pop cause)
+                let mut starved = false;
+                for i in inputs.iter() {
+                    if !ch.fifos[*i].ready_pop() {
+                        starved = true;
+                    }
+                }
+                if starved {
                     return progressed;
                 }
                 popped.clear();
@@ -517,10 +524,10 @@ impl Proc {
                 true
             }
             ProcState::Sync { input, output } => {
-                if ch.fifos[*input].is_empty() {
+                if !ch.fifos[*input].ready_pop() {
                     return false;
                 }
-                if !unbounded && !ch.fifos[*output].can_push() {
+                if !unbounded && !ch.fifos[*output].ready_push() {
                     return false;
                 }
                 // same lane width on both sides: the handle moves
@@ -535,12 +542,13 @@ impl Proc {
             }
             ProcState::Issuer { input, output, factor, hold } => {
                 if hold.is_none() {
-                    match ch.fifos[*input].pop() {
-                        Some(t) => *hold = Some((t, 0)),
-                        None => return false,
+                    if !ch.fifos[*input].ready_pop() {
+                        return false;
                     }
+                    let t = ch.fifos[*input].pop().expect("checked ready_pop");
+                    *hold = Some((t, 0));
                 }
-                if !unbounded && !ch.fifos[*output].can_push() {
+                if !unbounded && !ch.fifos[*output].ready_push() {
                     return false;
                 }
                 let narrow_lanes = ch.fifos[*output].lanes;
@@ -563,16 +571,15 @@ impl Proc {
             ProcState::Packer { input, output, factor, accum, wide_lanes } => {
                 let _ = factor;
                 if accum.len() < *wide_lanes {
-                    match ch.fifos[*input].pop() {
-                        Some(t) => {
-                            accum.extend_from_slice(arena.get(t));
-                            arena.free(t);
-                        }
-                        None => return false,
+                    if !ch.fifos[*input].ready_pop() {
+                        return false;
                     }
+                    let t = ch.fifos[*input].pop().expect("checked ready_pop");
+                    accum.extend_from_slice(arena.get(t));
+                    arena.free(t);
                 }
                 if accum.len() >= *wide_lanes {
-                    if !unbounded && !ch.fifos[*output].can_push() {
+                    if !unbounded && !ch.fifos[*output].ready_push() {
                         return false;
                     }
                     let txn = arena.alloc(*wide_lanes);
@@ -605,14 +612,16 @@ impl Proc {
                 let mut progressed = false;
                 // ingest at most one txn per input per cycle
                 if a_buf.len() < *n * *k {
-                    if let Some(t) = ch.fifos[*a_in].pop() {
+                    if ch.fifos[*a_in].ready_pop() {
+                        let t = ch.fifos[*a_in].pop().expect("checked ready_pop");
                         a_buf.extend_from_slice(arena.get(t));
                         arena.free(t);
                         progressed = true;
                     }
                 }
                 if b_buf.len() < *k * *m {
-                    if let Some(t) = ch.fifos[*b_in].pop() {
+                    if ch.fifos[*b_in].ready_pop() {
+                        let t = ch.fifos[*b_in].pop().expect("checked ready_pop");
                         b_buf.extend_from_slice(arena.get(t));
                         arena.free(t);
                         progressed = true;
@@ -656,7 +665,7 @@ impl Proc {
                     if let Some(c) = c_buf {
                         let total_txns = *n * *m / *lanes;
                         while *c_pos < total_txns {
-                            if !unbounded && !ch.fifos[*c_out].can_push() {
+                            if !unbounded && !ch.fifos[*c_out].ready_push() {
                                 break;
                             }
                             let base = *c_pos * *lanes;
@@ -697,7 +706,8 @@ impl Proc {
                 let mut progressed = false;
                 // ingest one txn
                 if *in_count < *total / *lanes {
-                    if let Some(t) = ch.fifos[*input].pop() {
+                    if ch.fifos[*input].ready_pop() {
+                        let t = ch.fifos[*input].pop().expect("checked ready_pop");
                         ring.extend_from_slice(arena.get(t));
                         arena.free(t);
                         *in_count += 1;
@@ -710,7 +720,7 @@ impl Proc {
                 let have = ring.len();
                 let want_out = *out_count * *lanes;
                 if want_out < *total && have >= (want_out + plane + *nz + 1).min(*total) {
-                    if !unbounded && !ch.fifos[*output].can_push() {
+                    if !unbounded && !ch.fifos[*output].ready_push() {
                         return progressed;
                     }
                     let txn = arena.alloc(*lanes);
@@ -750,13 +760,13 @@ impl Proc {
                     *cooldown -= 1;
                     return true;
                 }
-                if !unbounded && !ch.fifos[*output].can_push() {
+                if !unbounded && !ch.fifos[*output].ready_push() {
                     return false;
                 }
-                let t = match ch.fifos[*input].pop() {
-                    Some(t) => t,
-                    None => return false,
-                };
+                if !ch.fifos[*input].ready_pop() {
+                    return false;
+                }
+                let t = ch.fifos[*input].pop().expect("checked ready_pop");
                 let d = arena.get(t)[0];
                 arena.free(t);
                 let i = *pos / *n;

@@ -1,16 +1,21 @@
 //! Cycle-level activity tracing: the machinery behind the Figure-2
 //! waveform reproduction (`examples/waveforms.rs`).
 //!
-//! Runs the exact engine while recording, for each fast-domain tick,
-//! which modules made progress — then renders the result as a text
-//! waveform in the style of the paper's Figure 2.
+//! Runs the event-driven exact engine with a telemetry recorder whose
+//! activity grid captures, for each fast-domain tick, which modules
+//! made progress — then renders the result as a text waveform in the
+//! style of the paper's Figure 2. Capture is the telemetry sampler
+//! itself (`Recorder::with_activity`), not a second per-tick loop:
+//! cycles the scheduler skips (sleeping or quiescent stretches) simply
+//! record no fires and render as idle columns, and the time base is
+//! the design's largest clock ratio, so mixed per-region factors get
+//! correct per-domain strides.
 
 use super::arena::Arena;
-use super::channel::{Channels, Fifo};
+use super::engine::{fast_time_base, run_exact_observed_in};
 use super::memory::Hbm;
-use super::process::Proc;
-use crate::codegen::design::{Design, ModuleSpec};
-use crate::ir::ClockDomain;
+use crate::codegen::design::Design;
+use crate::telemetry::Recorder;
 
 /// Per-module activity over the traced window.
 #[derive(Debug)]
@@ -47,43 +52,36 @@ impl Trace {
     }
 }
 
-/// Run the exact engine for up to `max_fast_ticks`, recording module
-/// activity. The design should be small (tracing is per-tick).
-pub fn run_traced(design: &Design, mut hbm: Hbm, max_fast_ticks: usize) -> Result<Trace, String> {
-    for (name, elems, _) in &design.arrays {
-        hbm.alloc(name, *elems);
-    }
-    let factor = design.pump.map(|(m, _)| m).unwrap_or(1);
-    let mut arena = Arena::new();
-    let mut ch = Channels::default();
-    for c in &design.channels {
-        ch.add(Fifo::new(&c.name, c.lanes, c.depth));
-    }
-    let mut procs: Vec<Proc> = design
-        .modules
+/// Run the event-driven exact engine for up to `max_fast_ticks`,
+/// recording module activity through the telemetry activity grid. A
+/// run that overruns the tick budget or deadlocks still yields the
+/// partial waveform captured up to that point (exactly what a stuck
+/// design's trace is for).
+pub fn run_traced(design: &Design, hbm: Hbm, max_fast_ticks: usize) -> Result<Trace, String> {
+    let factor = fast_time_base(design) as usize;
+    let rec = Recorder::with_activity(max_fast_ticks as u64);
+    // the engine's budget is in slow cycles; round up so the grid can
+    // fill its full fast-tick window
+    let max_cycles = ((max_fast_ticks + factor - 1) / factor).max(1) as u64;
+    let _ = run_exact_observed_in(design, hbm, max_cycles, &mut Arena::new(), Some(&rec));
+
+    let grid = rec.activity().expect("recorder built with an activity grid");
+    let modules = grid.labels.clone();
+    // dense matrix over the observed window: ticks with no recorded
+    // fire — including whole stretches the scheduler skipped — are
+    // idle columns
+    let ticks = grid
+        .fires
         .iter()
-        .filter(|m| !matches!(&m.spec, ModuleSpec::Sync { input, .. } if input.starts_with("__ctrl")))
-        .map(|m| Proc::build(&m.spec, m.domain, &ch))
-        .collect();
-
-    let modules: Vec<String> = procs.iter().map(|p| p.label.clone()).collect();
-    let mut activity: Vec<Vec<bool>> = vec![Vec::with_capacity(max_fast_ticks); procs.len()];
-
-    for t in 0..max_fast_ticks as u64 {
-        let mut all_done = true;
-        for (i, p) in procs.iter_mut().enumerate() {
-            let ticks_now = match p.domain {
-                ClockDomain::Slow => t % factor as u64 == 0,
-                ClockDomain::Fast { .. } => true,
-            };
-            let fired = ticks_now && p.tick(t, &mut ch, &mut arena, &mut hbm);
-            activity[i].push(fired);
-            if !p.done(&ch) {
-                all_done = false;
-            }
-        }
-        if all_done && ch.all_empty() {
-            break;
+        .map(|&(_, t)| t as usize + 1)
+        .max()
+        .unwrap_or(0)
+        .min(max_fast_ticks);
+    let mut activity: Vec<Vec<bool>> = vec![vec![false; ticks]; modules.len()];
+    for &(m, t) in &grid.fires {
+        let (m, t) = (m as usize, t as usize);
+        if m < activity.len() && t < ticks {
+            activity[m][t] = true;
         }
     }
     Ok(Trace { modules, activity, factor })
@@ -151,5 +149,19 @@ mod tests {
         let r = t.render();
         assert!(r.contains("▮"));
         assert!(r.lines().count() >= t.modules.len());
+    }
+
+    #[test]
+    fn skipped_quiet_cycles_render_as_idle_columns() {
+        let t = traced(true);
+        // the matrix is dense and rectangular over the observed window:
+        // ticks the event scheduler skipped are explicit idle columns,
+        // not dropped samples
+        let ticks = t.activity.first().map(|r| r.len()).unwrap_or(0);
+        assert!(ticks > 0, "trace captured nothing");
+        assert!(t.activity.iter().all(|row| row.len() == ticks));
+        // the slow-domain reader only ticks every `factor` fast cycles,
+        // so its row must contain idle columns
+        assert!(t.render().contains('·'));
     }
 }

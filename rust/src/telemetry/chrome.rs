@@ -1,0 +1,183 @@
+//! Chrome trace-event JSON export (`chrome://tracing` / Perfetto).
+//!
+//! Emits the JSON-object flavor of the trace-event format: a
+//! `traceEvents` array of `B`/`E`/`i`/`C` phase records plus an
+//! `otherData.schema` tag so downstream tooling can detect drift, the
+//! same versioning discipline as the DSE disk cache.
+
+use super::recorder::{Event, Recorder};
+
+/// Minimal JSON string escape (quotes, backslash, control chars).
+pub(crate) fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn args_json(args: &[(String, String)]) -> String {
+    let body: Vec<String> =
+        args.iter().map(|(k, v)| format!("\"{}\": \"{}\"", esc(k), esc(v))).collect();
+    format!("{{{}}}", body.join(", "))
+}
+
+/// Render the recorder's contents as a Chrome trace-event JSON string.
+/// Raw thread ids are compressed to small dense integers in order of
+/// first appearance so the trace viewer shows `tid 1, 2, …` lanes.
+pub fn to_chrome_trace(rec: &Recorder) -> String {
+    let events = rec.events();
+    let mut dense: Vec<u64> = Vec::new();
+    let mut tid_of = |raw: u64| -> usize {
+        if let Some(i) = dense.iter().position(|&t| t == raw) {
+            i + 1
+        } else {
+            dense.push(raw);
+            dense.len()
+        }
+    };
+
+    let mut rows: Vec<String> = Vec::new();
+    for e in &events {
+        match e {
+            Event::Begin { name, tid, ts_us } => rows.push(format!(
+                "    {{\"name\": \"{}\", \"ph\": \"B\", \"pid\": 1, \"tid\": {}, \"ts\": {:.3}}}",
+                esc(name),
+                tid_of(*tid),
+                ts_us
+            )),
+            Event::End { tid, ts_us, args } => rows.push(format!(
+                "    {{\"ph\": \"E\", \"pid\": 1, \"tid\": {}, \"ts\": {:.3}, \"args\": {}}}",
+                tid_of(*tid),
+                ts_us,
+                args_json(args)
+            )),
+            Event::Instant { name, tid, ts_us } => rows.push(format!(
+                "    {{\"name\": \"{}\", \"ph\": \"i\", \"s\": \"t\", \"pid\": 1, \"tid\": {}, \"ts\": {:.3}}}",
+                esc(name),
+                tid_of(*tid),
+                ts_us
+            )),
+        }
+    }
+
+    // counters and gauges as one 'C' sample each at export time — the
+    // trace viewer draws them as a bar per name
+    let ts_end = rec.elapsed_us();
+    for (name, v) in rec.counters() {
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"ph\": \"C\", \"pid\": 1, \"tid\": 0, \"ts\": {:.3}, \"args\": {{\"value\": {}}}}}",
+            esc(&name),
+            ts_end,
+            v
+        ));
+    }
+    for (name, v) in rec.gauges() {
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"ph\": \"C\", \"pid\": 1, \"tid\": 0, \"ts\": {:.3}, \"args\": {{\"value\": {:.6}}}}}",
+            esc(&name),
+            ts_end,
+            v
+        ));
+    }
+
+    let mut out = String::from("{\n  \"traceEvents\": [\n");
+    out.push_str(&rows.join(",\n"));
+    out.push_str("\n  ],\n");
+    out.push_str("  \"displayTimeUnit\": \"ms\",\n");
+    out.push_str("  \"otherData\": {\"schema\": \"tvec-trace v1\"}\n");
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn balanced(s: &str) -> bool {
+        let mut depth = 0i64;
+        let mut brackets = 0i64;
+        let mut in_str = false;
+        let mut prev = ' ';
+        for c in s.chars() {
+            if in_str {
+                if c == '"' && prev != '\\' {
+                    in_str = false;
+                }
+            } else {
+                match c {
+                    '"' => in_str = true,
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    '[' => brackets += 1,
+                    ']' => brackets -= 1,
+                    _ => {}
+                }
+            }
+            prev = c;
+        }
+        depth == 0 && brackets == 0 && !in_str
+    }
+
+    #[test]
+    fn chrome_export_has_golden_shape() {
+        let rec = Recorder::new();
+        {
+            let mut sp = rec.span("pump");
+            sp.note("factor", 2);
+            rec.instant("prefix-cache-hit");
+        }
+        rec.add("dse.cache.hits", 3);
+        rec.gauge("sim.domain.cl0.utilization", 0.5);
+        let json = to_chrome_trace(&rec);
+        for needle in [
+            "\"traceEvents\": [",
+            "\"name\": \"pump\", \"ph\": \"B\"",
+            "\"ph\": \"E\"",
+            "\"factor\": \"2\"",
+            "\"name\": \"prefix-cache-hit\", \"ph\": \"i\"",
+            "\"name\": \"dse.cache.hits\", \"ph\": \"C\"",
+            "\"name\": \"sim.domain.cl0.utilization\", \"ph\": \"C\"",
+            "\"displayTimeUnit\": \"ms\"",
+            "\"otherData\": {\"schema\": \"tvec-trace v1\"}",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert!(balanced(&json), "unbalanced JSON:\n{json}");
+    }
+
+    #[test]
+    fn strings_are_escaped() {
+        let rec = Recorder::new();
+        {
+            let mut sp = rec.span("weird \"name\"\n");
+            sp.note("path", "a\\b");
+        }
+        let json = to_chrome_trace(&rec);
+        assert!(json.contains("weird \\\"name\\\"\\n"));
+        assert!(json.contains("a\\\\b"));
+        assert!(balanced(&json));
+    }
+
+    #[test]
+    fn thread_ids_are_densely_renumbered() {
+        let rec = Recorder::new();
+        let _ = rec.span("main-thread");
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let _ = rec.span("worker-thread");
+            });
+        });
+        let json = to_chrome_trace(&rec);
+        assert!(json.contains("\"tid\": 1,"));
+        assert!(json.contains("\"tid\": 2,"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Structured observability: spans, counters, gauges, bounded sampled
+//! time-series, and two exporters (Chrome trace-event JSON and a flat
+//! `TELEMETRY.json` summary). DESIGN.md §11 documents the architecture.
+//!
+//! The contract with the rest of the crate is the *nullable handle*:
+//! instrumented code paths accept an `Option<&Recorder>` and do all
+//! recording under `if let Some(rec) = …` / `rec.map(…)`. With `None`
+//! the instrumentation compiles down to a branch on a null handle — no
+//! allocation, no formatting, no locking — which is what keeps the
+//! simulator's hot loop and the DSE evaluator at full speed when no
+//! `--trace-out` was requested. The enabled path must be purely
+//! observational: the telemetry-on/off property test pins that
+//! `SimStats` and simulation outputs are bit-identical either way.
+
+pub mod chrome;
+pub mod recorder;
+pub mod summary;
+
+pub use chrome::to_chrome_trace;
+pub use recorder::{ActivityGrid, Event, Recorder, Series, Span, SERIES_CAP};
+pub use summary::{to_summary_json, top_stalls, SUMMARY_SCHEMA};

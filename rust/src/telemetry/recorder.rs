@@ -1,0 +1,333 @@
+//! The recording core: spans, counters, gauges, bounded time-series
+//! and the optional per-tick activity grid.
+//!
+//! Everything funnels through [`Recorder`], which call sites hold as an
+//! `Option<&Recorder>`: the disabled path is a branch on `None` — no
+//! allocation, no formatting, no lock. The recorder itself is `Sync`
+//! (one mutex around all state) because the DSE evaluator fans
+//! candidates out over scoped threads and every worker records into the
+//! same instance.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::BTreeMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One recorded trace event, in Chrome trace-event terms: span begin,
+/// span end (carrying the span's accumulated args), or an instant.
+#[derive(Clone, Debug)]
+pub enum Event {
+    Begin { name: String, tid: u64, ts_us: f64 },
+    End { tid: u64, ts_us: f64, args: Vec<(String, String)> },
+    Instant { name: String, tid: u64, ts_us: f64 },
+}
+
+/// Hard cap on retained points per series (bounded memory).
+pub const SERIES_CAP: usize = 512;
+
+/// A sampled time-series with bounded memory: once [`SERIES_CAP`]
+/// points are retained, every other point is dropped and the accept
+/// stride doubles, so an arbitrarily long run keeps a uniformly-spaced
+/// window of at most `SERIES_CAP` samples.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    /// Retained `(t, value)` samples, in arrival order.
+    pub points: Vec<(u64, f64)>,
+    stride: u64,
+    seen: u64,
+}
+
+impl Series {
+    fn record(&mut self, t: u64, v: f64) {
+        if self.stride == 0 {
+            self.stride = 1;
+        }
+        let accept = self.seen % self.stride == 0;
+        self.seen += 1;
+        if !accept {
+            return;
+        }
+        self.points.push((t, v));
+        if self.points.len() >= SERIES_CAP {
+            let mut i = 0usize;
+            self.points.retain(|_| {
+                let keep = i % 2 == 0;
+                i += 1;
+                keep
+            });
+            self.stride *= 2;
+        }
+    }
+}
+
+/// Dense per-tick module activity, recorded only when the recorder was
+/// built via [`Recorder::with_activity`]. This is the shared capture
+/// the text waveform (`sim::trace`) renders from — one source of truth
+/// instead of a second per-tick loop.
+#[derive(Clone, Debug, Default)]
+pub struct ActivityGrid {
+    /// Module labels, in simulator process order.
+    pub labels: Vec<String>,
+    /// `(module index, fast tick)` pairs for every progressing tick.
+    pub fires: Vec<(u32, u64)>,
+    /// Ticks at or beyond this bound are not recorded.
+    pub max_ticks: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    events: Vec<Event>,
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    series: BTreeMap<String, Series>,
+    grid: Option<ActivityGrid>,
+}
+
+/// The telemetry sink. Cheap to create; all recording methods take
+/// `&self` so one instance can be shared across worker threads.
+pub struct Recorder {
+    start: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder { start: Instant::now(), inner: Mutex::new(Inner::default()) }
+    }
+
+    /// A recorder that additionally keeps a dense activity grid for up
+    /// to `max_ticks` fast ticks (used by waveform tracing).
+    pub fn with_activity(max_ticks: u64) -> Self {
+        let r = Self::new();
+        r.inner.lock().unwrap().grid =
+            Some(ActivityGrid { max_ticks, ..ActivityGrid::default() });
+        r
+    }
+
+    /// Microseconds since the recorder was created (trace timebase).
+    pub fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+
+    fn tid() -> u64 {
+        let mut h = DefaultHasher::new();
+        std::thread::current().id().hash(&mut h);
+        h.finish()
+    }
+
+    /// Open a span; it closes (records its end event) on drop, so
+    /// nesting follows lexical scope per thread.
+    pub fn span(&self, name: &str) -> Span<'_> {
+        let tid = Self::tid();
+        let ts_us = self.elapsed_us();
+        self.inner
+            .lock()
+            .unwrap()
+            .events
+            .push(Event::Begin { name: name.to_string(), tid, ts_us });
+        Span { rec: self, tid, args: Vec::new() }
+    }
+
+    /// Record a zero-duration instant event (e.g. a prefix-cache hit).
+    pub fn instant(&self, name: &str) {
+        let tid = Self::tid();
+        let ts_us = self.elapsed_us();
+        self.inner
+            .lock()
+            .unwrap()
+            .events
+            .push(Event::Instant { name: name.to_string(), tid, ts_us });
+    }
+
+    /// Bump a monotone counter by `delta`.
+    pub fn add(&self, name: &str, delta: u64) {
+        *self.inner.lock().unwrap().counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set a gauge (last write wins).
+    pub fn gauge(&self, name: &str, value: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), value);
+    }
+
+    /// Append a `(t, value)` sample to a bounded series.
+    pub fn sample(&self, name: &str, t: u64, v: f64) {
+        self.inner.lock().unwrap().series.entry(name.to_string()).or_default().record(t, v);
+    }
+
+    /// Record that activity-grid module `module` progressed at fast
+    /// tick `t`. No-op unless built via [`Recorder::with_activity`].
+    pub fn fire(&self, module: u32, t: u64) {
+        if let Some(g) = self.inner.lock().unwrap().grid.as_mut() {
+            if t < g.max_ticks {
+                g.fires.push((module, t));
+            }
+        }
+    }
+
+    /// Install the module labels for the activity grid.
+    pub fn set_activity_labels(&self, labels: Vec<String>) {
+        if let Some(g) = self.inner.lock().unwrap().grid.as_mut() {
+            g.labels = labels;
+        }
+    }
+
+    // -- query side (exporters, reports, tests) --
+
+    pub fn events(&self) -> Vec<Event> {
+        self.inner.lock().unwrap().events.clone()
+    }
+
+    pub fn counters(&self) -> BTreeMap<String, u64> {
+        self.inner.lock().unwrap().counters.clone()
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauges(&self) -> BTreeMap<String, f64> {
+        self.inner.lock().unwrap().gauges.clone()
+    }
+
+    pub fn series(&self) -> BTreeMap<String, Series> {
+        self.inner.lock().unwrap().series.clone()
+    }
+
+    pub fn activity(&self) -> Option<ActivityGrid> {
+        self.inner.lock().unwrap().grid.clone()
+    }
+}
+
+/// RAII span guard returned by [`Recorder::span`]. Arguments attached
+/// via [`Span::note`] land on the end event; Chrome/Perfetto merge a
+/// slice's begin and end args, so notes show on the span itself.
+pub struct Span<'a> {
+    rec: &'a Recorder,
+    tid: u64,
+    args: Vec<(String, String)>,
+}
+
+impl Span<'_> {
+    pub fn note(&mut self, key: &str, value: impl std::fmt::Display) {
+        self.args.push((key.to_string(), value.to_string()));
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        let ts_us = self.rec.elapsed_us();
+        self.rec
+            .inner
+            .lock()
+            .unwrap()
+            .events
+            .push(Event::End { tid: self.tid, ts_us, args: std::mem::take(&mut self.args) });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_in_lexical_order() {
+        let rec = Recorder::new();
+        {
+            let _outer = rec.span("outer");
+            {
+                let mut inner = rec.span("inner");
+                inner.note("k", 42);
+            }
+        }
+        let ev = rec.events();
+        assert_eq!(ev.len(), 4);
+        match (&ev[0], &ev[1], &ev[2], &ev[3]) {
+            (
+                Event::Begin { name: a, .. },
+                Event::Begin { name: b, .. },
+                Event::End { args, .. },
+                Event::End { args: outer_args, .. },
+            ) => {
+                assert_eq!(a, "outer");
+                assert_eq!(b, "inner");
+                assert_eq!(args, &[("k".to_string(), "42".to_string())]);
+                assert!(outer_args.is_empty());
+            }
+            other => panic!("unexpected event order: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disabled_handle_is_a_noop_branch() {
+        // the call-site idiom: everything hangs off Option::map, so a
+        // None handle touches no recorder state at all
+        let rec: Option<&Recorder> = None;
+        let mut sp = rec.map(|r| r.span("never"));
+        if let Some(s) = sp.as_mut() {
+            s.note("unreachable", 1);
+        }
+        if let Some(r) = rec {
+            r.add("never", 1);
+        }
+        // and an enabled handle records exactly once
+        let live = Recorder::new();
+        let on: Option<&Recorder> = Some(&live);
+        if let Some(r) = on {
+            r.add("hits", 2);
+        }
+        assert_eq!(live.counter("hits"), 2);
+        assert_eq!(live.counter("never"), 0);
+    }
+
+    #[test]
+    fn series_memory_is_bounded_and_coverage_uniform() {
+        let rec = Recorder::new();
+        let n = 100_000u64;
+        for t in 0..n {
+            rec.sample("busy", t, t as f64);
+        }
+        let s = &rec.series()["busy"];
+        assert!(s.points.len() <= SERIES_CAP, "series grew to {}", s.points.len());
+        assert!(s.points.len() > SERIES_CAP / 4, "decimation dropped too much");
+        // first sample survives every decimation round (even index 0)
+        assert_eq!(s.points[0], (0, 0.0));
+        // samples stay in time order and span most of the run
+        assert!(s.points.windows(2).all(|w| w[0].0 < w[1].0));
+        assert!(s.points.last().unwrap().0 > n / 2);
+    }
+
+    #[test]
+    fn counters_gauges_and_instants_accumulate() {
+        let rec = Recorder::new();
+        rec.add("c", 1);
+        rec.add("c", 4);
+        rec.gauge("g", 0.25);
+        rec.gauge("g", 0.75); // last write wins
+        rec.instant("blip");
+        assert_eq!(rec.counter("c"), 5);
+        assert_eq!(rec.gauges()["g"], 0.75);
+        assert!(matches!(rec.events().as_slice(), [Event::Instant { name, .. }] if name == "blip"));
+    }
+
+    #[test]
+    fn activity_grid_respects_its_tick_bound() {
+        let rec = Recorder::with_activity(10);
+        rec.set_activity_labels(vec!["a".into(), "b".into()]);
+        rec.fire(0, 3);
+        rec.fire(1, 9);
+        rec.fire(1, 10); // at the bound: dropped
+        rec.fire(0, 99); // far past: dropped
+        let g = rec.activity().unwrap();
+        assert_eq!(g.labels, vec!["a", "b"]);
+        assert_eq!(g.fires, vec![(0, 3), (1, 9)]);
+        // a plain recorder has no grid at all
+        assert!(Recorder::new().activity().is_none());
+    }
+}

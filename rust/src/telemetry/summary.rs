@@ -1,0 +1,135 @@
+//! Flat metrics summary export (`TELEMETRY.json`) plus the top-stall
+//! extraction used by `tvec top`.
+//!
+//! Counters/gauges/series are stored in `BTreeMap`s, so export order is
+//! deterministic — the golden-schema test relies on that.
+
+use super::chrome::esc;
+use super::recorder::Recorder;
+
+/// Schema tag written into every summary export.
+pub const SUMMARY_SCHEMA: &str = "tvec-telemetry v1";
+
+/// Render the recorder's aggregate state as a flat JSON document:
+/// `{schema, counters: {name: int}, gauges: {name: float},
+///   series: {name: [[t, value], ...]}}`.
+pub fn to_summary_json(rec: &Recorder) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"schema\": \"{SUMMARY_SCHEMA}\",\n"));
+
+    out.push_str("  \"counters\": {\n");
+    let counters = rec.counters();
+    let rows: Vec<String> =
+        counters.iter().map(|(k, v)| format!("    \"{}\": {}", esc(k), v)).collect();
+    out.push_str(&rows.join(",\n"));
+    if !rows.is_empty() {
+        out.push('\n');
+    }
+    out.push_str("  },\n");
+
+    out.push_str("  \"gauges\": {\n");
+    let gauges = rec.gauges();
+    let rows: Vec<String> =
+        gauges.iter().map(|(k, v)| format!("    \"{}\": {:.6}", esc(k), v)).collect();
+    out.push_str(&rows.join(",\n"));
+    if !rows.is_empty() {
+        out.push('\n');
+    }
+    out.push_str("  },\n");
+
+    out.push_str("  \"series\": {\n");
+    let series = rec.series();
+    let rows: Vec<String> = series
+        .iter()
+        .map(|(k, s)| {
+            let pts: Vec<String> =
+                s.points.iter().map(|(t, v)| format!("[{t}, {v:.6}]")).collect();
+            format!("    \"{}\": [{}]", esc(k), pts.join(", "))
+        })
+        .collect();
+    out.push_str(&rows.join(",\n"));
+    if !rows.is_empty() {
+        out.push('\n');
+    }
+    out.push_str("  }\n}\n");
+    out
+}
+
+/// Extract the top-`k` stall sources from a recorded run: module stall
+/// totals (`sim.module.*.stalls`) and per-channel stall causes
+/// (`sim.fifo.*.full_on_push` — backpressure, `sim.fifo.*.empty_on_pop`
+/// — starvation), sorted by count descending (name ascending on ties
+/// for determinism).
+pub fn top_stalls(rec: &Recorder, k: usize) -> Vec<(String, u64)> {
+    let mut rows: Vec<(String, u64)> = rec
+        .counters()
+        .into_iter()
+        .filter(|(name, _)| {
+            (name.starts_with("sim.module.") && name.ends_with(".stalls"))
+                || (name.starts_with("sim.fifo.")
+                    && (name.ends_with(".full_on_push") || name.ends_with(".empty_on_pop")))
+        })
+        .collect();
+    rows.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    rows.truncate(k);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_export_has_golden_shape() {
+        let rec = Recorder::new();
+        rec.add("dse.cache.hits", 7);
+        rec.gauge("sim.domain.cl1_m2.utilization", 0.875);
+        rec.sample("sim.module.vadd.busy", 0, 1.0);
+        rec.sample("sim.module.vadd.busy", 8, 5.0);
+        let json = to_summary_json(&rec);
+        for needle in [
+            "\"schema\": \"tvec-telemetry v1\"",
+            "\"counters\": {",
+            "\"dse.cache.hits\": 7",
+            "\"gauges\": {",
+            "\"sim.domain.cl1_m2.utilization\": 0.875000",
+            "\"series\": {",
+            "\"sim.module.vadd.busy\": [[0, 1.000000], [8, 5.000000]]",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        // balanced braces/brackets outside strings
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes, "unbalanced braces:\n{json}");
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn empty_recorder_still_exports_valid_schema() {
+        let json = to_summary_json(&Recorder::new());
+        assert!(json.contains("\"schema\": \"tvec-telemetry v1\""));
+        assert!(json.contains("\"counters\": {"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn top_stalls_ranks_modules_and_stall_causes() {
+        let rec = Recorder::new();
+        rec.add("sim.module.read_x.stalls", 5);
+        rec.add("sim.module.vadd.stalls", 40);
+        rec.add("sim.module.vadd.busy", 1000); // not a stall source
+        rec.add("sim.fifo.q_issue.empty_on_pop", 40); // tie with vadd
+        rec.add("sim.fifo.q_pack.full_on_push", 12);
+        rec.add("dse.cache.hits", 99); // unrelated namespace
+        let top = top_stalls(&rec, 3);
+        assert_eq!(
+            top,
+            vec![
+                ("sim.fifo.q_issue.empty_on_pop".to_string(), 40),
+                ("sim.module.vadd.stalls".to_string(), 40),
+                ("sim.fifo.q_pack.full_on_push".to_string(), 12),
+            ]
+        );
+    }
+}

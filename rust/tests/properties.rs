@@ -362,6 +362,71 @@ fn prop_pooled_exact_outputs_bit_identical_to_functional_streams() {
 }
 
 #[test]
+fn prop_telemetry_on_and_off_runs_are_bit_identical() {
+    // the zero-cost-when-disabled contract's other half: ENABLING
+    // telemetry must be purely observational — a recorded run returns
+    // bit-identical SimStats and output bits to an unrecorded one on
+    // any random pumped vecadd
+    use temporal_vec::sim::{run_exact_in, run_exact_observed_in, Arena};
+    use temporal_vec::telemetry::Recorder;
+    forall("telemetry-invisible", 0xD4, 8, |g| {
+        let lanes = *g.choose(&[2usize, 4, 8]);
+        let pump = g.bool() && lanes % 2 == 0;
+        let n = (g.usize(6, 40) * lanes) as i64;
+        let mut spec =
+            BuildSpec::new(apps::vecadd::build()).vectorized("vadd", lanes).bind("N", n);
+        if pump {
+            spec = spec.pumped(2, PumpMode::Resource);
+        }
+        let c = match compile(spec) {
+            Ok(c) => c,
+            Err(_) => return Ok(()),
+        };
+        let x = g.vec_f32(n as usize);
+        let y = g.vec_f32(n as usize);
+        let mk_hbm = || {
+            let mut hbm = Hbm::new();
+            hbm.load("x", x.clone());
+            hbm.load("y", y.clone());
+            hbm
+        };
+        let plain = run_exact_in(&c.design, mk_hbm(), 10_000_000, &mut Arena::new())
+            .map_err(|e| e.to_string())?;
+        let rec = Recorder::new();
+        let observed = run_exact_observed_in(
+            &c.design,
+            mk_hbm(),
+            10_000_000,
+            &mut Arena::new(),
+            Some(&rec),
+        )
+        .map_err(|e| e.to_string())?;
+        if plain.stats.slow_cycles != observed.stats.slow_cycles
+            || plain.stats.fast_cycles != observed.stats.fast_cycles
+            || plain.stats.transactions != observed.stats.transactions
+            || plain.stats.bottleneck != observed.stats.bottleneck
+            || plain.stats.modules != observed.stats.modules
+        {
+            return Err(format!(
+                "SimStats diverged under observation (lanes {lanes}, pump {pump}, n {n}): \
+                 {:?} vs {:?}",
+                plain.stats, observed.stats
+            ));
+        }
+        let a: Vec<u32> = plain.hbm.read("z").iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = observed.hbm.read("z").iter().map(|v| v.to_bits()).collect();
+        if a != b {
+            return Err("output bits diverged under observation".into());
+        }
+        // and the recorder actually saw the run
+        if rec.events().is_empty() || rec.counters().is_empty() {
+            return Err("observed run recorded nothing".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_event_engine_is_cycle_exact_on_random_mixed_stencils() {
     // randomized per-region pump assignments over a small jacobi chain:
     // several fast domains at different strides plus CL0 regions in one
