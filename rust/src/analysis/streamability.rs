@@ -16,7 +16,7 @@
 //! read order (identical subsets as functions of their parameters).
 
 use super::movement::{ScopeMovement, TracedAccess};
-use crate::ir::{ContainerKind, LibraryOp, Node, NodeId, Sdfg};
+use crate::ir::{ContainerKind, LibraryOp, MapSchedule, Node, NodeId, PumpMode, RegionPump, Sdfg};
 use crate::symbolic::Expr;
 
 /// Verdict for one access or one producer/consumer pair.
@@ -125,6 +125,17 @@ pub struct StreamRegion {
     /// Narrowest stream/datapath lane count the region carries — a
     /// resource-mode pump factor must divide this width.
     pub width: usize,
+    /// Does the region touch an external (non-transient, or
+    /// reader/writer-fed) container? Throughput mode widens the
+    /// external interface, so it is only meaningful — and only legal —
+    /// on boundary regions.
+    pub external: bool,
+    /// Does the region pipeline at II > 1 (a sequential schedule or a
+    /// dependent library datapath like Floyd–Warshall's in-place
+    /// relaxation)? Bare-fast mode clocks such a region faster without
+    /// gearboxes so the fast clock recovers the II; on an II = 1
+    /// region it buys nothing and is rejected.
+    pub dependent: bool,
 }
 
 impl StreamRegion {
@@ -136,6 +147,65 @@ impl StreamRegion {
             .copied()
             .filter(|&f| f >= 2 && self.width % f == 0)
             .collect()
+    }
+
+    /// Per-mode legality of one `RegionPump` on this region:
+    /// * resource — the factor must divide the region's narrowest
+    ///   internal width (the gearboxes repack M narrow beats per wide
+    ///   transaction);
+    /// * throughput — the region must own a widenable boundary stream
+    ///   (an interior region's feed cannot be widened, so the fast
+    ///   clock would only starve);
+    /// * bare-fast — the region must be dependent (II > 1), since
+    ///   without gearboxes the fast clock can only recover II.
+    pub fn allows(&self, pump: RegionPump) -> bool {
+        if pump.factor < 2 {
+            return false;
+        }
+        match pump.mode {
+            PumpMode::Resource => self.width % pump.factor == 0,
+            PumpMode::Throughput => self.external,
+            PumpMode::BareFast => self.dependent,
+        }
+    }
+
+    /// All legal `RegionPump`s drawn from `factors` × `modes`, in
+    /// (mode, factor) enumeration order.
+    pub fn legal_pumps(&self, factors: &[usize], modes: &[PumpMode]) -> Vec<RegionPump> {
+        let mut out = Vec::new();
+        for &mode in modes {
+            for &factor in factors {
+                let p = RegionPump { factor, mode };
+                if self.allows(p) {
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+
+    /// The reason `pump` is illegal on this region, for transform
+    /// error messages (None when legal).
+    pub fn rejects(&self, pump: RegionPump) -> Option<String> {
+        if self.allows(pump) {
+            return None;
+        }
+        Some(match pump.mode {
+            PumpMode::Resource => format!(
+                "region '{}': width {} not divisible by resource-mode factor {}",
+                self.label, self.width, pump.factor
+            ),
+            PumpMode::Throughput => format!(
+                "region '{}': touches no external stream, so throughput-mode \
+                 widening has nothing to feed it",
+                self.label
+            ),
+            PumpMode::BareFast => format!(
+                "region '{}': pipelines at II = 1, so gearbox-free fast \
+                 clocking recovers nothing",
+                self.label
+            ),
+        })
     }
 }
 
@@ -159,6 +229,20 @@ pub(crate) fn module_io(g: &Sdfg, id: NodeId) -> (NodeId, NodeId) {
 /// boundaries), so the candidate space and the transformation agree on
 /// region count and order by construction.
 pub fn partition_streamable(g: &Sdfg) -> Vec<StreamRegion> {
+    // streams plumbed by reader/writer IO modules: after streaming
+    // composition the external arrays sit behind these, so a region fed
+    // by one is a boundary region exactly like a region reading the
+    // array directly pre-streaming (keeps the before/after partition
+    // agreement the mixed-assignment machinery relies on)
+    let mut io_streams: Vec<&str> = Vec::new();
+    for id in g.node_ids() {
+        match g.node(id) {
+            Node::Reader { stream, .. } | Node::Writer { stream, .. } => {
+                io_streams.push(stream.as_str());
+            }
+            _ => {}
+        }
+    }
     let mut out = Vec::new();
     for id in g.node_ids() {
         let is_module = matches!(g.node(id), Node::MapEntry { .. } | Node::Library { .. });
@@ -166,11 +250,16 @@ pub fn partition_streamable(g: &Sdfg) -> Vec<StreamRegion> {
             continue;
         }
         let (inflow, outflow) = module_io(g, id);
-        // narrowest lane count across every container the module touches
+        // narrowest lane count across every container the module
+        // touches, plus boundary detection
         let mut width = usize::MAX;
+        let mut external = false;
         let mut touch = |data: &str| {
             if let Some(decl) = g.container(data) {
                 width = width.min(decl.vtype.lanes);
+                if !decl.transient || io_streams.contains(&data) {
+                    external = true;
+                }
             }
         };
         for e in g.in_edges(inflow) {
@@ -179,6 +268,15 @@ pub fn partition_streamable(g: &Sdfg) -> Vec<StreamRegion> {
         for e in g.out_edges(outflow) {
             touch(&g.edge(e).memlet.data);
         }
+        // II > 1 sources: a sequential map schedule, or a library
+        // datapath with a loop-carried update (Floyd–Warshall's
+        // in-place relaxation; the feed-forward systolic/stencil cores
+        // pipeline at II = 1)
+        let dependent = match g.node(id) {
+            Node::MapEntry { schedule, .. } => *schedule == MapSchedule::Sequential,
+            Node::Library { op: LibraryOp::FloydWarshall { .. }, .. } => true,
+            _ => false,
+        };
         // the datapath width of library nodes bounds the region too;
         // Floyd–Warshall's dependent scalar datapath reports width 1,
         // which legalizes no resource-mode factor — the §4.4 argument
@@ -193,7 +291,7 @@ pub fn partition_streamable(g: &Sdfg) -> Vec<StreamRegion> {
         if width == usize::MAX {
             width = 1;
         }
-        out.push(StreamRegion { module: id, label: g.node(id).label(), width });
+        out.push(StreamRegion { module: id, label: g.node(id).label(), width, external, dependent });
     }
     out
 }
@@ -308,7 +406,41 @@ mod tests {
         for (i, r) in regions.iter().enumerate() {
             assert_eq!(r.label, format!("jacobi3d_stage{i}"), "regions must be in chain order");
             assert_eq!(r.width, 8);
+            assert!(!r.dependent, "feed-forward stencil stages pipeline at II = 1");
         }
+        // only the chain ends touch the external arrays
+        assert!(regions[0].external && regions[3].external);
+        assert!(!regions[1].external && !regions[2].external);
+    }
+
+    #[test]
+    fn per_mode_legality_follows_region_shape() {
+        use crate::ir::PumpMode;
+        let g = crate::apps::stencil::build(crate::ir::StencilKind::Jacobi3D, 4, 8);
+        let regions = partition_streamable(&g);
+        // boundary stage: resource factors divide width 8; throughput
+        // legal (external feed); bare-fast illegal (II = 1)
+        let b = &regions[0];
+        assert!(b.allows(RegionPump::new(4, PumpMode::Resource)));
+        assert!(!b.allows(RegionPump::new(3, PumpMode::Resource)));
+        assert!(b.allows(RegionPump::new(2, PumpMode::Throughput)));
+        assert!(!b.allows(RegionPump::new(2, PumpMode::BareFast)));
+        // interior stage: throughput has nothing to widen
+        let i = &regions[1];
+        assert!(!i.allows(RegionPump::new(2, PumpMode::Throughput)));
+        assert!(i.rejects(RegionPump::new(2, PumpMode::Throughput))
+            .unwrap()
+            .contains("external"));
+        assert_eq!(
+            b.legal_pumps(&[2, 3, 4], &[PumpMode::Resource, PumpMode::Throughput]),
+            vec![
+                RegionPump::new(2, PumpMode::Resource),
+                RegionPump::new(4, PumpMode::Resource),
+                RegionPump::new(2, PumpMode::Throughput),
+                RegionPump::new(3, PumpMode::Throughput),
+                RegionPump::new(4, PumpMode::Throughput),
+            ]
+        );
     }
 
     #[test]
@@ -327,14 +459,24 @@ mod tests {
             assert_eq!(b.module, a.module);
             assert_eq!(b.label, a.label);
             assert_eq!(b.width, a.width);
+            assert_eq!(b.external, a.external, "{}", b.label);
+            assert_eq!(b.dependent, a.dependent, "{}", b.label);
         }
     }
 
     #[test]
     fn floyd_warshall_region_legalizes_no_resource_factor() {
+        use crate::ir::PumpMode;
         let g = crate::apps::floyd_warshall::build();
         let regions = partition_streamable(&g);
         assert_eq!(regions.len(), 1);
         assert!(regions[0].legal_factors(&[2, 4, 8]).is_empty());
+        // ... but its dependent II = 21 datapath legalizes bare-fast,
+        // and its external feed legalizes throughput (§4.4 at region
+        // granularity, now per mode)
+        assert!(regions[0].dependent && regions[0].external);
+        assert!(regions[0].allows(RegionPump::new(2, PumpMode::BareFast)));
+        assert!(regions[0].allows(RegionPump::new(2, PumpMode::Throughput)));
+        assert!(!regions[0].allows(RegionPump::new(2, PumpMode::Resource)));
     }
 }

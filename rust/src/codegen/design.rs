@@ -145,8 +145,15 @@ pub struct Design {
     pub name: String,
     pub modules: Vec<ModuleInst>,
     pub channels: Vec<ChannelSpec>,
-    /// Multi-pumping configuration, if applied.
+    /// Multi-pumping configuration, if applied: the largest factor and
+    /// its region's mode — the representative tag reports print. Mixed
+    /// designs carry the full per-domain picture in `domain_modes`.
     pub pump: Option<(usize, PumpMode)>,
+    /// Pump mode per distinct fast-domain factor, `(factor, mode)` in
+    /// ascending factor order. Empty when unpumped. The simulator's
+    /// telemetry and `tvec top` label each fast domain with its mode
+    /// from this table.
+    pub domain_modes: Vec<(usize, PumpMode)>,
     /// External containers: (name, element count, HBM bank).
     pub arrays: Vec<(String, usize, usize)>,
     /// Whole-graph sequential repetitions (Floyd–Warshall's k loop).
@@ -239,6 +246,7 @@ mod tests {
             ],
             channels: vec![],
             pump: Some((2, PumpMode::Resource)),
+            domain_modes: vec![(2, PumpMode::Resource)],
             arrays: vec![],
             repeat: 1,
             slr_replicas: 1,

@@ -95,7 +95,14 @@ pub fn estimate(design: &Design, device: &Device, tm: &TimingModel, seed: u64) -
             // pumping has exactly one — identical draws to the legacy
             // path). Each domain is an isolated compute subgraph —
             // short local paths only, no IO span — and each bounds the
-            // effective rate by CLd / Md.
+            // effective rate by CLd / Md. The closure is mode-agnostic:
+            // resource domains are narrow (÷M datapaths close high),
+            // throughput domains carry the original width at M×, and
+            // bare-fast domains carry the original width with zero
+            // gearbox logic — their CLd / Md bound prices exactly the
+            // "can the unchanged II>1 datapath really clock M× faster"
+            // question. Leaner domains close higher MHz, which is how
+            // mixed-mode assignments land on the frontier.
             let mut factors: Vec<usize> = design
                 .modules
                 .iter()

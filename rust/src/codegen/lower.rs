@@ -13,8 +13,8 @@ use crate::analysis::vectorizability::has_loop_carried_dependency;
 use crate::hw::cost::CostModel;
 use crate::hw::ResourceVec;
 use crate::ir::{
-    CdcKind, ClockDomain, ContainerKind, LibraryOp, MapSchedule, Node, NodeId, Sdfg, Storage,
-    Tasklet,
+    CdcKind, ClockDomain, ContainerKind, LibraryOp, MapSchedule, Node, NodeId, PumpMode, Sdfg,
+    Storage, Tasklet,
 };
 use crate::symbolic::SymbolTable;
 
@@ -75,9 +75,20 @@ pub fn lower(g: &Sdfg, env: &SymbolTable, cost: &CostModel) -> Result<Design, St
     let mut modules: Vec<ModuleInst> = Vec::new();
     let mut channels: Vec<ChannelSpec> = Vec::new();
     let mut arrays: Vec<(String, usize, usize)> = Vec::new();
-    // design-level pump tag: the *largest* factor (the fast time base);
-    // per-module domains below carry each region's own factor
-    let pump = g.multipump.as_ref().map(|mp| (mp.max_factor(), mp.mode));
+    // design-level pump tag: the *largest* factor (the fast time base)
+    // and its region's mode; per-module domains below carry each
+    // region's own factor, and `domain_modes` the per-factor modes
+    let pump = g
+        .multipump
+        .as_ref()
+        .map(|mp| (mp.max_factor(), mp.representative_mode()));
+    let mut domain_modes: Vec<(usize, PumpMode)> = g
+        .multipump
+        .as_ref()
+        .map(|mp| mp.regions.iter().map(|r| (r.factor, r.mode)).collect())
+        .unwrap_or_default();
+    domain_modes.sort_by_key(|&(f, m)| (f, m.letter()));
+    domain_modes.dedup();
 
     // channels from stream containers
     for (name, decl) in &g.containers {
@@ -254,9 +265,10 @@ pub fn lower(g: &Sdfg, env: &SymbolTable, cost: &CostModel) -> Result<Design, St
                     };
                     // the compute consumes narrow transactions in
                     // resource mode: range was defined on wide txns
-                    // (each region narrows by its own factor)
-                    let widen = match (g.fast_factor_of(id), pump) {
-                        (Some(f), Some((_, crate::ir::PumpMode::Resource))) => f,
+                    // (each region narrows by its own factor; throughput
+                    // and bare-fast regions keep the wide/original count)
+                    let widen = match (g.fast_factor_of(id), g.fast_mode_of(id)) {
+                        (Some(f), Some(PumpMode::Resource)) => f,
                         _ => 1,
                     };
                     count * widen
@@ -513,6 +525,7 @@ pub fn lower(g: &Sdfg, env: &SymbolTable, cost: &CostModel) -> Result<Design, St
         modules,
         channels,
         pump,
+        domain_modes,
         arrays,
         repeat,
         slr_replicas: 1,

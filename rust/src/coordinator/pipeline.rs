@@ -7,7 +7,7 @@ use std::sync::Arc;
 use crate::codegen::{estimate, lower, Design, DesignReport};
 use crate::hw::cost::CostModel;
 use crate::hw::{Device, TimingModel};
-use crate::ir::{printer, PumpMode, Sdfg};
+use crate::ir::{printer, PumpMode, RegionPump, Sdfg};
 use crate::symbolic::SymbolTable;
 use crate::transforms::pass::TransformReport;
 use crate::transforms::{MultiPump, PassManager, StreamingComposition, Vectorize};
@@ -36,10 +36,10 @@ pub struct BuildSpec {
     /// Apply multi-pumping (factor, mode) over the whole streamed
     /// subgraph — the paper's §3.4 choice.
     pub pump: Option<(usize, PumpMode)>,
-    /// Apply *mixed* multi-pumping: one resource-mode factor per
+    /// Apply *mixed* multi-pumping: one `{factor, mode}` pump per
     /// streamable region (partition order; `None` entries stay in
     /// CL0). Mutually exclusive with `pump`.
-    pub pump_regions: Option<Vec<Option<usize>>>,
+    pub pump_regions: Option<Vec<Option<RegionPump>>>,
     /// Concrete symbol bindings.
     pub bindings: Vec<(String, i64)>,
     /// Shell clock request override (MHz).
@@ -99,9 +99,18 @@ impl BuildSpec {
     }
 
     /// Mixed per-region resource-mode pumping (one factor per
-    /// streamable region, `None` = stay in CL0).
+    /// streamable region, `None` = stay in CL0) — the historic
+    /// convenience; see [`BuildSpec::pumped_per_region`] for modes.
     pub fn pumped_regions(mut self, factors: Vec<Option<usize>>) -> Self {
-        self.pump_regions = Some(factors);
+        self.pump_regions =
+            Some(factors.into_iter().map(|f| f.map(RegionPump::resource)).collect());
+        self
+    }
+
+    /// Fully general mixed pumping: one `{factor, mode}` per
+    /// streamable region, `None` = stay in CL0.
+    pub fn pumped_per_region(mut self, pumps: Vec<Option<RegionPump>>) -> Self {
+        self.pump_regions = Some(pumps);
         self
     }
 
@@ -249,7 +258,7 @@ pub fn compile_from_prefix_observed(
         if let Some(s) = sp.as_mut() {
             s.note("regions", factors.len());
         }
-        pm.run(&mut g, &MultiPump::mixed(factors.clone(), PumpMode::Resource))
+        pm.run(&mut g, &MultiPump::per_region(factors.clone()))
             .map_err(err(Stage::Transform))?;
     } else if let Some((factor, mode)) = spec.pump {
         if !spec.stream {
@@ -396,7 +405,7 @@ mod tests {
         .bind("NY", 32)
         .bind("NZ", 32)
         .bind("NZ_v", 4);
-        spec.pump_regions = Some(vec![Some(2), Some(2)]);
+        spec.pump_regions = Some(vec![Some(RegionPump::resource(2)), Some(RegionPump::resource(2))]);
         let err = compile_staged(spec).unwrap_err();
         assert_eq!(err.stage, Stage::Transform);
         assert!(err.message.contains("both uniform and per-region"), "{}", err.message);

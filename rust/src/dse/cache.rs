@@ -5,11 +5,17 @@
 //! — DESIGN.md §6). The first line is a schema-versioned header:
 //!
 //! ```text
-//! #tvec-dse-cache v3
+//! #tvec-dse-cache v4
 //! k=00ab…	st=ok	label=vecadd V8 R2	pr=-	…
-//! k=11cd…	st=ok	label=jacobi Mx[4x2+2x2]	pr=m:4,4,2,2	…
+//! k=11cd…	st=ok	label=jacobi Mx[t2x1+2x3]	pr=m:2t,2r,2r,2r	…
 //! k=17ff…	st=err	kind=legality	msg=trip count 100 …
 //! ```
+//!
+//! Records are *tagged* `key=value` fields, so the layout is
+//! forward-compatible: a reader ignores fields it does not know,
+//! meaning a later schema can add fields without breaking this
+//! version's parser — only a field *removal*, a value re-encoding or a
+//! fingerprint re-derivation forces the version bump / cold start.
 //!
 //! Floats are stored as their IEEE-754 bit patterns (16 hex digits) so
 //! a round trip is *bit exact* — the cache-hit determinism guarantees
@@ -33,7 +39,7 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use crate::hw::{ClockReport, ResourceVec, Utilization};
-use crate::ir::PumpMode;
+use crate::ir::{PumpMode, RegionPump};
 
 use super::evaluate::{EvalError, Evaluation, FailKind};
 use super::space::DesignPoint;
@@ -43,10 +49,12 @@ use crate::codegen::DesignReport;
 /// derivation: old stores then load cold instead of misparsing (or
 /// silently never hitting). v2 added the mixed per-region pump
 /// assignment (`pr=`) to ok-records; v3 re-derived fingerprints from
-/// the cached base-graph hash (keys changed, so v2 records could never
-/// hit again — carrying them would only grow the file). Older files
+/// the cached base-graph hash; v4 made pump assignments mode-carrying
+/// (`pp=` gained bare-fast `b`, `pr=` entries became `<factor><mode>`
+/// like `2t`), which changed both the `pr=` value encoding and the
+/// fingerprint tags, so v3 records could never hit again. Older files
 /// cold-start with the schema-mismatch reason.
-pub const SCHEMA_VERSION: u32 = 3;
+pub const SCHEMA_VERSION: u32 = 4;
 
 /// File name inside a `--cache-dir`.
 pub const FILE_NAME: &str = "dse_cache.tsv";
@@ -154,8 +162,16 @@ fn util_dec(s: &str) -> Result<Utilization, String> {
 fn pump_enc(p: &Option<(usize, PumpMode)>) -> String {
     match p {
         None => "-".into(),
-        Some((f, PumpMode::Resource)) => format!("r{f}"),
-        Some((f, PumpMode::Throughput)) => format!("t{f}"),
+        Some((f, m)) => format!("{}{f}", m.letter()),
+    }
+}
+
+fn mode_of_letter(s: &str) -> Option<PumpMode> {
+    match s {
+        "r" => Some(PumpMode::Resource),
+        "t" => Some(PumpMode::Throughput),
+        "b" => Some(PumpMode::BareFast),
+        _ => None,
     }
 }
 
@@ -165,10 +181,9 @@ fn pump_dec(s: &str) -> Result<Option<(usize, PumpMode)>, String> {
     }
     let (mode, digits) = s.split_at(1);
     let f: usize = digits.parse().map_err(|_| format!("bad pump '{s}'"))?;
-    match mode {
-        "r" => Ok(Some((f, PumpMode::Resource))),
-        "t" => Ok(Some((f, PumpMode::Throughput))),
-        _ => Err(format!("bad pump mode '{s}'")),
+    match mode_of_letter(mode) {
+        Some(m) => Ok(Some((f, m))),
+        None => Err(format!("bad pump mode '{s}'")),
     }
 }
 
@@ -189,8 +204,9 @@ fn vec_opt_dec(s: &str) -> Result<Option<(String, usize)>, String> {
 }
 
 // encoding shared with the fingerprint tag: `super::evaluate::regions_tag`
+// (each entry `<factor><mode letter>`, e.g. `2r`, `4t`, `2b`, or `-`)
 
-fn regions_dec(s: &str) -> Result<Option<Vec<Option<usize>>>, String> {
+fn regions_dec(s: &str) -> Result<Option<Vec<Option<RegionPump>>>, String> {
     if s == "-" {
         return Ok(None);
     }
@@ -198,12 +214,18 @@ fn regions_dec(s: &str) -> Result<Option<Vec<Option<usize>>>, String> {
     body.split(',')
         .map(|t| {
             if t == "-" {
-                Ok(None)
-            } else {
-                t.parse::<usize>()
-                    .map(Some)
-                    .map_err(|_| format!("bad region factor '{t}'"))
+                return Ok(None);
             }
+            let mode = t
+                .chars()
+                .last()
+                .and_then(|c| mode_of_letter(&c.to_string()))
+                .ok_or_else(|| format!("bad region mode '{t}'"))?;
+            // the matched letter is one ASCII byte, so this split is safe
+            let factor: usize = t[..t.len() - 1]
+                .parse()
+                .map_err(|_| format!("bad region factor '{t}'"))?;
+            Ok(Some(RegionPump::new(factor, mode)))
         })
         .collect::<Result<Vec<_>, _>>()
         .map(Some)
@@ -455,7 +477,11 @@ mod tests {
         let base = BuildSpec::new(apps::vecadd::build()).bind("N", 1 << 12).seeded(3);
         let flops = apps::vecadd::flops(1 << 12);
         let mut m = HashMap::new();
-        for (w, pump) in [(4usize, None), (8, Some((2, PumpMode::Resource)))] {
+        for (w, pump) in [
+            (4usize, None),
+            (8, Some((2, PumpMode::Resource))),
+            (8, Some((2, PumpMode::Throughput))),
+        ] {
             let p = DesignPoint {
                 vectorize: Some(("vadd".into(), w)),
                 pump,
@@ -468,7 +494,7 @@ mod tests {
         // delegates to the uniform transform, so it compiles)
         let mixed = DesignPoint {
             vectorize: Some(("vadd".into(), 8)),
-            regions: Some(vec![Some(2)]),
+            regions: Some(vec![Some(RegionPump::resource(2))]),
             ..DesignPoint::original()
         };
         m.insert(
@@ -561,10 +587,10 @@ mod tests {
 
     #[test]
     fn old_version_stores_cold_start_with_printed_reason() {
-        // v1 (pre-mixed-factors) and v2 (pre-rekeyed-fingerprint)
-        // stores must load cold with the schema-mismatch reason, never
-        // misparse or silently never-hit
-        for old in ["v1", "v2"] {
+        // v1 (pre-mixed-factors), v2 (pre-rekeyed-fingerprint) and v3
+        // (pre-mode-carrying-pumps) stores must load cold with the
+        // schema-mismatch reason, never misparse or silently never-hit
+        for old in ["v1", "v2", "v3"] {
             let path = tmp_path(&format!("{old}-upgrade"));
             std::fs::write(
                 &path,
@@ -574,12 +600,39 @@ mod tests {
             )
             .unwrap();
             let loaded = load(&path);
-            assert!(loaded.entries.is_empty(), "{old} entries must not half-load into v3");
+            assert!(loaded.entries.is_empty(), "{old} entries must not half-load into v4");
             let reason = loaded.cold_reason.expect("cold start has a reason");
             assert!(reason.contains("schema mismatch") && reason.contains(old), "{reason}");
-            assert!(reason.contains("v3"), "{reason}");
+            assert!(reason.contains("v4"), "{reason}");
             let _ = std::fs::remove_file(&path);
         }
+    }
+
+    #[test]
+    fn unknown_fields_are_tolerated() {
+        // forward compatibility within a schema version: a record that
+        // carries fields this reader does not know (e.g. written by a
+        // newer build that only *added* fields) must still parse
+        let path = tmp_path("unknown-fields");
+        let entries = sample_entries();
+        save(&path, &entries).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let augmented: String = text
+            .lines()
+            .map(|l| {
+                if l.starts_with('#') {
+                    l.to_string()
+                } else {
+                    format!("{l}\tfuture_field=whatever\tanother=1")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        std::fs::write(&path, augmented).unwrap();
+        let loaded = load(&path);
+        assert!(loaded.cold_reason.is_none(), "{:?}", loaded.cold_reason);
+        assert_eq!(loaded.entries.len(), entries.len());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]
@@ -624,15 +677,34 @@ mod tests {
     #[test]
     fn regions_codec_round_trips() {
         use crate::dse::evaluate::regions_tag;
+        let r2 = |f| Some(RegionPump::resource(f));
+        let t = |f| Some(RegionPump::new(f, PumpMode::Throughput));
+        let b = |f| Some(RegionPump::new(f, PumpMode::BareFast));
         for r in [
             None,
-            Some(vec![Some(2), Some(4), None, Some(2)]),
-            Some(vec![None, Some(8)]),
+            Some(vec![r2(2), r2(4), None, r2(2)]),
+            Some(vec![None, r2(8)]),
+            Some(vec![t(2), r2(2), b(4), None]),
         ] {
             assert_eq!(regions_dec(&regions_tag(&r)).unwrap(), r);
         }
         assert!(regions_dec("garbage").is_err());
         assert!(regions_dec("m:2,x").is_err());
+        // v3-style bare factors carry no mode letter: invalid under v4
+        assert!(regions_dec("m:2,4").is_err());
+    }
+
+    #[test]
+    fn pump_codec_covers_every_mode() {
+        for p in [
+            None,
+            Some((2, PumpMode::Resource)),
+            Some((4, PumpMode::Throughput)),
+            Some((2, PumpMode::BareFast)),
+        ] {
+            assert_eq!(pump_dec(&pump_enc(&p)).unwrap(), p);
+        }
+        assert!(pump_dec("x2").is_err());
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::coordinator::pipeline::{
     Stage, StagedError, StagedPrefix,
 };
 use crate::hw::ResourceVec;
-use crate::ir::PumpMode;
+use crate::ir::{PumpMode, RegionPump};
 use crate::sim::{rate_model, Arena, ArenaStats};
 use crate::util::{fnv1a, FNV_OFFSET};
 
@@ -109,21 +109,24 @@ pub struct Evaluation {
 fn pump_tag(p: &Option<(usize, PumpMode)>) -> String {
     match p {
         None => "-".into(),
-        Some((f, PumpMode::Resource)) => format!("r{f}"),
-        Some((f, PumpMode::Throughput)) => format!("t{f}"),
+        Some((f, m)) => format!("{}{f}", m.letter()),
     }
 }
 
-/// Tag of a mixed per-region assignment, e.g. `m:2,4,-` (`-` = none).
-/// Shared with the cache codec (`pr=` field) so the on-disk encoding
-/// and the fingerprint tag cannot diverge.
-pub(crate) fn regions_tag(r: &Option<Vec<Option<usize>>>) -> String {
+/// Tag of a mixed per-region assignment, e.g. `m:2r,4t,-` (`-` =
+/// none; every entry carries its factor plus its mode letter). Shared
+/// with the cache codec (`pr=` field) so the on-disk encoding and the
+/// fingerprint tag cannot diverge.
+pub(crate) fn regions_tag(r: &Option<Vec<Option<RegionPump>>>) -> String {
     match r {
         None => "-".into(),
         Some(fs) => {
             let body = fs
                 .iter()
-                .map(|f| f.map(|x| x.to_string()).unwrap_or_else(|| "-".into()))
+                .map(|p| {
+                    p.map(|p| format!("{}{}", p.factor, p.mode.letter()))
+                        .unwrap_or_else(|| "-".into())
+                })
                 .collect::<Vec<_>>()
                 .join(",");
             format!("m:{body}")
@@ -136,8 +139,9 @@ pub(crate) fn regions_tag(r: &Option<Vec<Option<usize>>>) -> String {
 /// so two sweeps over structurally identical graphs share cache
 /// entries regardless of how they were built — without re-printing the
 /// whole SDFG per candidate, which used to dominate warm-cache sweeps.
-/// (Key derivation changed with this optimization: on-disk cache
-/// schema v3, older stores cold-start.)
+/// (Key derivation has changed over time — prefix-hash chaining in
+/// schema v3, mode-carrying pump/region tags in schema v4 — and each
+/// change bumps the on-disk cache schema, so older stores cold-start.)
 pub fn fingerprint(base: &BuildSpec, point: &DesignPoint, flops: f64) -> u64 {
     let mut h = fnv1a(FNV_OFFSET, &base.sdfg_fnv().to_le_bytes());
     for (s, v) in &base.bindings {
@@ -631,23 +635,47 @@ mod tests {
 
     #[test]
     fn fingerprint_separates_region_assignments() {
+        use crate::ir::{PumpMode, RegionPump};
         let base = vecadd_base();
         let f = apps::vecadd::flops(1 << 14);
         let a = DesignPoint {
-            regions: Some(vec![Some(2), Some(4)]),
+            regions: Some(vec![Some(RegionPump::resource(2)), Some(RegionPump::resource(4))]),
             ..DesignPoint::original()
         };
         let b = DesignPoint {
-            regions: Some(vec![Some(4), Some(2)]),
+            regions: Some(vec![Some(RegionPump::resource(4)), Some(RegionPump::resource(2))]),
             ..DesignPoint::original()
         };
-        let c = DesignPoint { regions: Some(vec![Some(2), None]), ..DesignPoint::original() };
+        let c = DesignPoint {
+            regions: Some(vec![Some(RegionPump::resource(2)), None]),
+            ..DesignPoint::original()
+        };
+        // same factors, different mode on one region: distinct content
+        let d = DesignPoint {
+            regions: Some(vec![
+                Some(RegionPump::new(2, PumpMode::Throughput)),
+                Some(RegionPump::resource(4)),
+            ]),
+            ..DesignPoint::original()
+        };
         assert_ne!(fingerprint(&base, &a, f), fingerprint(&base, &b, f));
         assert_ne!(fingerprint(&base, &a, f), fingerprint(&base, &c, f));
+        assert_ne!(fingerprint(&base, &a, f), fingerprint(&base, &d, f));
         assert_ne!(
             fingerprint(&base, &DesignPoint::original(), f),
             fingerprint(&base, &c, f)
         );
+        // uniform bare-fast is distinct from uniform throughput at the
+        // same factor
+        let t = DesignPoint {
+            pump: Some((2, PumpMode::Throughput)),
+            ..DesignPoint::original()
+        };
+        let bf = DesignPoint {
+            pump: Some((2, PumpMode::BareFast)),
+            ..DesignPoint::original()
+        };
+        assert_ne!(fingerprint(&base, &t, f), fingerprint(&base, &bf, f));
     }
 
     #[test]

@@ -164,7 +164,9 @@ impl WalkStats {
 /// Number of search dimensions two points differ in. Two mixed
 /// assignments of equal length count their per-region differences —
 /// an anneal proposal at distance 1 mutates exactly one region's
-/// factor; a uniform↔mixed move counts as one pump-axis step.
+/// pump (its factor *or* its mode: `RegionPump` equality covers both,
+/// so a same-factor mode flip is also a single step); a uniform↔mixed
+/// move counts as one pump-axis step.
 fn pump_dims(a: &DesignPoint, b: &DesignPoint) -> usize {
     match (&a.regions, &b.regions) {
         (Some(x), Some(y)) if x.len() == y.len() => {
@@ -814,6 +816,32 @@ mod tests {
             cl0_requests_mhz: vec![],
             mixed_factors: false,
         }
+    }
+
+    #[test]
+    fn mode_flip_is_one_search_dimension() {
+        use crate::ir::RegionPump;
+        let base = DesignPoint::original();
+        let mk = |fs: Vec<Option<RegionPump>>| DesignPoint {
+            regions: Some(fs),
+            ..base.clone()
+        };
+        let r2 = Some(RegionPump::resource(2));
+        let t2 = Some(RegionPump::new(2, PumpMode::Throughput));
+        let r4 = Some(RegionPump::resource(4));
+        // same factor, one region's mode flipped: distance 1
+        let a = mk(vec![r2, r2]);
+        let b = mk(vec![t2, r2]);
+        assert_eq!(differing_dims(&a, &b), 1);
+        // mode flip on one region + factor change on the other: 2
+        let c = mk(vec![t2, r4]);
+        assert_eq!(differing_dims(&a, &c), 2);
+        // identical assignments: 0
+        assert_eq!(differing_dims(&a, &mk(vec![r2, r2])), 0);
+        // uniform mode flip at equal factor is also one pump-axis step
+        let u_t = DesignPoint { pump: Some((2, PumpMode::Throughput)), ..base.clone() };
+        let u_b = DesignPoint { pump: Some((2, PumpMode::BareFast)), ..base.clone() };
+        assert_eq!(differing_dims(&u_t, &u_b), 1);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::analysis::streamability::partition_streamable;
 use crate::analysis::vectorizability::{check_temporal, check_traditional};
 use crate::coordinator::pipeline::BuildSpec;
 use crate::hw::Device;
-use crate::ir::{ContainerKind, LibraryOp, Node, PumpMode, Sdfg};
+use crate::ir::{ContainerKind, LibraryOp, Node, PumpMode, RegionPump, Sdfg};
 use crate::symbolic::SymbolTable;
 use crate::transforms::multipump::assignment_label;
 
@@ -29,10 +29,11 @@ pub struct DesignPoint {
     pub vectorize: Option<(String, usize)>,
     /// Uniform multi-pumping (factor, mode), if any.
     pub pump: Option<(usize, PumpMode)>,
-    /// Mixed per-region resource-mode pump assignment (one entry per
+    /// Mixed per-region pump assignment (one `RegionPump` per
     /// streamable region in partition order; `None` stays in CL0).
-    /// Mutually exclusive with `pump`.
-    pub regions: Option<Vec<Option<usize>>>,
+    /// Each region carries its own factor *and* mode. Mutually
+    /// exclusive with `pump`.
+    pub regions: Option<Vec<Option<RegionPump>>>,
     /// SLR replication count (≥ 1).
     pub replicas: usize,
     /// CL0 request override in MHz (None → keep the base spec's).
@@ -51,7 +52,8 @@ impl DesignPoint {
         }
     }
 
-    /// Compact label, e.g. `V8 R2`, `O`, `T2 x3SLR`, `Mx[4x8+2x8]`.
+    /// Compact label, e.g. `V8 R2`, `O`, `T2 x3SLR`, `B2`,
+    /// `Mx[t2x1+2x3]`.
     pub fn label(&self) -> String {
         let mut s = String::new();
         if let Some((_, w)) = &self.vectorize {
@@ -62,6 +64,7 @@ impl DesignPoint {
             (None, None) => s.push('O'),
             (None, Some((f, PumpMode::Resource))) => s.push_str(&format!("R{f}")),
             (None, Some((f, PumpMode::Throughput))) => s.push_str(&format!("T{f}")),
+            (None, Some((f, PumpMode::BareFast))) => s.push_str(&format!("B{f}")),
         }
         if self.replicas > 1 {
             s.push_str(&format!(" x{}SLR", self.replicas));
@@ -104,10 +107,13 @@ pub struct SpaceOptions {
     pub max_replicas: usize,
     /// Extra CL0 requests to probe besides the base spec's.
     pub cl0_requests_mhz: Vec<f64>,
-    /// Also enumerate *mixed* per-region pump assignments (resource
-    /// mode): two-block contiguous splits of the region chain, each
-    /// block at its own factor (or unpumped). Off by default — the
-    /// dimension multiplies the grid on multi-region graphs.
+    /// Also enumerate *mixed* per-region pump assignments: two-block
+    /// contiguous splits of the region chain, each block at its own
+    /// `RegionPump` — factor *and* mode, drawn from `pump_modes` and
+    /// pruned per-region (resource → width divisibility, throughput →
+    /// external feed, bare-fast → dependent pipeline) — or unpumped.
+    /// Off by default — the dimension multiplies the grid on
+    /// multi-region graphs.
     pub mixed_factors: bool,
 }
 
@@ -252,6 +258,13 @@ fn pump_options(
         return out;
     }
     let width = boundary_width(g, vectorize);
+    // bare-fast is a whole-graph property here: the faster clock only
+    // recovers something when every streamable region pipelines at
+    // II > 1 (mirrors `MultiPump::can_apply` for uniform bare-fast)
+    let all_dependent = {
+        let regions = partition_streamable(g);
+        !regions.is_empty() && regions.iter().all(|r| r.dependent)
+    };
     for &m in &opts.pump_factors {
         if m < 2 {
             continue;
@@ -268,29 +281,35 @@ fn pump_options(
         if opts.pump_modes.contains(&PumpMode::Throughput) {
             out.push(Some((m, PumpMode::Throughput)));
         }
+        // bare-fast: unchanged widths, zero gearboxes — legal only on
+        // dependent (II > 1) pipelines
+        if opts.pump_modes.contains(&PumpMode::BareFast) && all_dependent {
+            out.push(Some((m, PumpMode::BareFast)));
+        }
     }
     out
 }
 
-/// Mixed per-region assignments (resource mode): for every split point
-/// of the region chain, a prefix factor and a suffix factor (each a
-/// legality-pruned factor of that block's regions, or `None` = CL0),
-/// prefix ≠ suffix. Equal-factor blocks cluster contiguously because
-/// every extra factor change along the chain pays a full
-/// packer/sync/issuer crossing — and the anneal walk can still reach
-/// any other assignment through single-region mutations. Pure-uniform
-/// assignments are omitted: they are exactly the legacy `pump` axis.
-fn mixed_options(g: &Sdfg, opts: &SpaceOptions) -> Vec<Vec<Option<usize>>> {
-    if !opts.mixed_factors || !opts.pump_modes.contains(&PumpMode::Resource) {
+/// Mixed per-region assignments: for every split point of the region
+/// chain, a prefix `RegionPump` and a suffix `RegionPump` (each a
+/// legality-pruned {factor, mode} of that block's regions, or `None` =
+/// CL0), prefix ≠ suffix. Equal-pump blocks cluster contiguously
+/// because every extra domain change along the chain pays a crossing —
+/// and the anneal walk can still reach any other assignment through
+/// single-region mutations. Pure-uniform assignments are omitted: they
+/// are exactly the legacy `pump` axis.
+fn mixed_options(g: &Sdfg, opts: &SpaceOptions) -> Vec<Vec<Option<RegionPump>>> {
+    if !opts.mixed_factors {
         return Vec::new();
     }
     let regions = partition_streamable(g);
     if regions.len() < 2 {
         return Vec::new();
     }
-    // per-region legal factors: width divisibility plus the temporal
-    // check for map-anchored regions
-    let legal: Vec<Vec<usize>> = regions
+    // per-region legal pumps: per-mode legality (resource → width
+    // divisibility, throughput → external feed, bare-fast → II > 1)
+    // plus the temporal check for map-anchored regions
+    let legal: Vec<Vec<RegionPump>> = regions
         .iter()
         .map(|r| {
             if matches!(g.node(r.module), Node::MapEntry { .. }) {
@@ -301,22 +320,27 @@ fn mixed_options(g: &Sdfg, opts: &SpaceOptions) -> Vec<Vec<Option<usize>>> {
                     return Vec::new();
                 }
             }
-            r.legal_factors(&opts.pump_factors)
+            r.legal_pumps(&opts.pump_factors, &opts.pump_modes)
         })
         .collect();
-    // factors legal on a whole contiguous block
-    let block_options = |range: std::ops::Range<usize>| -> Vec<Option<usize>> {
-        let mut out: Vec<Option<usize>> = vec![None];
-        for &f in &opts.pump_factors {
-            if f >= 2 && legal[range.clone()].iter().all(|l| l.contains(&f)) {
-                out.push(Some(f));
+    // pumps legal on a whole contiguous block
+    let block_options = |range: std::ops::Range<usize>| -> Vec<Option<RegionPump>> {
+        let mut out: Vec<Option<RegionPump>> = vec![None];
+        for &mode in &opts.pump_modes {
+            for &f in &opts.pump_factors {
+                let p = RegionPump::new(f, mode);
+                if f >= 2 && legal[range.clone()].iter().all(|l| l.contains(&p)) {
+                    out.push(Some(p));
+                }
             }
         }
         out
     };
-    let compatible = |a: Option<usize>, b: Option<usize>| match (a, b) {
+    let compatible = |a: Option<RegionPump>, b: Option<RegionPump>| match (a, b) {
         // fast domains must share one fast time base
-        (Some(x), Some(y)) => x.max(y) % x.min(y) == 0,
+        (Some(x), Some(y)) => {
+            x.factor.max(y.factor) % x.factor.min(y.factor) == 0
+        }
         _ => true,
     };
     let mut out = Vec::new();
@@ -478,11 +502,26 @@ mod tests {
         assert_eq!(b.label(), "V8 R2 x3SLR");
         let c = DesignPoint { pump: Some((4, PumpMode::Throughput)), ..a.clone() };
         assert_eq!(c.label(), "T4");
+        let bf = DesignPoint { pump: Some((2, PumpMode::BareFast)), ..a.clone() };
+        assert_eq!(bf.label(), "B2");
         let m = DesignPoint {
-            regions: Some(vec![Some(4), Some(4), Some(2), None]),
+            regions: Some(vec![
+                Some(RegionPump::resource(4)),
+                Some(RegionPump::resource(4)),
+                Some(RegionPump::resource(2)),
+                None,
+            ]),
             ..a.clone()
         };
         assert_eq!(m.label(), "Mx[4x2+2x1+-x1]");
+        let mm = DesignPoint {
+            regions: Some(vec![
+                Some(RegionPump::new(2, PumpMode::Throughput)),
+                Some(RegionPump::resource(2)),
+            ]),
+            ..a.clone()
+        };
+        assert_eq!(mm.label(), "Mx[t2x1+2x1]");
     }
 
     #[test]
@@ -507,8 +546,18 @@ mod tests {
         for p in &mixed {
             let fs = p.regions.as_ref().unwrap();
             assert_eq!(fs.len(), 4, "assignment must cover every region: {}", p.label());
-            // legality: every factor divides the stage width 8
-            assert!(fs.iter().flatten().all(|f| 8 % f == 0), "{}", p.label());
+            // legality: every resource-mode factor divides the stage
+            // width 8; stencil stages pipeline at II = 1 so bare-fast
+            // never appears
+            assert!(
+                fs.iter().flatten().all(|p| match p.mode {
+                    PumpMode::Resource => 8 % p.factor == 0,
+                    PumpMode::Throughput => true,
+                    PumpMode::BareFast => false,
+                }),
+                "{}",
+                p.label()
+            );
             // not a pure-uniform assignment (those live on the pump axis)
             assert!(
                 !(fs.iter().all(|f| f.is_some()) && fs.windows(2).all(|w| w[0] == w[1])),
@@ -518,9 +567,29 @@ mod tests {
             assert!(fs.iter().any(|f| f.is_some()));
         }
         // the canonical half/half split is present
-        assert!(mixed
-            .iter()
-            .any(|p| p.regions.as_ref().unwrap() == &vec![Some(4), Some(4), Some(2), Some(2)]));
+        assert!(mixed.iter().any(|p| {
+            p.regions.as_ref().unwrap()
+                == &vec![
+                    Some(RegionPump::resource(4)),
+                    Some(RegionPump::resource(4)),
+                    Some(RegionPump::resource(2)),
+                    Some(RegionPump::resource(2)),
+                ]
+        }));
+        // and the mode axis is explored: a throughput head block over a
+        // resource tail (region 0 touches the external input stream)
+        assert!(
+            mixed.iter().any(|p| {
+                let fs = p.regions.as_ref().unwrap();
+                fs[0].map(|p| p.mode) == Some(PumpMode::Throughput)
+                    && fs
+                        .iter()
+                        .skip(1)
+                        .flatten()
+                        .any(|p| p.mode == PumpMode::Resource)
+            }),
+            "no throughput/resource mixed-mode assignment enumerated"
+        );
     }
 
     #[test]
@@ -551,10 +620,51 @@ mod tests {
         for p in points.iter().filter(|p| p.regions.is_some()) {
             let fs = p.regions.as_ref().unwrap();
             assert!(
-                fs[3].map(|f| 2 % f == 0).unwrap_or(true),
-                "region 3 (width 2) got an illegal factor: {}",
+                fs[3]
+                    .map(|p| p.mode != PumpMode::Resource || 2 % p.factor == 0)
+                    .unwrap_or(true),
+                "region 3 (width 2) got an illegal resource factor: {}",
                 p.label()
             );
         }
+    }
+
+    #[test]
+    fn floyd_warshall_space_gains_barefast_when_requested() {
+        let spec = BuildSpec::new(apps::floyd_warshall::build()).bind("N", 64);
+        let device = Device::u280();
+        let mut opts = SpaceOptions::for_device(&device);
+        // default mode set: no bare-fast points
+        assert!(generate(&spec, &device, &opts)
+            .iter()
+            .all(|p| !matches!(p.pump, Some((_, PumpMode::BareFast)))));
+        opts.pump_modes = vec![PumpMode::Throughput, PumpMode::BareFast];
+        let points = generate(&spec, &device, &opts);
+        // FW's datapath is dependent (II > 1): bare-fast is legal
+        assert!(points
+            .iter()
+            .any(|p| p.pump == Some((2, PumpMode::BareFast))));
+    }
+
+    #[test]
+    fn stencil_space_never_offers_barefast() {
+        // stencil stages pipeline at II = 1 — the faster clock would
+        // recover nothing, so the axis prunes bare-fast entirely
+        let mut spec = BuildSpec::new(apps::stencil::build(
+            crate::ir::StencilKind::Jacobi3D,
+            4,
+            8,
+        ));
+        for (s, v) in [("NX", 64i64), ("NY", 32), ("NZ", 32), ("NZ_v", 4)] {
+            spec = spec.bind(s, v);
+        }
+        let device = Device::u280();
+        let mut opts = SpaceOptions::for_device(&device);
+        opts.pump_modes =
+            vec![PumpMode::Resource, PumpMode::Throughput, PumpMode::BareFast];
+        let points = generate(&spec, &device, &opts);
+        assert!(points
+            .iter()
+            .all(|p| !matches!(p.pump, Some((_, PumpMode::BareFast)))));
     }
 }

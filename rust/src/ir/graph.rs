@@ -42,33 +42,93 @@ pub struct DerivedSymbol {
     pub divisor: i64,
 }
 
-/// Which of the paper's two multi-pumping modes was applied (§2.1).
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+/// How a fast clock domain relates to the data widths around it (§2.1
+/// plus the dace exemplar's third scenario).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 pub enum PumpMode {
-    /// Internal width ÷ M, same throughput, resources cut (waveform ③).
+    /// Inwards: internal width ÷ M, same throughput, resources cut
+    /// (waveform ③).
     Resource,
-    /// External width × M, M× throughput, same compute (waveform ②).
+    /// Outwards: external width × M, M× throughput, same compute
+    /// (waveform ②).
     Throughput,
+    /// Gearbox-free fast clocking (the dace exemplar's TODO'd
+    /// "approach 3"): no width change on either side, zero
+    /// packer/issuer modules — the fast clock recovers the initiation
+    /// interval of a dependent pipeline, so an II = 2 region behaves
+    /// as II = 1 seen from the slow domain at M = 2.
+    BareFast,
+}
+
+impl PumpMode {
+    /// Long name used in CLI flags and error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PumpMode::Resource => "resource",
+            PumpMode::Throughput => "throughput",
+            PumpMode::BareFast => "barefast",
+        }
+    }
+
+    /// Single-letter tag used in design-point labels, fingerprints and
+    /// telemetry domain labels.
+    pub fn letter(&self) -> char {
+        match self {
+            PumpMode::Resource => 'r',
+            PumpMode::Throughput => 't',
+            PumpMode::BareFast => 'b',
+        }
+    }
+}
+
+/// One region's pump assignment: clock ratio plus the width mode the
+/// region's crossings are built for. The unified per-region currency —
+/// the DSE space, `BuildSpec`, the transform and `MultipumpInfo` all
+/// carry `RegionPump`s rather than a global mode + bare factors.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct RegionPump {
+    pub factor: usize,
+    pub mode: PumpMode,
+}
+
+impl RegionPump {
+    pub fn resource(factor: usize) -> RegionPump {
+        RegionPump { factor, mode: PumpMode::Resource }
+    }
+
+    pub fn new(factor: usize, mode: PumpMode) -> RegionPump {
+        RegionPump { factor, mode }
+    }
+
+    /// Label fragment: resource factors stay bare (`4`) for continuity
+    /// with the pre-mode encodings; other modes prefix their letter
+    /// (`t4`, `b2`).
+    pub fn tag(&self) -> String {
+        match self.mode {
+            PumpMode::Resource => format!("{}", self.factor),
+            m => format!("{}{}", m.letter(), self.factor),
+        }
+    }
 }
 
 /// One pumped region: a set of nodes sharing a fast clock domain at
-/// `factor` × CL0. The whole-graph transformation produces a single
-/// region (the paper's §3.4 largest-streamable-subgraph choice); the
-/// mixed per-subgraph transformation produces one region per distinct
-/// clock ratio assignment.
+/// `factor` × CL0, in `mode`. The whole-graph transformation produces
+/// a single region (the paper's §3.4 largest-streamable-subgraph
+/// choice); the per-region transformation produces one region per
+/// distinct `RegionPump` assignment.
 #[derive(Clone, Debug)]
 pub struct PumpedRegion {
     pub factor: usize,
+    pub mode: PumpMode,
     /// Nodes placed in this region's fast clock domain.
     pub nodes: Vec<NodeId>,
 }
 
-/// Record of an applied multi-pumping transformation: the pump mode
-/// plus the list of pumped regions. Uniform (whole-graph) pumping is
-/// the single-region special case.
+/// Record of an applied multi-pumping transformation: the list of
+/// pumped regions, each with its own factor and mode. Uniform
+/// (whole-graph) pumping is the single-region special case.
 #[derive(Clone, Debug)]
 pub struct MultipumpInfo {
-    pub mode: PumpMode,
     pub regions: Vec<PumpedRegion>,
 }
 
@@ -76,7 +136,7 @@ impl MultipumpInfo {
     /// A single region covering the whole compute subgraph — the
     /// legacy whole-graph transformation's shape.
     pub fn uniform(factor: usize, mode: PumpMode, fast_nodes: Vec<NodeId>) -> MultipumpInfo {
-        MultipumpInfo { mode, regions: vec![PumpedRegion { factor, nodes: fast_nodes }] }
+        MultipumpInfo { regions: vec![PumpedRegion { factor, mode, nodes: fast_nodes }] }
     }
 
     /// The largest pump factor across regions — the ratio of the
@@ -86,9 +146,25 @@ impl MultipumpInfo {
         self.regions.iter().map(|r| r.factor).max().unwrap_or(1)
     }
 
+    /// The mode of the largest-factor region — the representative tag
+    /// a whole-design `pump` field reports. Per-node decisions must use
+    /// [`MultipumpInfo::mode_of`] instead.
+    pub fn representative_mode(&self) -> PumpMode {
+        self.regions
+            .iter()
+            .max_by_key(|r| r.factor)
+            .map(|r| r.mode)
+            .unwrap_or(PumpMode::Resource)
+    }
+
     /// The pump factor of the region containing `id`, if any.
     pub fn factor_of(&self, id: NodeId) -> Option<usize> {
         self.regions.iter().find(|r| r.nodes.contains(&id)).map(|r| r.factor)
+    }
+
+    /// The pump mode of the region containing `id`, if any.
+    pub fn mode_of(&self, id: NodeId) -> Option<PumpMode> {
+        self.regions.iter().find(|r| r.nodes.contains(&id)).map(|r| r.mode)
     }
 
     /// More than one fast clock domain?
@@ -289,6 +365,11 @@ impl Sdfg {
     /// The pump factor of the fast domain containing `id`, if any.
     pub fn fast_factor_of(&self, id: NodeId) -> Option<usize> {
         self.multipump.as_ref().and_then(|mp| mp.factor_of(id))
+    }
+
+    /// The pump mode of the fast domain containing `id`, if any.
+    pub fn fast_mode_of(&self, id: NodeId) -> Option<PumpMode> {
+        self.multipump.as_ref().and_then(|mp| mp.mode_of(id))
     }
 
     /// Topological order of all nodes (errors on cycles).

@@ -23,7 +23,7 @@ pub mod types;
 pub mod validate;
 
 pub use builder::GraphBuilder;
-pub use graph::{EdgeId, MultipumpInfo, NodeId, PumpMode, PumpedRegion, Sdfg};
+pub use graph::{EdgeId, MultipumpInfo, NodeId, PumpMode, PumpedRegion, RegionPump, Sdfg};
 pub use memlet::Memlet;
 pub use node::{CdcKind, LibraryOp, MapSchedule, Node, StencilKind};
 pub use tasklet::{BinOp, TaskExpr, Tasklet, UnOp};

@@ -35,7 +35,7 @@ fn main() {
         .opt_default("topk", "top: stall sources to print", "8")
         .opt("config", "experiment config file (see configs/)")
         .opt("pump", "pumping factor for compile/run (e.g. 2)")
-        .opt_default("mode", "pump mode: resource|throughput", "resource")
+        .opt_default("mode", "pump mode: resource|throughput|barefast", "resource")
         .opt("n", "problem size override")
         .opt(
             "app",
@@ -52,7 +52,11 @@ fn main() {
         .flag("verify", "dse: exact-sim-check every frontier point at golden scale")
         .flag(
             "mixed-factors",
-            "dse: search mixed per-region pump assignments (resource mode)",
+            "dse: search mixed per-region pump assignments (any enabled mode)",
+        )
+        .opt(
+            "pump-modes",
+            "dse: comma list of pump modes to search (resource|throughput|barefast)",
         )
         .flag(
             "cache-compact",
@@ -132,10 +136,7 @@ fn cmd_compile(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), 
 
     let mut spec = BuildSpec::new(sdfg).seeded(seed);
     if let Some(factor) = args.get_usize("pump") {
-        let mode = match args.get_or("mode", "resource") {
-            "throughput" => PumpMode::Throughput,
-            _ => PumpMode::Resource,
-        };
+        let mode = parse_mode(args.get_or("mode", "resource"))?;
         spec = spec.pumped(factor, mode);
     }
     let n = args.get_u64("n").unwrap_or(1 << 16) as i64;
@@ -322,10 +323,7 @@ fn cmd_top(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
     let rig = temporal_vec::coordinator::golden_rig(app, seed)?;
     let mut spec = rig.bases.first().cloned().ok_or("golden rig has no base spec")?;
     if let Some(f) = args.get_usize("pump") {
-        let mode = match args.get_or("mode", "resource") {
-            "throughput" => PumpMode::Throughput,
-            _ => PumpMode::Resource,
-        };
+        let mode = parse_mode(args.get_or("mode", "resource"))?;
         spec = spec.pumped(f, mode);
     }
     let rec = temporal_vec::telemetry::Recorder::new();
@@ -342,8 +340,21 @@ fn cmd_top(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
         &mut temporal_vec::sim::Arena::new(),
         Some(&rec),
     )?;
+    let domains = if c.design.domain_modes.is_empty() {
+        String::new()
+    } else {
+        format!(
+            ", fast domains: {}",
+            c.design
+                .domain_modes
+                .iter()
+                .map(|(f, m)| format!("cl1_m{f}{} [{}]", m.letter(), m.name()))
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    };
     println!(
-        "=== top: {app} ('{}', {} slow cycles, bottleneck {}) ===",
+        "=== top: {app} ('{}', {} slow cycles, bottleneck {}{domains}) ===",
         c.design.name, out.stats.slow_cycles, out.stats.bottleneck
     );
     println!("{}", temporal_vec::coordinator::stall_report(&rec, k));
@@ -393,6 +404,11 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
         Some(raw) => Some(parse_tolerance(raw)?),
         None => None,
     };
+    // --pump-modes: override the default mode axis (resource+throughput)
+    let pump_modes = match args.get("pump-modes") {
+        Some(raw) => Some(parse_pump_modes(raw)?),
+        None => None,
+    };
     let device = Device::u280();
     let names: Vec<&str> = match app.as_str() {
         "all" => vec!["vecadd", "matmul", "jacobi", "diffusion", "fw"],
@@ -437,6 +453,7 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
             &evaluator,
             args.flag("verify"),
             args.flag("mixed-factors"),
+            pump_modes.as_deref(),
             cli_tolerance,
             &mut verify_failures,
         );
@@ -572,6 +589,33 @@ fn cmd_bench(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), St
     Ok(())
 }
 
+/// Parse one `--mode` value; unknown names are rejected loudly rather
+/// than silently falling back to resource mode.
+fn parse_mode(raw: &str) -> Result<PumpMode, String> {
+    match raw {
+        "resource" => Ok(PumpMode::Resource),
+        "throughput" => Ok(PumpMode::Throughput),
+        "barefast" => Ok(PumpMode::BareFast),
+        other => Err(format!("unknown pump mode '{other}' (resource|throughput|barefast)")),
+    }
+}
+
+/// Parse `--pump-modes resource,barefast` into the DSE mode axis.
+/// Duplicates are folded; an empty list (or any unknown name) errors.
+fn parse_pump_modes(raw: &str) -> Result<Vec<PumpMode>, String> {
+    let mut out: Vec<PumpMode> = Vec::new();
+    for part in raw.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let m = parse_mode(part).map_err(|e| format!("--pump-modes: {e}"))?;
+        if !out.contains(&m) {
+            out.push(m);
+        }
+    }
+    if out.is_empty() {
+        return Err("--pump-modes: need at least one of resource|throughput|barefast".into());
+    }
+    Ok(out)
+}
+
 /// Reject non-finite or negative `--tolerance` values: they would make
 /// every `dse --verify` comparison silently fail (NaN/negative) or
 /// silently pass (∞) with no hint of the bad flag.
@@ -599,6 +643,7 @@ fn run_dse_app(
     evaluator: &temporal_vec::dse::Evaluator,
     verify: bool,
     mixed_factors: bool,
+    pump_modes: Option<&[PumpMode]>,
     cli_tolerance: Option<f64>,
     verify_failures: &mut Vec<String>,
 ) -> Result<(), String> {
@@ -615,6 +660,9 @@ fn run_dse_app(
     let (bases, mut opts) =
         temporal_vec::coordinator::search_problem(name, n_override, seed, device)?;
     opts.mixed_factors = mixed_factors;
+    if let Some(modes) = pump_modes {
+        opts.pump_modes = modes.to_vec();
+    }
     // one partition per app: every base of an app shares the SDFG
     // structure, so region count and order are identical across them
     let regions = mixed_factors
@@ -676,12 +724,14 @@ fn run_dse_app(
             let detail: Vec<String> = regions
                 .iter()
                 .zip(fs)
-                .map(|(r, f)| {
-                    let tag = f.map(|x| format!("M{x}")).unwrap_or_else(|| "CL0".into());
+                .map(|(r, p)| {
+                    let tag = p
+                        .map(|p| format!("{}{}", p.mode.letter().to_ascii_uppercase(), p.factor))
+                        .unwrap_or_else(|| "CL0".into());
                     format!("{}={tag}", r.label)
                 })
                 .collect();
-            println!("chosen per-region factors: {}", detail.join(", "));
+            println!("chosen per-region pumps: {}", detail.join(", "));
         }
     }
     println!(
@@ -774,7 +824,26 @@ fn run_dse_app(
 
 #[cfg(test)]
 mod tests {
-    use super::parse_tolerance;
+    use super::{parse_mode, parse_pump_modes, parse_tolerance, PumpMode};
+
+    #[test]
+    fn mode_parsing_covers_all_three_modes_and_rejects_typos() {
+        assert_eq!(parse_mode("resource").unwrap(), PumpMode::Resource);
+        assert_eq!(parse_mode("throughput").unwrap(), PumpMode::Throughput);
+        assert_eq!(parse_mode("barefast").unwrap(), PumpMode::BareFast);
+        assert!(parse_mode("fast").unwrap_err().contains("barefast"));
+    }
+
+    #[test]
+    fn pump_modes_list_parses_dedups_and_rejects_empty() {
+        assert_eq!(
+            parse_pump_modes("throughput, barefast,throughput").unwrap(),
+            vec![PumpMode::Throughput, PumpMode::BareFast]
+        );
+        assert!(parse_pump_modes("").is_err());
+        assert!(parse_pump_modes(" , ").is_err());
+        assert!(parse_pump_modes("resource|barefast").is_err());
+    }
 
     #[test]
     fn tolerance_validation_rejects_degenerate_values() {

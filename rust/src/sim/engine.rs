@@ -413,7 +413,7 @@ pub fn run_exact_observed_in(
     }
 
     if let Some(r) = rec {
-        record_sim_metrics(r, &procs, &ch, &stride, fast_t);
+        record_sim_metrics(r, design, &procs, &ch, &stride, fast_t);
     }
     let slow_cycles = fast_t / factor;
     if let Some(s) = sim_span.as_mut() {
@@ -445,22 +445,35 @@ pub fn run_exact_observed_in(
 /// per-channel stall causes (backpressure vs starvation) and occupancy
 /// high-water marks, and per-clock-domain utilization — Σ busy over
 /// Σ scheduled slots per domain, the signal that shows which fast
-/// domain of a mixed-factor design is starved.
+/// domain of a mixed-factor design is starved. Fast-domain labels
+/// carry the region's pump-mode letter (`cl1_m2r`, `cl1_m4t`,
+/// `cl1_m2b`) from [`Design::domain_modes`].
 fn record_sim_metrics(
     rec: &crate::telemetry::Recorder,
+    design: &Design,
     procs: &[Proc],
     ch: &Channels,
     stride: &[u64],
     fast_t: u64,
 ) {
     use std::collections::BTreeMap;
+    let mode_letter = |f: usize| -> String {
+        design
+            .domain_modes
+            .iter()
+            .find(|(df, _)| *df == f)
+            .map(|(_, m)| m.letter().to_string())
+            .unwrap_or_default()
+    };
     let mut domains: BTreeMap<String, (u64, u64)> = BTreeMap::new();
     for (i, p) in procs.iter().enumerate() {
         rec.add(&format!("sim.module.{}.busy", p.label), p.busy);
         rec.add(&format!("sim.module.{}.stalls", p.label), p.stalls);
         let label = match p.domain {
             ClockDomain::Slow => "cl0".to_string(),
-            ClockDomain::Fast { factor } => format!("cl1_m{factor}"),
+            ClockDomain::Fast { factor } => {
+                format!("cl1_m{factor}{}", mode_letter(factor))
+            }
         };
         let e = domains.entry(label).or_insert((0, 0));
         e.0 += p.busy;

@@ -11,11 +11,15 @@
 //!   to queue access, injecting reader/writer modules (Figure 3 ②);
 //! * [`multipump::MultiPump`] — the paper's contribution (Figure 3 ③):
 //!   places the streamed computational subgraph in a faster clock
-//!   domain and injects synchronizer/issuer/packer plumbing, in either
-//!   resource or throughput mode. Supports both the paper's §3.4
+//!   domain and injects synchronizer/issuer/packer plumbing. Every
+//!   region carries its own [`crate::ir::RegionPump`] `{factor, mode}`:
+//!   resource mode narrows widths inside the fast domain, throughput
+//!   mode widens the external interface, and bare-fast mode changes no
+//!   widths at all — the fast clock recovers loop-carried II with
+//!   zero issuer/packer gearboxes. Supports both the paper's §3.4
 //!   whole-subgraph factor and *mixed* per-region assignments
-//!   ([`multipump::PumpFactors::PerRegion`], resource mode), with full
-//!   crossings between fast domains of different ratios.
+//!   ([`multipump::PumpFactors::PerRegion`]) with full crossings
+//!   between fast domains of different ratios and modes.
 
 pub mod multipump;
 pub mod pass;

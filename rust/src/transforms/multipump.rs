@@ -26,22 +26,36 @@
 //!   reader/writer ports are widened to `lanes·M`; the compute block is
 //!   unchanged and processes M transactions per slow cycle — M× the
 //!   throughput at equal compute resources (Floyd–Warshall's mode).
+//! * **Bare-fast mode** (dace's TODO'd "approach 3"): the compute
+//!   subgraph is clocked M× faster with *unchanged* lane widths and
+//!   **no gearboxes at all** — each crossing is a lone synchronizer.
+//!   Only useful on a dependent pipeline (II > 1): an II=2 datapath in
+//!   a 2× domain accepts one transaction per slow cycle, i.e. behaves
+//!   as II=1 from CL0, at zero packer/issuer cost.
 //!
-//! # Mixed per-subgraph factors
+//! # Mixed per-region assignments
 //!
 //! The paper (§3.4) pumps the *largest streamable subgraph* as a
-//! whole; [`PumpFactors::PerRegion`] instead assigns one factor per
-//! [streamable region](crate::analysis::streamability::partition_streamable)
-//! (resource mode only). Adjacent regions with equal factors share one
-//! fast clock domain with no extra plumbing; at a boundary where the
-//! factors differ the rewrite inserts the full crossing
+//! whole; [`PumpFactors::PerRegion`] instead assigns one
+//! [`RegionPump`] `{factor, mode}` per
+//! [streamable region](crate::analysis::streamability::partition_streamable),
+//! so one design can be `[R4-inwards | T2-outwards | bare-fast]`.
+//! Adjacent regions with the *same* pump share one fast clock domain
+//! with no extra plumbing; wherever the two sides of a stream disagree
+//! the rewrite inserts a crossing whose gearboxes are determined by
+//! each side's **gear ratio** (the width conversion its mode needs):
 //!
 //! ```text
-//!  fast A ──[packer ×M_a]── wide ──[sync]── wide ──[issuer ÷M_b]── fast B
+//!  gear_src, gear_dst > 1:  fast A ──[packer ×g_a]── wide ──[sync]── wide ──[issuer ÷g_b]── fast B
+//!  gear = 1 on a side:      that side's packer/issuer is simply omitted
+//!  both gears = 1:          fast A ──[sync]── B          (bare-fast: sync-only)
 //! ```
 //!
-//! so every domain still exchanges one wide transaction per slow
-//! cycle. A region left at `None` stays in CL0.
+//! Gear ratios per mode: resource → M (streams narrow by M inside),
+//! throughput → M on *external* streams (the widened interface), 1 on
+//! interior ones, bare-fast → always 1. Every domain still exchanges
+//! at most one transaction per slow cycle through the synchronizer. A
+//! region left at `None` stays in CL0.
 
 use super::pass::{Transform, TransformReport};
 use crate::analysis::movement::scope_movement;
@@ -49,26 +63,28 @@ use crate::analysis::streamability::{module_io, partition_streamable};
 use crate::analysis::vectorizability::check_temporal;
 use crate::ir::{
     CdcKind, ContainerKind, DataDecl, LibraryOp, Memlet, MultipumpInfo, Node, NodeId, PumpMode,
-    PumpedRegion, Sdfg, Storage,
+    PumpedRegion, RegionPump, Sdfg, Storage,
 };
 use crate::symbolic::{Expr, Subset};
 use std::collections::HashMap;
 
-/// How the pump factor is assigned over the streamable regions.
+/// How the pump assignment covers the streamable regions.
 #[derive(Clone, Debug, PartialEq)]
 pub enum PumpFactors {
-    /// One factor for the whole streamed compute subgraph — the
-    /// paper's §3.4 largest-streamable-subgraph choice.
-    Uniform(usize),
-    /// One factor per region, in [`partition_streamable`] order.
-    /// `None` leaves that region in CL0. Resource mode only.
-    PerRegion(Vec<Option<usize>>),
+    /// One `{factor, mode}` for the whole streamed compute subgraph —
+    /// the paper's §3.4 largest-streamable-subgraph choice.
+    Uniform(RegionPump),
+    /// One pump per region, in [`partition_streamable`] order.
+    /// `None` leaves that region in CL0.
+    PerRegion(Vec<Option<RegionPump>>),
 }
 
 /// Compact run-length label of a per-region assignment,
-/// e.g. `4x8+2x8` (8 regions at M=4, then 8 at M=2) or `2x3+-x1`.
-pub fn assignment_label(factors: &[Option<usize>]) -> String {
-    let mut segs: Vec<(Option<usize>, usize)> = Vec::new();
+/// e.g. `4x8+2x8` (8 regions at M=4 resource, then 8 at M=2) or
+/// `t2x1+b2x1+-x1` (throughput, bare-fast, unpumped). Resource-mode
+/// entries print as bare factors — the historical label format.
+pub fn assignment_label(factors: &[Option<RegionPump>]) -> String {
+    let mut segs: Vec<(Option<RegionPump>, usize)> = Vec::new();
     for f in factors {
         match segs.last_mut() {
             Some((v, n)) if v == f => *n += 1,
@@ -77,21 +93,21 @@ pub fn assignment_label(factors: &[Option<usize>]) -> String {
     }
     segs.iter()
         .map(|(f, n)| {
-            let f = f.map(|x| x.to_string()).unwrap_or_else(|| "-".into());
+            let f = f.map(|p| p.tag()).unwrap_or_else(|| "-".into());
             format!("{f}x{n}")
         })
         .collect::<Vec<_>>()
         .join("+")
 }
 
-/// `Some(m)` when every region gets the same concrete factor — such an
-/// assignment is exactly the legacy whole-graph transformation and is
-/// delegated to it, so single-region graphs (and all-equal
+/// `Some(pump)` when every region gets the same concrete pump — such
+/// an assignment is exactly the legacy whole-graph transformation and
+/// is delegated to it, so single-region graphs (and all-equal
 /// assignments) reproduce today's behaviour bit for bit.
-fn uniform_factor(fs: &[Option<usize>]) -> Option<usize> {
+fn uniform_pump(fs: &[Option<RegionPump>]) -> Option<RegionPump> {
     let first = *fs.first()?;
-    let m = first?;
-    fs.iter().all(|f| *f == Some(m)).then_some(m)
+    let p = first?;
+    fs.iter().all(|f| *f == Some(p)).then_some(p)
 }
 
 /// Which region produces / consumes each stream. Mixed pumping
@@ -161,35 +177,75 @@ fn stream_sides(
     Ok((producer, consumer))
 }
 
+/// One side of a clock-domain crossing.
+#[derive(Clone, Copy, Debug)]
+struct CrossingSide {
+    /// Clock ratio of this side's domain (1 = CL0).
+    clock: usize,
+    /// Width ratio this side's gearbox converts (1 = no gearbox): the
+    /// pump factor for resource mode — and for throughput mode on an
+    /// external stream — but always 1 for bare-fast, which crosses
+    /// gearlessly by definition, and for throughput on an interior
+    /// stream, whose width nobody widens.
+    gear: usize,
+}
+
+impl CrossingSide {
+    fn slow() -> Self {
+        CrossingSide { clock: 1, gear: 1 }
+    }
+
+    /// The side a region's pump presents on one of its streams;
+    /// `external` says whether the stream's other endpoint is a CL0
+    /// reader/writer rather than another region.
+    fn of(pump: Option<RegionPump>, external: bool) -> Self {
+        match pump {
+            None => CrossingSide::slow(),
+            Some(p) => CrossingSide {
+                clock: p.factor,
+                gear: match p.mode {
+                    PumpMode::Resource => p.factor,
+                    PumpMode::Throughput if external => p.factor,
+                    PumpMode::Throughput | PumpMode::BareFast => 1,
+                },
+            },
+        }
+    }
+}
+
 /// Inject one clock-domain crossing on stream `s`, parameterized by
-/// the two side ratios (`1` = slow). The general shape is
+/// the two sides' (clock, gear) ratios. The general shape is
 ///
 /// ```text
-///   [packer ×f_src]? ── wide ── [sync] ── wide ── [issuer ÷f_dst]?
+///   [packer ×g_src]? ── wide ── [sync] ── wide ── [issuer ÷g_dst]?
 /// ```
 ///
-/// with the packer present iff the producer side is fast and the
-/// issuer iff the consumer side is fast — which specializes to the
-/// three former hand-written branches (slow→fast sync+issuer,
-/// fast→slow packer+sync, fast→fast packer+sync+issuer). Node and
-/// edge creation order reproduces each branch exactly, so graphs (and
-/// their printed text) are bit-for-bit what the specialized code
-/// produced — guarded by the printer-equality and crossing-shape
-/// tests. The fast-side endpoints of `s` are rewired to `{s}_fast`;
-/// `producer`/`consumer` name the owning regions so their node sets
-/// absorb the fast-side plumbing. Returns the plumbing module count.
+/// with the packer present iff the producer side needs a gearbox
+/// (`gear > 1`) and the issuer iff the consumer side does — which
+/// specializes to the three former hand-written branches (slow→fast
+/// sync+issuer, fast→slow packer+sync, fast→fast
+/// packer+sync+issuer). Node and edge creation order reproduces each
+/// branch exactly, so graphs (and their printed text) are bit-for-bit
+/// what the specialized code produced — guarded by the
+/// printer-equality and crossing-shape tests. When *neither* side
+/// needs a gearbox (a bare-fast region, or throughput's interior
+/// boundary) the crossing degenerates to a lone synchronizer at
+/// unchanged width — zero packer/issuer modules. The fast-side
+/// endpoints of `s` are rewired to `{s}_fast`; `producer`/`consumer`
+/// name the owning regions so their node sets absorb the fast-side
+/// plumbing. Returns the plumbing module count.
 fn inject_crossing(
     g: &mut Sdfg,
     s: &str,
-    f_src: usize,
-    f_dst: usize,
+    src: CrossingSide,
+    dst: CrossingSide,
     producer: Option<usize>,
     consumer: Option<usize>,
     region_nodes: &mut [Vec<NodeId>],
 ) -> usize {
-    let has_pack = f_src > 1;
-    let has_issue = f_dst > 1;
-    debug_assert!(has_pack || has_issue, "no crossing between two slow sides");
+    let has_pack = src.gear > 1;
+    let has_issue = dst.gear > 1;
+    debug_assert!(src.clock > 1 || dst.clock > 1, "no crossing between two slow sides");
 
     let decl = g.container(s).unwrap().clone();
     let depth = match decl.storage {
@@ -227,6 +283,48 @@ fn inject_crossing(
     };
     let pop = |d: &str| Memlet::new(d, Subset::index1(Expr::int(0)));
 
+    if !has_pack && !has_issue {
+        // gearless crossing: a lone synchronizer bridges the domains
+        // at unchanged width. The fast side — the consumer's when it
+        // is fast — takes `{s}_fast`.
+        let sfast = format!("{s}_fast");
+        let rewire_dst = dst.clock > 1;
+        let fast_clk = if rewire_dst { dst.clock } else { src.clock };
+        declare_stream(g, &sfast, w, depth * fast_clk);
+        let sync = g.add_node(Node::Cdc {
+            name: format!("sync_{s}"),
+            kind: CdcKind::Synchronizer,
+            input: if rewire_dst { s.to_string() } else { sfast.clone() },
+            output: if rewire_dst { sfast.clone() } else { s.to_string() },
+            factor: fast_clk,
+        });
+        let sfast_acc = g.add_node(Node::Access { data: sfast.clone() });
+        for e in g.edge_ids().collect::<Vec<_>>() {
+            let edge = g.edge(e);
+            if rewire_dst {
+                if edge.src == s_acc && edge.memlet.data == s {
+                    g.edges[e.0].src = sfast_acc;
+                    g.edges[e.0].memlet.data = sfast.clone();
+                }
+            } else if edge.dst == s_acc && edge.memlet.data == s {
+                g.edges[e.0].dst = sfast_acc;
+                g.edges[e.0].memlet.data = sfast.clone();
+            }
+        }
+        if let Some(ri) = if rewire_dst { consumer } else { producer } {
+            rename_inner(g, &region_nodes[ri], s, &sfast);
+            region_nodes[ri].push(sfast_acc);
+        }
+        if rewire_dst {
+            g.add_edge(s_acc, sync, pop(s));
+            g.add_edge(sync, sfast_acc, pop(&sfast));
+        } else {
+            g.add_edge(sfast_acc, sync, pop(&sfast));
+            g.add_edge(sync, s_acc, pop(s));
+        }
+        return 1;
+    }
+
     // wide-rate streams: a fast→fast crossing packs into `{s}_pack_cdc`
     // before the synchronizer and re-issues from `{s}_cdc` after it;
     // one-sided crossings need a single wide `{s}_cdc`
@@ -235,7 +333,7 @@ fn inject_crossing(
     let sfast = format!("{s}_fast");
     // the fast ratio `{s}_fast` carries: the consumer's when it is
     // fast, else the producer's
-    let fast_f = if has_issue { f_dst } else { f_src };
+    let fast_f = if has_issue { dst.gear } else { src.gear };
     if has_pack && has_issue {
         declare_stream(g, &pack_out, w, depth);
     }
@@ -249,7 +347,7 @@ fn inject_crossing(
             kind: CdcKind::Packer,
             input: if has_issue { s.to_string() } else { sfast.clone() },
             output: pack_out.clone(),
-            factor: f_src,
+            factor: src.gear,
         })
     });
     let sync = g.add_node(Node::Cdc {
@@ -257,7 +355,7 @@ fn inject_crossing(
         kind: CdcKind::Synchronizer,
         input: if has_pack { pack_out.clone() } else { s.to_string() },
         output: if has_issue { sync_out.clone() } else { s.to_string() },
-        factor: if has_issue { f_dst } else { f_src },
+        factor: if has_issue { dst.gear } else { src.gear },
     });
     let issuer = has_issue.then(|| {
         g.add_node(Node::Cdc {
@@ -265,7 +363,7 @@ fn inject_crossing(
             kind: CdcKind::Issuer,
             input: sync_out.clone(),
             output: sfast.clone(),
-            factor: f_dst,
+            factor: dst.gear,
         })
     });
     // access nodes, wide(s) then fast
@@ -333,15 +431,77 @@ fn inject_crossing(
     1 + has_pack as usize + has_issue as usize
 }
 
-/// Apply multi-pumping in the given mode.
+/// Uniform bare-fast boundary crossing on stream `s`: a lone
+/// synchronizer at unchanged width, the compute-side endpoints
+/// rewired to `{s}_fast`. `inward` = the stream flows from a reader
+/// into the fast domain (else out of it, to a writer). Returns the
+/// plumbing module count (always 1 — zero packer/issuer).
+fn bare_fast_boundary(g: &mut Sdfg, s: &str, m: usize, inward: bool) -> usize {
+    let decl = g.container(s).unwrap().clone();
+    let depth = match decl.storage {
+        Storage::Stream { depth } => depth,
+        _ => unreachable!("boundary stream has stream storage"),
+    };
+    let sfast = format!("{s}_fast");
+    g.declare(DataDecl {
+        name: sfast.clone(),
+        kind: ContainerKind::Stream,
+        // width unchanged — bare-fast has no gearboxes
+        vtype: decl.vtype,
+        shape: vec![],
+        storage: Storage::Stream { depth: depth * m },
+        transient: true,
+    });
+    let sync = g.add_node(Node::Cdc {
+        name: format!("sync_{s}"),
+        kind: CdcKind::Synchronizer,
+        input: if inward { s.to_string() } else { sfast.clone() },
+        output: if inward { sfast.clone() } else { s.to_string() },
+        factor: m,
+    });
+    let sfast_acc = g.add_node(Node::Access { data: sfast.clone() });
+    let s_acc = g
+        .node_ids()
+        .find(|id| matches!(g.node(*id), Node::Access { data } if data.as_str() == s))
+        .expect("stream access node exists");
+    // the compute-side endpoints of s move to s_fast
+    for e in g.edge_ids().collect::<Vec<_>>() {
+        let edge = g.edge(e);
+        if inward {
+            if edge.src == s_acc && edge.memlet.data == s {
+                g.edges[e.0].src = sfast_acc;
+                g.edges[e.0].memlet.data = sfast.clone();
+            }
+        } else if edge.dst == s_acc && edge.memlet.data == s {
+            g.edges[e.0].dst = sfast_acc;
+            g.edges[e.0].memlet.data = sfast.clone();
+        }
+    }
+    // inner scope edges popping s move to s_fast
+    for e in g.edge_ids().collect::<Vec<_>>() {
+        if g.edge(e).memlet.data == s && g.edge(e).src != s_acc && g.edge(e).dst != s_acc {
+            g.edge_mut(e).memlet.data = sfast.clone();
+        }
+    }
+    let pop = |d: &str| Memlet::new(d, Subset::index1(Expr::int(0)));
+    if inward {
+        g.add_edge(s_acc, sync, pop(s));
+        g.add_edge(sync, sfast_acc, pop(&sfast));
+    } else {
+        g.add_edge(sfast_acc, sync, pop(&sfast));
+        g.add_edge(sync, s_acc, pop(s));
+    }
+    1
+}
+
+/// Apply multi-pumping under the given per-region assignment.
 pub struct MultiPump {
-    pub mode: PumpMode,
     pub factors: PumpFactors,
 }
 
 impl MultiPump {
     pub fn uniform(factor: usize, mode: PumpMode) -> Self {
-        MultiPump { mode, factors: PumpFactors::Uniform(factor) }
+        MultiPump { factors: PumpFactors::Uniform(RegionPump::new(factor, mode)) }
     }
 
     pub fn resource(factor: usize) -> Self {
@@ -352,9 +512,26 @@ impl MultiPump {
         MultiPump::uniform(factor, PumpMode::Throughput)
     }
 
-    /// Mixed per-region assignment (resource mode only; see module docs).
+    /// Gearbox-free fast clocking: dace's "approach 3" — only legal
+    /// when the pumped regions pipeline at II > 1.
+    pub fn bare_fast(factor: usize) -> Self {
+        MultiPump::uniform(factor, PumpMode::BareFast)
+    }
+
+    /// Mixed per-region factors, all in the same `mode` (the historic
+    /// entry point; see [`MultiPump::per_region`] for mixed modes).
     pub fn mixed(factors: Vec<Option<usize>>, mode: PumpMode) -> Self {
-        MultiPump { mode, factors: PumpFactors::PerRegion(factors) }
+        let fs = factors
+            .into_iter()
+            .map(|f| f.map(|x| RegionPump::new(x, mode)))
+            .collect();
+        MultiPump::per_region(fs)
+    }
+
+    /// Fully general per-region assignment: each region carries its
+    /// own `{factor, mode}`, `None` staying in CL0.
+    pub fn per_region(pumps: Vec<Option<RegionPump>>) -> Self {
+        MultiPump { factors: PumpFactors::PerRegion(pumps) }
     }
 
     /// Pump a single region of a `region_count`-region graph at
@@ -402,21 +579,17 @@ fn compute_side(g: &Sdfg, boundary: &[String]) -> Vec<NodeId> {
 
 impl Transform for MultiPump {
     fn name(&self) -> String {
-        let mode = match self.mode {
-            PumpMode::Resource => "resource",
-            PumpMode::Throughput => "throughput",
-        };
         match &self.factors {
-            PumpFactors::Uniform(m) => format!("MultiPump[M={m} {mode}]"),
+            PumpFactors::Uniform(p) => format!("MultiPump[M={} {}]", p.factor, p.mode.name()),
             PumpFactors::PerRegion(fs) => {
-                format!("MultiPump[mixed {} {mode}]", assignment_label(fs))
+                format!("MultiPump[mixed {}]", assignment_label(fs))
             }
         }
     }
 
     fn can_apply(&self, g: &Sdfg) -> Result<(), String> {
         match &self.factors {
-            PumpFactors::Uniform(m) => self.can_apply_uniform(g, *m),
+            PumpFactors::Uniform(p) => self.can_apply_uniform(g, *p),
             PumpFactors::PerRegion(fs) => {
                 let n = partition_streamable(g).len();
                 if fs.len() != n {
@@ -425,8 +598,8 @@ impl Transform for MultiPump {
                         fs.len()
                     ));
                 }
-                match uniform_factor(fs) {
-                    Some(m) => self.can_apply_uniform(g, m),
+                match uniform_pump(fs) {
+                    Some(p) => self.can_apply_uniform(g, p),
                     None => self.can_apply_mixed(g, fs),
                 }
             }
@@ -435,9 +608,9 @@ impl Transform for MultiPump {
 
     fn apply(&self, g: &mut Sdfg) -> Result<TransformReport, String> {
         match &self.factors {
-            PumpFactors::Uniform(m) => self.apply_uniform(g, *m),
-            PumpFactors::PerRegion(fs) => match uniform_factor(fs) {
-                Some(m) => self.apply_uniform(g, m),
+            PumpFactors::Uniform(p) => self.apply_uniform(g, *p),
+            PumpFactors::PerRegion(fs) => match uniform_pump(fs) {
+                Some(p) => self.apply_uniform(g, p),
                 None => self.apply_mixed(g, fs),
             },
         }
@@ -445,7 +618,8 @@ impl Transform for MultiPump {
 }
 
 impl MultiPump {
-    fn can_apply_uniform(&self, g: &Sdfg, factor: usize) -> Result<(), String> {
+    fn can_apply_uniform(&self, g: &Sdfg, pump: RegionPump) -> Result<(), String> {
+        let factor = pump.factor;
         if factor < 2 {
             return Err("pumping factor must be ≥ 2".into());
         }
@@ -470,13 +644,24 @@ impl MultiPump {
                 }
             }
         }
+        // bare-fast mode: without gearboxes the fast clock can only
+        // recover initiation intervals — every pumped region must
+        // actually pipeline at II > 1, or the extra clock buys nothing
+        // and the crossing synchronizers throttle it back to CL0 rate.
+        if pump.mode == PumpMode::BareFast {
+            for r in partition_streamable(g) {
+                if let Some(reason) = r.rejects(pump) {
+                    return Err(reason);
+                }
+            }
+        }
         // resource mode: every stream the design carries — boundary
         // AND internal (stencil-chain inter-kernel streams) — must
         // narrow exactly, and every library datapath must keep an
         // integer lane count. Rejecting here keeps an illegal factor
         // from surfacing later as a confusing lower/estimate error on
         // a half-narrowed graph.
-        if self.mode == PumpMode::Resource {
+        if pump.mode == PumpMode::Resource {
             for (name, decl) in &g.containers {
                 if decl.kind != ContainerKind::Stream {
                     continue;
@@ -511,18 +696,14 @@ impl MultiPump {
         Ok(())
     }
 
-    /// Per-region legality: resource mode only, one legal factor per
-    /// pumped region (width divisibility, temporal check on map
-    /// scopes), and every factor dividing the largest one so all fast
-    /// domains share the exact simulator's fast time base.
-    fn can_apply_mixed(&self, g: &Sdfg, fs: &[Option<usize>]) -> Result<(), String> {
-        if self.mode != PumpMode::Resource {
-            return Err(
-                "mixed per-region pump factors support resource mode only \
-                 (throughput mode widens the shared external interface)"
-                    .into(),
-            );
-        }
+    /// Per-region legality: each pumped region's `{factor, mode}` must
+    /// pass that mode's check ([`crate::analysis::streamability::StreamRegion::rejects`]
+    /// — resource needs divisible widths, throughput an external
+    /// stream, bare-fast a dependent pipeline), plus the temporal
+    /// check on map scopes, and every factor must divide the largest
+    /// one so all fast domains share the exact simulator's fast time
+    /// base.
+    fn can_apply_mixed(&self, g: &Sdfg, fs: &[Option<RegionPump>]) -> Result<(), String> {
         if g.multipump.is_some() {
             return Err("already multi-pumped".into());
         }
@@ -531,40 +712,42 @@ impl MultiPump {
             return Err("graph is not streamed (run StreamingComposition first)".into());
         }
         let regions = partition_streamable(g);
-        let max_f = fs.iter().flatten().copied().max().unwrap_or(0);
+        let max_f = fs.iter().flatten().map(|p| p.factor).max().unwrap_or(0);
         if max_f == 0 {
             return Err("mixed assignment pumps no region (every factor is None)".into());
         }
         // reject fan-out/fan-in streams up front (see stream_sides)
         let anchors: Vec<NodeId> = regions.iter().map(|r| r.module).collect();
         stream_sides(g, &anchors)?;
-        for (r, f) in regions.iter().zip(fs) {
-            let f = match f {
-                Some(f) => *f,
+        for (r, p) in regions.iter().zip(fs) {
+            let p = match p {
+                Some(p) => *p,
                 None => continue,
             };
+            let f = p.factor;
             if f < 2 {
                 return Err(format!("region '{}': pumping factor must be ≥ 2", r.label));
             }
-            if r.width % f != 0 {
-                return Err(format!(
-                    "region '{}': width {} not divisible by M={f}",
-                    r.label, r.width
-                ));
+            // per-mode legality (width / external / dependent)
+            if let Some(reason) = r.rejects(p) {
+                return Err(reason);
             }
-            // every individual stream the region touches must narrow
-            // (or re-issue) exactly — the minimum width above does not
-            // cover a wider sibling stream whose lane count M does not
-            // divide (the uniform path errors per stream too)
-            let (inflow, outflow) = module_io(g, r.module);
-            for e in g.in_edges(inflow).into_iter().chain(g.out_edges(outflow)) {
-                let data = &g.edge(e).memlet.data;
-                if let Some(decl) = g.container(data) {
-                    if decl.kind == ContainerKind::Stream && decl.vtype.lanes % f != 0 {
-                        return Err(format!(
-                            "region '{}': stream '{data}' width {} not divisible by M={f}",
-                            r.label, decl.vtype.lanes
-                        ));
+            // resource mode: every individual stream the region
+            // touches must narrow (or re-issue) exactly — the minimum
+            // width in the region summary does not cover a wider
+            // sibling stream whose lane count M does not divide (the
+            // uniform path errors per stream too)
+            if p.mode == PumpMode::Resource {
+                let (inflow, outflow) = module_io(g, r.module);
+                for e in g.in_edges(inflow).into_iter().chain(g.out_edges(outflow)) {
+                    let data = &g.edge(e).memlet.data;
+                    if let Some(decl) = g.container(data) {
+                        if decl.kind == ContainerKind::Stream && decl.vtype.lanes % f != 0 {
+                            return Err(format!(
+                                "region '{}': stream '{data}' width {} not divisible by M={f}",
+                                r.label, decl.vtype.lanes
+                            ));
+                        }
                     }
                 }
             }
@@ -590,9 +773,10 @@ impl MultiPump {
         Ok(())
     }
 
-    fn apply_uniform(&self, g: &mut Sdfg, factor: usize) -> Result<TransformReport, String> {
+    fn apply_uniform(&self, g: &mut Sdfg, pump: RegionPump) -> Result<TransformReport, String> {
         let (into, out_of) = boundary_streams(g);
-        let m = factor;
+        let m = pump.factor;
+        let mode = pump.mode;
         let mut plumbing = 0usize;
 
         // the fast domain contains the compute subgraph
@@ -604,15 +788,22 @@ impl MultiPump {
                 Storage::Stream { depth } => depth,
                 _ => unreachable!("boundary stream has stream storage"),
             };
-            let (slow_lanes, fast_lanes) = match self.mode {
+            if mode == PumpMode::BareFast {
+                // gearless: a lone synchronizer per boundary stream,
+                // widths untouched — zero packer/issuer modules
+                plumbing += bare_fast_boundary(g, s, m, true);
+                continue;
+            }
+            let (slow_lanes, fast_lanes) = match mode {
                 // wide outside stays, narrow inside
                 PumpMode::Resource => (decl.vtype.lanes, decl.vtype.lanes / m),
                 // widen outside, keep inside
                 PumpMode::Throughput => (decl.vtype.lanes * m, decl.vtype.lanes),
+                PumpMode::BareFast => unreachable!("handled above"),
             };
             // widen the slow-side stream (throughput mode) and its
             // source array port
-            if self.mode == PumpMode::Throughput {
+            if mode == PumpMode::Throughput {
                 g.containers.get_mut(s).unwrap().vtype.lanes = slow_lanes;
             }
             let mut vt_x = decl.vtype;
@@ -693,11 +884,16 @@ impl MultiPump {
                 Storage::Stream { depth } => depth,
                 _ => unreachable!(),
             };
-            let (slow_lanes, fast_lanes) = match self.mode {
+            if mode == PumpMode::BareFast {
+                plumbing += bare_fast_boundary(g, s, m, false);
+                continue;
+            }
+            let (slow_lanes, fast_lanes) = match mode {
                 PumpMode::Resource => (decl.vtype.lanes, decl.vtype.lanes / m),
                 PumpMode::Throughput => (decl.vtype.lanes * m, decl.vtype.lanes),
+                PumpMode::BareFast => unreachable!("handled above"),
             };
-            if self.mode == PumpMode::Throughput {
+            if mode == PumpMode::Throughput {
                 g.containers.get_mut(s).unwrap().vtype.lanes = slow_lanes;
             }
             let mut vt_x = decl.vtype;
@@ -772,7 +968,7 @@ impl MultiPump {
 
         // resource mode: the compute block's internal width shrinks —
         // narrow every non-boundary stream and scale PE/lane counts
-        if self.mode == PumpMode::Resource {
+        if mode == PumpMode::Resource {
             let boundary: Vec<String> = into.iter().chain(out_of.iter()).cloned().collect();
             let names: Vec<String> = g.containers.keys().cloned().collect();
             for name in names {
@@ -806,7 +1002,7 @@ impl MultiPump {
             }
         }
 
-        g.multipump = Some(MultipumpInfo::uniform(m, self.mode, fast_nodes));
+        g.multipump = Some(MultipumpInfo::uniform(m, mode, fast_nodes));
 
         Ok(TransformReport {
             transform: self.name(),
@@ -818,13 +1014,13 @@ impl MultiPump {
         })
     }
 
-    /// Mixed assignment: one fast domain per distinct factor, crossings
-    /// injected wherever two sides of a stream disagree on the clock
-    /// ratio (including the slow side, factor 1).
-    fn apply_mixed(&self, g: &mut Sdfg, fs: &[Option<usize>]) -> Result<TransformReport, String> {
+    /// Mixed assignment: one fast domain per distinct `{factor, mode}`
+    /// pump, crossings injected wherever the two sides of a stream
+    /// disagree on their pump (including the slow side, `None`).
+    fn apply_mixed(&self, g: &mut Sdfg, fs: &[Option<RegionPump>]) -> Result<TransformReport, String> {
         let regions = partition_streamable(g);
         let anchors: Vec<NodeId> = regions.iter().map(|r| r.module).collect();
-        let factor_of_region = |ri: usize| fs[ri].unwrap_or(1);
+        let pump_of = |ri: usize| fs[ri];
 
         // region node sets (anchor + scope internals)
         let mut region_nodes: Vec<Vec<NodeId>> = Vec::with_capacity(anchors.len());
@@ -843,10 +1039,10 @@ impl MultiPump {
         // which region produces / consumes each stream (fan-out was
         // rejected by can_apply)
         let (producer, consumer) = stream_sides(g, &anchors)?;
-        let side_factors = |s: &str| -> (usize, usize) {
+        let side_pumps = |s: &str| -> (Option<RegionPump>, Option<RegionPump>) {
             (
-                producer.get(s).map(|&ri| factor_of_region(ri)).unwrap_or(1),
-                consumer.get(s).map(|&ri| factor_of_region(ri)).unwrap_or(1),
+                producer.get(s).and_then(|&ri| pump_of(ri)),
+                consumer.get(s).and_then(|&ri| pump_of(ri)),
             )
         };
 
@@ -859,46 +1055,83 @@ impl MultiPump {
             .filter(|(_, d)| d.kind == ContainerKind::Stream)
             .map(|(n, _)| n.clone())
             .collect();
-        for s in stream_names {
-            let (f_src, f_dst) = side_factors(&s);
-            if f_src == f_dst {
-                continue; // same domain: no crossing
+
+        // throughput regions widen their external streams (the side
+        // facing a CL0 reader/writer) before any crossing is injected,
+        // so the crossing gearboxes see the widened slow-side width —
+        // exactly as the uniform throughput apply does. Interior
+        // streams are untouched: nobody upstream can feed them wider.
+        for s in &stream_names {
+            let (p_src, p_dst) = side_pumps(s);
+            let widen = match (p_src, p_dst) {
+                (Some(p), _) if p.mode == PumpMode::Throughput && !consumer.contains_key(s) => {
+                    p.factor
+                }
+                (_, Some(p)) if p.mode == PumpMode::Throughput && !producer.contains_key(s) => {
+                    p.factor
+                }
+                _ => 1,
+            };
+            if widen > 1 {
+                g.containers.get_mut(s).unwrap().vtype.lanes *= widen;
             }
+        }
+
+        for s in &stream_names {
+            let (p_src, p_dst) = side_pumps(s);
+            if p_src == p_dst {
+                continue; // same domain (or both slow): no crossing
+            }
+            let src = CrossingSide::of(p_src, !consumer.contains_key(s));
+            let dst = CrossingSide::of(p_dst, !producer.contains_key(s));
             crossings += 1;
             plumbing += inject_crossing(
                 g,
-                &s,
-                f_src,
-                f_dst,
-                producer.get(&s).copied(),
-                consumer.get(&s).copied(),
+                s,
+                src,
+                dst,
+                producer.get(s).copied(),
+                consumer.get(s).copied(),
                 &mut region_nodes,
             );
         }
 
-        // narrow every stream interior to a pumped domain (both sides
-        // fast: either the same domain, or the producer side of a
-        // fast→fast crossing) — the created `_cdc`/`_fast` plumbing
-        // streams are already at their final widths
+        // narrow every stream interior to a resource-pumped domain
+        // (both sides fast: either the same domain, or the producer
+        // side of a geared crossing) by the producer's gear ratio —
+        // the created `_cdc`/`_fast` plumbing streams are already at
+        // their final widths, and bare-fast / throughput-interior
+        // sides (gear 1) keep theirs
         let names: Vec<String> = g.containers.keys().cloned().collect();
         for name in names {
             if name.ends_with("_cdc") || name.ends_with("_fast") {
                 continue;
             }
-            let (f_src, f_dst) = side_factors(&name);
-            if f_src > 1 && f_dst > 1 {
+            let (p_src, p_dst) = side_pumps(&name);
+            let (clk_src, clk_dst) = (
+                p_src.map(|p| p.factor).unwrap_or(1),
+                p_dst.map(|p| p.factor).unwrap_or(1),
+            );
+            if clk_src > 1 && clk_dst > 1 {
+                let gear = CrossingSide::of(p_src, !consumer.contains_key(&name)).gear;
                 let decl = g.containers.get_mut(&name).unwrap();
-                if decl.kind == ContainerKind::Stream && decl.vtype.lanes % f_src == 0 {
-                    decl.vtype.lanes /= f_src;
+                if gear > 1 && decl.kind == ContainerKind::Stream && decl.vtype.lanes % gear == 0
+                {
+                    decl.vtype.lanes /= gear;
                 }
             }
         }
-        // narrow the pumped regions' library datapaths
+        // narrow the resource-pumped regions' library datapaths —
+        // throughput and bare-fast keep their compute width by design
         for (ri, &m) in anchors.iter().enumerate() {
-            let f = factor_of_region(ri);
-            if f < 2 {
+            let p = match pump_of(ri) {
+                Some(p) => p,
+                None => continue,
+            };
+            if p.factor < 2 || p.mode != PumpMode::Resource {
                 continue;
             }
+            let f = p.factor;
             if let Node::Library { op, .. } = g.node_mut(m) {
                 match op {
                     LibraryOp::SystolicGemm { vec_width, .. }
@@ -915,16 +1148,22 @@ impl MultiPump {
         let info_regions: Vec<PumpedRegion> = region_nodes
             .into_iter()
             .enumerate()
-            .filter(|(ri, _)| factor_of_region(*ri) >= 2)
-            .map(|(ri, nodes)| PumpedRegion { factor: factor_of_region(ri), nodes })
+            .filter_map(|(ri, nodes)| {
+                pump_of(ri).filter(|p| p.factor >= 2).map(|p| PumpedRegion {
+                    factor: p.factor,
+                    mode: p.mode,
+                    nodes,
+                })
+            })
             .collect();
         let domains: usize = {
-            let mut d: Vec<usize> = info_regions.iter().map(|r| r.factor).collect();
+            let mut d: Vec<(usize, char)> =
+                info_regions.iter().map(|r| (r.factor, r.mode.letter())).collect();
             d.sort_unstable();
             d.dedup();
             d.len()
         };
-        g.multipump = Some(MultipumpInfo { mode: self.mode, regions: info_regions });
+        g.multipump = Some(MultipumpInfo { regions: info_regions });
 
         Ok(TransformReport {
             transform: self.name(),
@@ -964,6 +1203,22 @@ mod tests {
         g
     }
 
+    fn streamed_fw() -> Sdfg {
+        let mut g = crate::apps::floyd_warshall::build();
+        let mut pm = PassManager::new();
+        pm.run(&mut g, &StreamingComposition::default()).unwrap();
+        g
+    }
+
+    fn cdc_counts(g: &Sdfg) -> (usize, usize, usize) {
+        let count = |pred: fn(&Node) -> bool| g.node_ids().filter(|i| pred(g.node(*i))).count();
+        (
+            count(|n| matches!(n, Node::Cdc { kind: CdcKind::Packer, .. })),
+            count(|n| matches!(n, Node::Cdc { kind: CdcKind::Synchronizer, .. })),
+            count(|n| matches!(n, Node::Cdc { kind: CdcKind::Issuer, .. })),
+        )
+    }
+
     #[test]
     fn requires_streaming_first() {
         let g = vecadd_sdfg(1);
@@ -990,7 +1245,7 @@ mod tests {
         assert!(report.summary.contains("2 clock domains"), "{}", report.summary);
         let mp = g.multipump.as_ref().unwrap();
         assert_eq!(mp.max_factor(), 2);
-        assert_eq!(mp.mode, PumpMode::Resource);
+        assert_eq!(mp.representative_mode(), PumpMode::Resource);
         assert!(!mp.is_mixed());
         // per boundary stream: sync+issuer or packer+sync
         let cdc = g.node_ids().filter(|i| g.node(*i).is_cdc()).count();
@@ -1102,11 +1357,12 @@ mod tests {
             .can_apply(&g)
             .unwrap_err();
         assert!(err.contains("4 streamable regions"), "{err}");
-        // throughput mode
+        // throughput mode on an interior region (stage 1 of 4 touches
+        // no reader/writer-fed stream, so widening cannot feed it)
         let err = MultiPump::mixed(vec![Some(2), Some(4), None, None], PumpMode::Throughput)
             .can_apply(&g)
             .unwrap_err();
-        assert!(err.contains("resource mode only"), "{err}");
+        assert!(err.contains("no external stream"), "{err}");
         // all None
         let err = MultiPump::mixed(vec![None; 4], PumpMode::Resource)
             .can_apply(&g)
@@ -1254,6 +1510,194 @@ mod tests {
             plain.hbm.read("v_out"),
             mixed.hbm.read("v_out"),
             "mixed multi-pumping changed results"
+        );
+    }
+
+    // ---- per-region modes -------------------------------------------
+
+    #[test]
+    fn bare_fast_requires_dependent_pipeline() {
+        // stencil stages pipeline at II = 1 — nothing to recover
+        let g = streamed_stencil(2, 8);
+        let err = MultiPump::bare_fast(2).can_apply(&g).unwrap_err();
+        assert!(err.contains("II = 1"), "{err}");
+        // Floyd–Warshall's in-place relaxation is dependent — legal
+        MultiPump::bare_fast(2).can_apply(&streamed_fw()).unwrap();
+    }
+
+    #[test]
+    fn uniform_bare_fast_is_sync_only() {
+        let mut g = streamed_fw();
+        let mut pm = PassManager::new();
+        let report = pm.run(&mut g, &MultiPump::bare_fast(2)).unwrap().clone();
+        validate(&g).unwrap();
+        assert!(report.summary.contains("2 clock domains"), "{}", report.summary);
+        // zero gearboxes: every crossing is a lone synchronizer
+        let (packers, syncs, issuers) = cdc_counts(&g);
+        assert_eq!((packers, issuers), (0, 0), "bare-fast must inject no gearboxes");
+        assert_eq!(syncs, 2); // one per boundary stream (in + out)
+        // widths untouched — the fast domain runs the same datapath
+        for (name, decl) in &g.containers {
+            if decl.kind == ContainerKind::Stream {
+                assert_eq!(decl.vtype.lanes, 1, "stream '{name}' changed width");
+            }
+        }
+        let mp = g.multipump.as_ref().unwrap();
+        assert_eq!(mp.representative_mode(), PumpMode::BareFast);
+        assert_eq!(mp.max_factor(), 2);
+        // the relaxation datapath sits in the fast domain
+        let lib = g
+            .node_ids()
+            .find(|i| matches!(g.node(*i), Node::Library { .. }))
+            .unwrap();
+        assert_eq!(g.fast_factor_of(lib), Some(2));
+        assert_eq!(g.fast_mode_of(lib), Some(PumpMode::BareFast));
+    }
+
+    #[test]
+    fn uniform_mode_assignments_delegate_bit_for_bit() {
+        // all-same-mode per-region assignments must reproduce the
+        // legacy whole-graph transform exactly, in every mode
+        let mut pm = PassManager::new();
+        // throughput on the (external) vecadd region
+        let mut a = streamed_vecadd(2);
+        let mut b = streamed_vecadd(2);
+        pm.run(&mut a, &MultiPump::throughput(2)).unwrap();
+        pm.run(
+            &mut b,
+            &MultiPump::per_region(vec![Some(RegionPump::new(2, PumpMode::Throughput))]),
+        )
+        .unwrap();
+        assert_eq!(
+            crate::ir::printer::to_text(&a),
+            crate::ir::printer::to_text(&b),
+            "throughput delegation diverged"
+        );
+        // bare-fast on the (dependent) Floyd–Warshall region
+        let mut a = streamed_fw();
+        let mut b = streamed_fw();
+        pm.run(&mut a, &MultiPump::bare_fast(2)).unwrap();
+        pm.run(
+            &mut b,
+            &MultiPump::per_region(vec![Some(RegionPump::new(2, PumpMode::BareFast))]),
+        )
+        .unwrap();
+        assert_eq!(
+            crate::ir::printer::to_text(&a),
+            crate::ir::printer::to_text(&b),
+            "bare-fast delegation diverged"
+        );
+    }
+
+    #[test]
+    fn mode_mixed_chain_throughput_head_resource_tail() {
+        // 2-stage chain: stage 0 outwards (T2) — its reader-fed feed
+        // widens ×2 — and stage 1 inwards (R2) — streams narrow ÷2
+        let mut g = streamed_stencil(2, 8);
+        let mut pm = PassManager::new();
+        let report = pm
+            .run(
+                &mut g,
+                &MultiPump::per_region(vec![
+                    Some(RegionPump::new(2, PumpMode::Throughput)),
+                    Some(RegionPump::new(2, PumpMode::Resource)),
+                ]),
+            )
+            .unwrap()
+            .clone();
+        validate(&g).unwrap();
+        assert!(report.summary.contains("2 fast clock domain(s)"), "{}", report.summary);
+        // the throughput head's external feed is widened; its fast
+        // side keeps the original width (issuer ÷2 re-issues)
+        assert_eq!(g.container("v_in_to_jacobi3d_stage0").unwrap().vtype.lanes, 16);
+        assert_eq!(g.container("v_in_to_jacobi3d_stage0_fast").unwrap().vtype.lanes, 8);
+        // the T→R interior crossing is gearless on the producer side
+        // (no packer — nothing widened tmp0) and issues ÷2 into the
+        // resource tail
+        assert_eq!(g.container("tmp0").unwrap().vtype.lanes, 8);
+        assert_eq!(g.container("tmp0_fast").unwrap().vtype.lanes, 4);
+        let (packers, syncs, issuers) = cdc_counts(&g);
+        assert_eq!((packers, syncs, issuers), (1, 3, 2));
+        // resource tail narrows its datapath; throughput head keeps it
+        let widths: Vec<usize> = g
+            .node_ids()
+            .filter_map(|id| match g.node(id) {
+                Node::Library { op: LibraryOp::StencilStage { vec_width, .. }, .. } => {
+                    Some(*vec_width)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(widths, vec![8, 4]);
+        // per-region modes land in the IR
+        let regions = partition_streamable(&g);
+        assert_eq!(g.fast_mode_of(regions[0].module), Some(PumpMode::Throughput));
+        assert_eq!(g.fast_mode_of(regions[1].module), Some(PumpMode::Resource));
+        assert!(g.multipump.as_ref().unwrap().is_mixed());
+    }
+
+    #[test]
+    fn mode_mixed_chain_functional_results_match_unpumped() {
+        use crate::codegen::lower::lower;
+        use crate::hw::cost::CostModel;
+        use crate::sim::{run_functional, Hbm};
+        let bindings: [(&str, i64); 4] = [("NX", 8), ("NY", 8), ("NZ", 8), ("NZ_v", 1)];
+        let build = |pumped: bool| {
+            let mut g = crate::apps::stencil::build(StencilKind::Jacobi3D, 3, 8);
+            let mut pm = PassManager::new();
+            pm.run(&mut g, &StreamingComposition::default()).unwrap();
+            if pumped {
+                pm.run(
+                    &mut g,
+                    &MultiPump::per_region(vec![
+                        Some(RegionPump::new(2, PumpMode::Throughput)),
+                        Some(RegionPump::new(2, PumpMode::Resource)),
+                        None,
+                    ]),
+                )
+                .unwrap();
+            }
+            let env = g.bind(&bindings).unwrap();
+            lower(&g, &env, &CostModel::default()).unwrap()
+        };
+        let mut rng = crate::util::Rng::new(13);
+        let input = rng.f32_vec(8 * 8 * 8);
+        let mut hbm = Hbm::new();
+        hbm.load("v_in", input);
+        let plain = run_functional(&build(false), hbm.clone()).unwrap();
+        let mixed = run_functional(&build(true), hbm).unwrap();
+        assert_eq!(
+            plain.hbm.read("v_out"),
+            mixed.hbm.read("v_out"),
+            "mode-mixed multi-pumping changed results"
+        );
+    }
+
+    #[test]
+    fn bare_fast_fw_functional_results_match_unpumped() {
+        use crate::codegen::lower::lower;
+        use crate::hw::cost::CostModel;
+        use crate::sim::{run_functional, Hbm};
+        let n = 8usize;
+        let build = |pumped: bool| {
+            let mut g = crate::apps::floyd_warshall::build();
+            let mut pm = PassManager::new();
+            pm.run(&mut g, &StreamingComposition::default()).unwrap();
+            if pumped {
+                pm.run(&mut g, &MultiPump::bare_fast(2)).unwrap();
+            }
+            let env = g.bind(&[("N", n as i64)]).unwrap();
+            lower(&g, &env, &CostModel::default()).unwrap()
+        };
+        let d = crate::apps::floyd_warshall::random_graph(n, 5, 0.4);
+        let mut hbm = Hbm::new();
+        hbm.load("dist", d);
+        let plain = run_functional(&build(false), hbm.clone()).unwrap();
+        let fast = run_functional(&build(true), hbm).unwrap();
+        assert_eq!(
+            plain.hbm.read("dist"),
+            fast.hbm.read("dist"),
+            "bare-fast pumping changed results"
         );
     }
 }

@@ -442,6 +442,125 @@ fn dse_mixed_frontier_verifies_at_golden_scale() {
 }
 
 #[test]
+fn dse_floyd_warshall_barefast_reaches_the_frontier_gearbox_free() {
+    // The mode axis extended with bare-fast: FW's dependent scalar
+    // datapath (II = 21) is exactly the shape the dace-style "just
+    // clock it faster" mode exists for. B2 delivers T2's doubled
+    // throughput with no issuer/packer and no widened datapath, so it
+    // must survive to the Pareto frontier and undercut T2 on logic.
+    let n = 128i64;
+    let device = Device::u280();
+    let bases = vec![SearchBase {
+        spec: BuildSpec::new(apps::floyd_warshall::build())
+            .bind("N", n)
+            .cl0(apps::floyd_warshall::CL0_REQUEST_MHZ)
+            .seeded(2),
+        flops: apps::floyd_warshall::flops(n),
+    }];
+    let opts = SpaceOptions {
+        vector_widths: vec![],
+        pump_factors: vec![2],
+        pump_modes: vec![PumpMode::Throughput, PumpMode::BareFast],
+        max_replicas: 1,
+        cl0_requests_mhz: vec![],
+        mixed_factors: false,
+    };
+    let out = run_search(
+        &Evaluator::new(),
+        &bases,
+        &device,
+        &opts,
+        &SearchConfig::exhaustive(Objective::throughput()),
+    )
+    .unwrap();
+    let b2 = out
+        .frontier
+        .iter()
+        .find(|e| e.point.pump == Some((2, PumpMode::BareFast)))
+        .unwrap_or_else(|| {
+            panic!(
+                "no bare-fast point on the frontier: {:?}",
+                out.frontier.iter().map(|e| e.label.clone()).collect::<Vec<_>>()
+            )
+        });
+    let reference = out.reference.as_ref().unwrap();
+    assert!(
+        b2.gops > reference.gops,
+        "bare-fast must raise FW throughput ({} vs {})",
+        b2.gops,
+        reference.gops
+    );
+    let t2 = out
+        .evaluations
+        .iter()
+        .find(|e| e.point.pump == Some((2, PumpMode::Throughput)))
+        .expect("throughput mode evaluates in the same sweep");
+    assert!(
+        b2.total_resources.lut_logic < t2.total_resources.lut_logic,
+        "gearbox-free bare-fast must be leaner than throughput mode \
+         ({} vs {} LUTs)",
+        b2.total_resources.lut_logic,
+        t2.total_resources.lut_logic
+    );
+    assert!(
+        b2.resource_score <= t2.resource_score,
+        "B2 score {} vs T2 score {}",
+        b2.resource_score,
+        t2.resource_score
+    );
+}
+
+#[test]
+fn dse_mode_mixed_space_strictly_extends_the_uniform_frontier() {
+    // The PR's acceptance criterion for the unified per-region space:
+    // with both gearboxed modes on the mode axis and --mixed-factors
+    // on, the search must (a) actually evaluate assignments whose
+    // regions disagree on *mode*, not just factor, and (b) produce a
+    // frontier that strictly extends the uniform-only frontier — some
+    // per-region point no uniform configuration dominates.
+    let (bases, mut opts) = stencil_mixed_problem(1 << 10);
+    opts.pump_modes = vec![PumpMode::Resource, PumpMode::Throughput];
+    let device = Device::u280();
+    let out = run_search(
+        &Evaluator::new(),
+        &bases,
+        &device,
+        &opts,
+        &SearchConfig::exhaustive(Objective::resource()),
+    )
+    .unwrap();
+
+    let mode_mixed = out.evaluations.iter().filter(|e| {
+        e.point.regions.as_ref().is_some_and(|fs| {
+            let modes: Vec<_> = fs.iter().flatten().map(|p| p.mode).collect();
+            modes.windows(2).any(|w| w[0] != w[1])
+        })
+    });
+    assert!(
+        mode_mixed.count() > 0,
+        "no mode-mixed per-region assignment survived to evaluation"
+    );
+
+    let uniform: Vec<_> =
+        out.evaluations.iter().filter(|e| e.point.regions.is_none()).collect();
+    assert!(!uniform.is_empty());
+    let strictly_new = out
+        .frontier
+        .iter()
+        .filter(|e| e.point.regions.is_some())
+        .any(|m| {
+            !uniform.iter().any(|u| {
+                u.resource_score <= m.resource_score && u.gops >= m.gops
+            })
+        });
+    assert!(
+        strictly_new,
+        "every per-region frontier point is dominated by a uniform one: {:?}",
+        out.frontier.iter().map(|e| e.label.clone()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
 fn dse_cache_compaction_shrinks_a_grown_store() {
     // the append-only growth fix: a run that touches a subset of a big
     // store and flushes with --cache-compact rewrites the file with

@@ -427,6 +427,127 @@ fn prop_telemetry_on_and_off_runs_are_bit_identical() {
 }
 
 #[test]
+fn prop_all_same_mode_per_region_assignment_delegates_to_legacy_uniform() {
+    // the refactor's delegation contract: a per-region assignment whose
+    // entries all carry the SAME {factor, mode} must produce the exact
+    // design the historic uniform path produces — asserted bit for bit
+    // on the emitted HLS and RTL text, the widest observable surface
+    use temporal_vec::codegen::{hls, rtl};
+    use temporal_vec::ir::{RegionPump, StencilKind};
+    forall("uniform-delegation", 0xD5, 8, |g| {
+        let factor = *g.choose(&[2usize, 4]);
+        let mode = *g.choose(&[PumpMode::Resource, PumpMode::Throughput]);
+        let stages = g.usize(2, 4);
+        let seed = g.usize(0, 1 << 20) as u64;
+        let base = || {
+            BuildSpec::new(apps::stencil::build(StencilKind::Jacobi3D, stages, 8))
+                .bind("NX", 8)
+                .bind("NY", 8)
+                .bind("NZ", 8)
+                .bind("NZ_v", 1)
+                .seeded(seed)
+        };
+        let uniform = compile(base().pumped(factor, mode));
+        let per_region = compile(
+            base().pumped_per_region(vec![Some(RegionPump::new(factor, mode)); stages]),
+        );
+        match (uniform, per_region) {
+            (Ok(u), Ok(p)) => {
+                if hls::emit_hls(&u.design) != hls::emit_hls(&p.design) {
+                    return Err(format!(
+                        "HLS text diverged (factor {factor}, {mode:?}, {stages} stages)"
+                    ));
+                }
+                let (ur, pr) = (rtl::emit_rtl(&u.design), rtl::emit_rtl(&p.design));
+                if ur.core_sv != pr.core_sv || ur.controller_sv != pr.controller_sv {
+                    return Err(format!(
+                        "RTL text diverged (factor {factor}, {mode:?}, {stages} stages)"
+                    ));
+                }
+                Ok(())
+            }
+            // both paths must agree on legality too
+            (Err(_), Err(_)) => Ok(()),
+            (Ok(_), Err(e)) => Err(format!("per-region rejected what uniform accepts: {e}")),
+            (Err(e), Ok(_)) => Err(format!("uniform rejected what per-region accepts: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_telemetry_invisible_on_barefast_and_mode_mixed_designs() {
+    // the observational contract again, but over the new region shapes
+    // this PR introduces: a gearbox-free bare-fast FW domain, and a
+    // stencil chain whose regions disagree on mode (throughput head,
+    // resource tail) — both must return bit-identical SimStats and
+    // output bits with and without a recorder attached
+    use temporal_vec::ir::{RegionPump, StencilKind};
+    use temporal_vec::sim::{run_exact_in, run_exact_observed_in, Arena};
+    use temporal_vec::telemetry::Recorder;
+    forall("telemetry-invisible-modes", 0xD6, 6, |g| {
+        let barefast_arm = g.bool();
+        let (c, hbm, out_name) = if barefast_arm {
+            let n = *g.choose(&[8usize, 12, 16]);
+            let c = compile(
+                BuildSpec::new(apps::floyd_warshall::build())
+                    .bind("N", n as i64)
+                    .pumped(2, PumpMode::BareFast),
+            )
+            .map_err(|e| format!("bare-fast FW must compile: {e}"))?;
+            let mut hbm = Hbm::new();
+            hbm.load("dist", apps::floyd_warshall::random_graph(n, 7, 0.3));
+            (c, hbm, "dist")
+        } else {
+            let c = compile(
+                BuildSpec::new(apps::stencil::build(StencilKind::Jacobi3D, 3, 8))
+                    .pumped_per_region(vec![
+                        Some(RegionPump::new(2, PumpMode::Throughput)),
+                        Some(RegionPump::resource(2)),
+                        None,
+                    ])
+                    .bind("NX", 8)
+                    .bind("NY", 8)
+                    .bind("NZ", 8)
+                    .bind("NZ_v", 1),
+            )
+            .map_err(|e| format!("mode-mixed stencil must compile: {e}"))?;
+            let mut hbm = Hbm::new();
+            hbm.load("v_in", g.vec_f32(8 * 8 * 8));
+            (c, hbm, "v_out")
+        };
+        let plain = run_exact_in(&c.design, hbm.clone(), 10_000_000, &mut Arena::new())
+            .map_err(|e| e.to_string())?;
+        let rec = Recorder::new();
+        let observed =
+            run_exact_observed_in(&c.design, hbm, 10_000_000, &mut Arena::new(), Some(&rec))
+                .map_err(|e| e.to_string())?;
+        if plain.stats.slow_cycles != observed.stats.slow_cycles
+            || plain.stats.fast_cycles != observed.stats.fast_cycles
+            || plain.stats.transactions != observed.stats.transactions
+            || plain.stats.bottleneck != observed.stats.bottleneck
+            || plain.stats.modules != observed.stats.modules
+        {
+            return Err(format!(
+                "SimStats diverged under observation (barefast_arm {barefast_arm}): \
+                 {:?} vs {:?}",
+                plain.stats, observed.stats
+            ));
+        }
+        let a: Vec<u32> = plain.hbm.read(out_name).iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = observed.hbm.read(out_name).iter().map(|v| v.to_bits()).collect();
+        if a != b {
+            return Err("output bits diverged under observation".into());
+        }
+        // the mode-lettered fast-domain utilization gauge must appear
+        let label = if barefast_arm { "sim.domain.cl1_m2b" } else { "sim.domain.cl1_m2" };
+        if !rec.gauges().iter().any(|(k, _)| k.starts_with(label)) {
+            return Err(format!("no '{label}' fast-domain gauge recorded"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_event_engine_is_cycle_exact_on_random_mixed_stencils() {
     // randomized per-region pump assignments over a small jacobi chain:
     // several fast domains at different strides plus CL0 regions in one

@@ -322,6 +322,204 @@ fn exact_mode_cycle_budget_enforced() {
     assert!(err.contains("exceeded"), "{err}");
 }
 
+// ---- bare-fast mode: gearbox-free fast clocking ----
+
+/// Twin II=2 pipelines, identical except for the clock of the compute
+/// stage: `bare_fast` places it in a factor-2 fast domain behind plain
+/// synchronizers (no issuer/packer — widths are untouched), the twin
+/// leaves it in CL0. Hand-built because lowering floors tasklet
+/// latency/II for real datapaths; the bare-fast physics under test is
+/// purely the engine's per-domain pacing.
+fn ii2_pipeline(bare_fast: bool, n: usize) -> temporal_vec::codegen::Design {
+    use temporal_vec::codegen::{ChannelSpec, Design, ModuleInst, ModuleSpec};
+    use temporal_vec::hw::ResourceVec;
+    use temporal_vec::ir::{ClockDomain, TaskExpr, Tasklet};
+    let chan = |name: &str, crosses: bool| ChannelSpec {
+        name: name.into(),
+        lanes: 1,
+        depth: 8,
+        crosses_domains: crosses,
+    };
+    let inst = |spec: ModuleSpec, domain: ClockDomain| ModuleInst {
+        spec,
+        domain,
+        resources: ResourceVec::ZERO,
+    };
+    let compute_domain =
+        if bare_fast { ClockDomain::Fast { factor: 2 } } else { ClockDomain::Slow };
+    Design {
+        name: if bare_fast { "ii2_barefast" } else { "ii2_slow" }.into(),
+        modules: vec![
+            inst(
+                ModuleSpec::Reader {
+                    data: "x".into(),
+                    stream: "s_in".into(),
+                    lanes: 1,
+                    elems: n,
+                    bytes_per_cycle: 4,
+                },
+                ClockDomain::Slow,
+            ),
+            inst(
+                ModuleSpec::Sync { input: "s_in".into(), output: "s_in_fast".into() },
+                ClockDomain::Slow,
+            ),
+            inst(
+                ModuleSpec::Compute {
+                    name: "acc".into(),
+                    tasklet: Tasklet::new("acc", vec![("o", TaskExpr::input("a"))]),
+                    inputs: vec![("s_in_fast".into(), "a".into())],
+                    output: ("s_out".into(), "o".into()),
+                    lanes: 1,
+                    iterations: n,
+                    ii: 2,
+                    latency: 6,
+                },
+                compute_domain,
+            ),
+            inst(
+                ModuleSpec::Sync { input: "s_out".into(), output: "s_out_slow".into() },
+                ClockDomain::Slow,
+            ),
+            inst(
+                ModuleSpec::Writer {
+                    data: "z".into(),
+                    stream: "s_out_slow".into(),
+                    lanes: 1,
+                    elems: n,
+                    bytes_per_cycle: 4,
+                },
+                ClockDomain::Slow,
+            ),
+        ],
+        channels: vec![
+            chan("s_in", false),
+            chan("s_in_fast", bare_fast),
+            chan("s_out", bare_fast),
+            chan("s_out_slow", false),
+        ],
+        pump: bare_fast.then_some((2, PumpMode::BareFast)),
+        domain_modes: if bare_fast { vec![(2, PumpMode::BareFast)] } else { vec![] },
+        arrays: vec![("x".into(), n, 0), ("z".into(), n, 1)],
+        repeat: 1,
+        slr_replicas: 1,
+        cl0_request_mhz: None,
+    }
+}
+
+#[test]
+fn bare_fast_recovers_ii2_to_effective_ii1_with_zero_gearboxes() {
+    // The PR's acceptance criterion: a bare-fast factor-2 domain around
+    // an II=2 pipeline — no issuer, no packer, widths untouched — must
+    // simulate at effective II=1: one result per *slow* cycle, half the
+    // slow-cycle count of the identical single-clock twin.
+    use temporal_vec::codegen::ModuleSpec;
+    let n = 1 << 12;
+    let mut rng = Rng::new(41);
+    let x = rng.f32_vec(n);
+    let run = |bare_fast: bool| {
+        let d = ii2_pipeline(bare_fast, n);
+        assert!(
+            !d.modules.iter().any(|m| matches!(
+                m.spec,
+                ModuleSpec::Issuer { .. } | ModuleSpec::Packer { .. }
+            )),
+            "bare-fast crossings must be gearbox-free"
+        );
+        let mut hbm = Hbm::new();
+        hbm.load("x", x.clone());
+        run_exact(&d, hbm, 10_000_000).unwrap()
+    };
+    let (bare, slow) = (run(true), run(false));
+    // the datapath is untouched, so outputs are identical
+    assert_eq!(bare.hbm.read("z"), slow.hbm.read("z"));
+    assert_eq!(&bare.hbm.read("z")[..n], &x[..]);
+    // effective II=1: ~one txn per slow cycle end to end
+    assert!(
+        (bare.stats.slow_cycles as f64) < 1.25 * n as f64,
+        "bare-fast: {} slow cycles for {n} txns (want ~{n})",
+        bare.stats.slow_cycles
+    );
+    let ratio = slow.stats.slow_cycles as f64 / bare.stats.slow_cycles as f64;
+    assert!(
+        (1.8..2.2).contains(&ratio),
+        "II recovery ratio {ratio:.3} (slow {} vs bare-fast {})",
+        slow.stats.slow_cycles,
+        bare.stats.slow_cycles
+    );
+}
+
+#[test]
+fn bare_fast_design_agrees_across_exact_engines() {
+    // the event engine's skip-ahead must pace a gearbox-free fast
+    // domain exactly like the cycle-by-cycle reference stepper
+    let n = 1 << 10;
+    let mut rng = Rng::new(42);
+    let mut hbm = Hbm::new();
+    hbm.load("x", rng.f32_vec(n));
+    let d = ii2_pipeline(true, n);
+    exact_engines_agree(&d, hbm, 10_000_000, &["z"]).unwrap();
+}
+
+#[test]
+fn fw_bare_fast_compiles_gearbox_free_and_preserves_results() {
+    // end-to-end through the real pipeline: Floyd–Warshall (dependent
+    // scalar datapath, II = 21) accepts bare-fast pumping, lowers with
+    // zero width-converter modules, doubles simulated throughput, and
+    // computes bit-identical shortest paths
+    use temporal_vec::codegen::ModuleSpec;
+    use temporal_vec::ir::ClockDomain;
+    let n = 20usize;
+    let d = apps::floyd_warshall::random_graph(n, 77, 0.4);
+    let build = |pump: Option<PumpMode>| {
+        let mut spec = BuildSpec::new(apps::floyd_warshall::build()).bind("N", n as i64);
+        if let Some(mode) = pump {
+            spec = spec.pumped(2, mode);
+        }
+        compile(spec).unwrap()
+    };
+    let bare = build(Some(PumpMode::BareFast));
+    assert_eq!(bare.design.pump, Some((2, PumpMode::BareFast)));
+    assert_eq!(bare.design.domain_modes, vec![(2, PumpMode::BareFast)]);
+    assert!(
+        !bare.design.modules.iter().any(|m| matches!(
+            m.spec,
+            ModuleSpec::Issuer { .. } | ModuleSpec::Packer { .. }
+        )),
+        "bare-fast FW must carry no issuer/packer gearboxes"
+    );
+    assert!(
+        bare.design
+            .modules
+            .iter()
+            .any(|m| m.domain == ClockDomain::Fast { factor: 2 }),
+        "the FW core must sit in the fast domain"
+    );
+    // throughput mode needs gearboxes for the same factor — the
+    // hardware delta bare-fast eliminates
+    let throughput = build(Some(PumpMode::Throughput));
+    assert!(throughput.design.modules.iter().any(|m| matches!(
+        m.spec,
+        ModuleSpec::Issuer { .. } | ModuleSpec::Packer { .. }
+    )));
+
+    let run = |c: &Compiled| {
+        let mut hbm = Hbm::new();
+        hbm.load("dist", d.clone());
+        run_exact(&c.design, hbm, 50_000_000).unwrap()
+    };
+    let (base, fast) = (run(&build(None)), run(&bare));
+    assert_eq!(base.hbm.read("dist"), fast.hbm.read("dist"));
+    assert_eq!(fast.hbm.read("dist"), apps::floyd_warshall::reference(&d, n).as_slice());
+    let speedup = base.stats.slow_cycles as f64 / fast.stats.slow_cycles as f64;
+    assert!(
+        (1.6..2.2).contains(&speedup),
+        "bare-fast FW speedup {speedup:.3} (base {} vs fast {})",
+        base.stats.slow_cycles,
+        fast.stats.slow_cycles
+    );
+}
+
 #[test]
 fn short_input_reads_zero_fill() {
     // reader beyond the loaded data pads with zeros rather than UB
