@@ -1,0 +1,157 @@
+//! Stable, machine-readable diagnostics.
+//!
+//! Every design-rule failure — from the static checker *and* from
+//! `ir::validate` — carries a stable `TVxxx` code, a severity, and the
+//! offending node/stream name. Tests, CI greps and downstream tooling
+//! match on the code, never on the prose, so messages can be reworded
+//! freely without breaking anything.
+//!
+//! Code ranges:
+//!
+//! * `TV001`–`TV099` — design-rule checker ([`super::check`]):
+//!   CDC structure, width conservation, rate balance, FIFO sizing,
+//!   post-transform mode legality;
+//! * `TV101`–`TV199` — structural IR validation
+//!   ([`crate::ir::validate`]).
+
+use crate::util::table::Table;
+
+/// Severity of a diagnostic. Errors fail `tvec check` (nonzero exit)
+/// and reject DSE candidates; warnings are advisory.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warn",
+        }
+    }
+}
+
+// -- checker codes (TV0xx) ------------------------------------------------
+
+/// A stream connects two clock treatments with no plumbing between.
+pub const TV001_CROSSING_UNPLUMBED: &str = "TV001";
+/// Packer set wrong at a crossing (missing / spurious / wrong factor).
+pub const TV002_PACKER_SET: &str = "TV002";
+/// Issuer set wrong at a crossing (missing / spurious / wrong factor).
+pub const TV003_ISSUER_SET: &str = "TV003";
+/// Bits-in != bits-out across a packer/issuer/synchronizer.
+pub const TV004_WIDTH_CONSERVATION: &str = "TV004";
+/// A bare-fast region contains a gearbox (must cross gearlessly).
+pub const TV005_BAREFAST_GEARBOX: &str = "TV005";
+/// A bare-fast region contains a non-dependent (II = 1) module.
+pub const TV006_BAREFAST_NOT_DEPENDENT: &str = "TV006";
+/// A throughput-mode region has no external feed to widen.
+pub const TV007_THROUGHPUT_NO_FEED: &str = "TV007";
+/// Steady-state token rates disagree on a channel.
+pub const TV008_RATE_MISMATCH: &str = "TV008";
+/// A token ratio does not divide — a partial-transaction wedge.
+pub const TV009_PARTIAL_TRANSACTION: &str = "TV009";
+/// A channel with no producer or no consumer.
+pub const TV010_DANGLING_CHANNEL: &str = "TV010";
+/// FIFO capacity below the minimum safe depth.
+pub const TV011_FIFO_UNDERSIZED: &str = "TV011";
+/// FIFO capacity more than 4x over the provisioning budget.
+pub const TV012_FIFO_OVERPROVISIONED: &str = "TV012";
+
+// -- validator codes (TV1xx) ----------------------------------------------
+
+/// An edge endpoint is out of range.
+pub const TV101_DANGLING_EDGE: &str = "TV101";
+/// A memlet names an undeclared container.
+pub const TV102_UNDECLARED_CONTAINER: &str = "TV102";
+/// Map params/ranges arity mismatch.
+pub const TV103_MAP_ARITY: &str = "TV103";
+/// Map entry/exit pairing broken.
+pub const TV104_MAP_PAIRING: &str = "TV104";
+/// A tasklet connector is unconnected.
+pub const TV105_UNCONNECTED_CONNECTOR: &str = "TV105";
+/// An access node moves a foreign (non-stream) container.
+pub const TV106_FOREIGN_CONTAINER: &str = "TV106";
+/// The graph contains a cycle.
+pub const TV107_GRAPH_CYCLE: &str = "TV107";
+/// A map parameter shadows a program symbol.
+pub const TV108_PARAM_SHADOWING: &str = "TV108";
+
+/// One design-rule failure, pinned to a stable code and a location.
+#[derive(Clone, PartialEq, Debug)]
+pub struct Diagnostic {
+    /// Stable code (`TV011`-style) — the only thing tests match on.
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Offending node / stream / channel name.
+    pub loc: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, loc: impl Into<String>, message: impl Into<String>) -> Self {
+        Diagnostic { code, severity: Severity::Error, loc: loc.into(), message: message.into() }
+    }
+
+    pub fn warning(code: &'static str, loc: impl Into<String>, message: impl Into<String>) -> Self {
+        Diagnostic { code, severity: Severity::Warning, loc: loc.into(), message: message.into() }
+    }
+
+    pub fn is_error(&self) -> bool {
+        self.severity == Severity::Error
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {} `{}`: {}", self.code, self.severity.name(), self.loc, self.message)
+    }
+}
+
+/// Render diagnostics as the aligned ASCII table `tvec check` prints
+/// (shared formatter with every other report — `util::table`).
+pub fn render_table(title: &str, diags: &[Diagnostic]) -> String {
+    let mut t = Table::new(title, &["code", "severity", "location", "message"]);
+    for d in diags {
+        t.row(vec![
+            d.code.to_string(),
+            d.severity.name().to_string(),
+            d.loc.clone(),
+            d.message.clone(),
+        ]);
+    }
+    let errors = diags.iter().filter(|d| d.is_error()).count();
+    let warnings = diags.len() - errors;
+    t.footnote(format!("{errors} error(s), {warnings} warning(s)"));
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_leads_with_code() {
+        let d = Diagnostic::error(TV011_FIFO_UNDERSIZED, "x_to_vadd", "depth 1 below minimum 4");
+        assert_eq!(format!("{d}"), "TV011 error `x_to_vadd`: depth 1 below minimum 4");
+        assert!(d.is_error());
+        let w = Diagnostic::warning(TV010_DANGLING_CHANNEL, "s", "no consumer");
+        assert!(!w.is_error());
+        assert_eq!(format!("{w}"), "TV010 warn `s`: no consumer");
+    }
+
+    #[test]
+    fn table_renders_rows_and_counts() {
+        let diags = vec![
+            Diagnostic::error(TV008_RATE_MISMATCH, "a", "8 tokens vs 4"),
+            Diagnostic::warning(TV012_FIFO_OVERPROVISIONED, "b", "depth 4096 over budget 64"),
+        ];
+        let r = render_table("design-rule check: demo", &diags);
+        assert!(r.contains("design-rule check: demo"));
+        assert!(r.contains("TV008"));
+        assert!(r.contains("TV012"));
+        assert!(r.contains("note: 1 error(s), 1 warning(s)"), "{r}");
+    }
+}

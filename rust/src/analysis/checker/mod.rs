@@ -1,0 +1,145 @@
+//! Static design-rule checker: CDC structure + deadlock freedom.
+//!
+//! The multi-pumping transform (DESIGN.md §12) injects packers,
+//! issuers and synchronizers whose correctness used to be guarded only
+//! dynamically — the exact simulator discovered a bad crossing or an
+//! undersized FIFO as a runtime deadlock. This pass makes those
+//! invariants static properties of the transformed [`Sdfg`] and its
+//! lowered [`Design`] (after the HLS transformation-catalog view,
+//! arXiv 1805.08288):
+//!
+//! * [`rules`] — graph-level structure: every clock-domain crossing
+//!   carries exactly the gearbox set the gear-ratio table requires,
+//!   widths are conserved across every gearbox, and region modes are
+//!   re-checked post-transform (TV001–TV007);
+//! * [`rates`] — design-level steady-state token-rate propagation and
+//!   minimum-safe FIFO depths (TV008–TV012);
+//! * [`diag`] — the stable `TVxxx` diagnostic vocabulary and the
+//!   shared table renderer.
+//!
+//! Entry point: [`check`], used by the `tvec check` CLI subcommand and
+//! as the pre-simulation gate inside `dse::Evaluator`.
+//!
+//! Soundness contract (pinned by `tests/properties.rs`): a design the
+//! checker passes never deadlocks in `sim::run_exact`, and every
+//! simulator-reported deadlock carries at least one checker error.
+
+pub mod diag;
+pub mod rates;
+pub mod rules;
+
+pub use diag::{render_table, Diagnostic, Severity};
+
+use crate::codegen::design::Design;
+use crate::ir::Sdfg;
+
+/// The outcome of a design-rule check: every diagnostic, sorted by
+/// (code, location, message) so output is stable across runs.
+#[derive(Clone, Debug)]
+pub struct CheckReport {
+    pub diags: Vec<Diagnostic>,
+}
+
+impl CheckReport {
+    pub fn errors(&self) -> usize {
+        self.diags.iter().filter(|d| d.is_error()).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diags.len() - self.errors()
+    }
+
+    /// No errors (warnings allowed) — the gate `dse` and `tvec check`
+    /// pass/fail on.
+    pub fn is_clean(&self) -> bool {
+        self.errors() == 0
+    }
+
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.diags.iter().find(|d| d.is_error())
+    }
+
+    /// The aligned diagnostics table `tvec check` prints.
+    pub fn render(&self, title: &str) -> String {
+        diag::render_table(title, &self.diags)
+    }
+}
+
+/// Run every design rule over a transformed graph and its lowered
+/// design.
+pub fn check(sdfg: &Sdfg, design: &Design) -> CheckReport {
+    let mut diags = rules::check_structure(sdfg);
+    diags.extend(rates::check_rates(design));
+    diags.sort_by(|a, b| {
+        (a.code, &a.loc, &a.message).cmp(&(b.code, &b.loc, &b.message))
+    });
+    CheckReport { diags }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::coordinator::pipeline::{compile_staged, BuildSpec};
+    use crate::ir::PumpMode;
+
+    fn checked(spec: BuildSpec) -> CheckReport {
+        let c = compile_staged(spec).unwrap();
+        check(&c.sdfg, &c.design)
+    }
+
+    #[test]
+    fn compiled_vecadd_is_clean_across_modes() {
+        let n = 1 << 12;
+        let base = || BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(3);
+        for (label, spec) in [
+            ("plain", base().vectorized("vadd", 8)),
+            ("resource", base().vectorized("vadd", 8).pumped(2, PumpMode::Resource)),
+            ("throughput", base().vectorized("vadd", 4).pumped(4, PumpMode::Throughput)),
+        ] {
+            let r = checked(spec);
+            assert!(
+                r.diags.is_empty(),
+                "{label} vecadd must be checker-silent, got: {:?}",
+                r.diags
+            );
+            assert!(r.is_clean() && r.first_error().is_none());
+        }
+    }
+
+    #[test]
+    fn golden_check_table() {
+        let report = CheckReport {
+            diags: vec![Diagnostic::error(
+                diag::TV011_FIFO_UNDERSIZED,
+                "s_fast",
+                "depth 1 below minimum 4",
+            )],
+        };
+        let expect = "\
+design-rule check: demo
++-------+----------+----------+-------------------------+
+| code  | severity | location | message                 |
++-------+----------+----------+-------------------------+
+| TV011 | error    | s_fast   | depth 1 below minimum 4 |
++-------+----------+----------+-------------------------+
+note: 1 error(s), 0 warning(s)
+";
+        assert_eq!(report.render("design-rule check: demo"), expect);
+    }
+
+    #[test]
+    fn report_sorts_and_counts() {
+        let mut diags = vec![
+            Diagnostic::warning(diag::TV012_FIFO_OVERPROVISIONED, "b", "big"),
+            Diagnostic::error(diag::TV008_RATE_MISMATCH, "a", "off"),
+        ];
+        diags.sort_by(|a, b| (a.code, &a.loc).cmp(&(b.code, &b.loc)));
+        let r = CheckReport { diags };
+        assert_eq!(r.errors(), 1);
+        assert_eq!(r.warnings(), 1);
+        assert!(!r.is_clean());
+        assert_eq!(r.first_error().unwrap().code, "TV008");
+        assert_eq!(r.diags[0].code, "TV008", "errors sort before the TV012 warn");
+    }
+}

@@ -1,0 +1,498 @@
+//! Steady-state token-rate balance and FIFO sizing over the lowered
+//! design's channel graph — the static deadlock-freedom analysis
+//! (after the PPN channel-sizing analyses, arXiv 1801.04821).
+//!
+//! Every module constrains the number of transactions its channels
+//! carry per graph repetition:
+//!
+//! * hard counts — readers/writers (`elems`), compute (`iterations`),
+//!   the behavioural cores (problem size / lanes);
+//! * ratios — synchronizer 1:1, issuer 1:`factor`, packer
+//!   `lanes`-driven (it accumulates narrow lanes until a wide
+//!   transaction fills, exactly like the simulator's runtime).
+//!
+//! Propagating the hard counts through the ratios to a fixpoint either
+//! assigns every reachable channel a consistent token count or exposes
+//! a mismatch ([`TV008`]) / a non-integral ratio ([`TV009`]) — the two
+//! static signatures of a runtime deadlock or wedge. On top of the
+//! rates, each channel's FIFO capacity is compared against the minimum
+//! safe depth (see [`min_depth`]) and a provisioning budget.
+
+use super::diag::{
+    Diagnostic, TV008_RATE_MISMATCH, TV009_PARTIAL_TRANSACTION, TV010_DANGLING_CHANNEL,
+    TV011_FIFO_UNDERSIZED, TV012_FIFO_OVERPROVISIONED,
+};
+use crate::codegen::design::{Design, ModuleInst, ModuleSpec};
+
+/// Burst slack: transactions of headroom a channel needs per unit of
+/// rate imbalance so cross-domain jitter can never wedge the handshake.
+const SLACK: usize = 4;
+
+/// Peak transactions per *slow* cycle a module moves through one of its
+/// ports. Full-rate ports run at their domain's clock ratio; the
+/// wide sides of gearboxes and both sides of a synchronizer exchange at
+/// most one transaction per slow cycle by construction (§12).
+fn port_rate(m: &ModuleInst, chan: &str) -> usize {
+    let f = m.domain.factor();
+    match &m.spec {
+        ModuleSpec::Sync { .. } => 1,
+        ModuleSpec::Issuer { input, .. } if input == chan => 1,
+        ModuleSpec::Packer { output, .. } if output == chan => 1,
+        _ => f,
+    }
+}
+
+/// Minimum safe FIFO depth for a channel whose producer/consumer peak
+/// port rates are `rp`/`rc` (tokens per slow cycle):
+/// `SLACK x max(1, ceil(rc / rp))`. A rate-balanced channel needs only
+/// the constant slack; a channel feeding a fast consumer from a
+/// once-per-slow-cycle source must buffer a slow cycle's worth of
+/// fast-side demand or the consumer stalls into the crossing handshake.
+fn min_depth(rp: usize, rc: usize) -> usize {
+    SLACK * 1.max(rc.div_ceil(rp.max(1)))
+}
+
+/// One hard token count: `channel` carries exactly `tokens` per rep.
+struct Hard {
+    chan: usize,
+    tokens: u128,
+    by: String,
+}
+
+/// One ratio constraint: `tokens[a] * ma == tokens[b] * mb`.
+struct Ratio {
+    a: usize,
+    ma: u128,
+    b: usize,
+    mb: u128,
+    by: String,
+}
+
+/// Run the rate/depth rules over a lowered design.
+pub fn check_rates(design: &Design) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let chan_idx = |name: &str| design.channels.iter().position(|c| c.name == name);
+    // the controller's pseudo-channels have no data-plane endpoints and
+    // carry one token per repetition by construction — exempt throughout
+    let is_ctrl = |name: &str| name.starts_with("__ctrl");
+
+    // -- collect constraints ----------------------------------------------
+    let mut hard: Vec<Hard> = Vec::new();
+    let mut ratios: Vec<Ratio> = Vec::new();
+    let fraction = |num: usize, den: usize, chan: &str, by: &str, diags: &mut Vec<Diagnostic>| {
+        if den == 0 || num % den != 0 {
+            diags.push(Diagnostic::error(
+                TV009_PARTIAL_TRANSACTION,
+                chan.to_string(),
+                format!("{by} needs {num}/{den} transactions — a partial transaction wedges"),
+            ));
+            None
+        } else {
+            Some((num / den) as u128)
+        }
+    };
+    for m in &design.modules {
+        let label = m.spec.label();
+        match &m.spec {
+            ModuleSpec::Reader { stream, elems, .. }
+            | ModuleSpec::Writer { stream, elems, .. } => {
+                if let Some(c) = chan_idx(stream) {
+                    hard.push(Hard { chan: c, tokens: *elems as u128, by: label.clone() });
+                }
+            }
+            ModuleSpec::Compute { inputs, output, iterations, .. } => {
+                for (s, _) in inputs {
+                    if let Some(c) = chan_idx(s) {
+                        hard.push(Hard { chan: c, tokens: *iterations as u128, by: label.clone() });
+                    }
+                }
+                if let Some(c) = chan_idx(&output.0) {
+                    hard.push(Hard { chan: c, tokens: *iterations as u128, by: label.clone() });
+                }
+            }
+            ModuleSpec::Sync { input, output } => {
+                if is_ctrl(input) || is_ctrl(output) {
+                    continue;
+                }
+                if let (Some(a), Some(b)) = (chan_idx(input), chan_idx(output)) {
+                    ratios.push(Ratio { a, ma: 1, b, mb: 1, by: label.clone() });
+                }
+            }
+            ModuleSpec::Issuer { input, output, factor } => {
+                // one wide in -> `factor` narrow out
+                if let (Some(a), Some(b)) = (chan_idx(input), chan_idx(output)) {
+                    ratios.push(Ratio { a, ma: *factor as u128, b, mb: 1, by: label.clone() });
+                }
+            }
+            ModuleSpec::Packer { input, output, .. } => {
+                // lanes-driven: narrow lanes accumulate until a wide
+                // transaction fills (the runtime ignores `factor` too)
+                if let (Some(a), Some(b)) = (chan_idx(input), chan_idx(output)) {
+                    let (la, lb) =
+                        (design.channels[a].lanes as u128, design.channels[b].lanes as u128);
+                    ratios.push(Ratio { a, ma: la, b, mb: lb.max(1), by: label.clone() });
+                }
+            }
+            ModuleSpec::GemmCore { a, b, c, n, m: mm, k, lanes, .. } => {
+                for (stream, scalars) in [(a, n * k), (b, k * mm)] {
+                    if let Some(ci) = chan_idx(stream) {
+                        let l = design.channels[ci].lanes;
+                        if let Some(t) = fraction(scalars, l, stream, &label, &mut diags) {
+                            hard.push(Hard { chan: ci, tokens: t, by: label.clone() });
+                        }
+                    }
+                }
+                if let Some(ci) = chan_idx(c) {
+                    if let Some(t) = fraction(n * mm, *lanes, c, &label, &mut diags) {
+                        hard.push(Hard { chan: ci, tokens: t, by: label.clone() });
+                    }
+                }
+            }
+            ModuleSpec::StencilCore { input, output, nx, ny, nz, lanes, .. } => {
+                let total = nx * ny * nz;
+                for stream in [input, output] {
+                    if let Some(ci) = chan_idx(stream) {
+                        if let Some(t) = fraction(total, *lanes, stream, &label, &mut diags) {
+                            hard.push(Hard { chan: ci, tokens: t, by: label.clone() });
+                        }
+                    }
+                }
+            }
+            ModuleSpec::FwCore { input, output, n, .. } => {
+                // n*n single-element transactions stream through per
+                // outer (repeat) iteration, whatever the feed width
+                for stream in [input, output] {
+                    if let Some(ci) = chan_idx(stream) {
+                        hard.push(Hard { chan: ci, tokens: (n * n) as u128, by: label.clone() });
+                    }
+                }
+            }
+        }
+    }
+
+    // -- solve to fixpoint -------------------------------------------------
+    let mut tokens: Vec<Option<u128>> = vec![None; design.channels.len()];
+    let mut setter: Vec<String> = vec![String::new(); design.channels.len()];
+    for h in &hard {
+        match tokens[h.chan] {
+            None => {
+                tokens[h.chan] = Some(h.tokens);
+                setter[h.chan] = h.by.clone();
+            }
+            Some(t) if t != h.tokens => diags.push(Diagnostic::error(
+                TV008_RATE_MISMATCH,
+                design.channels[h.chan].name.clone(),
+                format!(
+                    "`{}` moves {} transactions/rep but `{}` expects {t}",
+                    h.by, h.tokens, setter[h.chan]
+                ),
+            )),
+            Some(_) => {}
+        }
+    }
+    let mut bad_ratio = vec![false; ratios.len()];
+    loop {
+        let mut changed = false;
+        for (i, r) in ratios.iter().enumerate() {
+            if bad_ratio[i] {
+                continue;
+            }
+            let derive = |t: u128, mul: u128, div: u128| -> Result<u128, ()> {
+                let prod = t.checked_mul(mul).ok_or(())?;
+                if div == 0 || prod % div != 0 {
+                    return Err(());
+                }
+                Ok(prod / div)
+            };
+            match (tokens[r.a], tokens[r.b]) {
+                (Some(ta), None) => match derive(ta, r.ma, r.mb) {
+                    Ok(tb) => {
+                        tokens[r.b] = Some(tb);
+                        setter[r.b] = r.by.clone();
+                        changed = true;
+                    }
+                    Err(()) => {
+                        bad_ratio[i] = true;
+                        diags.push(Diagnostic::error(
+                            TV009_PARTIAL_TRANSACTION,
+                            design.channels[r.b].name.clone(),
+                            format!(
+                                "`{}` turns {ta} transactions into {ta}x{}/{} — a partial \
+                                 transaction wedges",
+                                r.by, r.ma, r.mb
+                            ),
+                        ));
+                    }
+                },
+                (None, Some(tb)) => match derive(tb, r.mb, r.ma) {
+                    Ok(ta) => {
+                        tokens[r.a] = Some(ta);
+                        setter[r.a] = r.by.clone();
+                        changed = true;
+                    }
+                    Err(()) => {
+                        bad_ratio[i] = true;
+                        diags.push(Diagnostic::error(
+                            TV009_PARTIAL_TRANSACTION,
+                            design.channels[r.a].name.clone(),
+                            format!(
+                                "`{}` needs {tb}x{}/{} input transactions — a partial \
+                                 transaction wedges",
+                                r.by, r.mb, r.ma
+                            ),
+                        ));
+                    }
+                },
+                _ => {}
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    for (i, r) in ratios.iter().enumerate() {
+        if bad_ratio[i] {
+            continue;
+        }
+        if let (Some(ta), Some(tb)) = (tokens[r.a], tokens[r.b]) {
+            if ta.checked_mul(r.ma) != tb.checked_mul(r.mb) {
+                diags.push(Diagnostic::error(
+                    TV008_RATE_MISMATCH,
+                    design.channels[r.b].name.clone(),
+                    format!(
+                        "`{}` cannot balance: `{}` carries {ta} transactions/rep (per `{}`) \
+                         vs `{}` {tb} (per `{}`)",
+                        r.by,
+                        design.channels[r.a].name,
+                        setter[r.a],
+                        design.channels[r.b].name,
+                        setter[r.b]
+                    ),
+                ));
+            }
+        }
+    }
+
+    // -- endpoint / depth rules --------------------------------------------
+    for ch in design.channels.iter() {
+        if is_ctrl(&ch.name) {
+            continue;
+        }
+        let prods: Vec<&ModuleInst> = design
+            .modules
+            .iter()
+            .filter(|m| m.spec.outputs().iter().any(|s| s == &ch.name))
+            .collect();
+        let cons: Vec<&ModuleInst> = design
+            .modules
+            .iter()
+            .filter(|m| m.spec.inputs().iter().any(|s| s == &ch.name))
+            .collect();
+        if prods.is_empty() || cons.is_empty() {
+            diags.push(Diagnostic::warning(
+                TV010_DANGLING_CHANNEL,
+                ch.name.clone(),
+                format!(
+                    "dangling channel: {} producer(s), {} consumer(s)",
+                    prods.len(),
+                    cons.len()
+                ),
+            ));
+            continue;
+        }
+        let rp = prods.iter().map(|m| port_rate(m, &ch.name)).max().unwrap_or(1);
+        let rc = cons.iter().map(|m| port_rate(m, &ch.name)).max().unwrap_or(1);
+        let need = min_depth(rp, rc);
+        if ch.depth < need {
+            diags.push(Diagnostic::error(
+                TV011_FIFO_UNDERSIZED,
+                ch.name.clone(),
+                format!(
+                    "capacity {} below minimum safe depth {need} (producer {rp} : consumer \
+                     {rc} tokens/slow-cycle)",
+                    ch.depth
+                ),
+            ));
+        }
+        // provisioning budget: 4x the domain-scaled slack — always at
+        // least 4x the minimum safe depth, so the two rules never chase
+        // each other
+        let fmax = prods
+            .iter()
+            .chain(cons.iter())
+            .map(|m| m.domain.factor())
+            .max()
+            .unwrap_or(1);
+        let budget = 4 * SLACK * fmax;
+        if ch.depth > budget {
+            diags.push(Diagnostic::warning(
+                TV012_FIFO_OVERPROVISIONED,
+                ch.name.clone(),
+                format!(
+                    "capacity {} exceeds 4x the provisioning budget ({budget}) — dead BRAM",
+                    ch.depth
+                ),
+            ));
+        }
+    }
+
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::design::ChannelSpec;
+    use crate::hw::ResourceVec;
+    use crate::ir::ClockDomain;
+
+    fn chan(name: &str, lanes: usize, depth: usize) -> ChannelSpec {
+        ChannelSpec { name: name.into(), lanes, depth, crosses_domains: false }
+    }
+
+    fn inst(spec: ModuleSpec) -> ModuleInst {
+        ModuleInst { spec, domain: ClockDomain::Slow, resources: ResourceVec::ZERO }
+    }
+
+    fn reader(stream: &str, lanes: usize, elems: usize) -> ModuleInst {
+        inst(ModuleSpec::Reader {
+            data: "x".into(),
+            stream: stream.into(),
+            lanes,
+            elems,
+            bytes_per_cycle: 64,
+        })
+    }
+
+    fn writer(stream: &str, lanes: usize, elems: usize) -> ModuleInst {
+        inst(ModuleSpec::Writer {
+            data: "z".into(),
+            stream: stream.into(),
+            lanes,
+            elems,
+            bytes_per_cycle: 64,
+        })
+    }
+
+    fn design(channels: Vec<ChannelSpec>, modules: Vec<ModuleInst>) -> Design {
+        Design {
+            name: "t".into(),
+            modules,
+            channels,
+            pump: None,
+            domain_modes: vec![],
+            arrays: vec![],
+            repeat: 1,
+            slr_replicas: 1,
+            cl0_request_mhz: None,
+        }
+    }
+
+    fn only(diags: Vec<Diagnostic>, code: &str) {
+        assert_eq!(diags.len(), 1, "expected exactly one diagnostic, got {diags:?}");
+        assert_eq!(diags[0].code, code, "{diags:?}");
+    }
+
+    #[test]
+    fn tv008_rate_mismatch() {
+        // writer wants more transactions than the reader produces — the
+        // exact static signature of the simulator's deadlock oracle
+        let d = design(
+            vec![chan("s", 1, 16)],
+            vec![reader("s", 1, 8), writer("s", 1, 12)],
+        );
+        only(check_rates(&d), "TV008");
+    }
+
+    #[test]
+    fn tv009_partial_transaction() {
+        // 2 narrow txns x 3 lanes = 6 elements never fill wide txns of
+        // 4 lanes evenly: 6/4 wedges the packer half-full (the open
+        // `w` tail also warns TV010 — the only other finding)
+        let d = design(
+            vec![chan("n", 3, 16), chan("w", 4, 16)],
+            vec![
+                reader("n", 3, 2),
+                inst(ModuleSpec::Packer { input: "n".into(), output: "w".into(), factor: 2 }),
+            ],
+        );
+        let diags = check_rates(&d);
+        let errors: Vec<_> = diags.iter().filter(|g| g.is_error()).collect();
+        assert_eq!(errors.len(), 1, "{diags:?}");
+        assert_eq!(errors[0].code, "TV009", "{diags:?}");
+        assert!(
+            diags.iter().all(|g| g.code == "TV009" || g.code == "TV010"),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn tv008_ratio_conflict_with_both_ends_pinned() {
+        // both packer ends hard-constrained to counts the lanes ratio
+        // cannot reconcile: 2x3 elements in vs 1x4 out
+        let d = design(
+            vec![chan("n", 3, 16), chan("w", 4, 16)],
+            vec![
+                reader("n", 3, 2),
+                inst(ModuleSpec::Packer { input: "n".into(), output: "w".into(), factor: 2 }),
+                writer("w", 4, 1),
+            ],
+        );
+        only(check_rates(&d), "TV008");
+    }
+
+    #[test]
+    fn tv010_dangling_channel_warns() {
+        let d = design(vec![chan("s", 1, 16)], vec![reader("s", 1, 8)]);
+        let diags = check_rates(&d);
+        only(diags.clone(), "TV010");
+        assert!(!diags[0].is_error(), "dangling is advisory: {diags:?}");
+    }
+
+    #[test]
+    fn tv011_undersized_fifo() {
+        let d = design(
+            vec![chan("s", 1, 1)],
+            vec![reader("s", 1, 8), writer("s", 1, 8)],
+        );
+        only(check_rates(&d), "TV011");
+    }
+
+    #[test]
+    fn tv012_overprovisioned_fifo() {
+        let d = design(
+            vec![chan("s", 1, 1000)],
+            vec![reader("s", 1, 8), writer("s", 1, 8)],
+        );
+        let diags = check_rates(&d);
+        only(diags.clone(), "TV012");
+        assert!(!diags[0].is_error(), "overprovision is advisory: {diags:?}");
+    }
+
+    #[test]
+    fn issuer_and_sync_ratios_balance() {
+        // reader -> sync -> issuer(x4) -> writer: 4 wide in, 16 narrow out
+        let d = design(
+            vec![chan("s", 4, 16), chan("s_cdc", 4, 16), chan("s_fast", 1, 16)],
+            vec![
+                reader("s", 4, 4),
+                inst(ModuleSpec::Sync { input: "s".into(), output: "s_cdc".into() }),
+                inst(ModuleSpec::Issuer {
+                    input: "s_cdc".into(),
+                    output: "s_fast".into(),
+                    factor: 4,
+                }),
+                writer("s_fast", 1, 16),
+            ],
+        );
+        assert!(check_rates(&d).is_empty());
+    }
+
+    #[test]
+    fn min_depth_scales_with_consumer_demand() {
+        assert_eq!(min_depth(1, 1), SLACK);
+        assert_eq!(min_depth(4, 4), SLACK); // rate-matched fast channel
+        assert_eq!(min_depth(1, 4), 4 * SLACK); // slow feed, fast drain
+        assert_eq!(min_depth(4, 1), SLACK); // backpressure, not deadlock
+    }
+}

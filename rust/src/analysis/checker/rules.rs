@@ -1,0 +1,502 @@
+//! Structural design rules over the transformed SDFG: CDC plumbing
+//! shape, width conservation, and post-transform mode legality.
+//!
+//! The rules re-derive, from first principles, what a *correct*
+//! multi-pumping rewrite must have produced — mirroring the gear-ratio
+//! table of DESIGN.md §12: every clock-domain crossing carries a
+//! synchronizer, a packer iff the producer side's gear ratio exceeds 1,
+//! and an issuer iff the consumer side's does. Gear per mode: resource
+//! → the pump factor; throughput → the factor on external streams
+//! (reader/writer-facing) and 1 on interior ones; bare-fast → always 1.
+//! Two regions count as one domain exactly when their `RegionPump`s are
+//! equal — same factor at a different mode is still a crossing.
+
+use super::diag::{
+    Diagnostic, TV001_CROSSING_UNPLUMBED, TV002_PACKER_SET, TV003_ISSUER_SET,
+    TV004_WIDTH_CONSERVATION, TV005_BAREFAST_GEARBOX, TV006_BAREFAST_NOT_DEPENDENT,
+    TV007_THROUGHPUT_NO_FEED,
+};
+use crate::ir::{
+    CdcKind, ContainerKind, LibraryOp, MapSchedule, MultipumpInfo, Node, NodeId, PumpMode,
+    RegionPump, Sdfg,
+};
+use std::collections::BTreeMap;
+
+/// Index of the pumped region containing `id`, if any.
+fn region_of(mp: &MultipumpInfo, id: NodeId) -> Option<usize> {
+    mp.regions.iter().position(|r| r.nodes.contains(&id))
+}
+
+/// The pump treatment a node presents on its streams (`None` = CL0).
+fn pump_of(g: &Sdfg, id: NodeId) -> Option<RegionPump> {
+    let mp = g.multipump.as_ref()?;
+    let r = &mp.regions[region_of(mp, id)?];
+    Some(RegionPump::new(r.factor, r.mode))
+}
+
+/// Is this node a compute-side anchor (part of some streamable region,
+/// pumped or not)? Readers, writers and plain accesses are the CL0
+/// "external world" instead — the distinction `CrossingSide::of` calls
+/// `external` and throughput mode's gear ratio hinges on.
+fn is_compute(n: &Node) -> bool {
+    matches!(
+        n,
+        Node::MapEntry { .. } | Node::MapExit { .. } | Node::Tasklet(_) | Node::Library { .. }
+    )
+}
+
+/// The gear ratio a side's gearbox must convert (1 = no gearbox) —
+/// the checker's copy of the transform's `CrossingSide::of`.
+fn expected_gear(pump: Option<RegionPump>, peer_external: bool) -> usize {
+    match pump {
+        None => 1,
+        Some(p) => match p.mode {
+            PumpMode::Resource => p.factor,
+            PumpMode::Throughput if peer_external => p.factor,
+            PumpMode::Throughput | PumpMode::BareFast => 1,
+        },
+    }
+}
+
+/// Module-level producers/consumers of every stream container, from
+/// the edges at each stream's access node plus the explicit stream
+/// fields of reader/writer/CDC nodes.
+#[allow(clippy::type_complexity)]
+fn stream_endpoints(g: &Sdfg) -> (BTreeMap<String, Vec<NodeId>>, BTreeMap<String, Vec<NodeId>>) {
+    let mut producers: BTreeMap<String, Vec<NodeId>> = BTreeMap::new();
+    let mut consumers: BTreeMap<String, Vec<NodeId>> = BTreeMap::new();
+    let is_stream = |name: &str| {
+        g.container(name).map(|d| d.kind == ContainerKind::Stream).unwrap_or(false)
+    };
+    for e in &g.edges {
+        let d = &e.memlet.data;
+        if !is_stream(d) {
+            continue;
+        }
+        if matches!(g.node(e.dst), Node::Access { data } if data == d) {
+            producers.entry(d.clone()).or_default().push(e.src);
+        }
+        if matches!(g.node(e.src), Node::Access { data } if data == d) {
+            consumers.entry(d.clone()).or_default().push(e.dst);
+        }
+    }
+    for id in g.node_ids() {
+        match g.node(id) {
+            Node::Reader { stream, .. } => producers.entry(stream.clone()).or_default().push(id),
+            Node::Writer { stream, .. } => consumers.entry(stream.clone()).or_default().push(id),
+            Node::Cdc { input, output, .. } => {
+                consumers.entry(input.clone()).or_default().push(id);
+                producers.entry(output.clone()).or_default().push(id);
+            }
+            _ => {}
+        }
+    }
+    for m in [&mut producers, &mut consumers] {
+        for v in m.values_mut() {
+            v.sort();
+            v.dedup();
+        }
+    }
+    (producers, consumers)
+}
+
+/// Lanes of a stream container (None when undeclared — the validator's
+/// problem, not ours).
+fn lanes_of(g: &Sdfg, s: &str) -> Option<usize> {
+    g.container(s).map(|d| d.vtype.lanes)
+}
+
+/// Run every SDFG-level rule. Returns diagnostics in discovery order
+/// (the caller sorts for stable output).
+pub fn check_structure(g: &Sdfg) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let (producers, consumers) = stream_endpoints(g);
+    let first_module =
+        |m: &BTreeMap<String, Vec<NodeId>>, s: &str| -> Option<NodeId> {
+            m.get(s)?.iter().find(|id| !g.node(**id).is_cdc()).copied()
+        };
+
+    // TV001 — a stream may not connect two clock treatments directly:
+    // whenever both module endpoints are visible (no plumbing on
+    // either side), their region pumps must agree. Same factor at a
+    // different mode is still a crossing.
+    for (s, prods) in &producers {
+        let (Some(p), Some(c)) = (
+            prods.iter().find(|id| !g.node(**id).is_cdc()),
+            consumers.get(s).and_then(|v| v.iter().find(|id| !g.node(**id).is_cdc())),
+        ) else {
+            continue;
+        };
+        let (pp, pc) = (pump_of(g, *p), pump_of(g, *c));
+        if pp != pc {
+            let show = |p: Option<RegionPump>| {
+                p.map(|p| p.tag()).unwrap_or_else(|| "slow".to_string())
+            };
+            diags.push(Diagnostic::error(
+                TV001_CROSSING_UNPLUMBED,
+                s.clone(),
+                format!(
+                    "stream connects clock treatment {} (`{}`) to {} (`{}`) with no \
+                     synchronizer between",
+                    show(pp),
+                    g.node(*p).label(),
+                    show(pc),
+                    g.node(*c).label(),
+                ),
+            ));
+        }
+    }
+
+    // TV002/TV003 — walk each synchronizer's crossing chain
+    // `[packer]? — sync — [issuer]?` and compare the gearbox set
+    // against the gear the region modes require. Also record which
+    // throughput regions see an external feed (for TV007).
+    let nregions =
+        g.multipump.as_ref().map(|mp| mp.regions.len()).unwrap_or(0);
+    let mut throughput_fed = vec![false; nregions];
+    for id in g.node_ids() {
+        let Node::Cdc { name: sync_name, kind: CdcKind::Synchronizer, input, output, .. } =
+            g.node(id)
+        else {
+            continue;
+        };
+        let packer = g.node_ids().find_map(|p| match g.node(p) {
+            Node::Cdc { name, kind: CdcKind::Packer, input: pin, output: pout, factor }
+                if pout == input =>
+            {
+                Some((name.clone(), pin.clone(), *factor))
+            }
+            _ => None,
+        });
+        let issuer = g.node_ids().find_map(|p| match g.node(p) {
+            Node::Cdc { name, kind: CdcKind::Issuer, input: iin, output: iout, factor }
+                if iin == output =>
+            {
+                Some((name.clone(), iout.clone(), *factor))
+            }
+            _ => None,
+        });
+        let head = packer.as_ref().map(|(_, pin, _)| pin.as_str()).unwrap_or(input);
+        let tail = issuer.as_ref().map(|(_, iout, _)| iout.as_str()).unwrap_or(output);
+        let src = first_module(&producers, head);
+        let dst = first_module(&consumers, tail);
+        let (src_pump, dst_pump) =
+            (src.and_then(|n| pump_of(g, n)), dst.and_then(|n| pump_of(g, n)));
+        let src_external = src.map(|n| !is_compute(g.node(n))).unwrap_or(true);
+        let dst_external = dst.map(|n| !is_compute(g.node(n))).unwrap_or(true);
+        // equal treatments need no crossing at all: expect no gearboxes
+        let (want_src, want_dst) = if src_pump == dst_pump {
+            (1, 1)
+        } else {
+            (expected_gear(src_pump, dst_external), expected_gear(dst_pump, src_external))
+        };
+        match (&packer, want_src) {
+            (None, g_) if g_ > 1 => diags.push(Diagnostic::error(
+                TV002_PACKER_SET,
+                sync_name.clone(),
+                format!("crossing on `{head}` needs a packer (gear {g_}) but has none"),
+            )),
+            (Some((name, _, f)), g_) if *f != g_ && g_ > 1 => diags.push(Diagnostic::error(
+                TV002_PACKER_SET,
+                name.clone(),
+                format!("packer factor {f} but the producer side's gear ratio is {g_}"),
+            )),
+            (Some((name, _, _)), 1) => diags.push(Diagnostic::error(
+                TV002_PACKER_SET,
+                name.clone(),
+                format!("spurious packer on `{head}`: the producer side crosses gearlessly"),
+            )),
+            _ => {}
+        }
+        match (&issuer, want_dst) {
+            (None, g_) if g_ > 1 => diags.push(Diagnostic::error(
+                TV003_ISSUER_SET,
+                sync_name.clone(),
+                format!("crossing on `{tail}` needs an issuer (gear {g_}) but has none"),
+            )),
+            (Some((name, _, f)), g_) if *f != g_ && g_ > 1 => diags.push(Diagnostic::error(
+                TV003_ISSUER_SET,
+                name.clone(),
+                format!("issuer factor {f} but the consumer side's gear ratio is {g_}"),
+            )),
+            (Some((name, _, _)), 1) => diags.push(Diagnostic::error(
+                TV003_ISSUER_SET,
+                name.clone(),
+                format!("spurious issuer on `{tail}`: the consumer side crosses gearlessly"),
+            )),
+            _ => {}
+        }
+        // external feed bookkeeping for throughput regions
+        if let Some(mp) = g.multipump.as_ref() {
+            if let (Some(p), true) = (src, dst_external) {
+                if let Some(ri) = region_of(mp, p) {
+                    throughput_fed[ri] = true;
+                }
+            }
+            if let (Some(c), true) = (dst, src_external) {
+                if let Some(ri) = region_of(mp, c) {
+                    throughput_fed[ri] = true;
+                }
+            }
+        }
+    }
+
+    // TV004 — width conservation across every gearbox and synchronizer:
+    // bits-in must equal bits-out per slow-cycle transaction group.
+    for id in g.node_ids() {
+        let Node::Cdc { name, kind, input, output, factor } = g.node(id) else {
+            continue;
+        };
+        let (Some(wi), Some(wo)) = (lanes_of(g, input), lanes_of(g, output)) else {
+            continue;
+        };
+        let (eff_in, eff_out, law) = match kind {
+            // packer: `factor` narrow in per wide out
+            CdcKind::Packer => (wi * factor, wo, "lanes-in x factor == lanes-out"),
+            // issuer: one wide in per `factor` narrow out
+            CdcKind::Issuer => (wi, wo * factor, "lanes-in == lanes-out x factor"),
+            CdcKind::Synchronizer => (wi, wo, "lanes-in == lanes-out"),
+        };
+        if eff_in != eff_out {
+            diags.push(Diagnostic::error(
+                TV004_WIDTH_CONSERVATION,
+                name.clone(),
+                format!(
+                    "width not conserved: `{input}` ({wi} lanes) vs `{output}` ({wo} lanes) \
+                     at factor {factor} violates {law}"
+                ),
+            ));
+        }
+    }
+
+    // TV005/TV006/TV007 — post-transform mode legality per region.
+    if let Some(mp) = g.multipump.as_ref() {
+        for (ri, r) in mp.regions.iter().enumerate() {
+            match r.mode {
+                PumpMode::BareFast => {
+                    for &n in &r.nodes {
+                        match g.node(n) {
+                            // bare-fast crosses gearlessly by definition
+                            Node::Cdc { name, kind, .. }
+                                if *kind != CdcKind::Synchronizer =>
+                            {
+                                diags.push(Diagnostic::error(
+                                    TV005_BAREFAST_GEARBOX,
+                                    name.clone(),
+                                    format!(
+                                        "bare-fast region (M={}) contains a {} gearbox — \
+                                         widths must stay unchanged",
+                                        r.factor,
+                                        kind.name()
+                                    ),
+                                ));
+                            }
+                            // the fast clock only pays off on II > 1
+                            // anchors; II = 1 pipelines gain nothing and
+                            // break the mode's timing contract
+                            Node::MapEntry { name, schedule, .. }
+                                if *schedule != MapSchedule::Sequential =>
+                            {
+                                diags.push(Diagnostic::error(
+                                    TV006_BAREFAST_NOT_DEPENDENT,
+                                    name.clone(),
+                                    format!(
+                                        "bare-fast region (M={}) contains a non-dependent \
+                                         {:?}-scheduled map",
+                                        r.factor, schedule
+                                    ),
+                                ));
+                            }
+                            Node::Library { name, op }
+                                if !matches!(op, LibraryOp::FloydWarshall { .. }) =>
+                            {
+                                diags.push(Diagnostic::error(
+                                    TV006_BAREFAST_NOT_DEPENDENT,
+                                    name.clone(),
+                                    format!(
+                                        "bare-fast region (M={}) contains the feed-forward \
+                                         (II = 1) datapath `{}`",
+                                        r.factor,
+                                        op.name()
+                                    ),
+                                ));
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                PumpMode::Throughput => {
+                    if !throughput_fed[ri] {
+                        diags.push(Diagnostic::error(
+                            TV007_THROUGHPUT_NO_FEED,
+                            format!("region[{ri}]"),
+                            format!(
+                                "throughput region (M={}) has no external feed: no crossing \
+                                 faces a CL0 reader/writer, so there is no interface to widen",
+                                r.factor
+                            ),
+                        ));
+                    }
+                }
+                PumpMode::Resource => {}
+            }
+        }
+    }
+
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::memlet::Memlet;
+    use crate::ir::tasklet::{TaskExpr, Tasklet};
+    use crate::ir::types::{ContainerKind, DType, DataDecl, Storage, VecType};
+    use crate::ir::{MultipumpInfo, PumpedRegion};
+    use crate::symbolic::{Expr, Range, Subset};
+
+    fn stream(name: &str, lanes: usize) -> DataDecl {
+        DataDecl {
+            name: name.into(),
+            kind: ContainerKind::Stream,
+            vtype: VecType::of(DType::F32, lanes),
+            shape: vec![],
+            storage: Storage::Stream { depth: 16 },
+            transient: true,
+        }
+    }
+
+    fn tasklet(name: &str) -> Node {
+        Node::Tasklet(Tasklet::new(name, vec![("out", TaskExpr::input("in"))]))
+    }
+
+    fn pop(d: &str) -> Memlet {
+        Memlet::new(d, Subset::index1(Expr::int(0)))
+    }
+
+    fn region(factor: usize, mode: PumpMode, nodes: Vec<NodeId>) -> MultipumpInfo {
+        MultipumpInfo { regions: vec![PumpedRegion { factor, mode, nodes }] }
+    }
+
+    fn only(diags: Vec<Diagnostic>, code: &str) {
+        assert_eq!(diags.len(), 1, "expected exactly one diagnostic, got {diags:?}");
+        assert_eq!(diags[0].code, code, "{diags:?}");
+    }
+
+    #[test]
+    fn tv001_unplumbed_crossing() {
+        let mut g = Sdfg::new("t");
+        g.declare(stream("s", 4));
+        let p = g.add_node(tasklet("prod"));
+        let acc = g.add_node(Node::Access { data: "s".into() });
+        let c = g.add_node(tasklet("cons"));
+        g.add_edge(p, acc, pop("s"));
+        g.add_edge(acc, c, pop("s"));
+        // producer pumped, consumer left slow, no synchronizer between
+        g.multipump = Some(region(2, PumpMode::Resource, vec![p]));
+        only(check_structure(&g), "TV001");
+    }
+
+    #[test]
+    fn tv002_missing_packer() {
+        let mut g = Sdfg::new("t");
+        g.declare(stream("s_fast", 4));
+        g.declare(stream("s", 4));
+        let p = g.add_node(tasklet("prod"));
+        let acc = g.add_node(Node::Access { data: "s_fast".into() });
+        let sync = g.add_node(Node::Cdc {
+            name: "sync_s".into(),
+            kind: CdcKind::Synchronizer,
+            input: "s_fast".into(),
+            output: "s".into(),
+            factor: 2,
+        });
+        g.add_node(Node::Writer { name: "write_z".into(), data: "z".into(), stream: "s".into() });
+        g.add_edge(p, acc, pop("s_fast"));
+        g.add_edge(acc, sync, pop("s_fast"));
+        // resource region leaving the domain must pack x2, but doesn't
+        g.multipump = Some(region(2, PumpMode::Resource, vec![p]));
+        only(check_structure(&g), "TV002");
+    }
+
+    #[test]
+    fn tv003_wrong_issuer_factor() {
+        let mut g = Sdfg::new("t");
+        g.declare(stream("s", 8));
+        g.declare(stream("s_cdc", 8));
+        g.declare(stream("s_fast", 2));
+        g.add_node(Node::Reader { name: "read_x".into(), data: "x".into(), stream: "s".into() });
+        g.add_node(Node::Cdc {
+            name: "sync_s".into(),
+            kind: CdcKind::Synchronizer,
+            input: "s".into(),
+            output: "s_cdc".into(),
+            factor: 2,
+        });
+        g.add_node(Node::Cdc {
+            name: "issue_s".into(),
+            kind: CdcKind::Issuer,
+            input: "s_cdc".into(),
+            output: "s_fast".into(),
+            factor: 4, // region gear is 2 — wrong, though width-consistent
+        });
+        let acc = g.add_node(Node::Access { data: "s_fast".into() });
+        let c = g.add_node(tasklet("cons"));
+        g.add_edge(acc, c, pop("s_fast"));
+        g.multipump = Some(region(2, PumpMode::Resource, vec![c]));
+        only(check_structure(&g), "TV003");
+    }
+
+    #[test]
+    fn tv004_width_not_conserved() {
+        let mut g = Sdfg::new("t");
+        g.declare(stream("a", 4));
+        g.declare(stream("b", 4));
+        // a packer that claims x2 but keeps the width: 256 bits in, 128 out
+        g.add_node(Node::Cdc {
+            name: "pack_a".into(),
+            kind: CdcKind::Packer,
+            input: "a".into(),
+            output: "b".into(),
+            factor: 2,
+        });
+        only(check_structure(&g), "TV004");
+    }
+
+    #[test]
+    fn tv005_gearbox_in_barefast_region() {
+        let mut g = Sdfg::new("t");
+        g.declare(stream("a", 2));
+        g.declare(stream("b", 4));
+        let p = g.add_node(Node::Cdc {
+            name: "pack_a".into(),
+            kind: CdcKind::Packer,
+            input: "a".into(),
+            output: "b".into(),
+            factor: 2, // width-consistent, so only the mode rule fires
+        });
+        g.multipump = Some(region(2, PumpMode::BareFast, vec![p]));
+        only(check_structure(&g), "TV005");
+    }
+
+    #[test]
+    fn tv006_barefast_region_not_dependent() {
+        let mut g = Sdfg::new("t");
+        let me = g.add_node(Node::MapEntry {
+            name: "m".into(),
+            params: vec!["i".into()],
+            ranges: vec![Range::upto(4)],
+            schedule: MapSchedule::Pipeline, // II = 1: bare-fast gains nothing
+        });
+        g.multipump = Some(region(2, PumpMode::BareFast, vec![me]));
+        only(check_structure(&g), "TV006");
+    }
+
+    #[test]
+    fn tv007_throughput_region_without_feed() {
+        let mut g = Sdfg::new("t");
+        let t = g.add_node(tasklet("interior"));
+        g.multipump = Some(region(2, PumpMode::Throughput, vec![t]));
+        only(check_structure(&g), "TV007");
+    }
+}

@@ -16,11 +16,19 @@
 //! * [`vectorizability`] — the traditional SIMD conditions and the
 //!   *relaxed temporal* conditions (internal sequential dependencies
 //!   allowed; only data-dependent external I/O is disqualifying).
+//!
+//! Plus the post-transform design-rule checker:
+//!
+//! * [`checker`] — static CDC-structure + deadlock-freedom rules over
+//!   a transformed graph and its lowered design, with stable `TVxxx`
+//!   diagnostics (`tvec check`, and the dse pre-simulation gate).
 
+pub mod checker;
 pub mod movement;
 pub mod streamability;
 pub mod vectorizability;
 
+pub use checker::{check, CheckReport, Diagnostic, Severity};
 pub use movement::{scope_movement, ScopeMovement};
 pub use streamability::{partition_streamable, streamable_between, StreamRegion, Streamability};
 pub use vectorizability::{check_temporal, check_traditional, Vectorizability};

@@ -52,9 +52,11 @@ use crate::codegen::DesignReport;
 /// the cached base-graph hash; v4 made pump assignments mode-carrying
 /// (`pp=` gained bare-fast `b`, `pr=` entries became `<factor><mode>`
 /// like `2t`), which changed both the `pr=` value encoding and the
-/// fingerprint tags, so v3 records could never hit again. Older files
-/// cold-start with the schema-mismatch reason.
-pub const SCHEMA_VERSION: u32 = 4;
+/// fingerprint tags, so v3 records could never hit again; v5 added the
+/// design-rule checker gate, whose `check`-kind failures old readers
+/// would reject as a bad failure kind. Older files cold-start with the
+/// schema-mismatch reason.
+pub const SCHEMA_VERSION: u32 = 5;
 
 /// File name inside a `--cache-dir`.
 pub const FILE_NAME: &str = "dse_cache.tsv";
@@ -307,6 +309,7 @@ fn decode_record(line: &str) -> Result<(u64, Result<Evaluation, EvalError>), Str
             let kind = match get("kind")? {
                 "legality" => FailKind::Legality,
                 "compile" => FailKind::Compile,
+                "check" => FailKind::Check,
                 other => return Err(format!("bad failure kind '{other}'")),
             };
             let message = unescape(get("msg")?)?;
@@ -506,6 +509,10 @@ mod tests {
             Err(EvalError::legality("N = 100 does not divide by 8")),
         );
         m.insert(0xbeef, Err(EvalError::compile("lowering exploded %\t weirdly")));
+        m.insert(
+            0xfeed,
+            Err(EvalError::check("TV011 error `s_fast`: capacity 1 below minimum safe depth 4")),
+        );
         m
     }
 
@@ -587,10 +594,11 @@ mod tests {
 
     #[test]
     fn old_version_stores_cold_start_with_printed_reason() {
-        // v1 (pre-mixed-factors), v2 (pre-rekeyed-fingerprint) and v3
-        // (pre-mode-carrying-pumps) stores must load cold with the
-        // schema-mismatch reason, never misparse or silently never-hit
-        for old in ["v1", "v2", "v3"] {
+        // v1 (pre-mixed-factors), v2 (pre-rekeyed-fingerprint), v3
+        // (pre-mode-carrying-pumps) and v4 (pre-checker-gate) stores
+        // must load cold with the schema-mismatch reason, never
+        // misparse or silently never-hit
+        for old in ["v1", "v2", "v3", "v4"] {
             let path = tmp_path(&format!("{old}-upgrade"));
             std::fs::write(
                 &path,
@@ -600,10 +608,10 @@ mod tests {
             )
             .unwrap();
             let loaded = load(&path);
-            assert!(loaded.entries.is_empty(), "{old} entries must not half-load into v4");
+            assert!(loaded.entries.is_empty(), "{old} entries must not half-load into v5");
             let reason = loaded.cold_reason.expect("cold start has a reason");
             assert!(reason.contains("schema mismatch") && reason.contains(old), "{reason}");
-            assert!(reason.contains("v4"), "{reason}");
+            assert!(reason.contains("v5"), "{reason}");
             let _ = std::fs::remove_file(&path);
         }
     }

@@ -37,14 +37,17 @@ use super::pareto::resource_score;
 use super::space::DesignPoint;
 
 /// Why a cached candidate failed: rejected by a legality check
-/// (transform precondition, indivisible binding) or by a genuine
-/// compile error in lowering. Reports and `--verify` keep the two
-/// apart — a legality rejection is expected pruning, a compile error
-/// is a bug surface.
+/// (transform precondition, indivisible binding), by a genuine
+/// compile error in lowering, or by the static design-rule checker
+/// (`analysis::checker`) after a successful compile. Reports and
+/// `--verify` keep the three apart — a legality rejection is expected
+/// pruning, a compile error is a bug surface, and a checker rejection
+/// is a design that would deadlock or wedge in simulation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FailKind {
     Legality,
     Compile,
+    Check,
 }
 
 impl FailKind {
@@ -52,6 +55,7 @@ impl FailKind {
         match self {
             FailKind::Legality => "legality",
             FailKind::Compile => "compile",
+            FailKind::Check => "check",
         }
     }
 }
@@ -71,6 +75,10 @@ impl EvalError {
 
     pub fn compile(message: impl Into<String>) -> EvalError {
         EvalError { kind: FailKind::Compile, message: message.into() }
+    }
+
+    pub fn check(message: impl Into<String>) -> EvalError {
+        EvalError { kind: FailKind::Check, message: message.into() }
     }
 }
 
@@ -202,6 +210,22 @@ fn classify(e: StagedError) -> EvalError {
     }
 }
 
+/// Pre-simulation gate: run the static design-rule checker over the
+/// compiled candidate and reject it before it ever reaches the rate
+/// model or the exact simulator. The checker is ~free next to a
+/// compile, and a rejected design is one that would deadlock or wedge
+/// — pricing it would poison the Pareto front.
+fn design_rule_gate(c: &Compiled) -> Result<(), EvalError> {
+    let report = crate::analysis::checker::check(&c.sdfg, &c.design);
+    match report.first_error() {
+        None => Ok(()),
+        Some(first) => Err(EvalError::check(format!(
+            "{first} (+{} more error(s))",
+            report.errors() - 1
+        ))),
+    }
+}
+
 /// Compile and price one candidate; `flops` is the workload size the
 /// throughput axis is derived from.
 pub fn evaluate_point(
@@ -211,6 +235,7 @@ pub fn evaluate_point(
 ) -> Result<Evaluation, EvalError> {
     let spec = point.apply_to(base);
     let c = compile_staged(spec).map_err(classify)?;
+    design_rule_gate(&c)?;
     Ok(finish_evaluation(c, point, flops))
 }
 
@@ -481,6 +506,7 @@ impl Evaluator {
                 match &ev {
                     Ok(_) => "new_compile",
                     Err(e) if e.kind == FailKind::Legality => "legality",
+                    Err(e) if e.kind == FailKind::Check => "checker_reject",
                     Err(_) => "compile_fail",
                 },
             );
@@ -536,6 +562,7 @@ impl Evaluator {
             Err(e) => return Err(classify(e.clone())),
             Ok(p) => compile_from_prefix_observed(p, &spec, self.probe()).map_err(classify)?,
         };
+        design_rule_gate(&c)?;
         Ok(finish_evaluation(c, point, flops))
     }
 

@@ -132,14 +132,17 @@ pub struct SearchOutcome {
     pub illegal: usize,
     /// Candidates that failed with a genuine compile error.
     pub compile_failed: usize,
+    /// Candidates that compiled but were rejected by the static
+    /// design-rule checker (would deadlock or wedge in simulation).
+    pub checker_rejected: usize,
     /// True when the budget truncated the sweep.
     pub truncated: bool,
 }
 
 impl SearchOutcome {
-    /// Total candidates that did not evaluate, either kind.
+    /// Total candidates that did not evaluate, any kind.
     pub fn infeasible(&self) -> usize {
-        self.illegal + self.compile_failed
+        self.illegal + self.compile_failed + self.checker_rejected
     }
 }
 
@@ -149,6 +152,7 @@ struct WalkStats {
     issued: usize,
     illegal: usize,
     compile_failed: usize,
+    checker_rejected: usize,
     truncated: bool,
 }
 
@@ -157,6 +161,7 @@ impl WalkStats {
         match e.kind {
             FailKind::Legality => self.illegal += 1,
             FailKind::Compile => self.compile_failed += 1,
+            FailKind::Check => self.checker_rejected += 1,
         }
     }
 }
@@ -212,6 +217,7 @@ pub fn run_search(
     let mut evaluated = 0usize;
     let mut illegal = 0usize;
     let mut compile_failed = 0usize;
+    let mut checker_rejected = 0usize;
     let mut truncated = false;
     // candidates the stochastic strategies endorse over the plain
     // rank-selection (halving's robust winner)
@@ -255,6 +261,7 @@ pub fn run_search(
                 Err(err) => match err.kind {
                     FailKind::Legality => illegal += 1,
                     FailKind::Compile => compile_failed += 1,
+                    FailKind::Check => checker_rejected += 1,
                 },
             }
         }
@@ -384,6 +391,7 @@ pub fn run_search(
         evaluated += stats.issued;
         illegal += stats.illegal;
         compile_failed += stats.compile_failed;
+        checker_rejected += stats.checker_rejected;
         truncated |= stats.truncated;
         evaluations.extend(evs);
         if let Some(mut w) = winner {
@@ -430,6 +438,7 @@ pub fn run_search(
         evaluated,
         illegal,
         compile_failed,
+        checker_rejected,
         truncated,
     })
 }

@@ -2,55 +2,78 @@
 //!
 //! Run before and after every transformation (the pass manager calls
 //! [`validate`]) so a rewrite can never silently corrupt the graph.
+//!
+//! Failures carry the stable `TV1xx` codes from
+//! [`crate::analysis::checker::diag`] and render through the same
+//! [`Diagnostic`] shape as `tvec check`, so validator and checker
+//! output is uniform and tests match on code, never on prose.
 
 use super::graph::{NodeId, Sdfg};
 use super::node::Node;
+use crate::analysis::checker::diag::{
+    Diagnostic, TV101_DANGLING_EDGE, TV102_UNDECLARED_CONTAINER, TV103_MAP_ARITY,
+    TV104_MAP_PAIRING, TV105_UNCONNECTED_CONNECTOR, TV106_FOREIGN_CONTAINER, TV107_GRAPH_CYCLE,
+    TV108_PARAM_SHADOWING,
+};
 
-/// A validation failure with its location.
+/// A validation failure with its stable code and location.
 ///
 /// (Hand-rolled `Display`/`Error` impls — `thiserror` is unavailable in
 /// the offline build environment, DESIGN.md §4.)
 #[derive(Clone, Debug)]
 pub struct ValidationError {
     pub sdfg: String,
+    /// Stable `TV1xx` diagnostic code — what tests match on.
+    pub code: &'static str,
     pub loc: String,
     pub reason: String,
 }
 
+impl ValidationError {
+    /// The shared diagnostic shape (always an error: structural
+    /// validation has no advisory findings).
+    pub fn diagnostic(&self) -> Diagnostic {
+        Diagnostic::error(self.code, self.loc.clone(), self.reason.clone())
+    }
+}
+
 impl std::fmt::Display for ValidationError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "validation of '{}' failed at {}: {}",
-            self.sdfg, self.loc, self.reason
-        )
+        write!(f, "validation of '{}' failed: {}", self.sdfg, self.diagnostic())
     }
 }
 
 impl std::error::Error for ValidationError {}
 
-fn err(g: &Sdfg, loc: impl Into<String>, reason: impl Into<String>) -> ValidationError {
-    ValidationError { sdfg: g.name.clone(), loc: loc.into(), reason: reason.into() }
+fn err(
+    g: &Sdfg,
+    code: &'static str,
+    loc: impl Into<String>,
+    reason: impl Into<String>,
+) -> ValidationError {
+    ValidationError { sdfg: g.name.clone(), code, loc: loc.into(), reason: reason.into() }
 }
 
 /// Validate graph structure. Checks:
-/// 1. every edge endpoint exists and every memlet names a declared
-///    container;
-/// 2. every map entry has exactly one matching exit (and vice versa);
-/// 3. tasklet input/output connectors are all connected;
+/// 1. every edge endpoint exists (`TV101`) and every memlet names a
+///    declared container (`TV102`);
+/// 2. every map entry has exactly one matching exit and vice versa
+///    (`TV103`/`TV104`);
+/// 3. tasklet input/output connectors are all connected (`TV105`);
 /// 4. access nodes to `Array` containers are sources/sinks of memlets
-///    naming that container;
-/// 5. the graph is acyclic;
-/// 6. map parameters do not shadow program symbols.
+///    naming that container (`TV106`);
+/// 5. the graph is acyclic (`TV107`);
+/// 6. map parameters do not shadow program symbols (`TV108`).
 pub fn validate(g: &Sdfg) -> Result<(), ValidationError> {
     // 1. memlets name declared containers
     for (i, e) in g.edges.iter().enumerate() {
         if e.src.0 >= g.nodes.len() || e.dst.0 >= g.nodes.len() {
-            return Err(err(g, format!("edge {i}"), "dangling endpoint"));
+            return Err(err(g, TV101_DANGLING_EDGE, format!("edge {i}"), "dangling endpoint"));
         }
         if !g.containers.contains_key(&e.memlet.data) {
             return Err(err(
                 g,
+                TV102_UNDECLARED_CONTAINER,
                 format!("edge {i}"),
                 format!("memlet names undeclared container '{}'", e.memlet.data),
             ));
@@ -64,6 +87,7 @@ pub fn validate(g: &Sdfg) -> Result<(), ValidationError> {
                 if params.len() != ranges.len() {
                     return Err(err(
                         g,
+                        TV103_MAP_ARITY,
                         format!("map '{name}'"),
                         "params/ranges arity mismatch",
                     ));
@@ -75,6 +99,7 @@ pub fn validate(g: &Sdfg) -> Result<(), ValidationError> {
                 if exits.len() != 1 {
                     return Err(err(
                         g,
+                        TV104_MAP_PAIRING,
                         format!("map '{name}'"),
                         format!("{} exits (expected 1)", exits.len()),
                     ));
@@ -84,6 +109,7 @@ pub fn validate(g: &Sdfg) -> Result<(), ValidationError> {
                     if g.symbols.contains(p) {
                         return Err(err(
                             g,
+                            TV108_PARAM_SHADOWING,
                             format!("map '{name}'"),
                             format!("parameter '{p}' shadows a program symbol"),
                         ));
@@ -94,6 +120,7 @@ pub fn validate(g: &Sdfg) -> Result<(), ValidationError> {
                 if g.find_map_entry(entry).is_none() {
                     return Err(err(
                         g,
+                        TV104_MAP_PAIRING,
                         format!("exit of '{entry}'"),
                         "no matching map entry",
                     ));
@@ -115,6 +142,7 @@ pub fn validate(g: &Sdfg) -> Result<(), ValidationError> {
                 if !in_conns.contains(&need) {
                     return Err(err(
                         g,
+                        TV105_UNCONNECTED_CONNECTOR,
                         format!("tasklet '{}'", t.name),
                         format!("input connector '{need}' unconnected"),
                     ));
@@ -129,6 +157,7 @@ pub fn validate(g: &Sdfg) -> Result<(), ValidationError> {
                 if !out_conns.contains(&need) {
                     return Err(err(
                         g,
+                        TV105_UNCONNECTED_CONNECTOR,
                         format!("tasklet '{}'", t.name),
                         format!("output connector '{need}' unconnected"),
                     ));
@@ -152,6 +181,7 @@ pub fn validate(g: &Sdfg) -> Result<(), ValidationError> {
                     if !is_stream {
                         return Err(err(
                             g,
+                            TV106_FOREIGN_CONTAINER,
                             format!("access '{data}'"),
                             format!("edge moves foreign container '{}'", m.data),
                         ));
@@ -162,7 +192,7 @@ pub fn validate(g: &Sdfg) -> Result<(), ValidationError> {
     }
 
     // 5. acyclic
-    g.topo_order().map_err(|m| err(g, "graph", m))?;
+    g.topo_order().map_err(|m| err(g, TV107_GRAPH_CYCLE, "graph", m))?;
 
     Ok(())
 }
@@ -198,7 +228,7 @@ mod tests {
         b.drain(t, mx, z, "z", elem, all, "out");
         let g = b.finish();
         let e = validate(&g).unwrap_err();
-        assert!(e.reason.contains("'b' unconnected"), "{e}");
+        assert_eq!(e.code, TV105_UNCONNECTED_CONNECTOR, "{e}");
     }
 
     #[test]
@@ -210,7 +240,7 @@ mod tests {
             ..first
         };
         let e = validate(&g).unwrap_err();
-        assert!(e.reason.contains("ghost"), "{e}");
+        assert_eq!(e.code, TV102_UNDECLARED_CONTAINER, "{e}");
     }
 
     #[test]
@@ -226,7 +256,7 @@ mod tests {
             schedule: MapSchedule::Pipeline,
         });
         let e = validate(&g).unwrap_err();
-        assert!(e.reason.contains("0 exits"), "{e}");
+        assert_eq!(e.code, TV104_MAP_PAIRING, "{e}");
     }
 
     #[test]
@@ -242,6 +272,22 @@ mod tests {
         });
         g.add_node(crate::ir::node::Node::MapExit { entry: "m".into() });
         let e = validate(&g).unwrap_err();
-        assert!(e.reason.contains("shadows"), "{e}");
+        assert_eq!(e.code, TV108_PARAM_SHADOWING, "{e}");
+    }
+
+    #[test]
+    fn validation_error_renders_as_diagnostic() {
+        let mut g = vecadd_sdfg(1);
+        let first = g.edges[0].clone();
+        g.edges[0] = crate::ir::graph::Edge {
+            memlet: Memlet::new("ghost", first.memlet.subset.clone()),
+            ..first
+        };
+        let e = validate(&g).unwrap_err();
+        let d = e.diagnostic();
+        assert!(d.is_error());
+        assert_eq!(d.code, "TV102");
+        // uniform rendering: the Display string embeds the diagnostic
+        assert!(format!("{e}").contains(&format!("{d}")), "{e}");
     }
 }

@@ -26,6 +26,7 @@ fn main() {
         .subcommand("dse", "autotune an app over the design space")
         .subcommand("bench", "measure simulator/DSE throughput (BENCH_sim.json)")
         .subcommand("top", "print the top-k stall sources of an app (observed exact sim)")
+        .subcommand("check", "static design-rule check (CDC + deadlock freedom) of an app")
         .subcommand("report", "print the device model (Table 1)")
         .opt_default("seed", "P&R jitter seed", "1")
         .opt(
@@ -33,6 +34,10 @@ fn main() {
             "dse/run/top: write a Chrome trace-event JSON here (+ TELEMETRY.json alongside)",
         )
         .opt_default("topk", "top: stall sources to print", "8")
+        .opt(
+            "clamp-depth",
+            "check: clamp every data channel's FIFO depth (deliberate undersizing fixture)",
+        )
         .opt("config", "experiment config file (see configs/)")
         .opt("pump", "pumping factor for compile/run (e.g. 2)")
         .opt_default("mode", "pump mode: resource|throughput|barefast", "resource")
@@ -87,6 +92,7 @@ fn main() {
         Some("dse") => cmd_dse(&args, seed),
         Some("bench") => cmd_bench(&args, seed),
         Some("top") => cmd_top(&args, seed),
+        Some("check") => cmd_check(&args, seed),
         Some("report") => {
             println!("{}", temporal_vec::coordinator::experiment::table1().rendered);
             Ok(())
@@ -360,6 +366,40 @@ fn cmd_top(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
     println!("{}", temporal_vec::coordinator::stall_report(&rec, k));
     if let Some(path) = args.get("trace-out") {
         write_telemetry(&rec, path)?;
+    }
+    Ok(())
+}
+
+/// `tvec check <app>`: compile the app's golden-scale base and run the
+/// static design-rule checker over the transformed graph and its
+/// lowered design, printing the diagnostics table. Exits nonzero when
+/// any error-severity rule fires. `--clamp-depth N` caps every data
+/// channel's FIFO at N post-lowering — a deliberate undersizing
+/// fixture that must trip `TV011` (CI greps for it).
+fn cmd_check(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), String> {
+    let app = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .or_else(|| args.get("app"))
+        .ok_or("usage: tvec check <app> [--pump 2] [--mode resource] [--clamp-depth 1]")?;
+    let rig = temporal_vec::coordinator::golden_rig(app, seed)?;
+    let mut spec = rig.bases.first().cloned().ok_or("golden rig has no base spec")?;
+    if let Some(f) = args.get_usize("pump") {
+        let mode = parse_mode(args.get_or("mode", "resource"))?;
+        spec = spec.pumped(f, mode);
+    }
+    let c = temporal_vec::coordinator::compile_staged(spec).map_err(|e| e.message)?;
+    let mut design = c.design;
+    if let Some(d) = args.get_usize("clamp-depth") {
+        for ch in design.channels.iter_mut().filter(|ch| !ch.name.starts_with("__ctrl")) {
+            ch.depth = ch.depth.min(d);
+        }
+    }
+    let report = temporal_vec::analysis::checker::check(&c.sdfg, &design);
+    println!("{}", report.render(&format!("design-rule check: {} ({app})", design.name)));
+    if !report.is_clean() {
+        return Err(format!("{} design-rule error(s)", report.errors()));
     }
     Ok(())
 }
@@ -736,12 +776,13 @@ fn run_dse_app(
     }
     println!(
         "evaluations: {} issued ({} cache hits, {} new compiles, {} legality-pruned, \
-         {} compile failures{})",
+         {} compile failures, {} checker-rejected{})",
         outcome.evaluated,
         evaluator.cache_hits() - hits_before,
         evaluator.cache_misses() - misses_before,
         outcome.illegal,
         outcome.compile_failed,
+        outcome.checker_rejected,
         if outcome.truncated { ", budget hit" } else { "" }
     );
 

@@ -548,6 +548,166 @@ fn prop_telemetry_invisible_on_barefast_and_mode_mixed_designs() {
 }
 
 #[test]
+fn prop_checker_clean_designs_never_deadlock() {
+    // soundness contract, forward direction: any randomized design the
+    // static design-rule checker passes — uniform pumped vecadd, mixed
+    // per-region stencil chains, bare-fast FW — must run to completion
+    // in the exact simulator, never deadlock
+    use temporal_vec::analysis::checker::check;
+    use temporal_vec::ir::StencilKind;
+    use temporal_vec::sim::{run_exact_in, Arena};
+    forall("checker-clean-no-deadlock", 0xE1, 9, |g| {
+        let arm = g.usize(0, 3);
+        let (c, hbm, tag) = match arm {
+            0 => {
+                // uniform vecadd: random width and pump mode/factor
+                let lanes = *g.choose(&[2usize, 4, 8]);
+                let pump: Option<(usize, PumpMode)> = match g.usize(0, 4) {
+                    0 => None,
+                    1 => Some((2, PumpMode::Resource)),
+                    2 => Some((2, PumpMode::Throughput)),
+                    _ => Some((4, PumpMode::Resource)),
+                };
+                let pump = match pump {
+                    Some((m, PumpMode::Resource)) if lanes % m != 0 => None,
+                    p => p,
+                };
+                let n = (g.usize(6, 40) * lanes.max(4)) as i64;
+                let mut spec = BuildSpec::new(apps::vecadd::build())
+                    .vectorized("vadd", lanes)
+                    .bind("N", n);
+                if let Some((m, mode)) = pump {
+                    spec = spec.pumped(m, mode);
+                }
+                let c = match compile(spec) {
+                    Ok(c) => c,
+                    Err(_) => return Ok(()), // illegal candidate: vacuous
+                };
+                let mut hbm = Hbm::new();
+                hbm.load("x", g.vec_f32(n as usize));
+                hbm.load("y", g.vec_f32(n as usize));
+                (c, hbm, format!("vecadd lanes {lanes} pump {pump:?} n {n}"))
+            }
+            1 => {
+                // mixed per-region stencil chain
+                let stages = g.usize(2, 4);
+                let factors: Vec<Option<usize>> = (0..stages)
+                    .map(|_| {
+                        let f = *g.choose(&[2usize, 4]);
+                        g.option(f)
+                    })
+                    .collect();
+                let mut spec =
+                    BuildSpec::new(apps::stencil::build(StencilKind::Jacobi3D, stages, 8))
+                        .bind("NX", 8)
+                        .bind("NY", 8)
+                        .bind("NZ", 8)
+                        .bind("NZ_v", 1);
+                if factors.iter().any(|f| f.is_some()) {
+                    spec = spec.pumped_regions(factors.clone());
+                }
+                let c = match compile(spec) {
+                    Ok(c) => c,
+                    Err(_) => return Ok(()),
+                };
+                let mut hbm = Hbm::new();
+                hbm.load("v_in", g.vec_f32(8 * 8 * 8));
+                (c, hbm, format!("stencil stages {stages} factors {factors:?}"))
+            }
+            _ => {
+                // gearbox-free bare-fast FW domain
+                let n = *g.choose(&[8usize, 12, 16]);
+                let c = compile(
+                    BuildSpec::new(apps::floyd_warshall::build())
+                        .bind("N", n as i64)
+                        .pumped(2, PumpMode::BareFast),
+                )
+                .map_err(|e| format!("bare-fast FW must compile: {e}"))?;
+                let mut hbm = Hbm::new();
+                hbm.load("dist", apps::floyd_warshall::random_graph(n, 11, 0.3));
+                (c, hbm, format!("bare-fast FW n {n}"))
+            }
+        };
+        let report = check(&c.sdfg, &c.design);
+        if !report.is_clean() {
+            return Err(format!(
+                "{tag}: checker rejected a compiled design: {}",
+                report.first_error().unwrap()
+            ));
+        }
+        run_exact_in(&c.design, hbm, 10_000_000, &mut Arena::new())
+            .map_err(|e| format!("{tag}: checker-clean design failed in run_exact: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_deadlocks_carry_checker_errors() {
+    // soundness contract, reverse direction: corrupt a compiled design
+    // so its steady-state rates cannot balance (the writer demands
+    // more transactions than the pipeline produces) — every case the
+    // exact simulator reports as deadlocked must carry at least one
+    // checker error, and the rate rule must in fact catch the
+    // corruption statically
+    use temporal_vec::analysis::checker::check;
+    use temporal_vec::codegen::design::ModuleSpec;
+    use temporal_vec::sim::{run_exact_in, Arena};
+    forall("deadlock-implies-error", 0xE2, 8, |g| {
+        let lanes = *g.choose(&[2usize, 4, 8]);
+        let pump = g.bool() && lanes % 2 == 0;
+        let n = (g.usize(6, 30) * lanes) as i64;
+        let mut spec =
+            BuildSpec::new(apps::vecadd::build()).vectorized("vadd", lanes).bind("N", n);
+        if pump {
+            spec = spec.pumped(2, PumpMode::Resource);
+        }
+        let c = match compile(spec) {
+            Ok(c) => c,
+            Err(_) => return Ok(()),
+        };
+        let mut design = c.design;
+        let mut starved = false;
+        for m in &mut design.modules {
+            if let ModuleSpec::Writer { elems, .. } = &mut m.spec {
+                *elems += 10;
+                starved = true;
+            }
+        }
+        if !starved {
+            return Err("vecadd design has no writer to corrupt".into());
+        }
+        let report = check(&c.sdfg, &design);
+        let mut hbm = Hbm::new();
+        hbm.load("x", g.vec_f32(n as usize));
+        hbm.load("y", g.vec_f32(n as usize));
+        match run_exact_in(&design, hbm, 100_000, &mut Arena::new()) {
+            Ok(_) => {
+                return Err(format!(
+                    "starved writer ran to completion (lanes {lanes}, pump {pump}, n {n})"
+                ))
+            }
+            Err(_) => {
+                // the simulator wedged — the checker must have seen it
+                if report.is_clean() {
+                    return Err(format!(
+                        "simulator deadlocked but the checker was silent \
+                         (lanes {lanes}, pump {pump}, n {n})"
+                    ));
+                }
+            }
+        }
+        // and specifically via the rate-balance rule
+        if !report.diags.iter().any(|d| d.code == "TV008") {
+            return Err(format!(
+                "expected TV008 on the starved writer, got: {:?}",
+                report.diags
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_event_engine_is_cycle_exact_on_random_mixed_stencils() {
     // randomized per-region pump assignments over a small jacobi chain:
     // several fast domains at different strides plus CL0 regions in one
