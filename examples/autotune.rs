@@ -141,6 +141,8 @@ fn main() -> Result<(), String> {
             objective: Objective::resource(),
             budget: None,
             seed: 17,
+            deadline_ms: None,
+            sim_cycle_budget: None,
         };
         let before = shared.cache_misses();
         let out = run_search(&shared, &mm_bases, &device, &mm_opts, &cfg)?;

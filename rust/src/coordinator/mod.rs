@@ -10,6 +10,7 @@ pub mod config;
 pub mod experiment;
 pub mod pipeline;
 pub mod report;
+pub mod serve;
 
 pub use autotune::{
     autotune_all, dse_experiment, golden_rig, search_problem, verify_tolerance, DseChoice,
@@ -24,3 +25,4 @@ pub use pipeline::{
     StagedError, StagedPrefix,
 };
 pub use report::stall_report;
+pub use serve::{run_serve, ServeOptions};

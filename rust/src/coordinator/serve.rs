@@ -1,0 +1,460 @@
+//! `tvec dse --serve`: a first-cut DSE serving daemon.
+//!
+//! ROADMAP item "DSE-as-a-service": a long-running process owning one
+//! shared [`Evaluator`] (memo cache + arena pool + optional disk cache
+//! directory) that answers search requests over a Unix domain socket.
+//! The protocol is newline-delimited JSON (NDJSON) — one request
+//! object per line, one response object per line, FIFO per connection
+//! and across connections (the daemon is deliberately single-threaded
+//! at the request level: candidate evaluation inside a request is
+//! already parallel, and serialized requests share the warm cache
+//! perfectly). See DESIGN.md §14 for the protocol and a worked
+//! example.
+//!
+//! Requests:
+//!
+//! ```text
+//! {"op":"search","app":"vecadd","strategy":"exhaustive","budget":30,
+//!  "n":1048576,"seed":9,"deadline_ms":2000,"sim_cycle_budget":50000000}
+//! {"op":"ping"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Only `app` is required for `search`; everything else defaults to the
+//! daemon's own options. Responses carry the full supervision outcome
+//! (`panicked`, `timed_out`, `quarantined` counts) so a client can see
+//! degraded answers for what they are.
+//!
+//! Robustness contract: a panicking request (anywhere outside the
+//! already-supervised candidate evaluations) fails *that request*, not
+//! the daemon; a wedged candidate is reaped by the per-candidate
+//! deadline; SIGTERM or an `{"op":"shutdown"}` request drains, flushes
+//! the disk cache (merging, never compacting) and writes the
+//! `BENCH_serve.json` summary artifact before exiting 0.
+
+use std::io::{ErrorKind, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use crate::dse::{Evaluator, FaultPlan, Objective, SearchConfig, Strategy};
+use crate::hw::Device;
+use crate::util::json::{escape, Json};
+
+/// How often the accept loop polls for shutdown while idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Per-read timeout on an open connection: bounds how long a silent
+/// client can delay the daemon's reaction to SIGTERM.
+const READ_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Daemon configuration (`tvec dse --serve <socket>` plus the flags it
+/// shares with one-shot sweeps).
+pub struct ServeOptions {
+    /// Unix socket path to listen on.
+    pub socket: PathBuf,
+    /// Persistent cache directory shared by every request.
+    pub cache_dir: Option<PathBuf>,
+    /// Default per-candidate wall deadline for requests that don't set
+    /// their own.
+    pub deadline_ms: Option<u64>,
+    /// Default per-candidate slow-cycle budget.
+    pub sim_cycle_budget: Option<u64>,
+    /// Deterministic fault injection (`--inject-faults`).
+    pub faults: Option<FaultPlan>,
+    /// Where the shutdown summary artifact goes.
+    pub bench_out: PathBuf,
+    /// Default RNG seed for requests that don't set their own.
+    pub seed: u64,
+}
+
+impl ServeOptions {
+    pub fn new(socket: impl Into<PathBuf>) -> ServeOptions {
+        ServeOptions {
+            socket: socket.into(),
+            cache_dir: None,
+            deadline_ms: None,
+            sim_cycle_budget: None,
+            faults: None,
+            bench_out: PathBuf::from("BENCH_serve.json"),
+            seed: 9,
+        }
+    }
+}
+
+/// Rolled-up daemon counters for `BENCH_serve.json`.
+#[derive(Default)]
+struct ServeStats {
+    requests: usize,
+    ok: usize,
+    failed: usize,
+    panicked: usize,
+    timed_out: usize,
+}
+
+/// Set by the SIGTERM/SIGINT handler and the `shutdown` op.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_terminate(_sig: i32) {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+extern "C" {
+    // libc's signal(2); declared directly so the crate stays
+    // dependency-free. The handler fn pointer is passed as-is — the
+    // C ABI of `extern "C" fn(i32)` matches `void (*)(int)`.
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+}
+
+/// Bind the daemon socket. A path left behind by a crashed daemon is
+/// detected by a connect probe: nobody answering ⇒ stale ⇒ remove and
+/// rebind; somebody answering ⇒ refuse to double-serve.
+fn bind_socket(path: &Path) -> Result<UnixListener, String> {
+    if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)
+            .map_err(|e| format!("cannot create socket directory {parent:?}: {e}"))?;
+    }
+    if path.exists() {
+        match UnixStream::connect(path) {
+            Ok(_) => {
+                return Err(format!(
+                    "socket {path:?} is already being served; refusing to double-bind"
+                ))
+            }
+            Err(_) => {
+                // stale socket from a dead daemon
+                let _ = std::fs::remove_file(path);
+            }
+        }
+    }
+    UnixListener::bind(path).map_err(|e| format!("cannot bind {path:?}: {e}"))
+}
+
+/// Run the serving daemon until SIGTERM/SIGINT or a `shutdown` request.
+/// Returns only after the cache is flushed and `BENCH_serve.json` is
+/// written — a graceful shutdown is an exit-0 path.
+pub fn run_serve(opts: ServeOptions) -> Result<(), String> {
+    let mut opts = opts;
+    SHUTDOWN.store(false, Ordering::SeqCst);
+    unsafe {
+        signal(SIGTERM, on_terminate);
+        signal(SIGINT, on_terminate);
+    }
+
+    let evaluator = match &opts.cache_dir {
+        Some(dir) => {
+            let ev = Evaluator::with_cache_dir(dir);
+            match ev.cold_reason() {
+                Some(reason) => println!("cache: {reason}"),
+                None => println!(
+                    "cache: loaded {} entries from {}",
+                    ev.loaded_entries(),
+                    dir.display()
+                ),
+            }
+            ev
+        }
+        None => Evaluator::new(),
+    };
+    let evaluator = match opts.faults.take() {
+        Some(p) => evaluator.with_faults(p),
+        None => evaluator,
+    };
+    let device = Device::u280();
+
+    let listener = bind_socket(&opts.socket)?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("cannot set the listener non-blocking: {e}"))?;
+    println!("serve: listening on {}", opts.socket.display());
+
+    let mut stats = ServeStats::default();
+    while !SHUTDOWN.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                if let Err(e) = serve_connection(stream, &evaluator, &device, &opts, &mut stats)
+                {
+                    eprintln!("serve: connection error: {e}");
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => {
+                let _ = std::fs::remove_file(&opts.socket);
+                return Err(format!("accept failed: {e}"));
+            }
+        }
+    }
+
+    // graceful shutdown: flush (merging — a daemon must never truncate
+    // the store it shares with one-shot sweeps), summarize, clean up
+    if opts.cache_dir.is_some() {
+        match evaluator.flush() {
+            Ok(flushed) => println!("cache: flushed {flushed} entries"),
+            Err(e) => eprintln!("warning: cache flush failed: {e}"),
+        }
+    }
+    if let Some(plan) = evaluator.faults() {
+        println!("faults: {}", plan.summary());
+    }
+    write_bench(&opts.bench_out, &stats, &evaluator)?;
+    let _ = std::fs::remove_file(&opts.socket);
+    println!(
+        "serve: handled {} request(s) ({} ok, {} failed); shutting down",
+        stats.requests, stats.ok, stats.failed
+    );
+    Ok(())
+}
+
+/// Handle one client connection: NDJSON lines in, NDJSON lines out,
+/// until the client disconnects or asks for shutdown. A `Vec<u8>`
+/// accumulator does the framing — a read timeout mid-line must not
+/// drop the partial line a buffered reader would have consumed.
+fn serve_connection(
+    stream: UnixStream,
+    evaluator: &Evaluator,
+    device: &Device,
+    opts: &ServeOptions,
+    stats: &mut ServeStats,
+) -> Result<(), String> {
+    let mut stream = stream;
+    stream
+        .set_read_timeout(Some(READ_TIMEOUT))
+        .map_err(|e| format!("cannot set the read timeout: {e}"))?;
+    let mut pending: Vec<u8> = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        // drain complete lines before reading more
+        while let Some(nl) = pending.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = pending.drain(..=nl).collect();
+            let line = String::from_utf8_lossy(&line).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            stats.requests += 1;
+            let (response, shutdown) = handle_request(&line, evaluator, device, opts, stats);
+            stream
+                .write_all(format!("{response}\n").as_bytes())
+                .and_then(|_| stream.flush())
+                .map_err(|e| format!("cannot write the response: {e}"))?;
+            if shutdown {
+                SHUTDOWN.store(true, Ordering::SeqCst);
+                return Ok(());
+            }
+        }
+        if SHUTDOWN.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return Ok(()), // client hung up
+            Ok(n) => pending.extend_from_slice(&buf[..n]),
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                // idle client; keep polling so SIGTERM stays responsive
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(format!("read failed: {e}")),
+        }
+    }
+}
+
+/// Dispatch one request line. Returns `(response_json, shutdown)`.
+fn handle_request(
+    line: &str,
+    evaluator: &Evaluator,
+    device: &Device,
+    opts: &ServeOptions,
+    stats: &mut ServeStats,
+) -> (String, bool) {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => {
+            stats.failed += 1;
+            return (fail("parse", &format!("bad request JSON: {e}")), false);
+        }
+    };
+    match req.get("op").and_then(Json::as_str) {
+        Some("ping") => {
+            stats.ok += 1;
+            (r#"{"ok":true,"op":"ping"}"#.to_string(), false)
+        }
+        Some("shutdown") => {
+            stats.ok += 1;
+            (r#"{"ok":true,"op":"shutdown"}"#.to_string(), true)
+        }
+        Some("search") => {
+            let resp = handle_search(&req, evaluator, device, opts, stats);
+            match resp {
+                Ok(r) => {
+                    stats.ok += 1;
+                    (r, false)
+                }
+                Err(e) => {
+                    stats.failed += 1;
+                    (fail("search", &e), false)
+                }
+            }
+        }
+        Some(other) => {
+            stats.failed += 1;
+            (
+                fail("unknown", &format!("unknown op '{other}' (search|ping|shutdown)")),
+                false,
+            )
+        }
+        None => {
+            stats.failed += 1;
+            (fail("unknown", "request has no \"op\" field"), false)
+        }
+    }
+}
+
+fn fail(op: &str, error: &str) -> String {
+    format!(r#"{{"ok":false,"op":"{}","error":"{}"}}"#, escape(op), escape(error))
+}
+
+/// Run one search request against the shared evaluator. The whole
+/// request body sits under `catch_unwind`: candidate evaluations are
+/// already individually supervised, but a panic anywhere else (grid
+/// generation, frontier selection) must fail the request, not the
+/// daemon.
+fn handle_search(
+    req: &Json,
+    evaluator: &Evaluator,
+    device: &Device,
+    opts: &ServeOptions,
+    stats: &mut ServeStats,
+) -> Result<String, String> {
+    let app = req
+        .get("app")
+        .and_then(Json::as_str)
+        .ok_or("search request needs an \"app\" field")?
+        .to_string();
+    let strategy = match req.get("strategy").and_then(Json::as_str) {
+        Some(name) => Strategy::from_name(name)
+            .ok_or_else(|| format!("unknown strategy '{name}'"))?,
+        None => Strategy::Exhaustive,
+    };
+    let objective = match req.get("objective").and_then(Json::as_str) {
+        Some("throughput") => Objective::throughput(),
+        Some("resource") | None => Objective::resource(),
+        Some(other) => return Err(format!("unknown objective '{other}'")),
+    };
+    let budget = req.get("budget").and_then(Json::as_u64).map(|b| b as usize);
+    let seed = req.get("seed").and_then(Json::as_u64).unwrap_or(opts.seed);
+    let n = req.get("n").and_then(Json::as_u64).map(|v| v as i64);
+    let deadline_ms =
+        req.get("deadline_ms").and_then(Json::as_u64).or(opts.deadline_ms);
+    let sim_cycle_budget =
+        req.get("sim_cycle_budget").and_then(Json::as_u64).or(opts.sim_cycle_budget);
+    let cfg = SearchConfig {
+        strategy,
+        objective,
+        budget,
+        seed,
+        deadline_ms,
+        sim_cycle_budget,
+    };
+
+    let hits_before = evaluator.cache_hits();
+    let misses_before = evaluator.cache_misses();
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let (bases, space) =
+            crate::coordinator::search_problem(&app, n, seed, device)?;
+        crate::dse::run_search(evaluator, &bases, device, &space, &cfg)
+    }));
+    let outcome = match run {
+        Ok(r) => r?,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".into());
+            return Err(format!("request panicked: {msg}"));
+        }
+    };
+
+    stats.panicked += outcome.panicked;
+    stats.timed_out += outcome.timed_out;
+    let frontier: Vec<String> = outcome
+        .frontier
+        .iter()
+        .map(|e| format!("\"{}\"", escape(&e.label)))
+        .collect();
+    let chosen = match &outcome.chosen {
+        Some(c) => format!("\"{}\"", escape(&c.label)),
+        None => "null".to_string(),
+    };
+    let reference = match &outcome.reference {
+        Some(r) => format!("\"{}\"", escape(&r.label)),
+        None => "null".to_string(),
+    };
+    Ok(format!(
+        concat!(
+            r#"{{"ok":true,"op":"search","app":"{}","strategy":"{}","chosen":{},"#,
+            r#""reference":{},"frontier":[{}],"evaluated":{},"cache_hits":{},"#,
+            r#""new_compiles":{},"illegal":{},"compile_failed":{},"checker_rejected":{},"#,
+            r#""panicked":{},"timed_out":{},"quarantined":{},"truncated":{}}}"#
+        ),
+        escape(&app),
+        cfg.strategy.name(),
+        chosen,
+        reference,
+        frontier.join(","),
+        outcome.evaluated,
+        evaluator.cache_hits() - hits_before,
+        evaluator.cache_misses() - misses_before,
+        outcome.illegal,
+        outcome.compile_failed,
+        outcome.checker_rejected,
+        outcome.panicked,
+        outcome.timed_out,
+        outcome.quarantined(),
+        outcome.truncated,
+    ))
+}
+
+/// Write the shutdown summary artifact (schema `tvec-serve v1`).
+fn write_bench(
+    path: &Path,
+    stats: &ServeStats,
+    evaluator: &Evaluator,
+) -> Result<(), String> {
+    let hits = evaluator.cache_hits();
+    let new = evaluator.cache_misses();
+    let body = format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"tvec-serve v1\",\n",
+            "  \"requests\": {},\n",
+            "  \"ok\": {},\n",
+            "  \"failed\": {},\n",
+            "  \"cache_hits\": {},\n",
+            "  \"new_compiles\": {},\n",
+            "  \"hit_rate\": {:.4},\n",
+            "  \"panicked\": {},\n",
+            "  \"timed_out\": {},\n",
+            "  \"degraded\": {}\n",
+            "}}\n"
+        ),
+        stats.requests,
+        stats.ok,
+        stats.failed,
+        hits,
+        new,
+        hits as f64 / (hits + new).max(1) as f64,
+        stats.panicked,
+        stats.timed_out,
+        evaluator.degraded(),
+    );
+    std::fs::write(path, body)
+        .map_err(|e| format!("cannot write {}: {e}", path.display()))
+}

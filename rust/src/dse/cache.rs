@@ -5,7 +5,7 @@
 //! — DESIGN.md §6). The first line is a schema-versioned header:
 //!
 //! ```text
-//! #tvec-dse-cache v4
+//! #tvec-dse-cache v6
 //! k=00ab…	st=ok	label=vecadd V8 R2	pr=-	…
 //! k=11cd…	st=ok	label=jacobi Mx[t2x1+2x3]	pr=m:2t,2r,2r,2r	…
 //! k=17ff…	st=err	kind=legality	msg=trip count 100 …
@@ -30,10 +30,14 @@
 //! whole, because a partially applied store could mask real entries on
 //! the next merge). Writes go to a temp file and are renamed into
 //! place, so a crashed writer leaves the previous store intact.
-//! Flushes merge with a fresh re-read of the file, but there is no
-//! cross-process lock: simultaneous flushers can race and the last
-//! writer wins for entries produced inside that window — keys are
-//! content hashes, so a lost entry only costs a later recompile.
+//! Flushes merge with a fresh re-read of the file under the advisory
+//! [`FlushLock`] (`<store>.lock`, best-effort `create_new` with
+//! bounded retry), so the serve daemon and a concurrent CLI run cannot
+//! drop each other's entries; a flusher that cannot take the lock
+//! *skips* its flush with a warning rather than blocking or racing —
+//! entries stay in memory for the next flush. Transient write failures
+//! retry with bounded backoff ([`save_retry`]); the evaluator degrades
+//! to in-memory-only when retries are exhausted.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -54,9 +58,13 @@ use crate::codegen::DesignReport;
 /// like `2t`), which changed both the `pr=` value encoding and the
 /// fingerprint tags, so v3 records could never hit again; v5 added the
 /// design-rule checker gate, whose `check`-kind failures old readers
-/// would reject as a bad failure kind. Older files cold-start with the
+/// would reject as a bad failure kind; v6 added the supervision
+/// failure kinds `panic`/`timeout` to the record grammar (the
+/// evaluator quarantines them and never *flushes* them, but the codec
+/// must round-trip them, and a v5 reader would reject such a record as
+/// a bad failure kind). Older files cold-start with the
 /// schema-mismatch reason.
-pub const SCHEMA_VERSION: u32 = 5;
+pub const SCHEMA_VERSION: u32 = 6;
 
 /// File name inside a `--cache-dir`.
 pub const FILE_NAME: &str = "dse_cache.tsv";
@@ -310,6 +318,8 @@ fn decode_record(line: &str) -> Result<(u64, Result<Evaluation, EvalError>), Str
                 "legality" => FailKind::Legality,
                 "compile" => FailKind::Compile,
                 "check" => FailKind::Check,
+                "panic" => FailKind::Panic,
+                "timeout" => FailKind::Timeout,
                 other => return Err(format!("bad failure kind '{other}'")),
             };
             let message = unescape(get("msg")?)?;
@@ -430,6 +440,110 @@ pub fn save(
     let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
     std::fs::write(&tmp, text).map_err(|e| format!("write {}: {e}", tmp.display()))?;
     std::fs::rename(&tmp, path).map_err(|e| format!("rename {}: {e}", path.display()))
+}
+
+/// Physical write attempts per [`save_retry`] call: the first try plus
+/// [`IO_RETRIES`] retries.
+pub const IO_RETRIES: usize = 3;
+
+/// Base delay before the first retry; doubles per retry (10/20/40 ms —
+/// transient-blip scale, not outage scale: a flush that cannot land in
+/// ~70 ms degrades instead of stalling the sweep).
+pub const IO_RETRY_DELAY: std::time::Duration = std::time::Duration::from_millis(10);
+
+/// [`save`] with bounded-backoff retry on transient IO failure (write
+/// or rename errors — disk full, racing cleanup). When a fault plan is
+/// attached, injected `cachefail@K` faults consume write-attempt
+/// indices here, so `cachefail@0` alone proves recovery on retry and a
+/// run of consecutive indices proves the degrade path. Returns the
+/// last error once all attempts are spent.
+pub fn save_retry(
+    path: &Path,
+    entries: &HashMap<u64, Result<Evaluation, EvalError>>,
+    faults: Option<&super::faults::FaultPlan>,
+) -> Result<(), String> {
+    let mut last = String::new();
+    for attempt in 0..=IO_RETRIES {
+        if attempt > 0 {
+            std::thread::sleep(IO_RETRY_DELAY * (1u32 << (attempt - 1)));
+        }
+        if let Some(plan) = faults {
+            if plan.cache_write_fails() {
+                last = format!("injected cache write failure (attempt {attempt})");
+                continue;
+            }
+        }
+        match save(path, entries) {
+            Ok(()) => return Ok(()),
+            Err(e) => last = e,
+        }
+    }
+    Err(format!("{last} (after {} attempts)", IO_RETRIES + 1))
+}
+
+/// Attempts to take the advisory flush lock before giving up.
+pub const LOCK_RETRIES: usize = 5;
+
+/// Delay between flush-lock attempts. A merging flush holds the lock
+/// for one read + one write — milliseconds — so a handful of 20 ms
+/// retries rides out any live contender; anything longer is either a
+/// wedged flusher (stale detection takes over) or genuinely sustained
+/// contention (skip-and-warn takes over).
+pub const LOCK_RETRY_DELAY: std::time::Duration = std::time::Duration::from_millis(20);
+
+/// A lock file older than this is presumed leaked by a crashed flusher
+/// (the drop guard normally removes it) and is broken.
+pub const LOCK_STALE_AFTER: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Advisory cross-process flush lock: `<store>.lock` created with
+/// `create_new` (atomic on every platform the store targets), removed
+/// on drop. Best-effort by design — callers that fail to acquire skip
+/// their flush and warn rather than block, and a stale lock (older
+/// than [`LOCK_STALE_AFTER`]) is broken so one crashed flusher cannot
+/// wedge every future flush.
+pub struct FlushLock {
+    path: std::path::PathBuf,
+}
+
+impl FlushLock {
+    /// Try to take the flush lock for `store`, with bounded retry.
+    /// `None` means a live contender held it the whole time (or the
+    /// directory is unwritable) — skip the flush.
+    pub fn acquire(store: &Path) -> Option<FlushLock> {
+        let path = store.with_extension("lock");
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        for attempt in 0..=LOCK_RETRIES {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(_) => return Some(FlushLock { path }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|md| md.modified())
+                        .ok()
+                        .and_then(|m| m.elapsed().ok())
+                        .is_some_and(|age| age > LOCK_STALE_AFTER);
+                    if stale {
+                        // break it and retry immediately: the remove
+                        // may race another breaker, but the next
+                        // create_new arbitrates
+                        let _ = std::fs::remove_file(&path);
+                    } else if attempt < LOCK_RETRIES {
+                        std::thread::sleep(LOCK_RETRY_DELAY);
+                    }
+                }
+                // unwritable directory etc.: same answer as contention
+                Err(_) => return None,
+            }
+        }
+        None
+    }
+}
+
+impl Drop for FlushLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
 }
 
 /// Raw record count of a store file (non-empty lines minus the
@@ -595,10 +709,10 @@ mod tests {
     #[test]
     fn old_version_stores_cold_start_with_printed_reason() {
         // v1 (pre-mixed-factors), v2 (pre-rekeyed-fingerprint), v3
-        // (pre-mode-carrying-pumps) and v4 (pre-checker-gate) stores
-        // must load cold with the schema-mismatch reason, never
-        // misparse or silently never-hit
-        for old in ["v1", "v2", "v3", "v4"] {
+        // (pre-mode-carrying-pumps), v4 (pre-checker-gate) and v5
+        // (pre-supervision-kinds) stores must load cold with the
+        // schema-mismatch reason, never misparse or silently never-hit
+        for old in ["v1", "v2", "v3", "v4", "v5"] {
             let path = tmp_path(&format!("{old}-upgrade"));
             std::fs::write(
                 &path,
@@ -608,12 +722,98 @@ mod tests {
             )
             .unwrap();
             let loaded = load(&path);
-            assert!(loaded.entries.is_empty(), "{old} entries must not half-load into v5");
+            assert!(loaded.entries.is_empty(), "{old} entries must not half-load into v6");
             let reason = loaded.cold_reason.expect("cold start has a reason");
             assert!(reason.contains("schema mismatch") && reason.contains(old), "{reason}");
-            assert!(reason.contains("v5"), "{reason}");
+            assert!(reason.contains("v6"), "{reason}");
             let _ = std::fs::remove_file(&path);
         }
+    }
+
+    #[test]
+    fn supervision_failure_kinds_round_trip_through_the_codec() {
+        // the evaluator never *flushes* quarantined entries, but the
+        // v6 record grammar must round-trip them (codec symmetry — and
+        // a belt-and-braces path if a future policy persists them)
+        let path = tmp_path("supervision-kinds");
+        let mut m: HashMap<u64, Result<Evaluation, EvalError>> = HashMap::new();
+        m.insert(0x1, Err(EvalError::panicked("evaluation #2 panicked: boom")));
+        m.insert(0x2, Err(EvalError::timeout("evaluation #4 exceeded its 50ms wall budget")));
+        save(&path, &m).unwrap();
+        let loaded = load(&path);
+        assert!(loaded.cold_reason.is_none(), "{:?}", loaded.cold_reason);
+        assert_eq!(loaded.entries.len(), 2);
+        assert_eq!(
+            loaded.entries[&0x1].as_ref().unwrap_err().kind,
+            FailKind::Panic
+        );
+        assert_eq!(
+            loaded.entries[&0x2].as_ref().unwrap_err().kind,
+            FailKind::Timeout
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_retry_recovers_from_one_injected_write_failure() {
+        use crate::dse::faults::FaultPlan;
+        let path = tmp_path("retry-recovers");
+        let plan = FaultPlan::parse("cachefail@0").unwrap();
+        let entries = sample_entries();
+        save_retry(&path, &entries, Some(&plan)).unwrap();
+        assert_eq!(load(&path).entries.len(), entries.len());
+        assert_eq!(plan.fired(), 1, "the injected failure must have consumed attempt 0");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_retry_exhausts_when_every_attempt_fails() {
+        use crate::dse::faults::FaultPlan;
+        let path = tmp_path("retry-exhausts");
+        // one injected failure per physical attempt (first + IO_RETRIES)
+        let spec = (0..=IO_RETRIES)
+            .map(|i| format!("cachefail@{i}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let plan = FaultPlan::parse(&spec).unwrap();
+        let err = save_retry(&path, &sample_entries(), Some(&plan)).unwrap_err();
+        assert!(err.contains("after 4 attempts"), "{err}");
+        assert!(!path.exists(), "no write may have landed");
+        // the *next* flush (fresh attempt indices past the plan) succeeds
+        save_retry(&path, &sample_entries(), Some(&plan)).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn flush_lock_excludes_and_releases() {
+        let store = tmp_path("lock-basic");
+        let first = FlushLock::acquire(&store).expect("uncontended acquire");
+        // a contender spins its bounded retries, then gives up
+        assert!(
+            FlushLock::acquire(&store).is_none(),
+            "second acquire must fail while the first is held"
+        );
+        drop(first);
+        // drop released the file: acquire works again
+        let again = FlushLock::acquire(&store).expect("acquire after release");
+        drop(again);
+        assert!(!store.with_extension("lock").exists());
+    }
+
+    #[test]
+    fn flush_lock_breaks_stale_locks() {
+        let store = tmp_path("lock-stale");
+        let lock_path = store.with_extension("lock");
+        std::fs::write(&lock_path, "").unwrap();
+        // age the lock file past the stale horizon
+        let old = std::time::SystemTime::now() - (LOCK_STALE_AFTER + LOCK_STALE_AFTER);
+        let f = std::fs::OpenOptions::new().write(true).open(&lock_path).unwrap();
+        f.set_modified(old).unwrap();
+        drop(f);
+        let lock = FlushLock::acquire(&store);
+        assert!(lock.is_some(), "a stale lock must be broken, not honored");
+        drop(lock);
+        assert!(!lock_path.exists());
     }
 
     #[test]

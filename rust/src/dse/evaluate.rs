@@ -19,8 +19,9 @@
 
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::codegen::DesignReport;
 use crate::coordinator::pipeline::{
@@ -30,24 +31,35 @@ use crate::coordinator::pipeline::{
 use crate::hw::ResourceVec;
 use crate::ir::{PumpMode, RegionPump};
 use crate::sim::{rate_model, Arena, ArenaStats};
-use crate::util::{fnv1a, FNV_OFFSET};
+use crate::util::{fnv1a, lock_unpoisoned, FNV_OFFSET};
 
 use super::cache;
+use super::faults::{self, FaultPlan};
 use super::pareto::resource_score;
 use super::space::DesignPoint;
 
 /// Why a cached candidate failed: rejected by a legality check
 /// (transform precondition, indivisible binding), by a genuine
-/// compile error in lowering, or by the static design-rule checker
-/// (`analysis::checker`) after a successful compile. Reports and
-/// `--verify` keep the three apart — a legality rejection is expected
-/// pruning, a compile error is a bug surface, and a checker rejection
-/// is a design that would deadlock or wedge in simulation.
+/// compile error in lowering, by the static design-rule checker
+/// (`analysis::checker`) after a successful compile, or by the
+/// supervision layer — a candidate that panicked mid-evaluation
+/// ([`FailKind::Panic`]) or blew its wall-clock/slow-cycle budget
+/// ([`FailKind::Timeout`]). Reports and `--verify` keep them apart — a
+/// legality rejection is expected pruning, a compile error is a bug
+/// surface, a checker rejection is a design that would deadlock, and
+/// the two supervision kinds are *quarantined*: cached like other
+/// failures so they are never retried within a run, but filtered out
+/// of the persistent store so a later run (possibly with a bigger
+/// budget, or a fixed tasklet) retries them fresh.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FailKind {
     Legality,
     Compile,
     Check,
+    /// The evaluation panicked and was caught by the supervisor.
+    Panic,
+    /// The evaluation exceeded its wall-clock or slow-cycle budget.
+    Timeout,
 }
 
 impl FailKind {
@@ -56,7 +68,17 @@ impl FailKind {
             FailKind::Legality => "legality",
             FailKind::Compile => "compile",
             FailKind::Check => "check",
+            FailKind::Panic => "panic",
+            FailKind::Timeout => "timeout",
         }
+    }
+
+    /// Supervision failures are quarantined in memory for the rest of
+    /// the run but never persisted: a panic or timeout says something
+    /// about *this* process (its budget, its bugs), not about the
+    /// candidate's content, so the next run gets to retry it.
+    pub fn quarantined(&self) -> bool {
+        matches!(self, FailKind::Panic | FailKind::Timeout)
     }
 }
 
@@ -79,6 +101,14 @@ impl EvalError {
 
     pub fn check(message: impl Into<String>) -> EvalError {
         EvalError { kind: FailKind::Check, message: message.into() }
+    }
+
+    pub fn panicked(message: impl Into<String>) -> EvalError {
+        EvalError { kind: FailKind::Panic, message: message.into() }
+    }
+
+    pub fn timeout(message: impl Into<String>) -> EvalError {
+        EvalError { kind: FailKind::Timeout, message: message.into() }
     }
 }
 
@@ -210,6 +240,18 @@ fn classify(e: StagedError) -> EvalError {
     }
 }
 
+/// Best-effort text of a caught panic payload (`panic!` carries a
+/// `&str` or a `String`; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Pre-simulation gate: run the static design-rule checker over the
 /// compiled candidate and reject it before it ever reaches the rate
 /// model or the exact simulator. The checker is ~free next to a
@@ -268,16 +310,31 @@ pub struct ArenaPool {
 }
 
 impl ArenaPool {
-    /// Run `f` inside a pooled arena (checkout → run → checkin).
+    /// Run `f` inside a pooled arena (checkout → run → checkin). The
+    /// checkin rides a drop guard, so a panicking `f` — a buggy or
+    /// fault-injected candidate under the supervisor's `catch_unwind` —
+    /// still returns the arena and decrements the in-flight count
+    /// instead of leaking the slot; the engines reset arenas on entry,
+    /// so a returned arena is reusable whatever state `f` left it in.
     pub fn run<R>(&self, f: impl FnOnce(&mut Arena) -> R) -> R {
-        let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
+        struct Checkin<'p> {
+            pool: &'p ArenaPool,
+            arena: Option<Arena>,
+        }
+        impl Drop for Checkin<'_> {
+            fn drop(&mut self) {
+                self.pool.in_flight.fetch_sub(1, Ordering::Relaxed);
+                if let Some(arena) = self.arena.take() {
+                    lock_unpoisoned(&self.pool.arenas).push(arena);
+                }
+            }
+        }
+        let arena = lock_unpoisoned(&self.arenas).pop().unwrap_or_default();
         self.checkouts.fetch_add(1, Ordering::Relaxed);
         let now = self.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
         self.peak_in_flight.fetch_max(now, Ordering::Relaxed);
-        let out = f(&mut arena);
-        self.in_flight.fetch_sub(1, Ordering::Relaxed);
-        self.arenas.lock().unwrap().push(arena);
-        out
+        let mut guard = Checkin { pool: self, arena: Some(arena) };
+        f(guard.arena.as_mut().expect("arena checked out"))
     }
 
     /// Lifetime checkout count.
@@ -292,13 +349,13 @@ impl ArenaPool {
 
     /// Arenas currently resident in the pool.
     pub fn pooled(&self) -> usize {
-        self.arenas.lock().unwrap().len()
+        lock_unpoisoned(&self.arenas).len()
     }
 
     /// Counters summed over every pooled arena (checked-out arenas are
     /// invisible until they return).
     pub fn stats(&self) -> ArenaStats {
-        let arenas = self.arenas.lock().unwrap();
+        let arenas = lock_unpoisoned(&self.arenas);
         let mut sum = ArenaStats::default();
         for a in arenas.iter() {
             sum.accumulate(&a.stats());
@@ -315,6 +372,18 @@ struct MemoState {
     /// Keys used this run (hits + new compiles):
     /// [`Evaluator::flush_compacted`] persists only these.
     touched: HashSet<u64>,
+}
+
+/// Per-candidate budgets the supervision layer enforces. Stored as
+/// atomics (0 = unarmed) so [`Evaluator::set_limits`] applies a
+/// `SearchConfig`'s budgets through the same `&Evaluator` the worker
+/// threads already share — no interior `&mut` plumbing.
+#[derive(Default)]
+struct EvalLimits {
+    /// Wall-clock budget per candidate evaluation, in milliseconds.
+    wall_ms: AtomicU64,
+    /// Slow-cycle budget for exact-sim spot checks (`--verify`).
+    sim_cycles: AtomicU64,
 }
 
 /// Memoizing, thread-parallel candidate evaluator. Failures are cached
@@ -349,6 +418,18 @@ pub struct Evaluator {
     /// and compile-stage spans on the miss path. `None` keeps every
     /// instrumentation site a branch on a null handle.
     recorder: Option<Arc<crate::telemetry::Recorder>>,
+    /// Per-candidate wall/slow-cycle budgets (supervision layer).
+    limits: EvalLimits,
+    /// Deterministic fault injection (`--inject-faults`), tests/CI only
+    /// in practice — `None` costs one branch per evaluation.
+    faults: Option<FaultPlan>,
+    /// Evaluation ordinals issued so far: the deterministic index the
+    /// fault plan keys on. Batch evaluation reserves a contiguous block
+    /// up front, so worker interleaving never reorders ordinals.
+    issued: AtomicUsize,
+    /// Set when cache-flush retries were exhausted: the evaluator keeps
+    /// working in-memory-only and later flushes become warned no-ops.
+    degraded: AtomicBool,
 }
 
 impl Evaluator {
@@ -387,6 +468,52 @@ impl Evaluator {
         self.recorder.as_deref()
     }
 
+    /// Attach a deterministic fault plan (`--inject-faults`): armed
+    /// faults fire at their evaluation ordinals and cache
+    /// write-attempt indices. Used by tests and CI to prove the
+    /// supervision paths; production evaluators never carry one.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Evaluator {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// The attached fault plan, if any (the CLI reports its
+    /// armed-vs-fired summary after a sweep).
+    pub fn faults(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
+    }
+
+    /// Arm (or clear, with `None`) the per-candidate budgets.
+    /// `run_search` calls this with its `SearchConfig`'s limits on
+    /// entry; the serve daemon re-arms per request.
+    pub fn set_limits(&self, wall_ms: Option<u64>, sim_cycles: Option<u64>) {
+        self.limits.wall_ms.store(wall_ms.unwrap_or(0), Ordering::Relaxed);
+        self.limits.sim_cycles.store(sim_cycles.unwrap_or(0), Ordering::Relaxed);
+    }
+
+    /// The armed per-candidate wall-clock budget, if any.
+    pub fn wall_budget(&self) -> Option<Duration> {
+        match self.limits.wall_ms.load(Ordering::Relaxed) {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        }
+    }
+
+    /// The armed slow-cycle budget for exact-sim spot checks, falling
+    /// back to the verify default when unarmed.
+    pub fn sim_cycle_budget(&self) -> u64 {
+        match self.limits.sim_cycles.load(Ordering::Relaxed) {
+            0 => super::verify::MAX_VERIFY_CYCLES,
+            n => n,
+        }
+    }
+
+    /// Has the persistent cache degraded to in-memory-only operation
+    /// (flush retries exhausted)? Reported in `BENCH_serve.json`.
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
     pub fn cache_hits(&self) -> usize {
         self.hits.load(Ordering::Relaxed)
     }
@@ -414,23 +541,69 @@ impl Evaluator {
     }
 
     /// Persist the memo cache to the store this evaluator was created
-    /// with. Re-reads the file immediately before writing and merges
-    /// (in-memory entries win), then writes atomically (tmp + rename).
-    /// There is no cross-process lock, so two simultaneous flushes can
-    /// race and the last writer wins for entries evaluated inside that
-    /// window — keys are content hashes, so a lost entry costs one
-    /// recompile later, never a wrong result. Returns the total
-    /// entries written, or an error string on IO failure. A no-op
-    /// `Ok(0)` without a cache directory.
+    /// with. Takes the advisory flush lock (`<store>.lock`, bounded
+    /// retry; on contention this flush is *skipped* with a warning —
+    /// entries stay in memory for the next flush — rather than
+    /// blocking or racing a concurrent flusher), re-reads the file
+    /// under the lock and merges (in-memory entries win), then writes
+    /// atomically (tmp + rename) with bounded-backoff retry on IO
+    /// failure. Exhausted retries degrade the evaluator to
+    /// in-memory-only operation — warned once, counted in telemetry,
+    /// never a crash. Quarantined entries ([`FailKind::quarantined`])
+    /// are filtered out: panics and timeouts are never persisted.
+    /// Returns the total entries written (`Ok(0)` for a skipped or
+    /// degraded flush, and without a cache directory).
     pub fn flush(&self) -> Result<usize, String> {
         let path = match &self.disk_path {
             Some(p) => p.clone(),
             None => return Ok(0),
         };
-        let mut merged = self.cache.lock().unwrap().entries.clone();
+        if self.degraded.load(Ordering::Relaxed) {
+            eprintln!(
+                "warning: cache degraded to in-memory-only; not flushing '{}'",
+                path.display()
+            );
+            return Ok(0);
+        }
+        let _lock = match cache::FlushLock::acquire(&path) {
+            Some(l) => l,
+            None => {
+                eprintln!(
+                    "warning: cache store '{}' is locked by a concurrent flusher; \
+                     skipping this flush (entries stay in memory)",
+                    path.display()
+                );
+                if let Some(r) = self.probe() {
+                    r.add("dse.cache.flush_lock_skips", 1);
+                }
+                return Ok(0);
+            }
+        };
+        let mut merged: HashMap<u64, Result<Evaluation, EvalError>> = {
+            let state = lock_unpoisoned(&self.cache);
+            state
+                .entries
+                .iter()
+                .filter(|(_, v)| !matches!(v, Err(e) if e.kind.quarantined()))
+                .map(|(k, v)| (*k, v.clone()))
+                .collect()
+        };
         cache::merge(&mut merged, cache::load(&path).entries);
-        cache::save(&path, &merged)?;
-        Ok(merged.len())
+        match cache::save_retry(&path, &merged, self.faults.as_ref()) {
+            Ok(()) => Ok(merged.len()),
+            Err(e) => {
+                self.degraded.store(true, Ordering::Relaxed);
+                eprintln!(
+                    "warning: cache flush to '{}' failed ({e}); degrading to \
+                     in-memory-only for the rest of this process",
+                    path.display()
+                );
+                if let Some(r) = self.probe() {
+                    r.add("dse.cache.degraded", 1);
+                }
+                Ok(0)
+            }
+        }
     }
 
     /// Compacting flush (`--cache-compact`): an *eviction*, not a
@@ -449,11 +622,25 @@ impl Evaluator {
             Some(p) => p.clone(),
             None => return Ok((0, 0)),
         };
-        let state = self.cache.lock().unwrap();
+        if self.degraded.load(Ordering::Relaxed) {
+            return Err("cache degraded to in-memory-only; not compacting".into());
+        }
+        // compaction is an explicit, destructive rewrite: on lock
+        // contention fail loudly (the user can rerun) instead of the
+        // merging flush's silent skip
+        let _lock = cache::FlushLock::acquire(&path).ok_or_else(|| {
+            format!(
+                "cache store '{}' is locked by a concurrent flusher; not compacting",
+                path.display()
+            )
+        })?;
+        let state = lock_unpoisoned(&self.cache);
         let kept: HashMap<u64, Result<Evaluation, EvalError>> = state
             .entries
             .iter()
-            .filter(|(k, _)| state.touched.contains(*k))
+            .filter(|(k, v)| {
+                state.touched.contains(*k) && !matches!(v, Err(e) if e.kind.quarantined())
+            })
             .map(|(k, v)| (*k, v.clone()))
             .collect();
         cache::compact(&path, &kept)
@@ -462,7 +649,7 @@ impl Evaluator {
     /// Distinct transform prefixes computed so far (one per
     /// (graph, vectorize, stream) choice — *not* one per candidate).
     pub fn prefix_entries(&self) -> usize {
-        self.prefixes.lock().unwrap().len()
+        lock_unpoisoned(&self.prefixes).len()
     }
 
     /// Is this exact (spec, candidate, workload) content already in the
@@ -470,16 +657,29 @@ impl Evaluator {
     /// compiles* only — cache hits are free.
     pub fn contains(&self, base: &BuildSpec, point: &DesignPoint, flops: f64) -> bool {
         let key = fingerprint(base, point, flops);
-        self.cache.lock().unwrap().entries.contains_key(&key)
+        lock_unpoisoned(&self.cache).entries.contains_key(&key)
     }
 
     /// Evaluate one candidate, hitting the cache when the same content
     /// was evaluated before. One lock acquisition on the hit path.
+    /// Reserves the next evaluation ordinal — the deterministic index
+    /// fault injection keys on.
     pub fn evaluate(
         &self,
         base: &BuildSpec,
         point: &DesignPoint,
         flops: f64,
+    ) -> Result<Evaluation, EvalError> {
+        let ordinal = self.issued.fetch_add(1, Ordering::Relaxed);
+        self.evaluate_indexed(base, point, flops, ordinal)
+    }
+
+    fn evaluate_indexed(
+        &self,
+        base: &BuildSpec,
+        point: &DesignPoint,
+        flops: f64,
+        ordinal: usize,
     ) -> Result<Evaluation, EvalError> {
         let key = fingerprint(base, point, flops);
         let mut sp = self.probe().map(|r| r.span("dse.candidate"));
@@ -487,7 +687,7 @@ impl Evaluator {
             s.note("fingerprint", format!("{key:016x}"));
         }
         {
-            let mut state = self.cache.lock().unwrap();
+            let mut state = lock_unpoisoned(&self.cache);
             if let Some(hit) = state.entries.get(&key) {
                 let hit = hit.clone();
                 state.touched.insert(key);
@@ -498,23 +698,85 @@ impl Evaluator {
                 return hit;
             }
         }
-        let ev = self.evaluate_uncached(base, point, flops);
+        let ev = self.evaluate_supervised(base, point, flops, ordinal);
         self.misses.fetch_add(1, Ordering::Relaxed);
         if let Some(s) = sp.as_mut() {
             s.note(
                 "outcome",
                 match &ev {
                     Ok(_) => "new_compile",
-                    Err(e) if e.kind == FailKind::Legality => "legality",
-                    Err(e) if e.kind == FailKind::Check => "checker_reject",
-                    Err(_) => "compile_fail",
+                    Err(e) => match e.kind {
+                        FailKind::Legality => "legality",
+                        FailKind::Check => "checker_reject",
+                        FailKind::Compile => "compile_fail",
+                        FailKind::Panic => "panic",
+                        FailKind::Timeout => "timeout",
+                    },
                 },
             );
         }
-        let mut state = self.cache.lock().unwrap();
+        let mut state = lock_unpoisoned(&self.cache);
         state.touched.insert(key);
         state.entries.insert(key, ev.clone());
         ev
+    }
+
+    /// The supervised miss path: fire any fault armed for this ordinal,
+    /// run the real evaluation under `catch_unwind` so a panicking
+    /// candidate becomes a classified [`FailKind::Panic`] instead of an
+    /// unwinding sweep, and apply the post-hoc wall-clock check — a
+    /// candidate that *completed* past its budget is still quarantined
+    /// as [`FailKind::Timeout`] (its latency, not its answer, is what
+    /// the budget bounds). A panic takes precedence over the deadline:
+    /// it names a bug, the timeout only a budget.
+    fn evaluate_supervised(
+        &self,
+        base: &BuildSpec,
+        point: &DesignPoint,
+        flops: f64,
+        ordinal: usize,
+    ) -> Result<Evaluation, EvalError> {
+        let wall = self.wall_budget();
+        let injected = self.faults.as_ref().and_then(|p| p.at_eval(ordinal));
+        let started = Instant::now();
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let (Some(kind), Some(plan)) = (injected, self.faults.as_ref()) {
+                plan.note_fired(kind);
+                match kind {
+                    faults::FaultKind::Panic => {
+                        panic!("injected fault: evaluation #{ordinal} panicked")
+                    }
+                    faults::FaultKind::Wedge => {
+                        let held = faults::wedge_spin(wall);
+                        return Err(EvalError::timeout(format!(
+                            "evaluation #{ordinal} wedged (injected); reaped after {}ms",
+                            held.as_millis()
+                        )));
+                    }
+                    faults::FaultKind::Slow => faults::crawl(wall),
+                    faults::FaultKind::CacheFail => {} // fires at write time
+                }
+            }
+            self.evaluate_uncached(base, point, flops)
+        }));
+        let ev = match run {
+            Ok(r) => r,
+            Err(payload) => Err(EvalError::panicked(format!(
+                "evaluation #{ordinal} panicked: {}",
+                panic_message(payload.as_ref())
+            ))),
+        };
+        match (&ev, wall) {
+            (Err(e), _) if e.kind.quarantined() => ev,
+            (_, Some(limit)) if started.elapsed() > limit => {
+                Err(EvalError::timeout(format!(
+                    "evaluation #{ordinal} exceeded its {}ms wall budget ({}ms elapsed)",
+                    limit.as_millis(),
+                    started.elapsed().as_millis()
+                )))
+            }
+            _ => ev,
+        }
     }
 
     /// The miss path: compile through a shared transform prefix.
@@ -531,7 +793,7 @@ impl Evaluator {
         let spec = point.apply_to(base);
         let key: PrefixKey = (spec.sdfg_fnv(), spec.vectorize.clone(), spec.stream);
         let prefix = {
-            let cached = self.prefixes.lock().unwrap().get(&key).cloned();
+            let cached = lock_unpoisoned(&self.prefixes).get(&key).cloned();
             match cached {
                 Some(p) => {
                     if let Some(r) = self.probe() {
@@ -549,9 +811,7 @@ impl Evaluator {
                         spec.stream,
                         self.probe(),
                     ));
-                    self.prefixes
-                        .lock()
-                        .unwrap()
+                    lock_unpoisoned(&self.prefixes)
                         .entry(key)
                         .or_insert_with(|| built.clone())
                         .clone()
@@ -568,7 +828,10 @@ impl Evaluator {
 
     /// Evaluate a batch of candidates across OS threads. Results come
     /// back in input order; per-candidate failures (e.g. a binding that
-    /// does not divide) are reported in place, not fatal.
+    /// does not divide) are reported in place, not fatal. The whole
+    /// batch reserves one contiguous ordinal block up front — input
+    /// index `i` is always ordinal `start + i` — so fault injection
+    /// stays deterministic regardless of worker interleaving.
     pub fn evaluate_all(
         &self,
         base: &BuildSpec,
@@ -579,6 +842,7 @@ impl Evaluator {
         if n == 0 {
             return Vec::new();
         }
+        let start = self.issued.fetch_add(n, Ordering::Relaxed);
         let workers = std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(1)
@@ -593,14 +857,14 @@ impl Evaluator {
                     if i >= n {
                         break;
                     }
-                    let r = self.evaluate(base, &points[i], flops);
-                    slots.lock().unwrap()[i] = Some(r);
+                    let r = self.evaluate_indexed(base, &points[i], flops, start + i);
+                    lock_unpoisoned(&slots)[i] = Some(r);
                 });
             }
         });
         slots
             .into_inner()
-            .unwrap()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
             .into_iter()
             .map(|o| o.expect("every slot filled by a worker"))
             .collect()
@@ -865,6 +1129,115 @@ mod tests {
             e,
             Event::End { args, .. } if args.iter().any(|(k, v)| k == "fingerprint" && v.len() == 16)
         )));
+    }
+
+    #[test]
+    fn injected_panic_is_classified_quarantined_and_nonfatal() {
+        let ev = Evaluator::new().with_faults(FaultPlan::parse("panic@0").unwrap());
+        let base = vecadd_base();
+        let flops = apps::vecadd::flops(1 << 14);
+        let e = ev.evaluate(&base, &dp_point(), flops).unwrap_err();
+        assert_eq!(e.kind, FailKind::Panic, "{e}");
+        assert!(e.message.contains("#0"), "{e}");
+        assert!(e.kind.quarantined());
+        // quarantined: the retry is a memo hit, never a re-evaluation
+        let again = ev.evaluate(&base, &dp_point(), flops).unwrap_err();
+        assert_eq!(again.kind, FailKind::Panic);
+        assert_eq!(ev.cache_hits(), 1);
+        assert_eq!(ev.cache_misses(), 1);
+        // no poisoned mutex, no leaked arena: the evaluator keeps going
+        let ok = ev.evaluate(&base, &DesignPoint::original(), flops);
+        assert!(ok.is_ok(), "evaluator dead after a caught panic: {ok:?}");
+        ev.arenas().run(|a| {
+            let t = a.alloc_from(&[1.0]);
+            a.free(t);
+        });
+        assert_eq!(ev.faults().unwrap().fired(), 1);
+    }
+
+    #[test]
+    fn slow_candidate_past_deadline_is_a_timeout() {
+        let base = vecadd_base();
+        let flops = apps::vecadd::flops(1 << 14);
+        let ev = Evaluator::new().with_faults(FaultPlan::parse("slow@0").unwrap());
+        ev.set_limits(Some(40), None);
+        let e = ev.evaluate(&base, &dp_point(), flops).unwrap_err();
+        assert_eq!(e.kind, FailKind::Timeout, "{e}");
+        assert!(e.message.contains("wall budget"), "{e}");
+        // the same injection with no armed deadline is benign
+        let lax = Evaluator::new().with_faults(FaultPlan::parse("slow@0").unwrap());
+        lax.evaluate(&base, &dp_point(), flops).unwrap();
+    }
+
+    #[test]
+    fn wedged_candidate_is_reaped_as_timeout() {
+        let base = vecadd_base();
+        let flops = apps::vecadd::flops(1 << 14);
+        let ev = Evaluator::new().with_faults(FaultPlan::parse("wedge@0").unwrap());
+        ev.set_limits(Some(30), None);
+        let e = ev.evaluate(&base, &dp_point(), flops).unwrap_err();
+        assert_eq!(e.kind, FailKind::Timeout, "{e}");
+        assert!(e.message.contains("wedged"), "{e}");
+        // the wedge held the worker only until the deadline reaped it,
+        // and the evaluator is still alive
+        ev.evaluate(&base, &DesignPoint::original(), flops).unwrap();
+    }
+
+    #[test]
+    fn limits_arm_and_clear_through_shared_ref() {
+        let ev = Evaluator::new();
+        assert_eq!(ev.wall_budget(), None);
+        assert_eq!(ev.sim_cycle_budget(), crate::dse::verify::MAX_VERIFY_CYCLES);
+        ev.set_limits(Some(250), Some(1_000));
+        assert_eq!(ev.wall_budget(), Some(std::time::Duration::from_millis(250)));
+        assert_eq!(ev.sim_cycle_budget(), 1_000);
+        ev.set_limits(None, None);
+        assert_eq!(ev.wall_budget(), None);
+        assert_eq!(ev.sim_cycle_budget(), crate::dse::verify::MAX_VERIFY_CYCLES);
+    }
+
+    #[test]
+    fn arena_pool_survives_a_panicking_run() {
+        let pool = ArenaPool::default();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|_a| {
+                panic!("boom");
+            });
+        }));
+        assert!(r.is_err());
+        assert_eq!(pool.pooled(), 1, "arena must check back in on unwind");
+        // no leaked in-flight slot, no poisoned lock: the pool still works
+        pool.run(|a| {
+            let t = a.alloc_from(&[1.0]);
+            a.free(t);
+        });
+        assert_eq!(pool.checkouts(), 2);
+        assert_eq!(pool.peak_in_flight(), 1, "panicking run leaked an in-flight slot");
+    }
+
+    #[test]
+    fn observed_evaluator_tags_supervised_outcomes() {
+        use crate::telemetry::{Event, Recorder};
+        let rec = Arc::new(Recorder::new());
+        let ev = Evaluator::new()
+            .observed(rec.clone())
+            .with_faults(FaultPlan::parse("panic@0,wedge@1").unwrap());
+        ev.set_limits(Some(30), None);
+        let base = vecadd_base();
+        let flops = apps::vecadd::flops(1 << 14);
+        let _ = ev.evaluate(&base, &dp_point(), flops);
+        let _ = ev.evaluate(&base, &DesignPoint::original(), flops);
+        let outcomes: Vec<String> = rec
+            .events()
+            .iter()
+            .filter_map(|e| match e {
+                Event::End { args, .. } => {
+                    args.iter().find(|(k, _)| k == "outcome").map(|(_, v)| v.clone())
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(outcomes, vec!["panic".to_string(), "timeout".to_string()]);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Deterministic fault injection for the DSE supervision layer.
+//!
+//! A long-running `tvec dse --serve` daemon must survive panicking
+//! tasklets, wedged simulations and failing cache writes — and the only
+//! way to *prove* the supervision paths fire is to inject those faults
+//! on demand, deterministically, so CI can grep for the classified
+//! outcome. A [`FaultPlan`] is parsed from the `--inject-faults` spec
+//! (grammar below) and attached to an [`crate::dse::Evaluator`]; each
+//! armed fault names the exact evaluation ordinal (or cache
+//! write-attempt index) it fires at, so the same spec against the same
+//! sweep reproduces the same failure bit for bit.
+//!
+//! Spec grammar (DESIGN.md §14):
+//!
+//! ```text
+//! spec      := injection ("," injection)*
+//! injection := kind "@" index
+//! kind      := "panic" | "wedge" | "slow" | "cachefail"
+//! index     := decimal ≥ 0
+//! ```
+//!
+//! * `panic@K` — the K-th *issued* evaluation (0-based; if that call
+//!   is served from the memo cache the fault does not fire — a warm
+//!   run never evaluates, so it is fault-free by construction) panics
+//!   mid-candidate; supervision must classify it `FailKind::Panic` and
+//!   keep the sweep alive.
+//! * `wedge@K` — the K-th evaluation hangs; the wall-clock deadline
+//!   (or a built-in fuse when none is armed) reaps it as
+//!   `FailKind::Timeout`.
+//! * `slow@K` — the K-th evaluation completes but only after sleeping
+//!   past the armed wall deadline; the post-hoc budget check must still
+//!   quarantine it as `FailKind::Timeout`.
+//! * `cachefail@K` — the K-th physical cache write *attempt* fails;
+//!   `cachefail@0` alone proves the bounded retry recovers, and
+//!   consecutive indices covering every retry prove the degrade path.
+//!
+//! Evaluation ordinals are deterministic: the search issues candidates
+//! from one thread in grid order, and batch evaluation reserves a
+//! contiguous ordinal block up front, so worker interleaving cannot
+//! reorder them.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// What an injected fault emulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A candidate evaluation panics (e.g. a buggy tasklet indexing out
+    /// of bounds).
+    Panic,
+    /// A candidate evaluation hangs until reaped by the deadline.
+    Wedge,
+    /// A candidate evaluation completes, but past its wall budget.
+    Slow,
+    /// A physical cache write attempt fails (e.g. disk full).
+    CacheFail,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Wedge => "wedge",
+            FaultKind::Slow => "slow",
+            FaultKind::CacheFail => "cachefail",
+        }
+    }
+}
+
+/// How long a wedged evaluation is allowed to spin when no wall
+/// deadline is armed before the built-in fuse reaps it anyway. The
+/// fuse keeps `--inject-faults wedge@K` without `--deadline-ms` a
+/// bounded experiment instead of a genuine hang.
+pub const WEDGE_FUSE: Duration = Duration::from_secs(1);
+
+/// How far past the armed wall deadline a `slow` injection sleeps:
+/// enough margin that the post-hoc budget check fires deterministically
+/// on any CI runner.
+pub const SLOW_MARGIN: Duration = Duration::from_millis(50);
+
+/// A parsed, seeded-by-construction fault schedule. All state is
+/// atomic: the plan is shared behind the `Evaluator` across worker
+/// threads.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// (evaluation ordinal, fault) — panic/wedge/slow injections.
+    evals: Vec<(usize, FaultKind)>,
+    /// Physical cache write-attempt indices that must fail.
+    cache_fails: Vec<usize>,
+    /// Write attempts observed so far (indexes into `cache_fails`).
+    write_attempts: AtomicUsize,
+    /// Injections that actually fired, by kind.
+    fired_panic: AtomicUsize,
+    fired_wedge: AtomicUsize,
+    fired_slow: AtomicUsize,
+    fired_cache: AtomicUsize,
+}
+
+impl FaultPlan {
+    /// Parse an `--inject-faults` spec. See the module doc for the
+    /// grammar.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind, index) = part.split_once('@').ok_or_else(|| {
+                format!("bad fault '{part}': want <kind>@<index>, e.g. panic@2")
+            })?;
+            let index: usize = index
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad fault index in '{part}'"))?;
+            match kind.trim() {
+                "panic" => plan.evals.push((index, FaultKind::Panic)),
+                "wedge" => plan.evals.push((index, FaultKind::Wedge)),
+                "slow" => plan.evals.push((index, FaultKind::Slow)),
+                "cachefail" => plan.cache_fails.push(index),
+                other => {
+                    return Err(format!(
+                        "unknown fault kind '{other}' (want panic|wedge|slow|cachefail)"
+                    ))
+                }
+            }
+        }
+        if plan.evals.is_empty() && plan.cache_fails.is_empty() {
+            return Err("empty fault spec".into());
+        }
+        plan.evals.sort_by_key(|(i, _)| *i);
+        plan.cache_fails.sort_unstable();
+        Ok(plan)
+    }
+
+    /// The fault armed for evaluation ordinal `ordinal`, if any.
+    pub fn at_eval(&self, ordinal: usize) -> Option<FaultKind> {
+        self.evals
+            .iter()
+            .find(|(i, _)| *i == ordinal)
+            .map(|(_, k)| *k)
+    }
+
+    /// Record that a fault fired (the supervisor calls this at the
+    /// injection site so `summary()` reports armed-vs-fired honestly).
+    pub fn note_fired(&self, kind: FaultKind) {
+        let ctr = match kind {
+            FaultKind::Panic => &self.fired_panic,
+            FaultKind::Wedge => &self.fired_wedge,
+            FaultKind::Slow => &self.fired_slow,
+            FaultKind::CacheFail => &self.fired_cache,
+        };
+        ctr.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consume one physical cache write attempt; `true` means this
+    /// attempt must fail. Attempt indices are global across the
+    /// process, matching how a flaky disk doesn't care which flush is
+    /// writing.
+    pub fn cache_write_fails(&self) -> bool {
+        let attempt = self.write_attempts.fetch_add(1, Ordering::Relaxed);
+        let fails = self.cache_fails.binary_search(&attempt).is_ok();
+        if fails {
+            self.note_fired(FaultKind::CacheFail);
+        }
+        fails
+    }
+
+    /// Total injections armed by the spec.
+    pub fn armed(&self) -> usize {
+        self.evals.len() + self.cache_fails.len()
+    }
+
+    /// Total injections that fired so far.
+    pub fn fired(&self) -> usize {
+        self.fired_panic.load(Ordering::Relaxed)
+            + self.fired_wedge.load(Ordering::Relaxed)
+            + self.fired_slow.load(Ordering::Relaxed)
+            + self.fired_cache.load(Ordering::Relaxed)
+    }
+
+    /// One line for the CLI report, e.g.
+    /// `2 armed, 2 fired (panic 1, wedge 0, slow 1, cachefail 0)`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} armed, {} fired (panic {}, wedge {}, slow {}, cachefail {})",
+            self.armed(),
+            self.fired(),
+            self.fired_panic.load(Ordering::Relaxed),
+            self.fired_wedge.load(Ordering::Relaxed),
+            self.fired_slow.load(Ordering::Relaxed),
+            self.fired_cache.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Emulate a wedged evaluation: spin cooperatively (short sleeps, so
+/// the thread stays reapable) until the armed wall deadline — or
+/// [`WEDGE_FUSE`] when none is armed — has elapsed, then report how
+/// long the wedge held the worker. The caller turns this into a
+/// `FailKind::Timeout`.
+pub fn wedge_spin(wall: Option<Duration>) -> Duration {
+    let limit = wall.unwrap_or(WEDGE_FUSE) + SLOW_MARGIN;
+    let start = Instant::now();
+    while start.elapsed() < limit {
+        std::thread::sleep(Duration::from_millis(5).min(limit));
+    }
+    start.elapsed()
+}
+
+/// Emulate a slow evaluation: sleep just past the armed wall deadline
+/// (or [`SLOW_MARGIN`] alone when none is armed — benign, the candidate
+/// then completes normally), then let the real evaluation proceed.
+pub fn crawl(wall: Option<Duration>) {
+    let nap = match wall {
+        Some(w) => w + SLOW_MARGIN,
+        None => SLOW_MARGIN,
+    };
+    std::thread::sleep(nap);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_ci_spec() {
+        let plan = FaultPlan::parse("panic@2,slow@4").unwrap();
+        assert_eq!(plan.armed(), 2);
+        assert_eq!(plan.at_eval(2), Some(FaultKind::Panic));
+        assert_eq!(plan.at_eval(4), Some(FaultKind::Slow));
+        assert_eq!(plan.at_eval(0), None);
+        assert_eq!(plan.fired(), 0);
+    }
+
+    #[test]
+    fn parses_whitespace_and_all_kinds() {
+        let plan = FaultPlan::parse(" wedge@1 , cachefail@0 , panic@9 ").unwrap();
+        assert_eq!(plan.at_eval(1), Some(FaultKind::Wedge));
+        assert_eq!(plan.at_eval(9), Some(FaultKind::Panic));
+        assert_eq!(plan.armed(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in ["", "panic", "panic@", "panic@x", "oops@1", "@3"] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn cache_write_attempts_fire_in_order() {
+        let plan = FaultPlan::parse("cachefail@0,cachefail@2").unwrap();
+        assert!(plan.cache_write_fails()); // attempt 0
+        assert!(!plan.cache_write_fails()); // attempt 1
+        assert!(plan.cache_write_fails()); // attempt 2
+        assert!(!plan.cache_write_fails()); // attempt 3
+        assert_eq!(plan.fired(), 2);
+        assert!(plan.summary().contains("cachefail 2"), "{}", plan.summary());
+    }
+
+    #[test]
+    fn fired_counters_track_notes() {
+        let plan = FaultPlan::parse("panic@0,slow@1").unwrap();
+        plan.note_fired(FaultKind::Panic);
+        plan.note_fired(FaultKind::Slow);
+        assert_eq!(plan.fired(), 2);
+        assert_eq!(plan.summary(), "2 armed, 2 fired (panic 1, wedge 0, slow 1, cachefail 0)");
+    }
+}

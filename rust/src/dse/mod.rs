@@ -26,23 +26,31 @@
 //!   repeated CLI invocations are incremental too;
 //! * [`verify`] — exact-simulator spot checks of chosen frontier
 //!   points at golden scale (`tvec dse --verify`), guarding the
-//!   analytic rate model the whole search ranks on.
+//!   analytic rate model the whole search ranks on;
+//! * [`faults`] — deterministic fault injection (`--inject-faults`):
+//!   seeded candidate panics, wedges, slow evaluations and cache write
+//!   failures, proving the supervision layer in [`evaluate`] classifies
+//!   and quarantines every failure mode instead of dying (DESIGN.md
+//!   §14).
 //!
-//! Entry points: `tvec dse --app <name>` on the CLI, the `dse`
-//! experiment in [`crate::coordinator`], and `examples/autotune.rs`.
+//! Entry points: `tvec dse --app <name>` on the CLI, `tvec dse --serve`
+//! for the long-running daemon, the `dse` experiment in
+//! [`crate::coordinator`], and `examples/autotune.rs`.
 
 pub mod cache;
 pub mod evaluate;
+pub mod faults;
 pub mod pareto;
 pub mod search;
 pub mod space;
 pub mod verify;
 
 pub use evaluate::{ArenaPool, EvalError, Evaluation, Evaluator, FailKind};
+pub use faults::{FaultKind, FaultPlan};
 pub use pareto::{dominates, frontier, resource_score, Objective};
 pub use search::{run_search, SearchBase, SearchConfig, SearchOutcome, Strategy};
 pub use space::{generate, DesignPoint, SpaceOptions};
 pub use verify::{
-    verify_frontier, verify_frontier_in, verify_frontier_observed, VerifyReport,
-    DEFAULT_TOLERANCE,
+    verify_frontier, verify_frontier_budgeted, verify_frontier_in, verify_frontier_observed,
+    verify_frontier_supervised, VerifyBudget, VerifyReport, DEFAULT_TOLERANCE,
 };

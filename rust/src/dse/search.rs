@@ -91,27 +91,54 @@ pub struct SearchConfig {
     /// Seed for the stochastic strategies (anneal's walk, halving's
     /// sampling order). Deterministic: same seed ⇒ same outcome.
     pub seed: u64,
+    /// Per-candidate wall-clock budget in milliseconds. A candidate
+    /// whose evaluation runs past this (wedged simulation, pathological
+    /// compile) is reaped as `FailKind::Timeout` and quarantined —
+    /// never retried within the run. `None` leaves the wall unarmed.
+    pub deadline_ms: Option<u64>,
+    /// Per-candidate slow-cycle budget for exact simulation during
+    /// frontier verification. `None` keeps the built-in
+    /// [`super::verify::MAX_VERIFY_CYCLES`] ceiling.
+    pub sim_cycle_budget: Option<u64>,
 }
 
 impl SearchConfig {
     pub fn exhaustive(objective: Objective) -> SearchConfig {
-        SearchConfig { strategy: Strategy::Exhaustive, objective, budget: None, seed: 1 }
+        SearchConfig {
+            strategy: Strategy::Exhaustive,
+            objective,
+            budget: None,
+            seed: 1,
+            deadline_ms: None,
+            sim_cycle_budget: None,
+        }
     }
 
     pub fn greedy(objective: Objective) -> SearchConfig {
-        SearchConfig { strategy: Strategy::Greedy, objective, budget: None, seed: 1 }
+        SearchConfig { strategy: Strategy::Greedy, ..SearchConfig::exhaustive(objective) }
     }
 
     pub fn anneal(objective: Objective) -> SearchConfig {
-        SearchConfig { strategy: Strategy::Anneal, objective, budget: None, seed: 1 }
+        SearchConfig { strategy: Strategy::Anneal, ..SearchConfig::exhaustive(objective) }
     }
 
     pub fn halving(objective: Objective) -> SearchConfig {
-        SearchConfig { strategy: Strategy::Halving, objective, budget: None, seed: 1 }
+        SearchConfig { strategy: Strategy::Halving, ..SearchConfig::exhaustive(objective) }
     }
 
     pub fn with_seed(mut self, seed: u64) -> SearchConfig {
         self.seed = seed;
+        self
+    }
+
+    /// Arm the per-candidate budgets (wall milliseconds, slow cycles).
+    pub fn with_limits(
+        mut self,
+        deadline_ms: Option<u64>,
+        sim_cycle_budget: Option<u64>,
+    ) -> SearchConfig {
+        self.deadline_ms = deadline_ms;
+        self.sim_cycle_budget = sim_cycle_budget;
         self
     }
 }
@@ -135,6 +162,11 @@ pub struct SearchOutcome {
     /// Candidates that compiled but were rejected by the static
     /// design-rule checker (would deadlock or wedge in simulation).
     pub checker_rejected: usize,
+    /// Candidates whose evaluation panicked; caught, classified and
+    /// quarantined by the supervision layer.
+    pub panicked: usize,
+    /// Candidates reaped by the per-candidate wall or cycle budget.
+    pub timed_out: usize,
     /// True when the budget truncated the sweep.
     pub truncated: bool,
 }
@@ -142,7 +174,13 @@ pub struct SearchOutcome {
 impl SearchOutcome {
     /// Total candidates that did not evaluate, any kind.
     pub fn infeasible(&self) -> usize {
-        self.illegal + self.compile_failed + self.checker_rejected
+        self.illegal + self.compile_failed + self.checker_rejected + self.panicked + self.timed_out
+    }
+
+    /// Candidates quarantined by the supervision layer (never retried
+    /// within a run, never persisted to the disk cache).
+    pub fn quarantined(&self) -> usize {
+        self.panicked + self.timed_out
     }
 }
 
@@ -153,6 +191,8 @@ struct WalkStats {
     illegal: usize,
     compile_failed: usize,
     checker_rejected: usize,
+    panicked: usize,
+    timed_out: usize,
     truncated: bool,
 }
 
@@ -162,6 +202,8 @@ impl WalkStats {
             FailKind::Legality => self.illegal += 1,
             FailKind::Compile => self.compile_failed += 1,
             FailKind::Check => self.checker_rejected += 1,
+            FailKind::Panic => self.panicked += 1,
+            FailKind::Timeout => self.timed_out += 1,
         }
     }
 }
@@ -213,11 +255,15 @@ pub fn run_search(
     if bases.is_empty() {
         return Err("search needs at least one base spec".into());
     }
+    // arm the per-candidate budgets for everything this run evaluates
+    evaluator.set_limits(cfg.deadline_ms, cfg.sim_cycle_budget);
     let mut evaluations: Vec<Evaluation> = Vec::new();
     let mut evaluated = 0usize;
     let mut illegal = 0usize;
     let mut compile_failed = 0usize;
     let mut checker_rejected = 0usize;
+    let mut panicked = 0usize;
+    let mut timed_out = 0usize;
     let mut truncated = false;
     // candidates the stochastic strategies endorse over the plain
     // rank-selection (halving's robust winner)
@@ -262,6 +308,8 @@ pub fn run_search(
                     FailKind::Legality => illegal += 1,
                     FailKind::Compile => compile_failed += 1,
                     FailKind::Check => checker_rejected += 1,
+                    FailKind::Panic => panicked += 1,
+                    FailKind::Timeout => timed_out += 1,
                 },
             }
         }
@@ -392,6 +440,8 @@ pub fn run_search(
         illegal += stats.illegal;
         compile_failed += stats.compile_failed;
         checker_rejected += stats.checker_rejected;
+        panicked += stats.panicked;
+        timed_out += stats.timed_out;
         truncated |= stats.truncated;
         evaluations.extend(evs);
         if let Some(mut w) = winner {
@@ -439,6 +489,8 @@ pub fn run_search(
         illegal,
         compile_failed,
         checker_rejected,
+        panicked,
+        timed_out,
         truncated,
     })
 }
@@ -881,6 +933,8 @@ mod tests {
             objective: Objective::resource(),
             budget: Some(4),
             seed: 1,
+            deadline_ms: None,
+            sim_cycle_budget: None,
         };
         let out =
             run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
@@ -975,6 +1029,8 @@ mod tests {
             objective: Objective::resource(),
             budget: Some(3),
             seed: 5,
+            deadline_ms: None,
+            sim_cycle_budget: None,
         };
         let ev = Evaluator::new();
         let out = run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
@@ -999,6 +1055,8 @@ mod tests {
             objective: Objective::resource(),
             budget: Some(4),
             seed: 1,
+            deadline_ms: None,
+            sim_cycle_budget: None,
         };
         let ev = Evaluator::new();
         let cold = run_search(&ev, &vecadd_bases(), &device, &small_opts(), &cfg).unwrap();
@@ -1048,6 +1106,8 @@ mod tests {
             objective: Objective::resource(),
             budget: Some(8),
             seed: 2,
+            deadline_ms: None,
+            sim_cycle_budget: None,
         };
         let out =
             run_search(&Evaluator::new(), &vecadd_bases(), &device, &small_opts(), &cfg)

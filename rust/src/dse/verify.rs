@@ -17,11 +17,13 @@
 //! the same configuration compiled at search scale, so lowering must
 //! not break when only the bindings shrink.
 
+use std::time::Duration;
+
 use crate::coordinator::pipeline::{compile_staged, BuildSpec, Stage};
-use crate::sim::{rate_model, run_exact_observed_in, Arena, Hbm};
+use crate::sim::{is_timeout_error, rate_model, run_exact_deadline_in, Arena, Hbm};
 use crate::telemetry::Recorder;
 
-use super::evaluate::{ArenaPool, Evaluation};
+use super::evaluate::{ArenaPool, Evaluation, Evaluator};
 
 /// Accept rate-model vs exact-sim cycle ratios within ±40 % — the
 /// envelope the simulator's own cross-validation tests use (vecadd
@@ -30,6 +32,37 @@ pub const DEFAULT_TOLERANCE: f64 = 0.40;
 
 /// Exact-sim cycle budget per verified point (slow cycles).
 pub const MAX_VERIFY_CYCLES: u64 = 50_000_000;
+
+/// Per-point budgets for supervised verification: a slow-cycle ceiling
+/// and an optional wall-clock deadline. The default is the historical
+/// behaviour — [`MAX_VERIFY_CYCLES`], no wall. A point that exhausts
+/// either budget is reported as a *skip* with a `timed out:` reason
+/// (visible, never silent, never fatal) — a deadline-bounded serving
+/// daemon must degrade one verification, not abort the sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyBudget {
+    /// Exact-sim slow-cycle ceiling.
+    pub max_cycles: u64,
+    /// Wall-clock deadline for one point's exact simulation.
+    pub wall: Option<Duration>,
+}
+
+impl Default for VerifyBudget {
+    fn default() -> VerifyBudget {
+        VerifyBudget { max_cycles: MAX_VERIFY_CYCLES, wall: None }
+    }
+}
+
+impl VerifyBudget {
+    /// The budgets the evaluator's armed limits imply (what
+    /// `SearchConfig::with_limits` threaded through `run_search`).
+    pub fn from_evaluator(evaluator: &Evaluator) -> VerifyBudget {
+        VerifyBudget {
+            max_cycles: evaluator.sim_cycle_budget(),
+            wall: evaluator.wall_budget(),
+        }
+    }
+}
 
 /// One verified frontier point.
 #[derive(Clone, Debug)]
@@ -75,15 +108,34 @@ pub fn verify_point_observed(
     arena: &mut Arena,
     rec: Option<&Recorder>,
 ) -> Result<VerifyReport, String> {
+    verify_point_budgeted(golden_base, e, inputs, tolerance, VerifyBudget::default(), arena, rec)
+}
+
+/// [`verify_point_observed`] under explicit per-point budgets. A point
+/// that exhausts its slow-cycle ceiling or wall deadline comes back as
+/// a skip (`timed out: …`) with a `timeout` span outcome.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_point_budgeted(
+    golden_base: &BuildSpec,
+    e: &Evaluation,
+    inputs: &[(String, Vec<f32>)],
+    tolerance: f64,
+    budget: VerifyBudget,
+    arena: &mut Arena,
+    rec: Option<&Recorder>,
+) -> Result<VerifyReport, String> {
     let mut sp = rec.map(|r| r.span("dse.verify"));
     if let Some(s) = sp.as_mut() {
         s.note("label", &e.label);
     }
-    let report = verify_point_inner(golden_base, e, inputs, tolerance, arena, rec);
+    let report = verify_point_inner(golden_base, e, inputs, tolerance, budget, arena, rec);
     if let Some(s) = sp.as_mut() {
         s.note(
             "outcome",
             match &report {
+                Ok(r) if r.skipped.as_deref().is_some_and(|m| m.starts_with("timed out")) => {
+                    "timeout"
+                }
                 Ok(r) if r.skipped.is_some() => "skipped",
                 Ok(r) if r.within => "within",
                 Ok(_) => "drift",
@@ -99,6 +151,7 @@ fn verify_point_inner(
     e: &Evaluation,
     inputs: &[(String, Vec<f32>)],
     tolerance: f64,
+    budget: VerifyBudget,
     arena: &mut Arena,
     rec: Option<&Recorder>,
 ) -> Result<VerifyReport, String> {
@@ -127,10 +180,28 @@ fn verify_point_inner(
     for (name, data) in inputs {
         hbm.load(name, data.clone());
     }
-    let exact = run_exact_observed_in(&c.design, hbm, MAX_VERIFY_CYCLES, arena, rec)
-        .map_err(|err| format!("{}: exact simulation failed: {err}", e.label))?
-        .stats
-        .slow_cycles;
+    let exact =
+        match run_exact_deadline_in(&c.design, hbm, budget.max_cycles, budget.wall, arena, rec) {
+            Ok(out) => out.stats.slow_cycles,
+            // budget exhaustion (slow-cycle ceiling or wall deadline)
+            // is a visible skip, not a fatal error: the candidate
+            // already evaluated under the rate model, this re-check
+            // simply could not afford to finish
+            Err(err) if is_timeout_error(&err) => {
+                if let Some(r) = rec {
+                    r.add("dse.verify.timeouts", 1);
+                }
+                return Ok(VerifyReport {
+                    label: e.label.clone(),
+                    rate_cycles: rate,
+                    exact_cycles: 0,
+                    ratio: 0.0,
+                    within: false,
+                    skipped: Some(format!("timed out: {err}")),
+                });
+            }
+            Err(err) => return Err(format!("{}: exact simulation failed: {err}", e.label)),
+        };
     let ratio = rate as f64 / exact.max(1) as f64;
     Ok(VerifyReport {
         label: e.label.clone(),
@@ -180,14 +251,60 @@ pub fn verify_frontier_observed(
     pool: &ArenaPool,
     rec: Option<&Recorder>,
 ) -> Result<Vec<VerifyReport>, String> {
+    verify_frontier_budgeted(
+        frontier,
+        golden_bases,
+        inputs,
+        tolerance,
+        VerifyBudget::default(),
+        pool,
+        rec,
+    )
+}
+
+/// [`verify_frontier_observed`] under explicit per-point budgets:
+/// points that exhaust a budget come back as `timed out:` skips.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_frontier_budgeted(
+    frontier: &[Evaluation],
+    golden_bases: &[BuildSpec],
+    inputs: &[(String, Vec<f32>)],
+    tolerance: f64,
+    budget: VerifyBudget,
+    pool: &ArenaPool,
+    rec: Option<&Recorder>,
+) -> Result<Vec<VerifyReport>, String> {
     let mut out = Vec::with_capacity(frontier.len());
     for e in frontier {
         let base = frontier_base(golden_bases, e)?;
-        out.push(
-            pool.run(|arena| verify_point_observed(base, e, inputs, tolerance, arena, rec))?,
-        );
+        out.push(pool.run(|arena| {
+            verify_point_budgeted(base, e, inputs, tolerance, budget, arena, rec)
+        })?);
     }
     Ok(out)
+}
+
+/// [`verify_frontier_budgeted`] reading its budgets and arena pool off
+/// the evaluator that ran the search — the supervised serving path:
+/// whatever `--deadline-ms` / `--sim-cycle-budget` armed for candidate
+/// evaluation also bounds the frontier re-check.
+pub fn verify_frontier_supervised(
+    frontier: &[Evaluation],
+    golden_bases: &[BuildSpec],
+    inputs: &[(String, Vec<f32>)],
+    tolerance: f64,
+    evaluator: &Evaluator,
+    rec: Option<&Recorder>,
+) -> Result<Vec<VerifyReport>, String> {
+    verify_frontier_budgeted(
+        frontier,
+        golden_bases,
+        inputs,
+        tolerance,
+        VerifyBudget::from_evaluator(evaluator),
+        evaluator.arenas(),
+        rec,
+    )
 }
 
 fn frontier_base<'a>(
@@ -290,6 +407,67 @@ mod tests {
         let r = verify_point(&spec, &e, &[], DEFAULT_TOLERANCE, &mut Arena::new()).unwrap();
         let reason = r.skipped.expect("must be skipped, not failed");
         assert!(reason.contains("not legal at golden scale"), "{reason}");
+    }
+
+    #[test]
+    fn exhausted_cycle_budget_is_a_visible_timeout_skip() {
+        // a 1-slow-cycle ceiling cannot complete any real simulation
+        let (golden, inputs) = vecadd_golden();
+        let e = eval_at_paper_scale(DesignPoint {
+            vectorize: Some(("vadd".into(), 8)),
+            ..DesignPoint::original()
+        });
+        let budget = VerifyBudget { max_cycles: 1, wall: None };
+        let r = verify_point_budgeted(
+            &golden,
+            &e,
+            &inputs,
+            DEFAULT_TOLERANCE,
+            budget,
+            &mut Arena::new(),
+            None,
+        )
+        .unwrap();
+        let reason = r.skipped.expect("must be skipped, not failed");
+        assert!(reason.starts_with("timed out:"), "{reason}");
+        assert!(r.rate_cycles > 0, "the rate model still priced the point");
+    }
+
+    #[test]
+    fn exhausted_wall_deadline_is_a_visible_timeout_skip() {
+        // a zero wall deadline reaps the simulation deterministically
+        let (golden, inputs) = vecadd_golden();
+        let e = eval_at_paper_scale(DesignPoint {
+            vectorize: Some(("vadd".into(), 8)),
+            ..DesignPoint::original()
+        });
+        let budget =
+            VerifyBudget { max_cycles: MAX_VERIFY_CYCLES, wall: Some(Duration::ZERO) };
+        let r = verify_point_budgeted(
+            &golden,
+            &e,
+            &inputs,
+            DEFAULT_TOLERANCE,
+            budget,
+            &mut Arena::new(),
+            None,
+        )
+        .unwrap();
+        let reason = r.skipped.expect("must be skipped, not failed");
+        assert!(reason.starts_with("timed out:"), "{reason}");
+        assert!(reason.contains("wall-clock deadline"), "{reason}");
+    }
+
+    #[test]
+    fn supervised_budget_reads_the_evaluator_limits() {
+        let ev = Evaluator::new();
+        let b = VerifyBudget::from_evaluator(&ev);
+        assert_eq!(b.max_cycles, MAX_VERIFY_CYCLES);
+        assert!(b.wall.is_none());
+        ev.set_limits(Some(250), Some(1_000));
+        let armed = VerifyBudget::from_evaluator(&ev);
+        assert_eq!(armed.max_cycles, 1_000);
+        assert_eq!(armed.wall, Some(Duration::from_millis(250)));
     }
 
     #[test]

@@ -67,6 +67,22 @@ fn main() {
             "cache-compact",
             "dse: evicting flush — keep ONLY the entries this run used",
         )
+        .opt(
+            "deadline-ms",
+            "dse: per-candidate wall-clock budget in ms (over-budget ⇒ quarantined)",
+        )
+        .opt(
+            "sim-cycle-budget",
+            "dse: per-candidate exact-sim slow-cycle ceiling for --verify",
+        )
+        .opt(
+            "inject-faults",
+            "dse: deterministic fault spec, e.g. panic@2,slow@4 (see DESIGN.md §14)",
+        )
+        .opt(
+            "serve",
+            "dse: serve NDJSON search requests on this Unix socket instead of sweeping",
+        )
         .flag("json", "bench: write the BENCH_sim.json artifact")
         .flag("smoke", "bench: CI-scale problem sizes and iteration counts")
         .flag("emit", "write generated HLS/RTL text files to ./generated")
@@ -434,7 +450,41 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
             format!("invalid --budget '{raw}' (want a non-negative integer)")
         })?),
     };
-    let cfg = SearchConfig { strategy, objective, budget, seed };
+    // --deadline-ms / --sim-cycle-budget: the per-candidate supervision
+    // budgets (DESIGN.md §14); typos rejected like --budget
+    let deadline_ms = match args.get("deadline-ms") {
+        None => None,
+        Some(raw) => Some(raw.parse::<u64>().map_err(|_| {
+            format!("invalid --deadline-ms '{raw}' (want milliseconds)")
+        })?),
+    };
+    let sim_cycle_budget = match args.get("sim-cycle-budget") {
+        None => None,
+        Some(raw) => Some(raw.parse::<u64>().map_err(|_| {
+            format!("invalid --sim-cycle-budget '{raw}' (want a slow-cycle count)")
+        })?),
+    };
+    // --inject-faults: a deterministic fault schedule for exercising
+    // the supervision paths (CI greps the classified outcomes)
+    let faults = match args.get("inject-faults") {
+        None => None,
+        Some(spec) => Some(
+            temporal_vec::dse::FaultPlan::parse(spec)
+                .map_err(|e| format!("--inject-faults: {e}"))?,
+        ),
+    };
+    let cfg = SearchConfig { strategy, objective, budget, seed, deadline_ms, sim_cycle_budget };
+
+    // --serve: hand everything to the daemon instead of sweeping
+    if let Some(socket) = args.get("serve") {
+        let mut sopts = temporal_vec::coordinator::ServeOptions::new(socket);
+        sopts.cache_dir = args.get("cache-dir").map(std::path::PathBuf::from);
+        sopts.deadline_ms = deadline_ms;
+        sopts.sim_cycle_budget = sim_cycle_budget;
+        sopts.faults = faults;
+        sopts.seed = seed;
+        return temporal_vec::coordinator::run_serve(sopts);
+    }
     // --tolerance: a NaN parses fine but fails every |ratio − 1| ≤ tol
     // comparison (and a negative one fails all, a huge one passes all)
     // without any hint of the bad flag — demand a finite non-negative
@@ -469,6 +519,10 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
         }
         None => Evaluator::new(),
     };
+    let evaluator = match faults {
+        Some(plan) => evaluator.with_faults(plan),
+        None => evaluator,
+    };
     // --trace-out: attach a recorder — per-candidate spans, compile
     // stage spans, search-round cache counters, observed exact sims
     let recorder = args
@@ -479,28 +533,48 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
         None => evaluator,
     };
     let mut verify_failures: Vec<String> = Vec::new();
-    // a fatal error still flushes the cache first — nothing already
-    // compiled is lost to a late failure
-    let mut fatal: Option<String> = None;
 
-    for name in names {
-        let step = run_dse_app(
-            name,
-            n_override,
-            seed,
-            &device,
-            &cfg,
-            &evaluator,
-            args.flag("verify"),
-            args.flag("mixed-factors"),
-            pump_modes.as_deref(),
-            cli_tolerance,
-            &mut verify_failures,
-        );
-        if let Err(e) = step {
-            fatal = Some(e);
-            break;
+    // a fatal error still flushes the cache first — nothing already
+    // compiled is lost to a late failure. The same holds for a panic
+    // escaping the sweep itself: the supervision layer catches
+    // per-candidate panics, but a defect in reporting or selection
+    // would unwind right through here, so flush (merging — never
+    // compacting off a poisoned run) before letting the process die.
+    let sweep = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        for name in names {
+            let step = run_dse_app(
+                name,
+                n_override,
+                seed,
+                &device,
+                &cfg,
+                &evaluator,
+                args.flag("verify"),
+                args.flag("mixed-factors"),
+                pump_modes.as_deref(),
+                cli_tolerance,
+                &mut verify_failures,
+            );
+            if let Err(e) = step {
+                return Some(e);
+            }
         }
+        None
+    }));
+    let fatal: Option<String> = match sweep {
+        Ok(f) => f,
+        Err(payload) => {
+            if args.get("cache-dir").is_some() {
+                match evaluator.flush() {
+                    Ok(n) => eprintln!("cache: flushed {n} entries before unwinding"),
+                    Err(e) => eprintln!("warning: cache flush during unwind failed: {e}"),
+                }
+            }
+            std::panic::resume_unwind(payload);
+        }
+    };
+    if let Some(plan) = evaluator.faults() {
+        println!("faults: {}", plan.summary());
     }
 
     // export the trace even after a fatal step — a partial trace is
@@ -687,7 +761,7 @@ fn run_dse_app(
     cli_tolerance: Option<f64>,
     verify_failures: &mut Vec<String>,
 ) -> Result<(), String> {
-    use temporal_vec::dse::{run_search, verify_frontier_observed};
+    use temporal_vec::dse::{run_search, verify_frontier_supervised};
     use temporal_vec::util::table::{fnum, pct, Table};
 
     // per-app default envelope; an explicit --tolerance always wins
@@ -776,13 +850,15 @@ fn run_dse_app(
     }
     println!(
         "evaluations: {} issued ({} cache hits, {} new compiles, {} legality-pruned, \
-         {} compile failures, {} checker-rejected{})",
+         {} compile failures, {} checker-rejected, {} panicked, {} timed-out{})",
         outcome.evaluated,
         evaluator.cache_hits() - hits_before,
         evaluator.cache_misses() - misses_before,
         outcome.illegal,
         outcome.compile_failed,
         outcome.checker_rejected,
+        outcome.panicked,
+        outcome.timed_out,
         if outcome.truncated { ", budget hit" } else { "" }
     );
 
@@ -809,13 +885,16 @@ fn run_dse_app(
     } else {
         let rig = temporal_vec::coordinator::golden_rig(name, seed)?;
         // exact sims run inside the evaluator's arena pool: every
-        // frontier point after the first recycles the same slabs
-        let reports = verify_frontier_observed(
+        // frontier point after the first recycles the same slabs.
+        // Supervised: the same --deadline-ms / --sim-cycle-budget that
+        // bounded candidate evaluation bounds each re-check, so one
+        // wedged frontier point degrades to a visible skip
+        let reports = verify_frontier_supervised(
             &outcome.frontier,
             &rig.bases,
             &rig.inputs,
             tolerance,
-            evaluator.arenas(),
+            evaluator,
             evaluator.probe(),
         )?;
         let mut vt = Table::new(

@@ -10,6 +10,8 @@
 //! peaks persist; live slots from an aborted previous run are
 //! reclaimed).
 
+use std::time::{Duration, Instant};
+
 use super::arena::{Arena, ArenaStats};
 use super::channel::{Channels, Fifo};
 use super::memory::Hbm;
@@ -17,6 +19,19 @@ use super::process::Proc;
 use super::stats::SimStats;
 use crate::codegen::design::{Design, ModuleSpec};
 use crate::ir::ClockDomain;
+
+/// Marker embedded in every wall-deadline error message, so callers
+/// (the DSE supervision layer) can classify a reaped simulation without
+/// string-matching incidental wording.
+pub const WALL_DEADLINE_MARK: &str = "exceeded its wall-clock deadline";
+
+/// Is this simulation error a budget exhaustion (wall-clock deadline or
+/// slow-cycle ceiling), as opposed to a genuine deadlock or misbuild?
+/// The DSE verify path maps these to `FailKind::Timeout`.
+pub fn is_timeout_error(msg: &str) -> bool {
+    msg.contains(WALL_DEADLINE_MARK)
+        || (msg.contains("exceeded") && msg.contains("slow cycles"))
+}
 
 /// Result of a functional or exact run.
 #[derive(Debug)]
@@ -180,11 +195,39 @@ pub fn run_exact_in(
 /// by a property test in `rust/tests/properties.rs`).
 pub fn run_exact_observed_in(
     design: &Design,
-    mut hbm: Hbm,
+    hbm: Hbm,
     max_cycles: u64,
     arena: &mut Arena,
     rec: Option<&crate::telemetry::Recorder>,
 ) -> Result<SimOutcome, String> {
+    run_exact_deadline_in(design, hbm, max_cycles, None, arena, rec)
+}
+
+/// [`run_exact_observed_in`] with an optional wall-clock deadline. The
+/// deadline is checked at every rep boundary and amortized over the
+/// event loop (every 256 scheduler iterations), so a wedged or
+/// pathologically slow simulation is reaped within milliseconds of the
+/// limit without putting an `Instant::now()` on every cycle. With
+/// `wall: None` the run is bit-identical to [`run_exact_observed_in`].
+/// A reaped run returns an error carrying [`WALL_DEADLINE_MARK`], which
+/// [`is_timeout_error`] classifies.
+pub fn run_exact_deadline_in(
+    design: &Design,
+    mut hbm: Hbm,
+    max_cycles: u64,
+    wall: Option<Duration>,
+    arena: &mut Arena,
+    rec: Option<&crate::telemetry::Recorder>,
+) -> Result<SimOutcome, String> {
+    let deadline = wall.map(|limit| (Instant::now(), limit));
+    let reaped = |elapsed: Duration, limit: Duration| {
+        format!(
+            "exact simulation of '{}' {WALL_DEADLINE_MARK} ({}ms limit, {}ms elapsed)",
+            design.name,
+            limit.as_millis(),
+            elapsed.as_millis()
+        )
+    };
     arena.reset();
     for (name, elems, _) in &design.arrays {
         hbm.alloc(name, *elems);
@@ -282,7 +325,13 @@ pub fn run_exact_observed_in(
     let mut sleep_done: Vec<bool> = vec![false; n];
 
     let mut fast_t: u64 = 0; // the legacy stepper's fast_t at rep boundaries
+    let mut wall_tick = 0u32; // amortizes the deadline check over iterations
     for rep in 0..design.repeat {
+        if let Some((t0, limit)) = deadline {
+            if t0.elapsed() > limit {
+                return Err(reaped(t0.elapsed(), limit));
+            }
+        }
         if rep > 0 {
             for p in procs.iter_mut() {
                 p.reset_for_repeat();
@@ -300,6 +349,14 @@ pub fn run_exact_observed_in(
 
         let final_t0: u64; // the rep's last legacy cycle (break cycle)
         loop {
+            wall_tick = wall_tick.wrapping_add(1);
+            if wall_tick & 0xff == 0 {
+                if let Some((t0, limit)) = deadline {
+                    if t0.elapsed() > limit {
+                        return Err(reaped(t0.elapsed(), limit));
+                    }
+                }
+            }
             let t = next_tick.iter().copied().min().unwrap_or(IDLE);
             if t > break_t0 {
                 // a gap: the legacy stepper had an idle cycle at
@@ -903,6 +960,48 @@ mod tests {
         let r = run_exact_reference(&d, input_hbm(4096, 8), 10).unwrap_err();
         assert_eq!(e, r);
         assert!(e.contains("exceeded"), "{e}");
+    }
+
+    #[test]
+    fn wall_deadline_reaps_a_run_and_classifies_as_timeout() {
+        let d = vecadd_design(4096, 4, true);
+        // a zero deadline is already elapsed at the first rep boundary
+        let e = run_exact_deadline_in(
+            &d,
+            input_hbm(4096, 8),
+            10_000_000,
+            Some(Duration::ZERO),
+            &mut Arena::new(),
+            None,
+        )
+        .unwrap_err();
+        assert!(e.contains(WALL_DEADLINE_MARK), "{e}");
+        assert!(is_timeout_error(&e), "{e}");
+        // the slow-cycle ceiling message classifies as a timeout too...
+        let budget = run_exact(&d, input_hbm(4096, 8), 10).unwrap_err();
+        assert!(is_timeout_error(&budget), "{budget}");
+        // ...but a deadlock report does not
+        assert!(!is_timeout_error("deadlock at fast cycle 42: stuck [pe0]"));
+    }
+
+    #[test]
+    fn deadline_none_path_is_bit_identical() {
+        let n = 512usize;
+        let d = vecadd_design(n as i64, 4, true);
+        let plain = run_exact(&d, input_hbm(n, 11), 10_000_000).unwrap();
+        let gated = run_exact_deadline_in(
+            &d,
+            input_hbm(n, 11),
+            10_000_000,
+            // a generous live deadline must not perturb the run either
+            Some(Duration::from_secs(600)),
+            &mut Arena::new(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(plain.stats.slow_cycles, gated.stats.slow_cycles);
+        assert_eq!(plain.stats.fast_cycles, gated.stats.fast_cycles);
+        assert_eq!(plain.hbm.read("z"), gated.hbm.read("z"));
     }
 
     #[test]

@@ -44,9 +44,9 @@ pub mod trace;
 
 pub use arena::{Arena, ArenaStats, Txn};
 pub use engine::{
-    exact_engines_agree, exact_engines_agree_in, rate_model, run_exact, run_exact_in,
-    run_exact_observed_in, run_exact_reference, run_exact_reference_in, run_functional,
-    run_functional_in, SimOutcome,
+    exact_engines_agree, exact_engines_agree_in, is_timeout_error, rate_model, run_exact,
+    run_exact_deadline_in, run_exact_in, run_exact_observed_in, run_exact_reference,
+    run_exact_reference_in, run_functional, run_functional_in, SimOutcome,
 };
 pub use memory::Hbm;
 pub use stats::SimStats;

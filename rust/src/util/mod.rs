@@ -5,12 +5,26 @@
 
 pub mod bench;
 pub mod cli;
+pub mod json;
 pub mod quickcheck;
 pub mod rng;
 pub mod table;
 
 pub use rng::Rng;
 pub use table::Table;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// The DSE supervision layer catches candidate panics with
+/// `catch_unwind`; any mutex the panicking closure held is poisoned as
+/// a side effect even though the protected data (memo maps, arena free
+/// lists) is still structurally valid — every critical section either
+/// completes its insert or doesn't. Treating poison as fatal would turn
+/// one quarantined candidate into a dead evaluator, so shared DSE state
+/// locks through this helper instead of `.lock().unwrap()`.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// The FNV-1a 64-bit offset basis: the seed every content hash in the
 /// crate chains from (dse fingerprints, the cached SDFG print hash).

@@ -5,8 +5,8 @@
 use temporal_vec::apps;
 use temporal_vec::coordinator::BuildSpec;
 use temporal_vec::dse::{
-    run_search, DesignPoint, Evaluator, Objective, SearchBase, SearchConfig, SpaceOptions,
-    Strategy,
+    frontier, generate, run_search, DesignPoint, Evaluator, FaultPlan, Objective, SearchBase,
+    SearchConfig, SpaceOptions, Strategy,
 };
 use temporal_vec::hw::Device;
 use temporal_vec::ir::PumpMode;
@@ -218,6 +218,8 @@ fn dse_greedy_respects_budget_and_stays_sane() {
         objective: Objective::resource(),
         budget: Some(30),
         seed: 1,
+        deadline_ms: None,
+        sim_cycle_budget: None,
     };
     let out = run_search(&Evaluator::new(), &bases, &device, &opts, &cfg).unwrap();
     assert!(out.evaluated <= 30);
@@ -247,6 +249,8 @@ fn dse_all_strategies_agree_on_the_small_vecadd_space() {
             objective: Objective::resource(),
             budget: None,
             seed: 23,
+            deadline_ms: None,
+            sim_cycle_budget: None,
         };
         let out = run_search(&ev, &bases, &device, &opts, &cfg).unwrap();
         chosen_points.push((strategy, out.chosen.unwrap().point));
@@ -319,8 +323,8 @@ fn dse_persistent_cache_survives_corruption_as_cold_start() {
     // and the evaluator still works end to end
     let device = Device::u280();
     let (bases, opts) = vecadd_problem(11);
-    let out = run_search(&ev, &bases, &device, &opts, &SearchConfig::exhaustive(Objective::resource()))
-        .unwrap();
+    let cfg = SearchConfig::exhaustive(Objective::resource());
+    let out = run_search(&ev, &bases, &device, &opts, &cfg).unwrap();
     assert!(out.chosen.is_some());
     // a flush repairs the store
     ev.flush().unwrap();
@@ -641,4 +645,275 @@ fn dse_failure_kinds_are_reported_separately() {
     );
     assert_eq!(out.compile_failed, 0, "nothing should hard-fail compilation");
     assert_eq!(out.infeasible(), out.illegal + out.compile_failed);
+}
+
+/// The unpumped-single-replica predicate `run_search` uses for its
+/// baseline sweep — reproduced white-box so fault tests can compute
+/// deterministic evaluation ordinals (baselines are issued first, in
+/// grid order; the exhaustive batch follows, baselines excluded).
+fn is_baseline(p: &DesignPoint) -> bool {
+    p.pump.is_none() && p.regions.is_none() && p.replicas == 1 && p.cl0_request_mhz.is_none()
+}
+
+/// Ordinal of the first exhaustive-batch evaluation (== the number of
+/// baseline candidates issued before it) plus the grid-ordered pumped
+/// batch, for one-base exhaustive sweeps.
+fn exhaustive_ordinals(
+    bases: &[SearchBase],
+    device: &Device,
+    opts: &SpaceOptions,
+) -> (usize, Vec<DesignPoint>) {
+    let grid = generate(&bases[0].spec, device, opts);
+    let baseline_count = grid.iter().filter(|p| is_baseline(p)).count();
+    let batch: Vec<DesignPoint> = grid
+        .into_iter()
+        .filter(|p| *p != DesignPoint::original() && !is_baseline(p))
+        .collect();
+    (baseline_count, batch)
+}
+
+#[test]
+fn dse_faulted_sweep_completes_and_matches_the_faultless_frontier() {
+    // the PR's acceptance test: a sweep with one panicking and one
+    // wedging candidate finishes exit-0, classifies both distinctly,
+    // and its frontier equals the fault-free frontier computed over
+    // the surviving candidates
+    let device = Device::u280();
+    let (bases, opts) = vecadd_problem(11);
+    let cfg =
+        SearchConfig::exhaustive(Objective::resource()).with_limits(Some(2_000), None);
+
+    let clean = run_search(&Evaluator::new(), &bases, &device, &opts, &cfg).unwrap();
+    assert_eq!(clean.quarantined(), 0);
+
+    let (baseline_count, batch) = exhaustive_ordinals(&bases, &device, &opts);
+    assert!(batch.len() >= 2, "need two pumped candidates to fault");
+    let faulted_points = [batch[0].clone(), batch[1].clone()];
+    let faulted_labels: Vec<String> = clean
+        .evaluations
+        .iter()
+        .filter(|e| faulted_points.contains(&e.point))
+        .map(|e| e.label.clone())
+        .collect();
+    assert_eq!(faulted_labels.len(), 2, "both faulted candidates evaluate cleanly unfaulted");
+
+    let spec = format!("panic@{},wedge@{}", baseline_count, baseline_count + 1);
+    let ev = Evaluator::new().with_faults(FaultPlan::parse(&spec).unwrap());
+    let faulted = run_search(&ev, &bases, &device, &opts, &cfg).unwrap();
+    assert_eq!(faulted.panicked, 1, "the injected panic must classify as FailKind::Panic");
+    assert_eq!(faulted.timed_out, 1, "the injected wedge must be reaped as FailKind::Timeout");
+    assert_eq!(faulted.quarantined(), 2);
+    assert_eq!(ev.faults().unwrap().fired(), 2);
+
+    // frontier equality over the survivors
+    let survivors: Vec<temporal_vec::dse::Evaluation> = clean
+        .evaluations
+        .iter()
+        .filter(|e| !faulted_labels.contains(&e.label))
+        .cloned()
+        .collect();
+    let expect: Vec<String> = frontier(&survivors).iter().map(|e| e.label.clone()).collect();
+    let got: Vec<String> = faulted.frontier.iter().map(|e| e.label.clone()).collect();
+    assert_eq!(got, expect, "faulted frontier diverged from the fault-free survivors");
+
+    // the evaluator is still healthy: no poisoned mutex, no leaked
+    // arena slots, and a quarantined candidate is never retried
+    let base = &bases[0];
+    let again = ev.evaluate(&base.spec, &faulted_points[0], base.flops);
+    assert!(
+        matches!(&again, Err(e) if e.kind == temporal_vec::dse::FailKind::Panic),
+        "quarantined candidate must stay quarantined within the run"
+    );
+    assert_eq!(ev.faults().unwrap().fired(), 2, "a memoized quarantine hit must not re-fire");
+    ev.evaluate(&base.spec, &DesignPoint::original(), base.flops).unwrap();
+}
+
+#[test]
+fn dse_cache_write_faults_retry_then_degrade_without_crashing() {
+    let device = Device::u280();
+    let (bases, opts) = vecadd_problem(11);
+    let base = &bases[0];
+
+    // one injected write failure: the bounded retry recovers and the
+    // store still lands on disk
+    let dir = std::env::temp_dir().join(format!("tvec-dse-iofault-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ev = Evaluator::with_cache_dir(&dir)
+        .with_faults(FaultPlan::parse("cachefail@0").unwrap());
+    run_search(&ev, &bases, &device, &opts, &SearchConfig::exhaustive(Objective::resource()))
+        .unwrap();
+    let flushed = ev.flush().unwrap();
+    assert!(flushed > 0, "retried flush must persist the sweep");
+    assert!(!ev.degraded());
+    assert_eq!(ev.faults().unwrap().fired(), 1);
+    let reloaded = Evaluator::with_cache_dir(&dir);
+    assert!(reloaded.cold_reason().is_none());
+    assert_eq!(reloaded.loaded_entries(), flushed);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // every attempt fails: the evaluator degrades to in-memory-only
+    // with a warning — never a crash, and never a failed sweep
+    let dir2 = std::env::temp_dir().join(format!("tvec-dse-iofault2-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir2);
+    std::fs::create_dir_all(&dir2).unwrap();
+    let ev2 = Evaluator::with_cache_dir(&dir2)
+        .with_faults(FaultPlan::parse("cachefail@0,cachefail@1,cachefail@2,cachefail@3").unwrap());
+    ev2.evaluate(&base.spec, &DesignPoint::original(), base.flops).unwrap();
+    assert_eq!(ev2.flush().unwrap(), 0, "exhausted retries must degrade, not error");
+    assert!(ev2.degraded());
+    // still evaluable after degrading, and later flushes stay quiet
+    let pumped = DesignPoint {
+        vectorize: Some(("vadd".into(), 4)),
+        pump: Some((2, PumpMode::Resource)),
+        ..DesignPoint::original()
+    };
+    ev2.evaluate(&base.spec, &pumped, base.flops).unwrap();
+    assert_eq!(ev2.flush().unwrap(), 0);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+#[test]
+fn dse_quarantined_failures_are_not_persisted() {
+    // a panic entry is memo-cached for the run (no retry storms) but
+    // must never reach the disk store: the next process gets a clean
+    // shot at the candidate
+    let device = Device::u280();
+    let (bases, opts) = vecadd_problem(11);
+    let cfg = SearchConfig::exhaustive(Objective::resource());
+    let dir = std::env::temp_dir().join(format!("tvec-dse-quar-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let (baseline_count, _) = exhaustive_ordinals(&bases, &device, &opts);
+    let ev = Evaluator::with_cache_dir(&dir)
+        .with_faults(FaultPlan::parse(&format!("panic@{baseline_count}")).unwrap());
+    let faulted = run_search(&ev, &bases, &device, &opts, &cfg).unwrap();
+    assert_eq!(faulted.panicked, 1);
+    let flushed = ev.flush().unwrap();
+
+    let warm = Evaluator::with_cache_dir(&dir);
+    assert_eq!(warm.loaded_entries(), flushed, "quarantined entry must not be persisted");
+    let healed = run_search(&warm, &bases, &device, &opts, &cfg).unwrap();
+    assert_eq!(healed.panicked, 0);
+    assert_eq!(
+        warm.cache_misses(),
+        1,
+        "exactly the formerly quarantined candidate re-compiles on the warm run"
+    );
+    // and the healed sweep matches a never-faulted one
+    let clean = run_search(&Evaluator::new(), &bases, &device, &opts, &cfg).unwrap();
+    let healed_front: Vec<String> =
+        healed.frontier.iter().map(|e| e.label.clone()).collect();
+    let clean_front: Vec<String> = clean.frontier.iter().map(|e| e.label.clone()).collect();
+    assert_eq!(healed_front, clean_front);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dse_concurrent_flush_lock_skips_and_recovers() {
+    // the flush-race satellite: a live advisory lock makes a merging
+    // flush skip (entries stay in memory, nothing is lost) and makes
+    // compaction fail loudly; once the lock is gone the same evaluator
+    // flushes normally
+    let device = Device::u280();
+    let (bases, _opts) = vecadd_problem(11);
+    let base = &bases[0];
+    let dir = std::env::temp_dir().join(format!("tvec-dse-lock-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = dir.join(temporal_vec::dse::cache::FILE_NAME);
+    let lock = store.with_extension("lock");
+    std::fs::write(&lock, b"").unwrap();
+
+    let ev = Evaluator::with_cache_dir(&dir);
+    ev.evaluate(&base.spec, &DesignPoint::original(), base.flops).unwrap();
+    assert_eq!(ev.flush().unwrap(), 0, "contended merging flush must skip, not fail");
+    assert!(!store.exists(), "a skipped flush must not have touched the store");
+    assert!(!ev.degraded(), "lock contention is not IO degradation");
+    let compact_err = ev.flush_compacted().unwrap_err();
+    assert!(compact_err.contains("locked"), "{compact_err}");
+
+    std::fs::remove_file(&lock).unwrap();
+    let flushed = ev.flush().unwrap();
+    assert!(flushed > 0, "flush must succeed once the lock is released");
+    assert!(store.exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dse_serve_answers_ndjson_requests_against_one_shared_cache() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+    use temporal_vec::coordinator::{run_serve, ServeOptions};
+    use temporal_vec::util::json::Json;
+
+    fn ask(stream: &mut UnixStream, reader: &mut BufReader<UnixStream>, req: &str) -> Json {
+        stream.write_all(format!("{req}\n").as_bytes()).unwrap();
+        stream.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    }
+
+    let dir = std::env::temp_dir().join(format!("tvec-dse-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let socket = dir.join("tvec.sock");
+    let bench = dir.join("BENCH_serve.json");
+
+    let mut sopts = ServeOptions::new(&socket);
+    sopts.cache_dir = Some(dir.join("cache"));
+    sopts.bench_out = bench.clone();
+    sopts.deadline_ms = Some(30_000);
+    let server = std::thread::spawn(move || run_serve(sopts));
+
+    let mut stream = None;
+    for _ in 0..400 {
+        match UnixStream::connect(&socket) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(25)),
+        }
+    }
+    let mut stream = stream.expect("serve daemon did not come up");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    let pong = ask(&mut stream, &mut reader, r#"{"op":"ping"}"#);
+    assert_eq!(pong.get("ok").and_then(Json::as_bool), Some(true));
+
+    let req = r#"{"op":"search","app":"vecadd","budget":8,"seed":9}"#;
+    let first = ask(&mut stream, &mut reader, req);
+    assert_eq!(first.get("ok").and_then(Json::as_bool), Some(true), "{first:?}");
+    assert!(first.get("new_compiles").and_then(Json::as_u64).unwrap() > 0);
+    assert!(first.get("chosen").and_then(Json::as_str).is_some());
+
+    // the second identical request runs against the warm shared cache
+    let second = ask(&mut stream, &mut reader, req);
+    assert_eq!(second.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        second.get("new_compiles").and_then(Json::as_u64),
+        Some(0),
+        "warm request must compile nothing: {second:?}"
+    );
+    assert!(second.get("cache_hits").and_then(Json::as_u64).unwrap() > 0);
+    assert_eq!(second.get("quarantined").and_then(Json::as_u64), Some(0));
+
+    // a malformed request fails that request, not the daemon
+    let bad = ask(&mut stream, &mut reader, r#"{"op":"search"}"#);
+    assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+
+    let down = ask(&mut stream, &mut reader, r#"{"op":"shutdown"}"#);
+    assert_eq!(down.get("ok").and_then(Json::as_bool), Some(true));
+    server.join().unwrap().expect("graceful shutdown is an Ok exit");
+
+    let body = std::fs::read_to_string(&bench).expect("BENCH_serve.json must be written");
+    assert!(body.contains("tvec-serve v1"), "{body}");
+    assert!(body.contains("\"requests\": 5"), "{body}");
+    assert!(!socket.exists(), "the socket file must be cleaned up");
+    let warm_store = dir.join("cache").join(temporal_vec::dse::cache::FILE_NAME);
+    assert!(warm_store.exists(), "graceful shutdown must flush the shared cache");
+    let _ = std::fs::remove_dir_all(&dir);
 }

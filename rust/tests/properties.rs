@@ -708,6 +708,124 @@ fn prop_simulator_deadlocks_carry_checker_errors() {
 }
 
 #[test]
+fn prop_faulted_sweeps_quarantine_any_victim_and_keep_the_frontier() {
+    // the supervision layer's property (DESIGN.md §14): for ANY pumped
+    // candidate chosen as the fault victim and either fault kind
+    // (panic or wedge), the sweep completes, classifies the fault with
+    // the right FailKind, reproduces the fault-free frontier over the
+    // surviving candidates, and leaves the evaluator healthy — no
+    // poisoned mutex, no leaked arena slots, no quarantine retries
+    use temporal_vec::dse::{
+        frontier, generate, run_search, DesignPoint, Evaluator, FailKind, FaultPlan,
+        Objective, SearchBase, SearchConfig, SpaceOptions,
+    };
+    use temporal_vec::hw::Device;
+    forall("faulted-sweeps", 0xF1, 4, |g| {
+        let device = Device::u280();
+        let n = (g.usize(16, 129) * 8) as i64; // divisible by every width/factor
+        let seed = g.usize(0, 1 << 20) as u64;
+        let bases = [SearchBase {
+            spec: BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(seed),
+            flops: apps::vecadd::flops(n),
+        }];
+        let opts = SpaceOptions {
+            vector_widths: vec![2, 4, 8],
+            pump_factors: vec![2, 4],
+            pump_modes: vec![PumpMode::Resource],
+            max_replicas: 1,
+            cl0_requests_mhz: vec![],
+            mixed_factors: false,
+        };
+        // white-box ordinal model (matches tests/dse.rs): baselines
+        // evaluate first in grid order, then the pumped batch
+        let is_baseline = |p: &DesignPoint| {
+            p.pump.is_none()
+                && p.regions.is_none()
+                && p.replicas == 1
+                && p.cl0_request_mhz.is_none()
+        };
+        let grid = generate(&bases[0].spec, &device, &opts);
+        let baseline_count = grid.iter().filter(|p| is_baseline(p)).count();
+        let batch: Vec<DesignPoint> = grid
+            .into_iter()
+            .filter(|p| *p != DesignPoint::original() && !is_baseline(p))
+            .collect();
+        if batch.len() < 2 {
+            return Err("space too small to pick a fault victim".into());
+        }
+        let victim = g.usize(0, batch.len());
+        let wedge = g.bool();
+        let kind = if wedge { "wedge" } else { "panic" };
+        let spec = format!("{kind}@{}", baseline_count + victim);
+        let cfg =
+            SearchConfig::exhaustive(Objective::resource()).with_limits(Some(1_000), None);
+
+        let clean = run_search(&Evaluator::new(), &bases, &device, &opts, &cfg)
+            .map_err(|e| format!("clean sweep (n {n}) failed: {e}"))?;
+        if clean.quarantined() != 0 {
+            return Err(format!("clean sweep quarantined {} candidates", clean.quarantined()));
+        }
+
+        let ev = Evaluator::new().with_faults(FaultPlan::parse(&spec).unwrap());
+        let faulted = run_search(&ev, &bases, &device, &opts, &cfg)
+            .map_err(|e| format!("faulted sweep ({spec}) died: {e}"))?;
+        let (want_panicked, want_timed_out) = if wedge { (0, 1) } else { (1, 0) };
+        if faulted.panicked != want_panicked || faulted.timed_out != want_timed_out {
+            return Err(format!(
+                "{spec}: classified as {} panicked / {} timed-out \
+                 (want {want_panicked}/{want_timed_out})",
+                faulted.panicked, faulted.timed_out
+            ));
+        }
+        if ev.faults().unwrap().fired() != 1 {
+            return Err(format!(
+                "{spec}: fired {} injections (want 1)",
+                ev.faults().unwrap().fired()
+            ));
+        }
+
+        // the faulted frontier must equal the fault-free frontier
+        // computed over the surviving candidates
+        let survivors: Vec<temporal_vec::dse::Evaluation> = clean
+            .evaluations
+            .iter()
+            .filter(|e| e.point != batch[victim])
+            .cloned()
+            .collect();
+        let want: Vec<String> =
+            frontier(&survivors).iter().map(|e| e.label.clone()).collect();
+        let got: Vec<String> = faulted.frontier.iter().map(|e| e.label.clone()).collect();
+        if got != want {
+            return Err(format!(
+                "{spec}: faulted frontier {got:?} diverged from survivors' {want:?}"
+            ));
+        }
+
+        // post-fault health: the quarantine memo holds without
+        // re-firing, and a fresh evaluation still succeeds (the arena
+        // pool and caches survived the unwind)
+        let base = &bases[0];
+        let again = ev.evaluate(&base.spec, &batch[victim], base.flops);
+        let want_kind = if wedge { FailKind::Timeout } else { FailKind::Panic };
+        match &again {
+            Err(e) if e.kind == want_kind => {}
+            other => {
+                return Err(format!(
+                    "{spec}: quarantined candidate re-evaluated to {other:?} \
+                     (want Err({want_kind:?}))"
+                ))
+            }
+        }
+        if ev.faults().unwrap().fired() != 1 {
+            return Err("a memoized quarantine hit re-fired the injection".into());
+        }
+        ev.evaluate(&base.spec, &DesignPoint::original(), base.flops)
+            .map_err(|e| format!("{spec}: evaluator unhealthy after the fault: {}", e.message))?;
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_event_engine_is_cycle_exact_on_random_mixed_stencils() {
     // randomized per-region pump assignments over a small jacobi chain:
     // several fast domains at different strides plus CL0 regions in one
