@@ -13,17 +13,32 @@
 //! count under each app's per-app verify tolerance — the CI drift
 //! gate (`--smoke` shrinks the problem sizes for that job). A
 //! cold-vs-warm DSE sweep over a throwaway cache directory rounds out
-//! the report. The JSON schema is documented in DESIGN.md §9.
+//! the report.
+//!
+//! Schema v4 (DESIGN.md §15) adds the parallel rows: per-app
+//! sharded-vs-serial slow-cycles/sec over replicated designs
+//! ([`crate::sim::run_exact_sharded_in`]), a scalar-vs-chunked
+//! `eval_lanes` micro-benchmark (both evaluators are always compiled;
+//! the `simd` feature only changes which one `eval_lanes` dispatches
+//! to), and the pooled frontier-verification wall clock at the bench's
+//! `--threads` worker count. The JSON schema history is in DESIGN.md
+//! §9 (v2 arena block, v3 dse_cache block) and §15 (v4).
 
 use std::time::Instant;
 
 use crate::apps;
-use crate::dse::{run_search, Evaluator, Objective, SearchBase, SearchConfig, SpaceOptions};
+use crate::dse::evaluate::evaluate_point;
+use crate::dse::{
+    run_search, verify_frontier_pooled, ArenaPool, DesignPoint, Evaluation, Evaluator, Objective,
+    SearchBase, SearchConfig, SpaceOptions, VerifyBudget, DEFAULT_TOLERANCE,
+};
 use crate::hw::Device;
-use crate::ir::{PumpMode, StencilKind};
+use crate::ir::{PumpMode, StencilKind, TaskExpr, Tasklet};
+use crate::sim::compute::CompiledTasklet;
 use crate::sim::{
-    exact_engines_agree_in, rate_model, run_exact_in, run_exact_reference_in, Arena, ArenaStats,
-    Hbm, SimOutcome,
+    exact_engines_agree_in, rate_model, replicate_design, replicate_inputs, resolve_threads,
+    run_exact_in, run_exact_reference_in, run_exact_sharded_in, Arena, ArenaStats, Hbm,
+    SimOutcome, Txn,
 };
 use crate::util::Rng;
 
@@ -78,6 +93,69 @@ impl SimBench {
     }
 }
 
+/// One replicated design's sharded-vs-serial measurement. The sharded
+/// engine runs the same netlist, bit-identical (checked before timing
+/// — a mismatch voids the benchmark), so the speedup is pure
+/// parallelism.
+pub struct ShardBench {
+    pub app: String,
+    /// Independent replicas the design was widened to (= shard count).
+    pub replicas: usize,
+    /// Worker threads the sharded engine ran with.
+    pub threads: usize,
+    /// Slow cycles of one run (identical across engines; asserted).
+    pub slow_cycles: u64,
+    /// Best-of-iters wall-clock of the serial event engine.
+    pub serial_secs: f64,
+    /// Best-of-iters wall-clock of the sharded engine.
+    pub sharded_secs: f64,
+}
+
+impl ShardBench {
+    pub fn serial_cycles_per_sec(&self) -> f64 {
+        self.slow_cycles as f64 / self.serial_secs.max(1e-12)
+    }
+
+    pub fn sharded_cycles_per_sec(&self) -> f64 {
+        self.slow_cycles as f64 / self.sharded_secs.max(1e-12)
+    }
+
+    /// Sharded-engine speedup over the serial event engine.
+    pub fn speedup(&self) -> f64 {
+        self.serial_secs / self.sharded_secs.max(1e-12)
+    }
+}
+
+/// Scalar-vs-chunked `eval_lanes` micro-benchmark. Both evaluators are
+/// always compiled; `active` names the one `eval_lanes` dispatches to
+/// in this build (`chunked` under the `simd` feature, else `scalar`).
+pub struct SimdBench {
+    pub active: &'static str,
+    /// Lanes per evaluation (inner repeats make the timing readable).
+    pub lanes: usize,
+    pub scalar_secs: f64,
+    pub chunked_secs: f64,
+}
+
+impl SimdBench {
+    /// Chunked-evaluator speedup over the lane-at-a-time scalar loop.
+    pub fn speedup(&self) -> f64 {
+        self.scalar_secs / self.chunked_secs.max(1e-12)
+    }
+}
+
+/// Pooled frontier-verification wall clock (`verify_frontier_pooled`
+/// at the bench's worker count).
+pub struct VerifyBench {
+    pub app: String,
+    /// Frontier points re-checked at golden scale per run.
+    pub points: usize,
+    /// Worker threads the pooled verifier fanned across.
+    pub threads: usize,
+    /// Best-of-iters wall-clock of one pooled verification pass.
+    pub secs: f64,
+}
+
 /// Cold-vs-warm DSE sweep wall-clock over a throwaway cache directory.
 pub struct DseBench {
     pub app: String,
@@ -110,7 +188,13 @@ impl DseBench {
 /// The full `tvec bench` outcome.
 pub struct BenchReport {
     pub smoke: bool,
+    /// Resolved worker-thread count the parallel rows ran with (the
+    /// CLI's `--threads`, 0 resolved to available parallelism).
+    pub threads: usize,
     pub sims: Vec<SimBench>,
+    pub sharded: Vec<ShardBench>,
+    pub simd: SimdBench,
+    pub verify: VerifyBench,
     /// Final counters of the one arena every sim bench (both engines,
     /// warmup + timed iterations) ran inside.
     pub arena: ArenaStats,
@@ -124,11 +208,14 @@ impl BenchReport {
     }
 
     /// Render as `BENCH_sim.json` (schema: DESIGN.md §9; v2 added the
-    /// `arena` block, v3 the `dse_cache` block with the warm hit rate).
+    /// `arena` block, v3 the `dse_cache` block with the warm hit rate,
+    /// v4 the `threads` field plus the `sharded`/`simd`/`verify`
+    /// parallel rows — DESIGN.md §15).
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
-        out.push_str("  \"schema\": \"tvec-bench-sim v3\",\n");
+        out.push_str("  \"schema\": \"tvec-bench-sim v4\",\n");
         out.push_str(&format!("  \"smoke\": {},\n", self.smoke));
+        out.push_str(&format!("  \"threads\": {},\n", self.threads));
         out.push_str("  \"sim\": [\n");
         for (i, s) in self.sims.iter().enumerate() {
             out.push_str(&format!(
@@ -153,14 +240,50 @@ impl BenchReport {
             ));
         }
         out.push_str("  ],\n");
+        out.push_str("  \"sharded\": [\n");
+        for (i, s) in self.sharded.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"app\": \"{}\", \"replicas\": {}, \"threads\": {}, \
+                 \"slow_cycles\": {}, \"serial_secs\": {:.6}, \
+                 \"serial_cycles_per_sec\": {:.1}, \"sharded_secs\": {:.6}, \
+                 \"sharded_cycles_per_sec\": {:.1}, \"speedup\": {:.3}}}{}\n",
+                s.app,
+                s.replicas,
+                s.threads,
+                s.slow_cycles,
+                s.serial_secs,
+                s.serial_cycles_per_sec(),
+                s.sharded_secs,
+                s.sharded_cycles_per_sec(),
+                s.speedup(),
+                if i + 1 < self.sharded.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str(&format!(
+            "  \"simd\": {{\"active\": \"{}\", \"lanes\": {}, \"scalar_secs\": {:.6}, \
+             \"chunked_secs\": {:.6}, \"speedup\": {:.3}}},\n",
+            self.simd.active,
+            self.simd.lanes,
+            self.simd.scalar_secs,
+            self.simd.chunked_secs,
+            self.simd.speedup(),
+        ));
+        out.push_str(&format!(
+            "  \"verify\": {{\"app\": \"{}\", \"points\": {}, \"threads\": {}, \
+             \"secs\": {:.6}}},\n",
+            self.verify.app, self.verify.points, self.verify.threads, self.verify.secs,
+        ));
         out.push_str(&format!(
             "  \"arena\": {{\"classes\": {}, \"slots\": {}, \"peak_live\": {}, \
-             \"recycle_hits\": {}, \"resets\": {}, \"flat_high_water\": {}}},\n",
+             \"recycle_hits\": {}, \"resets\": {}, \"leaked\": {}, \
+             \"flat_high_water\": {}}},\n",
             self.arena.classes,
             self.arena.slots,
             self.arena.peak_live,
             self.arena.recycle_hits,
             self.arena.resets,
+            self.arena.leaked,
             self.arena_flat(),
         ));
         out.push_str(&format!(
@@ -269,18 +392,172 @@ fn bench_design(
     })
 }
 
+/// Replicate a compiled design `k` ways and time the serial event
+/// engine against the sharded engine at `threads` workers. The two
+/// runs are checked cycle-identical before any timing counts.
+fn bench_sharded(
+    app: &str,
+    spec: BuildSpec,
+    inputs: &[(String, Vec<f32>)],
+    k: usize,
+    threads: usize,
+    iters: u32,
+) -> Result<ShardBench, String> {
+    let c = compile(spec)?;
+    let rep = replicate_design(&c.design, k);
+    let mk_hbm = || replicate_inputs(inputs, k);
+    let mut arena = Arena::new();
+    let mut shard_arenas: Vec<Arena> = Vec::new();
+    // warmup both engines (grows their arenas) and pin equivalence
+    let serial = run_exact_in(&rep, mk_hbm(), SIM_BUDGET, &mut arena)
+        .map_err(|e| format!("{app} x{k}: serial run failed: {e}"))?;
+    let sharded =
+        run_exact_sharded_in(&rep, mk_hbm(), SIM_BUDGET, threads, None, &mut shard_arenas, None)
+            .map_err(|e| format!("{app} x{k}: sharded run failed: {e}"))?;
+    if sharded.stats.slow_cycles != serial.stats.slow_cycles {
+        return Err(format!(
+            "{app} x{k}: sharded engine diverged — benchmark void: serial {} vs sharded {} \
+             slow cycles",
+            serial.stats.slow_cycles, sharded.stats.slow_cycles
+        ));
+    }
+    let slow_cycles = serial.stats.slow_cycles;
+    let serial_secs = time_best(iters, || {
+        run_exact_in(&rep, mk_hbm(), SIM_BUDGET, &mut arena).expect("checked above");
+    });
+    let sharded_secs = time_best(iters, || {
+        run_exact_sharded_in(&rep, mk_hbm(), SIM_BUDGET, threads, None, &mut shard_arenas, None)
+            .expect("checked above");
+    });
+    Ok(ShardBench {
+        app: app.to_string(),
+        replicas: k,
+        threads,
+        slow_cycles,
+        serial_secs,
+        sharded_secs,
+    })
+}
+
+/// Micro-benchmark `eval_lanes_scalar` vs `eval_lanes_chunked` on a
+/// muladd+add program (the shape the stencil chains run hottest).
+/// Outputs are checked bit-identical before timing.
+fn bench_simd(smoke: bool, rng: &mut Rng, iters: u32) -> SimdBench {
+    let lanes = if smoke { 1024 } else { 4096 };
+    let reps = if smoke { 16 } else { 64 };
+    let expr = TaskExpr::muladd(
+        TaskExpr::input("a"),
+        TaskExpr::input("b"),
+        TaskExpr::input("c"),
+    )
+    .add(TaskExpr::input("d"));
+    let t = Tasklet::new("bench_simd", vec![("o", expr)]);
+    let conns: Vec<String> = ["a", "b", "c", "d"].iter().map(|s| s.to_string()).collect();
+    let ct = CompiledTasklet::compile(&t, &conns).expect("static program compiles");
+    let mut arena = Arena::new();
+    let popped: Vec<Txn> =
+        (0..conns.len()).map(|_| arena.alloc_from(&rng.f32_vec(lanes))).collect();
+    let mut vals = vec![0.0f32; conns.len()];
+    let mut stack = vec![0.0f32; ct.stack_depth()];
+    let mut out_s = vec![0.0f32; lanes];
+    let mut out_c = vec![0.0f32; lanes];
+    ct.eval_lanes_scalar(&arena, &popped, &mut vals, &mut stack, &mut out_s);
+    ct.eval_lanes_chunked(&arena, &popped, &mut vals, &mut stack, &mut out_c);
+    debug_assert!(
+        out_s.iter().zip(&out_c).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "chunked eval_lanes diverged from scalar"
+    );
+    let scalar_secs = time_best(iters, || {
+        for _ in 0..reps {
+            ct.eval_lanes_scalar(&arena, &popped, &mut vals, &mut stack, &mut out_s);
+        }
+    });
+    let chunked_secs = time_best(iters, || {
+        for _ in 0..reps {
+            ct.eval_lanes_chunked(&arena, &popped, &mut vals, &mut stack, &mut out_c);
+        }
+    });
+    SimdBench {
+        active: if cfg!(feature = "simd") { "chunked" } else { "scalar" },
+        lanes,
+        scalar_secs,
+        chunked_secs,
+    }
+}
+
+/// Time a pooled golden-scale re-verification of a small vecadd
+/// frontier at `threads` workers (the `tvec dse --verify` hot path).
+fn bench_verify(
+    smoke: bool,
+    seed: u64,
+    threads: usize,
+    iters: u32,
+) -> Result<VerifyBench, String> {
+    let paper_n = 1i64 << 20;
+    let base = BuildSpec::new(apps::vecadd::build()).bind("N", paper_n).seeded(seed);
+    let flops = apps::vecadd::flops(paper_n);
+    let widths: &[usize] = if smoke { &[4, 8] } else { &[2, 4, 8, 8] };
+    let mut frontier: Vec<Evaluation> = Vec::new();
+    for (i, &w) in widths.iter().enumerate() {
+        let point = DesignPoint {
+            vectorize: Some(("vadd".into(), w)),
+            // alternate pumping so the points exercise distinct designs
+            pump: if i % 2 == 1 { Some((2, PumpMode::Resource)) } else { None },
+            ..DesignPoint::original()
+        };
+        frontier.push(
+            evaluate_point(&base, &point, flops)
+                .map_err(|e| format!("verify bench: evaluating V{w}: {}", e.message))?,
+        );
+    }
+    let n = apps::vecadd::GOLDEN_N;
+    let golden = BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(seed);
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let inputs = vec![
+        ("x".to_string(), rng.f32_vec(n as usize)),
+        ("y".to_string(), rng.f32_vec(n as usize)),
+    ];
+    let pool = ArenaPool::default();
+    let run = || {
+        verify_frontier_pooled(
+            &frontier,
+            std::slice::from_ref(&golden),
+            &inputs,
+            DEFAULT_TOLERANCE,
+            VerifyBudget::default(),
+            &pool,
+            threads,
+            None,
+        )
+    };
+    run().map_err(|e| format!("verify bench warmup failed: {e}"))?; // warm the pool
+    let secs = time_best(iters, || {
+        run().expect("checked above");
+    });
+    Ok(VerifyBench {
+        app: "vecadd".to_string(),
+        points: frontier.len(),
+        threads,
+        secs,
+    })
+}
+
 /// Run the full bench suite. `smoke` shrinks problem sizes and
 /// iteration counts to CI scale; `seed` feeds the input generators;
 /// `tolerance_override` (the CLI's `--tolerance`) replaces every
-/// app's default drift envelope when given.
+/// app's default drift envelope when given; `threads` drives the
+/// sharded/verify parallel rows (0 = available parallelism).
 pub fn run_bench(
     smoke: bool,
     seed: u64,
     tolerance_override: Option<f64>,
+    threads: usize,
 ) -> Result<BenchReport, String> {
     let iters = if smoke { 2 } else { 5 };
+    let workers = resolve_threads(threads);
     let mut rng = Rng::new(seed ^ 0xbe9c);
     let mut sims = Vec::new();
+    let mut sharded = Vec::new();
     // one arena across every engine run of every app: the pooled data
     // plane the DSE evaluation loop uses, measured as deployed
     let mut arena = Arena::new();
@@ -300,12 +577,14 @@ pub fn run_bench(
         sims.push(bench_design(
             "vecadd",
             "V8 R2",
-            spec,
-            inputs,
+            spec.clone(),
+            inputs.clone(),
             iters,
             tolerance_override,
             &mut arena,
         )?);
+        let k = if smoke { 2 } else { 4 };
+        sharded.push(bench_sharded("vecadd", spec, &inputs, k, workers, iters)?);
     }
 
     // matmul R2 at golden scale (smoke: a quarter-size problem)
@@ -324,12 +603,13 @@ pub fn run_bench(
         sims.push(bench_design(
             "matmul",
             "R2",
-            spec,
-            inputs,
+            spec.clone(),
+            inputs.clone(),
             iters,
             tolerance_override,
             &mut arena,
         )?);
+        sharded.push(bench_sharded("matmul", spec, &inputs, 2, workers, iters)?);
     }
 
     // the 16-stage jacobi chain, R4 — the tentpole's headline design
@@ -360,6 +640,9 @@ pub fn run_bench(
             &mut arena,
         )?);
     }
+
+    let simd = bench_simd(smoke, &mut rng, iters);
+    let verify = bench_verify(smoke, seed, workers, iters)?;
 
     // cold vs warm DSE sweep over a throwaway persistent cache
     let dse = {
@@ -408,7 +691,16 @@ pub fn run_bench(
         }
     };
 
-    Ok(BenchReport { smoke, sims, arena: arena.stats(), dse })
+    Ok(BenchReport {
+        smoke,
+        threads: workers,
+        sims,
+        sharded,
+        simd,
+        verify,
+        arena: arena.stats(),
+        dse,
+    })
 }
 
 #[cfg(test)]
@@ -417,7 +709,7 @@ mod tests {
 
     #[test]
     fn smoke_bench_report_is_well_formed() {
-        let r = run_bench(true, 1, None).unwrap();
+        let r = run_bench(true, 1, None, 2).unwrap();
         assert_eq!(r.sims.len(), 3);
         assert!(r.sims.iter().any(|s| s.app == "stencil"));
         for s in &r.sims {
@@ -425,6 +717,18 @@ mod tests {
             assert!(s.event_secs > 0.0 && s.reference_secs > 0.0);
             assert!(s.rate_cycles > 0);
         }
+        assert_eq!(r.threads, 2);
+        assert_eq!(r.sharded.len(), 2);
+        for s in &r.sharded {
+            assert!(s.slow_cycles > 0, "{}: no cycles simulated sharded", s.app);
+            assert!(s.serial_secs > 0.0 && s.sharded_secs > 0.0);
+            assert_eq!(s.threads, 2);
+        }
+        assert!(r.simd.scalar_secs > 0.0 && r.simd.chunked_secs > 0.0);
+        assert_eq!(r.simd.active, if cfg!(feature = "simd") { "chunked" } else { "scalar" });
+        assert_eq!(r.verify.points, 2);
+        assert!(r.verify.secs > 0.0);
+        assert_eq!(r.arena.leaked, 0, "clean bench runs must leak no arena slots");
         assert_eq!(r.dse.warm_new_compiles, 0, "warm DSE sweep must compile nothing");
         assert!(r.dse.cold_new_compiles > 0);
         assert!(r.dse.warm_hits > 0, "warm sweep must be served from the store");
@@ -436,13 +740,20 @@ mod tests {
         assert!(r.arena_flat(), "arena high-water mark grew across repeated runs");
         let json = r.to_json();
         for key in [
-            "\"schema\": \"tvec-bench-sim v3\"",
+            "\"schema\": \"tvec-bench-sim v4\"",
+            "\"threads\": 2",
             "\"sim\": [",
             "\"event_cycles_per_sec\"",
             "\"speedup\"",
             "\"drift_ratio\"",
+            "\"sharded\": [",
+            "\"sharded_cycles_per_sec\"",
+            "\"serial_cycles_per_sec\"",
+            "\"simd\": {",
+            "\"verify\": {",
             "\"arena\": {",
             "\"recycle_hits\"",
+            "\"leaked\": 0",
             "\"flat_high_water\": true",
             "\"dse\": {",
             "\"warm_new_compiles\": 0",
@@ -472,7 +783,23 @@ mod tests {
         assert!((row.speedup() - 10.0).abs() < 1e-9);
         let report = BenchReport {
             smoke: true,
+            threads: 1,
             sims: vec![row],
+            sharded: vec![ShardBench {
+                app: "vecadd".into(),
+                replicas: 2,
+                threads: 1,
+                slow_cycles: 100,
+                serial_secs: 0.002,
+                sharded_secs: 0.001,
+            }],
+            simd: SimdBench {
+                active: "scalar",
+                lanes: 1024,
+                scalar_secs: 0.002,
+                chunked_secs: 0.001,
+            },
+            verify: VerifyBench { app: "vecadd".into(), points: 2, threads: 1, secs: 0.01 },
             arena: ArenaStats::default(),
             dse: DseBench {
                 app: "vecadd".into(),

@@ -67,6 +67,9 @@ pub struct ServeOptions {
     pub bench_out: PathBuf,
     /// Default RNG seed for requests that don't set their own.
     pub seed: u64,
+    /// Evaluation/verification worker threads (`--threads`; None keeps
+    /// the evaluator default of available parallelism).
+    pub threads: Option<usize>,
 }
 
 impl ServeOptions {
@@ -79,6 +82,7 @@ impl ServeOptions {
             faults: None,
             bench_out: PathBuf::from("BENCH_serve.json"),
             seed: 9,
+            threads: None,
         }
     }
 }
@@ -164,6 +168,9 @@ pub fn run_serve(opts: ServeOptions) -> Result<(), String> {
         Some(p) => evaluator.with_faults(p),
         None => evaluator,
     };
+    if let Some(t) = opts.threads {
+        evaluator.set_threads(t);
+    }
     let device = Device::u280();
 
     let listener = bind_socket(&opts.socket)?;

@@ -384,6 +384,9 @@ struct EvalLimits {
     wall_ms: AtomicU64,
     /// Slow-cycle budget for exact-sim spot checks (`--verify`).
     sim_cycles: AtomicU64,
+    /// Worker-thread count for batch evaluation and the parallel
+    /// verify path (0 = available parallelism; the `--threads` flag).
+    threads: AtomicUsize,
 }
 
 /// Memoizing, thread-parallel candidate evaluator. Failures are cached
@@ -489,6 +492,20 @@ impl Evaluator {
     pub fn set_limits(&self, wall_ms: Option<u64>, sim_cycles: Option<u64>) {
         self.limits.wall_ms.store(wall_ms.unwrap_or(0), Ordering::Relaxed);
         self.limits.sim_cycles.store(sim_cycles.unwrap_or(0), Ordering::Relaxed);
+    }
+
+    /// Set the worker-thread count for batch evaluation and the
+    /// parallel verify path: `0` restores the default (available
+    /// parallelism), `1` forces serial execution — the CLI's
+    /// `--threads` flag lands here.
+    pub fn set_threads(&self, threads: usize) {
+        self.limits.threads.store(threads, Ordering::Relaxed);
+    }
+
+    /// The resolved worker-thread count (`--threads`, with 0/unset
+    /// meaning whatever the machine offers).
+    pub fn threads(&self) -> usize {
+        crate::sim::resolve_threads(self.limits.threads.load(Ordering::Relaxed))
     }
 
     /// The armed per-candidate wall-clock budget, if any.
@@ -843,10 +860,7 @@ impl Evaluator {
             return Vec::new();
         }
         let start = self.issued.fetch_add(n, Ordering::Relaxed);
-        let workers = std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(1)
-            .min(n);
+        let workers = self.threads().min(n);
         let next = AtomicUsize::new(0);
         let slots: Mutex<Vec<Option<Result<Evaluation, EvalError>>>> =
             Mutex::new(vec![None; n]);

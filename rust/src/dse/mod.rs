@@ -52,5 +52,6 @@ pub use search::{run_search, SearchBase, SearchConfig, SearchOutcome, Strategy};
 pub use space::{generate, DesignPoint, SpaceOptions};
 pub use verify::{
     verify_frontier, verify_frontier_budgeted, verify_frontier_in, verify_frontier_observed,
-    verify_frontier_supervised, VerifyBudget, VerifyReport, DEFAULT_TOLERANCE,
+    verify_frontier_pooled, verify_frontier_supervised, VerifyBudget, VerifyReport,
+    DEFAULT_TOLERANCE,
 };

@@ -17,11 +17,14 @@
 //! the same configuration compiled at search scale, so lowering must
 //! not break when only the bindings shrink.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::coordinator::pipeline::{compile_staged, BuildSpec, Stage};
 use crate::sim::{is_timeout_error, rate_model, run_exact_deadline_in, Arena, Hbm};
 use crate::telemetry::Recorder;
+use crate::util::lock_unpoisoned;
 
 use super::evaluate::{ArenaPool, Evaluation, Evaluator};
 
@@ -264,6 +267,8 @@ pub fn verify_frontier_observed(
 
 /// [`verify_frontier_observed`] under explicit per-point budgets:
 /// points that exhaust a budget come back as `timed out:` skips.
+/// Sequential (one worker) — the parallel fan-out is
+/// [`verify_frontier_pooled`].
 #[allow(clippy::too_many_arguments)]
 pub fn verify_frontier_budgeted(
     frontier: &[Evaluation],
@@ -274,20 +279,87 @@ pub fn verify_frontier_budgeted(
     pool: &ArenaPool,
     rec: Option<&Recorder>,
 ) -> Result<Vec<VerifyReport>, String> {
-    let mut out = Vec::with_capacity(frontier.len());
-    for e in frontier {
-        let base = frontier_base(golden_bases, e)?;
-        out.push(pool.run(|arena| {
-            verify_point_budgeted(base, e, inputs, tolerance, budget, arena, rec)
-        })?);
+    verify_frontier_pooled(frontier, golden_bases, inputs, tolerance, budget, pool, 1, rec)
+}
+
+/// [`verify_frontier_budgeted`] fanned across `threads` OS workers
+/// (0 = available parallelism). Each worker checks out its own arena
+/// from the shared pool, so concurrent points never contend on slabs
+/// and a warm pool serves the whole batch allocation-free. Reports
+/// come back in input order; when several points fail, the error of
+/// the earliest point in input order is returned — same answer the
+/// sequential loop gives, regardless of worker interleaving.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_frontier_pooled(
+    frontier: &[Evaluation],
+    golden_bases: &[BuildSpec],
+    inputs: &[(String, Vec<f32>)],
+    tolerance: f64,
+    budget: VerifyBudget,
+    pool: &ArenaPool,
+    threads: usize,
+    rec: Option<&Recorder>,
+) -> Result<Vec<VerifyReport>, String> {
+    let n = frontier.len();
+    let workers = crate::sim::resolve_threads(threads).min(n.max(1));
+    if let Some(r) = rec {
+        r.gauge("dse.verify.workers", workers as f64);
+    }
+    // resolve every point's golden base up front: a bad base index is
+    // reported for the earliest offending point no matter which worker
+    // would have reached it first
+    let bases: Vec<Result<&BuildSpec, String>> =
+        frontier.iter().map(|e| frontier_base(golden_bases, e)).collect();
+    if workers <= 1 {
+        let mut out = Vec::with_capacity(n);
+        for (e, base) in frontier.iter().zip(&bases) {
+            let base = base.as_ref().map_err(String::clone)?;
+            out.push(pool.run(|arena| {
+                verify_point_budgeted(base, e, inputs, tolerance, budget, arena, rec)
+            })?);
+        }
+        return Ok(out);
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<Result<VerifyReport, String>>>> = Mutex::new(vec![None; n]);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = match &bases[i] {
+                    Ok(base) => pool.run(|arena| {
+                        verify_point_budgeted(
+                            base,
+                            &frontier[i],
+                            inputs,
+                            tolerance,
+                            budget,
+                            arena,
+                            rec,
+                        )
+                    }),
+                    Err(msg) => Err(msg.clone()),
+                };
+                lock_unpoisoned(&slots)[i] = Some(r);
+            });
+        }
+    });
+    let results = slots.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let mut out = Vec::with_capacity(n);
+    for r in results {
+        out.push(r.expect("every slot filled by a worker")?);
     }
     Ok(out)
 }
 
-/// [`verify_frontier_budgeted`] reading its budgets and arena pool off
-/// the evaluator that ran the search — the supervised serving path:
-/// whatever `--deadline-ms` / `--sim-cycle-budget` armed for candidate
-/// evaluation also bounds the frontier re-check.
+/// [`verify_frontier_pooled`] reading its budgets, arena pool, and
+/// worker count off the evaluator that ran the search — the supervised
+/// serving path: whatever `--deadline-ms` / `--sim-cycle-budget` /
+/// `--threads` armed for candidate evaluation also bounds the frontier
+/// re-check.
 pub fn verify_frontier_supervised(
     frontier: &[Evaluation],
     golden_bases: &[BuildSpec],
@@ -296,13 +368,14 @@ pub fn verify_frontier_supervised(
     evaluator: &Evaluator,
     rec: Option<&Recorder>,
 ) -> Result<Vec<VerifyReport>, String> {
-    verify_frontier_budgeted(
+    verify_frontier_pooled(
         frontier,
         golden_bases,
         inputs,
         tolerance,
         VerifyBudget::from_evaluator(evaluator),
         evaluator.arenas(),
+        evaluator.threads(),
         rec,
     )
 }
@@ -477,6 +550,69 @@ mod tests {
         e.base = 3; // no such base
         let err = verify_frontier(&[e], &[golden], &inputs, DEFAULT_TOLERANCE).unwrap_err();
         assert!(err.contains("no golden base"), "{err}");
+    }
+
+    #[test]
+    fn parallel_verify_matches_sequential_and_records_workers() {
+        let (golden, inputs) = vecadd_golden();
+        let a = eval_at_paper_scale(DesignPoint {
+            vectorize: Some(("vadd".into(), 8)),
+            ..DesignPoint::original()
+        });
+        let b = eval_at_paper_scale(DesignPoint {
+            vectorize: Some(("vadd".into(), 8)),
+            pump: Some((2, PumpMode::Resource)),
+            ..DesignPoint::original()
+        });
+        let points = vec![a, b];
+        let serial =
+            verify_frontier(&points, &[golden.clone()], &inputs, DEFAULT_TOLERANCE).unwrap();
+        let rec = Recorder::new();
+        let pool = ArenaPool::default();
+        let parallel = verify_frontier_pooled(
+            &points,
+            &[golden],
+            &inputs,
+            DEFAULT_TOLERANCE,
+            VerifyBudget::default(),
+            &pool,
+            2,
+            Some(&rec),
+        )
+        .unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.label, p.label);
+            assert_eq!(s.rate_cycles, p.rate_cycles);
+            assert_eq!(s.exact_cycles, p.exact_cycles);
+            assert_eq!(s.within, p.within);
+        }
+        assert_eq!(rec.gauges().get("dse.verify.workers"), Some(&2.0));
+    }
+
+    #[test]
+    fn parallel_verify_reports_the_earliest_bad_base() {
+        // the missing base sits at input index 0; whichever worker runs
+        // point 1 first, the returned error must still be point 0's
+        let (golden, inputs) = vecadd_golden();
+        let mut bad = eval_at_paper_scale(DesignPoint::original());
+        bad.base = 7;
+        let good = eval_at_paper_scale(DesignPoint {
+            vectorize: Some(("vadd".into(), 8)),
+            ..DesignPoint::original()
+        });
+        let err = verify_frontier_pooled(
+            &[bad, good],
+            &[golden],
+            &inputs,
+            DEFAULT_TOLERANCE,
+            VerifyBudget::default(),
+            &ArenaPool::default(),
+            2,
+            None,
+        )
+        .unwrap_err();
+        assert!(err.contains("no golden base for search base index 7"), "{err}");
     }
 
     #[test]

@@ -83,6 +83,10 @@ fn main() {
             "serve",
             "dse: serve NDJSON search requests on this Unix socket instead of sweeping",
         )
+        .opt(
+            "threads",
+            "dse/bench: worker threads (1 = serial engines; default: available parallelism)",
+        )
         .flag("json", "bench: write the BENCH_sim.json artifact")
         .flag("smoke", "bench: CI-scale problem sizes and iteration counts")
         .flag("emit", "write generated HLS/RTL text files to ./generated")
@@ -464,6 +468,13 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
             format!("invalid --sim-cycle-budget '{raw}' (want a slow-cycle count)")
         })?),
     };
+    // --threads: worker count for batch evaluation and the pooled
+    // frontier verify; 1 forces the serial engines, absent means
+    // available parallelism. Typos (and 0) rejected like --budget.
+    let threads = match args.get("threads") {
+        None => None,
+        Some(raw) => Some(parse_threads(raw)?),
+    };
     // --inject-faults: a deterministic fault schedule for exercising
     // the supervision paths (CI greps the classified outcomes)
     let faults = match args.get("inject-faults") {
@@ -483,6 +494,7 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
         sopts.sim_cycle_budget = sim_cycle_budget;
         sopts.faults = faults;
         sopts.seed = seed;
+        sopts.threads = threads;
         return temporal_vec::coordinator::run_serve(sopts);
     }
     // --tolerance: a NaN parses fine but fails every |ratio − 1| ≤ tol
@@ -532,6 +544,9 @@ fn cmd_dse(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), Stri
         Some(rec) => evaluator.observed(rec.clone()),
         None => evaluator,
     };
+    if let Some(t) = threads {
+        evaluator.set_threads(t);
+    }
     let mut verify_failures: Vec<String> = Vec::new();
 
     // a fatal error still flushes the cache first — nothing already
@@ -649,7 +664,13 @@ fn cmd_bench(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), St
         Some(raw) => Some(parse_tolerance(raw)?),
         None => None,
     };
-    let report = temporal_vec::coordinator::run_bench(smoke, seed, tolerance_override)?;
+    // --threads drives the sharded/verify rows; absent = available
+    // parallelism, 0 and typos rejected loudly
+    let threads = match args.get("threads") {
+        None => 0,
+        Some(raw) => parse_threads(raw)?,
+    };
+    let report = temporal_vec::coordinator::run_bench(smoke, seed, tolerance_override, threads)?;
     println!(
         "== tvec bench ({}) ==",
         if smoke { "smoke scale" } else { "golden scale" }
@@ -668,12 +689,40 @@ fn cmd_bench(args: &temporal_vec::util::cli::Parsed, seed: u64) -> Result<(), St
             s.tolerance
         );
     }
+    for s in &report.sharded {
+        println!(
+            "  {:<8} x{:<7} {:>9} slow cycles   serial {:>11.1} cyc/s   sharded {:>11.1} \
+             cyc/s   speedup {:>6.2}x   ({} threads)",
+            s.app,
+            s.replicas,
+            s.slow_cycles,
+            s.serial_cycles_per_sec(),
+            s.sharded_cycles_per_sec(),
+            s.speedup(),
+            s.threads
+        );
+    }
     println!(
-        "  arena    {} class(es), {} slots, peak live {}, {} recycle hits, high-water {}",
+        "  simd     {} lanes: scalar {:.6}s vs chunked {:.6}s   speedup {:>6.2}x   \
+         (eval_lanes dispatches {})",
+        report.simd.lanes,
+        report.simd.scalar_secs,
+        report.simd.chunked_secs,
+        report.simd.speedup(),
+        report.simd.active
+    );
+    println!(
+        "  verify   {} point(s) via {} worker(s) in {:.3}s ({})",
+        report.verify.points, report.verify.threads, report.verify.secs, report.verify.app
+    );
+    println!(
+        "  arena    {} class(es), {} slots, peak live {}, {} recycle hits, {} leaked, \
+         high-water {}",
         report.arena.classes,
         report.arena.slots,
         report.arena.peak_live,
         report.arena.recycle_hits,
+        report.arena.leaked,
         if report.arena_flat() { "flat" } else { "GREW" }
     );
     println!(
@@ -728,6 +777,19 @@ fn parse_pump_modes(raw: &str) -> Result<Vec<PumpMode>, String> {
         return Err("--pump-modes: need at least one of resource|throughput|barefast".into());
     }
     Ok(out)
+}
+
+/// Parse `--threads`: a positive worker count (`1` forces the serial
+/// engines). `0` and non-numbers are rejected loudly — a typo must not
+/// silently change the parallelism.
+fn parse_threads(raw: &str) -> Result<usize, String> {
+    match raw.parse::<usize>() {
+        Ok(t) if t >= 1 => Ok(t),
+        _ => Err(format!(
+            "invalid --threads '{raw}' (want a positive integer; 1 = serial, omit for \
+             available parallelism)"
+        )),
+    }
 }
 
 /// Reject non-finite or negative `--tolerance` values: they would make

@@ -87,6 +87,12 @@ pub struct ArenaStats {
     pub recycle_hits: u64,
     /// High-water-mark resets performed.
     pub resets: u64,
+    /// Slots still checked out when a reset reclaimed them, summed over
+    /// all resets. Nonzero is legitimate only after an aborted or
+    /// errored run (the engines reset on entry and reclaim whatever a
+    /// previous failure left live); across *clean* runs it must stay 0,
+    /// which the property suite asserts — the leak-on-reset canary.
+    pub leaked: u64,
 }
 
 impl ArenaStats {
@@ -101,8 +107,16 @@ impl ArenaStats {
         self.peak_live += other.peak_live;
         self.recycle_hits += other.recycle_hits;
         self.resets += other.resets;
+        self.leaked += other.leaked;
     }
 }
+
+/// Debug-build fill pattern for freshly checked-out slots: a signaling
+/// bit pattern (a quiet NaN with a recognizable payload) that makes an
+/// uninitialized-lane bug — a producer publishing a slot it didn't
+/// fully write — surface as NaNs in outputs instead of stale values
+/// from the previous tenant silently passing tests.
+pub const POISON: f32 = f32::from_bits(0x7FC0_DEAD);
 
 /// The per-simulation transaction slab allocator.
 #[derive(Debug, Default)]
@@ -118,6 +132,8 @@ pub struct Arena {
     peak_live: u64,
     recycle_hits: u64,
     resets: u64,
+    /// Live slots reclaimed by resets (see [`Arena::reset`]).
+    leaked: u64,
     /// Staging buffer for intra-arena copies (issuer wide→narrow
     /// splits), reused so the hot loop never allocates.
     scratch: Vec<f32>,
@@ -166,6 +182,13 @@ impl Arena {
         };
         debug_assert!(!c.live_flag[slot as usize], "allocated a live arena slot");
         c.live_flag[slot as usize] = true;
+        // poison the payload in debug builds — growth and recycle paths
+        // alike — so a producer that publishes a partially written slot
+        // leaks NaNs into outputs instead of the previous tenant's data
+        if cfg!(debug_assertions) {
+            let base = slot as usize * lanes;
+            c.data[base..base + lanes].fill(POISON);
+        }
         self.live += 1;
         self.peak_live = self.peak_live.max(self.live);
         Txn { class: class as u16, lanes: lanes as u16, slot }
@@ -229,7 +252,14 @@ impl Arena {
     /// the live count drops to zero, but slabs, slot counts and
     /// `peak_live` persist — the next run reuses the established
     /// capacity and allocates nothing in steady state.
+    ///
+    /// Reclaiming slots that are still live is *accounted*, not
+    /// asserted: an engine that errored mid-run legitimately leaves
+    /// live slots for the next run's entry reset to sweep up. The
+    /// [`ArenaStats::leaked`] counter records every such slot; across
+    /// clean runs the property suite holds it at zero.
     pub fn reset(&mut self) {
+        self.leaked += self.live;
         for c in &mut self.classes {
             c.free.clear();
             c.free.extend((0..c.slots).rev());
@@ -247,6 +277,7 @@ impl Arena {
             peak_live: self.peak_live,
             recycle_hits: self.recycle_hits,
             resets: self.resets,
+            leaked: self.leaked,
             ..ArenaStats::default()
         };
         for c in &self.classes {
@@ -341,6 +372,40 @@ mod tests {
         let t = a.alloc_from(&[1.0]);
         a.free(t);
         a.free(t);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn fresh_slots_are_poisoned_in_debug_builds() {
+        let mut a = Arena::new();
+        let t = a.alloc(4);
+        assert!(
+            a.get(t).iter().all(|v| v.to_bits() == POISON.to_bits()),
+            "growth-path slot must be poison-filled"
+        );
+        a.get_mut(t).copy_from_slice(&[1.0; 4]);
+        a.free(t);
+        let r = a.alloc(4);
+        assert!(
+            a.get(r).iter().all(|v| v.to_bits() == POISON.to_bits()),
+            "recycled slot must be re-poisoned, not hold the previous tenant's data"
+        );
+        assert!(POISON.is_nan(), "poison must propagate through arithmetic");
+    }
+
+    #[test]
+    fn reset_accounts_leaked_slots() {
+        let mut a = Arena::new();
+        let t = a.alloc_from(&[1.0]);
+        a.free(t);
+        a.reset();
+        assert_eq!(a.stats().leaked, 0, "clean runs leak nothing");
+        let _still_live = a.alloc_from(&[2.0]);
+        let _also_live = a.alloc_from(&[3.0]);
+        a.reset();
+        assert_eq!(a.stats().leaked, 2, "reset must count reclaimed live slots");
+        a.reset();
+        assert_eq!(a.stats().leaked, 2, "leak counter is cumulative, not per-reset");
     }
 
     #[test]

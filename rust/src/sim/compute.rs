@@ -167,8 +167,33 @@ impl CompiledTasklet {
     /// broadcasts its last lane, matching the pre-arena gather. Results
     /// are staged into `out` so the caller can free the inputs before
     /// allocating the output slot — the pop-to-push recycling step.
+    ///
+    /// Dispatches to the chunked 8-lane evaluator when the crate is
+    /// built with the `simd` feature, and to the lane-at-a-time scalar
+    /// loop otherwise. The two are bit-identical (NaN payloads and
+    /// signed zeros included) — property-pinned by this module's tests
+    /// and `rust/tests/properties.rs` — so the feature is purely a
+    /// performance switch.
     #[inline]
     pub fn eval_lanes(
+        &self,
+        arena: &Arena,
+        popped: &[Txn],
+        vals: &mut [f32],
+        stack: &mut [f32],
+        out: &mut [f32],
+    ) {
+        #[cfg(feature = "simd")]
+        self.eval_lanes_chunked(arena, popped, vals, stack, out);
+        #[cfg(not(feature = "simd"))]
+        self.eval_lanes_scalar(arena, popped, vals, stack, out);
+    }
+
+    /// The lane-at-a-time reference evaluator (the pre-SIMD
+    /// `eval_lanes` body, kept verbatim as the oracle the chunked path
+    /// is tested against and the baseline `tvec bench` measures).
+    #[inline]
+    pub fn eval_lanes_scalar(
         &self,
         arena: &Arena,
         popped: &[Txn],
@@ -183,6 +208,230 @@ impl CompiledTasklet {
             }
             *o = self.eval(vals, stack);
         }
+    }
+
+    /// Superword evaluator: runs the stack program op-major over
+    /// 8-lane chunks of the contiguous arena slabs (fixed-size lane
+    /// groups on the stack, no allocation). Falls back to
+    /// [`Self::eval_lanes_scalar`] for programs deeper than
+    /// [`MAX_SIMD_DEPTH`] or wider than [`MAX_SIMD_INS`] inputs, and
+    /// finishes a non-multiple-of-8 lane count with the scalar loop
+    /// (the DESIGN.md §15 fallback matrix). Every lane op uses the same
+    /// scalar f32 primitive as [`Self::eval`] — `a*b + c` stays two
+    /// roundings, `min`/`max` keep `f32::min`/`f32::max` NaN semantics
+    /// — so results are bit-identical to the scalar path; the x86-64
+    /// AVX fast path under the `simd` feature only accelerates
+    /// add/sub/mul/div, the four ops IEEE 754 fixes exactly.
+    #[inline]
+    pub fn eval_lanes_chunked(
+        &self,
+        arena: &Arena,
+        popped: &[Txn],
+        vals: &mut [f32],
+        stack: &mut [f32],
+        out: &mut [f32],
+    ) {
+        if popped.len() > MAX_SIMD_INS || self.depth > MAX_SIMD_DEPTH {
+            return self.eval_lanes_scalar(arena, popped, vals, stack, out);
+        }
+        let lanes = out.len();
+        let full = lanes - lanes % CHUNK;
+        let mut vals8 = [[0.0f32; CHUNK]; MAX_SIMD_INS];
+        let mut stack8 = [[0.0f32; CHUNK]; MAX_SIMD_DEPTH];
+        let mut base = 0usize;
+        while base < full {
+            for (pos, t) in popped.iter().enumerate() {
+                let s = arena.get(*t);
+                let last = s.len() - 1;
+                for (l, v) in vals8[pos].iter_mut().enumerate() {
+                    *v = s[(base + l).min(last)];
+                }
+            }
+            let mut sp = 0usize;
+            for op in &self.ops {
+                match *op {
+                    TOp::Const(v) => {
+                        stack8[sp] = [v; CHUNK];
+                        sp += 1;
+                    }
+                    TOp::Load(i) => {
+                        stack8[sp] = vals8[i];
+                        sp += 1;
+                    }
+                    TOp::Add => {
+                        sp -= 1;
+                        let (lo, hi) = stack8.split_at_mut(sp);
+                        add8(&mut lo[sp - 1], &hi[0]);
+                    }
+                    TOp::Sub => {
+                        sp -= 1;
+                        let (lo, hi) = stack8.split_at_mut(sp);
+                        sub8(&mut lo[sp - 1], &hi[0]);
+                    }
+                    TOp::Mul => {
+                        sp -= 1;
+                        let (lo, hi) = stack8.split_at_mut(sp);
+                        mul8(&mut lo[sp - 1], &hi[0]);
+                    }
+                    TOp::Div => {
+                        sp -= 1;
+                        let (lo, hi) = stack8.split_at_mut(sp);
+                        div8(&mut lo[sp - 1], &hi[0]);
+                    }
+                    TOp::Min => {
+                        sp -= 1;
+                        let (lo, hi) = stack8.split_at_mut(sp);
+                        let (a, b) = (&mut lo[sp - 1], &hi[0]);
+                        for l in 0..CHUNK {
+                            a[l] = a[l].min(b[l]);
+                        }
+                    }
+                    TOp::Max => {
+                        sp -= 1;
+                        let (lo, hi) = stack8.split_at_mut(sp);
+                        let (a, b) = (&mut lo[sp - 1], &hi[0]);
+                        for l in 0..CHUNK {
+                            a[l] = a[l].max(b[l]);
+                        }
+                    }
+                    TOp::Neg => {
+                        for v in stack8[sp - 1].iter_mut() {
+                            *v = -*v;
+                        }
+                    }
+                    TOp::Abs => {
+                        for v in stack8[sp - 1].iter_mut() {
+                            *v = v.abs();
+                        }
+                    }
+                    TOp::MulAdd => {
+                        sp -= 2;
+                        let (lo, hi) = stack8.split_at_mut(sp);
+                        let (a, b, c) = (&mut lo[sp - 1], &hi[0], &hi[1]);
+                        for l in 0..CHUNK {
+                            // two roundings, like the scalar eval — not fma
+                            a[l] = a[l] * b[l] + c[l];
+                        }
+                    }
+                }
+            }
+            debug_assert_eq!(sp, 1);
+            out[base..base + CHUNK].copy_from_slice(&stack8[0]);
+            base += CHUNK;
+        }
+        // scalar tail: same primitives, bit-identical results
+        for (lane, o) in out.iter_mut().enumerate().skip(base) {
+            for (pos, t) in popped.iter().enumerate() {
+                let s = arena.get(*t);
+                vals[pos] = s[lane.min(s.len() - 1)];
+            }
+            *o = self.eval(vals, stack);
+        }
+    }
+}
+
+/// Lane-group width of the chunked evaluator (one AVX `f32x8`).
+pub const CHUNK: usize = 8;
+/// Deepest stack program the chunked evaluator handles in its
+/// fixed-size lane-group stack; deeper programs fall back to scalar.
+pub const MAX_SIMD_DEPTH: usize = 16;
+/// Widest input list the chunked evaluator gathers into its fixed-size
+/// lane-group buffer; wider modules fall back to scalar.
+pub const MAX_SIMD_INS: usize = 8;
+
+#[inline]
+fn add8(a: &mut [f32; CHUNK], b: &[f32; CHUNK]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx_usable() {
+        // SAFETY: AVX support runtime-checked above
+        unsafe { avx::add8(a, b) };
+        return;
+    }
+    for l in 0..CHUNK {
+        a[l] += b[l];
+    }
+}
+
+#[inline]
+fn sub8(a: &mut [f32; CHUNK], b: &[f32; CHUNK]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx_usable() {
+        // SAFETY: AVX support runtime-checked above
+        unsafe { avx::sub8(a, b) };
+        return;
+    }
+    for l in 0..CHUNK {
+        a[l] -= b[l];
+    }
+}
+
+#[inline]
+fn mul8(a: &mut [f32; CHUNK], b: &[f32; CHUNK]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx_usable() {
+        // SAFETY: AVX support runtime-checked above
+        unsafe { avx::mul8(a, b) };
+        return;
+    }
+    for l in 0..CHUNK {
+        a[l] *= b[l];
+    }
+}
+
+#[inline]
+fn div8(a: &mut [f32; CHUNK], b: &[f32; CHUNK]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx_usable() {
+        // SAFETY: AVX support runtime-checked above
+        unsafe { avx::div8(a, b) };
+        return;
+    }
+    for l in 0..CHUNK {
+        a[l] /= b[l];
+    }
+}
+
+/// Cached runtime AVX probe: the chunked evaluator stays portable on
+/// x86-64 machines without AVX (the scalar lane loops take over).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn avx_usable() -> bool {
+    use std::sync::OnceLock;
+    static AVX: OnceLock<bool> = OnceLock::new();
+    *AVX.get_or_init(|| is_x86_feature_detected!("avx"))
+}
+
+/// The `std::arch` fast path: only add/sub/mul/div, the four lane ops
+/// IEEE 754 defines exactly (so vector and scalar results are
+/// bit-identical, NaN payloads included). `min`/`max` stay scalar on
+/// purpose — `vminps`/`vmaxps` NaN and signed-zero semantics differ
+/// from `f32::min`/`f32::max`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx {
+    use super::CHUNK;
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn add8(a: &mut [f32; CHUNK], b: &[f32; CHUNK]) {
+        let v = _mm256_add_ps(_mm256_loadu_ps(a.as_ptr()), _mm256_loadu_ps(b.as_ptr()));
+        _mm256_storeu_ps(a.as_mut_ptr(), v);
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sub8(a: &mut [f32; CHUNK], b: &[f32; CHUNK]) {
+        let v = _mm256_sub_ps(_mm256_loadu_ps(a.as_ptr()), _mm256_loadu_ps(b.as_ptr()));
+        _mm256_storeu_ps(a.as_mut_ptr(), v);
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn mul8(a: &mut [f32; CHUNK], b: &[f32; CHUNK]) {
+        let v = _mm256_mul_ps(_mm256_loadu_ps(a.as_ptr()), _mm256_loadu_ps(b.as_ptr()));
+        _mm256_storeu_ps(a.as_mut_ptr(), v);
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn div8(a: &mut [f32; CHUNK], b: &[f32; CHUNK]) {
+        let v = _mm256_div_ps(_mm256_loadu_ps(a.as_ptr()), _mm256_loadu_ps(b.as_ptr()));
+        _mm256_storeu_ps(a.as_mut_ptr(), v);
     }
 }
 
@@ -239,6 +488,107 @@ mod tests {
     fn unwired_connector_rejected() {
         let t = Tasklet::new("t", vec![("o", TaskExpr::input("ghost"))]);
         assert!(CompiledTasklet::compile(&t, &conns(&["a"])).is_err());
+    }
+
+    /// Build an arena transaction of `lanes` values.
+    fn txn(arena: &mut Arena, vals: &[f32]) -> Txn {
+        arena.alloc_from(vals)
+    }
+
+    fn chunked_equals_scalar(
+        c: &CompiledTasklet,
+        arena: &Arena,
+        popped: &[Txn],
+        lanes: usize,
+    ) {
+        let mut vals = vec![0.0f32; popped.len()];
+        let mut stack = vec![0.0f32; c.stack_depth()];
+        let mut a = vec![0.0f32; lanes];
+        let mut b = vec![0.0f32; lanes];
+        c.eval_lanes_scalar(arena, popped, &mut vals, &mut stack, &mut a);
+        c.eval_lanes_chunked(arena, popped, &mut vals, &mut stack, &mut b);
+        let abits: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+        let bbits: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(abits, bbits, "chunked and scalar lanes must be bit-identical");
+    }
+
+    #[test]
+    fn chunked_lanes_bit_identical_incl_nan_inf_and_tails() {
+        let exprs = vec![
+            TaskExpr::input("a").add(TaskExpr::input("b")),
+            TaskExpr::input("a").sub(TaskExpr::input("b")).mul(TaskExpr::input("c")),
+            TaskExpr::Bin(
+                BinOp::Div,
+                Box::new(TaskExpr::input("a")),
+                Box::new(TaskExpr::input("b")),
+            ),
+            TaskExpr::input("a").min(TaskExpr::input("b")).max(TaskExpr::input("c")),
+            TaskExpr::muladd(
+                TaskExpr::input("a"),
+                TaskExpr::input("b"),
+                TaskExpr::input("c"),
+            ),
+            TaskExpr::Un(
+                crate::ir::UnOp::Abs,
+                Box::new(TaskExpr::Un(
+                    crate::ir::UnOp::Neg,
+                    Box::new(TaskExpr::input("a").sub(TaskExpr::c(0.5))),
+                )),
+            ),
+        ];
+        let cs = conns(&["a", "b", "c"]);
+        let mut rng = Rng::new(77);
+        // special values stress the IEEE edge cases the fast path must
+        // preserve: NaN propagation, ±0, infinities, 0/0
+        let special = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0];
+        for e in exprs {
+            let t = Tasklet::new("t", vec![("o", e)]);
+            let c = CompiledTasklet::compile(&t, &cs).unwrap();
+            for lanes in [1usize, 5, 8, 13, 16, 20] {
+                let mut arena = Arena::new();
+                let mk = |rng: &mut Rng, arena: &mut Arena| {
+                    let data: Vec<f32> = (0..lanes)
+                        .map(|_| {
+                            if rng.below(5) == 0 {
+                                special[rng.below(special.len() as u64) as usize]
+                            } else {
+                                rng.f32_range(-9.0, 9.0)
+                            }
+                        })
+                        .collect();
+                    txn(arena, &data)
+                };
+                let popped =
+                    vec![mk(&mut rng, &mut arena), mk(&mut rng, &mut arena), mk(&mut rng, &mut arena)];
+                chunked_equals_scalar(&c, &arena, &popped, lanes);
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_broadcasts_narrow_inputs_like_scalar() {
+        let e = TaskExpr::input("a").add(TaskExpr::input("b"));
+        let t = Tasklet::new("t", vec![("o", e)]);
+        let c = CompiledTasklet::compile(&t, &conns(&["a", "b"])).unwrap();
+        let mut arena = Arena::new();
+        let wide = txn(&mut arena, &(0..16).map(|i| i as f32).collect::<Vec<_>>());
+        let narrow = txn(&mut arena, &[100.0]); // broadcasts its last lane
+        chunked_equals_scalar(&c, &arena, &[wide, narrow], 16);
+    }
+
+    #[test]
+    fn deep_programs_fall_back_to_scalar_and_still_match() {
+        // right-leaning chain deeper than MAX_SIMD_DEPTH
+        let mut e = TaskExpr::c(1.0);
+        for _ in 0..(MAX_SIMD_DEPTH + 4) {
+            e = TaskExpr::input("a").add(e);
+        }
+        let t = Tasklet::new("t", vec![("o", e)]);
+        let c = CompiledTasklet::compile(&t, &conns(&["a"])).unwrap();
+        assert!(c.stack_depth() > MAX_SIMD_DEPTH);
+        let mut arena = Arena::new();
+        let a = txn(&mut arena, &(0..8).map(|i| 0.25 * i as f32).collect::<Vec<_>>());
+        chunked_equals_scalar(&c, &arena, &[a], 8);
     }
 
     #[test]

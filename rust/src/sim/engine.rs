@@ -549,7 +549,8 @@ fn record_sim_metrics(
     }
 }
 
-/// Run both exact engines on one design + input and demand full
+/// Run every exact engine — event-driven, sharded (two threads), and
+/// the legacy reference stepper — on one design + input and demand full
 /// equivalence: slow/fast cycle counts, transactions, bottleneck,
 /// per-module busy/stall counters, and every named output container.
 /// The single definition of the cycle-exactness oracle — the property
@@ -580,8 +581,42 @@ pub fn exact_engines_agree_in(
 ) -> Result<(), String> {
     let e = run_exact_in(design, hbm.clone(), max_cycles, arena)
         .map_err(|err| format!("event: {err}"))?;
+    let s = super::shard::run_exact_sharded_in(
+        design,
+        hbm.clone(),
+        max_cycles,
+        2,
+        None,
+        &mut Vec::new(),
+        None,
+    )
+    .map_err(|err| format!("sharded: {err}"))?;
     let r = run_exact_reference_in(design, hbm, max_cycles, arena)
         .map_err(|err| format!("reference: {err}"))?;
+    if (s.stats.slow_cycles, s.stats.fast_cycles, s.stats.transactions)
+        != (e.stats.slow_cycles, e.stats.fast_cycles, e.stats.transactions)
+    {
+        return Err(format!(
+            "sharded cycle counters diverged: sharded ({}, {}, {}) vs event ({}, {}, {})",
+            s.stats.slow_cycles,
+            s.stats.fast_cycles,
+            s.stats.transactions,
+            e.stats.slow_cycles,
+            e.stats.fast_cycles,
+            e.stats.transactions
+        ));
+    }
+    if s.stats.bottleneck != e.stats.bottleneck || s.stats.modules != e.stats.modules {
+        return Err(format!(
+            "sharded per-module counters diverged:\n  sharded {:?} '{}'\n  event   {:?} '{}'",
+            s.stats.modules, s.stats.bottleneck, e.stats.modules, e.stats.bottleneck
+        ));
+    }
+    for out in outputs {
+        if s.hbm.read(out) != e.hbm.read(out) {
+            return Err(format!("output '{out}' differs between sharded and event engines"));
+        }
+    }
     if e.stats.slow_cycles != r.stats.slow_cycles {
         return Err(format!(
             "slow cycles: event {} vs reference {}",

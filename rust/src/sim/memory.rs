@@ -60,6 +60,18 @@ impl Hbm {
             }
         }
     }
+
+    /// Container names, in bank order.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.banks.keys().map(|s| s.as_str())
+    }
+
+    /// Merge every container of `other` into this memory, replacing any
+    /// container of the same name — the sharded engine's merge-back
+    /// after a run on per-shard bank copies.
+    pub fn absorb(&mut self, other: Hbm) {
+        self.banks.extend(other.banks);
+    }
 }
 
 #[cfg(test)]
@@ -90,6 +102,19 @@ mod tests {
     #[should_panic(expected = "not loaded")]
     fn missing_container_panics() {
         Hbm::new().read("ghost");
+    }
+
+    #[test]
+    fn absorb_replaces_matching_containers() {
+        let mut a = Hbm::new();
+        a.load("x", vec![1.0]);
+        a.load("z", vec![0.0, 0.0]);
+        let mut b = Hbm::new();
+        b.load("z", vec![7.0, 8.0]);
+        a.absorb(b);
+        assert_eq!(a.read("x"), &[1.0]);
+        assert_eq!(a.read("z"), &[7.0, 8.0]);
+        assert_eq!(a.names().collect::<Vec<_>>(), vec!["x", "z"]);
     }
 
     #[test]

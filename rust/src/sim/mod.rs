@@ -32,6 +32,12 @@
 //! (slot handles + per-lane-class free lists, DESIGN.md §10): the
 //! `*_in` engine variants share a caller-owned arena across runs so a
 //! DSE evaluation loop performs zero steady-state heap allocation.
+//!
+//! Exact simulation additionally parallelizes across threads
+//! ([`shard::run_exact_sharded`], DESIGN.md §15): the netlist is
+//! partitioned into weakly-connected components that synchronize only
+//! at rep barriers, cycle-exact and bit-identical to the serial engine
+//! by construction and by property test.
 
 pub mod arena;
 pub mod channel;
@@ -39,6 +45,7 @@ pub mod compute;
 pub mod engine;
 pub mod memory;
 pub mod process;
+pub mod shard;
 pub mod stats;
 pub mod trace;
 
@@ -49,5 +56,9 @@ pub use engine::{
     run_exact_reference_in, run_functional, run_functional_in, SimOutcome,
 };
 pub use memory::Hbm;
+pub use shard::{
+    replicate_design, replicate_inputs, resolve_threads, run_exact_sharded,
+    run_exact_sharded_in, shard_partition,
+};
 pub use stats::SimStats;
 pub use trace::{run_traced, Trace};

@@ -1,0 +1,976 @@
+//! Domain-sharded exact simulation: the parallel counterpart of
+//! [`super::engine::run_exact`].
+//!
+//! The lowered netlist is partitioned into weakly-connected components
+//! ([`shard_partition`]): two modules land in one shard when they touch
+//! the same channel *or* the same HBM container (a reader and writer of
+//! one bank must observe each other's bytes in program order, so a
+//! container is never split across threads). Each shard then runs the
+//! event-driven scheduler — the exact per-cycle body of
+//! [`super::engine::run_exact_deadline_in`], minus rep-end settlement —
+//! on its own worker thread, and the shards synchronize only at rep
+//! boundaries (DESIGN.md §15):
+//!
+//! * Within one rep, shards share no channels and no HBM banks, so a
+//!   shard's event sequence is exactly the serial engine's sequence
+//!   restricted to that shard's modules. Cross-shard `Fifo` activity
+//!   counters therefore never race — they are the only synchronization
+//!   points *between* reps, read at the barrier.
+//! * A cleanly completing shard reports its local break cycle
+//!   (`final_t0`); the barrier takes the **max** over shards — the
+//!   serial engine's quiescence cycle, since its quiet predicate is
+//!   state-based and its gap path returns the last progress cycle + 1.
+//! * Sleeping processes settle their stall counters **at the barrier**
+//!   with the *global* `final_t0` (the serial engine ticked every
+//!   scheduled sleeper through the global break cycle), and every shard
+//!   re-arms the next rep from the agreed `fast_t = final_t0 + 1`.
+//!
+//! Error parity: a slow-cycle budget error has one deterministic
+//! message, so a shard-local budget hit is returned directly. A
+//! wall-deadline error embeds a nondeterministic elapsed time in both
+//! engines, so it is returned directly too. A *deadlock*, however,
+//! reports a cycle number and stuck-module list that depend on
+//! cross-shard last-progress timing — on any local deadlock the sharded
+//! run is discarded and the whole design re-runs on the serial engine,
+//! reproducing the diagnostic byte for byte.
+//!
+//! Designs that lower to a single component (every real app: one
+//! pipeline from readers to writers) honestly delegate to the serial
+//! engine, as does `threads == 1`. Genuine multi-shard inputs come from
+//! [`replicate_design`], which stamps k independent copies of a
+//! netlist — the bench's sharded-vs-serial rows and the property suite
+//! run on those. Cycle-exactness against [`super::engine::run_exact_reference`]
+//! is pinned by `rust/tests/properties.rs` and
+//! [`super::engine::exact_engines_agree_in`], which runs this engine at
+//! two threads alongside both serial engines.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use super::arena::{Arena, ArenaStats};
+use super::channel::{Channels, Fifo};
+use super::engine::{fast_time_base, run_exact_deadline_in, SimOutcome, WALL_DEADLINE_MARK};
+use super::memory::Hbm;
+use super::process::Proc;
+use super::stats::SimStats;
+use crate::codegen::design::{ChannelSpec, Design, ModuleInst, ModuleSpec};
+use crate::ir::ClockDomain;
+
+/// Resolve a `--threads` request: `0` means "whatever the machine
+/// offers" (the CLI default), anything else is taken literally. Shared
+/// by the sharded engine, the DSE evaluator and the parallel verify
+/// path so every layer agrees on what "default parallelism" means.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Is this module excluded from simulation (the engines build no
+/// process for `__ctrl` synchronizers)? Mirrors `build_procs`.
+fn is_ctrl_sync(spec: &ModuleSpec) -> bool {
+    matches!(spec, ModuleSpec::Sync { input, .. } if input.starts_with("__ctrl"))
+}
+
+/// The HBM container a module reads or writes, if any. Only the memory
+/// endpoints touch HBM (`Proc::tick` calls `fetch`/`store` exclusively
+/// from readers and writers); cores keep their state internal.
+fn hbm_container(spec: &ModuleSpec) -> Option<&str> {
+    match spec {
+        ModuleSpec::Reader { data, .. } | ModuleSpec::Writer { data, .. } => Some(data),
+        _ => None,
+    }
+}
+
+fn find(parent: &mut [usize], mut i: usize) -> usize {
+    while parent[i] != i {
+        parent[i] = parent[parent[i]]; // path halving
+        i = parent[i];
+    }
+    i
+}
+
+fn union(parent: &mut [usize], a: usize, b: usize) {
+    let (ra, rb) = (find(parent, a), find(parent, b));
+    if ra != rb {
+        parent[ra.max(rb)] = ra.min(rb);
+    }
+}
+
+/// Weakly-connected-component partition of a design's simulated
+/// modules. Two modules share a component when they touch the same
+/// channel or the same HBM container. Returns groups of indices into
+/// `design.modules` (`__ctrl` syncs excluded), each group ascending,
+/// groups ordered by their first module — so concatenating the groups
+/// of a single-component design reproduces the serial proc order.
+pub fn shard_partition(design: &Design) -> Vec<Vec<usize>> {
+    let n = design.modules.len();
+    let mut parent: Vec<usize> = (0..n).collect();
+    let mut owner: HashMap<String, usize> = HashMap::new();
+    for (i, m) in design.modules.iter().enumerate() {
+        if is_ctrl_sync(&m.spec) {
+            continue;
+        }
+        let mut keys: Vec<String> = m.spec.inputs();
+        keys.extend(m.spec.outputs());
+        if let Some(data) = hbm_container(&m.spec) {
+            // prefixed so a container and a channel of one name never merge
+            keys.push(format!("hbm:{data}"));
+        }
+        for k in keys {
+            match owner.get(&k) {
+                Some(&j) => union(&mut parent, i, j),
+                None => {
+                    owner.insert(k, i);
+                }
+            }
+        }
+    }
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut of_root: HashMap<usize, usize> = HashMap::new();
+    for (i, m) in design.modules.iter().enumerate() {
+        if is_ctrl_sync(&m.spec) {
+            continue;
+        }
+        let r = find(&mut parent, i);
+        let g = *of_root.entry(r).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[g].push(i);
+    }
+    groups
+}
+
+/// Stamp `k` independent copies of a netlist: modules, channels and
+/// arrays are cloned per replica with an `r{i}__` name prefix (control
+/// channels keep their `__ctrl` marker prefix so the engines' sync
+/// filter still recognizes them). The replicas share no channel and no
+/// HBM container, so [`shard_partition`] finds exactly `k × ` the
+/// original component count — the multi-shard workload the bench's
+/// sharded-vs-serial rows and the property suite run on. Replica 0 of
+/// every name comes first, so the serial engine's module order is the
+/// concatenation of the replicas'.
+pub fn replicate_design(design: &Design, k: usize) -> Design {
+    assert!(k >= 1, "replicate_design wants k >= 1");
+    let mut modules = Vec::with_capacity(design.modules.len() * k);
+    let mut channels = Vec::with_capacity(design.channels.len() * k);
+    let mut arrays = Vec::with_capacity(design.arrays.len() * k);
+    for i in 0..k {
+        let p = format!("r{i}__");
+        for m in &design.modules {
+            modules.push(ModuleInst {
+                spec: rename_spec(&m.spec, &p),
+                domain: m.domain,
+                resources: m.resources,
+            });
+        }
+        for c in &design.channels {
+            channels.push(ChannelSpec { name: rename(&c.name, &p), ..c.clone() });
+        }
+        for (name, elems, bank) in &design.arrays {
+            arrays.push((rename(name, &p), *elems, *bank));
+        }
+    }
+    Design {
+        name: format!("{}_x{k}", design.name),
+        modules,
+        channels,
+        pump: design.pump,
+        domain_modes: design.domain_modes.clone(),
+        arrays,
+        repeat: design.repeat,
+        slr_replicas: design.slr_replicas,
+        cl0_request_mhz: design.cl0_request_mhz,
+    }
+}
+
+/// Load one input set once per replica under [`replicate_design`]'s
+/// naming scheme.
+pub fn replicate_inputs(inputs: &[(String, Vec<f32>)], k: usize) -> Hbm {
+    let mut hbm = Hbm::new();
+    for i in 0..k {
+        for (name, data) in inputs {
+            hbm.load(&format!("r{i}__{name}"), data.clone());
+        }
+    }
+    hbm
+}
+
+/// Prefix a name, preserving the `__ctrl` marker prefix the engines
+/// and checker key on.
+fn rename(name: &str, p: &str) -> String {
+    match name.strip_prefix("__ctrl") {
+        Some(rest) => format!("__ctrl_{p}{rest}"),
+        None => format!("{p}{name}"),
+    }
+}
+
+fn rename_spec(spec: &ModuleSpec, p: &str) -> ModuleSpec {
+    let r = |s: &str| rename(s, p);
+    match spec {
+        ModuleSpec::Reader { data, stream, lanes, elems, bytes_per_cycle } => {
+            ModuleSpec::Reader {
+                data: r(data),
+                stream: r(stream),
+                lanes: *lanes,
+                elems: *elems,
+                bytes_per_cycle: *bytes_per_cycle,
+            }
+        }
+        ModuleSpec::Writer { data, stream, lanes, elems, bytes_per_cycle } => {
+            ModuleSpec::Writer {
+                data: r(data),
+                stream: r(stream),
+                lanes: *lanes,
+                elems: *elems,
+                bytes_per_cycle: *bytes_per_cycle,
+            }
+        }
+        ModuleSpec::Compute { name, tasklet, inputs, output, lanes, iterations, ii, latency } => {
+            ModuleSpec::Compute {
+                name: r(name),
+                tasklet: tasklet.clone(),
+                inputs: inputs.iter().map(|(s, c)| (r(s), c.clone())).collect(),
+                output: (r(&output.0), output.1.clone()),
+                lanes: *lanes,
+                iterations: *iterations,
+                ii: *ii,
+                latency: *latency,
+            }
+        }
+        ModuleSpec::Sync { input, output } => {
+            ModuleSpec::Sync { input: r(input), output: r(output) }
+        }
+        ModuleSpec::Issuer { input, output, factor } => {
+            ModuleSpec::Issuer { input: r(input), output: r(output), factor: *factor }
+        }
+        ModuleSpec::Packer { input, output, factor } => {
+            ModuleSpec::Packer { input: r(input), output: r(output), factor: *factor }
+        }
+        ModuleSpec::GemmCore { name, a, b, c, n, m, k, pes, lanes, tile_m, tile_n } => {
+            ModuleSpec::GemmCore {
+                name: r(name),
+                a: r(a),
+                b: r(b),
+                c: r(c),
+                n: *n,
+                m: *m,
+                k: *k,
+                pes: *pes,
+                lanes: *lanes,
+                tile_m: *tile_m,
+                tile_n: *tile_n,
+            }
+        }
+        ModuleSpec::StencilCore { name, kind, input, output, nx, ny, nz, lanes } => {
+            ModuleSpec::StencilCore {
+                name: r(name),
+                kind: kind.clone(),
+                input: r(input),
+                output: r(output),
+                nx: *nx,
+                ny: *ny,
+                nz: *nz,
+                lanes: *lanes,
+            }
+        }
+        ModuleSpec::FwCore { name, input, output, n, lanes, ii } => ModuleSpec::FwCore {
+            name: r(name),
+            input: r(input),
+            output: r(output),
+            n: *n,
+            lanes: *lanes,
+            ii: *ii,
+        },
+    }
+}
+
+/// One shard's complete event-loop state. Fields mirror the serial
+/// engine's locals; the scheduling arrays persist across reps (they are
+/// fully re-armed at each rep start, exactly as the serial engine
+/// re-arms its own).
+struct Shard {
+    /// Each local proc's position in the serial engine's proc order —
+    /// merged stats are reassembled in this order so bottleneck
+    /// tie-breaking and the `modules` list match the oracle exactly.
+    global: Vec<usize>,
+    procs: Vec<Proc>,
+    ch: Channels,
+    hbm: Hbm,
+    arena: Arena,
+    stride: Vec<u64>,
+    push_subs: Vec<Vec<usize>>,
+    pop_subs: Vec<Vec<usize>>,
+    own_ch: Vec<Vec<usize>>,
+    scratch: Vec<u64>,
+    awake: Vec<bool>,
+    next_tick: Vec<u64>,
+    sleep_at: Vec<u64>,
+    sleep_done: Vec<bool>,
+}
+
+/// How one shard's rep ended (settlement not yet applied).
+enum RepEnd {
+    /// The shard's local break cycle.
+    Clean { final_t0: u64 },
+    /// Slow-cycle budget exhausted — the error string is deterministic
+    /// and identical to the serial engine's, so it is returned directly.
+    Budget,
+    /// Wall-clock deadline hit (message carries the elapsed time).
+    Wall(String),
+    /// Local deadlock: diagnostics depend on cross-shard timing, so the
+    /// coordinator discards the sharded run and re-runs serially.
+    Deadlock,
+}
+
+/// Asleep with no armed wake (mirrors the serial engine).
+const IDLE: u64 = u64::MAX;
+
+/// First scheduled cycle of stride `s` at or after `t`.
+fn align(t: u64, s: u64) -> u64 {
+    let r = t % s;
+    if r == 0 {
+        t
+    } else {
+        t + (s - r)
+    }
+}
+
+/// Arm a sleeping local process `j` after an event at cycle `t` fired
+/// by local process `cur`. Local order preserves the serial module
+/// order (shard member lists ascend), so the same-cycle `j > cur` rule
+/// is equivalent to the serial engine's global-index comparison.
+fn wake_proc(j: usize, t: u64, cur: usize, stride: &[u64], awake: &[bool], next_tick: &mut [u64]) {
+    if awake[j] {
+        return;
+    }
+    let s = stride[j];
+    let at = if j > cur && t % s == 0 { t } else { (t / s + 1) * s };
+    if at < next_tick[j] {
+        next_tick[j] = at;
+    }
+}
+
+/// Run one rep of one shard from the globally agreed `fast_t`. The
+/// cycle body is the serial engine's verbatim; the rep-end stall
+/// settlement is *omitted* — it needs the global break cycle, which
+/// only the barrier knows.
+#[allow(clippy::too_many_arguments)]
+fn run_rep(
+    s: &mut Shard,
+    rep: usize,
+    fast_t: u64,
+    budget: u64,
+    factor: u64,
+    deadline: Option<(Instant, Duration)>,
+    design_name: &str,
+) -> RepEnd {
+    let Shard {
+        procs,
+        ch,
+        hbm,
+        arena,
+        stride,
+        push_subs,
+        pop_subs,
+        own_ch,
+        scratch,
+        awake,
+        next_tick,
+        sleep_at,
+        sleep_done,
+        ..
+    } = s;
+    let n = procs.len();
+    if rep > 0 {
+        for p in procs.iter_mut() {
+            p.reset_for_repeat();
+        }
+    }
+    for i in 0..n {
+        awake[i] = true;
+        next_tick[i] = align(fast_t, stride[i]);
+    }
+    let mut deadlock_t0 = fast_t + 8 * factor;
+    let mut break_t0 = fast_t;
+    let mut wall_tick = 0u32;
+    loop {
+        wall_tick = wall_tick.wrapping_add(1);
+        if wall_tick & 0xff == 0 {
+            if let Some((t0, limit)) = deadline {
+                if t0.elapsed() > limit {
+                    return RepEnd::Wall(format!(
+                        "exact simulation of '{design_name}' {WALL_DEADLINE_MARK} \
+                         ({}ms limit, {}ms elapsed)",
+                        limit.as_millis(),
+                        t0.elapsed().as_millis()
+                    ));
+                }
+            }
+        }
+        let t = next_tick.iter().copied().min().unwrap_or(IDLE);
+        if t > break_t0 {
+            let quiet = procs.iter().all(|p| p.done(ch)) && ch.all_empty();
+            if quiet {
+                if break_t0 + 1 > budget {
+                    return RepEnd::Budget;
+                }
+                return RepEnd::Clean { final_t0: break_t0 };
+            }
+            let gap = deadlock_t0.min(budget);
+            if t > gap {
+                if budget <= deadlock_t0 {
+                    return RepEnd::Budget;
+                }
+                return RepEnd::Deadlock;
+            }
+        }
+        let mut progress = false;
+        for i in 0..n {
+            if next_tick[i] != t {
+                continue;
+            }
+            if !awake[i] && !sleep_done[i] {
+                procs[i].stalls += ((t - sleep_at[i]) / stride[i]).saturating_sub(1);
+            }
+            let chans = &own_ch[i];
+            for (k, &c) in chans.iter().enumerate() {
+                scratch[k] = ch.fifos[c].activity();
+            }
+            let prog = procs[i].tick(t, ch, arena, hbm);
+            if prog {
+                progress = true;
+                awake[i] = true;
+                next_tick[i] = t + stride[i];
+            } else {
+                awake[i] = false;
+                sleep_at[i] = t;
+                sleep_done[i] = procs[i].done(ch);
+                next_tick[i] = match procs[i].next_retire_time() {
+                    Some(ready) if ready > t => align(ready, stride[i]),
+                    _ => IDLE,
+                };
+            }
+            for (k, &c) in chans.iter().enumerate() {
+                if ch.fifos[c].activity() != scratch[k] {
+                    for &j in push_subs[c].iter().chain(pop_subs[c].iter()) {
+                        wake_proc(j, t, i, stride, awake, next_tick);
+                    }
+                }
+            }
+        }
+        if t + 1 > budget {
+            return RepEnd::Budget;
+        }
+        if !progress {
+            let quiet = procs.iter().all(|p| p.done(ch)) && ch.all_empty();
+            if quiet {
+                return RepEnd::Clean { final_t0: t };
+            }
+            if t >= deadlock_t0 {
+                return RepEnd::Deadlock;
+            }
+        } else {
+            deadlock_t0 = t + 8 * factor + 1;
+            break_t0 = t + 1;
+        }
+    }
+}
+
+/// [`run_exact_sharded_in`] with a private arena pool and no deadline.
+pub fn run_exact_sharded(
+    design: &Design,
+    hbm: Hbm,
+    max_cycles: u64,
+    threads: usize,
+) -> Result<SimOutcome, String> {
+    run_exact_sharded_in(design, hbm, max_cycles, threads, None, &mut Vec::new(), None)
+}
+
+/// Sharded exact simulation: cycle-exact and output-bit-identical to
+/// [`super::engine::run_exact`] (see the module docs for the barrier
+/// argument). `threads == 0` means available parallelism; `threads ==
+/// 1` — or a design that lowers to a single component — delegates to
+/// the serial engine. `arenas` is the per-shard arena pool: it is grown
+/// to the shard count on first use and every arena is returned (in
+/// shard order) before this function exits, so repeated runs reuse the
+/// slabs the first run established, whatever the outcome.
+///
+/// With a recorder attached the run is wrapped in a `sim.sharded` span
+/// (shards/workers noted) and emits per-shard `sim.shard.<i>.busy` and
+/// `sim.shard.<i>.steals` counters — a steal being a rep dispatch a
+/// worker picked up outside its home slice of the shard queue. The
+/// recorder is only touched from the coordinator thread, after the
+/// barrier, so instrumentation is purely observational.
+pub fn run_exact_sharded_in(
+    design: &Design,
+    mut hbm: Hbm,
+    max_cycles: u64,
+    threads: usize,
+    wall: Option<Duration>,
+    arenas: &mut Vec<Arena>,
+    rec: Option<&crate::telemetry::Recorder>,
+) -> Result<SimOutcome, String> {
+    let groups = shard_partition(design);
+    let workers = resolve_threads(threads).min(groups.len().max(1));
+    if groups.len() < 2 || workers < 2 {
+        if arenas.is_empty() {
+            arenas.push(Arena::default());
+        }
+        return run_exact_deadline_in(design, hbm, max_cycles, wall, &mut arenas[0], rec);
+    }
+
+    let deadline = wall.map(|limit| (Instant::now(), limit));
+    for (name, elems, _) in &design.arrays {
+        hbm.alloc(name, *elems);
+    }
+    let factor = fast_time_base(design);
+    let budget = max_cycles.saturating_mul(factor);
+    let exceeded = || {
+        format!("exact simulation of '{}' exceeded {max_cycles} slow cycles", design.name)
+    };
+
+    // channel name → shard of its attached modules (consistent by the
+    // union construction); unattached channels (`__ctrl`) ride shard 0
+    let mut chan_shard: HashMap<String, usize> = HashMap::new();
+    for (s, group) in groups.iter().enumerate() {
+        for &mi in group {
+            let spec = &design.modules[mi].spec;
+            for name in spec.inputs().into_iter().chain(spec.outputs()) {
+                chan_shard.insert(name, s);
+            }
+        }
+    }
+    // each module's position in the serial engine's proc order — merged
+    // stats reassemble in this order
+    let serial_pos: HashMap<usize, usize> = design
+        .modules
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| !is_ctrl_sync(&m.spec))
+        .enumerate()
+        .map(|(pos, (mi, _))| (mi, pos))
+        .collect();
+
+    while arenas.len() < groups.len() {
+        arenas.push(Arena::default());
+    }
+    let mut pool: Vec<Arena> = std::mem::take(arenas);
+    // build shards: per-shard channels in design order, procs in module
+    // order (local order therefore preserves global relative order),
+    // per-shard HBM holding a copy of the shard's containers — the
+    // original stays pristine for the deadlock fallback path
+    let mut shards: Vec<Mutex<Shard>> = Vec::with_capacity(groups.len());
+    for (s, group) in groups.iter().enumerate() {
+        let mut ch = Channels::default();
+        for c in &design.channels {
+            if chan_shard.get(c.name.as_str()).copied().unwrap_or(0) == s {
+                ch.add(Fifo::new(&c.name, c.lanes, c.depth));
+            }
+        }
+        let mut local = Hbm::new();
+        let mut procs = Vec::with_capacity(group.len());
+        let mut global = Vec::with_capacity(group.len());
+        for &mi in group {
+            let m = &design.modules[mi];
+            if let Some(data) = hbm_container(&m.spec) {
+                if !local.contains(data) {
+                    local.load(data, hbm.read(data).to_vec());
+                }
+            }
+            procs.push(Proc::build(&m.spec, m.domain, &ch));
+            global.push(serial_pos[&mi]);
+        }
+        let stride: Vec<u64> = procs
+            .iter()
+            .map(|p| match p.domain {
+                ClockDomain::Slow => factor,
+                ClockDomain::Fast { factor: f } => (factor / (f as u64)).max(1),
+            })
+            .collect();
+        let mut push_subs: Vec<Vec<usize>> = vec![Vec::new(); ch.fifos.len()];
+        let mut pop_subs: Vec<Vec<usize>> = vec![Vec::new(); ch.fifos.len()];
+        let own_ch: Vec<Vec<usize>> = procs
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let ins = p.input_channels();
+                let outs = p.output_channels();
+                for &c in &ins {
+                    push_subs[c].push(i);
+                }
+                for &c in &outs {
+                    pop_subs[c].push(i);
+                }
+                ins.into_iter().chain(outs).collect()
+            })
+            .collect();
+        let max_own = own_ch.iter().map(|c| c.len()).max().unwrap_or(0);
+        let n = procs.len();
+        let mut arena = pool.remove(0);
+        arena.reset();
+        shards.push(Mutex::new(Shard {
+            global,
+            procs,
+            ch,
+            hbm: local,
+            arena,
+            stride,
+            push_subs,
+            pop_subs,
+            own_ch,
+            scratch: vec![0; max_own],
+            awake: vec![true; n],
+            next_tick: vec![0; n],
+            sleep_at: vec![0; n],
+            sleep_done: vec![false; n],
+        }));
+    }
+
+    let mut span = rec.map(|r| r.span("sim.sharded"));
+    if let Some(sp) = span.as_mut() {
+        sp.note("shards", groups.len() as u64);
+        sp.note("workers", workers as u64);
+    }
+    let steals: Vec<AtomicU64> = (0..shards.len()).map(|_| AtomicU64::new(0)).collect();
+
+    let result = drive(
+        design,
+        hbm,
+        &mut shards,
+        workers,
+        budget,
+        factor,
+        deadline,
+        max_cycles,
+        &exceeded,
+        &steals,
+        wall,
+        rec,
+    );
+
+    if let Some(r) = rec {
+        for (i, m) in shards.iter_mut().enumerate() {
+            let sh = m.get_mut().unwrap_or_else(PoisonError::into_inner);
+            r.add(
+                &format!("sim.shard.{i}.busy"),
+                sh.procs.iter().map(|p| p.busy).sum::<u64>(),
+            );
+            r.add(&format!("sim.shard.{i}.steals"), steals[i].load(Ordering::Relaxed));
+        }
+    }
+    // return every arena to the caller's pool, in shard order, on every
+    // outcome — the next run reuses the established slabs; a caller
+    // pool larger than the shard count keeps its extras at the tail
+    for m in shards {
+        let sh = m.into_inner().unwrap_or_else(PoisonError::into_inner);
+        arenas.push(sh.arena);
+    }
+    arenas.append(&mut pool);
+    result
+}
+
+/// The rep-barrier coordinator: dispatch every shard's rep across the
+/// worker pool, classify the outcomes, settle stalls with the global
+/// break cycle, and assemble the merged outcome in serial proc order.
+#[allow(clippy::too_many_arguments)]
+fn drive(
+    design: &Design,
+    hbm: Hbm,
+    shards: &mut Vec<Mutex<Shard>>,
+    workers: usize,
+    budget: u64,
+    factor: u64,
+    deadline: Option<(Instant, Duration)>,
+    max_cycles: u64,
+    exceeded: &dyn Fn() -> String,
+    steals: &[AtomicU64],
+    wall: Option<Duration>,
+    rec: Option<&crate::telemetry::Recorder>,
+) -> Result<SimOutcome, String> {
+    let nshards = shards.len();
+    let mut fast_t: u64 = 0;
+    for rep in 0..design.repeat {
+        if let Some((t0, limit)) = deadline {
+            if t0.elapsed() > limit {
+                return Err(format!(
+                    "exact simulation of '{}' {WALL_DEADLINE_MARK} ({}ms limit, {}ms elapsed)",
+                    design.name,
+                    limit.as_millis(),
+                    t0.elapsed().as_millis()
+                ));
+            }
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<RepEnd>>> = Mutex::new((0..nshards).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let next = &next;
+                let slots = &slots;
+                let shards = &*shards;
+                let name = design.name.as_str();
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= nshards {
+                        break;
+                    }
+                    if i % workers != w {
+                        steals[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                    let mut sh =
+                        shards[i].lock().unwrap_or_else(PoisonError::into_inner);
+                    let end = run_rep(&mut sh, rep, fast_t, budget, factor, deadline, name);
+                    slots.lock().unwrap_or_else(PoisonError::into_inner)[i] = Some(end);
+                });
+            }
+        });
+        let ends: Vec<RepEnd> = slots
+            .into_inner()
+            .unwrap_or_else(PoisonError::into_inner)
+            .into_iter()
+            .map(|e| e.expect("every shard ran its rep"))
+            .collect();
+        if ends.iter().any(|e| matches!(e, RepEnd::Deadlock)) {
+            // deadlock diagnostics (cycle number, stuck-module list)
+            // span shards — discard and reproduce them serially on the
+            // pristine input state
+            let sh0 = shards[0].get_mut().unwrap_or_else(PoisonError::into_inner);
+            return run_exact_deadline_in(design, hbm, max_cycles, wall, &mut sh0.arena, rec);
+        }
+        for e in &ends {
+            if let RepEnd::Wall(msg) = e {
+                return Err(msg.clone());
+            }
+        }
+        if ends.iter().any(|e| matches!(e, RepEnd::Budget)) {
+            return Err(exceeded());
+        }
+        let final_t0 = ends
+            .iter()
+            .map(|e| match e {
+                RepEnd::Clean { final_t0 } => *final_t0,
+                _ => unreachable!("error reps returned above"),
+            })
+            .max()
+            .expect("at least one shard");
+        debug_assert!(final_t0 + 1 <= budget, "clean shards imply an in-budget rep");
+        // settle sleepers with the *global* break cycle — the serial
+        // engine ticked every scheduled sleeping process through it
+        for m in shards.iter_mut() {
+            let sh = m.get_mut().unwrap_or_else(PoisonError::into_inner);
+            for i in 0..sh.procs.len() {
+                if !sh.awake[i] && !sh.sleep_done[i] {
+                    sh.procs[i].stalls +=
+                        final_t0 / sh.stride[i] - sh.sleep_at[i] / sh.stride[i];
+                }
+            }
+        }
+        fast_t = final_t0 + 1;
+    }
+
+    // assemble the merged outcome in serial proc order
+    let total: usize = shards
+        .iter_mut()
+        .map(|m| m.get_mut().unwrap_or_else(PoisonError::into_inner).procs.len())
+        .sum();
+    let mut modules: Vec<(String, u64, u64)> = vec![(String::new(), 0, 0); total];
+    let mut transactions = 0u64;
+    let mut arena_stats = ArenaStats::default();
+    let mut out_hbm = hbm;
+    for m in shards.iter_mut() {
+        let sh = m.get_mut().unwrap_or_else(PoisonError::into_inner);
+        for (local, p) in sh.procs.iter().enumerate() {
+            modules[sh.global[local]] = (p.label.clone(), p.busy, p.stalls);
+        }
+        transactions += sh.ch.fifos.iter().map(|f| f.pushed).sum::<u64>();
+        debug_assert_eq!(sh.arena.stats().live, 0, "transaction slots leaked");
+        arena_stats.accumulate(&sh.arena.stats());
+        out_hbm.absorb(std::mem::take(&mut sh.hbm));
+    }
+    // the serial engine's bottleneck is `max_by_key(busy)` over procs
+    // in module order — the *last* maximum on ties
+    let bottleneck = modules
+        .iter()
+        .max_by_key(|(_, busy, _)| *busy)
+        .map(|(label, _, _)| label.clone())
+        .unwrap_or_default();
+    let slow_cycles = fast_t / factor;
+    Ok(SimOutcome {
+        stats: SimStats {
+            slow_cycles,
+            fast_cycles: fast_t,
+            bottleneck,
+            modules,
+            transactions,
+            arena: arena_stats,
+        },
+        hbm: out_hbm,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::lower::lower;
+    use crate::hw::cost::CostModel;
+    use crate::ir::builder::vecadd_sdfg;
+    use crate::sim::engine::{run_exact, run_exact_reference};
+    use crate::transforms::{MultiPump, PassManager, StreamingComposition, Vectorize};
+    use crate::util::Rng;
+
+    fn vecadd_design(n: i64, lanes: usize, pump: bool) -> Design {
+        let mut g = vecadd_sdfg(1);
+        let mut pm = PassManager::new();
+        if lanes > 1 {
+            pm.run(&mut g, &Vectorize::new("vadd", lanes)).unwrap();
+        }
+        pm.run(&mut g, &StreamingComposition::default()).unwrap();
+        if pump {
+            pm.run(&mut g, &MultiPump::resource(2)).unwrap();
+        }
+        let env = g.bind(&[("N", n)]).unwrap();
+        lower(&g, &env, &CostModel::default()).unwrap()
+    }
+
+    fn inputs(n: usize, seed: u64) -> Vec<(String, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        vec![("x".into(), rng.f32_vec(n)), ("y".into(), rng.f32_vec(n))]
+    }
+
+    fn outcomes_equal(a: &SimOutcome, b: &SimOutcome, outputs: &[String]) {
+        assert_eq!(a.stats.slow_cycles, b.stats.slow_cycles, "slow cycles");
+        assert_eq!(a.stats.fast_cycles, b.stats.fast_cycles, "fast cycles");
+        assert_eq!(a.stats.transactions, b.stats.transactions, "transactions");
+        assert_eq!(a.stats.bottleneck, b.stats.bottleneck, "bottleneck");
+        assert_eq!(a.stats.modules, b.stats.modules, "per-module counters");
+        for o in outputs {
+            assert_eq!(a.hbm.read(o), b.hbm.read(o), "output '{o}'");
+        }
+    }
+
+    #[test]
+    fn single_pipeline_is_one_component() {
+        let d = vecadd_design(256, 4, true);
+        assert_eq!(shard_partition(&d).len(), 1, "one pipeline, one shard");
+    }
+
+    #[test]
+    fn replication_multiplies_components_and_keeps_ctrl_prefix() {
+        let d = vecadd_design(256, 4, true);
+        let base = shard_partition(&d).len();
+        let r = replicate_design(&d, 3);
+        assert_eq!(shard_partition(&r).len(), 3 * base);
+        assert_eq!(r.modules.len(), 3 * d.modules.len());
+        assert_eq!(r.channels.len(), 3 * d.channels.len());
+        for c in &r.channels {
+            let was_ctrl = c.name.contains("__ctrl");
+            let starts_ctrl = c.name.starts_with("__ctrl");
+            assert_eq!(was_ctrl, starts_ctrl, "ctrl marker must stay a prefix: {}", c.name);
+        }
+    }
+
+    #[test]
+    fn sharded_replicated_vecadd_matches_reference_exactly() {
+        for k in [2usize, 3] {
+            let d = replicate_design(&vecadd_design(512, 4, true), k);
+            let hbm = replicate_inputs(&inputs(512, 21), k);
+            let outs: Vec<String> = (0..k).map(|i| format!("r{i}__z")).collect();
+            let s = run_exact_sharded(&d, hbm.clone(), 10_000_000, 2).unwrap();
+            let r = run_exact_reference(&d, hbm, 10_000_000).unwrap();
+            outcomes_equal(&s, &r, &outs);
+        }
+    }
+
+    #[test]
+    fn sharded_single_component_delegates_and_matches_serial() {
+        let d = vecadd_design(512, 4, true);
+        let mut hbm = Hbm::new();
+        for (name, data) in inputs(512, 22) {
+            hbm.load(&name, data);
+        }
+        let s = run_exact_sharded(&d, hbm.clone(), 10_000_000, 4).unwrap();
+        let e = run_exact(&d, hbm, 10_000_000).unwrap();
+        outcomes_equal(&s, &e, &["z".into()]);
+    }
+
+    #[test]
+    fn threads_one_forces_the_serial_engine() {
+        let d = replicate_design(&vecadd_design(256, 4, false), 2);
+        let hbm = replicate_inputs(&inputs(256, 23), 2);
+        let s = run_exact_sharded(&d, hbm.clone(), 10_000_000, 1).unwrap();
+        let e = run_exact(&d, hbm, 10_000_000).unwrap();
+        outcomes_equal(&s, &e, &["r0__z".into(), "r1__z".into()]);
+    }
+
+    #[test]
+    fn sharded_deadlock_reproduces_the_serial_report_verbatim() {
+        let mut d = replicate_design(&vecadd_design(64, 4, true), 2);
+        // wedge ONE replica: its writer expects more than its reader
+        // produces, so one shard deadlocks while the other completes
+        for m in &mut d.modules {
+            if let ModuleSpec::Writer { data, elems, .. } = &mut m.spec {
+                if data.starts_with("r1__") {
+                    *elems += 10;
+                }
+            }
+        }
+        let hbm = replicate_inputs(&inputs(64, 24), 2);
+        let s = run_exact_sharded(&d, hbm.clone(), 100_000, 2).unwrap_err();
+        let r = run_exact(&d, hbm, 100_000).unwrap_err();
+        assert!(r.contains("deadlock"), "{r}");
+        assert_eq!(s, r, "deadlock diagnostics must match byte for byte");
+    }
+
+    #[test]
+    fn sharded_budget_error_matches_serial_verbatim() {
+        let d = replicate_design(&vecadd_design(4096, 4, true), 2);
+        let hbm = replicate_inputs(&inputs(4096, 25), 2);
+        let s = run_exact_sharded(&d, hbm.clone(), 10, 2).unwrap_err();
+        let r = run_exact(&d, hbm, 10).unwrap_err();
+        assert_eq!(s, r);
+        assert!(s.contains("exceeded"), "{s}");
+    }
+
+    #[test]
+    fn shard_arenas_are_returned_and_reused_across_runs() {
+        let d = replicate_design(&vecadd_design(512, 8, true), 2);
+        let mk = || replicate_inputs(&inputs(512, 26), 2);
+        let mut arenas = Vec::new();
+        run_exact_sharded_in(&d, mk(), 10_000_000, 2, None, &mut arenas, None).unwrap();
+        assert_eq!(arenas.len(), 2, "one arena per shard, returned in order");
+        let slots: Vec<u64> = arenas.iter().map(|a| a.stats().slots).collect();
+        run_exact_sharded_in(&d, mk(), 10_000_000, 2, None, &mut arenas, None).unwrap();
+        assert_eq!(arenas.len(), 2, "pool must not grow across runs");
+        let again: Vec<u64> = arenas.iter().map(|a| a.stats().slots).collect();
+        assert_eq!(slots, again, "steady-state sharded runs allocate no new slots");
+        assert!(arenas.iter().all(|a| a.stats().recycle_hits > 0));
+    }
+
+    #[test]
+    fn observed_sharded_run_is_bit_identical_and_counts_shards() {
+        let d = replicate_design(&vecadd_design(512, 4, true), 2);
+        let mk = || replicate_inputs(&inputs(512, 27), 2);
+        let plain = run_exact_sharded(&d, mk(), 10_000_000, 2).unwrap();
+        let rec = crate::telemetry::Recorder::new();
+        let obs = run_exact_sharded_in(
+            &d,
+            mk(),
+            10_000_000,
+            2,
+            None,
+            &mut Vec::new(),
+            Some(&rec),
+        )
+        .unwrap();
+        outcomes_equal(&plain, &obs, &["r0__z".into(), "r1__z".into()]);
+        let counters = rec.counters();
+        assert!(counters.contains_key("sim.shard.0.busy"));
+        assert!(counters.contains_key("sim.shard.1.busy"));
+        assert!(counters.contains_key("sim.shard.0.steals"));
+    }
+}

@@ -917,3 +917,74 @@ fn dse_serve_answers_ndjson_requests_against_one_shared_cache() {
     assert!(warm_store.exists(), "graceful shutdown must flush the shared cache");
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn dse_threaded_search_and_verify_match_serial_exactly() {
+    // `--threads` is a performance knob, never a semantics knob: a
+    // serial (--threads 1) sweep and a 4-worker sweep must produce the
+    // same frontier and selection, and the pooled frontier verify must
+    // return report-identical results at 1 and 4 workers.
+    use temporal_vec::dse::{verify_frontier_pooled, ArenaPool, VerifyBudget, DEFAULT_TOLERANCE};
+    use temporal_vec::util::Rng;
+
+    let device = Device::u280();
+    let (bases, opts) = vecadd_problem(11);
+    let cfg = SearchConfig::exhaustive(Objective::resource());
+
+    let serial_ev = Evaluator::new();
+    serial_ev.set_threads(1);
+    let threaded_ev = Evaluator::new();
+    threaded_ev.set_threads(4);
+    assert_eq!(serial_ev.threads(), 1);
+    assert_eq!(threaded_ev.threads(), 4);
+    let serial = run_search(&serial_ev, &bases, &device, &opts, &cfg).unwrap();
+    let threaded = run_search(&threaded_ev, &bases, &device, &opts, &cfg).unwrap();
+    let labels = |o: &temporal_vec::dse::SearchOutcome| -> Vec<String> {
+        o.frontier.iter().map(|e| e.label.clone()).collect()
+    };
+    assert_eq!(labels(&serial), labels(&threaded), "frontier depends on --threads");
+    assert_eq!(
+        serial.chosen.as_ref().map(|c| c.label.clone()),
+        threaded.chosen.as_ref().map(|c| c.label.clone()),
+        "selection depends on --threads"
+    );
+    assert!(!serial.frontier.is_empty());
+
+    let n = apps::vecadd::GOLDEN_N;
+    let golden = BuildSpec::new(apps::vecadd::build()).bind("N", n).seeded(11);
+    let mut rng = Rng::new(2024);
+    let inputs = vec![
+        ("x".to_string(), rng.f32_vec(n as usize)),
+        ("y".to_string(), rng.f32_vec(n as usize)),
+    ];
+    let one = verify_frontier_pooled(
+        &serial.frontier,
+        std::slice::from_ref(&golden),
+        &inputs,
+        DEFAULT_TOLERANCE,
+        VerifyBudget::default(),
+        &ArenaPool::default(),
+        1,
+        None,
+    )
+    .unwrap();
+    let four = verify_frontier_pooled(
+        &threaded.frontier,
+        std::slice::from_ref(&golden),
+        &inputs,
+        DEFAULT_TOLERANCE,
+        VerifyBudget::default(),
+        &ArenaPool::default(),
+        4,
+        None,
+    )
+    .unwrap();
+    assert_eq!(one.len(), four.len());
+    for (a, b) in one.iter().zip(&four) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.rate_cycles, b.rate_cycles);
+        assert_eq!(a.exact_cycles, b.exact_cycles);
+        assert_eq!(a.within, b.within);
+        assert_eq!(a.skipped, b.skipped);
+    }
+}

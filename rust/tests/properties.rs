@@ -857,3 +857,280 @@ fn prop_event_engine_is_cycle_exact_on_random_mixed_stencils() {
             .map_err(|e| format!("stages {stages} factors {factors:?}: {e}"))
     });
 }
+
+/// One random compiled design per the `0xE1` arms — uniform pumped
+/// vecadd, mixed per-region stencil chain, bare-fast FW — plus its
+/// input containers and output name. `Ok(None)` is a vacuous
+/// (randomly illegal) candidate.
+#[allow(clippy::type_complexity)]
+fn random_compiled_arm(
+    g: &mut temporal_vec::util::quickcheck::Gen,
+) -> Result<
+    Option<(temporal_vec::coordinator::Compiled, Vec<(String, Vec<f32>)>, &'static str, String)>,
+    String,
+> {
+    use temporal_vec::ir::StencilKind;
+    match g.usize(0, 3) {
+        0 => {
+            let lanes = *g.choose(&[2usize, 4, 8]);
+            let pump: Option<(usize, PumpMode)> = match g.usize(0, 4) {
+                0 => None,
+                1 => Some((2, PumpMode::Resource)),
+                2 => Some((2, PumpMode::Throughput)),
+                _ => Some((4, PumpMode::Resource)),
+            };
+            let pump = match pump {
+                Some((m, PumpMode::Resource)) if lanes % m != 0 => None,
+                p => p,
+            };
+            let n = (g.usize(6, 32) * lanes.max(4)) as i64;
+            let mut spec =
+                BuildSpec::new(apps::vecadd::build()).vectorized("vadd", lanes).bind("N", n);
+            if let Some((m, mode)) = pump {
+                spec = spec.pumped(m, mode);
+            }
+            let c = match compile(spec) {
+                Ok(c) => c,
+                Err(_) => return Ok(None),
+            };
+            let inputs = vec![
+                ("x".to_string(), g.vec_f32(n as usize)),
+                ("y".to_string(), g.vec_f32(n as usize)),
+            ];
+            Ok(Some((c, inputs, "z", format!("vecadd lanes {lanes} pump {pump:?} n {n}"))))
+        }
+        1 => {
+            let stages = g.usize(2, 4);
+            let factors: Vec<Option<usize>> = (0..stages)
+                .map(|_| {
+                    let f = *g.choose(&[2usize, 4]);
+                    g.option(f)
+                })
+                .collect();
+            let mut spec =
+                BuildSpec::new(apps::stencil::build(StencilKind::Jacobi3D, stages, 8))
+                    .bind("NX", 8)
+                    .bind("NY", 8)
+                    .bind("NZ", 8)
+                    .bind("NZ_v", 1);
+            if factors.iter().any(|f| f.is_some()) {
+                spec = spec.pumped_regions(factors.clone());
+            }
+            let c = match compile(spec) {
+                Ok(c) => c,
+                Err(_) => return Ok(None),
+            };
+            let inputs = vec![("v_in".to_string(), g.vec_f32(8 * 8 * 8))];
+            Ok(Some((c, inputs, "v_out", format!("stencil stages {stages} factors {factors:?}"))))
+        }
+        _ => {
+            let n = *g.choose(&[8usize, 12]);
+            let c = compile(
+                BuildSpec::new(apps::floyd_warshall::build())
+                    .bind("N", n as i64)
+                    .pumped(2, PumpMode::BareFast),
+            )
+            .map_err(|e| format!("bare-fast FW must compile: {e}"))?;
+            let inputs =
+                vec![("dist".to_string(), apps::floyd_warshall::random_graph(n, 11, 0.3))];
+            Ok(Some((c, inputs, "dist", format!("bare-fast FW n {n}"))))
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_engine_bit_identical_to_reference_on_replicated_designs() {
+    // the tentpole's correctness contract: replicate any random design
+    // (uniform / mixed / bare-fast) into independent components and the
+    // sharded engine must reproduce the legacy reference stepper
+    // exactly — slow/fast cycles, transactions, per-module stall
+    // counters, bottleneck, and every output byte — at any worker count
+    use temporal_vec::sim::{
+        replicate_design, replicate_inputs, run_exact_reference, run_exact_sharded_in,
+    };
+    forall("sharded-bit-identical", 0xE3, 8, |g| {
+        let (c, inputs, out, tag) = match random_compiled_arm(g)? {
+            Some(v) => v,
+            None => return Ok(()),
+        };
+        let k = *g.choose(&[2usize, 3]);
+        let threads = *g.choose(&[2usize, 3, 4]);
+        let rep = replicate_design(&c.design, k);
+        let serial = run_exact_reference(&rep, replicate_inputs(&inputs, k), 10_000_000)
+            .map_err(|e| format!("{tag} x{k}: reference run failed: {e}"))?;
+        let mut arenas = Vec::new();
+        let sharded = run_exact_sharded_in(
+            &rep,
+            replicate_inputs(&inputs, k),
+            10_000_000,
+            threads,
+            None,
+            &mut arenas,
+            None,
+        )
+        .map_err(|e| format!("{tag} x{k}: sharded run failed: {e}"))?;
+        if serial.stats.slow_cycles != sharded.stats.slow_cycles
+            || serial.stats.fast_cycles != sharded.stats.fast_cycles
+            || serial.stats.transactions != sharded.stats.transactions
+            || serial.stats.bottleneck != sharded.stats.bottleneck
+            || serial.stats.modules != sharded.stats.modules
+        {
+            return Err(format!(
+                "{tag} x{k} threads {threads}: sharded stats diverged from reference: \
+                 {:?} vs {:?}",
+                serial.stats, sharded.stats
+            ));
+        }
+        for i in 0..k {
+            let name = format!("r{i}__{out}");
+            let a: Vec<u32> = serial.hbm.read(&name).iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = sharded.hbm.read(&name).iter().map(|v| v.to_bits()).collect();
+            if a != b {
+                return Err(format!(
+                    "{tag} x{k} threads {threads}: output '{name}' bits diverged"
+                ));
+            }
+        }
+        // a clean sharded run must leak no arena slots (the poison-fill
+        // canary's accounting side)
+        for (i, a) in arenas.iter().enumerate() {
+            if a.stats().leaked != 0 {
+                return Err(format!(
+                    "{tag} x{k}: shard arena {i} leaked {} slot(s) on a clean run",
+                    a.stats().leaked
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_telemetry_is_invisible_and_counts_shards() {
+    // observation of a sharded run must be purely observational — and
+    // the per-shard busy counters must actually appear
+    use temporal_vec::sim::{replicate_design, replicate_inputs, run_exact_sharded_in};
+    use temporal_vec::telemetry::Recorder;
+    forall("sharded-telemetry-invisible", 0xE4, 6, |g| {
+        let (c, inputs, out, tag) = match random_compiled_arm(g)? {
+            Some(v) => v,
+            None => return Ok(()),
+        };
+        let rep = replicate_design(&c.design, 2);
+        let plain = run_exact_sharded_in(
+            &rep,
+            replicate_inputs(&inputs, 2),
+            10_000_000,
+            2,
+            None,
+            &mut Vec::new(),
+            None,
+        )
+        .map_err(|e| format!("{tag}: plain sharded run failed: {e}"))?;
+        let rec = Recorder::new();
+        let observed = run_exact_sharded_in(
+            &rep,
+            replicate_inputs(&inputs, 2),
+            10_000_000,
+            2,
+            None,
+            &mut Vec::new(),
+            Some(&rec),
+        )
+        .map_err(|e| format!("{tag}: observed sharded run failed: {e}"))?;
+        if plain.stats.slow_cycles != observed.stats.slow_cycles
+            || plain.stats.fast_cycles != observed.stats.fast_cycles
+            || plain.stats.transactions != observed.stats.transactions
+            || plain.stats.bottleneck != observed.stats.bottleneck
+            || plain.stats.modules != observed.stats.modules
+        {
+            return Err(format!(
+                "{tag}: sharded SimStats diverged under observation: {:?} vs {:?}",
+                plain.stats, observed.stats
+            ));
+        }
+        for i in 0..2 {
+            let name = format!("r{i}__{out}");
+            let a: Vec<u32> = plain.hbm.read(&name).iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = observed.hbm.read(&name).iter().map(|v| v.to_bits()).collect();
+            if a != b {
+                return Err(format!("{tag}: output '{name}' bits diverged under observation"));
+            }
+        }
+        if rec.counter("sim.shard.0.busy") == 0 || rec.counter("sim.shard.1.busy") == 0 {
+            return Err(format!("{tag}: observed sharded run recorded no per-shard busy"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunked_eval_lanes_bit_identical_to_scalar() {
+    // the SIMD evaluator's contract on random programs and data —
+    // NaN/Inf/±0 payloads, broadcast-narrow inputs, and non-multiple-
+    // of-8 lane counts included. Both evaluators are always compiled,
+    // so this pins the `simd` feature's bit-identity whether or not
+    // the feature is on.
+    use temporal_vec::ir::{TaskExpr, Tasklet};
+    use temporal_vec::sim::compute::CompiledTasklet;
+    use temporal_vec::sim::Arena;
+
+    fn gen_expr(g: &mut temporal_vec::util::quickcheck::Gen, depth: usize) -> TaskExpr {
+        if depth == 0 || g.usize(0, 4) == 0 {
+            return if g.bool() {
+                TaskExpr::input(["a", "b", "c"][g.usize(0, 3)])
+            } else {
+                TaskExpr::c(g.f32(-4.0, 4.0))
+            };
+        }
+        let a = gen_expr(g, depth - 1);
+        let b = gen_expr(g, depth - 1);
+        match g.usize(0, 6) {
+            0 => a.add(b),
+            1 => a.sub(b),
+            2 => a.mul(b),
+            3 => a.min(b),
+            4 => a.max(b),
+            _ => TaskExpr::muladd(a, b, gen_expr(g, depth - 1)),
+        }
+    }
+
+    forall("simd-bit-identical", 0xE5, 24, |g| {
+        let expr = gen_expr(g, g.usize(1, 5));
+        let conns: Vec<String> = ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
+        let t = Tasklet::new("p", vec![("o", expr)]);
+        let ct = CompiledTasklet::compile(&t, &conns).map_err(|e| e.to_string())?;
+        let lanes = g.usize(1, 40);
+        let mut arena = Arena::new();
+        let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0];
+        let popped: Vec<_> = (0..conns.len())
+            .map(|_| {
+                // narrow inputs exercise the broadcast path
+                let w = if g.usize(0, 4) == 0 { 1 } else { lanes };
+                let mut v = g.vec_f32(w);
+                for x in v.iter_mut() {
+                    if g.usize(0, 5) == 0 {
+                        *x = *g.choose(&specials);
+                    }
+                }
+                arena.alloc_from(&v)
+            })
+            .collect();
+        let mut vals = vec![0.0f32; conns.len()];
+        let mut stack = vec![0.0f32; ct.stack_depth()];
+        let mut out_s = vec![0.0f32; lanes];
+        let mut out_c = vec![0.0f32; lanes];
+        ct.eval_lanes_scalar(&arena, &popped, &mut vals, &mut stack, &mut out_s);
+        ct.eval_lanes_chunked(&arena, &popped, &mut vals, &mut stack, &mut out_c);
+        for (l, (a, b)) in out_s.iter().zip(&out_c).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "lane {l}/{lanes}: chunked {b:?} ({:#010x}) != scalar {a:?} ({:#010x})",
+                    b.to_bits(),
+                    a.to_bits()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
